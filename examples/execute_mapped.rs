@@ -1,0 +1,131 @@
+//! End-to-end driver: the full three-layer stack on a real small workload.
+//!
+//! 1. **L3 (rust)** — the coordinator's mapping service maps one conv layer
+//!    per paper workload category (High C / High M / High P&Q) with LOCAL,
+//!    producing mappings + analytical energy in compile-time fashion.
+//! 2. **L2/L1 (AOT)** — the matching JAX/Pallas conv artifacts (compiled
+//!    once by `make artifacts`) are loaded through the PJRT runtime.
+//! 3. **Execution** — a batch of requests runs through each compiled conv;
+//!    outputs are verified against the host conv oracle; latency and
+//!    throughput are reported alongside the mapping-level metrics.
+//!
+//! Run: `make artifacts && cargo run --release --example execute_mapped`
+//! (recorded in EXPERIMENTS.md §End-to-end.)
+
+use local_mapper::arch::presets;
+use local_mapper::coordinator::MappingService;
+use local_mapper::mappers::LocalMapper;
+use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime};
+use local_mapper::util::bench::fmt_duration;
+use local_mapper::util::rng::SplitMix64;
+use local_mapper::util::table::{fmt_f64, Table};
+use local_mapper::workload::ConvLayer;
+use std::time::Instant;
+
+/// (artifact name, matching analytical workload, category label).
+/// The artifact shapes are the scaled-down Table-2 analogues documented in
+/// python/compile/aot.py.
+fn scenarios() -> Vec<(&'static str, ConvLayer, &'static str)> {
+    vec![
+        ("conv_high_c", ConvLayer::new("high_c", 16, 64, 1, 1, 13, 13), "High C"),
+        ("conv_high_m", ConvLayer::new("high_m", 64, 16, 3, 3, 13, 13), "High M"),
+        ("conv_high_pq", ConvLayer::new("high_pq", 8, 3, 3, 3, 32, 32), "High P&Q"),
+        ("conv_batched", ConvLayer::new("batched", 16, 8, 3, 3, 16, 16).with_batch(4), "Batched"),
+    ]
+}
+
+fn main() {
+    // ---- Stage 1: compile-time mapping through the service (L3).
+    let acc = presets::eyeriss();
+    let svc = MappingService::start(acc.clone(), LocalMapper::new(), 4);
+    let layers: Vec<ConvLayer> = scenarios().into_iter().map(|(_, l, _)| l).collect();
+    let replies = svc.map_all(&layers);
+    println!("== compile-time mapping (LOCAL via MappingService, {}) ==", acc.name);
+    for (r, (_, layer, cat)) in replies.iter().zip(scenarios()) {
+        let r = r.as_ref().expect("mapping succeeds");
+        println!(
+            "  {:<9} {:<28} map={} energy={} µJ util={:.0}%",
+            cat,
+            layer.to_string(),
+            fmt_duration(r.outcome.elapsed),
+            fmt_f64(r.outcome.evaluation.energy.total_uj()),
+            r.outcome.evaluation.utilization * 100.0
+        );
+    }
+    println!(
+        "  service: {} requests, mean service time {}\n",
+        svc.metrics.requests.load(std::sync::atomic::Ordering::Relaxed),
+        fmt_duration(svc.metrics.mean_service_time())
+    );
+
+    // ---- Stage 2: load the AOT artifacts (L2/L1 compiled once).
+    let dir = default_artifacts_dir();
+    let mut rt = Runtime::cpu().expect("PJRT CPU client");
+    let names = rt.load_manifest_dir(&dir).unwrap_or_else(|e| {
+        panic!("could not load artifacts from {} — run `make artifacts` first: {e}", dir.display())
+    });
+    println!("== runtime: platform={} artifacts={names:?} ==\n", rt.platform());
+
+    // ---- Stage 3: batched execution + verification + latency/throughput.
+    let mut t = Table::new(vec![
+        "kernel", "requests", "p50 latency", "p99 latency", "throughput (req/s)", "MMAC/s", "max |err|",
+    ]);
+    let requests = 40usize;
+    for (name, layer, _) in scenarios() {
+        let k = rt.kernel(name).expect("kernel loaded");
+        let mut rng = SplitMix64::new(42);
+        let inputs: Vec<Vec<f32>> = k
+            .input_shapes
+            .iter()
+            .map(|s| {
+                let n: i64 = s.iter().product();
+                (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+
+        // Warmup + timed requests.
+        let mut out = k.execute_f32(&refs).expect("warmup");
+        let mut lat = Vec::with_capacity(requests);
+        let t0 = Instant::now();
+        for _ in 0..requests {
+            let s = Instant::now();
+            out = k.execute_f32(&refs).expect("execute");
+            lat.push(s.elapsed());
+        }
+        let wall = t0.elapsed();
+        lat.sort();
+
+        // Verify against the host conv oracle.
+        let (shape_i, shape_w) = (&k.input_shapes[0], &k.input_shapes[1]);
+        let expect = reference_conv(
+            &inputs[0],
+            &inputs[1],
+            shape_i[0] as usize,
+            shape_i[1] as usize,
+            shape_i[2] as usize,
+            shape_i[3] as usize,
+            shape_w[0] as usize,
+            shape_w[2] as usize,
+            shape_w[3] as usize,
+            1,
+        );
+        let max_err = out.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "{name}: verification failed ({max_err})");
+
+        let throughput = requests as f64 / wall.as_secs_f64();
+        let mmacs = layer.macs() as f64 * throughput / 1e6;
+        t.row(vec![
+            name.to_string(),
+            requests.to_string(),
+            fmt_duration(lat[lat.len() / 2]),
+            fmt_duration(lat[(lat.len() * 99) / 100]),
+            format!("{throughput:.0}"),
+            format!("{mmacs:.1}"),
+            format!("{max_err:.1e}"),
+        ]);
+    }
+    println!("{}", t.render());
+    println!("all outputs verified against the host conv oracle ✓");
+    svc.shutdown();
+}

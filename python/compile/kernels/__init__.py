@@ -1,0 +1,4 @@
+"""Pallas kernels (L1) and their pure-jnp oracles."""
+
+from .mac_tile import mac_tile_matmul, mxu_alignment, vmem_footprint_bytes  # noqa: F401
+from .ref import conv2d_ref, im2col_ref, matmul_ref  # noqa: F401

@@ -1,0 +1,64 @@
+"""Layer 1 — depthwise convolution Pallas kernel.
+
+MobileNet-V2's depthwise 3×3 layers (flagged `depthwise` in the rust zoo)
+have no GEMM reduction axis — the MAC hot-spot is a per-channel stencil.
+The kernel tiles the channel axis over the grid (channels are LOCAL's
+spatial dim for depthwise layers: one PE column per channel group) and
+unrolls the small R×S stencil inside the block, accumulating in f32.
+
+interpret=True as everywhere (CPU PJRT path).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _dw_kernel(x_ref, w_ref, o_ref, *, r: int, s: int, p: int, q: int):
+    """One (batch, channel-block) step: direct R×S stencil over the block.
+
+    x_ref: (1, bc, H, W); w_ref: (bc, r, s); o_ref: (1, bc, p, q).
+    """
+    x = x_ref[0]
+    w = w_ref[...]
+    acc = jnp.zeros(o_ref.shape[1:], o_ref.dtype)
+    for i in range(r):
+        for j in range(s):
+            acc += x[:, i : i + p, j : j + q] * w[:, i : i + 1, j : j + 1]
+    o_ref[0] = acc
+
+
+@functools.partial(jax.jit, static_argnames=("stride", "bc", "interpret"))
+def depthwise_conv(inp, weights, *, stride: int = 1, bc: int = 8, interpret: bool = True):
+    """Depthwise conv: ``inp`` (N, C, H, W) × ``weights`` (C, R, S) →
+    (N, C, P, Q), VALID padding. ``C % bc == 0`` (callers pad channels).
+
+    Stride > 1 is applied by output slicing after a stride-1 stencil —
+    exact, and keeps the kernel's block indexing dense.
+    """
+    n, c, h, w = inp.shape
+    c2, r, s = weights.shape
+    assert c == c2, f"channel mismatch {c} != {c2}"
+    assert c % bc == 0, f"channels {c} not divisible by block {bc}"
+    p1 = h - r + 1  # stride-1 extent
+    q1 = w - s + 1
+
+    kern = functools.partial(_dw_kernel, r=r, s=s, p=p1, q=q1)
+    out = pl.pallas_call(
+        kern,
+        grid=(n, c // bc),
+        in_specs=[
+            pl.BlockSpec((1, bc, h, w), lambda b, cc: (b, cc, 0, 0)),
+            pl.BlockSpec((bc, r, s), lambda b, cc: (cc, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bc, p1, q1), lambda b, cc: (b, cc, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c, p1, q1), inp.dtype),
+        interpret=interpret,
+    )(inp, weights)
+    if stride > 1:
+        out = out[:, :, ::stride, ::stride]
+    return out

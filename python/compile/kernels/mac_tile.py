@@ -1,0 +1,90 @@
+"""Layer 1 — the PE-array MAC hot-spot as a Pallas tiled-GEMM kernel.
+
+Hardware adaptation (DESIGN.md §6): the paper's spatial PE array does not
+port 1:1 to TPU. LOCAL's two spatially-parallelized dims become the GEMM
+tile dims fed to the MXU; the per-PE L0 accumulator becomes the VMEM output
+block accumulated across the K grid axis; the L1→PE NoC multicast becomes
+BlockSpec reuse (the index_map of each operand ignores the grid axis that
+is irrelevant to it — exactly the stationarity the analytical model counts).
+
+``interpret=True`` everywhere: real-TPU lowering emits a Mosaic custom-call
+the CPU PJRT plugin cannot execute. Numerics are validated against
+``ref.py`` by pytest; TPU efficiency is estimated analytically in
+DESIGN.md §8 / EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _mac_tile_kernel(x_ref, w_ref, o_ref):
+    """One grid step: accumulate an (bm, bn) output tile.
+
+    Grid axes: (i, j, k) = (M tiles, N tiles, K tiles). The output block
+    index_map ignores k, so the same VMEM tile is revisited across the K
+    axis — the output-stationary accumulation of the paper's L0 scratchpad.
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    # MXU-shaped MAC: bf16/f32 matmul with f32 accumulation.
+    o_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bn", "bk", "interpret"))
+def mac_tile_matmul(x, w, *, bm=32, bn=32, bk=32, interpret=True):
+    """Tiled ``x @ w`` with LOCAL-derived tile sizes (bm, bn, bk).
+
+    ``x``: (M, K), ``w``: (K, N); M % bm == K % bk == N % bn == 0 (callers
+    pad — see model.py). Tile sizes come from a LOCAL mapping's L0/L1
+    bounds: bm×bn is the spatial (PE-array ↔ MXU) tile, bk the temporal
+    reduction chunk.
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"contraction mismatch {k} != {k2}"
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, (
+        f"shape ({m},{k})x({k2},{n}) not divisible by tiles ({bm},{bn},{bk})"
+    )
+    grid = (m // bm, n // bn, k // bk)
+    return pl.pallas_call(
+        _mac_tile_kernel,
+        grid=grid,
+        in_specs=[
+            # X tile: stationary across j (N tiles) — weight-multicast dual.
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            # W tile: stationary across i (M tiles).
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        # Output tile: stationary across kk — the L0 accumulator.
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.promote_types(x.dtype, w.dtype)),
+        interpret=interpret,
+    )(x, w)
+
+
+def vmem_footprint_bytes(bm: int, bn: int, bk: int, dtype_bytes: int = 4) -> int:
+    """VMEM bytes held live by one grid step (x, w, o tiles).
+
+    The L1-capacity analogue of the paper's bounding constraint Eq. (18);
+    the perf pass checks this against the ~16 MiB/core VMEM budget.
+    """
+    return dtype_bytes * (bm * bk + bk * bn + bm * bn)
+
+
+def mxu_alignment(bm: int, bn: int, bk: int, mxu: int = 128) -> float:
+    """Fraction of the MXU systolic array filled by one tile step
+    (min(b, mxu)/mxu per side) — the utilization estimate recorded in
+    EXPERIMENTS.md §Perf for the real-TPU projection."""
+    fill = lambda b: min(b, mxu) / mxu
+    return fill(bm) * fill(bn)

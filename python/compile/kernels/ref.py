@@ -1,0 +1,42 @@
+"""Pure-jnp correctness oracles for the Pallas kernel and the conv model.
+
+These never go through Pallas — they are the ground truth pytest compares
+against (the core correctness signal of the L1 layer).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Plain jnp matmul with f32 accumulation."""
+    return jnp.dot(x, w, preferred_element_type=jnp.promote_types(x.dtype, w.dtype))
+
+
+def conv2d_ref(inp, weights, stride: int = 1):
+    """Reference NCHW × MCRS convolution, VALID padding.
+
+    ``inp``: (N, C, H, W), ``weights``: (M, C, R, S) → (N, M, P, Q).
+    """
+    return jax.lax.conv_general_dilated(
+        inp,
+        weights,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+
+
+def im2col_ref(inp, r: int, s: int, stride: int = 1):
+    """Reference patch extraction: (N, C, H, W) → (N, C·R·S, P, Q) with the
+    channel-major, then R, then S patch ordering that matches reshaping
+    MCRS weights to (M, C·R·S)."""
+    return jax.lax.conv_general_dilated_patches(
+        inp,
+        filter_shape=(r, s),
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )

@@ -1,0 +1,75 @@
+"""Layer 2 — the mapped convolution as a JAX compute graph.
+
+``conv2d_mapped`` is the forward pass the rust coordinator executes: im2col
+patch extraction followed by the Layer-1 Pallas MAC kernel, with GEMM tile
+sizes (bm, bn, bk) derived from a LOCAL mapping's spatial/L0 bounds. The
+function is lowered ONCE by aot.py into ``artifacts/*.hlo.txt``; python
+never runs on the request path.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from .kernels.mac_tile import mac_tile_matmul
+from .kernels.ref import im2col_ref
+
+
+def _pad_to(x, axis: int, multiple: int):
+    """Zero-pad ``axis`` of ``x`` up to the next multiple."""
+    size = x.shape[axis]
+    target = -(-size // multiple) * multiple
+    if target == size:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, target - size)
+    return jnp.pad(x, pads)
+
+
+def conv2d_mapped(inp, weights, *, stride: int = 1, bm: int = 16, bn: int = 16,
+                  bk: int = 16, interpret: bool = True):
+    """Convolution via im2col + the Pallas MAC kernel.
+
+    ``inp``: (N, C, H, W) f32; ``weights``: (M, C, R, S) f32 → (N, M, P, Q).
+
+    The GEMM view: A = weights reshaped (M, C·R·S); B = patches reshaped
+    (C·R·S, N·P·Q); O = A @ B reshaped (N, M, P, Q). Dimensions are
+    zero-padded up to the tile multiples and cropped back — padding rows
+    multiply against zero patches, so numerics are exact.
+    """
+    n, c, h, w = inp.shape
+    m, c2, r, s = weights.shape
+    assert c == c2, f"channel mismatch {c} != {c2}"
+    p = (h - r) // stride + 1
+    q = (w - s) // stride + 1
+
+    # Patches: (N, C·R·S, P, Q) → (C·R·S, N·P·Q).
+    patches = im2col_ref(inp, r, s, stride)
+    k = c * r * s
+    b_mat = patches.transpose(1, 0, 2, 3).reshape(k, n * p * q)
+    a_mat = weights.reshape(m, k)
+
+    # Pad to tile multiples.
+    a_mat = _pad_to(_pad_to(a_mat, 0, bm), 1, bk)
+    b_mat = _pad_to(_pad_to(b_mat, 0, bk), 1, bn)
+
+    o = mac_tile_matmul(a_mat, b_mat, bm=bm, bn=bn, bk=bk, interpret=interpret)
+    o = o[:m, : n * p * q]
+    return o.reshape(m, n, p, q).transpose(1, 0, 2, 3)
+
+
+def tiles_from_mapping(spatial_m: int, spatial_n: int, l0_k: int,
+                       mxu: int = 128) -> tuple[int, int, int]:
+    """Translate a LOCAL mapping's parallelization/assignment into GEMM
+    tiles (DESIGN.md §6): the PE-array fan-out (m, n) becomes the (bm, bn)
+    spatial tile — rounded up to a power of two and clamped to the MXU
+    side — and the per-PE L0 reduction range becomes bk.
+    """
+    def pow2_clamp(x: int) -> int:
+        x = max(8, min(x, mxu))
+        p = 1
+        while p < x:
+            p *= 2
+        return p
+
+    return pow2_clamp(spatial_m), pow2_clamp(spatial_n), pow2_clamp(max(l0_k, 8))

@@ -1,0 +1,77 @@
+"""L1 correctness: the depthwise Pallas kernel vs lax grouped conv."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.depthwise import depthwise_conv
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, minval=-1, maxval=1)
+
+
+def dw_ref(inp, weights, stride=1):
+    """Reference depthwise conv via feature_group_count."""
+    c = inp.shape[1]
+    w4 = weights[:, None, :, :]  # (C, 1, R, S)
+    return jax.lax.conv_general_dilated(
+        inp,
+        w4,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c,
+    )
+
+
+class TestDepthwise:
+    def test_basic_3x3(self):
+        inp, w = rand((1, 8, 12, 12), 0), rand((8, 3, 3), 1)
+        got = depthwise_conv(inp, w, bc=8)
+        np.testing.assert_allclose(got, dw_ref(inp, w), rtol=1e-5, atol=1e-5)
+
+    def test_multi_block_channels(self):
+        inp, w = rand((1, 32, 10, 10), 2), rand((32, 3, 3), 3)
+        got = depthwise_conv(inp, w, bc=8)
+        np.testing.assert_allclose(got, dw_ref(inp, w), rtol=1e-5, atol=1e-5)
+
+    def test_batched(self):
+        inp, w = rand((3, 16, 9, 9), 4), rand((16, 3, 3), 5)
+        got = depthwise_conv(inp, w, bc=8)
+        np.testing.assert_allclose(got, dw_ref(inp, w), rtol=1e-5, atol=1e-5)
+
+    def test_stride_2(self):
+        inp, w = rand((1, 8, 13, 13), 6), rand((8, 3, 3), 7)
+        got = depthwise_conv(inp, w, stride=2, bc=8)
+        np.testing.assert_allclose(got, dw_ref(inp, w, stride=2), rtol=1e-5, atol=1e-5)
+
+    def test_1x1_identityish(self):
+        inp, w = rand((1, 8, 6, 6), 8), rand((8, 1, 1), 9)
+        got = depthwise_conv(inp, w, bc=8)
+        np.testing.assert_allclose(got, inp * w[None, :, :, :], rtol=1e-5, atol=1e-5)
+
+    def test_5x5_window(self):
+        inp, w = rand((1, 8, 11, 11), 10), rand((8, 5, 5), 11)
+        got = depthwise_conv(inp, w, bc=8)
+        np.testing.assert_allclose(got, dw_ref(inp, w), rtol=1e-5, atol=1e-5)
+
+
+@hypothesis.settings(max_examples=12, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 2),
+    cb=st.integers(1, 3),
+    k=st.sampled_from([1, 3]),
+    hw=st.integers(5, 10),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_depthwise_sweep(n, cb, k, hw, seed):
+    c = cb * 4
+    inp = rand((n, c, hw, hw), seed)
+    w = rand((c, k, k), seed + 1)
+    got = depthwise_conv(inp, w, bc=4)
+    np.testing.assert_allclose(got, dw_ref(inp, w), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,102 @@
+"""L1 correctness: the Pallas MAC kernel vs the pure-jnp oracle.
+
+This is the core correctness signal for the kernel layer — exact-shape
+checks plus hypothesis sweeps over shapes, tiles and dtypes.
+"""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels.mac_tile import (
+    mac_tile_matmul,
+    mxu_alignment,
+    vmem_footprint_bytes,
+)
+from compile.kernels.ref import matmul_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed, dtype=jnp.float32):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.uniform(key, shape, dtype=jnp.float32, minval=-1, maxval=1).astype(dtype)
+
+
+class TestMacTileExact:
+    def test_square_tiles(self):
+        x, w = rand((64, 64), 0), rand((64, 64), 1)
+        got = mac_tile_matmul(x, w, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_rectangular(self):
+        x, w = rand((32, 128), 2), rand((128, 48), 3)
+        got = mac_tile_matmul(x, w, bm=16, bn=16, bk=32)
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_single_tile(self):
+        x, w = rand((8, 8), 4), rand((8, 8), 5)
+        got = mac_tile_matmul(x, w, bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+    def test_k_accumulation_many_steps(self):
+        # Many K grid steps exercise the output-stationary accumulation.
+        x, w = rand((16, 256), 6), rand((256, 16), 7)
+        got = mac_tile_matmul(x, w, bm=16, bn=16, bk=8)
+        np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+    def test_mismatched_contraction_raises(self):
+        with pytest.raises(AssertionError):
+            mac_tile_matmul(rand((16, 16), 0), rand((32, 16), 1))
+
+    def test_indivisible_tiles_raise(self):
+        with pytest.raises(AssertionError):
+            mac_tile_matmul(rand((20, 16), 0), rand((16, 16), 1), bm=16, bn=16, bk=16)
+
+    def test_bfloat16_inputs_f32_accumulation(self):
+        x = rand((32, 32), 8, jnp.bfloat16)
+        w = rand((32, 32), 9, jnp.bfloat16)
+        got = mac_tile_matmul(x, w, bm=16, bn=16, bk=16)
+        expect = matmul_ref(x, w)
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32), np.asarray(expect, np.float32), rtol=2e-2, atol=2e-2
+        )
+
+    def test_zero_inputs(self):
+        x = jnp.zeros((16, 16), jnp.float32)
+        w = rand((16, 16), 10)
+        assert np.all(np.asarray(mac_tile_matmul(x, w, bm=16, bn=16, bk=16)) == 0)
+
+
+@hypothesis.settings(max_examples=25, deadline=None)
+@hypothesis.given(
+    mt=st.integers(1, 4),
+    nt=st.integers(1, 4),
+    kt=st.integers(1, 4),
+    bm=st.sampled_from([8, 16]),
+    bn=st.sampled_from([8, 16]),
+    bk=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_shape_sweep(mt, nt, kt, bm, bn, bk, seed):
+    """Any tile-divisible shape × any tile combo matches the oracle."""
+    m, n, k = mt * bm, nt * bn, kt * bk
+    x, w = rand((m, k), seed), rand((k, n), seed + 1)
+    got = mac_tile_matmul(x, w, bm=bm, bn=bn, bk=bk)
+    np.testing.assert_allclose(got, matmul_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+class TestPerfEstimators:
+    def test_vmem_footprint(self):
+        # 128³ f32 tiles: 3 × 64 KiB.
+        assert vmem_footprint_bytes(128, 128, 128) == 4 * 3 * 128 * 128
+        # Must stay far below the 16 MiB/core VMEM budget for our tiles.
+        assert vmem_footprint_bytes(128, 128, 128) < 16 * 2**20
+
+    def test_mxu_alignment_bounds(self):
+        assert mxu_alignment(128, 128, 128) == 1.0
+        assert mxu_alignment(8, 128, 64) == pytest.approx(8 / 128)
+        assert 0 < mxu_alignment(16, 16, 16) < 1

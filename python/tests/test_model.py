@@ -1,0 +1,80 @@
+"""L2 correctness: the mapped conv model vs lax convolution."""
+
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from compile.kernels.ref import conv2d_ref, im2col_ref
+from compile.model import conv2d_mapped, tiles_from_mapping
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(shape, seed):
+    return jax.random.uniform(jax.random.PRNGKey(seed), shape, minval=-1, maxval=1)
+
+
+class TestConvMapped:
+    def test_quickstart_shape(self):
+        inp, w = rand((1, 8, 18, 18), 0), rand((16, 8, 3, 3), 1)
+        out = conv2d_mapped(inp, w, bm=16, bn=16, bk=8)
+        assert out.shape == (1, 16, 16, 16)
+        np.testing.assert_allclose(out, conv2d_ref(inp, w), rtol=1e-4, atol=1e-4)
+
+    def test_1x1_conv(self):
+        inp, w = rand((1, 64, 13, 13), 2), rand((16, 64, 1, 1), 3)
+        out = conv2d_mapped(inp, w, bm=16, bn=16, bk=16)
+        np.testing.assert_allclose(out, conv2d_ref(inp, w), rtol=1e-4, atol=1e-4)
+
+    def test_stride_2(self):
+        inp, w = rand((1, 4, 17, 17), 4), rand((8, 4, 3, 3), 5)
+        out = conv2d_mapped(inp, w, stride=2, bm=8, bn=8, bk=8)
+        assert out.shape == (1, 8, 8, 8)
+        np.testing.assert_allclose(out, conv2d_ref(inp, w, stride=2), rtol=1e-4, atol=1e-4)
+
+    def test_batched(self):
+        inp, w = rand((4, 8, 10, 10), 6), rand((8, 8, 3, 3), 7)
+        out = conv2d_mapped(inp, w, bm=8, bn=8, bk=8)
+        np.testing.assert_allclose(out, conv2d_ref(inp, w), rtol=1e-4, atol=1e-4)
+
+    def test_padding_is_exact_not_approximate(self):
+        # Odd sizes force zero-padding of every GEMM dim; result must be
+        # exact (pad rows hit zero patches).
+        inp, w = rand((1, 3, 9, 9), 8), rand((5, 3, 3, 3), 9)
+        out = conv2d_mapped(inp, w, bm=16, bn=16, bk=16)
+        assert out.shape == (1, 5, 7, 7)
+        np.testing.assert_allclose(out, conv2d_ref(inp, w), rtol=1e-4, atol=1e-4)
+
+    def test_im2col_matches_patch_layout(self):
+        # The patch ordering assumed by conv2d_mapped (C-major, then R, S).
+        inp = jnp.arange(1 * 2 * 4 * 4, dtype=jnp.float32).reshape(1, 2, 4, 4)
+        patches = im2col_ref(inp, 3, 3)
+        assert patches.shape == (1, 2 * 9, 2, 2)
+
+
+class TestTilesFromMapping:
+    def test_pow2_clamping(self):
+        assert tiles_from_mapping(12, 14, 4) == (16, 16, 8)
+        assert tiles_from_mapping(16, 16, 16) == (16, 16, 16)
+        assert tiles_from_mapping(200, 3, 1000) == (128, 8, 128)
+
+    def test_minimums(self):
+        assert tiles_from_mapping(1, 1, 1) == (8, 8, 8)
+
+
+@hypothesis.settings(max_examples=10, deadline=None)
+@hypothesis.given(
+    n=st.integers(1, 2),
+    c=st.integers(1, 8),
+    m=st.integers(1, 12),
+    k=st.sampled_from([1, 3]),
+    hw=st.integers(6, 12),
+    seed=st.integers(0, 2**16),
+)
+def test_hypothesis_conv_sweep(n, c, m, k, hw, seed):
+    inp = rand((n, c, hw, hw), seed)
+    w = rand((m, c, k, k), seed + 1)
+    out = conv2d_mapped(inp, w, bm=8, bn=8, bk=8)
+    np.testing.assert_allclose(out, conv2d_ref(inp, w), rtol=1e-4, atol=1e-4)

@@ -1,0 +1,53 @@
+//! Ablation: tile-pipeline latency simulation vs the analytical roofline,
+//! and what double buffering buys each (workload × machine) cell — the
+//! design choice DESIGN.md calls out for the storage hierarchy.
+//!
+//! Run: `cargo bench --bench ablation_latency_sim`
+
+use local_mapper::arch::presets;
+use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::sim::{simulate, SimOptions};
+use local_mapper::util::table::Table;
+use local_mapper::workload::zoo;
+
+fn main() {
+    println!("=== ablation: latency — roofline vs tile-pipeline sim, ±double-buffering ===\n");
+    let mut t = Table::new(vec![
+        "workload", "arch", "roofline (cyc)", "sim 2-buf (cyc)", "sim 1-buf (cyc)", "2-buf gain",
+        "bottleneck",
+    ]);
+    let mut roofline_holds = 0usize;
+    let mut cells = 0usize;
+    for acc in presets::all() {
+        for row in zoo::table2_workloads() {
+            let out = LocalMapper::new().run(&row.layer, &acc).unwrap();
+            let db = simulate(
+                &row.layer,
+                &acc,
+                &out.mapping,
+                SimOptions { double_buffer: true, lockstep_pes: true },
+            );
+            let sb = simulate(
+                &row.layer,
+                &acc,
+                &out.mapping,
+                SimOptions { double_buffer: false, lockstep_pes: true },
+            );
+            cells += 1;
+            if out.evaluation.latency_cycles <= db.total_cycles {
+                roofline_holds += 1;
+            }
+            t.row(vec![
+                row.layer.name.clone(),
+                acc.name.clone(),
+                out.evaluation.latency_cycles.to_string(),
+                db.total_cycles.to_string(),
+                sb.total_cycles.to_string(),
+                format!("{:.2}x", sb.total_cycles as f64 / db.total_cycles.max(1) as f64),
+                acc.levels[db.bottleneck_level].name.clone(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+    println!("analytical roofline is a lower bound of the pipeline sim on {roofline_holds}/{cells} cells");
+}

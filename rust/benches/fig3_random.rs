@@ -1,0 +1,51 @@
+//! Bench: paper Fig. 3 — energy of random mappings of VGG-02 conv5 on
+//! Eyeriss (Table-1 configuration), classified into random_max /
+//! random_med / random_min, plus the LOCAL point for context.
+//!
+//! Paper shape to reproduce: max→med spread ≈77%, med→min ≈90%; random
+//! mapping alone leaves enormous energy on the table.
+//!
+//! Run: `cargo bench --bench fig3_random` (env N=..., SEED=... to vary).
+
+use local_mapper::arch::presets;
+use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::report;
+use local_mapper::util::table::fmt_f64;
+use local_mapper::workload::zoo;
+use std::time::Instant;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let n = env_u64("N", 3000) as usize;
+    let seed = env_u64("SEED", 42);
+    println!("=== Fig. 3: {n} random mappings of VGG02_conv5 on Eyeriss (seed {seed}) ===\n");
+
+    let t0 = Instant::now();
+    let (dist, table) = report::fig3(n, seed);
+    let elapsed = t0.elapsed();
+
+    println!("{}", table.render());
+    let (hi, lo) = dist.spread();
+    println!("max→med spread: {:.0}%   (paper: 77%)", hi * 100.0);
+    println!("med→min spread: {:.0}%   (paper: 90%)", lo * 100.0);
+
+    // Context: where LOCAL lands in the random distribution.
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg02()[4].clone();
+    let local = LocalMapper::new().run(&layer, &acc).unwrap();
+    let local_uj = local.evaluation.energy.total_uj();
+    let better = dist.energies_uj.iter().filter(|&&e| e < local_uj).count();
+    println!(
+        "\nLOCAL: {} µJ — better than {:.1}% of {n} random mappings (1 evaluation vs {n})",
+        fmt_f64(local_uj),
+        100.0 * (n - better) as f64 / n as f64
+    );
+    println!(
+        "\nbench: {n} samples evaluated in {} ({:.0} evals/s)",
+        local_mapper::util::bench::fmt_duration(elapsed),
+        n as f64 / elapsed.as_secs_f64()
+    );
+}

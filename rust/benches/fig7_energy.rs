@@ -1,0 +1,51 @@
+//! Bench: paper Fig. 7 (panels a–i) — per-component energy of LOCAL vs the
+//! native stationary dataflow on 3 accelerators × 3 workload categories.
+//!
+//! Paper shape to reproduce: DRAM dominates every breakdown; LOCAL's total
+//! is comparable to (mostly ≤) the searched stationary dataflow while
+//! costing a single evaluation.
+//!
+//! Run: `cargo bench --bench fig7_energy` (BUDGET=, SEED= env).
+
+use local_mapper::arch::presets;
+use local_mapper::report;
+use std::time::Instant;
+
+fn env_u64(key: &str, default: u64) -> u64 {
+    std::env::var(key).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}
+
+fn main() {
+    let budget = env_u64("BUDGET", 3000);
+    let seed = env_u64("SEED", 42);
+    println!("=== Fig. 7: energy breakdowns, LOCAL vs stationary dataflows (budget {budget}) ===\n");
+
+    let t0 = Instant::now();
+    let panels = report::fig7(budget, seed);
+    let elapsed = t0.elapsed();
+
+    let mut dram_dominant = 0usize;
+    let mut local_wins = 0usize;
+    let mut cells = 0usize;
+    for p in &panels {
+        let acc = presets::by_name(&p.arch).unwrap();
+        println!("--- {} ({}) — {} ---", p.arch, p.dataflow, p.category.name());
+        println!("{}", report::render_fig7_panel(p, &acc).render());
+        for (_, base, local) in &p.entries {
+            cells += 1;
+            // DRAM dominance check on the baseline breakdown (paper: "a
+            // large portion of the energy consumption is related to DRAM").
+            let storage_max =
+                base.energy.level_pj.iter().take(base.energy.level_pj.len() - 1).cloned().fold(0.0, f64::max);
+            if base.energy.dram_pj() >= storage_max {
+                dram_dominant += 1;
+            }
+            if local.energy.total_pj() <= base.energy.total_pj() {
+                local_wins += 1;
+            }
+        }
+    }
+    println!("DRAM is the dominant storage component on {dram_dominant}/{cells} baseline cells");
+    println!("LOCAL total energy ≤ searched dataflow on {local_wins}/{cells} cells");
+    println!("\nbench wall-clock: {}", local_mapper::util::bench::fmt_duration(elapsed));
+}

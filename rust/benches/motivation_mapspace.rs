@@ -1,0 +1,65 @@
+//! Bench: the paper's §3 motivation numbers — map-space and design-space
+//! sizes, plus an extrapolation of brute-force search time from measured
+//! evaluation throughput (the paper's "about 48 hours ... on an exhaustive
+//! brute-force search" remark).
+//!
+//! Run: `cargo bench --bench motivation_mapspace`
+
+use local_mapper::arch::presets;
+use local_mapper::mapspace;
+use local_mapper::model::evaluate_unchecked;
+use local_mapper::util::bench::median_time;
+use local_mapper::util::rng::SplitMix64;
+use local_mapper::workload::zoo;
+
+fn main() {
+    println!("=== §3 motivation: map-space and design-space sizes ===\n");
+
+    // (6!)^3 ≈ O(10^8) — VGG02 conv5 on 3-level Eyeriss.
+    let perm = mapspace::permutation_space(6, 3);
+    println!("(6!)^3 permutation space:        {perm:.3e}   (paper: O(10^8))");
+    assert!(perm >= 1e8 && perm < 1e9);
+
+    // 64² × 224² × 3² ≈ O(10^9) accelerator-config choices (VGG16 conv2).
+    let configs = (64u64 * 64) as f64 * (224u64 * 224) as f64 * 9.0;
+    println!("accelerator-config space:        {configs:.3e}   (paper: O(10^9))");
+
+    // Joint co-design space ≈ O(10^17).
+    let design = mapspace::design_space(64, 64, 224, 224, 3, 3, 3);
+    println!("joint co-design space:           {design:.3e}   (paper: O(10^17))");
+    assert!(design > 1e17 && design < 1e18);
+
+    // Full factored map-space for the Table-1 layer on each preset.
+    println!();
+    for acc in presets::all() {
+        let layer = zoo::vgg02()[4].clone();
+        println!(
+            "full map-space, VGG02_conv5 on {:<11}: {:.3e}",
+            acc.name,
+            mapspace::map_space(&layer, &acc)
+        );
+    }
+
+    // Measured evaluation throughput → brute-force extrapolation.
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg02()[4].clone();
+    let mut rng = SplitMix64::new(1);
+    let mappings: Vec<_> = (0..256).map(|_| mapspace::sample_random(&layer, &acc, &mut rng)).collect();
+    let mut i = 0;
+    let t = median_time(32, 256, || {
+        let e = evaluate_unchecked(&layer, &acc, &mappings[i % mappings.len()]);
+        i += 1;
+        e.latency_cycles
+    });
+    let evals_per_sec = 1e9 / t.median_ns();
+    let hours = perm / evals_per_sec / 3600.0;
+    println!(
+        "\nevaluation throughput: {evals_per_sec:.0} mappings/s (median {})",
+        local_mapper::util::bench::fmt_duration(t.median)
+    );
+    println!(
+        "brute-force over (6!)^3 permutation space at that rate: {hours:.1} h \
+         (paper: ~48 h on Timeloop)"
+    );
+    println!("LOCAL does it in one evaluation.");
+}

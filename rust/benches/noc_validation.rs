@@ -1,0 +1,65 @@
+//! Ablation: analytical avg-hop NoC energy vs the exact 2D-mesh link
+//! simulation, across the Table-2 workloads and random mappings —
+//! validates the approximation the energy model uses.
+//!
+//! Run: `cargo bench --bench noc_validation`
+
+use local_mapper::arch::presets;
+use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::mapspace::sample_random;
+use local_mapper::noc::{analytical_vs_exact, simulate_mesh};
+use local_mapper::util::rng::SplitMix64;
+use local_mapper::util::table::{fmt_f64, Table};
+use local_mapper::workload::zoo;
+
+fn main() {
+    println!("=== ablation: NoC — analytical avg-hop vs exact mesh simulation ===\n");
+    let mut t = Table::new(vec![
+        "workload", "arch", "analytical (µJ)", "mesh-exact (µJ)", "ratio", "max link (words)",
+    ]);
+    let mut ratios: Vec<f64> = Vec::new();
+    for acc in presets::all() {
+        for row in zoo::table2_workloads() {
+            let m = LocalMapper::new().map(&row.layer, &acc).unwrap();
+            let (ana, exact) = analytical_vs_exact(&row.layer, &acc, &m);
+            let mesh = simulate_mesh(&row.layer, &acc, &m);
+            let ratio = if exact > 0.0 { ana / exact } else { f64::NAN };
+            if ratio.is_finite() {
+                ratios.push(ratio);
+            }
+            t.row(vec![
+                row.layer.name.clone(),
+                acc.name.clone(),
+                fmt_f64(ana / 1e6),
+                fmt_f64(exact / 1e6),
+                format!("{ratio:.2}"),
+                mesh.max_link_words.to_string(),
+            ]);
+        }
+    }
+    println!("{}", t.render());
+
+    let geo = (ratios.iter().map(|r| r.ln()).sum::<f64>() / ratios.len() as f64).exp();
+    println!("geomean analytical/exact ratio on LOCAL mappings: {geo:.2}");
+
+    // Random-mapping sweep: distribution of the approximation error.
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg02()[4].clone();
+    let mut rng = SplitMix64::new(42);
+    let mut rs: Vec<f64> = Vec::new();
+    for _ in 0..200 {
+        let m = sample_random(&layer, &acc, &mut rng);
+        let (ana, exact) = analytical_vs_exact(&layer, &acc, &m);
+        if exact > 0.0 && ana > 0.0 {
+            rs.push(ana / exact);
+        }
+    }
+    rs.sort_by(f64::total_cmp);
+    println!(
+        "200 random mappings on Eyeriss/VGG02_conv5: ratio p10 {:.2}, p50 {:.2}, p90 {:.2}",
+        rs[rs.len() / 10],
+        rs[rs.len() / 2],
+        rs[rs.len() * 9 / 10]
+    );
+    println!("(NoC is a minor energy component — see Fig. 7 — so avg-hop suffices for ranking mappings)");
+}

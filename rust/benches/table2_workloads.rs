@@ -1,0 +1,26 @@
+//! Bench: paper Table 2 — the workload categories and their MAC counts.
+//! Asserts our layer encodings reproduce the paper's MAC accounting
+//! exactly (all nine rows), then prints the table.
+//!
+//! Run: `cargo bench --bench table2_workloads`
+
+use local_mapper::report;
+
+fn main() {
+    let (rows, table) = report::table2();
+    println!("=== Table 2: workload categories ===\n");
+    println!("{}", table.render());
+    let mut exact = 0;
+    for r in &rows {
+        assert_eq!(
+            r.layer.macs(),
+            r.paper_macs,
+            "{}: ours {} != paper {}",
+            r.layer.name,
+            r.layer.macs(),
+            r.paper_macs
+        );
+        exact += 1;
+    }
+    println!("{exact}/9 MAC counts match the paper exactly ✓");
+}

@@ -1,0 +1,210 @@
+//! Accelerator configuration loading (Timeloop-style YAML).
+//!
+//! Example (see `configs/eyeriss.yaml`):
+//!
+//! ```yaml
+//! accelerator:
+//!   name: eyeriss
+//!   style: eyeriss
+//!   datawidth: 16
+//!   mac_energy_pj: 1.0
+//!   clock_mhz: 200
+//!   pe_array: [12, 14]
+//!   noc:
+//!     hop_energy_pj: 0.061
+//!     multicast: true
+//!   levels:            # innermost (per-PE) first, DRAM last
+//!     - name: RF
+//!       depth: 16
+//!       width: 16
+//!       per_pe: true
+//!     - name: GLB
+//!       depth: 16384
+//!       width: 64
+//!       bandwidth: 4
+//!     - name: DRAM
+//!       width: 64
+//!       unbounded: true
+//! ```
+
+use super::{Accelerator, Noc, PeArray, StorageLevel, Style};
+use crate::util::yaml::{self, Value};
+
+/// Configuration error.
+#[derive(Debug, thiserror::Error)]
+pub enum ConfigError {
+    #[error("{0}")]
+    Yaml(#[from] yaml::YamlError),
+    #[error("config: {0}")]
+    Invalid(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {
+    Err(ConfigError::Invalid(msg.into()))
+}
+
+/// Parse an accelerator from YAML text.
+pub fn accelerator_from_str(src: &str) -> Result<Accelerator, ConfigError> {
+    let doc = yaml::parse(src)?;
+    let a = doc.get("accelerator").unwrap_or(&doc);
+
+    let name = a
+        .get("name")
+        .and_then(Value::as_str)
+        .ok_or_else(|| ConfigError::Invalid("missing accelerator.name".into()))?
+        .to_string();
+
+    let style_s = a.get("style").and_then(Value::as_str).unwrap_or("eyeriss");
+    let style = Style::parse(style_s)
+        .ok_or_else(|| ConfigError::Invalid(format!("unknown style '{style_s}'")))?;
+
+    let datawidth = a.get("datawidth").and_then(Value::as_u64).unwrap_or(16);
+
+    let pe = match a.get("pe_array").and_then(Value::as_list) {
+        Some([m, n]) => {
+            let m = m.as_u64().ok_or_else(|| ConfigError::Invalid("pe_array[0] not a number".into()))?;
+            let n = n.as_u64().ok_or_else(|| ConfigError::Invalid("pe_array[1] not a number".into()))?;
+            if m == 0 || n == 0 {
+                return invalid("pe_array dims must be positive");
+            }
+            PeArray::new(m, n)
+        }
+        _ => return invalid("pe_array must be a 2-element list [m, n]"),
+    };
+
+    let mut noc = Noc::default();
+    if let Some(n) = a.get("noc") {
+        if let Some(h) = n.get("hop_energy_pj").and_then(Value::as_f64) {
+            noc.hop_energy_pj = h;
+        }
+        if let Some(m) = n.get("multicast").and_then(Value::as_bool) {
+            noc.multicast = m;
+        }
+    }
+
+    let levels_v = a
+        .get("levels")
+        .and_then(Value::as_list)
+        .ok_or_else(|| ConfigError::Invalid("missing levels list".into()))?;
+    let mut levels = Vec::new();
+    for (i, lv) in levels_v.iter().enumerate() {
+        let lname = lv
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| ConfigError::Invalid(format!("levels[{i}] missing name")))?;
+        let width = lv
+            .get("width")
+            .and_then(Value::as_u64)
+            .ok_or_else(|| ConfigError::Invalid(format!("levels[{i}] missing width")))?;
+        let unbounded = lv.get("unbounded").and_then(Value::as_bool).unwrap_or(false);
+        let depth = match (unbounded, lv.get("depth").and_then(Value::as_u64)) {
+            (true, _) => u64::MAX,
+            (false, Some(d)) => d,
+            (false, None) => return invalid(format!("levels[{i}] ({lname}) missing depth")),
+        };
+        let mut level = StorageLevel {
+            name: lname.to_string(),
+            depth,
+            width_bits: width,
+            banks: lv.get("banks").and_then(Value::as_u64).unwrap_or(1),
+            per_pe: lv.get("per_pe").and_then(Value::as_bool).unwrap_or(false),
+            unbounded,
+            bandwidth_words_per_cycle: lv.get("bandwidth").and_then(Value::as_f64).unwrap_or(1.0),
+        };
+        if unbounded {
+            level.name = lname.to_string();
+        }
+        levels.push(level);
+    }
+
+    let acc = Accelerator {
+        name,
+        style,
+        datawidth_bits: datawidth,
+        levels,
+        pe,
+        noc,
+        mac_energy_pj: a.get("mac_energy_pj").and_then(Value::as_f64).unwrap_or(1.0),
+        clock_mhz: a.get("clock_mhz").and_then(Value::as_f64).unwrap_or(200.0),
+    };
+    acc.validate().map_err(ConfigError::Invalid)?;
+    Ok(acc)
+}
+
+/// Load an accelerator from a YAML file.
+pub fn accelerator_from_file(path: &str) -> Result<Accelerator, ConfigError> {
+    let src = std::fs::read_to_string(path)?;
+    accelerator_from_str(&src)
+}
+
+/// Serialize an accelerator to the YAML format accepted above (used by
+/// `local-mapper arch --dump` and in round-trip tests).
+pub fn accelerator_to_yaml(a: &Accelerator) -> String {
+    let mut s = String::new();
+    s.push_str("accelerator:\n");
+    s.push_str(&format!("  name: {}\n", a.name));
+    s.push_str(&format!("  style: {}\n", a.style.name()));
+    s.push_str(&format!("  datawidth: {}\n", a.datawidth_bits));
+    s.push_str(&format!("  mac_energy_pj: {}\n", a.mac_energy_pj));
+    s.push_str(&format!("  clock_mhz: {}\n", a.clock_mhz));
+    s.push_str(&format!("  pe_array: [{}, {}]\n", a.pe.m, a.pe.n));
+    s.push_str("  noc:\n");
+    s.push_str(&format!("    hop_energy_pj: {}\n", a.noc.hop_energy_pj));
+    s.push_str(&format!("    multicast: {}\n", a.noc.multicast));
+    s.push_str("  levels:\n");
+    for l in &a.levels {
+        s.push_str(&format!("    - name: {}\n", l.name));
+        if l.unbounded {
+            s.push_str("      unbounded: true\n");
+        } else {
+            s.push_str(&format!("      depth: {}\n", l.depth));
+        }
+        s.push_str(&format!("      width: {}\n", l.width_bits));
+        if l.banks != 1 {
+            s.push_str(&format!("      banks: {}\n", l.banks));
+        }
+        if l.per_pe {
+            s.push_str("      per_pe: true\n");
+        }
+        s.push_str(&format!("      bandwidth: {}\n", l.bandwidth_words_per_cycle));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn roundtrip_presets() {
+        for a in presets::all() {
+            let y = accelerator_to_yaml(&a);
+            let b = accelerator_from_str(&y).unwrap_or_else(|e| panic!("{}: {e}\n{y}", a.name));
+            assert_eq!(a, b, "roundtrip mismatch for {}", a.name);
+        }
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(accelerator_from_str("accelerator:\n  name: x\n").is_err());
+        let no_depth = "accelerator:\n  name: x\n  pe_array: [2, 2]\n  levels:\n    - name: RF\n      width: 16\n      per_pe: true\n    - name: DRAM\n      width: 64\n      unbounded: true\n";
+        assert!(accelerator_from_str(no_depth).is_err());
+    }
+
+    #[test]
+    fn bad_style_error() {
+        let src = "accelerator:\n  name: x\n  style: gpu\n  pe_array: [2, 2]\n  levels:\n    - name: DRAM\n      width: 64\n      unbounded: true\n";
+        let e = accelerator_from_str(src).unwrap_err();
+        assert!(format!("{e}").contains("style"));
+    }
+
+    #[test]
+    fn validation_enforced() {
+        // DRAM first (not last) must be rejected by Accelerator::validate.
+        let src = "accelerator:\n  name: x\n  style: eyeriss\n  pe_array: [2, 2]\n  levels:\n    - name: DRAM\n      width: 64\n      unbounded: true\n    - name: RF\n      depth: 16\n      width: 16\n      per_pe: true\n";
+        assert!(accelerator_from_str(src).is_err());
+    }
+}

@@ -1,0 +1,313 @@
+//! Spatial DNN accelerator model — the paper's `SPA = {Storage[i,j,k],
+//! PE[m,n]}` (§2.2, Eq. 10–16).
+//!
+//! An [`Accelerator`] is a storage hierarchy (innermost-first: L0 register
+//! file at each PE, one or more on-chip buffer levels, DRAM outermost), a 2D
+//! PE array, and a NoC. The [`Style`] captures the paper's NVDLA-style vs
+//! Eyeriss-style L1↔PE connection distinction (Eq. 14 vs 15–16), which
+//! drives both the LOCAL parallelization step and the NoC traffic model.
+
+pub mod config;
+pub mod presets;
+
+use crate::workload::Tensor;
+use std::fmt;
+
+/// Accelerator connection style (paper Fig. 2).
+///
+/// * `NvdlaLike` — single L1 buffer broadcasting to the whole PE array
+///   (Eq. 14). LOCAL parallelizes C (spatial-X) and M (spatial-Y).
+/// * `EyerissLike` — banked L1, one bank per PE column (Eq. 15–16). LOCAL
+///   parallelizes Q (spatial-X) and S (spatial-Y).
+/// * `ShiDianNaoLike` — output-stationary grid; output pixels are spatial.
+///   LOCAL parallelizes Q (spatial-X) and P (spatial-Y). (Interpretation —
+///   see DESIGN.md §4.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Style {
+    NvdlaLike,
+    EyerissLike,
+    ShiDianNaoLike,
+}
+
+impl Style {
+    pub fn name(self) -> &'static str {
+        match self {
+            Style::NvdlaLike => "nvdla",
+            Style::EyerissLike => "eyeriss",
+            Style::ShiDianNaoLike => "shidiannao",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Style> {
+        match s.to_ascii_lowercase().as_str() {
+            "nvdla" | "nvdla-like" | "nvdla_like" => Some(Style::NvdlaLike),
+            "eyeriss" | "eyeriss-like" | "eyeriss_like" => Some(Style::EyerissLike),
+            "shidiannao" | "shi-diannao" | "shidiannao-like" => Some(Style::ShiDianNaoLike),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Style {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One storage level `s_{i,j,k}` (Eq. 11–12). `|s| = depth × width`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StorageLevel {
+    /// Human name: "RF", "GLB", "DRAM", ...
+    pub name: String,
+    /// Words of `width_bits` each. Ignored when `unbounded`.
+    pub depth: u64,
+    /// Word width in bits.
+    pub width_bits: u64,
+    /// Number of physical banks at this level (Eyeriss L1 = one per PE
+    /// column; single-buffer levels use 1). Banks multiply capacity.
+    pub banks: u64,
+    /// Level is instanced once per PE (the L0 scratchpad of Fig. 1).
+    pub per_pe: bool,
+    /// Off-chip / unbounded capacity (DRAM).
+    pub unbounded: bool,
+    /// Sustained words per cycle into the level below (roofline input).
+    pub bandwidth_words_per_cycle: f64,
+}
+
+impl StorageLevel {
+    /// On-chip buffer constructor.
+    pub fn buffer(name: &str, depth: u64, width_bits: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            depth,
+            width_bits,
+            banks: 1,
+            per_pe: false,
+            unbounded: false,
+            bandwidth_words_per_cycle: 1.0,
+        }
+    }
+
+    /// Per-PE register-file constructor. RFs are multi-ported (two operand
+    /// reads + accumulator read/write per MAC), hence the 4 words/cycle
+    /// default per instance.
+    pub fn register_file(name: &str, depth: u64, width_bits: u64) -> Self {
+        Self {
+            per_pe: true,
+            bandwidth_words_per_cycle: 4.0,
+            ..Self::buffer(name, depth, width_bits)
+        }
+    }
+
+    /// Unbounded DRAM constructor.
+    pub fn dram(width_bits: u64) -> Self {
+        Self {
+            name: "DRAM".to_string(),
+            depth: u64::MAX,
+            width_bits,
+            banks: 1,
+            per_pe: false,
+            unbounded: true,
+            bandwidth_words_per_cycle: 1.0,
+        }
+    }
+
+    pub fn with_banks(mut self, banks: u64) -> Self {
+        self.banks = banks;
+        self
+    }
+
+    pub fn with_bandwidth(mut self, words_per_cycle: f64) -> Self {
+        self.bandwidth_words_per_cycle = words_per_cycle;
+        self
+    }
+
+    /// Capacity in bits of one instance (all banks, Eq. 12).
+    pub fn capacity_bits(&self) -> u64 {
+        if self.unbounded {
+            u64::MAX
+        } else {
+            self.depth.saturating_mul(self.width_bits).saturating_mul(self.banks)
+        }
+    }
+
+    /// Capacity in data elements of `datawidth` bits.
+    pub fn capacity_elements(&self, datawidth: u64) -> u64 {
+        if self.unbounded {
+            u64::MAX
+        } else {
+            self.capacity_bits() / datawidth
+        }
+    }
+}
+
+/// The PE array `PE[m,n]` (Eq. 13). `m` rows = spatial X, `n` cols =
+/// spatial Y, following the paper's `parallel_for ... in Rang(m) spatial x`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PeArray {
+    pub m: u64,
+    pub n: u64,
+}
+
+impl PeArray {
+    pub fn new(m: u64, n: u64) -> Self {
+        assert!(m > 0 && n > 0, "PE array dims must be positive");
+        Self { m, n }
+    }
+
+    /// Total PE count (denominator of Eq. 25).
+    pub fn count(&self) -> u64 {
+        self.m * self.n
+    }
+}
+
+/// NoC parameters for the spatial-traffic energy model.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Noc {
+    /// Energy to move one word one hop, pJ.
+    pub hop_energy_pj: f64,
+    /// The interconnect supports single-send multicast along a row/column
+    /// (Eyeriss's X/Y buses); without it every destination is a unicast.
+    pub multicast: bool,
+}
+
+impl Default for Noc {
+    fn default() -> Self {
+        Self { hop_energy_pj: 0.061, multicast: true }
+    }
+}
+
+/// A complete spatial accelerator (Eq. 10).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Accelerator {
+    pub name: String,
+    pub style: Style,
+    /// Data element width in bits (weights/activations).
+    pub datawidth_bits: u64,
+    /// Storage hierarchy, **innermost first** (levels[0] = per-PE L0; the
+    /// last level must be unbounded DRAM).
+    pub levels: Vec<StorageLevel>,
+    pub pe: PeArray,
+    pub noc: Noc,
+    /// Energy of one MAC, pJ.
+    pub mac_energy_pj: f64,
+    /// Clock, MHz (latency→seconds conversion only).
+    pub clock_mhz: f64,
+}
+
+impl Accelerator {
+    /// Validate structural invariants; called by presets and the config
+    /// loader so downstream code can assume them.
+    pub fn validate(&self) -> Result<(), String> {
+        if self.levels.len() < 2 {
+            return Err("need at least one on-chip level plus DRAM".into());
+        }
+        if !self.levels.last().unwrap().unbounded {
+            return Err("outermost level must be unbounded DRAM".into());
+        }
+        if self.levels[..self.levels.len() - 1].iter().any(|l| l.unbounded) {
+            return Err("only the outermost level may be unbounded".into());
+        }
+        if !self.levels[0].per_pe {
+            return Err("innermost level must be the per-PE register file".into());
+        }
+        if self.levels.iter().skip(1).any(|l| l.per_pe) {
+            return Err("only the innermost level may be per-PE".into());
+        }
+        if self.datawidth_bits == 0 || self.datawidth_bits > 64 {
+            return Err("datawidth must be in 1..=64".into());
+        }
+        Ok(())
+    }
+
+    /// Number of storage levels (the `m` of the map-space `(n!)^m`, §3).
+    pub fn n_levels(&self) -> usize {
+        self.levels.len()
+    }
+
+    /// Capacity in elements of level `i` **per tile consumer**: per-PE for
+    /// L0, whole level otherwise.
+    pub fn level_capacity(&self, i: usize) -> u64 {
+        self.levels[i].capacity_elements(self.datawidth_bits)
+    }
+
+    /// Which tensors a level may hold. All our machines are
+    /// "keep-everything" (no bypass), matching the paper's model.
+    pub fn stores(&self, _level: usize, _t: Tensor) -> bool {
+        true
+    }
+
+    /// Per-PE L0 capacity in elements.
+    pub fn l0_capacity(&self) -> u64 {
+        self.level_capacity(0)
+    }
+}
+
+impl fmt::Display for Accelerator {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{} ({}-style, PE {}x{}, {} levels)", self.name, self.style, self.pe.m, self.pe.n, self.levels.len())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::presets;
+    use super::*;
+
+    #[test]
+    fn style_parse_roundtrip() {
+        for s in [Style::NvdlaLike, Style::EyerissLike, Style::ShiDianNaoLike] {
+            assert_eq!(Style::parse(s.name()), Some(s));
+        }
+        assert_eq!(Style::parse("tpu"), None);
+    }
+
+    #[test]
+    fn capacity_math() {
+        let l = StorageLevel::buffer("GLB", 16384, 64);
+        assert_eq!(l.capacity_bits(), 16384 * 64);
+        assert_eq!(l.capacity_elements(16), 16384 * 4);
+        let rf = StorageLevel::register_file("RF", 16, 16);
+        assert_eq!(rf.capacity_elements(16), 16);
+        assert!(StorageLevel::dram(64).capacity_elements(16) == u64::MAX);
+    }
+
+    #[test]
+    fn banked_capacity() {
+        let l = StorageLevel::buffer("L1", 512, 16).with_banks(14);
+        assert_eq!(l.capacity_elements(16), 512 * 14);
+    }
+
+    #[test]
+    fn presets_validate() {
+        for a in presets::all() {
+            a.validate().unwrap_or_else(|e| panic!("{}: {e}", a.name));
+        }
+    }
+
+    #[test]
+    fn validate_rejects_bad_hierarchies() {
+        let mut a = presets::eyeriss();
+        a.levels.reverse();
+        assert!(a.validate().is_err());
+
+        let mut b = presets::eyeriss();
+        b.levels[1].unbounded = true;
+        assert!(b.validate().is_err());
+
+        let mut c = presets::eyeriss();
+        c.levels[0].per_pe = false;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn pe_array_count() {
+        assert_eq!(PeArray::new(12, 14).count(), 168);
+    }
+
+    #[test]
+    #[should_panic]
+    fn pe_array_rejects_zero() {
+        PeArray::new(0, 4);
+    }
+}

@@ -1,0 +1,118 @@
+//! Accelerator presets for the three machines of the paper's evaluation.
+//!
+//! Geometry follows Table 1 where the paper gives it (Eyeriss) and the cited
+//! reference architectures otherwise (NVDLA [4], ShiDianNao [15]); energy
+//! per access is derived from these geometries by `energy::Ert`.
+
+use super::{Accelerator, Noc, PeArray, StorageLevel, Style};
+
+/// Eyeriss — Table 1: PE array 12×14, L0 (16,16) per PE, L1 (16384,64)
+/// global buffer (128 KiB), 64-bit DRAM interface, 16-bit data.
+/// The Eyeriss-style banked L1↔column connection (Eq. 15–16) is carried by
+/// `Style::EyerissLike` + `banks = n`, which the NoC model uses for
+/// column-bus multicast accounting.
+pub fn eyeriss() -> Accelerator {
+    let pe = PeArray::new(12, 14);
+    Accelerator {
+        name: "Eyeriss".to_string(),
+        style: Style::EyerissLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 16, 16),
+            StorageLevel::buffer("GLB", 16384, 64).with_banks(1).with_bandwidth(4.0),
+            StorageLevel::dram(64).with_bandwidth(1.0),
+        ],
+        pe,
+        noc: Noc { hop_energy_pj: 0.061, multicast: true },
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    }
+}
+
+/// NVDLA-style — single GLB (CBUF-like, 256 KiB here) feeding a 16×16 MAC
+/// array (Fig. 2a, Eq. 14); weight-stationary lineage.
+pub fn nvdla() -> Accelerator {
+    Accelerator {
+        name: "NVDLA".to_string(),
+        style: Style::NvdlaLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 16, 16),
+            StorageLevel::buffer("CBUF", 32768, 64).with_bandwidth(8.0),
+            StorageLevel::dram(64).with_bandwidth(2.0),
+        ],
+        pe: PeArray::new(16, 16),
+        noc: Noc { hop_energy_pj: 0.061, multicast: true },
+        mac_energy_pj: 1.0,
+        clock_mhz: 1000.0,
+    }
+}
+
+/// ShiDianNao-style — 8×8 output-stationary PE grid with NBin/NBout/SB
+/// buffers modelled as one 64 KiB level.
+pub fn shidiannao() -> Accelerator {
+    Accelerator {
+        name: "ShiDianNao".to_string(),
+        style: Style::ShiDianNaoLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 16, 16),
+            StorageLevel::buffer("SRAM", 8192, 64).with_bandwidth(4.0),
+            StorageLevel::dram(64).with_bandwidth(1.0),
+        ],
+        pe: PeArray::new(8, 8),
+        noc: Noc { hop_energy_pj: 0.061, multicast: true },
+        mac_energy_pj: 1.0,
+        clock_mhz: 1000.0,
+    }
+}
+
+/// All presets.
+pub fn all() -> Vec<Accelerator> {
+    vec![eyeriss(), nvdla(), shidiannao()]
+}
+
+/// Look up a preset by (case-insensitive) name.
+pub fn by_name(name: &str) -> Option<Accelerator> {
+    match name.to_ascii_lowercase().as_str() {
+        "eyeriss" => Some(eyeriss()),
+        "nvdla" => Some(nvdla()),
+        "shidiannao" | "shi-diannao" => Some(shidiannao()),
+        _ => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eyeriss_matches_table1() {
+        let a = eyeriss();
+        assert_eq!(a.pe.m, 12);
+        assert_eq!(a.pe.n, 14);
+        assert_eq!(a.levels[0].depth, 16);
+        assert_eq!(a.levels[0].width_bits, 16);
+        assert_eq!(a.levels[1].depth, 16384);
+        assert_eq!(a.levels[1].width_bits, 64);
+        assert_eq!(a.levels[2].width_bits, 64);
+        assert!(a.levels[2].unbounded);
+        // 128 KiB GLB.
+        assert_eq!(a.levels[1].capacity_bits() / 8, 128 * 1024);
+    }
+
+    #[test]
+    fn styles_are_distinct() {
+        assert_eq!(eyeriss().style, Style::EyerissLike);
+        assert_eq!(nvdla().style, Style::NvdlaLike);
+        assert_eq!(shidiannao().style, Style::ShiDianNaoLike);
+    }
+
+    #[test]
+    fn by_name_lookup() {
+        for a in all() {
+            assert_eq!(by_name(&a.name).unwrap().name, a.name);
+        }
+        assert!(by_name("tpu").is_none());
+    }
+}

@@ -1,0 +1,239 @@
+//! The compile-time coordinator — the paper's "usability at the compiler
+//! level" claim made concrete.
+//!
+//! [`compile_network`] maps every conv layer of a network onto an
+//! accelerator with a chosen mapper, in parallel across worker threads,
+//! deduplicating identical layer shapes through a mapping cache (networks
+//! repeat shapes constantly — VGG's conv blocks, ResNet's bottlenecks).
+//! [`service::MappingService`] wraps the same machinery as a persistent
+//! request loop with metrics, the form a compiler would embed.
+
+pub mod service;
+
+pub use service::{MappingService, ServiceMetrics};
+
+use crate::arch::Accelerator;
+use crate::mappers::{MapError, MapOutcome, Mapper};
+use crate::util::table::{fmt_f64, Table};
+use crate::workload::ConvLayer;
+use std::collections::HashMap;
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Cache key: everything that determines a mapping for a layer on an arch.
+pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> String {
+    format!(
+        "{}|n{}m{}c{}r{}s{}p{}q{}st{}dw{}",
+        acc.name,
+        layer.n,
+        layer.m,
+        layer.c,
+        layer.r,
+        layer.s,
+        layer.p,
+        layer.q,
+        layer.stride,
+        layer.depthwise
+    )
+}
+
+/// One mapped layer in a network plan.
+#[derive(Debug, Clone)]
+pub struct LayerPlan {
+    pub layer: ConvLayer,
+    pub outcome: MapOutcome,
+    /// Served from the mapping cache (shape already mapped).
+    pub cached: bool,
+}
+
+/// A whole-network mapping plan.
+#[derive(Debug, Clone)]
+pub struct NetworkPlan {
+    pub arch: String,
+    pub mapper: String,
+    pub layers: Vec<LayerPlan>,
+    /// Wall-clock of the whole compile (all layers, parallel).
+    pub compile_time: Duration,
+}
+
+impl NetworkPlan {
+    /// Total energy over all layers, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.layers.iter().map(|l| l.outcome.evaluation.energy.total_uj()).sum()
+    }
+
+    /// Total roofline latency over all layers (sequential execution).
+    pub fn total_latency_cycles(&self) -> u64 {
+        self.layers.iter().map(|l| l.outcome.evaluation.latency_cycles).sum()
+    }
+
+    /// Total MACs.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(|l| l.outcome.evaluation.macs).sum()
+    }
+
+    /// Sum of per-layer mapping times (the compile-cost metric; cached
+    /// layers count ~0).
+    pub fn total_mapping_time(&self) -> Duration {
+        self.layers.iter().filter(|l| !l.cached).map(|l| l.outcome.elapsed).sum()
+    }
+
+    /// Cache hits.
+    pub fn cache_hits(&self) -> usize {
+        self.layers.iter().filter(|l| l.cached).count()
+    }
+
+    /// Mean PE utilization, MAC-weighted.
+    pub fn mean_utilization(&self) -> f64 {
+        let total = self.total_macs() as f64;
+        self.layers
+            .iter()
+            .map(|l| l.outcome.evaluation.utilization * l.outcome.evaluation.macs as f64)
+            .sum::<f64>()
+            / total.max(1.0)
+    }
+
+    /// Per-layer report table.
+    pub fn render(&self) -> Table {
+        let mut t = Table::new(vec![
+            "layer", "MACs", "energy (µJ)", "pJ/MAC", "util", "latency (cyc)", "map time", "cached",
+        ]);
+        for lp in &self.layers {
+            let e = &lp.outcome.evaluation;
+            t.row(vec![
+                lp.layer.name.clone(),
+                e.macs.to_string(),
+                fmt_f64(e.energy.total_uj()),
+                fmt_f64(e.energy.pj_per_mac(e.macs)),
+                format!("{:.0}%", e.utilization * 100.0),
+                e.latency_cycles.to_string(),
+                crate::util::bench::fmt_duration(lp.outcome.elapsed),
+                if lp.cached { "yes" } else { "no" }.into(),
+            ]);
+        }
+        t
+    }
+}
+
+/// Map every layer of a network, in parallel over `threads` workers, with
+/// shape deduplication. The mapper is cloned per worker (search mappers
+/// carry interior counters).
+pub fn compile_network<M>(
+    layers: &[ConvLayer],
+    acc: &Accelerator,
+    mapper: &M,
+    threads: usize,
+) -> Result<NetworkPlan, MapError>
+where
+    M: Mapper + Clone + Send + Sync,
+{
+    let t0 = std::time::Instant::now();
+    let threads = threads.max(1);
+
+    // Deduplicate shapes.
+    let mut unique: Vec<(String, ConvLayer)> = Vec::new();
+    let mut seen: HashMap<String, usize> = HashMap::new();
+    for l in layers {
+        let key = layer_key(l, acc);
+        if !seen.contains_key(&key) {
+            seen.insert(key.clone(), unique.len());
+            unique.push((key, l.clone()));
+        }
+    }
+
+    // Parallel map over unique shapes.
+    let results: Mutex<HashMap<String, Result<MapOutcome, String>>> = Mutex::new(HashMap::new());
+    let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..threads.min(unique.len().max(1)) {
+            let mapper = mapper.clone();
+            let unique = &unique;
+            let results = &results;
+            let next = &next;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                if i >= unique.len() {
+                    break;
+                }
+                let (key, layer) = &unique[i];
+                let out = mapper.run(layer, acc).map_err(|e| e.to_string());
+                results.lock().unwrap().insert(key.clone(), out);
+            });
+        }
+    });
+
+    // Assemble in network order; duplicate shapes are cache hits.
+    let results = results.into_inner().unwrap();
+    let mut plans = Vec::with_capacity(layers.len());
+    let mut first_use: std::collections::HashSet<String> = std::collections::HashSet::new();
+    for l in layers {
+        let key = layer_key(l, acc);
+        let out = results
+            .get(&key)
+            .expect("every key mapped")
+            .as_ref()
+            .map_err(|e| MapError::NoValidMapping(format!("{}: {e}", l.name)))?;
+        let cached = !first_use.insert(key);
+        plans.push(LayerPlan { layer: l.clone(), outcome: out.clone(), cached });
+    }
+
+    Ok(NetworkPlan {
+        arch: acc.name.clone(),
+        mapper: mapper.name(),
+        layers: plans,
+        compile_time: t0.elapsed(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::LocalMapper;
+    use crate::workload::zoo;
+
+    #[test]
+    fn compiles_vgg16_with_dedup() {
+        let acc = presets::eyeriss();
+        let layers = zoo::vgg16();
+        let plan = compile_network(&layers, &acc, &LocalMapper::new(), 4).unwrap();
+        assert_eq!(plan.layers.len(), 13);
+        // VGG16 has repeated shapes (conv6/conv7, conv9/conv10, conv12/13).
+        assert!(plan.cache_hits() >= 3, "cache hits: {}", plan.cache_hits());
+        assert!(plan.total_energy_uj() > 0.0);
+        assert_eq!(plan.total_macs(), layers.iter().map(|l| l.macs()).sum::<u64>());
+    }
+
+    #[test]
+    fn single_thread_equals_parallel() {
+        let acc = presets::nvdla();
+        let layers = zoo::squeezenet();
+        let p1 = compile_network(&layers, &acc, &LocalMapper::new(), 1).unwrap();
+        let p8 = compile_network(&layers, &acc, &LocalMapper::new(), 8).unwrap();
+        assert_eq!(p1.layers.len(), p8.layers.len());
+        for (a, b) in p1.layers.iter().zip(&p8.layers) {
+            assert_eq!(a.outcome.mapping, b.outcome.mapping, "layer {}", a.layer.name);
+        }
+    }
+
+    #[test]
+    fn plan_renders() {
+        let acc = presets::shidiannao();
+        let layers = zoo::alexnet();
+        let plan = compile_network(&layers, &acc, &LocalMapper::new(), 2).unwrap();
+        let t = plan.render();
+        assert_eq!(t.n_rows(), 5);
+        assert!(plan.mean_utilization() > 0.0);
+    }
+
+    #[test]
+    fn layer_key_distinguishes_arch_and_shape() {
+        let a = presets::eyeriss();
+        let b = presets::nvdla();
+        let l1 = zoo::vgg16()[0].clone();
+        let l2 = zoo::vgg16()[1].clone();
+        assert_ne!(layer_key(&l1, &a), layer_key(&l1, &b));
+        assert_ne!(layer_key(&l1, &a), layer_key(&l2, &a));
+        assert_eq!(layer_key(&l1, &a), layer_key(&l1, &a));
+    }
+}

@@ -1,0 +1,208 @@
+//! The persistent mapping service — a compiler-embeddable request loop.
+//!
+//! Worker threads pull [`MapRequest`]s from a shared queue, consult the
+//! mapping cache, run the mapper on misses, and answer on a per-request
+//! channel. Metrics (requests, cache hits, p50 service time) are exported
+//! for the coordinator's own observability — the paper's compile-time
+//! claim is only credible if mapping latency is measured in situ.
+
+use super::layer_key;
+use crate::arch::Accelerator;
+use crate::mappers::{MapOutcome, Mapper};
+use crate::workload::ConvLayer;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// A mapping request: one layer on the service's accelerator.
+struct MapRequest {
+    layer: ConvLayer,
+    reply: mpsc::Sender<Result<MapReply, String>>,
+}
+
+/// Service answer.
+#[derive(Debug, Clone)]
+pub struct MapReply {
+    pub outcome: MapOutcome,
+    pub cached: bool,
+    /// Total in-service time (queue + map).
+    pub service_time: Duration,
+}
+
+/// Counters exported by the service.
+#[derive(Debug, Default)]
+pub struct ServiceMetrics {
+    pub requests: AtomicU64,
+    pub cache_hits: AtomicU64,
+    pub errors: AtomicU64,
+    /// Sum of service times, ns (divide by requests for the mean).
+    pub service_ns: AtomicU64,
+}
+
+impl ServiceMetrics {
+    pub fn mean_service_time(&self) -> Duration {
+        let n = self.requests.load(Ordering::Relaxed).max(1);
+        Duration::from_nanos(self.service_ns.load(Ordering::Relaxed) / n)
+    }
+}
+
+/// A running mapping service over one accelerator and one mapper.
+pub struct MappingService {
+    tx: Option<mpsc::Sender<MapRequest>>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    pub metrics: Arc<ServiceMetrics>,
+}
+
+impl MappingService {
+    /// Spawn the service with `threads` workers.
+    pub fn start<M>(acc: Accelerator, mapper: M, threads: usize) -> Self
+    where
+        M: Mapper + Clone + Send + 'static,
+    {
+        let (tx, rx) = mpsc::channel::<MapRequest>();
+        let rx = Arc::new(Mutex::new(rx));
+        let cache: Arc<Mutex<HashMap<String, MapOutcome>>> = Arc::new(Mutex::new(HashMap::new()));
+        let metrics = Arc::new(ServiceMetrics::default());
+        let mut workers = Vec::new();
+        for _ in 0..threads.max(1) {
+            let rx = Arc::clone(&rx);
+            let cache = Arc::clone(&cache);
+            let metrics = Arc::clone(&metrics);
+            let acc = acc.clone();
+            let mapper = mapper.clone();
+            workers.push(std::thread::spawn(move || loop {
+                // Holding the lock only for recv keeps workers independent.
+                let req = {
+                    let guard = rx.lock().unwrap();
+                    guard.recv()
+                };
+                let Ok(req) = req else { break }; // channel closed → drain
+                let t0 = Instant::now();
+                let key = layer_key(&req.layer, &acc);
+                let hit = cache.lock().unwrap().get(&key).cloned();
+                let (result, cached) = match hit {
+                    Some(outcome) => (Ok(outcome), true),
+                    None => match mapper.run(&req.layer, &acc) {
+                        Ok(outcome) => {
+                            cache.lock().unwrap().insert(key, outcome.clone());
+                            (Ok(outcome), false)
+                        }
+                        Err(e) => (Err(e.to_string()), false),
+                    },
+                };
+                let service_time = t0.elapsed();
+                metrics.requests.fetch_add(1, Ordering::Relaxed);
+                metrics.service_ns.fetch_add(service_time.as_nanos() as u64, Ordering::Relaxed);
+                if cached {
+                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                if result.is_err() {
+                    metrics.errors.fetch_add(1, Ordering::Relaxed);
+                }
+                // Receiver may have given up; ignore send failures.
+                let _ = req.reply.send(result.map(|outcome| MapReply { outcome, cached, service_time }));
+            }));
+        }
+        Self { tx: Some(tx), workers, metrics }
+    }
+
+    /// Submit a layer; returns a handle to await the reply.
+    pub fn submit(&self, layer: ConvLayer) -> JobHandle {
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .as_ref()
+            .expect("service running")
+            .send(MapRequest { layer, reply: reply_tx })
+            .expect("workers alive");
+        JobHandle { rx: reply_rx }
+    }
+
+    /// Map a batch and wait for all replies (in request order).
+    pub fn map_all(&self, layers: &[ConvLayer]) -> Vec<Result<MapReply, String>> {
+        let handles: Vec<JobHandle> = layers.iter().map(|l| self.submit(l.clone())).collect();
+        handles.into_iter().map(|h| h.wait()).collect()
+    }
+
+    /// Graceful shutdown: close the queue and join workers.
+    pub fn shutdown(mut self) {
+        self.tx.take(); // close channel
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+impl Drop for MappingService {
+    fn drop(&mut self) {
+        self.tx.take();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+}
+
+/// Await handle for one submitted request.
+pub struct JobHandle {
+    rx: mpsc::Receiver<Result<MapReply, String>>,
+}
+
+impl JobHandle {
+    /// Block until the reply arrives.
+    pub fn wait(self) -> Result<MapReply, String> {
+        self.rx.recv().map_err(|_| "service dropped request".to_string())?
+    }
+
+    /// Non-blocking poll.
+    pub fn try_wait(&self) -> Option<Result<MapReply, String>> {
+        self.rx.try_recv().ok()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::LocalMapper;
+    use crate::workload::zoo;
+    use std::sync::atomic::Ordering;
+
+    #[test]
+    fn service_maps_a_network_with_cache_hits() {
+        let svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 4);
+        let layers = zoo::vgg16();
+        let replies = svc.map_all(&layers);
+        assert_eq!(replies.len(), 13);
+        for r in &replies {
+            let r = r.as_ref().unwrap();
+            assert!(r.outcome.evaluation.energy.total_pj() > 0.0);
+        }
+        assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 13);
+        // Repeated VGG shapes must hit the cache (exact count depends on
+        // request interleaving across workers; at least the later
+        // duplicates hit).
+        assert!(svc.metrics.cache_hits.load(Ordering::Relaxed) >= 1);
+        assert_eq!(svc.metrics.errors.load(Ordering::Relaxed), 0);
+        assert!(svc.metrics.mean_service_time() > Duration::ZERO);
+        svc.shutdown();
+    }
+
+    #[test]
+    fn repeated_submission_is_cached() {
+        let svc = MappingService::start(presets::nvdla(), LocalMapper::new(), 1);
+        let layer = zoo::vgg16()[0].clone();
+        let a = svc.submit(layer.clone()).wait().unwrap();
+        let b = svc.submit(layer).wait().unwrap();
+        assert!(!a.cached);
+        assert!(b.cached);
+        assert_eq!(a.outcome.mapping, b.outcome.mapping);
+    }
+
+    #[test]
+    fn shutdown_drains_cleanly() {
+        let svc = MappingService::start(presets::shidiannao(), LocalMapper::new(), 2);
+        let h = svc.submit(zoo::alexnet()[0].clone());
+        h.wait().unwrap();
+        svc.shutdown(); // must not hang
+    }
+}

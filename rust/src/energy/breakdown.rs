@@ -1,0 +1,92 @@
+//! Per-component energy breakdown — the stacked bars of the paper's Fig. 7
+//! (DRAM / GLB / NoC / RF-spad / MAC).
+
+use crate::arch::Accelerator;
+
+/// Energy totals per architectural component, in pJ.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EnergyBreakdown {
+    /// Storage-level energies aligned with `Accelerator::levels`
+    /// (index 0 = per-PE RF, last = DRAM).
+    pub level_pj: Vec<f64>,
+    /// NoC (L1↔PE delivery + spatial psum reduction).
+    pub noc_pj: f64,
+    /// Datapath MACs.
+    pub mac_pj: f64,
+}
+
+impl EnergyBreakdown {
+    pub fn zero(n_levels: usize) -> Self {
+        Self { level_pj: vec![0.0; n_levels], noc_pj: 0.0, mac_pj: 0.0 }
+    }
+
+    /// Total energy, pJ.
+    pub fn total_pj(&self) -> f64 {
+        self.level_pj.iter().sum::<f64>() + self.noc_pj + self.mac_pj
+    }
+
+    /// Total energy, µJ (the unit of Fig. 3 / Fig. 7 axes).
+    pub fn total_uj(&self) -> f64 {
+        self.total_pj() / 1e6
+    }
+
+    /// DRAM (outermost level) share — the dominant Fig. 7 component.
+    pub fn dram_pj(&self) -> f64 {
+        *self.level_pj.last().unwrap_or(&0.0)
+    }
+
+    /// Energy per MAC (pJ) given an op count — the paper's efficiency lens.
+    pub fn pj_per_mac(&self, macs: u64) -> f64 {
+        self.total_pj() / macs.max(1) as f64
+    }
+
+    /// Labelled components for report/CSV emission: (name, pJ),
+    /// storage levels first (innermost→outermost), then NoC, then MAC.
+    pub fn components<'a>(&'a self, acc: &'a Accelerator) -> Vec<(&'a str, f64)> {
+        let mut out: Vec<(&str, f64)> = acc
+            .levels
+            .iter()
+            .zip(&self.level_pj)
+            .map(|(l, &e)| (l.name.as_str(), e))
+            .collect();
+        out.push(("NoC", self.noc_pj));
+        out.push(("MAC", self.mac_pj));
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn totals_add_up() {
+        let mut b = EnergyBreakdown::zero(3);
+        b.level_pj = vec![1.0, 2.0, 3.0];
+        b.noc_pj = 0.5;
+        b.mac_pj = 4.0;
+        assert!((b.total_pj() - 10.5).abs() < 1e-12);
+        assert!((b.total_uj() - 10.5e-6).abs() < 1e-18);
+        assert_eq!(b.dram_pj(), 3.0);
+    }
+
+    #[test]
+    fn components_are_labelled() {
+        let acc = presets::eyeriss();
+        let mut b = EnergyBreakdown::zero(acc.levels.len());
+        b.level_pj = vec![1.0, 2.0, 3.0];
+        let c = b.components(&acc);
+        assert_eq!(c[0].0, "RF");
+        assert_eq!(c[1].0, "GLB");
+        assert_eq!(c[2].0, "DRAM");
+        assert_eq!(c[3].0, "NoC");
+        assert_eq!(c[4].0, "MAC");
+    }
+
+    #[test]
+    fn pj_per_mac_guards_zero() {
+        let b = EnergyBreakdown::zero(2);
+        assert_eq!(b.pj_per_mac(0), 0.0);
+    }
+}

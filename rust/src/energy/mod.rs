@@ -1,0 +1,123 @@
+//! Accelergy-lite energy model.
+//!
+//! The paper evaluates energy through Accelergy's energy reference tables
+//! (ERTs) [24]. We generate an ERT from the accelerator geometry with the
+//! standard SRAM scaling heuristic: access energy grows ~√capacity
+//! (wordline/bitline length), anchored to the widely used Eyeriss relative
+//! costs (MAC ≈ 1, RF ≈ 1, GLB(128 KiB) ≈ 6, DRAM ≈ 200 — Chen et al.,
+//! ISCA'16 Table).  Absolute pJ values are a technology constant times the
+//! relative number; comparisons between mappers (Fig. 7, Table 3) only need
+//! the relative table, exactly as in the paper.
+
+pub mod breakdown;
+
+pub use breakdown::EnergyBreakdown;
+
+use crate::arch::Accelerator;
+
+/// Relative-cost anchors (Eyeriss ISCA'16, normalized to one MAC).
+const DRAM_REL: f64 = 200.0;
+/// GLB anchor: 128 KiB ↔ 6× MAC.
+const GLB_ANCHOR_BITS: f64 = (128 * 1024 * 8) as f64;
+const GLB_ANCHOR_REL: f64 = 6.0;
+/// Floor for tiny register files (≈ one MAC).
+const RF_FLOOR_REL: f64 = 0.8;
+
+/// Energy reference table: pJ per access for every storage level of one
+/// accelerator, plus MAC and NoC-hop energies.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Ert {
+    /// pJ per word access, aligned with `Accelerator::levels`.
+    pub level_pj: Vec<f64>,
+    /// pJ per MAC.
+    pub mac_pj: f64,
+    /// pJ per word per NoC hop.
+    pub noc_hop_pj: f64,
+}
+
+impl Ert {
+    /// Build the ERT for an accelerator from its geometry.
+    pub fn for_accelerator(acc: &Accelerator) -> Ert {
+        let unit = acc.mac_energy_pj; // technology scale: 1 MAC in pJ
+        let level_pj = acc
+            .levels
+            .iter()
+            .map(|l| {
+                if l.unbounded {
+                    DRAM_REL * unit
+                } else {
+                    let bits = l.capacity_bits() as f64;
+                    let rel = GLB_ANCHOR_REL * (bits / GLB_ANCHOR_BITS).sqrt();
+                    rel.max(RF_FLOOR_REL) * unit
+                }
+            })
+            .collect();
+        Ert {
+            level_pj,
+            mac_pj: unit,
+            noc_hop_pj: acc.noc.hop_energy_pj,
+        }
+    }
+
+    /// pJ per access at storage level `l`.
+    pub fn level(&self, l: usize) -> f64 {
+        self.level_pj[l]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn eyeriss_ert_matches_anchors() {
+        let acc = presets::eyeriss();
+        let ert = Ert::for_accelerator(&acc);
+        // RF (256 bit) hits the floor.
+        assert!((ert.level(0) - 0.8).abs() < 1e-9, "{}", ert.level(0));
+        // GLB is exactly the 128 KiB anchor.
+        assert!((ert.level(1) - 6.0).abs() < 1e-9, "{}", ert.level(1));
+        // DRAM anchor.
+        assert!((ert.level(2) - 200.0).abs() < 1e-9);
+        assert_eq!(ert.mac_pj, 1.0);
+    }
+
+    #[test]
+    fn energy_monotone_in_capacity() {
+        // Bigger buffers cost more per access.
+        let mut a = presets::eyeriss();
+        let e_small = Ert::for_accelerator(&a).level(1);
+        a.levels[1].depth *= 4;
+        let e_big = Ert::for_accelerator(&a).level(1);
+        assert!(e_big > e_small);
+        // √ scaling: 4× capacity → 2× energy.
+        assert!((e_big / e_small - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn hierarchy_is_ordered() {
+        // Every preset: deeper levels cost strictly more per access.
+        for acc in presets::all() {
+            let ert = Ert::for_accelerator(&acc);
+            for l in 1..acc.levels.len() {
+                assert!(
+                    ert.level(l) > ert.level(l - 1),
+                    "{}: level {l} ({}) not costlier than level {}",
+                    acc.name,
+                    ert.level(l),
+                    l - 1
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn technology_scale_is_linear() {
+        let mut a = presets::eyeriss();
+        a.mac_energy_pj = 2.0;
+        let ert = Ert::for_accelerator(&a);
+        assert!((ert.level(1) - 12.0).abs() < 1e-9);
+        assert!((ert.level(2) - 400.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,176 @@
+//! Hardware/mapping co-design exploration — the §3 motivation
+//! (`O(10^17)` joint space) turned into a usable tool.
+//!
+//! LOCAL's one-pass cost makes the *mapping* axis of the joint space
+//! effectively free, so a designer can sweep hardware configurations
+//! directly. [`sweep`] enumerates accelerator variants (PE geometry ×
+//! buffer sizes), maps a workload set onto each with any mapper, and
+//! returns per-design aggregates; [`pareto`] extracts the energy/latency
+//! frontier.
+
+use crate::arch::Accelerator;
+use crate::mappers::{MapError, Mapper};
+use crate::workload::ConvLayer;
+
+/// One hardware design point to evaluate.
+#[derive(Debug, Clone)]
+pub struct DesignPoint {
+    pub label: String,
+    pub acc: Accelerator,
+}
+
+/// Aggregated result of mapping the workload set on one design.
+#[derive(Debug, Clone)]
+pub struct DesignResult {
+    pub label: String,
+    pub total_energy_uj: f64,
+    pub total_latency_cycles: u64,
+    pub mean_utilization: f64,
+    pub total_macs: u64,
+    /// Energy-delay product, µJ · Mcycles.
+    pub edp: f64,
+}
+
+impl DesignResult {
+    pub fn pj_per_mac(&self) -> f64 {
+        self.total_energy_uj * 1e6 / self.total_macs.max(1) as f64
+    }
+}
+
+/// The sweep grid: PE geometries × level-1 buffer depths applied to a base
+/// accelerator.
+#[derive(Debug, Clone)]
+pub struct SweepGrid {
+    pub pe_dims: Vec<(u64, u64)>,
+    pub l1_depths: Vec<u64>,
+}
+
+impl SweepGrid {
+    /// A sensible default grid around the paper's machines.
+    pub fn default_grid() -> Self {
+        Self {
+            pe_dims: vec![(8, 8), (12, 14), (16, 16), (8, 32), (32, 8), (24, 24), (32, 32)],
+            l1_depths: vec![8192, 16384, 32768, 65536],
+        }
+    }
+
+    /// Materialize design points from a base machine.
+    pub fn points(&self, base: &Accelerator) -> Vec<DesignPoint> {
+        let mut out = Vec::new();
+        for &(m, n) in &self.pe_dims {
+            for &depth in &self.l1_depths {
+                let mut acc = base.clone();
+                acc.pe = crate::arch::PeArray::new(m, n);
+                acc.levels[1].depth = depth;
+                let kib = depth * acc.levels[1].width_bits / 8 / 1024;
+                acc.name = format!("{}-{m}x{n}-{kib}k", base.name);
+                out.push(DesignPoint { label: format!("{m}x{n} / {kib} KiB"), acc });
+            }
+        }
+        out
+    }
+}
+
+/// Map `layers` on every design point with `mapper`; aggregate per design.
+pub fn sweep<M: Mapper>(
+    points: &[DesignPoint],
+    layers: &[ConvLayer],
+    mapper: &M,
+) -> Result<Vec<DesignResult>, MapError> {
+    let mut out = Vec::with_capacity(points.len());
+    for p in points {
+        let mut energy = 0.0f64;
+        let mut latency = 0u64;
+        let mut util_weighted = 0.0f64;
+        let mut macs = 0u64;
+        for layer in layers {
+            let o = mapper.run(layer, &p.acc)?;
+            energy += o.evaluation.energy.total_uj();
+            latency += o.evaluation.latency_cycles;
+            util_weighted += o.evaluation.utilization * o.evaluation.macs as f64;
+            macs += o.evaluation.macs;
+        }
+        out.push(DesignResult {
+            label: p.label.clone(),
+            total_energy_uj: energy,
+            total_latency_cycles: latency,
+            mean_utilization: util_weighted / macs.max(1) as f64,
+            total_macs: macs,
+            edp: energy * latency as f64 / 1e12,
+        });
+    }
+    Ok(out)
+}
+
+/// Pareto-optimal subset under (energy, latency) minimization, sorted by
+/// energy ascending.
+pub fn pareto(results: &[DesignResult]) -> Vec<DesignResult> {
+    let mut sorted: Vec<DesignResult> = results.to_vec();
+    sorted.sort_by(|a, b| a.total_energy_uj.total_cmp(&b.total_energy_uj));
+    let mut front: Vec<DesignResult> = Vec::new();
+    let mut best_latency = u64::MAX;
+    for r in sorted {
+        if r.total_latency_cycles < best_latency {
+            best_latency = r.total_latency_cycles;
+            front.push(r);
+        }
+    }
+    front
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::LocalMapper;
+    use crate::workload::zoo;
+
+    #[test]
+    fn sweep_covers_grid() {
+        let grid = SweepGrid { pe_dims: vec![(8, 8), (16, 16)], l1_depths: vec![8192, 16384] };
+        let points = grid.points(&presets::eyeriss());
+        assert_eq!(points.len(), 4);
+        let layers = vec![zoo::vgg02()[4].clone()];
+        let results = sweep(&points, &layers, &LocalMapper::new()).unwrap();
+        assert_eq!(results.len(), 4);
+        for r in &results {
+            assert!(r.total_energy_uj > 0.0);
+            assert!(r.edp > 0.0);
+        }
+    }
+
+    #[test]
+    fn pareto_front_is_monotone() {
+        let grid = SweepGrid::default_grid();
+        let points = grid.points(&presets::eyeriss());
+        let layers = vec![zoo::vgg02()[4].clone()];
+        let results = sweep(&points, &layers, &LocalMapper::new()).unwrap();
+        let front = pareto(&results);
+        assert!(!front.is_empty());
+        assert!(front.len() <= results.len());
+        // Energy ascending, latency strictly descending along the front.
+        for w in front.windows(2) {
+            assert!(w[0].total_energy_uj <= w[1].total_energy_uj);
+            assert!(w[0].total_latency_cycles > w[1].total_latency_cycles);
+        }
+        // Every non-front point is dominated by some front point.
+        for r in &results {
+            let dominated = front.iter().any(|f| {
+                f.total_energy_uj <= r.total_energy_uj
+                    && f.total_latency_cycles <= r.total_latency_cycles
+            });
+            assert!(dominated, "{} not dominated and not on front?", r.label);
+        }
+    }
+
+    #[test]
+    fn bigger_buffer_designs_reduce_energy_on_average() {
+        let grid = SweepGrid { pe_dims: vec![(12, 14)], l1_depths: vec![4096, 65536] };
+        let points = grid.points(&presets::eyeriss());
+        let layers = vec![zoo::vgg16()[8].clone()];
+        let results = sweep(&points, &layers, &LocalMapper::new()).unwrap();
+        // A 16× larger GLB should not increase total energy for this
+        // DRAM-bound layer.
+        assert!(results[1].total_energy_uj <= results[0].total_energy_uj * 1.05);
+    }
+}

@@ -1,0 +1,54 @@
+//! # local-mapper
+//!
+//! A compile-time mapping framework for spatial DNN accelerators,
+//! reproducing **“LOCAL: Low-Complex Mapping Algorithm for Spatial DNN
+//! Accelerators”** (Reshadi & Gregg, NorCAS 2021).
+//!
+//! The crate provides:
+//!
+//! * [`workload`] — convolution problem dimensions and the network zoo
+//!   (VGG-16/VGG-02, ResNet-50, SqueezeNet, MobileNet-V2, AlexNet).
+//! * [`arch`] — the spatial-accelerator model (storage hierarchy, PE array,
+//!   NoC) with Eyeriss / NVDLA / ShiDianNao presets and YAML configs.
+//! * [`mapping`] — the mapping IR (tiling, permutation, spatial partition)
+//!   with full validity checking.
+//! * [`model`] — the Timeloop-lite analytical engine: loop-nest reuse
+//!   analysis, access counts, NoC traffic, PE utilization, latency.
+//! * [`energy`] — the Accelergy-lite energy model and Fig.-7 breakdowns.
+//! * [`mapspace`] — map-space enumeration, sizes and dataflow constraints.
+//! * [`mappers`] — LOCAL (one pass) and the baseline mappers (dataflow-
+//!   constrained search, random, exhaustive, genetic).
+//! * [`coordinator`] — the multi-layer compile-time mapping service.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels.
+//! * [`report`] — emitters for the paper's tables and figures.
+//!
+//! ## Quickstart
+//!
+//! ```
+//! use local_mapper::arch::presets;
+//! use local_mapper::mappers::local::LocalMapper;
+//! use local_mapper::mappers::Mapper;
+//! use local_mapper::model::evaluate;
+//! use local_mapper::workload::zoo;
+//!
+//! let acc = presets::eyeriss();
+//! let layer = zoo::vgg16()[8].clone(); // conv9
+//! let mapping = LocalMapper::new().map(&layer, &acc).unwrap();
+//! let eval = evaluate(&layer, &acc, &mapping).unwrap();
+//! assert!(eval.energy.total_pj() > 0.0);
+//! ```
+
+pub mod arch;
+pub mod coordinator;
+pub mod energy;
+pub mod explore;
+pub mod mappers;
+pub mod mapping;
+pub mod mapspace;
+pub mod model;
+pub mod noc;
+pub mod report;
+pub mod runtime;
+pub mod sim;
+pub mod util;
+pub mod workload;

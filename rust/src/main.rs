@@ -1,0 +1,442 @@
+//! `local-mapper` — CLI for the LOCAL mapping framework.
+//!
+//! Subcommands (see `local-mapper help`):
+//!   map       map one layer, print the loop nest + evaluation
+//!   compile   map a whole network through the coordinator
+//!   table2    reproduce paper Table 2 (workloads + MAC counts)
+//!   table3    reproduce paper Table 3 (mapping time, LOCAL vs RS/WS/OS)
+//!   fig3      reproduce paper Fig. 3 (random-mapping energy distribution)
+//!   fig7      reproduce paper Fig. 7 (energy breakdowns)
+//!   mapspace  print §3 map-space / design-space sizes
+//!   arch      show or validate an accelerator config
+//!   run       execute an AOT conv artifact via PJRT and verify numerics
+
+use local_mapper::arch::{config, presets, Accelerator};
+use local_mapper::coordinator::compile_network;
+use local_mapper::mappers::genetic::GeneticMapper;
+use local_mapper::mappers::{ConstrainedSearch, LocalMapper, Mapper, RandomMapper};
+use local_mapper::mapspace::{self, Dataflow};
+use local_mapper::report;
+use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime};
+use local_mapper::util::cli::Args;
+use local_mapper::util::rng::SplitMix64;
+use local_mapper::util::table::fmt_f64;
+use local_mapper::workload::{zoo, ConvLayer};
+
+fn main() {
+    let args = Args::from_env();
+    let code = match args.subcommand() {
+        Some("map") => cmd_map(&args),
+        Some("compile") => cmd_compile(&args),
+        Some("table2") => cmd_table2(),
+        Some("table3") => cmd_table3(&args),
+        Some("fig3") => cmd_fig3(&args),
+        Some("fig7") => cmd_fig7(&args),
+        Some("mapspace") => cmd_mapspace(&args),
+        Some("arch") => cmd_arch(&args),
+        Some("run") => cmd_run(&args),
+        Some("simulate") => cmd_simulate(&args),
+        Some("explore") => cmd_explore(&args),
+        Some("help") | None => {
+            print_help();
+            0
+        }
+        Some(other) => {
+            eprintln!("unknown subcommand '{other}'\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "local-mapper — LOCAL mapping for spatial DNN accelerators (NorCAS'21 reproduction)
+
+USAGE: local-mapper <subcommand> [options]
+
+  map      --layer <net:idx|MxCxRxSxPxQ> [--arch eyeriss] [--mapper local|rs|ws|os|random|ga]
+  compile  --network <vgg16|vgg02|resnet50|resnet18|googlenet|squeezenet|mobilenetv2|alexnet>
+           | --network-file <layers.yaml>   [--arch eyeriss] [--threads 4]
+  table2
+  table3   [--budget 3000] [--seed 42] [--csv]
+  fig3     [--n 3000] [--seed 42] [--csv]
+  fig7     [--budget 3000] [--seed 42] [--csv]
+  mapspace [--layer vgg02:5] [--arch eyeriss]
+  arch     [--name eyeriss] [--file cfg.yaml] [--dump]
+  run      [--artifacts artifacts] [--kernel <name>] [--iters 20] [--verify]
+  simulate --layer <spec> [--arch eyeriss] [--single-buffer]
+  explore  --network <name> [--arch eyeriss] (PE × buffer sweep, Pareto front)"
+    );
+}
+
+/// Resolve `--arch`: preset name or YAML file via `--arch-file`.
+fn resolve_arch(args: &Args) -> Result<Accelerator, String> {
+    if let Some(path) = args.get("arch-file") {
+        return config::accelerator_from_file(path).map_err(|e| e.to_string());
+    }
+    let name = args.get_or("arch", "eyeriss");
+    presets::by_name(name).ok_or_else(|| format!("unknown arch '{name}' (eyeriss|nvdla|shidiannao)"))
+}
+
+/// Resolve `--layer`: `network:index` (1-based) or `MxCxRxSxPxQ` dims.
+fn resolve_layer(spec: &str) -> Result<ConvLayer, String> {
+    if let Some((net, idx)) = spec.split_once(':') {
+        let layers = zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
+        let i: usize = idx.parse().map_err(|_| format!("bad layer index '{idx}'"))?;
+        if i == 0 || i > layers.len() {
+            return Err(format!("{net} has layers 1..={}", layers.len()));
+        }
+        Ok(layers[i - 1].clone())
+    } else {
+        let dims: Vec<u64> = spec
+            .split('x')
+            .map(|p| p.parse().map_err(|_| format!("bad dim '{p}' in '{spec}'")))
+            .collect::<Result<_, _>>()?;
+        match dims[..] {
+            [m, c, r, s, p, q] => Ok(ConvLayer::new("custom", m, c, r, s, p, q)),
+            _ => Err("layer dims must be MxCxRxSxPxQ".to_string()),
+        }
+    }
+}
+
+fn resolve_mapper(args: &Args) -> Result<Box<dyn Mapper>, String> {
+    let seed = args.get_num::<u64>("seed", 42);
+    let budget = args.get_num::<u64>("budget", 3000);
+    Ok(match args.get_or("mapper", "local") {
+        "local" => Box::new(LocalMapper::new()),
+        "random" => Box::new(RandomMapper::new(budget, seed)),
+        "ga" => Box::new(GeneticMapper::new(32, 20, seed)),
+        df => {
+            let d = Dataflow::parse(df).ok_or_else(|| format!("unknown mapper '{df}'"))?;
+            Box::new(ConstrainedSearch::new(d, budget, seed))
+        }
+    })
+}
+
+fn cmd_map(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = resolve_arch(args)?;
+        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
+        let mapper = resolve_mapper(args)?;
+        let out = mapper.run(&layer, &acc).map_err(|e| e.to_string())?;
+        println!("{}", out.mapping.render(&layer, &acc));
+        let e = &out.evaluation;
+        println!(
+            "mapper={} evaluations={} map_time={}",
+            mapper.name(),
+            out.evaluations,
+            local_mapper::util::bench::fmt_duration(out.elapsed)
+        );
+        println!(
+            "energy={}µJ ({} pJ/MAC)  utilization={:.1}%  latency={} cycles",
+            fmt_f64(e.energy.total_uj()),
+            fmt_f64(e.energy.pj_per_mac(e.macs)),
+            e.utilization * 100.0,
+            e.latency_cycles
+        );
+        for (name, pj) in e.energy.components(&acc) {
+            println!("  {name:>6}: {} µJ", fmt_f64(pj / 1e6));
+        }
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_compile(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = resolve_arch(args)?;
+        let (net, layers) = if let Some(path) = args.get("network-file") {
+            let layers = local_mapper::workload::config::layers_from_file(path)
+                .map_err(|e| e.to_string())?;
+            (path.to_string(), layers)
+        } else {
+            let net = args.get_or("network", "vgg16");
+            let layers =
+                zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
+            (net.to_string(), layers)
+        };
+        let net = net.as_str();
+        let threads = args.get_num::<usize>("threads", 4);
+        let mapper = LocalMapper::new();
+        let plan = compile_network(&layers, &acc, &mapper, threads).map_err(|e| e.to_string())?;
+        println!("{}", plan.render().render());
+        println!(
+            "network={net} arch={} layers={} cache_hits={} compile_time={}",
+            plan.arch,
+            plan.layers.len(),
+            plan.cache_hits(),
+            local_mapper::util::bench::fmt_duration(plan.compile_time)
+        );
+        println!(
+            "total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
+            plan.total_macs(),
+            fmt_f64(plan.total_energy_uj()),
+            plan.total_latency_cycles(),
+            plan.mean_utilization() * 100.0
+        );
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_table2() -> i32 {
+    let (_, t) = report::table2();
+    println!("{}", t.render());
+    0
+}
+
+fn cmd_table3(args: &Args) -> i32 {
+    let budget = args.get_num::<u64>("budget", 3000);
+    let seed = args.get_num::<u64>("seed", 42);
+    let cells = report::table3(budget, seed);
+    let t = report::render_table3(&cells);
+    if args.flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+        let speedups: Vec<f64> = cells.iter().map(|c| c.speedup).collect();
+        let min = speedups.iter().cloned().fold(f64::INFINITY, f64::min);
+        let max = speedups.iter().cloned().fold(0.0f64, f64::max);
+        println!("mapping-time speedup range: {min:.1}x – {max:.1}x (paper: 2x – 49x)");
+    }
+    0
+}
+
+fn cmd_fig3(args: &Args) -> i32 {
+    let n = args.get_num::<usize>("n", 3000);
+    let seed = args.get_num::<u64>("seed", 42);
+    let (dist, t) = report::fig3(n, seed);
+    if args.flag("csv") {
+        print!("{}", t.to_csv());
+    } else {
+        println!("{}", t.render());
+        let (hi, lo) = dist.spread();
+        println!(
+            "spread: max→med {:.0}%, med→min {:.0}% (paper: 77% and 90%)",
+            hi * 100.0,
+            lo * 100.0
+        );
+    }
+    0
+}
+
+fn cmd_fig7(args: &Args) -> i32 {
+    let budget = args.get_num::<u64>("budget", 3000);
+    let seed = args.get_num::<u64>("seed", 42);
+    let panels = report::fig7(budget, seed);
+    for p in &panels {
+        let acc = presets::by_name(&p.arch).unwrap();
+        println!("== {} ({}) — {} ==", p.arch, p.dataflow, p.category.name());
+        let t = report::render_fig7_panel(p, &acc);
+        if args.flag("csv") {
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    0
+}
+
+fn cmd_mapspace(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = resolve_arch(args)?;
+        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
+        println!("layer: {layer}");
+        println!("accelerator: {acc}");
+        println!(
+            "permutation space (n!)^m: {:.3e}  (paper §3: (6!)^3 ≈ 3.7e8)",
+            mapspace::permutation_space(6, acc.n_levels() as u32)
+        );
+        println!(
+            "full map-space (factorizations × permutations): {:.3e}",
+            mapspace::map_space(&layer, &acc)
+        );
+        println!(
+            "co-design space (VGG16 conv2 example): {:.3e}  (paper: ≈1e17)",
+            mapspace::design_space(64, 64, 224, 224, 3, 3, 3)
+        );
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_arch(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = if let Some(f) = args.get("file") {
+            config::accelerator_from_file(f).map_err(|e| e.to_string())?
+        } else if let Some(name) = args.get("name") {
+            presets::by_name(name).ok_or_else(|| format!("unknown arch '{name}'"))?
+        } else {
+            resolve_arch(args)?
+        };
+        if args.flag("dump") {
+            print!("{}", config::accelerator_to_yaml(&acc));
+        } else {
+            println!("{acc}");
+            for (i, l) in acc.levels.iter().enumerate() {
+                let cap = if l.unbounded {
+                    "unbounded".to_string()
+                } else {
+                    format!("{} elems", acc.level_capacity(i))
+                };
+                println!("  L{i} {}: {cap}{}", l.name, if l.per_pe { " (per PE)" } else { "" });
+            }
+        }
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let dir = args
+            .get("artifacts")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(default_artifacts_dir);
+        let mut rt = Runtime::cpu().map_err(|e| e.to_string())?;
+        let names = rt.load_manifest_dir(&dir).map_err(|e| e.to_string())?;
+        println!("platform={} loaded={names:?}", rt.platform());
+        let kname = args.get("kernel").map(str::to_string).unwrap_or_else(|| names[0].clone());
+        let k = rt.kernel(&kname).map_err(|e| e.to_string())?;
+        // Deterministic pseudo-random inputs.
+        let mut rng = SplitMix64::new(args.get_num::<u64>("seed", 42));
+        let inputs: Vec<Vec<f32>> = k
+            .input_shapes
+            .iter()
+            .map(|s| {
+                let n: i64 = s.iter().product();
+                (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+            })
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let iters = args.get_num::<usize>("iters", 20);
+        let mut times = Vec::with_capacity(iters);
+        let mut out = Vec::new();
+        for _ in 0..iters {
+            let t0 = std::time::Instant::now();
+            out = k.execute_f32(&refs).map_err(|e| e.to_string())?;
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        println!(
+            "kernel={kname} inputs={:?} output={:?} ({} elems)",
+            k.input_shapes,
+            k.output_shape,
+            out.len()
+        );
+        println!(
+            "latency p50={} min={} max={} over {iters} iters",
+            local_mapper::util::bench::fmt_duration(times[times.len() / 2]),
+            local_mapper::util::bench::fmt_duration(times[0]),
+            local_mapper::util::bench::fmt_duration(*times.last().unwrap()),
+        );
+        if args.flag("verify") {
+            // Conv artifacts are NCHW×MCRS; verify against the host oracle.
+            if let ([n, c, h, w], [m, _c2, r, s]) = (&k.input_shapes[0][..], &k.input_shapes[1][..])
+            {
+                let expect = reference_conv(
+                    &inputs[0], &inputs[1], *n as usize, *c as usize, *h as usize, *w as usize,
+                    *m as usize, *r as usize, *s as usize, 1,
+                );
+                let max_err =
+                    out.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+                println!("verify: max |err| vs host conv oracle = {max_err:.2e}");
+                if max_err > 1e-3 {
+                    return Err(format!("verification FAILED (max err {max_err})"));
+                }
+            } else {
+                return Err("kernel shapes are not conv-like; cannot verify".into());
+            }
+        }
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_simulate(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = resolve_arch(args)?;
+        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
+        let mapper = resolve_mapper(args)?;
+        let out = mapper.run(&layer, &acc).map_err(|e| e.to_string())?;
+        let opts = local_mapper::sim::SimOptions {
+            double_buffer: !args.flag("single-buffer"),
+            lockstep_pes: true,
+        };
+        let r = local_mapper::sim::simulate(&layer, &acc, &out.mapping, opts);
+        println!("layer: {layer}\naccelerator: {acc}\nmapper: {}\n", mapper.name());
+        println!("analytical roofline: {} cycles", out.evaluation.latency_cycles);
+        println!(
+            "tile-pipeline sim ({}-buffered): {} cycles ({:.2}x over pure compute)",
+            if opts.double_buffer { "double" } else { "single" },
+            r.total_cycles,
+            r.slowdown
+        );
+        println!("bottleneck level: {}", acc.levels[r.bottleneck_level].name);
+        for (l, p) in r.levels.iter().enumerate().skip(1) {
+            println!(
+                "  {}: {} rounds, {} transfer cycles, {} stall cycles",
+                acc.levels[l].name, p.rounds, p.transfer_cycles, p.stall_cycles
+            );
+        }
+        let mesh = local_mapper::noc::simulate_mesh(&layer, &acc, &out.mapping);
+        println!(
+            "mesh NoC: {} word-hops ({} µJ exact vs {} µJ analytical), max link {} words",
+            mesh.word_hops,
+            fmt_f64(mesh.energy_pj(acc.noc.hop_energy_pj) / 1e6),
+            fmt_f64(out.evaluation.energy.noc_pj / 1e6),
+            mesh.max_link_words
+        );
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn cmd_explore(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let base = resolve_arch(args)?;
+        let net = args.get_or("network", "vgg02");
+        let layers = zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
+        let grid = local_mapper::explore::SweepGrid::default_grid();
+        let points = grid.points(&base);
+        let results = local_mapper::explore::sweep(&points, &layers, &LocalMapper::new())
+            .map_err(|e| e.to_string())?;
+        let mut t = local_mapper::util::table::Table::new(vec![
+            "design", "energy (µJ)", "pJ/MAC", "latency (cyc)", "EDP", "util",
+        ]);
+        for r in &results {
+            t.row(vec![
+                r.label.clone(),
+                fmt_f64(r.total_energy_uj),
+                fmt_f64(r.pj_per_mac()),
+                r.total_latency_cycles.to_string(),
+                fmt_f64(r.edp),
+                format!("{:.0}%", r.mean_utilization * 100.0),
+            ]);
+        }
+        println!("{}", t.render());
+        println!("Pareto front (energy vs latency):");
+        for r in local_mapper::explore::pareto(&results) {
+            println!(
+                "  {} — {} µJ, {} cycles",
+                r.label,
+                fmt_f64(r.total_energy_uj),
+                r.total_latency_cycles
+            );
+        }
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn report_result(r: Result<(), String>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            1
+        }
+    }
+}

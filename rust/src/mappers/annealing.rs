@@ -1,0 +1,177 @@
+//! Simulated-annealing mapper — the second iterative-heuristic baseline
+//! (alongside the GA) for the mapper-quality ablation: where does LOCAL
+//! sit on the quality-vs-evaluations curve?
+
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::{repair, sample_random};
+use crate::model::evaluate_unchecked;
+use crate::util::rng::SplitMix64;
+use crate::workload::ConvLayer;
+use std::cell::Cell;
+
+/// Simulated annealing over the map-space with factor-migration and
+/// permutation-swap moves and a geometric cooling schedule.
+#[derive(Debug, Clone)]
+pub struct AnnealingMapper {
+    pub steps: u64,
+    /// Initial acceptance temperature as a fraction of the starting energy.
+    pub t0_frac: f64,
+    /// Geometric cooling factor per step.
+    pub alpha: f64,
+    pub seed: u64,
+    evaluated: Cell<u64>,
+}
+
+impl AnnealingMapper {
+    pub fn new(steps: u64, seed: u64) -> Self {
+        assert!(steps > 0);
+        Self { steps, t0_frac: 0.1, alpha: 0.995, seed, evaluated: Cell::new(0) }
+    }
+}
+
+/// One random neighbourhood move (in place), then repair.
+fn neighbour(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
+    let n_levels = m.n_levels();
+    match rng.next_below(4) {
+        0 => {
+            // Migrate a prime factor between two temporal levels.
+            let d = rng.index(7);
+            let a = rng.index(n_levels);
+            let b = rng.index(n_levels);
+            if a != b && m.temporal[a][d] > 1 {
+                let f = smallest_prime(m.temporal[a][d]);
+                m.temporal[a][d] /= f;
+                m.temporal[b][d] *= f;
+            }
+        }
+        1 => {
+            // Move a factor between temporal top and a spatial slot.
+            let d = rng.index(7);
+            let top = n_levels - 1;
+            if rng.next_below(2) == 0 && m.temporal[top][d] > 1 {
+                let f = smallest_prime(m.temporal[top][d]);
+                m.temporal[top][d] /= f;
+                if rng.next_below(2) == 0 {
+                    m.spatial_x[d] *= f;
+                } else {
+                    m.spatial_y[d] *= f;
+                }
+            } else if m.spatial_x[d] > 1 {
+                let f = smallest_prime(m.spatial_x[d]);
+                m.spatial_x[d] /= f;
+                m.temporal[top][d] *= f;
+            }
+        }
+        2 => {
+            // Swap two loops at one level.
+            let l = rng.index(n_levels);
+            let i = rng.index(7);
+            let j = rng.index(7);
+            m.permutation[l].swap(i, j);
+        }
+        _ => {
+            // Rotate a level's permutation.
+            let l = rng.index(n_levels);
+            let r = rng.index(6) + 1;
+            m.permutation[l].rotate_left(r);
+        }
+    }
+    repair(layer, acc, m);
+}
+
+fn smallest_prime(n: u64) -> u64 {
+    let mut i = 2;
+    while i * i <= n {
+        if n % i == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+impl Mapper for AnnealingMapper {
+    fn name(&self) -> String {
+        format!("SA({})", self.steps)
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut current = sample_random(layer, acc, &mut rng);
+        let mut cur_e = evaluate_unchecked(layer, acc, &current).energy.total_pj();
+        let mut best = current.clone();
+        let mut best_e = cur_e;
+        let mut temperature = cur_e * self.t0_frac;
+        let mut evaluated = 1u64;
+        for _ in 0..self.steps {
+            let mut cand = current.clone();
+            neighbour(layer, acc, &mut cand, &mut rng);
+            if cand.validate(layer, acc).is_err() {
+                continue;
+            }
+            let e = evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            evaluated += 1;
+            let accept = e < cur_e || rng.next_f64() < (-(e - cur_e) / temperature.max(1e-12)).exp();
+            if accept {
+                current = cand;
+                cur_e = e;
+                if e < best_e {
+                    best = current.clone();
+                    best_e = e;
+                }
+            }
+            temperature *= self.alpha;
+        }
+        self.evaluated.set(evaluated);
+        Ok(best)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::RandomMapper;
+    use crate::workload::{zoo, Dim};
+
+    #[test]
+    fn annealing_valid_and_improves_over_single_draw() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let sa = AnnealingMapper::new(400, 42);
+        let out = sa.run(&layer, &acc).unwrap();
+        out.mapping.validate(&layer, &acc).unwrap();
+        let single = RandomMapper::new(1, 42).run(&layer, &acc).unwrap();
+        assert!(out.evaluation.energy.total_pj() <= single.evaluation.energy.total_pj());
+        assert!(out.evaluations > 100);
+    }
+
+    #[test]
+    fn neighbour_preserves_coverage() {
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[8].clone();
+        let mut rng = SplitMix64::new(5);
+        let mut m = sample_random(&layer, &acc, &mut rng);
+        for _ in 0..300 {
+            neighbour(&layer, &acc, &mut m, &mut rng);
+            for d in Dim::ALL {
+                assert_eq!(m.extent(d), layer.bound(d));
+            }
+        }
+    }
+
+    #[test]
+    fn deterministic_for_seed() {
+        let acc = presets::shidiannao();
+        let layer = zoo::alexnet()[2].clone();
+        let a = AnnealingMapper::new(100, 9).map(&layer, &acc).unwrap();
+        let b = AnnealingMapper::new(100, 9).map(&layer, &acc).unwrap();
+        assert_eq!(a, b);
+    }
+}

@@ -1,0 +1,184 @@
+//! Exhaustive (brute-force) mapper — the §3 "48 hours for one layer"
+//! straw man, usable here only on small layers / truncated budgets.
+//! Serves as the test oracle: on layers where full enumeration is
+//! feasible, no other mapper may beat it.
+
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::model::evaluate_unchecked;
+use crate::util::factor::factorizations;
+use crate::workload::{ConvLayer, Dim};
+use std::cell::Cell;
+
+/// Deterministic enumeration of the factorization space (canonical
+/// permutations; optionally a rotation set) with best-energy selection.
+#[derive(Debug, Clone)]
+pub struct ExhaustiveMapper {
+    /// Stop after this many candidates (the space explodes quickly).
+    pub max_candidates: u64,
+    /// Also try rotated per-level permutations (×7 candidates).
+    pub permute: bool,
+    evaluated: Cell<u64>,
+}
+
+impl ExhaustiveMapper {
+    pub fn new(max_candidates: u64) -> Self {
+        Self { max_candidates, permute: false, evaluated: Cell::new(0) }
+    }
+
+    pub fn with_permutations(mut self) -> Self {
+        self.permute = true;
+        self
+    }
+
+    /// Size of the factorization space this would enumerate.
+    pub fn space_size(layer: &ConvLayer, acc: &Accelerator) -> u64 {
+        Dim::ALL
+            .iter()
+            .map(|&d| {
+                crate::util::factor::count_factorizations(layer.bound(d), acc.n_levels() + 2)
+            })
+            .product()
+    }
+}
+
+impl Mapper for ExhaustiveMapper {
+    fn name(&self) -> String {
+        "exhaustive".to_string()
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let n_levels = acc.n_levels();
+        let slots = n_levels + 2; // spatial X, spatial Y, temporal levels
+        // Per-dim ordered factorizations across slots:
+        // [sx, sy, t0, t1, ..., t_top].
+        let per_dim: Vec<Vec<Vec<u64>>> =
+            Dim::ALL.iter().map(|&d| factorizations(layer.bound(d), slots)).collect();
+
+        // Odometer over the per-dim choices.
+        let mut idx = [0usize; 7];
+        let mut evaluated = 0u64;
+        let mut best: Option<(f64, Mapping)> = None;
+        'outer: loop {
+            // Assemble the candidate.
+            let mut m = Mapping {
+                temporal: vec![[1u64; 7]; n_levels],
+                permutation: vec![Dim::ALL; n_levels],
+                spatial_x: [1; 7],
+                spatial_y: [1; 7],
+            };
+            for d in 0..7 {
+                let split = &per_dim[d][idx[d]];
+                m.spatial_x[d] = split[0];
+                m.spatial_y[d] = split[1];
+                for l in 0..n_levels {
+                    m.temporal[l][d] = split[2 + l];
+                }
+            }
+            let perms: u64 = if self.permute { 7 } else { 1 };
+            for rot in 0..perms {
+                let mut cand = m.clone();
+                for l in 0..n_levels {
+                    cand.permutation[l].rotate_left(rot as usize);
+                }
+                if cand.validate(layer, acc).is_ok() {
+                    let e = evaluate_unchecked(layer, acc, &cand);
+                    let pj = e.energy.total_pj();
+                    if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
+                        best = Some((pj, cand));
+                    }
+                }
+                evaluated += 1;
+                if evaluated >= self.max_candidates {
+                    break 'outer;
+                }
+            }
+            // Advance the odometer.
+            let mut d = 0;
+            loop {
+                idx[d] += 1;
+                if idx[d] < per_dim[d].len() {
+                    break;
+                }
+                idx[d] = 0;
+                d += 1;
+                if d == 7 {
+                    break 'outer;
+                }
+            }
+        }
+        self.evaluated.set(evaluated);
+        best.map(|(_, m)| m)
+            .ok_or_else(|| MapError::NoValidMapping("exhaustive found no valid mapping".into()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::arch::{Accelerator, Noc, PeArray, StorageLevel, Style};
+    use crate::mappers::LocalMapper;
+
+    fn small_acc() -> Accelerator {
+        Accelerator {
+            name: "small".into(),
+            style: Style::NvdlaLike,
+            datawidth_bits: 16,
+            levels: vec![
+                StorageLevel::register_file("RF", 64, 16),
+                StorageLevel::buffer("GLB", 1024, 64),
+                StorageLevel::dram(64),
+            ],
+            pe: PeArray::new(4, 4),
+            noc: Noc::default(),
+            mac_energy_pj: 1.0,
+            clock_mhz: 200.0,
+        }
+    }
+
+    fn small_layer() -> ConvLayer {
+        ConvLayer::new("small", 8, 4, 3, 3, 8, 8)
+    }
+
+    #[test]
+    fn enumerates_and_finds_valid_best() {
+        let acc = small_acc();
+        let layer = small_layer();
+        let ex = ExhaustiveMapper::new(200_000);
+        let out = ex.run(&layer, &acc).unwrap();
+        out.mapping.validate(&layer, &acc).unwrap();
+        assert!(out.evaluations > 1000);
+    }
+
+    #[test]
+    fn oracle_no_mapper_beats_full_enumeration() {
+        let acc = small_acc();
+        let layer = ConvLayer::new("tiny", 4, 2, 1, 1, 4, 4);
+        let size = ExhaustiveMapper::space_size(&layer, &acc);
+        assert!(size < 2_000_000, "space too big for oracle test: {size}");
+        let ex = ExhaustiveMapper::new(size).with_permutations();
+        let best = ex.run(&layer, &acc).unwrap();
+        let local = LocalMapper::new().run(&layer, &acc).unwrap();
+        assert!(
+            local.evaluation.energy.total_pj() >= best.evaluation.energy.total_pj() * 0.999,
+            "LOCAL ({}) beat the exhaustive oracle ({})",
+            local.evaluation.energy.total_pj(),
+            best.evaluation.energy.total_pj()
+        );
+    }
+
+    #[test]
+    fn space_size_matches_paper_scale() {
+        // The §3 example: mapping spaces are astronomically large even
+        // before permutations.
+        let acc = presets::eyeriss();
+        let layer = crate::workload::zoo::vgg02()[4].clone();
+        assert!(ExhaustiveMapper::space_size(&layer, &acc) > 1_000_000_000);
+    }
+}

@@ -1,0 +1,234 @@
+//! GAMMA-style genetic mapper [19] — the iterative heuristic family the
+//! paper positions LOCAL against (§1, §7): good energy, but many
+//! evaluations and long mapping time. Used by the ablation bench to place
+//! LOCAL on the quality-vs-time curve.
+
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::{repair, sample_random};
+use crate::model::evaluate_unchecked;
+use crate::util::rng::SplitMix64;
+use crate::workload::ConvLayer;
+use std::cell::Cell;
+
+/// Genetic-algorithm mapper: population of mappings, tournament selection,
+/// factor-migration mutation, per-dim crossover, elitism.
+#[derive(Debug, Clone)]
+pub struct GeneticMapper {
+    pub population: usize,
+    pub generations: usize,
+    pub mutation_rate: f64,
+    pub seed: u64,
+    evaluated: Cell<u64>,
+}
+
+impl GeneticMapper {
+    pub fn new(population: usize, generations: usize, seed: u64) -> Self {
+        assert!(population >= 4);
+        Self { population, generations, mutation_rate: 0.3, seed, evaluated: Cell::new(0) }
+    }
+}
+
+fn fitness(layer: &ConvLayer, acc: &Accelerator, m: &Mapping) -> f64 {
+    evaluate_unchecked(layer, acc, m).energy.total_pj()
+}
+
+/// Mutation: move one prime factor of one dim between two random slots
+/// (levels / spatial), or swap two permutation entries at one level.
+fn mutate(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
+    let n_levels = m.n_levels();
+    match rng.next_below(3) {
+        0 => {
+            // Migrate a prime factor of dim d from slot a to slot b.
+            let d = rng.index(7);
+            // Slots: 0..n_levels temporal, n_levels = sx, n_levels+1 = sy.
+            let a = rng.index(n_levels + 2);
+            let b = rng.index(n_levels + 2);
+            if a == b {
+                return;
+            }
+            let get = |m: &Mapping, s: usize| -> u64 {
+                if s < n_levels {
+                    m.temporal[s][d]
+                } else if s == n_levels {
+                    m.spatial_x[d]
+                } else {
+                    m.spatial_y[d]
+                }
+            };
+            let v = get(m, a);
+            if v <= 1 {
+                return;
+            }
+            let f = smallest_prime(v);
+            let setv = |m: &mut Mapping, s: usize, v: u64| {
+                if s < n_levels {
+                    m.temporal[s][d] = v;
+                } else if s == n_levels {
+                    m.spatial_x[d] = v;
+                } else {
+                    m.spatial_y[d] = v;
+                }
+            };
+            setv(m, a, v / f);
+            let w = get(m, b);
+            setv(m, b, w * f);
+        }
+        1 => {
+            // Swap two permutation entries at one level.
+            let l = rng.index(n_levels);
+            let i = rng.index(7);
+            let j = rng.index(7);
+            m.permutation[l].swap(i, j);
+        }
+        _ => {
+            // Re-draw one dim's split entirely from a fresh sample.
+            let fresh = sample_random(layer, acc, rng);
+            let d = rng.index(7);
+            for l in 0..n_levels {
+                m.temporal[l][d] = fresh.temporal[l][d];
+            }
+            m.spatial_x[d] = fresh.spatial_x[d];
+            m.spatial_y[d] = fresh.spatial_y[d];
+        }
+    }
+    repair(layer, acc, m);
+}
+
+/// Crossover: child takes each dim's split from one parent, permutations
+/// level-wise from either parent.
+fn crossover(a: &Mapping, b: &Mapping, rng: &mut SplitMix64) -> Mapping {
+    let mut child = a.clone();
+    for d in 0..7 {
+        if rng.next_below(2) == 1 {
+            for l in 0..child.n_levels() {
+                child.temporal[l][d] = b.temporal[l][d];
+            }
+            child.spatial_x[d] = b.spatial_x[d];
+            child.spatial_y[d] = b.spatial_y[d];
+        }
+    }
+    for l in 0..child.n_levels() {
+        if rng.next_below(2) == 1 {
+            child.permutation[l] = b.permutation[l];
+        }
+    }
+    child
+}
+
+fn smallest_prime(n: u64) -> u64 {
+    let mut i = 2;
+    while i * i <= n {
+        if n % i == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+impl Mapper for GeneticMapper {
+    fn name(&self) -> String {
+        format!("GA(p{}g{})", self.population, self.generations)
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut evaluated = 0u64;
+        // Initial population.
+        let mut pop: Vec<(f64, Mapping)> = (0..self.population)
+            .map(|_| {
+                let m = sample_random(layer, acc, &mut rng);
+                evaluated += 1;
+                (fitness(layer, acc, &m), m)
+            })
+            .collect();
+        pop.sort_by(|a, b| a.0.total_cmp(&b.0));
+
+        for _gen in 0..self.generations {
+            let elite = self.population / 4;
+            let mut next: Vec<(f64, Mapping)> = pop[..elite].to_vec();
+            while next.len() < self.population {
+                // Tournament selection from the current population.
+                let pick = |rng: &mut SplitMix64| {
+                    let i = rng.index(pop.len());
+                    let j = rng.index(pop.len());
+                    if pop[i].0 < pop[j].0 { i } else { j }
+                };
+                let pa = pick(&mut rng);
+                let pb = pick(&mut rng);
+                let mut child = crossover(&pop[pa].1, &pop[pb].1, &mut rng);
+                if rng.next_f64() < self.mutation_rate {
+                    mutate(layer, acc, &mut child, &mut rng);
+                }
+                repair(layer, acc, &mut child);
+                if child.validate(layer, acc).is_ok() {
+                    evaluated += 1;
+                    next.push((fitness(layer, acc, &child), child));
+                }
+            }
+            next.sort_by(|a, b| a.0.total_cmp(&b.0));
+            pop = next;
+        }
+        self.evaluated.set(evaluated);
+        Ok(pop.remove(0).1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::RandomMapper;
+    use crate::workload::zoo;
+
+    #[test]
+    fn ga_produces_valid_mapping() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let ga = GeneticMapper::new(16, 5, 42);
+        let out = ga.run(&layer, &acc).unwrap();
+        out.mapping.validate(&layer, &acc).unwrap();
+        assert!(out.evaluations >= 16);
+    }
+
+    #[test]
+    fn ga_beats_single_random_draw() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let ga = GeneticMapper::new(16, 10, 1).run(&layer, &acc).unwrap();
+        let rnd = RandomMapper::new(1, 1).run(&layer, &acc).unwrap();
+        assert!(ga.evaluation.energy.total_pj() <= rnd.evaluation.energy.total_pj());
+    }
+
+    #[test]
+    fn crossover_preserves_validity_after_repair() {
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[8].clone();
+        let mut rng = SplitMix64::new(5);
+        for _ in 0..50 {
+            let a = sample_random(&layer, &acc, &mut rng);
+            let b = sample_random(&layer, &acc, &mut rng);
+            let mut c = crossover(&a, &b, &mut rng);
+            repair(&layer, &acc, &mut c);
+            c.validate(&layer, &acc).unwrap();
+        }
+    }
+
+    #[test]
+    fn mutation_preserves_coverage() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let mut rng = SplitMix64::new(77);
+        let mut m = sample_random(&layer, &acc, &mut rng);
+        for _ in 0..100 {
+            mutate(&layer, &acc, &mut m, &mut rng);
+            m.validate(&layer, &acc).unwrap();
+        }
+    }
+}

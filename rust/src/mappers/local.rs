@@ -1,0 +1,275 @@
+//! The LOCAL mapping algorithm — the paper's contribution (§5, Fig. 4).
+//!
+//! One pass, three phases, no search:
+//!
+//! 1. **Parallelization** (Fig. 4 lines 1–9): the two "effective" dims of
+//!    the accelerator style are mapped spatially — NVDLA-style: `C →
+//!    spatial-X (Rang m)`, `M → spatial-Y (Rang n)`; Eyeriss-style: `Q → X`,
+//!    `S → Y`; ShiDianNao-style (output-stationary grid, Fig. 5): `Q → X`,
+//!    `P → Y`. Spatial factors are the largest divisors of the dim bounds
+//!    that fit the array (the divisor-exact reading of `Rang(m)` — see
+//!    DESIGN.md §4).
+//! 2. **Assignment** (lines 10–16): the remaining (temporal) ranges are
+//!    assigned to storage levels with priority from the lowest level up,
+//!    each level greedily taking the largest ranges that satisfy the
+//!    bounding constraint Eq. (18).
+//! 3. **Scheduling** (lines 17–22): per level, loops are permuted so
+//!    higher-range loops sit innermost (toward the cheaper memory);
+//!    reduction dims (C, R, S) win ties to keep partial sums local.
+//!
+//! Complexity: O(dims × levels × divisors) — a few microseconds; the
+//! whole point of the paper (Table 3).
+
+use super::{MapError, Mapper};
+use crate::arch::{Accelerator, Style};
+use crate::mapping::{tensor_footprint, Mapping};
+use crate::util::factor::{divisors, factor_splits};
+use crate::workload::{ConvLayer, Dim};
+
+/// The LOCAL one-pass mapper.
+#[derive(Debug, Clone, Default)]
+pub struct LocalMapper;
+
+impl LocalMapper {
+    pub fn new() -> Self {
+        LocalMapper
+    }
+
+    /// The style-dependent spatial dims (paper Fig. 5 / Fig. 4 lines 3–8):
+    /// returns (X dim, Y dim).
+    pub fn spatial_dims(style: Style) -> (Dim, Dim) {
+        match style {
+            Style::NvdlaLike => (Dim::C, Dim::M),
+            Style::EyerissLike => (Dim::Q, Dim::S),
+            Style::ShiDianNaoLike => (Dim::Q, Dim::P),
+        }
+    }
+}
+
+impl Mapper for LocalMapper {
+    fn name(&self) -> String {
+        "LOCAL".to_string()
+    }
+
+    /// One construction pass + the constant two-candidate schedule
+    /// comparison (DESIGN.md §4).
+    fn evaluations(&self) -> u64 {
+        2
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let n_levels = acc.n_levels();
+        let top = n_levels - 1;
+        let mut m = Mapping {
+            temporal: vec![[1u64; 7]; n_levels],
+            permutation: vec![Dim::ALL; n_levels],
+            spatial_x: [1; 7],
+            spatial_y: [1; 7],
+        };
+
+        // ---- Phase 1: parallelization.
+        let (dx, dy) = Self::spatial_dims(acc.style);
+        debug_assert_ne!(dx, dy);
+        let (sx, _) = factor_splits(layer.bound(dx), acc.pe.m);
+        m.spatial_x[dx.idx()] = sx;
+        let (sy, _) = factor_splits(layer.bound(dy), acc.pe.n);
+        m.spatial_y[dy.idx()] = sy;
+
+        // Residual (temporal) ranges per dim.
+        let mut residual = layer.bounds();
+        residual[dx.idx()] /= sx;
+        residual[dy.idx()] /= sy;
+
+        // ---- Phase 2: assignment, lowest level first (lines 11–16).
+        // Walk dims in descending residual so large ranges land low.
+        for l in 0..top {
+            let capacity = acc.level_capacity(l);
+            let mut order: Vec<usize> = (0..7).collect();
+            order.sort_by_key(|&i| std::cmp::Reverse(residual[i]));
+            for i in order {
+                if residual[i] == 1 {
+                    continue;
+                }
+                // Largest divisor of the residual whose tile still fits.
+                for f in divisors(residual[i]).into_iter().rev() {
+                    m.temporal[l][i] = f;
+                    let footprint = if l == 0 {
+                        tensor_footprint(layer, &m.tile0())
+                    } else {
+                        m.footprint(layer, l)
+                    };
+                    if footprint <= capacity {
+                        residual[i] /= f;
+                        break;
+                    }
+                    m.temporal[l][i] = 1;
+                }
+            }
+        }
+
+        // Leftovers go to DRAM (unbounded).
+        for i in 0..7 {
+            m.temporal[top][i] = residual[i];
+        }
+
+        // ---- Phase 3: scheduling (lines 18–22). The paper fixes the
+        // level assignment ("higher range tensor to lower s_i") but leaves
+        // the within-level loop order under-specified; we resolve it with
+        // a constant-size comparison of the two natural policies (still
+        // O(1) — 2 model evaluations, DESIGN.md §4):
+        //   A. range-descending innermost (big loops near cheap memory);
+        //   B. reduction dims (C,R,S) innermost (partial sums stationary).
+        let mut best: Option<(f64, Mapping)> = None;
+        for reduction_first in [false, true] {
+            let mut cand = m.clone();
+            for l in 0..n_levels {
+                let mut dims = Dim::ALL;
+                let t = cand.temporal[l];
+                dims.sort_by_key(|d| {
+                    let f = t[d.idx()];
+                    let reduction = matches!(d, Dim::C | Dim::R | Dim::S);
+                    if reduction_first {
+                        (!reduction, std::cmp::Reverse(f), false)
+                    } else {
+                        // Descending factor; reduction wins ties.
+                        (false, std::cmp::Reverse(f), !reduction)
+                    }
+                });
+                cand.permutation[l] = dims;
+            }
+            cand.validate(layer, acc).map_err(MapError::Invalid)?;
+            let pj = crate::model::evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
+                best = Some((pj, cand));
+            }
+        }
+        Ok(best.expect("two candidates evaluated").1)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::model::evaluate;
+    use crate::workload::zoo;
+
+    #[test]
+    fn fig5_spatial_assignments() {
+        assert_eq!(LocalMapper::spatial_dims(Style::NvdlaLike), (Dim::C, Dim::M));
+        assert_eq!(LocalMapper::spatial_dims(Style::EyerissLike), (Dim::Q, Dim::S));
+        assert_eq!(LocalMapper::spatial_dims(Style::ShiDianNaoLike), (Dim::Q, Dim::P));
+    }
+
+    #[test]
+    fn maps_all_presets_and_workloads() {
+        for acc in presets::all() {
+            for row in zoo::table2_workloads() {
+                let m = LocalMapper::new().map(&row.layer, &acc).unwrap_or_else(|e| {
+                    panic!("LOCAL failed on {} × {}: {e}", row.layer.name, acc.name)
+                });
+                m.validate(&row.layer, &acc).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn nvdla_parallelizes_c_and_m_fully() {
+        let acc = presets::nvdla(); // 16×16
+        let layer = zoo::vgg16()[8].clone(); // C=M=512
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        assert_eq!(m.spatial_x[Dim::C.idx()], 16);
+        assert_eq!(m.spatial_y[Dim::M.idx()], 16);
+        assert!((m.pe_utilization(&acc) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eyeriss_parallelizes_q_and_s() {
+        let acc = presets::eyeriss(); // 12×14
+        let layer = zoo::vgg02()[4].clone(); // Q=56, S=3
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        assert_eq!(m.spatial_x[Dim::Q.idx()], 8); // largest divisor of 56 ≤ 12
+        assert_eq!(m.spatial_y[Dim::S.idx()], 3);
+    }
+
+    #[test]
+    fn shidiannao_parallelizes_output_pixels() {
+        let acc = presets::shidiannao(); // 8×8
+        let layer = zoo::vgg02()[4].clone(); // P=Q=56
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        assert_eq!(m.spatial_x[Dim::Q.idx()], 8);
+        assert_eq!(m.spatial_y[Dim::P.idx()], 8);
+        assert!((m.pe_utilization(&acc) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn assignment_fills_low_levels_first() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        // L0 is used (tile > 1 element in at least one dim).
+        assert!(m.tile0().iter().product::<u64>() > 1, "{m}");
+        // L1 (GLB) holds a substantially bigger tile than L0.
+        let f0 = tensor_footprint(&layer, &m.tile0());
+        let f1 = m.footprint(&layer, 1);
+        assert!(f1 > f0);
+        // Bounding honored (Eq. 18).
+        assert!(f1 <= acc.level_capacity(1));
+    }
+
+    #[test]
+    fn scheduling_follows_one_of_the_two_policies() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        for l in 0..m.n_levels() {
+            let loops: Vec<(Dim, u64)> = m.loops(l).collect();
+            // Policy A: factors descend monotonically.
+            let desc = loops.windows(2).all(|w| w[0].1 >= w[1].1);
+            // Policy B: all reduction dims precede all non-reduction dims,
+            // descending within each class.
+            let is_red = |d: Dim| matches!(d, Dim::C | Dim::R | Dim::S);
+            let split = loops.iter().position(|&(d, _)| !is_red(d)).unwrap_or(loops.len());
+            let red_first = loops[..split].iter().all(|&(d, _)| is_red(d))
+                && loops[split..].iter().all(|&(d, _)| !is_red(d))
+                && loops[..split].windows(2).all(|w| w[0].1 >= w[1].1)
+                && loops[split..].windows(2).all(|w| w[0].1 >= w[1].1);
+            assert!(desc || red_first, "level {l} follows neither policy: {m}");
+        }
+    }
+
+    #[test]
+    fn one_pass_beats_trivial_mapping_on_energy() {
+        for acc in presets::all() {
+            let layer = zoo::vgg16()[8].clone();
+            let local = LocalMapper::new().map(&layer, &acc).unwrap();
+            let e_local = evaluate(&layer, &acc, &local).unwrap();
+            let trivial = Mapping::trivial(&layer, acc.n_levels());
+            let e_trivial = evaluate(&layer, &acc, &trivial).unwrap();
+            assert!(
+                e_local.energy.total_pj() < e_trivial.energy.total_pj(),
+                "{}: LOCAL {} !< trivial {}",
+                acc.name,
+                e_local.energy.total_pj(),
+                e_trivial.energy.total_pj()
+            );
+        }
+    }
+
+    #[test]
+    fn deterministic() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let a = LocalMapper::new().map(&layer, &acc).unwrap();
+        let b = LocalMapper::new().map(&layer, &acc).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn works_on_depthwise_layers() {
+        let acc = presets::eyeriss();
+        let dw = zoo::mobilenet_v2().into_iter().find(|l| l.depthwise).unwrap();
+        let m = LocalMapper::new().map(&dw, &acc).unwrap();
+        m.validate(&dw, &acc).unwrap();
+    }
+}

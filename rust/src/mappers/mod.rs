@@ -1,0 +1,88 @@
+//! Mappers: the LOCAL one-pass algorithm (the paper's contribution) and the
+//! baselines it is evaluated against — dataflow-constrained search (the
+//! Table-3 RS/WS/OS columns), pure random sampling (Fig. 3), exhaustive
+//! enumeration (test oracle on small layers) and a GAMMA-style genetic
+//! search (related-work ablation, §7).
+
+pub mod annealing;
+pub mod exhaustive;
+pub mod genetic;
+pub mod local;
+pub mod random;
+pub mod refine;
+pub mod search;
+
+pub use annealing::AnnealingMapper;
+pub use local::LocalMapper;
+pub use random::RandomMapper;
+pub use refine::LocalRefined;
+pub use search::ConstrainedSearch;
+
+use crate::arch::Accelerator;
+use crate::mapping::{Mapping, MappingError};
+use crate::model::{evaluate_unchecked, Evaluation};
+use crate::workload::ConvLayer;
+use std::time::{Duration, Instant};
+
+/// Mapper failure.
+#[derive(Debug, thiserror::Error)]
+pub enum MapError {
+    #[error("no valid mapping found: {0}")]
+    NoValidMapping(String),
+    #[error(transparent)]
+    Invalid(#[from] MappingError),
+}
+
+/// Result of running a mapper: the chosen mapping, its evaluation, and the
+/// search cost (the paper's *mapping time*, Table 3).
+#[derive(Debug, Clone)]
+pub struct MapOutcome {
+    pub mapping: Mapping,
+    pub evaluation: Evaluation,
+    /// Number of candidate evaluations performed (2 for LOCAL — its
+    /// constant-size schedule comparison; hundreds–thousands for search).
+    pub evaluations: u64,
+    /// Wall-clock search time.
+    pub elapsed: Duration,
+}
+
+/// A mapping algorithm: layer × accelerator → mapping.
+pub trait Mapper {
+    /// Short display name ("LOCAL", "RS-search", ...).
+    fn name(&self) -> String;
+
+    /// Construct the mapping only (no timing bookkeeping).
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError>;
+
+    /// Number of candidate evaluations `map` performs (reported in
+    /// Table 3 next to wall-clock).
+    fn evaluations(&self) -> u64 {
+        1
+    }
+
+    /// Run with timing: the measured quantity of the paper's Table 3.
+    fn run(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<MapOutcome, MapError> {
+        let t0 = Instant::now();
+        let mapping = self.map(layer, acc)?;
+        let elapsed = t0.elapsed();
+        mapping.validate(layer, acc)?;
+        let evaluation = evaluate_unchecked(layer, acc, &mapping);
+        Ok(MapOutcome { mapping, evaluation, evaluations: self.evaluations(), elapsed })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn run_reports_timing_and_validates() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let out = LocalMapper::new().run(&layer, &acc).unwrap();
+        assert_eq!(out.evaluations, 2);
+        assert!(out.evaluation.energy.total_pj() > 0.0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Random mapping — the paper's §3 motivation experiment (Fig. 3) and the
+//! best-of-N random baseline.
+
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::sample_random;
+use crate::model::{evaluate_unchecked, Evaluation};
+use crate::util::rng::SplitMix64;
+use crate::workload::ConvLayer;
+
+/// Best-energy-of-N random mapper.
+#[derive(Debug, Clone)]
+pub struct RandomMapper {
+    pub samples: u64,
+    pub seed: u64,
+}
+
+impl RandomMapper {
+    pub fn new(samples: u64, seed: u64) -> Self {
+        assert!(samples > 0);
+        Self { samples, seed }
+    }
+}
+
+impl Mapper for RandomMapper {
+    fn name(&self) -> String {
+        format!("random×{}", self.samples)
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.samples
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let mut rng = SplitMix64::new(self.seed);
+        let mut best: Option<(f64, Mapping)> = None;
+        for _ in 0..self.samples {
+            let m = sample_random(layer, acc, &mut rng);
+            let e = evaluate_unchecked(layer, acc, &m);
+            let pj = e.energy.total_pj();
+            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
+                best = Some((pj, m));
+            }
+        }
+        Ok(best.expect("samples > 0").1)
+    }
+}
+
+/// Fig. 3 distribution: energy of `n` random mappings, classified into the
+/// paper's `random_max` / `random_med` / `random_min` cases.
+#[derive(Debug, Clone)]
+pub struct RandomDistribution {
+    /// Sorted ascending, µJ.
+    pub energies_uj: Vec<f64>,
+    /// The evaluations behind min / median / max (for breakdown plots).
+    pub min: Evaluation,
+    pub med: Evaluation,
+    pub max: Evaluation,
+}
+
+impl RandomDistribution {
+    pub fn min_uj(&self) -> f64 {
+        self.energies_uj[0]
+    }
+
+    pub fn med_uj(&self) -> f64 {
+        self.energies_uj[self.energies_uj.len() / 2]
+    }
+
+    pub fn max_uj(&self) -> f64 {
+        *self.energies_uj.last().unwrap()
+    }
+
+    /// The paper's headline deltas: (max−med)/max and (med−min)/med.
+    pub fn spread(&self) -> (f64, f64) {
+        let (max, med, min) = (self.max_uj(), self.med_uj(), self.min_uj());
+        ((max - med) / max, (med - min) / med)
+    }
+}
+
+/// Run the Fig. 3 experiment: `n` random mappings of `layer` on `acc`.
+pub fn random_distribution(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    n: usize,
+    seed: u64,
+) -> RandomDistribution {
+    assert!(n >= 3);
+    let mut rng = SplitMix64::new(seed);
+    let mut evals: Vec<(f64, Evaluation)> = (0..n)
+        .map(|_| {
+            let m = sample_random(layer, acc, &mut rng);
+            let e = evaluate_unchecked(layer, acc, &m);
+            (e.energy.total_uj(), e)
+        })
+        .collect();
+    evals.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let energies_uj: Vec<f64> = evals.iter().map(|(uj, _)| *uj).collect();
+    let min = evals.first().unwrap().1.clone();
+    let med = evals[evals.len() / 2].1.clone();
+    let max = evals.last().unwrap().1.clone();
+    RandomDistribution { energies_uj, min, med, max }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn best_of_n_improves_with_n() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let e1 = RandomMapper::new(1, 42).run(&layer, &acc).unwrap();
+        let e64 = RandomMapper::new(64, 42).run(&layer, &acc).unwrap();
+        assert!(e64.evaluation.energy.total_pj() <= e1.evaluation.energy.total_pj());
+        assert_eq!(e64.evaluations, 64);
+    }
+
+    #[test]
+    fn distribution_is_ordered_and_wide() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let d = random_distribution(&layer, &acc, 200, 7);
+        assert!(d.min_uj() <= d.med_uj() && d.med_uj() <= d.max_uj());
+        // The paper's Fig. 3 point: the spread is large (77% / 90% there).
+        let (hi, lo) = d.spread();
+        assert!(hi > 0.2, "max→med spread too small: {hi}");
+        assert!(lo > 0.2, "med→min spread too small: {lo}");
+    }
+
+    #[test]
+    fn distribution_deterministic_by_seed() {
+        let acc = presets::shidiannao();
+        let layer = zoo::vgg16()[0].clone();
+        let a = random_distribution(&layer, &acc, 50, 9);
+        let b = random_distribution(&layer, &acc, 50, 9);
+        assert_eq!(a.energies_uj, b.energies_uj);
+    }
+}

@@ -1,0 +1,158 @@
+//! LOCAL + refinement — the natural extension the paper's conclusion
+//! gestures at: keep LOCAL's one-pass construction as the seed, then spend
+//! a *small, bounded* budget hill-climbing around it. Quantifies how much
+//! energy the single pass leaves on the table (ablation bench
+//! `mapper_quality`).
+
+use super::local::LocalMapper;
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::repair;
+use crate::model::evaluate_unchecked;
+use crate::util::rng::SplitMix64;
+use crate::workload::ConvLayer;
+use std::cell::Cell;
+
+/// Greedy hill-climbing around the LOCAL seed: try factor migrations and
+/// permutation swaps, keep strict improvements, stop after `budget` trials
+/// or `patience` consecutive rejections.
+#[derive(Debug, Clone)]
+pub struct LocalRefined {
+    pub budget: u64,
+    pub patience: u64,
+    pub seed: u64,
+    evaluated: Cell<u64>,
+}
+
+impl LocalRefined {
+    pub fn new(budget: u64, seed: u64) -> Self {
+        assert!(budget > 0);
+        Self { budget, patience: budget / 3 + 1, seed, evaluated: Cell::new(0) }
+    }
+}
+
+impl Mapper for LocalRefined {
+    fn name(&self) -> String {
+        format!("LOCAL+refine({})", self.budget)
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let seed_mapping = LocalMapper::new().map(layer, acc)?;
+        let mut best = seed_mapping;
+        let mut best_e = evaluate_unchecked(layer, acc, &best).energy.total_pj();
+        let mut evaluated = 1u64 + 2; // LOCAL's own schedule comparison
+        let mut rng = SplitMix64::new(self.seed);
+        let mut rejected = 0u64;
+        let n_levels = best.n_levels();
+        while evaluated < self.budget && rejected < self.patience {
+            let mut cand = best.clone();
+            match rng.next_below(3) {
+                0 => {
+                    // Migrate a prime factor one level outward/inward.
+                    let d = rng.index(7);
+                    let l = rng.index(n_levels - 1);
+                    let (a, b) = if rng.next_below(2) == 0 { (l, l + 1) } else { (l + 1, l) };
+                    if cand.temporal[a][d] > 1 {
+                        let f = smallest_prime(cand.temporal[a][d]);
+                        cand.temporal[a][d] /= f;
+                        cand.temporal[b][d] *= f;
+                    }
+                }
+                1 => {
+                    // Swap adjacent loops at one level.
+                    let l = rng.index(n_levels);
+                    let i = rng.index(6);
+                    cand.permutation[l].swap(i, i + 1);
+                }
+                _ => {
+                    // Grow a spatial slot from the top temporal level.
+                    let d = rng.index(7);
+                    let top = n_levels - 1;
+                    if cand.temporal[top][d] > 1 {
+                        let f = smallest_prime(cand.temporal[top][d]);
+                        cand.temporal[top][d] /= f;
+                        if rng.next_below(2) == 0 {
+                            cand.spatial_x[d] *= f;
+                        } else {
+                            cand.spatial_y[d] *= f;
+                        }
+                    }
+                }
+            }
+            repair(layer, acc, &mut cand);
+            if cand.validate(layer, acc).is_err() {
+                rejected += 1;
+                continue;
+            }
+            let e = evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            evaluated += 1;
+            if e < best_e {
+                best = cand;
+                best_e = e;
+                rejected = 0;
+            } else {
+                rejected += 1;
+            }
+        }
+        self.evaluated.set(evaluated);
+        Ok(best)
+    }
+}
+
+fn smallest_prime(n: u64) -> u64 {
+    let mut i = 2;
+    while i * i <= n {
+        if n % i == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn refine_never_worse_than_local() {
+        for acc in presets::all() {
+            for row in zoo::table2_workloads() {
+                let local = LocalMapper::new().run(&row.layer, &acc).unwrap();
+                let refined = LocalRefined::new(150, 42).run(&row.layer, &acc).unwrap();
+                assert!(
+                    refined.evaluation.energy.total_pj() <= local.evaluation.energy.total_pj() + 1e-9,
+                    "{} on {}: refine {} > local {}",
+                    row.layer.name,
+                    acc.name,
+                    refined.evaluation.energy.total_pj(),
+                    local.evaluation.energy.total_pj()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn refine_respects_budget() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let r = LocalRefined::new(50, 1);
+        r.run(&layer, &acc).unwrap();
+        assert!(r.evaluations() <= 50 + 3);
+    }
+
+    #[test]
+    fn refined_mapping_valid() {
+        let acc = presets::shidiannao();
+        let layer = zoo::squeezenet()[0].clone();
+        let m = LocalRefined::new(200, 7).map(&layer, &acc).unwrap();
+        m.validate(&layer, &acc).unwrap();
+    }
+}

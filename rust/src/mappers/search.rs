@@ -1,0 +1,144 @@
+//! Dataflow-constrained search — the paper's RS/WS/OS baselines.
+//!
+//! §6.2: "the calculation time of row, weight, and output stationary are
+//! extracted from the Timeloop-Accelergy framework by defining data-reuse
+//! constraints … we still need many comparisons to select the appropriate
+//! case". We reproduce that experiment design: the dataflow becomes a
+//! [`Constraints`] restriction of the map-space, and a sampling search with
+//! a Timeloop-style victory condition (stop after `patience` consecutive
+//! non-improving candidates, or at `budget`) picks the best-energy mapping.
+//! Mapping time = wall-clock of the whole search; LOCAL does one pass.
+
+use super::{MapError, Mapper};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::{sample_random, Dataflow};
+use crate::model::evaluate_unchecked;
+use crate::util::rng::SplitMix64;
+use crate::workload::ConvLayer;
+use std::cell::Cell;
+
+/// Search within a dataflow-constrained map-space.
+#[derive(Debug, Clone)]
+pub struct ConstrainedSearch {
+    pub dataflow: Dataflow,
+    /// Hard cap on candidate evaluations.
+    pub budget: u64,
+    /// Victory condition: consecutive non-improving candidates before
+    /// declaring convergence (Timeloop's `victory-condition`).
+    pub patience: u64,
+    pub seed: u64,
+    evaluated: Cell<u64>,
+}
+
+impl ConstrainedSearch {
+    pub fn new(dataflow: Dataflow, budget: u64, seed: u64) -> Self {
+        assert!(budget > 0);
+        Self { dataflow, budget, patience: budget / 4 + 1, seed, evaluated: Cell::new(0) }
+    }
+
+    /// Timeloop-ish defaults used by the Table-3 bench.
+    pub fn table3(dataflow: Dataflow, seed: u64) -> Self {
+        Self::new(dataflow, 3000, seed)
+    }
+}
+
+impl Mapper for ConstrainedSearch {
+    fn name(&self) -> String {
+        format!("{}-search", self.dataflow.name())
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let cons = self.dataflow.constraints();
+        let mut rng = SplitMix64::new(self.seed);
+        let mut best: Option<(f64, Mapping)> = None;
+        let mut since_improved = 0u64;
+        let mut evaluated = 0u64;
+        while evaluated < self.budget {
+            let mut m = sample_random(layer, acc, &mut rng);
+            cons.imprint(layer, acc, &mut m, &mut rng);
+            if m.validate(layer, acc).is_err() {
+                // Imprint could not satisfy both constraints and capacity
+                // for this draw; count it (Timeloop counts invalids too).
+                evaluated += 1;
+                continue;
+            }
+            let e = evaluate_unchecked(layer, acc, &m);
+            evaluated += 1;
+            let pj = e.energy.total_pj();
+            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
+                best = Some((pj, m));
+                since_improved = 0;
+            } else {
+                since_improved += 1;
+                if since_improved >= self.patience {
+                    break;
+                }
+            }
+        }
+        self.evaluated.set(evaluated);
+        best.map(|(_, m)| m).ok_or_else(|| {
+            MapError::NoValidMapping(format!(
+                "{} found no valid candidate in {} draws on {} × {}",
+                self.name(),
+                self.budget,
+                layer.name,
+                acc.name
+            ))
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::LocalMapper;
+    use crate::workload::zoo;
+
+    #[test]
+    fn all_dataflows_find_valid_mappings() {
+        for df in [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            for acc in presets::all() {
+                let layer = zoo::vgg16()[8].clone();
+                let s = ConstrainedSearch::new(df, 300, 42);
+                let out = s.run(&layer, &acc).unwrap();
+                out.mapping.validate(&layer, &acc).unwrap();
+                assert!(out.evaluations > 1, "{} did not search", s.name());
+            }
+        }
+    }
+
+    #[test]
+    fn search_result_admitted_by_constraints() {
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[8].clone();
+        let s = ConstrainedSearch::new(Dataflow::WeightStationary, 200, 1);
+        let m = s.map(&layer, &acc).unwrap();
+        assert!(Dataflow::WeightStationary.constraints().admit(&layer, &acc, &m));
+    }
+
+    #[test]
+    fn more_budget_never_hurts() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let small = ConstrainedSearch::new(Dataflow::RowStationary, 50, 3).run(&layer, &acc).unwrap();
+        let big = ConstrainedSearch::new(Dataflow::RowStationary, 500, 3).run(&layer, &acc).unwrap();
+        assert!(big.evaluation.energy.total_pj() <= small.evaluation.energy.total_pj());
+    }
+
+    #[test]
+    fn local_is_much_cheaper_than_search() {
+        // The Table-3 shape: LOCAL evaluates once; search evaluates many.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let local = LocalMapper::new().run(&layer, &acc).unwrap();
+        let search = ConstrainedSearch::table3(Dataflow::RowStationary, 42).run(&layer, &acc).unwrap();
+        assert_eq!(local.evaluations, 2);
+        assert!(search.evaluations >= 100, "search too short: {}", search.evaluations);
+    }
+}

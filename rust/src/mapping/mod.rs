@@ -1,0 +1,391 @@
+//! The mapping intermediate representation — the paper's §2.3 quadruple:
+//! *assignment* (which tensor ranges live at which storage level),
+//! *bounding* (Eq. 18/19: tiles fit), *scheduling* (per-level loop
+//! permutation, Eq. 20) and *parallelization* (Eq. 21/22: spatial
+//! partitioning over the PE array).
+//!
+//! A [`Mapping`] is a tiled loop nest: each storage level carries one
+//! temporal tile factor per problem dimension plus a loop order; the PE
+//! array carries spatial X/Y factors that sit between level 0 (per-PE L0)
+//! and level 1. Dim `d`'s full extent is the product of all its factors.
+
+use crate::arch::Accelerator;
+use crate::workload::{ConvLayer, Dim, Tensor};
+use std::fmt;
+
+/// Per-dimension factor array indexed by [`Dim::idx`].
+pub type Factors = [u64; 7];
+
+/// Loop order at one level, **innermost first**. All seven dims are always
+/// present; dims with factor 1 are degenerate loops.
+pub type Permutation = [Dim; 7];
+
+/// Canonical permutation (N,M,C,R,S,P,Q innermost→outermost).
+pub const CANONICAL: Permutation = Dim::ALL;
+
+/// A complete mapping of one conv layer onto one accelerator.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Mapping {
+    /// Temporal tile factors per storage level, innermost level first
+    /// (aligned with `Accelerator::levels`).
+    pub temporal: Vec<Factors>,
+    /// Loop permutation per storage level (same indexing), innermost-first
+    /// within the level.
+    pub permutation: Vec<Permutation>,
+    /// Spatial partition factors over the PE array's X dimension (`m` rows,
+    /// the paper's `parallel_for ... spatial x`).
+    pub spatial_x: Factors,
+    /// Spatial partition factors over the PE array's Y dimension (`n` cols).
+    pub spatial_y: Factors,
+}
+
+/// Why a mapping is invalid for a (layer, accelerator) pair.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+pub enum MappingError {
+    #[error("level count {found} does not match accelerator levels {expected}")]
+    LevelMismatch { found: usize, expected: usize },
+    #[error("dim {dim}: factors product {product} != layer bound {bound}")]
+    Coverage { dim: Dim, product: u64, bound: u64 },
+    #[error("spatial X factor {used} exceeds PE rows {avail}")]
+    SpatialX { used: u64, avail: u64 },
+    #[error("spatial Y factor {used} exceeds PE cols {avail}")]
+    SpatialY { used: u64, avail: u64 },
+    #[error("level {level} ({name}): tile footprint {footprint} elements exceeds capacity {capacity}")]
+    Bounding { level: usize, name: String, footprint: u64, capacity: u64 },
+    #[error("level {level}: permutation is not a permutation of all dims")]
+    BadPermutation { level: usize },
+}
+
+impl Mapping {
+    /// The identity ("everything at DRAM") mapping for a layer on an
+    /// accelerator with `n_levels` storage levels: all factors 1 except the
+    /// outermost temporal level, canonical permutations, no parallelism.
+    pub fn trivial(layer: &ConvLayer, n_levels: usize) -> Self {
+        let mut temporal = vec![[1u64; 7]; n_levels];
+        temporal[n_levels - 1] = layer.bounds();
+        Mapping {
+            temporal,
+            permutation: vec![CANONICAL; n_levels],
+            spatial_x: [1; 7],
+            spatial_y: [1; 7],
+        }
+    }
+
+    /// Number of storage levels this mapping addresses.
+    pub fn n_levels(&self) -> usize {
+        self.temporal.len()
+    }
+
+    /// Total extent this mapping covers for dim `d` (product of all its
+    /// factors; must equal the layer bound for validity).
+    pub fn extent(&self, d: Dim) -> u64 {
+        let i = d.idx();
+        let t: u64 = self.temporal.iter().map(|f| f[i]).product();
+        t * self.spatial_x[i] * self.spatial_y[i]
+    }
+
+    /// Per-PE (level-0) tile factors: the innermost temporal factors only.
+    pub fn tile0(&self) -> Factors {
+        self.temporal[0]
+    }
+
+    /// Cumulative tile factors **held at** storage level `l`: everything at
+    /// or below `l`, including the spatial fan-out (spatial loops sit
+    /// between L0 and L1, so levels ≥ 1 see spatial × temporal).
+    pub fn tile_at(&self, l: usize) -> Factors {
+        let mut t = self.temporal[0];
+        if l >= 1 {
+            for d in 0..7 {
+                t[d] *= self.spatial_x[d] * self.spatial_y[d];
+            }
+            for f in &self.temporal[1..=l] {
+                for d in 0..7 {
+                    t[d] *= f[d];
+                }
+            }
+        }
+        t
+    }
+
+    /// Elements of tensor `t` in one level-`l` tile (Input uses the
+    /// sliding-window halo of the layer).
+    pub fn tensor_tile_elems(&self, layer: &ConvLayer, l: usize, t: Tensor) -> u64 {
+        tensor_elems(layer, &self.tile_at(l), t)
+    }
+
+    /// Sum of all three tensors' level-`l` tile sizes (what bounding checks
+    /// against the level capacity, Eq. 18).
+    pub fn footprint(&self, layer: &ConvLayer, l: usize) -> u64 {
+        Tensor::ALL.iter().map(|&t| self.tensor_tile_elems(layer, l, t)).sum()
+    }
+
+    /// Total spatial fan-out on X (the paper's `Rang(m)` product).
+    pub fn spatial_x_used(&self) -> u64 {
+        self.spatial_x.iter().product()
+    }
+
+    /// Total spatial fan-out on Y.
+    pub fn spatial_y_used(&self) -> u64 {
+        self.spatial_y.iter().product()
+    }
+
+    /// PE utilization (paper Eq. 25): active PEs / total PEs.
+    pub fn pe_utilization(&self, acc: &Accelerator) -> f64 {
+        (self.spatial_x_used() * self.spatial_y_used()) as f64 / acc.pe.count() as f64
+    }
+
+    /// Full validity check: structure, coverage, spatial bounds, per-level
+    /// bounding (Eq. 18) and permutation well-formedness.
+    pub fn validate(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<(), MappingError> {
+        if self.temporal.len() != acc.n_levels() || self.permutation.len() != acc.n_levels() {
+            return Err(MappingError::LevelMismatch {
+                found: self.temporal.len(),
+                expected: acc.n_levels(),
+            });
+        }
+        for d in Dim::ALL {
+            let product = self.extent(d);
+            let bound = layer.bound(d);
+            if product != bound {
+                return Err(MappingError::Coverage { dim: d, product, bound });
+            }
+        }
+        let sx = self.spatial_x_used();
+        if sx > acc.pe.m {
+            return Err(MappingError::SpatialX { used: sx, avail: acc.pe.m });
+        }
+        let sy = self.spatial_y_used();
+        if sy > acc.pe.n {
+            return Err(MappingError::SpatialY { used: sy, avail: acc.pe.n });
+        }
+        for (l, perm) in self.permutation.iter().enumerate() {
+            let mut seen = [false; 7];
+            for d in perm {
+                seen[d.idx()] = true;
+            }
+            if seen != [true; 7] {
+                return Err(MappingError::BadPermutation { level: l });
+            }
+        }
+        // Bounding: every bounded level must hold its tile. Level 0 is
+        // per-PE (holds the per-PE tile); levels ≥1 hold the cumulative
+        // tile. DRAM (unbounded) always fits.
+        for l in 0..acc.n_levels() {
+            if acc.levels[l].unbounded {
+                continue;
+            }
+            let footprint = if l == 0 {
+                tensor_footprint(layer, &self.tile0())
+            } else {
+                self.footprint(layer, l)
+            };
+            let capacity = acc.level_capacity(l);
+            if footprint > capacity {
+                return Err(MappingError::Bounding {
+                    level: l,
+                    name: acc.levels[l].name.clone(),
+                    footprint,
+                    capacity,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Loops at level `l` in execution order (innermost first), with their
+    /// factors; degenerate (factor 1) loops included.
+    pub fn loops(&self, l: usize) -> impl Iterator<Item = (Dim, u64)> + '_ {
+        self.permutation[l].iter().map(move |&d| (d, self.temporal[l][d.idx()]))
+    }
+
+    /// Pretty loop-nest rendering in the paper's Fig. 1 style.
+    pub fn render(&self, layer: &ConvLayer, acc: &Accelerator) -> String {
+        let mut s = String::new();
+        s.push_str(&format!("mapping of {} onto {}\n", layer.name, acc.name));
+        let mut indent = 0usize;
+        for l in (0..self.n_levels()).rev() {
+            let pad = "  ".repeat(indent);
+            s.push_str(&format!("{pad}[{}]\n", acc.levels[l].name));
+            for (d, f) in self.loops(l).collect::<Vec<_>>().into_iter().rev() {
+                if f > 1 {
+                    s.push_str(&format!("{pad}  for {d} in [0,{f})\n"));
+                    indent += 1;
+                }
+            }
+            if l == 1 {
+                // Spatial loops sit between L1 and L0.
+                let pad = "  ".repeat(indent);
+                for d in Dim::ALL {
+                    if self.spatial_x[d.idx()] > 1 {
+                        s.push_str(&format!(
+                            "{pad}parallel_for {d} in [0,{}) spatial-X\n",
+                            self.spatial_x[d.idx()]
+                        ));
+                    }
+                }
+                for d in Dim::ALL {
+                    if self.spatial_y[d.idx()] > 1 {
+                        s.push_str(&format!(
+                            "{pad}parallel_for {d} in [0,{}) spatial-Y\n",
+                            self.spatial_y[d.idx()]
+                        ));
+                    }
+                }
+            }
+        }
+        s
+    }
+}
+
+/// Elements of tensor `t` inside a tile with the given per-dim factors.
+/// Input uses the layer's sliding-window extents (halo); depthwise weights
+/// drop the C factor.
+pub fn tensor_elems(layer: &ConvLayer, tile: &Factors, t: Tensor) -> u64 {
+    let f = |d: Dim| tile[d.idx()].min(layer.bound(d)).max(1);
+    match t {
+        Tensor::Weight => {
+            if layer.depthwise {
+                f(Dim::M) * f(Dim::R) * f(Dim::S)
+            } else {
+                f(Dim::M) * f(Dim::C) * f(Dim::R) * f(Dim::S)
+            }
+        }
+        Tensor::Input => {
+            let h = layer.input_extent(f(Dim::P), f(Dim::R));
+            let w = layer.input_extent(f(Dim::Q), f(Dim::S));
+            // Depthwise: input channels ride on M (C is collapsed to 1).
+            let ch = if layer.depthwise { f(Dim::M) } else { f(Dim::C) };
+            f(Dim::N) * ch * h * w
+        }
+        Tensor::Output => f(Dim::N) * f(Dim::M) * f(Dim::P) * f(Dim::Q),
+    }
+}
+
+/// Footprint of all three tensors for a tile.
+pub fn tensor_footprint(layer: &ConvLayer, tile: &Factors) -> u64 {
+    Tensor::ALL.iter().map(|&t| tensor_elems(layer, tile, t)).sum()
+}
+
+impl fmt::Display for Mapping {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        for (l, t) in self.temporal.iter().enumerate() {
+            write!(f, "L{l}: ")?;
+            for (d, fct) in self.permutation[l].iter().map(|&d| (d, t[d.idx()])) {
+                if fct > 1 {
+                    write!(f, "{d}{fct} ")?;
+                }
+            }
+            writeln!(f)?;
+        }
+        let sx: Vec<String> = Dim::ALL
+            .iter()
+            .filter(|d| self.spatial_x[d.idx()] > 1)
+            .map(|d| format!("{d}{}", self.spatial_x[d.idx()]))
+            .collect();
+        let sy: Vec<String> = Dim::ALL
+            .iter()
+            .filter(|d| self.spatial_y[d.idx()] > 1)
+            .map(|d| format!("{d}{}", self.spatial_y[d.idx()]))
+            .collect();
+        writeln!(f, "spatial X: {}  Y: {}", sx.join(" "), sy.join(" "))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    fn layer() -> ConvLayer {
+        zoo::vgg02()[4].clone() // Table-1 layer
+    }
+
+    #[test]
+    fn trivial_is_valid() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let m = Mapping::trivial(&l, acc.n_levels());
+        m.validate(&l, &acc).unwrap();
+        assert_eq!(m.pe_utilization(&acc), 1.0 / 168.0);
+    }
+
+    #[test]
+    fn coverage_checked() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let mut m = Mapping::trivial(&l, acc.n_levels());
+        m.temporal[2][Dim::C.idx()] = 64; // breaks product == 128
+        let err = m.validate(&l, &acc).unwrap_err();
+        assert!(matches!(err, MappingError::Coverage { dim: Dim::C, .. }));
+    }
+
+    #[test]
+    fn spatial_bounds_checked() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let mut m = Mapping::trivial(&l, acc.n_levels());
+        // Put Q=56 entirely on X: exceeds 12 rows.
+        m.spatial_x[Dim::Q.idx()] = 56;
+        m.temporal[2][Dim::Q.idx()] = 1;
+        let err = m.validate(&l, &acc).unwrap_err();
+        assert!(matches!(err, MappingError::SpatialX { used: 56, avail: 12 }));
+    }
+
+    #[test]
+    fn bounding_checked() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let mut m = Mapping::trivial(&l, acc.n_levels());
+        // Pull the whole layer into L0 (capacity 16 elements): must fail.
+        m.temporal[0] = l.bounds();
+        m.temporal[2] = [1; 7];
+        let err = m.validate(&l, &acc).unwrap_err();
+        assert!(matches!(err, MappingError::Bounding { level: 0, .. }));
+    }
+
+    #[test]
+    fn tile_accumulation_includes_spatial() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l, 3);
+        m.spatial_x[Dim::Q.idx()] = 8;
+        m.temporal[2][Dim::Q.idx()] = 7;
+        m.temporal[0][Dim::Q.idx()] = 1;
+        assert_eq!(m.tile_at(0)[Dim::Q.idx()], 1);
+        assert_eq!(m.tile_at(1)[Dim::Q.idx()], 8);
+        assert_eq!(m.extent(Dim::Q), 56);
+    }
+
+    #[test]
+    fn input_halo_in_tile_elems() {
+        let l = layer();
+        let mut tile: Factors = [1; 7];
+        tile[Dim::P.idx()] = 4;
+        tile[Dim::R.idx()] = 3;
+        // Input rows = (4-1)*1 + (3-1) + 1 = 6; width = 1 (Q=S=1).
+        assert_eq!(tensor_elems(&l, &tile, Tensor::Input), 6);
+        assert_eq!(tensor_elems(&l, &tile, Tensor::Output), 4);
+        assert_eq!(tensor_elems(&l, &tile, Tensor::Weight), 3);
+    }
+
+    #[test]
+    fn permutation_wellformedness() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let mut m = Mapping::trivial(&l, acc.n_levels());
+        m.permutation[1][0] = Dim::Q;
+        m.permutation[1][6] = Dim::Q; // duplicate
+        assert!(matches!(m.validate(&l, &acc).unwrap_err(), MappingError::BadPermutation { level: 1 }));
+    }
+
+    #[test]
+    fn render_mentions_parallel_for() {
+        let acc = presets::eyeriss();
+        let l = layer();
+        let mut m = Mapping::trivial(&l, acc.n_levels());
+        m.spatial_x[Dim::Q.idx()] = 8;
+        m.temporal[2][Dim::Q.idx()] = 7;
+        let s = m.render(&l, &acc);
+        assert!(s.contains("parallel_for Q in [0,8) spatial-X"), "{s}");
+    }
+}

@@ -1,0 +1,296 @@
+//! Dataflow constraint sets — how the paper's baselines are expressed.
+//!
+//! The paper extracts its row/weight/output-stationary baselines from
+//! Timeloop "by defining data-reuse constraints" (§6.1): the stationarity
+//! of a dataflow becomes a restriction of the map-space, and a search runs
+//! inside the restricted space. [`Dataflow`] encodes the three baselines'
+//! constraints; [`Constraints::admit`] filters candidates and
+//! [`Constraints::imprint`] steers the sampler so constrained search does
+//! not reject-sample forever.
+
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::util::factor::factor_splits;
+use crate::util::rng::SplitMix64;
+use crate::workload::{ConvLayer, Dim};
+
+/// The three stationary dataflows the paper compares against (§6.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Dataflow {
+    /// Eyeriss row stationary [2]: one filter row stays in each PE; filter
+    /// rows spread over PE rows, output rows over PE columns.
+    RowStationary,
+    /// NVDLA weight stationary [4]: the filter tile stays in the PE; input
+    /// channels spread over PE rows, output channels over columns; P/Q
+    /// iterate innermost above the RF so weights never move.
+    WeightStationary,
+    /// ShiDianNao output stationary [15]: each PE owns output pixels;
+    /// Q over PE rows, P over columns; reduction (C,R,S) iterates
+    /// innermost above the RF so psums never move.
+    OutputStationary,
+}
+
+impl Dataflow {
+    pub fn name(self) -> &'static str {
+        match self {
+            Dataflow::RowStationary => "RS",
+            Dataflow::WeightStationary => "WS",
+            Dataflow::OutputStationary => "OS",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dataflow> {
+        match s.to_ascii_uppercase().as_str() {
+            "RS" | "ROW" | "ROW-STATIONARY" => Some(Dataflow::RowStationary),
+            "WS" | "WEIGHT" | "WEIGHT-STATIONARY" => Some(Dataflow::WeightStationary),
+            "OS" | "OUTPUT" | "OUTPUT-STATIONARY" => Some(Dataflow::OutputStationary),
+            _ => None,
+        }
+    }
+
+    /// The dataflow each accelerator natively runs in the paper's Table 3.
+    pub fn native_for(style: crate::arch::Style) -> Dataflow {
+        match style {
+            crate::arch::Style::EyerissLike => Dataflow::RowStationary,
+            crate::arch::Style::NvdlaLike => Dataflow::WeightStationary,
+            crate::arch::Style::ShiDianNaoLike => Dataflow::OutputStationary,
+        }
+    }
+
+    /// Constraint set for this dataflow.
+    pub fn constraints(self) -> Constraints {
+        match self {
+            Dataflow::RowStationary => Constraints {
+                name: "RS",
+                spatial_x: Some(Dim::R),
+                spatial_y: Some(Dim::P),
+                stationary_dims_l0: vec![Dim::S],
+                inner_above_rf: vec![Dim::S, Dim::Q],
+            },
+            Dataflow::WeightStationary => Constraints {
+                name: "WS",
+                spatial_x: Some(Dim::C),
+                spatial_y: Some(Dim::M),
+                stationary_dims_l0: vec![Dim::R, Dim::S],
+                inner_above_rf: vec![Dim::P, Dim::Q],
+            },
+            Dataflow::OutputStationary => Constraints {
+                name: "OS",
+                spatial_x: Some(Dim::Q),
+                spatial_y: Some(Dim::P),
+                stationary_dims_l0: vec![],
+                inner_above_rf: vec![Dim::C, Dim::R, Dim::S],
+            },
+        }
+    }
+}
+
+/// A restriction of the map-space expressing one dataflow's stationarity.
+#[derive(Debug, Clone)]
+pub struct Constraints {
+    pub name: &'static str,
+    /// Dim that must occupy the spatial-X slot (as much of it as fits).
+    pub spatial_x: Option<Dim>,
+    /// Dim that must occupy the spatial-Y slot.
+    pub spatial_y: Option<Dim>,
+    /// Dims whose full (residual) extent must sit in the per-PE L0 tile —
+    /// the "stationary" tensor's footprint.
+    pub stationary_dims_l0: Vec<Dim>,
+    /// Dims that must be the innermost non-degenerate temporal loops at
+    /// level 1 (just above the RF), in the given inner→outer order — this
+    /// is what keeps the stationary tensor resident.
+    pub inner_above_rf: Vec<Dim>,
+}
+
+impl Constraints {
+    /// Does a mapping satisfy this constraint set?
+    pub fn admit(&self, layer: &ConvLayer, acc: &Accelerator, m: &Mapping) -> bool {
+        // Spatial slots: the designated dim must own the slot exclusively
+        // (other dims' factors there must be 1) and be maximal for the
+        // array dimension (largest divisor of the dim bound that fits).
+        for (want, arr, cap) in [
+            (self.spatial_x, &m.spatial_x, acc.pe.m),
+            (self.spatial_y, &m.spatial_y, acc.pe.n),
+        ] {
+            if let Some(d) = want {
+                let (expect, _) = factor_splits(layer.bound(d), cap);
+                if arr[d.idx()] != expect {
+                    return false;
+                }
+                if (0..7).any(|i| i != d.idx() && arr[i] != 1) {
+                    return false;
+                }
+            }
+        }
+        // Innermost order at level 1: the first non-degenerate loops must
+        // be exactly `inner_above_rf` (those with extent > 1), in order.
+        let non_degenerate: Vec<Dim> = m
+            .loops(1)
+            .filter(|&(_, f)| f > 1)
+            .map(|(d, _)| d)
+            .collect();
+        let expected: Vec<Dim> = self
+            .inner_above_rf
+            .iter()
+            .copied()
+            .filter(|&d| m.temporal[1][d.idx()] > 1)
+            .collect();
+        if non_degenerate.len() < expected.len() {
+            return false;
+        }
+        non_degenerate[..expected.len()] == expected[..]
+    }
+
+    /// Force a candidate into the constrained subspace (the sampler calls
+    /// this after [`crate::mapspace::sample_random`]): claims the spatial
+    /// slots, pins stationary dims at L0, orders the level-1 permutation,
+    /// then re-repairs capacities.
+    pub fn imprint(&self, layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
+        let top = m.n_levels() - 1;
+        // Clear spatial slots and re-assign the constrained dims.
+        for i in 0..7 {
+            m.temporal[top][i] *= m.spatial_x[i] * m.spatial_y[i];
+            m.spatial_x[i] = 1;
+            m.spatial_y[i] = 1;
+        }
+        for (want, cap, is_x) in [(self.spatial_x, acc.pe.m, true), (self.spatial_y, acc.pe.n, false)] {
+            if let Some(d) = want {
+                let i = d.idx();
+                // Gather d's full residual from the temporal slots, then
+                // split it spatially as large as fits.
+                let total: u64 =
+                    m.temporal.iter().map(|f| f[i]).product::<u64>();
+                let (sp, rest) = factor_splits(layer.bound(d).min(total), cap);
+                // Reset d's temporal split: everything to DRAM, then spatial.
+                for f in m.temporal.iter_mut() {
+                    f[i] = 1;
+                }
+                m.temporal[top][i] = rest;
+                if is_x {
+                    m.spatial_x[i] = sp;
+                } else {
+                    m.spatial_y[i] = sp;
+                }
+            }
+        }
+        // Stationary dims: as much of the residual into L0 as the RF can
+        // hold (best-effort — a 16-element keep-everything RF cannot always
+        // hold a full 3×3 filter plus operands).
+        for &d in &self.stationary_dims_l0 {
+            let i = d.idx();
+            let spatial = m.spatial_x[i] * m.spatial_y[i];
+            for f in m.temporal.iter_mut() {
+                f[i] = 1;
+            }
+            let residual = layer.bound(d) / spatial;
+            m.temporal[top][i] = residual;
+            for f in crate::util::factor::divisors(residual).into_iter().rev() {
+                m.temporal[0][i] = f;
+                m.temporal[top][i] = residual / f;
+                if crate::mapping::tensor_footprint(layer, &m.tile0()) <= acc.level_capacity(0) {
+                    break;
+                }
+            }
+        }
+        // Level-1 permutation: constrained dims innermost (in order), the
+        // rest shuffled behind them.
+        let mut rest: Vec<Dim> = Dim::ALL
+            .iter()
+            .copied()
+            .filter(|d| !self.inner_above_rf.contains(d))
+            .collect();
+        rng.shuffle(&mut rest);
+        let mut perm = self.inner_above_rf.clone();
+        perm.extend(rest);
+        for (i, d) in perm.into_iter().enumerate() {
+            m.permutation[1][i] = d;
+        }
+        crate::mapspace::repair(layer, acc, m);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapspace::sample_random;
+    use crate::workload::zoo;
+
+    #[test]
+    fn dataflow_parse_and_names() {
+        assert_eq!(Dataflow::parse("ws"), Some(Dataflow::WeightStationary));
+        assert_eq!(Dataflow::parse("row"), Some(Dataflow::RowStationary));
+        assert_eq!(Dataflow::parse("OS"), Some(Dataflow::OutputStationary));
+        assert_eq!(Dataflow::parse("xx"), None);
+        assert_eq!(Dataflow::RowStationary.name(), "RS");
+    }
+
+    #[test]
+    fn native_dataflows() {
+        use crate::arch::Style;
+        assert_eq!(Dataflow::native_for(Style::EyerissLike), Dataflow::RowStationary);
+        assert_eq!(Dataflow::native_for(Style::NvdlaLike), Dataflow::WeightStationary);
+        assert_eq!(Dataflow::native_for(Style::ShiDianNaoLike), Dataflow::OutputStationary);
+    }
+
+    #[test]
+    fn imprint_then_admit_all_dataflows() {
+        let mut rng = SplitMix64::new(11);
+        for df in [Dataflow::RowStationary, Dataflow::WeightStationary, Dataflow::OutputStationary] {
+            let cons = df.constraints();
+            for acc in presets::all() {
+                let layer = zoo::vgg16()[8].clone();
+                for _ in 0..10 {
+                    let mut m = sample_random(&layer, &acc, &mut rng);
+                    cons.imprint(&layer, &acc, &mut m, &mut rng);
+                    m.validate(&layer, &acc)
+                        .unwrap_or_else(|e| panic!("{} on {}: {e}\n{m}", cons.name, acc.name));
+                    assert!(
+                        cons.admit(&layer, &acc, &m),
+                        "{} imprint not admitted on {}:\n{m}",
+                        cons.name,
+                        acc.name
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn unconstrained_random_rarely_admitted() {
+        // Sanity: the constraint actually constrains.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let cons = Dataflow::WeightStationary.constraints();
+        let mut rng = SplitMix64::new(5);
+        let admitted = (0..100)
+            .filter(|_| {
+                let m = sample_random(&layer, &acc, &mut rng);
+                cons.admit(&layer, &acc, &m)
+            })
+            .count();
+        assert!(admitted < 10, "{admitted} of 100 random maps admitted");
+    }
+
+    #[test]
+    fn ws_keeps_weights_stationary() {
+        // After WS imprint, as much of R/S as fits sits in L0 and P/Q are
+        // innermost at level 1 → the weight tile survives P/Q iteration.
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[8].clone();
+        let mut rng = SplitMix64::new(13);
+        let mut m = sample_random(&layer, &acc, &mut rng);
+        Dataflow::WeightStationary.constraints().imprint(&layer, &acc, &mut m, &mut rng);
+        // At least one filter dim pinned at L0 (capacity-limited).
+        let pinned = m.temporal[0][Dim::R.idx()] * m.temporal[0][Dim::S.idx()];
+        assert!(pinned >= 3, "filter not resident: {m}");
+        // C spatial on X, M spatial on Y (maximal divisors ≤ 16).
+        assert_eq!(m.spatial_x[Dim::C.idx()], 16);
+        assert_eq!(m.spatial_y[Dim::M.idx()], 16);
+        // P and Q are the innermost non-degenerate level-1 loops.
+        let inner: Vec<Dim> = m.loops(1).filter(|&(_, f)| f > 1).map(|(d, _)| d).collect();
+        if !inner.is_empty() {
+            assert!(inner[0] == Dim::P || inner[0] == Dim::Q);
+        }
+    }
+}

@@ -1,0 +1,241 @@
+//! Map-space definition, sampling and size accounting (paper §3).
+//!
+//! A point in the map-space chooses, for every problem dimension, an
+//! ordered factorization across the temporal levels plus the two spatial
+//! slots, together with a loop permutation per level. The §3 motivation
+//! sizes — `(n!)^m ≈ O(10^8)` for six swappable loops over three storage
+//! levels, and the `O(10^17)` full co-design space — are reproduced by
+//! [`permutation_space`] and [`design_space`] (exercised by the
+//! `motivation_mapspace` bench).
+
+pub mod constraints;
+
+pub use constraints::{Constraints, Dataflow};
+
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::util::factor::count_factorizations;
+use crate::util::rng::SplitMix64;
+use crate::workload::{ConvLayer, Dim};
+
+/// `(n!)^m` — the §3 permutation-space size for `n` swappable loop-nests
+/// over `m` storage levels.
+pub fn permutation_space(n_loops: u64, m_levels: u32) -> f64 {
+    let fact: f64 = (1..=n_loops).map(|i| i as f64).product();
+    fact.powi(m_levels as i32)
+}
+
+/// Factorization-space size: ordered splits of every dim across
+/// `slots` positions (temporal levels + spatial slots).
+pub fn factorization_space(layer: &ConvLayer, slots: usize) -> f64 {
+    Dim::ALL
+        .iter()
+        .map(|&d| count_factorizations(layer.bound(d), slots) as f64)
+        .product()
+}
+
+/// Total mapping-space size for a layer on an accelerator:
+/// factorizations × per-level permutations (the paper counts the six
+/// non-degenerate loops of a conv layer; we count exactly the
+/// non-degenerate dims of this layer).
+pub fn map_space(layer: &ConvLayer, acc: &Accelerator) -> f64 {
+    let n_loops = Dim::ALL.iter().filter(|&&d| layer.bound(d) > 1).count() as u64;
+    let slots = acc.n_levels() + 2; // temporal levels + spatial X/Y
+    factorization_space(layer, slots) * permutation_space(n_loops, acc.n_levels() as u32)
+}
+
+/// The §3 co-design space: PE-count choices × mapping permutations for the
+/// paper's VGG16 layer-2 example (`64² × 224² × 3² × (6!)³ ≈ O(10^17)`).
+pub fn design_space(k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, m_levels: u32) -> f64 {
+    (k * c) as f64 * (y * x) as f64 * (r * s) as f64 * permutation_space(6, m_levels)
+}
+
+/// Draw one uniformly-ish random **valid** mapping (the Fig. 3 generator).
+///
+/// Strategy: per dim, draw a random ordered factorization across
+/// `levels + 2` slots (spatial X, spatial Y, then temporal innermost →
+/// outermost); draw a random permutation per level; then repair capacity
+/// violations by migrating factors outward (toward DRAM), which always
+/// terminates because the DRAM level is unbounded. Spatial overflows are
+/// repaired by folding the excess back into the outermost temporal level.
+pub fn sample_random(layer: &ConvLayer, acc: &Accelerator, rng: &mut SplitMix64) -> Mapping {
+    let n_levels = acc.n_levels();
+    let mut m = Mapping {
+        temporal: vec![[1u64; 7]; n_levels],
+        permutation: vec![Dim::ALL; n_levels],
+        spatial_x: [1; 7],
+        spatial_y: [1; 7],
+    };
+
+    for d in Dim::ALL {
+        let mut rest = layer.bound(d);
+        // Spatial slots first.
+        for spatial in [true, false] {
+            let cap = if spatial { acc.pe.m } else { acc.pe.n };
+            let f = crate::util::factor::with_divisors(rest, |divs| {
+                // Divisors are ascending: those ≤ cap form a prefix.
+                let n_ok = divs.partition_point(|&x| x <= cap);
+                divs[rng.index(n_ok.max(1))]
+            });
+            if spatial {
+                m.spatial_x[d.idx()] = f;
+            } else {
+                m.spatial_y[d.idx()] = f;
+            }
+            rest /= f;
+        }
+        // Temporal slots, innermost first; the last level takes the rest.
+        for l in 0..n_levels - 1 {
+            let f = crate::util::factor::with_divisors(rest, |divs| *rng.choose(divs));
+            m.temporal[l][d.idx()] = f;
+            rest /= f;
+        }
+        m.temporal[n_levels - 1][d.idx()] = rest;
+    }
+
+    // Random permutation per level.
+    for l in 0..n_levels {
+        rng.shuffle(&mut m.permutation[l]);
+    }
+
+    repair(layer, acc, &mut m);
+    debug_assert!(m.validate(layer, acc).is_ok(), "repair failed: {m}");
+    m
+}
+
+/// Repair a candidate in place: clamp spatial fan-out to the PE array and
+/// migrate tile factors outward until every bounded level fits.
+pub fn repair(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping) {
+    let n_levels = acc.n_levels();
+    let top = n_levels - 1;
+
+    // Spatial clamping: pull factors out of the spatial slots (largest dim
+    // first) into the outermost temporal level until the fan-out fits.
+    for (slot, cap) in [(0usize, acc.pe.m), (1usize, acc.pe.n)] {
+        loop {
+            let arr = if slot == 0 { &m.spatial_x } else { &m.spatial_y };
+            let used: u64 = arr.iter().product();
+            if used <= cap {
+                break;
+            }
+            // Move the smallest prime factor of the largest spatial entry.
+            let d = (0..7).max_by_key(|&i| arr[i]).unwrap();
+            let f = smallest_prime_factor(arr[d]);
+            if slot == 0 {
+                m.spatial_x[d] /= f;
+            } else {
+                m.spatial_y[d] /= f;
+            }
+            m.temporal[top][d] *= f;
+        }
+    }
+
+    // Capacity repair, innermost outward. Level 0 bounds the per-PE tile;
+    // levels 1..top bound the cumulative tile.
+    for l in 0..top {
+        loop {
+            let footprint = if l == 0 {
+                crate::mapping::tensor_footprint(layer, &m.tile0())
+            } else {
+                m.footprint(layer, l)
+            };
+            if footprint <= acc.level_capacity(l) {
+                break;
+            }
+            // Shrink the largest temporal factor at this level.
+            let d = (0..7).max_by_key(|&i| m.temporal[l][i]).unwrap();
+            if m.temporal[l][d] == 1 {
+                // Nothing left to shrink at this level (footprint is
+                // irreducible); the validate() debug assert will flag the
+                // impossible hierarchy.
+                break;
+            }
+            let f = smallest_prime_factor(m.temporal[l][d]);
+            m.temporal[l][d] /= f;
+            m.temporal[l + 1][d] *= f;
+        }
+    }
+}
+
+fn smallest_prime_factor(n: u64) -> u64 {
+    debug_assert!(n > 1);
+    let mut i = 2;
+    while i * i <= n {
+        if n % i == 0 {
+            return i;
+        }
+        i += 1;
+    }
+    n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn paper_motivation_sizes() {
+        // (6!)³ = 373 248 000 ≈ O(10^8).
+        let p = permutation_space(6, 3);
+        assert_eq!(p, 373_248_000.0);
+        assert!(p >= 1e8 && p < 1e9);
+        // 64²·224²·3²·(6!)³ ≈ O(10^17).
+        let d = design_space(64, 64, 224, 224, 3, 3, 3);
+        assert!(d > 1e17 && d < 1e18, "{d}");
+    }
+
+    #[test]
+    fn map_space_is_huge_for_real_layers() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        assert!(map_space(&layer, &acc) > 1e12);
+    }
+
+    #[test]
+    fn random_samples_are_valid() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let mut rng = SplitMix64::new(1);
+        for _ in 0..200 {
+            let m = sample_random(&layer, &acc, &mut rng);
+            m.validate(&layer, &acc).unwrap();
+        }
+    }
+
+    #[test]
+    fn random_samples_are_valid_on_all_presets() {
+        let mut rng = SplitMix64::new(7);
+        for acc in presets::all() {
+            for layer in zoo::table2_workloads() {
+                for _ in 0..20 {
+                    let m = sample_random(&layer.layer, &acc, &mut rng);
+                    m.validate(&layer.layer, &acc)
+                        .unwrap_or_else(|e| panic!("{} on {}: {e}", layer.layer.name, acc.name));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn random_samples_differ() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let mut rng = SplitMix64::new(3);
+        let a = sample_random(&layer, &acc, &mut rng);
+        let b = sample_random(&layer, &acc, &mut rng);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn repair_is_idempotent_on_valid() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let mut rng = SplitMix64::new(9);
+        let m = sample_random(&layer, &acc, &mut rng);
+        let mut m2 = m.clone();
+        repair(&layer, &acc, &mut m2);
+        assert_eq!(m, m2);
+    }
+}

@@ -1,0 +1,417 @@
+//! The Timeloop-lite analytical engine.
+//!
+//! Given a validated [`Mapping`] of a [`ConvLayer`] onto an
+//! [`Accelerator`], this module computes per-level per-tensor access
+//! counts, NoC traffic, PE utilization (paper Eq. 25), a roofline latency,
+//! and — through [`crate::energy`] — the per-component energy breakdown the
+//! paper's Fig. 3/7 report.
+//!
+//! # Reuse model
+//!
+//! We use the classic permutation-aware stationarity model (Timeloop's
+//! default read model without bypass):
+//!
+//! The tile of tensor `T` held at level `l-1` is refetched from level `l`
+//! each time any loop *relevant to `T`* above it iterates. The contiguous
+//! run of `T`-irrelevant loops immediately above the tile keeps it
+//! **stationary** (no refetch); every loop above the first relevant loop —
+//! relevant or not — multiplies the fetch count (degenerate trip-1 loops
+//! are transparent).
+//!
+//! Outputs are read-modify-write: with `V` total tile visits (counted by
+//! the same rule, relevance = {N,M,P,Q}) and `U` distinct output tiles
+//! (product of relevant trips only), the level receives `V` tile-writes and
+//! serves `V − U` partial-sum read-backs (the first visit of each distinct
+//! tile initializes instead of reading).
+//!
+//! # Spatial boundary
+//!
+//! Spatial (PE-array) loops sit between L1 and the per-PE L0. With a
+//! multicast NoC, L1 reads only the *unique* words across the array
+//! (`tensor_elems` over tile0 ⊗ spatial factors — halo sharing included);
+//! each PE still fills its own L0 copy. Spatially-reduced outputs
+//! (reduction dim mapped spatially) contribute `aggregate − unique` extra
+//! NoC words for the inter-PE psum tree.
+
+pub mod nest;
+
+use crate::arch::Accelerator;
+use crate::energy::{EnergyBreakdown, Ert};
+use crate::mapping::{tensor_elems, Mapping, MappingError};
+use crate::workload::{ConvLayer, Tensor};
+
+pub use nest::{distinct_tiles, fetch_rounds, loop_list_above, LoopIter, LoopList};
+
+/// Per-level access counts for one tensor, in words (data elements).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct Access {
+    /// Words read out of this level (serving the level below / datapath).
+    pub reads: u64,
+    /// Words written into this level (fills and partial-sum updates).
+    pub writes: u64,
+}
+
+impl Access {
+    pub fn total(&self) -> u64 {
+        self.reads + self.writes
+    }
+}
+
+/// Full analytical evaluation of one mapping.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Evaluation {
+    /// `access[level][tensor_idx]` — words, aligned with
+    /// `Accelerator::levels` and `Tensor::ALL` ordering (W, I, O).
+    pub access: Vec<[Access; 3]>,
+    /// Words crossing the NoC (L1→PE delivery + psum reduction).
+    pub noc_words: u64,
+    /// Average hop distance used for NoC energy.
+    pub noc_avg_hops: f64,
+    /// Total MAC operations (== layer.macs()).
+    pub macs: u64,
+    /// Active PEs (spatial fan-out).
+    pub active_pes: u64,
+    /// PE utilization, Eq. 25.
+    pub utilization: f64,
+    /// Per-PE compute cycles (1 MAC/cycle/PE).
+    pub compute_cycles: u64,
+    /// Bandwidth-bound cycles per level boundary.
+    pub bandwidth_cycles: Vec<u64>,
+    /// Roofline latency = max(compute, all bandwidth bounds).
+    pub latency_cycles: u64,
+    /// Energy breakdown (Fig. 7 components).
+    pub energy: EnergyBreakdown,
+}
+
+impl Evaluation {
+    /// Total energy in µJ (Fig. 3 / Fig. 7 axis).
+    pub fn energy_uj(&self) -> f64 {
+        self.energy.total_uj()
+    }
+
+    /// Throughput in MACs/cycle implied by the roofline latency.
+    pub fn macs_per_cycle(&self) -> f64 {
+        self.macs as f64 / self.latency_cycles.max(1) as f64
+    }
+
+    /// Energy-delay product (pJ·cycles) — used by the ablation benches.
+    pub fn edp(&self) -> f64 {
+        self.energy.total_pj() * self.latency_cycles as f64
+    }
+}
+
+/// Evaluate a mapping. Validates first; returns the mapping error if the
+/// mapping does not fit (callers in search loops rely on this being cheap).
+pub fn evaluate(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    mapping: &Mapping,
+) -> Result<Evaluation, MappingError> {
+    mapping.validate(layer, acc)?;
+    Ok(evaluate_unchecked(layer, acc, mapping))
+}
+
+/// Evaluate without re-validating (hot path for mappers that construct
+/// valid-by-construction candidates; debug builds still assert).
+pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mapping) -> Evaluation {
+    debug_assert!(mapping.validate(layer, acc).is_ok());
+    let n_levels = acc.n_levels();
+    let mut access = vec![[Access::default(); 3]; n_levels];
+
+    let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+
+    // Spatial tile: per-PE tile ⊗ spatial factors (unique data across the
+    // whole PE array).
+    let tile0 = mapping.tile0();
+    let mut spatial_tile = tile0;
+    for d in 0..7 {
+        spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
+    }
+
+    // --- Level-0 (RF) datapath traffic: every MAC reads W, I and
+    // read-modify-writes the accumulator.
+    let macs = layer.macs();
+    access[0][Tensor::Weight.t_idx()].reads += macs;
+    access[0][Tensor::Input.t_idx()].reads += macs;
+    access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+    access[0][Tensor::Output.t_idx()].writes += macs; // accumulator write
+
+    let mut noc_words: u64 = 0;
+
+    // --- Boundaries: parent level l serves child tiles of level l-1,
+    // for l in 1..n_levels. Loop list above the child = loops at levels
+    // l..top (inner→outer).
+    for l in 1..n_levels {
+        let loops = loop_list_above(layer, mapping, l);
+        for t in Tensor::ALL {
+            let ti = t.t_idx();
+            // Child tile uniqueness at this boundary.
+            let (unique_child, aggregate_child) = if l == 1 {
+                let unique = tensor_elems(layer, &spatial_tile, t);
+                let aggregate = fanout * tensor_elems(layer, &tile0, t);
+                (unique, aggregate)
+            } else {
+                let e = mapping.tensor_tile_elems(layer, l - 1, t);
+                (e, e)
+            };
+            match t {
+                Tensor::Weight | Tensor::Input => {
+                    let rounds = fetch_rounds(layer, t, &loops);
+                    let served = if l == 1 && !acc.noc.multicast {
+                        aggregate_child
+                    } else {
+                        unique_child
+                    };
+                    // Parent reads what it serves downward.
+                    access[l][ti].reads += rounds * served;
+                    // Children write their fills (each PE fills its copy at
+                    // the spatial boundary).
+                    access[l - 1][ti].writes += rounds * aggregate_child;
+                    if l == 1 {
+                        noc_words += rounds * served;
+                    }
+                }
+                Tensor::Output => {
+                    let v = fetch_rounds(layer, t, &loops);
+                    let u = distinct_tiles(layer, t, &loops);
+                    debug_assert!(v >= u);
+                    // Updates flowing up into level l...
+                    access[l][ti].writes += v * unique_child;
+                    // ...and psum read-backs served to the child.
+                    access[l][ti].reads += (v - u) * unique_child;
+                    // Child-side reads of the psums it sends up, and fills
+                    // of psums it gets back, are the child's own level
+                    // traffic:
+                    access[l - 1][ti].reads += v * aggregate_child;
+                    access[l - 1][ti].writes += (v - u) * aggregate_child;
+                    if l == 1 {
+                        // Upward psum words + read-backs cross the NoC;
+                        // spatial reduction adds the (aggregate − unique)
+                        // inter-PE combining traffic.
+                        noc_words += v * unique_child + (v - u) * unique_child;
+                        noc_words += v * (aggregate_child - unique_child);
+                    }
+                }
+            }
+        }
+    }
+
+    // --- Latency: compute roofline vs per-boundary bandwidth. Per-PE
+    // levels (the RF) are parallel instances: their aggregate traffic is
+    // served by `active_pes` multi-ported register files, so the per-level
+    // bandwidth scales with the spatial fan-out.
+    let compute_cycles: u64 = mapping.temporal.iter().flatten().product();
+    let mut bandwidth_cycles = Vec::with_capacity(n_levels);
+    for l in 0..n_levels {
+        let words: u64 = (0..3).map(|ti| access[l][ti].total()).sum();
+        let instances = if acc.levels[l].per_pe { fanout.max(1) } else { 1 };
+        let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
+            * instances as f64;
+        bandwidth_cycles.push((words as f64 / bw).ceil() as u64);
+    }
+    let latency_cycles = compute_cycles.max(bandwidth_cycles.iter().copied().max().unwrap_or(0));
+
+    // --- Energy roll-up.
+    let ert = Ert::for_accelerator(acc);
+    let mut energy = EnergyBreakdown::zero(n_levels);
+    for l in 0..n_levels {
+        let words: u64 = (0..3).map(|ti| access[l][ti].total()).sum();
+        energy.level_pj[l] = words as f64 * ert.level(l);
+    }
+    // Average Manhattan distance across the active sub-array.
+    let noc_avg_hops = (mapping.spatial_x_used() + mapping.spatial_y_used()) as f64 / 2.0;
+    energy.noc_pj = noc_words as f64 * ert.noc_hop_pj * noc_avg_hops;
+    energy.mac_pj = macs as f64 * ert.mac_pj;
+
+    Evaluation {
+        access,
+        noc_words,
+        noc_avg_hops,
+        macs,
+        active_pes: fanout,
+        utilization: mapping.pe_utilization(acc),
+        compute_cycles,
+        bandwidth_cycles,
+        latency_cycles,
+        energy,
+    }
+}
+
+/// Tensor index into `Evaluation::access` rows.
+pub trait TensorIdx {
+    fn t_idx(self) -> usize;
+}
+
+impl TensorIdx for Tensor {
+    fn t_idx(self) -> usize {
+        match self {
+            Tensor::Weight => 0,
+            Tensor::Input => 1,
+            Tensor::Output => 2,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::arch::{Accelerator, Noc, PeArray, StorageLevel, Style};
+    use crate::mapping::Mapping;
+    use crate::workload::{zoo, Dim};
+
+    /// 2-level machine (per-PE RF + DRAM) for hand-checked counts.
+    fn tiny_acc() -> Accelerator {
+        Accelerator {
+            name: "tiny".into(),
+            style: Style::EyerissLike,
+            datawidth_bits: 16,
+            levels: vec![
+                StorageLevel::register_file("RF", 64, 16),
+                StorageLevel::dram(64),
+            ],
+            pe: PeArray::new(2, 2),
+            noc: Noc::default(),
+            mac_energy_pj: 1.0,
+            clock_mhz: 200.0,
+        }
+    }
+
+    /// M=2, C=2, P=2, everything else 1. 8 MACs.
+    fn tiny_layer() -> ConvLayer {
+        ConvLayer::new("tiny", 2, 2, 1, 1, 2, 1)
+    }
+
+    #[test]
+    fn hand_computed_counts_two_level() {
+        let acc = tiny_acc();
+        let layer = tiny_layer();
+        // All loops temporal at DRAM, canonical order (N,M,C,R,S,P,Q
+        // innermost→outermost) → non-degenerate inner→outer: M2, C2, P2.
+        let m = Mapping::trivial(&layer, 2);
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        assert_eq!(e.macs, 8);
+        // Weights (rel M,C): innermost loop M is relevant → 2·2·2 rounds.
+        assert_eq!(e.access[1][0].reads, 8);
+        // Input (rel C,P): M skipped as leading-irrelevant → C·P = 4.
+        assert_eq!(e.access[1][1].reads, 4);
+        // Output: V = 8 (M relevant immediately), U = M·P = 4.
+        assert_eq!(e.access[1][2].writes, 8);
+        assert_eq!(e.access[1][2].reads, 4);
+        // RF datapath traffic; Output adds the V = 8 psum hand-ups on top
+        // of the 8 accumulator reads.
+        assert_eq!(e.access[0][0].reads, 8);
+        assert_eq!(e.access[0][1].reads, 8);
+        assert_eq!(e.access[0][2].reads, 8 + 8);
+        // RF fills = parent reads (fanout 1) + psum writebacks.
+        assert_eq!(e.access[0][0].writes, 8);
+        assert_eq!(e.access[0][1].writes, 4);
+        // Output child-side: reads of psums sent up = 8, fills of
+        // read-backs = 4, plus 8 accumulator writes from the datapath.
+        assert_eq!(e.access[0][2].writes, 8 + 4);
+        assert_eq!(e.compute_cycles, 8);
+        assert!(e.latency_cycles >= 8);
+    }
+
+    #[test]
+    fn permutation_changes_reuse() {
+        let acc = tiny_acc();
+        let layer = tiny_layer();
+        let mut m = Mapping::trivial(&layer, 2);
+        // Put P innermost instead: order P, C, M (inner→outer).
+        m.permutation[1] = [Dim::P, Dim::C, Dim::M, Dim::N, Dim::R, Dim::S, Dim::Q];
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        // Weights: leading P irrelevant → skipped; C·M = 4 rounds.
+        assert_eq!(e.access[1][0].reads, 4);
+        // Input: P relevant immediately → 8 rounds.
+        assert_eq!(e.access[1][1].reads, 8);
+        // Output: V = P·C·M = 8 (P relevant), U = 4.
+        assert_eq!(e.access[1][2].writes, 8);
+    }
+
+    #[test]
+    fn spatial_multicast_reduces_parent_reads() {
+        let acc = tiny_acc();
+        let layer = tiny_layer();
+        // Parallelize M over X (2 PEs): weights split, inputs multicast.
+        let mut m = Mapping::trivial(&layer, 2);
+        m.spatial_x[Dim::M.idx()] = 2;
+        m.temporal[1][Dim::M.idx()] = 1;
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        assert_eq!(e.active_pes, 2);
+        // Loops above boundary: C2, P2 (M now spatial).
+        // Weights unique across PEs = M2·C1(tile)… per round W unique =
+        // tensor_elems(spatial_tile W) with M=2,C=1 → 2; rounds: C
+        // relevant immediately → C·P = 4 → reads = 8.
+        assert_eq!(e.access[1][0].reads, 8);
+        // Input: unique across PEs = 1 (M irrelevant to I) → multicast.
+        // rounds = C·P = 4 → parent reads 4, but both PEs fill: child
+        // fills = rounds · fanout · tile0 = 8.
+        assert_eq!(e.access[1][1].reads, 4);
+        assert_eq!(e.access[0][1].writes, 8);
+        // Utilization = 2 active of 4 PEs.
+        assert!((e.utilization - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spatial_reduction_traffic_counted() {
+        let acc = tiny_acc();
+        let layer = tiny_layer();
+        // Parallelize C (a reduction dim) over X.
+        let mut m = Mapping::trivial(&layer, 2);
+        m.spatial_x[Dim::C.idx()] = 2;
+        m.temporal[1][Dim::C.idx()] = 1;
+        let e0 = {
+            // Baseline without spatial C for NoC comparison.
+            let m0 = Mapping::trivial(&layer, 2);
+            evaluate(&layer, &acc, &m0).unwrap()
+        };
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        // Output unique across PEs < aggregate → reduction words appear.
+        assert!(e.noc_words > 0);
+        // DRAM psum writes shrink vs baseline (C no longer revisits above).
+        assert!(e.access[1][2].writes <= e0.access[1][2].writes);
+    }
+
+    #[test]
+    fn mac_conservation_across_mappings() {
+        // MAC count is mapping-invariant (property also swept in
+        // rust/tests/property.rs with random mappings).
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let m1 = Mapping::trivial(&layer, acc.n_levels());
+        let e1 = evaluate(&layer, &acc, &m1).unwrap();
+        assert_eq!(e1.macs, layer.macs());
+        assert_eq!(e1.energy.mac_pj, layer.macs() as f64);
+    }
+
+    #[test]
+    fn energy_positive_and_dram_dominant_for_trivial() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let m = Mapping::trivial(&layer, acc.n_levels());
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        assert!(e.energy.total_pj() > 0.0);
+        // Everything streams from DRAM: DRAM must dominate storage energy.
+        assert!(e.energy.dram_pj() > e.energy.level_pj[1]);
+    }
+
+    #[test]
+    fn invalid_mapping_rejected() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let mut m = Mapping::trivial(&layer, acc.n_levels());
+        m.temporal[2][0] = 999; // breaks coverage
+        assert!(evaluate(&layer, &acc, &m).is_err());
+    }
+
+    #[test]
+    fn bandwidth_can_bound_latency() {
+        let mut acc = tiny_acc();
+        acc.levels[1].bandwidth_words_per_cycle = 0.001;
+        let layer = tiny_layer();
+        let m = Mapping::trivial(&layer, 2);
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        assert!(e.latency_cycles > e.compute_cycles);
+    }
+}

@@ -1,0 +1,184 @@
+//! Loop-nest machinery for the reuse model: building the ordered loop list
+//! above a boundary and counting fetch rounds / distinct tiles under the
+//! stationarity rule (see the module docs of [`crate::model`]).
+
+use crate::mapping::Mapping;
+use crate::workload::{ConvLayer, Dim, Tensor};
+
+/// One non-degenerate loop: dimension and trip count (> 1).
+pub type LoopIter = (Dim, u64);
+
+/// Maximum loops a boundary can see: 7 dims × up to 6 levels. Fixed-size
+/// storage keeps the evaluator allocation-free (perf pass iteration 1 —
+/// see EXPERIMENTS.md §Perf).
+const MAX_LOOPS: usize = 42;
+
+/// A fixed-capacity, stack-allocated loop list (inner→outer order).
+#[derive(Debug, Clone, Copy)]
+pub struct LoopList {
+    items: [LoopIter; MAX_LOOPS],
+    len: usize,
+}
+
+impl LoopList {
+    fn new() -> Self {
+        Self { items: [(Dim::N, 1); MAX_LOOPS], len: 0 }
+    }
+
+    fn push(&mut self, item: LoopIter) {
+        assert!(self.len < MAX_LOOPS, "loop list overflow");
+        self.items[self.len] = item;
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn iter(&self) -> std::slice::Iter<'_, LoopIter> {
+        self.items[..self.len].iter()
+    }
+}
+
+impl std::ops::Deref for LoopList {
+    type Target = [LoopIter];
+
+    fn deref(&self) -> &[LoopIter] {
+        &self.items[..self.len]
+    }
+}
+
+/// The ordered list of non-degenerate temporal loops **above** the child
+/// tiles of boundary `l` (i.e. loops at levels `l..top`), innermost first.
+/// Within each level the mapping's permutation gives the order; levels
+/// stack inner→outer. Trip-1 loops are transparent and dropped.
+pub fn loop_list_above(_layer: &ConvLayer, mapping: &Mapping, l: usize) -> LoopList {
+    let mut out = LoopList::new();
+    for level in l..mapping.n_levels() {
+        for (d, f) in mapping.loops(level) {
+            if f > 1 {
+                out.push((d, f));
+            }
+        }
+    }
+    out
+}
+
+/// Number of times a child tile of tensor `t` is (re)fetched given the
+/// loops above it: skip the leading (innermost) contiguous run of
+/// `t`-irrelevant loops — the tile is stationary across those — then
+/// multiply every remaining trip count, relevant or not.
+pub fn fetch_rounds(layer: &ConvLayer, t: Tensor, loops: &[LoopIter]) -> u64 {
+    let mut rounds = 1u64;
+    let mut seen_relevant = false;
+    for &(d, trip) in loops {
+        if !seen_relevant {
+            if t.relevant_for(layer, d) {
+                seen_relevant = true;
+            } else {
+                continue; // stationary across this loop
+            }
+        }
+        rounds = rounds.saturating_mul(trip);
+    }
+    rounds
+}
+
+/// Number of *distinct* child tiles of tensor `t` enumerated by the loops
+/// above it: product of the `t`-relevant trip counts only. For outputs this
+/// is the `U` of the `V − U` psum read-back rule.
+pub fn distinct_tiles(layer: &ConvLayer, t: Tensor, loops: &[LoopIter]) -> u64 {
+    loops
+        .iter()
+        .filter(|&&(d, _)| t.relevant_for(layer, d))
+        .map(|&(_, trip)| trip)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::mapping::Mapping;
+    use crate::workload::ConvLayer;
+
+    fn layer() -> ConvLayer {
+        ConvLayer::new("t", 4, 4, 3, 3, 8, 8)
+    }
+
+    #[test]
+    fn loop_list_drops_degenerate_and_orders_inner_first() {
+        let l = layer();
+        let mut m = Mapping::trivial(&l, 3);
+        // Move C to level 1, keep the rest at level 2.
+        m.temporal[2][Dim::C.idx()] = 1;
+        m.temporal[1][Dim::C.idx()] = 4;
+        let loops = loop_list_above(&l, &m, 1);
+        // Level-1 loops come first (C), then level-2 loops in canonical
+        // order (M, R, S, P, Q — N is degenerate).
+        assert_eq!(loops[0], (Dim::C, 4));
+        assert_eq!(loops[1], (Dim::M, 4));
+        assert_eq!(loops.len(), 6);
+    }
+
+    #[test]
+    fn stationarity_skips_leading_irrelevant_only() {
+        let l = layer();
+        // Loops inner→outer: P(8) then M(4). Weights: P irrelevant →
+        // stationary across it; M relevant → 4 rounds.
+        let loops = vec![(Dim::P, 8), (Dim::M, 4)];
+        assert_eq!(fetch_rounds(&l, Tensor::Weight, &loops), 4);
+        // Flip the order: M inner → no stationarity, 32 rounds.
+        let loops = vec![(Dim::M, 4), (Dim::P, 8)];
+        assert_eq!(fetch_rounds(&l, Tensor::Weight, &loops), 32);
+    }
+
+    #[test]
+    fn irrelevant_above_relevant_counts() {
+        let l = layer();
+        // Q(inner, irrelevant to W) M C P(outer, irrelevant): skip Q only.
+        let loops = vec![(Dim::Q, 2), (Dim::M, 4), (Dim::C, 4), (Dim::P, 8)];
+        assert_eq!(fetch_rounds(&l, Tensor::Weight, &loops), 4 * 4 * 8);
+        assert_eq!(distinct_tiles(&l, Tensor::Weight, &loops), 16);
+    }
+
+    #[test]
+    fn empty_list_means_one_round() {
+        let l = layer();
+        assert_eq!(fetch_rounds(&l, Tensor::Weight, &[]), 1);
+        assert_eq!(distinct_tiles(&l, Tensor::Output, &[]), 1);
+    }
+
+    #[test]
+    fn input_sliding_window_relevance() {
+        let l = layer();
+        // R is relevant to Input via the halo.
+        let loops = vec![(Dim::R, 3)];
+        assert_eq!(fetch_rounds(&l, Tensor::Input, &loops), 3);
+        // M is not.
+        let loops = vec![(Dim::M, 4)];
+        assert_eq!(fetch_rounds(&l, Tensor::Input, &loops), 1);
+    }
+
+    #[test]
+    fn depthwise_m_relevant_to_input() {
+        let dl = ConvLayer::new("dw", 8, 8, 3, 3, 8, 8).depthwise();
+        let loops = vec![(Dim::M, 8)];
+        assert_eq!(fetch_rounds(&dl, Tensor::Input, &loops), 8);
+    }
+
+    #[test]
+    fn v_geq_u_invariant() {
+        let l = layer();
+        let loops = vec![(Dim::C, 4), (Dim::M, 4), (Dim::R, 3), (Dim::P, 8)];
+        let v = fetch_rounds(&l, Tensor::Output, &loops);
+        let u = distinct_tiles(&l, Tensor::Output, &loops);
+        assert!(v >= u);
+        assert_eq!(u, 4 * 8); // M·P
+        // C (innermost) is irrelevant to Output → stationary; then M·R·P.
+        assert_eq!(v, 4 * 3 * 8);
+    }
+}

@@ -1,0 +1,355 @@
+//! PJRT runtime — loads AOT-compiled JAX/Pallas artifacts (HLO text,
+//! produced once by `python/compile/aot.py`) and executes them from the
+//! request path. Python never runs here.
+//!
+//! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos with
+//! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §5).
+
+use crate::util::yaml::{self, Value};
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// A PJRT CPU runtime holding compiled executables by name.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    kernels: BTreeMap<String, CompiledKernel>,
+}
+
+/// One compiled artifact plus its manifest metadata.
+pub struct CompiledKernel {
+    exe: xla::PjRtLoadedExecutable,
+    pub name: String,
+    /// Input shapes (row-major dims) in argument order.
+    pub input_shapes: Vec<Vec<i64>>,
+    /// Output shape (single-array output inside a 1-tuple).
+    pub output_shape: Vec<i64>,
+}
+
+/// Manifest entry describing one artifact (written by aot.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    pub name: String,
+    pub file: String,
+    pub input_shapes: Vec<Vec<i64>>,
+    pub output_shape: Vec<i64>,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client.
+    pub fn cpu() -> Result<Self> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, kernels: BTreeMap::new() })
+    }
+
+    /// PJRT platform string (e.g. "cpu").
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO-text artifact under the given name.
+    pub fn load_hlo_text(
+        &mut self,
+        name: &str,
+        path: &Path,
+        input_shapes: Vec<Vec<i64>>,
+        output_shape: Vec<i64>,
+    ) -> Result<()> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", path.display()))?;
+        self.kernels.insert(
+            name.to_string(),
+            CompiledKernel { exe, name: name.to_string(), input_shapes, output_shape },
+        );
+        Ok(())
+    }
+
+    /// Load every artifact listed in `<dir>/manifest.yaml`.
+    pub fn load_manifest_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+        let entries = read_manifest(&dir.join("manifest.yaml"))?;
+        let mut names = Vec::new();
+        for e in entries {
+            self.load_hlo_text(&e.name, &dir.join(&e.file), e.input_shapes, e.output_shape)?;
+            names.push(e.name);
+        }
+        Ok(names)
+    }
+
+    /// Access a loaded kernel.
+    pub fn kernel(&self, name: &str) -> Result<&CompiledKernel> {
+        self.kernels
+            .get(name)
+            .ok_or_else(|| anyhow!("kernel '{name}' not loaded (have: {:?})", self.kernel_names()))
+    }
+
+    pub fn kernel_names(&self) -> Vec<&str> {
+        self.kernels.keys().map(|s| s.as_str()).collect()
+    }
+}
+
+impl CompiledKernel {
+    /// Execute with f32 inputs (shape-checked against the manifest) and
+    /// return the flattened f32 output.
+    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+        if inputs.len() != self.input_shapes.len() {
+            bail!(
+                "kernel {}: got {} inputs, expected {}",
+                self.name,
+                inputs.len(),
+                self.input_shapes.len()
+            );
+        }
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+            let expect: i64 = shape.iter().product();
+            if data.len() as i64 != expect {
+                bail!(
+                    "kernel {}: input {i} has {} elements, shape {shape:?} needs {expect}",
+                    self.name,
+                    data.len()
+                );
+            }
+            literals.push(xla::Literal::vec1(data).reshape(shape)?);
+        }
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → single-element tuple.
+        let out = result.to_tuple1()?;
+        let v = out.to_vec::<f32>()?;
+        let expect: i64 = self.output_shape.iter().product();
+        if v.len() as i64 != expect {
+            bail!("kernel {}: output has {} elements, expected {expect}", self.name, v.len());
+        }
+        Ok(v)
+    }
+
+    /// Output element count.
+    pub fn output_len(&self) -> usize {
+        self.output_shape.iter().product::<i64>() as usize
+    }
+}
+
+/// Parse an artifacts manifest (see `python/compile/aot.py`):
+///
+/// ```yaml
+/// artifacts:
+///   - name: conv_small
+///     file: conv_small.hlo.txt
+///     inputs:
+///       - [1, 8, 16, 16]    # NCHW input
+///       - [16, 8, 3, 3]     # MCRS weights
+///     output: [1, 16, 14, 14]
+/// ```
+pub fn read_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
+    let src = std::fs::read_to_string(path)
+        .with_context(|| format!("reading manifest {}", path.display()))?;
+    let doc = yaml::parse(&src).map_err(|e| anyhow!("{e}"))?;
+    let list = doc
+        .get("artifacts")
+        .and_then(Value::as_list)
+        .ok_or_else(|| anyhow!("manifest missing 'artifacts' list"))?;
+    let shape = |v: &Value| -> Result<Vec<i64>> {
+        v.as_list()
+            .ok_or_else(|| anyhow!("shape must be a list"))?
+            .iter()
+            .map(|x| x.as_u64().map(|u| u as i64).ok_or_else(|| anyhow!("bad shape element")))
+            .collect()
+    };
+    let mut out = Vec::new();
+    for e in list {
+        let name = e
+            .get("name")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("manifest entry missing name"))?
+            .to_string();
+        let file = e
+            .get("file")
+            .and_then(Value::as_str)
+            .ok_or_else(|| anyhow!("manifest entry {name} missing file"))?
+            .to_string();
+        let input_shapes = e
+            .get("inputs")
+            .and_then(Value::as_list)
+            .ok_or_else(|| anyhow!("manifest entry {name} missing inputs"))?
+            .iter()
+            .map(shape)
+            .collect::<Result<Vec<_>>>()?;
+        let output_shape = shape(
+            e.get("output").ok_or_else(|| anyhow!("manifest entry {name} missing output"))?,
+        )?;
+        out.push(ManifestEntry { name, file, input_shapes, output_shape });
+    }
+    Ok(out)
+}
+
+/// Default artifacts directory: `$LOCAL_MAPPER_ARTIFACTS` or `artifacts/`
+/// next to the current working directory.
+pub fn default_artifacts_dir() -> PathBuf {
+    std::env::var_os("LOCAL_MAPPER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// Reference convolution on the host (NCHW / MCRS, stride, no padding) —
+/// the oracle the runtime's outputs are checked against in tests and the
+/// end-to-end example.
+#[allow(clippy::too_many_arguments)]
+pub fn reference_conv(
+    input: &[f32],
+    weights: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    m: usize,
+    r: usize,
+    s: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let p = (h - r) / stride + 1;
+    let q = (w - s) / stride + 1;
+    let mut out = vec![0f32; n * m * p * q];
+    for bn in 0..n {
+        for om in 0..m {
+            for op in 0..p {
+                for oq in 0..q {
+                    let mut acc = 0f32;
+                    for ic in 0..c {
+                        for kr in 0..r {
+                            for ks in 0..s {
+                                let ih = op * stride + kr;
+                                let iw = oq * stride + ks;
+                                let iv = input[((bn * c + ic) * h + ih) * w + iw];
+                                let wv = weights[((om * c + ic) * r + kr) * s + ks];
+                                acc += iv * wv;
+                            }
+                        }
+                    }
+                    out[((bn * m + om) * p + op) * q + oq] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Reference depthwise convolution (NCHW input, (C,R,S) weights, stride,
+/// no padding) — oracle for the `dw_mobilenet` artifact.
+pub fn reference_depthwise(
+    input: &[f32],
+    weights: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    r: usize,
+    s: usize,
+    stride: usize,
+) -> Vec<f32> {
+    let p = (h - r) / stride + 1;
+    let q = (w - s) / stride + 1;
+    let mut out = vec![0f32; n * c * p * q];
+    for bn in 0..n {
+        for ch in 0..c {
+            for op in 0..p {
+                for oq in 0..q {
+                    let mut acc = 0f32;
+                    for kr in 0..r {
+                        for ks in 0..s {
+                            let iv = input[((bn * c + ch) * h + op * stride + kr) * w
+                                + oq * stride
+                                + ks];
+                            let wv = weights[(ch * r + kr) * s + ks];
+                            acc += iv * wv;
+                        }
+                    }
+                    out[((bn * c + ch) * p + op) * q + oq] = acc;
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn reference_depthwise_identity() {
+        let input: Vec<f32> = (0..2 * 9).map(|x| x as f32).collect();
+        let out = reference_depthwise(&input, &[1.0, 1.0], 1, 2, 3, 3, 1, 1, 1);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn reference_depthwise_per_channel_weights() {
+        // Channel 0 scaled by 2, channel 1 by 3 (1×1 stencil).
+        let input = vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
+        let out = reference_depthwise(&input, &[2.0, 3.0], 1, 2, 2, 2, 1, 1, 1);
+        assert_eq!(out, vec![2.0, 2.0, 2.0, 2.0, 6.0, 6.0, 6.0, 6.0]);
+    }
+
+    #[test]
+    fn manifest_parses() {
+        let dir = std::env::temp_dir().join("lm_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.yaml");
+        std::fs::write(
+            &path,
+            "artifacts:\n  - name: k\n    file: k.hlo.txt\n    inputs:\n      - [1, 2]\n      - [2, 3]\n    output: [1, 3]\n",
+        )
+        .unwrap();
+        let m = read_manifest(&path).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].name, "k");
+        assert_eq!(m[0].input_shapes, vec![vec![1, 2], vec![2, 3]]);
+        assert_eq!(m[0].output_shape, vec![1, 3]);
+    }
+
+    #[test]
+    fn manifest_missing_fields_error() {
+        let dir = std::env::temp_dir().join("lm_manifest_test2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("manifest.yaml");
+        std::fs::write(&path, "artifacts:\n  - name: k\n").unwrap();
+        assert!(read_manifest(&path).is_err());
+    }
+
+    #[test]
+    fn reference_conv_identity_kernel() {
+        // 1×1 kernel with weight 1 is the identity.
+        let input: Vec<f32> = (0..9).map(|x| x as f32).collect();
+        let out = reference_conv(&input, &[1.0], 1, 1, 3, 3, 1, 1, 1, 1);
+        assert_eq!(out, input);
+    }
+
+    #[test]
+    fn reference_conv_known_values() {
+        // 2×2 input, 2×2 all-ones kernel → sum of all elements.
+        let input = vec![1.0, 2.0, 3.0, 4.0];
+        let out = reference_conv(&input, &[1.0; 4], 1, 1, 2, 2, 1, 2, 2, 1);
+        assert_eq!(out, vec![10.0]);
+    }
+
+    #[test]
+    fn reference_conv_stride() {
+        let input: Vec<f32> = (0..16).map(|x| x as f32).collect();
+        // 4×4 input, 2×2 ones kernel, stride 2 → 2×2 output of block sums.
+        let out = reference_conv(&input, &[1.0; 4], 1, 1, 4, 4, 1, 2, 2, 2);
+        assert_eq!(out, vec![10.0, 18.0, 42.0, 50.0]);
+    }
+
+    #[test]
+    fn reference_conv_multi_channel() {
+        // C=2: second channel doubles, weights sum both.
+        let input = vec![1.0, 1.0, 1.0, 1.0, 2.0, 2.0, 2.0, 2.0];
+        let out = reference_conv(&input, &[1.0, 1.0], 1, 2, 2, 2, 1, 1, 1, 1);
+        assert_eq!(out, vec![3.0; 4]);
+    }
+}

@@ -1,0 +1,237 @@
+//! Tile-pipeline latency simulator.
+//!
+//! The analytical model's latency is a pure roofline
+//! (`max(compute, per-level bandwidth)`); this module refines it by walking
+//! the mapped loop nest level by level and simulating the **tile
+//! pipeline**: at every storage boundary, child-tile fetches either
+//! serialize with the child's own execution (single-buffered) or overlap
+//! with it (double-buffered, the ping-pong buffers every real accelerator
+//! uses — Eyeriss's GLB, NVDLA's CBUF banks).
+//!
+//! The recursion: a level-`l` tile is executed by `n` child-tile rounds;
+//! each round needs `fetch` cycles of transfer from level `l` and `child`
+//! cycles of execution below.
+//!
+//! * single-buffered: `n · (fetch + child)`
+//! * double-buffered: `fetch + n·max(fetch, child)` (first fill exposed,
+//!   then steady-state overlap)
+//!
+//! The simulator reports per-level busy/stall cycles and the bottleneck
+//! level — the profile the §Perf pass reads. Used by the `latency_sim`
+//! ablation bench to quantify what double buffering buys each mapping
+//! (and to check the analytical roofline is a lower bound).
+
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::model::{evaluate_unchecked, Evaluation};
+use crate::workload::{ConvLayer, Tensor};
+
+/// Simulation options.
+#[derive(Debug, Clone, Copy)]
+pub struct SimOptions {
+    /// Ping-pong (double) buffering at every bounded level.
+    pub double_buffer: bool,
+    /// Spatial PEs compute in lockstep (true) or ideally overlapped.
+    pub lockstep_pes: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        Self { double_buffer: true, lockstep_pes: true }
+    }
+}
+
+/// Per-level simulation profile.
+#[derive(Debug, Clone, Default)]
+pub struct LevelProfile {
+    /// Cycles this level spent transferring data downward.
+    pub transfer_cycles: u64,
+    /// Cycles the level's consumers were stalled waiting on it.
+    pub stall_cycles: u64,
+    /// Child rounds executed.
+    pub rounds: u64,
+}
+
+/// Simulation result.
+#[derive(Debug, Clone)]
+pub struct SimResult {
+    /// End-to-end cycles for the full layer.
+    pub total_cycles: u64,
+    /// Pure compute cycles (all PEs busy, no stalls).
+    pub compute_cycles: u64,
+    /// Per-level profiles, aligned with `Accelerator::levels`
+    /// (level 0 entry describes the RF→datapath boundary).
+    pub levels: Vec<LevelProfile>,
+    /// Index of the level whose transfers dominate stalls.
+    pub bottleneck_level: usize,
+    /// total / compute — 1.0 means perfectly compute-bound.
+    pub slowdown: f64,
+}
+
+impl SimResult {
+    /// Effective MACs/cycle across the array.
+    pub fn macs_per_cycle(&self, macs: u64) -> f64 {
+        macs as f64 / self.total_cycles.max(1) as f64
+    }
+}
+
+/// Simulate the tile pipeline of a validated mapping.
+///
+/// Transfer volumes come from the same access-count analysis the energy
+/// model uses (so the two views are consistent by construction); timing
+/// composes them through the buffered-pipeline recursion above.
+pub fn simulate(
+    layer: &ConvLayer,
+    acc: &Accelerator,
+    mapping: &Mapping,
+    opts: SimOptions,
+) -> SimResult {
+    let eval = evaluate_unchecked(layer, acc, mapping);
+    simulate_from_eval(layer, acc, mapping, &eval, opts)
+}
+
+/// Simulate re-using an existing evaluation (hot path for ablations).
+pub fn simulate_from_eval(
+    layer: &ConvLayer,
+    _acc: &Accelerator,
+    mapping: &Mapping,
+    eval: &Evaluation,
+    opts: SimOptions,
+) -> SimResult {
+    let n_levels = mapping.n_levels();
+    let mut profiles = vec![LevelProfile::default(); n_levels];
+
+    // Per-PE compute cycles for one L0 tile residency: the innermost
+    // temporal loops (level 0 factors) all run per fetch round.
+    let tile0_iters: u64 = mapping.temporal[0].iter().product();
+    let active = eval.active_pes.max(1);
+    // Total per-PE iterations = all temporal loops.
+    let per_pe_total: u64 = mapping.temporal.iter().flatten().product();
+    let compute_cycles = if opts.lockstep_pes {
+        per_pe_total
+    } else {
+        // Ideal overlap: aggregate MACs over all PEs.
+        (eval.macs + active - 1) / active
+    };
+
+    // Rounds at each boundary: how many times level l delivers a full
+    // child working set. Derive from the max fetch rounds across tensors
+    // (the binding transfer schedule).
+    let mut rounds = vec![1u64; n_levels];
+    for l in 1..n_levels {
+        let loops = crate::model::loop_list_above(layer, mapping, l);
+        rounds[l] = Tensor::ALL
+            .iter()
+            .map(|&t| crate::model::fetch_rounds(layer, t, &loops))
+            .max()
+            .unwrap_or(1);
+    }
+
+    // Words level l moves per round (reads it serves + writes it accepts
+    // from below).
+    let mut words_per_round = vec![0u64; n_levels];
+    for l in 1..n_levels {
+        let total: u64 = (0..3)
+            .map(|ti| eval.access[l][ti].reads + eval.access[l][ti].writes)
+            .sum::<u64>()
+            // Datapath RF traffic is not a boundary transfer.
+            .saturating_sub(if l == 0 { eval.macs * 4 } else { 0 });
+        words_per_round[l] = total / rounds[l].max(1);
+    }
+
+    // Bottom-up pipeline composition.
+    // child_time = cycles to execute everything below boundary l, per
+    // level-(l-1) residency.
+    let mut child_time = if tile0_iters == 0 { 1 } else { tile0_iters };
+    let mut total = child_time;
+    for l in 1..n_levels {
+        let bw = _acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE);
+        let fetch = (words_per_round[l] as f64 / bw).ceil() as u64;
+        let n = (rounds[l].max(1)) / rounds.get(l + 1).copied().unwrap_or(1).max(1);
+        let n = n.max(1);
+        let level_total = if opts.double_buffer {
+            fetch + n * child_time.max(fetch)
+        } else {
+            n * (fetch + child_time)
+        };
+        profiles[l].transfer_cycles = fetch * n;
+        profiles[l].stall_cycles = level_total.saturating_sub(n * child_time);
+        profiles[l].rounds = n;
+        child_time = level_total;
+        total = level_total;
+    }
+
+    let bottleneck_level = (0..n_levels)
+        .max_by_key(|&l| profiles[l].stall_cycles)
+        .unwrap_or(0);
+    let slowdown = total as f64 / compute_cycles.max(1) as f64;
+    SimResult {
+        total_cycles: total.max(compute_cycles),
+        compute_cycles,
+        levels: profiles,
+        bottleneck_level,
+        slowdown: slowdown.max(1.0),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::{LocalMapper, Mapper};
+    use crate::workload::zoo;
+
+    fn setup() -> (ConvLayer, Accelerator, Mapping) {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        (layer, acc, m)
+    }
+
+    #[test]
+    fn double_buffering_never_slower() {
+        let (layer, acc, m) = setup();
+        let db = simulate(&layer, &acc, &m, SimOptions { double_buffer: true, lockstep_pes: true });
+        let sb = simulate(&layer, &acc, &m, SimOptions { double_buffer: false, lockstep_pes: true });
+        assert!(db.total_cycles <= sb.total_cycles, "{} > {}", db.total_cycles, sb.total_cycles);
+    }
+
+    #[test]
+    fn simulated_latency_at_least_compute_bound() {
+        let (layer, acc, m) = setup();
+        let r = simulate(&layer, &acc, &m, SimOptions::default());
+        assert!(r.total_cycles >= r.compute_cycles);
+        assert!(r.slowdown >= 1.0);
+    }
+
+    #[test]
+    fn profiles_cover_all_levels() {
+        let (layer, acc, m) = setup();
+        let r = simulate(&layer, &acc, &m, SimOptions::default());
+        assert_eq!(r.levels.len(), acc.n_levels());
+        assert!(r.bottleneck_level < acc.n_levels());
+        // Boundary levels performed transfers.
+        assert!(r.levels[1].transfer_cycles > 0);
+        assert!(r.levels[2].transfer_cycles > 0);
+    }
+
+    #[test]
+    fn starved_bandwidth_shows_up_as_stalls() {
+        let (layer, mut acc, m) = setup();
+        acc.levels[2].bandwidth_words_per_cycle = 0.01;
+        let r = simulate(&layer, &acc, &m, SimOptions::default());
+        assert_eq!(r.bottleneck_level, 2);
+        assert!(r.slowdown > 2.0, "slowdown {}", r.slowdown);
+    }
+
+    #[test]
+    fn works_on_all_presets_and_categories() {
+        for acc in presets::all() {
+            for row in zoo::table2_workloads() {
+                let m = LocalMapper::new().map(&row.layer, &acc).unwrap();
+                let r = simulate(&row.layer, &acc, &m, SimOptions::default());
+                assert!(r.total_cycles > 0, "{} on {}", row.layer.name, acc.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,85 @@
+//! Micro-bench timing (criterion is not in the offline crate set).
+//!
+//! `cargo bench` targets use [`Timed`] for warmup + median-of-N timing and
+//! print paper-style tables; mapping-time measurements in the Table-3 bench
+//! use wall-clock [`std::time::Instant`] directly since the measured unit is
+//! an entire search, not a micro-op.
+
+use std::time::{Duration, Instant};
+
+/// Result of a timed run: median, min, max over the measured iterations.
+#[derive(Debug, Clone, Copy)]
+pub struct Timed {
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    pub iters: usize,
+}
+
+impl Timed {
+    /// Median nanoseconds as f64 (for rate computations).
+    pub fn median_ns(&self) -> f64 {
+        self.median.as_nanos() as f64
+    }
+}
+
+/// Run `f` for `warmup` unmeasured iterations then `iters` measured ones and
+/// report median/min/max. `f` should return something observable to keep the
+/// optimizer honest; the return value is black-boxed here.
+pub fn median_time<T>(warmup: usize, iters: usize, mut f: impl FnMut() -> T) -> Timed {
+    assert!(iters > 0);
+    for _ in 0..warmup {
+        black_box(f());
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        black_box(f());
+        samples.push(t0.elapsed());
+    }
+    samples.sort_unstable();
+    Timed {
+        median: samples[samples.len() / 2],
+        min: samples[0],
+        max: samples[samples.len() - 1],
+        iters,
+    }
+}
+
+/// Optimizer barrier (std::hint::black_box is stable since 1.66).
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+/// Human-format a duration: ns/µs/ms/s with 3 significant digits.
+pub fn fmt_duration(d: Duration) -> String {
+    let ns = d.as_nanos() as f64;
+    if ns < 1e3 {
+        format!("{ns:.0}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.2}s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn median_time_reports_all_fields() {
+        let t = median_time(2, 5, || (0..100u64).sum::<u64>());
+        assert_eq!(t.iters, 5);
+        assert!(t.min <= t.median && t.median <= t.max);
+    }
+
+    #[test]
+    fn fmt_duration_units() {
+        assert_eq!(fmt_duration(Duration::from_nanos(500)), "500ns");
+        assert_eq!(fmt_duration(Duration::from_micros(1500)), "1.50ms");
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.00s");
+    }
+}

@@ -1,0 +1,109 @@
+//! Minimal CLI argument parsing (clap is not in the offline crate set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args —
+//! enough for the `local-mapper` subcommands and the example binaries.
+
+use std::collections::BTreeMap;
+
+/// Parsed arguments: subcommand-style positionals plus `--key value` options.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: BTreeMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an explicit iterator (tests) — `argv[0]` must already be
+    /// stripped.
+    pub fn parse_from<I: IntoIterator<Item = String>>(argv: I) -> Self {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse_from(std::env::args().skip(1))
+    }
+
+    /// First positional (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+
+    /// String option value.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// String option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Parsed numeric option with default; exits with a message on a
+    /// malformed value (CLI surface, not library surface).
+    pub fn get_num<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.get(key) {
+            None => default,
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("error: --{key} expects a number, got '{v}'");
+                std::process::exit(2);
+            }),
+        }
+    }
+
+    /// Boolean flag (`--verbose`).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse_from(s.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn positional_and_options() {
+        let a = parse(&["table3", "--arch", "eyeriss", "--trials=5", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("table3"));
+        assert_eq!(a.get("arch"), Some("eyeriss"));
+        assert_eq!(a.get_num::<u32>("trials", 0), 5);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&[]);
+        assert_eq!(a.subcommand(), None);
+        assert_eq!(a.get_or("arch", "eyeriss"), "eyeriss");
+        assert_eq!(a.get_num::<u64>("seed", 42), 42);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse(&["--a", "--b", "x"]);
+        assert!(a.flag("a"));
+        assert_eq!(a.get("b"), Some("x"));
+    }
+}

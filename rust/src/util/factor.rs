@@ -1,0 +1,173 @@
+//! Integer factorization helpers for map-space construction.
+//!
+//! A mapping splits each problem dimension `d` into per-level tile factors
+//! whose product covers `d`. Enumerating those splits is the core of the
+//! map-space (`mapspace` module); the arithmetic lives here.
+
+/// All divisors of `n`, ascending. `divisors(12) == [1,2,3,4,6,12]`.
+pub fn divisors(n: u64) -> Vec<u64> {
+    assert!(n > 0, "divisors(0)");
+    let mut lo = Vec::new();
+    let mut hi = Vec::new();
+    let mut i = 1;
+    while i * i <= n {
+        if n % i == 0 {
+            lo.push(i);
+            if i != n / i {
+                hi.push(n / i);
+            }
+        }
+        i += 1;
+    }
+    hi.reverse();
+    lo.extend(hi);
+    lo
+}
+
+/// All ordered splits of `n` into exactly `k` factors (each ≥ 1) whose
+/// product is exactly `n`. `factorizations(4, 2) == [[1,4],[2,2],[4,1]]`.
+///
+/// The count grows as the number of ordered factorizations — fine for DNN
+/// layer dims (≤ a few hundred) and small `k` (≤ 4 levels).
+pub fn factorizations(n: u64, k: usize) -> Vec<Vec<u64>> {
+    assert!(k >= 1);
+    if k == 1 {
+        return vec![vec![n]];
+    }
+    let mut out = Vec::new();
+    for d in divisors(n) {
+        for mut rest in factorizations(n / d, k - 1) {
+            let mut v = Vec::with_capacity(k);
+            v.push(d);
+            v.append(&mut rest);
+            out.push(v);
+        }
+    }
+    out
+}
+
+/// Number of ordered splits of `n` into `k` factors without materializing
+/// them (used for map-space size accounting, paper §3).
+pub fn count_factorizations(n: u64, k: usize) -> u64 {
+    if k == 1 {
+        return 1;
+    }
+    divisors(n)
+        .into_iter()
+        .map(|d| count_factorizations(n / d, k - 1))
+        .sum()
+}
+
+thread_local! {
+    static DIVISOR_CACHE: std::cell::RefCell<std::collections::HashMap<u64, Vec<u64>>> =
+        std::cell::RefCell::new(std::collections::HashMap::new());
+}
+
+/// Memoized [`divisors`]: runs `f` over the cached divisor list of `n`.
+/// Layer dims repeat millions of times across search candidates, so the
+/// samplers use this (perf pass iteration 2 — EXPERIMENTS.md §Perf).
+pub fn with_divisors<R>(n: u64, f: impl FnOnce(&[u64]) -> R) -> R {
+    DIVISOR_CACHE.with(|cache| {
+        let mut cache = cache.borrow_mut();
+        let d = cache.entry(n).or_insert_with(|| divisors(n));
+        f(d)
+    })
+}
+
+/// Greedy split of `n` into `(inner, outer)` with `inner` the largest
+/// divisor of `n` that is ≤ `cap`, and `outer = n / inner`. Used by the
+/// LOCAL assignment phase: give the lower level the biggest range that fits.
+pub fn factor_splits(n: u64, cap: u64) -> (u64, u64) {
+    assert!(n > 0);
+    if cap == 0 {
+        return (1, n);
+    }
+    let mut best = 1;
+    for d in divisors(n) {
+        if d <= cap && d > best {
+            best = d;
+        }
+    }
+    (best, n / best)
+}
+
+/// Ceiling division.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    (a + b - 1) / b
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn divisors_basic() {
+        assert_eq!(divisors(1), vec![1]);
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(13), vec![1, 13]);
+        assert_eq!(divisors(36), vec![1, 2, 3, 4, 6, 9, 12, 18, 36]);
+    }
+
+    #[test]
+    fn factorizations_product_invariant() {
+        for n in [1u64, 2, 6, 12, 56, 128] {
+            for k in 1..=3 {
+                let fs = factorizations(n, k);
+                assert!(!fs.is_empty());
+                for f in &fs {
+                    assert_eq!(f.len(), k);
+                    assert_eq!(f.iter().product::<u64>(), n, "n={n} k={k} f={f:?}");
+                }
+                // No duplicates.
+                let mut sorted = fs.clone();
+                sorted.sort();
+                sorted.dedup();
+                assert_eq!(sorted.len(), fs.len());
+            }
+        }
+    }
+
+    #[test]
+    fn factorizations_counts_match() {
+        for n in [1u64, 4, 12, 56, 224] {
+            for k in 1..=4 {
+                assert_eq!(
+                    count_factorizations(n, k),
+                    factorizations(n, k).len() as u64,
+                    "n={n} k={k}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn factorizations_k2_example() {
+        assert_eq!(factorizations(4, 2), vec![vec![1, 4], vec![2, 2], vec![4, 1]]);
+    }
+
+    #[test]
+    fn factor_splits_greedy() {
+        assert_eq!(factor_splits(56, 8), (8, 7));
+        assert_eq!(factor_splits(56, 9), (8, 7)); // largest divisor ≤ 9 is 8
+        assert_eq!(factor_splits(56, 56), (56, 1));
+        assert_eq!(factor_splits(13, 4), (1, 13)); // prime, nothing fits
+        assert_eq!(factor_splits(12, 0), (1, 12));
+    }
+
+    #[test]
+    fn with_divisors_matches_direct() {
+        for n in [1u64, 12, 56, 224, 512] {
+            with_divisors(n, |d| assert_eq!(d, divisors(n).as_slice()));
+            // Second call hits the cache and must agree.
+            with_divisors(n, |d| assert_eq!(d, divisors(n).as_slice()));
+        }
+    }
+
+    #[test]
+    fn ceil_div_basic() {
+        assert_eq!(ceil_div(10, 3), 4);
+        assert_eq!(ceil_div(9, 3), 3);
+        assert_eq!(ceil_div(1, 5), 1);
+    }
+}

@@ -1,0 +1,17 @@
+//! Shared utilities: deterministic PRNG, integer factorization, CLI arg
+//! parsing, ASCII table rendering and micro-bench timing.
+//!
+//! The offline crate set has no `rand`, `clap` or `criterion`; these small
+//! hand-rolled equivalents keep the rest of the crate dependency-free.
+
+pub mod bench;
+pub mod cli;
+pub mod factor;
+pub mod rng;
+pub mod table;
+pub mod yaml;
+
+pub use bench::{median_time, Timed};
+pub use factor::{divisors, factor_splits, factorizations};
+pub use rng::SplitMix64;
+pub use table::Table;

@@ -1,0 +1,279 @@
+//! A minimal YAML-subset parser for accelerator/workload config files.
+//!
+//! serde/serde_yaml are not in the offline crate set; this covers the subset
+//! Timeloop-style configs need: nested maps by 2-space indentation, block
+//! lists (`- item` / `- key: value`), inline lists (`[a, b]`), scalar
+//! strings/numbers/bools, `#` comments and blank lines.
+//!
+//! It is deliberately strict: tabs are rejected, duplicate keys are errors,
+//! and indentation must be consistent — config typos should fail loudly at
+//! compile time (of the network), not silently mis-map a layer.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed YAML value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    List(Vec<Value>),
+    Map(BTreeMap<String, Value>),
+}
+
+/// Parse error with 1-based line information.
+#[derive(Debug, Clone, PartialEq)]
+pub struct YamlError {
+    pub line: usize,
+    pub msg: String,
+}
+
+impl fmt::Display for YamlError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "yaml error at line {}: {}", self.line, self.msg)
+    }
+}
+
+impl std::error::Error for YamlError {}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_str().and_then(|s| s.replace('_', "").parse().ok())
+    }
+
+    pub fn as_f64(&self) -> Option<f64> {
+        self.as_str().and_then(|s| s.parse().ok())
+    }
+
+    pub fn as_bool(&self) -> Option<bool> {
+        match self.as_str()? {
+            "true" | "yes" => Some(true),
+            "false" | "no" => Some(false),
+            _ => None,
+        }
+    }
+
+    pub fn as_list(&self) -> Option<&[Value]> {
+        match self {
+            Value::List(v) => Some(v),
+            _ => None,
+        }
+    }
+
+    pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {
+        match self {
+            Value::Map(m) => Some(m),
+            _ => None,
+        }
+    }
+
+    /// Map lookup.
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.as_map()?.get(key)
+    }
+}
+
+struct Line {
+    no: usize,
+    indent: usize,
+    text: String,
+}
+
+/// Parse a YAML-subset document into a [`Value`].
+pub fn parse(src: &str) -> Result<Value, YamlError> {
+    let mut lines = Vec::new();
+    for (i, raw) in src.lines().enumerate() {
+        let no = i + 1;
+        if raw.contains('\t') {
+            return Err(YamlError { line: no, msg: "tabs are not allowed".into() });
+        }
+        // Strip comments (naive: we never quote '#' in our configs).
+        let stripped = match raw.find('#') {
+            Some(p) => &raw[..p],
+            None => raw,
+        };
+        if stripped.trim().is_empty() {
+            continue;
+        }
+        let indent = stripped.len() - stripped.trim_start().len();
+        lines.push(Line { no, indent, text: stripped.trim().to_string() });
+    }
+    if lines.is_empty() {
+        return Ok(Value::Map(BTreeMap::new()));
+    }
+    let (v, consumed) = parse_block(&lines, 0, lines[0].indent)?;
+    if consumed != lines.len() {
+        return Err(YamlError {
+            line: lines[consumed].no,
+            msg: format!("unexpected dedent/content (indent {})", lines[consumed].indent),
+        });
+    }
+    Ok(v)
+}
+
+/// Parse a block starting at `pos` whose items share `indent`.
+fn parse_block(lines: &[Line], pos: usize, indent: usize) -> Result<(Value, usize), YamlError> {
+    if lines[pos].text.starts_with("- ") || lines[pos].text == "-" {
+        parse_list(lines, pos, indent)
+    } else {
+        parse_map(lines, pos, indent)
+    }
+}
+
+fn parse_map(lines: &[Line], mut pos: usize, indent: usize) -> Result<(Value, usize), YamlError> {
+    let mut map = BTreeMap::new();
+    while pos < lines.len() && lines[pos].indent == indent && !lines[pos].text.starts_with("- ") {
+        let line = &lines[pos];
+        let (key, rest) = line.text.split_once(':').ok_or(YamlError {
+            line: line.no,
+            msg: format!("expected 'key: value', got '{}'", line.text),
+        })?;
+        let key = key.trim().to_string();
+        if map.contains_key(&key) {
+            return Err(YamlError { line: line.no, msg: format!("duplicate key '{key}'") });
+        }
+        let rest = rest.trim();
+        if rest.is_empty() {
+            // Nested block follows at deeper indent.
+            pos += 1;
+            if pos < lines.len() && lines[pos].indent > indent {
+                let (v, next) = parse_block(lines, pos, lines[pos].indent)?;
+                map.insert(key, v);
+                pos = next;
+            } else {
+                map.insert(key, Value::Str(String::new()));
+            }
+        } else {
+            map.insert(key, parse_scalar(rest));
+            pos += 1;
+        }
+        if pos < lines.len() && lines[pos].indent > indent {
+            return Err(YamlError {
+                line: lines[pos].no,
+                msg: "unexpected indent (value already given on parent line?)".into(),
+            });
+        }
+    }
+    Ok((Value::Map(map), pos))
+}
+
+fn parse_list(lines: &[Line], mut pos: usize, indent: usize) -> Result<(Value, usize), YamlError> {
+    let mut items = Vec::new();
+    while pos < lines.len() && lines[pos].indent == indent && lines[pos].text.starts_with('-') {
+        let line = &lines[pos];
+        let body = line.text[1..].trim().to_string();
+        if body.is_empty() {
+            return Err(YamlError { line: line.no, msg: "empty list item".into() });
+        }
+        if body.contains(':') && !body.starts_with('[') {
+            // `- key: value` opens an inline map item that may continue at
+            // indent+2 on following lines.
+            let item_indent = indent + 2;
+            let synthetic = Line { no: line.no, indent: item_indent, text: body };
+            // Collect following lines that belong to this item.
+            let mut sub: Vec<&Line> = vec![&synthetic];
+            let mut next = pos + 1;
+            while next < lines.len() && lines[next].indent >= item_indent && !(lines[next].indent == indent) {
+                sub.push(&lines[next]);
+                next += 1;
+            }
+            let owned: Vec<Line> = sub
+                .iter()
+                .map(|l| Line { no: l.no, indent: l.indent, text: l.text.clone() })
+                .collect();
+            let (v, used) = parse_map(&owned, 0, item_indent)?;
+            if used != owned.len() {
+                return Err(YamlError { line: owned[used].no, msg: "bad indentation in list item".into() });
+            }
+            items.push(v);
+            pos = next;
+        } else {
+            items.push(parse_scalar(&body));
+            pos += 1;
+        }
+    }
+    Ok((Value::List(items), pos))
+}
+
+/// Scalars: inline lists `[a, b, c]` or plain strings (numbers stay strings
+/// until a typed accessor is called).
+fn parse_scalar(s: &str) -> Value {
+    let s = s.trim();
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let items = inner
+            .split(',')
+            .map(|p| Value::Str(p.trim().to_string()))
+            .filter(|v| v.as_str().map(|s| !s.is_empty()).unwrap_or(true))
+            .collect();
+        return Value::List(items);
+    }
+    Value::Str(s.trim_matches('"').to_string())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_map() {
+        let v = parse("a: 1\nb: hello\n").unwrap();
+        assert_eq!(v.get("a").unwrap().as_u64(), Some(1));
+        assert_eq!(v.get("b").unwrap().as_str(), Some("hello"));
+    }
+
+    #[test]
+    fn nested_map_and_inline_list() {
+        let src = "arch:\n  pe_array: [12, 14]\n  noc:\n    hop_energy_pj: 0.05\n";
+        let v = parse(src).unwrap();
+        let arch = v.get("arch").unwrap();
+        let pe = arch.get("pe_array").unwrap().as_list().unwrap();
+        assert_eq!(pe[0].as_u64(), Some(12));
+        assert_eq!(pe[1].as_u64(), Some(14));
+        assert_eq!(arch.get("noc").unwrap().get("hop_energy_pj").unwrap().as_f64(), Some(0.05));
+    }
+
+    #[test]
+    fn block_list_of_maps() {
+        let src = "levels:\n  - name: RF\n    depth: 16\n  - name: GLB\n    depth: 16384\n";
+        let v = parse(src).unwrap();
+        let levels = v.get("levels").unwrap().as_list().unwrap();
+        assert_eq!(levels.len(), 2);
+        assert_eq!(levels[0].get("name").unwrap().as_str(), Some("RF"));
+        assert_eq!(levels[1].get("depth").unwrap().as_u64(), Some(16384));
+    }
+
+    #[test]
+    fn comments_and_blanks() {
+        let v = parse("# top\na: 1\n\n  # indented comment\nb: 2\n").unwrap();
+        assert_eq!(v.get("b").unwrap().as_u64(), Some(2));
+    }
+
+    #[test]
+    fn bools_and_underscore_numbers() {
+        let v = parse("x: true\ny: 16_384\n").unwrap();
+        assert_eq!(v.get("x").unwrap().as_bool(), Some(true));
+        assert_eq!(v.get("y").unwrap().as_u64(), Some(16384));
+    }
+
+    #[test]
+    fn duplicate_key_rejected() {
+        assert!(parse("a: 1\na: 2\n").is_err());
+    }
+
+    #[test]
+    fn tabs_rejected() {
+        let e = parse("a:\n\tb: 1\n").unwrap_err();
+        assert!(e.msg.contains("tab"));
+    }
+
+    #[test]
+    fn empty_doc() {
+        assert_eq!(parse("").unwrap(), Value::Map(BTreeMap::new()));
+    }
+}

@@ -1,0 +1,167 @@
+//! Custom workload loading (YAML) — networks beyond the built-in zoo.
+//!
+//! ```yaml
+//! layers:
+//!   - name: stem
+//!     m: 64
+//!     c: 3
+//!     r: 7
+//!     s: 7
+//!     p: 112
+//!     q: 112
+//!     stride: 2
+//!   - name: dw3x3
+//!     m: 64
+//!     r: 3
+//!     s: 3
+//!     p: 56
+//!     q: 56
+//!     depthwise: true
+//! ```
+//!
+//! Used by `local-mapper compile --network-file <path>` so the framework
+//! maps arbitrary user networks, not just the paper's.
+
+use super::ConvLayer;
+use crate::util::yaml::{self, Value};
+
+/// Workload-config error.
+#[derive(Debug, thiserror::Error)]
+pub enum WorkloadError {
+    #[error("{0}")]
+    Yaml(#[from] yaml::YamlError),
+    #[error("workload: {0}")]
+    Invalid(String),
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+}
+
+fn need(v: &Value, key: &str, ctx: &str) -> Result<u64, WorkloadError> {
+    v.get(key)
+        .and_then(Value::as_u64)
+        .filter(|&x| x > 0)
+        .ok_or_else(|| WorkloadError::Invalid(format!("{ctx}: missing or non-positive '{key}'")))
+}
+
+/// Parse a layer list from YAML text.
+pub fn layers_from_str(src: &str) -> Result<Vec<ConvLayer>, WorkloadError> {
+    let doc = yaml::parse(src)?;
+    let list = doc
+        .get("layers")
+        .and_then(Value::as_list)
+        .ok_or_else(|| WorkloadError::Invalid("missing 'layers' list".into()))?;
+    if list.is_empty() {
+        return Err(WorkloadError::Invalid("'layers' is empty".into()));
+    }
+    let mut out = Vec::with_capacity(list.len());
+    for (i, lv) in list.iter().enumerate() {
+        let name = lv
+            .get("name")
+            .and_then(Value::as_str)
+            .map(str::to_string)
+            .unwrap_or_else(|| format!("layer{}", i + 1));
+        let depthwise = lv.get("depthwise").and_then(Value::as_bool).unwrap_or(false);
+        let m = need(lv, "m", &name)?;
+        // Depthwise layers take channels from m; dense layers need c.
+        let c = if depthwise { 1 } else { need(lv, "c", &name)? };
+        let mut layer = ConvLayer::new(
+            &name,
+            m,
+            c.max(1),
+            need(lv, "r", &name)?,
+            need(lv, "s", &name)?,
+            need(lv, "p", &name)?,
+            need(lv, "q", &name)?,
+        );
+        layer.stride = lv.get("stride").and_then(Value::as_u64).unwrap_or(1).max(1);
+        layer.n = lv.get("batch").and_then(Value::as_u64).unwrap_or(1).max(1);
+        layer.dilation = lv.get("dilation").and_then(Value::as_u64).unwrap_or(1).max(1);
+        if depthwise {
+            layer.depthwise = true;
+            layer.c = 1;
+        }
+        out.push(layer);
+    }
+    Ok(out)
+}
+
+/// Load a layer list from a YAML file.
+pub fn layers_from_file(path: &str) -> Result<Vec<ConvLayer>, WorkloadError> {
+    let src = std::fs::read_to_string(path)?;
+    layers_from_str(&src)
+}
+
+/// Serialize layers back to the accepted YAML (round-trip / `--dump`).
+pub fn layers_to_yaml(layers: &[ConvLayer]) -> String {
+    let mut s = String::from("layers:\n");
+    for l in layers {
+        s.push_str(&format!("  - name: {}\n", l.name));
+        s.push_str(&format!("    m: {}\n", l.m));
+        if !l.depthwise {
+            s.push_str(&format!("    c: {}\n", l.c));
+        }
+        s.push_str(&format!("    r: {}\n    s: {}\n    p: {}\n    q: {}\n", l.r, l.s, l.p, l.q));
+        if l.stride != 1 {
+            s.push_str(&format!("    stride: {}\n", l.stride));
+        }
+        if l.n != 1 {
+            s.push_str(&format!("    batch: {}\n", l.n));
+        }
+        if l.depthwise {
+            s.push_str("    depthwise: true\n");
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+
+    #[test]
+    fn parse_minimal() {
+        let src = "layers:\n  - name: a\n    m: 8\n    c: 4\n    r: 3\n    s: 3\n    p: 14\n    q: 14\n";
+        let ls = layers_from_str(src).unwrap();
+        assert_eq!(ls.len(), 1);
+        assert_eq!(ls[0].macs(), 8 * 4 * 9 * 14 * 14);
+        assert_eq!(ls[0].stride, 1);
+    }
+
+    #[test]
+    fn parse_depthwise_and_options() {
+        let src = "layers:\n  - name: dw\n    m: 32\n    r: 3\n    s: 3\n    p: 56\n    q: 56\n    stride: 2\n    batch: 4\n    depthwise: true\n";
+        let ls = layers_from_str(src).unwrap();
+        assert!(ls[0].depthwise);
+        assert_eq!(ls[0].c, 1);
+        assert_eq!(ls[0].n, 4);
+        assert_eq!(ls[0].stride, 2);
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        assert!(layers_from_str("layers:\n  - name: a\n    m: 8\n").is_err());
+        assert!(layers_from_str("nope: 1\n").is_err());
+        assert!(layers_from_str("layers:\n").is_err());
+    }
+
+    #[test]
+    fn zero_dims_rejected() {
+        let src = "layers:\n  - m: 0\n    c: 4\n    r: 3\n    s: 3\n    p: 14\n    q: 14\n";
+        assert!(layers_from_str(src).is_err());
+    }
+
+    #[test]
+    fn roundtrip_zoo_networks() {
+        for net in ["alexnet", "mobilenetv2"] {
+            let layers = zoo::network(net).unwrap();
+            let y = layers_to_yaml(&layers);
+            let back = layers_from_str(&y).unwrap();
+            assert_eq!(layers.len(), back.len());
+            for (a, b) in layers.iter().zip(&back) {
+                assert_eq!(a.macs(), b.macs(), "{}", a.name);
+                assert_eq!(a.depthwise, b.depthwise);
+            }
+        }
+    }
+}

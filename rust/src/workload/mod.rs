@@ -1,0 +1,365 @@
+//! Convolution workloads — the paper's `CT = {Weight, Input, Output}`.
+//!
+//! A convolution layer is described by the seven problem dimensions of
+//! Eq. (3): `N` (batch), `M` (output channels), `C` (input channels),
+//! `R`/`S` (filter height/width), `P`/`Q` (output height/width), plus
+//! stride/dilation. The three tensors project onto those dimensions as in
+//! Eq. (6): `W ∈ R^{MCRS}`, `I ∈ R^{NCHW}`, `O ∈ R^{NMPQ}` with
+//! `H = (P-1)·stride + (R-1)·dilation + 1` (and likewise `W` from `Q`,`S`).
+//!
+//! The [`zoo`] submodule carries the layer tables for every network the
+//! paper's evaluation references (Tables 1 and 2).
+
+pub mod config;
+pub mod zoo;
+
+use std::fmt;
+
+/// The seven convolution problem dimensions (paper Eq. 3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Dim {
+    N,
+    M,
+    C,
+    R,
+    S,
+    P,
+    Q,
+}
+
+impl Dim {
+    /// All dimensions in canonical order.
+    pub const ALL: [Dim; 7] = [Dim::N, Dim::M, Dim::C, Dim::R, Dim::S, Dim::P, Dim::Q];
+
+    /// Index into dense per-dim arrays.
+    pub fn idx(self) -> usize {
+        match self {
+            Dim::N => 0,
+            Dim::M => 1,
+            Dim::C => 2,
+            Dim::R => 3,
+            Dim::S => 4,
+            Dim::P => 5,
+            Dim::Q => 6,
+        }
+    }
+
+    pub fn from_idx(i: usize) -> Dim {
+        Dim::ALL[i]
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Dim::N => "N",
+            Dim::M => "M",
+            Dim::C => "C",
+            Dim::R => "R",
+            Dim::S => "S",
+            Dim::P => "P",
+            Dim::Q => "Q",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Dim> {
+        match s {
+            "N" | "n" => Some(Dim::N),
+            "M" | "m" => Some(Dim::M),
+            "C" | "c" => Some(Dim::C),
+            "R" | "r" => Some(Dim::R),
+            "S" | "s" => Some(Dim::S),
+            "P" | "p" => Some(Dim::P),
+            "Q" | "q" => Some(Dim::Q),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for Dim {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// The three convolution tensors (paper Eq. 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Tensor {
+    Weight,
+    Input,
+    Output,
+}
+
+impl Tensor {
+    pub const ALL: [Tensor; 3] = [Tensor::Weight, Tensor::Input, Tensor::Output];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Tensor::Weight => "Weight",
+            Tensor::Input => "Input",
+            Tensor::Output => "Output",
+        }
+    }
+
+    /// Which problem dimensions index this tensor directly (dense conv).
+    /// Input is indexed by the *sliding-window* composites H(P,R), W(Q,S),
+    /// so all four of P,R,Q,S are relevant to Input. For depthwise layers
+    /// use [`Tensor::relevant_for`], which adds `M` to Input's relevance.
+    pub fn relevant_dims(self) -> &'static [Dim] {
+        match self {
+            Tensor::Weight => &[Dim::M, Dim::C, Dim::R, Dim::S],
+            Tensor::Input => &[Dim::N, Dim::C, Dim::P, Dim::R, Dim::Q, Dim::S],
+            Tensor::Output => &[Dim::N, Dim::M, Dim::P, Dim::Q],
+        }
+    }
+
+    /// True when `d` indexes this tensor (dense conv).
+    pub fn relevant(self, d: Dim) -> bool {
+        self.relevant_dims().contains(&d)
+    }
+
+    /// Layer-aware relevance: depthwise input channels ride on `M`.
+    pub fn relevant_for(self, layer: &ConvLayer, d: Dim) -> bool {
+        if layer.depthwise && self == Tensor::Input && d == Dim::M {
+            return true;
+        }
+        self.relevant(d)
+    }
+}
+
+impl fmt::Display for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One convolution layer (the paper's CT shapes, Table 1 right column).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct ConvLayer {
+    /// e.g. `"VGG16_conv9"` — network + index, used in reports and caches.
+    pub name: String,
+    pub n: u64,
+    pub m: u64,
+    pub c: u64,
+    pub r: u64,
+    pub s: u64,
+    pub p: u64,
+    pub q: u64,
+    pub stride: u64,
+    pub dilation: u64,
+    /// Depthwise convolution: one filter per channel (`M == C` groups of 1).
+    /// Changes weight volume (`M·R·S`) and MAC count (`M·R·S·P·Q·N`).
+    pub depthwise: bool,
+}
+
+impl ConvLayer {
+    /// Dense-conv constructor with stride 1, dilation 1, batch 1.
+    pub fn new(name: &str, m: u64, c: u64, r: u64, s: u64, p: u64, q: u64) -> Self {
+        Self {
+            name: name.to_string(),
+            n: 1,
+            m,
+            c,
+            r,
+            s,
+            p,
+            q,
+            stride: 1,
+            dilation: 1,
+            depthwise: false,
+        }
+    }
+
+    /// Builder: set stride.
+    pub fn with_stride(mut self, stride: u64) -> Self {
+        self.stride = stride;
+        self
+    }
+
+    /// Builder: set batch size.
+    pub fn with_batch(mut self, n: u64) -> Self {
+        self.n = n;
+        self
+    }
+
+    /// Builder: mark depthwise. The shared channel axis rides on `M`
+    /// (one filter per channel), so the independent `C` mapping dimension
+    /// collapses to 1 — `macs()` and all tile math stay uniform while the
+    /// Input channel count follows `M` (see [`ConvLayer::tensor_volume`]).
+    pub fn depthwise(mut self) -> Self {
+        self.depthwise = true;
+        self.c = 1;
+        self
+    }
+
+    /// Bound (extent) of a problem dimension.
+    pub fn bound(&self, d: Dim) -> u64 {
+        match d {
+            Dim::N => self.n,
+            Dim::M => self.m,
+            Dim::C => self.c,
+            Dim::R => self.r,
+            Dim::S => self.s,
+            Dim::P => self.p,
+            Dim::Q => self.q,
+        }
+    }
+
+    /// All bounds as a dense per-dim array indexed by [`Dim::idx`].
+    pub fn bounds(&self) -> [u64; 7] {
+        let mut b = [0u64; 7];
+        for d in Dim::ALL {
+            b[d.idx()] = self.bound(d);
+        }
+        b
+    }
+
+    /// Input feature-map height covered by `p` output rows and `r` filter
+    /// rows (the sliding-window halo of Eq. H = (P-1)·stride + (R-1)·dil + 1).
+    pub fn input_extent(&self, p: u64, r: u64) -> u64 {
+        if p == 0 || r == 0 {
+            return 0;
+        }
+        (p - 1) * self.stride + (r - 1) * self.dilation + 1
+    }
+
+    /// Full input height H.
+    pub fn h(&self) -> u64 {
+        self.input_extent(self.p, self.r)
+    }
+
+    /// Full input width W.
+    pub fn w(&self) -> u64 {
+        self.input_extent(self.q, self.s)
+    }
+
+    /// Number of multiply-accumulate operations (Table 2 accounting).
+    /// Uniform across dense and depthwise because depthwise layers carry
+    /// `c == 1` (channels ride on `M`).
+    pub fn macs(&self) -> u64 {
+        self.n * self.m * self.c * self.r * self.s * self.p * self.q
+    }
+
+    /// Element count of one full tensor.
+    pub fn tensor_volume(&self, t: Tensor) -> u64 {
+        match t {
+            Tensor::Weight => {
+                if self.depthwise {
+                    self.m * self.r * self.s
+                } else {
+                    self.m * self.c * self.r * self.s
+                }
+            }
+            Tensor::Input => {
+                let channels = if self.depthwise { self.m } else { self.c };
+                self.n * channels * self.h() * self.w()
+            }
+            Tensor::Output => self.n * self.m * self.p * self.q,
+        }
+    }
+
+    /// Total data footprint (all three tensors), in elements.
+    pub fn total_volume(&self) -> u64 {
+        Tensor::ALL.iter().map(|&t| self.tensor_volume(t)).sum()
+    }
+
+    /// Arithmetic intensity: MACs per element touched (roofline axis).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.macs() as f64 / self.total_volume() as f64
+    }
+}
+
+impl fmt::Display for ConvLayer {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "{} [N={} M={} C={} R={} S={} P={} Q={} stride={}{}]",
+            self.name,
+            self.n,
+            self.m,
+            self.c,
+            self.r,
+            self.s,
+            self.p,
+            self.q,
+            self.stride,
+            if self.depthwise { " dw" } else { "" }
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn vgg02_l5() -> ConvLayer {
+        // Table 1 right column.
+        ConvLayer::new("VGG02_conv5", 256, 128, 3, 3, 56, 56)
+    }
+
+    #[test]
+    fn dim_roundtrip() {
+        for d in Dim::ALL {
+            assert_eq!(Dim::from_idx(d.idx()), d);
+            assert_eq!(Dim::parse(d.name()), Some(d));
+        }
+        assert_eq!(Dim::parse("x"), None);
+    }
+
+    #[test]
+    fn relevance_projections() {
+        assert!(Tensor::Weight.relevant(Dim::M));
+        assert!(!Tensor::Weight.relevant(Dim::P));
+        assert!(Tensor::Input.relevant(Dim::P)); // via sliding window
+        assert!(Tensor::Input.relevant(Dim::S));
+        assert!(!Tensor::Input.relevant(Dim::M));
+        assert!(Tensor::Output.relevant(Dim::M));
+        assert!(!Tensor::Output.relevant(Dim::C));
+    }
+
+    #[test]
+    fn table1_layer_macs() {
+        // 1 * 256 * 128 * 3 * 3 * 56 * 56
+        assert_eq!(vgg02_l5().macs(), 924_844_032 / 56 / 56 * 3136); // sanity identity
+        assert_eq!(vgg02_l5().macs(), 256 * 128 * 9 * 3136);
+    }
+
+    #[test]
+    fn halo_math() {
+        let l = vgg02_l5();
+        assert_eq!(l.h(), 58); // (56-1)*1 + (3-1)*1 + 1
+        assert_eq!(l.input_extent(1, 3), 3);
+        assert_eq!(l.input_extent(4, 1), 4);
+        let strided = vgg02_l5().with_stride(2);
+        assert_eq!(strided.input_extent(4, 3), 9); // 3*2 + 2 + 1
+    }
+
+    #[test]
+    fn volumes() {
+        let l = vgg02_l5();
+        assert_eq!(l.tensor_volume(Tensor::Weight), 256 * 128 * 9);
+        assert_eq!(l.tensor_volume(Tensor::Output), 256 * 56 * 56);
+        assert_eq!(l.tensor_volume(Tensor::Input), 128 * 58 * 58);
+        assert_eq!(l.total_volume(), 256 * 128 * 9 + 256 * 3136 + 128 * 58 * 58);
+        assert!(l.arithmetic_intensity() > 1.0);
+    }
+
+    #[test]
+    fn depthwise_accounting() {
+        let l = ConvLayer::new("dw", 32, 32, 3, 3, 112, 112).depthwise();
+        assert_eq!(l.c, 1, "channel axis rides on M");
+        assert_eq!(l.macs(), 32 * 9 * 112 * 112);
+        assert_eq!(l.tensor_volume(Tensor::Weight), 32 * 9);
+        // Input channel count follows M.
+        assert_eq!(l.tensor_volume(Tensor::Input), 32 * 114 * 114);
+        assert!(Tensor::Input.relevant_for(&l, Dim::M));
+        assert!(!Tensor::Input.relevant(Dim::M));
+    }
+
+    #[test]
+    fn bounds_array_consistent() {
+        let l = vgg02_l5();
+        let b = l.bounds();
+        for d in Dim::ALL {
+            assert_eq!(b[d.idx()], l.bound(d));
+        }
+    }
+}

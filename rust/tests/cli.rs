@@ -1,0 +1,175 @@
+//! CLI integration tests: drive the `local-mapper` binary end to end and
+//! check output shape and exit codes for every subcommand (reduced budgets
+//! so the suite stays fast).
+
+use std::process::Command;
+
+fn run(args: &[&str]) -> (String, String, i32) {
+    let out = Command::new(env!("CARGO_BIN_EXE_local-mapper"))
+        .args(args)
+        .output()
+        .expect("binary runs");
+    (
+        String::from_utf8_lossy(&out.stdout).to_string(),
+        String::from_utf8_lossy(&out.stderr).to_string(),
+        out.status.code().unwrap_or(-1),
+    )
+}
+
+#[test]
+fn help_lists_subcommands() {
+    let (stdout, _, code) = run(&["help"]);
+    assert_eq!(code, 0);
+    for sub in ["map", "compile", "table3", "fig3", "fig7", "mapspace", "arch", "run", "simulate", "explore"] {
+        assert!(stdout.contains(sub), "help missing {sub}");
+    }
+}
+
+#[test]
+fn unknown_subcommand_exits_2() {
+    let (_, stderr, code) = run(&["frobnicate"]);
+    assert_eq!(code, 2);
+    assert!(stderr.contains("unknown subcommand"));
+}
+
+#[test]
+fn map_prints_loop_nest_and_energy() {
+    let (stdout, _, code) = run(&["map", "--layer", "vgg02:5", "--arch", "eyeriss"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("parallel_for"));
+    assert!(stdout.contains("energy="));
+    assert!(stdout.contains("DRAM"));
+}
+
+#[test]
+fn map_with_explicit_dims() {
+    let (stdout, _, code) = run(&["map", "--layer", "16x8x3x3x14x14", "--arch", "nvdla"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("custom"));
+}
+
+#[test]
+fn map_rejects_bad_layer_spec() {
+    let (_, stderr, code) = run(&["map", "--layer", "not-a-layer"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"));
+}
+
+#[test]
+fn map_rejects_unknown_arch() {
+    let (_, stderr, code) = run(&["map", "--arch", "tpu"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("unknown arch"));
+}
+
+#[test]
+fn map_with_search_mappers() {
+    for mapper in ["rs", "ws", "os", "random", "ga"] {
+        let (stdout, stderr, code) =
+            run(&["map", "--layer", "alexnet:3", "--mapper", mapper, "--budget", "40"]);
+        assert_eq!(code, 0, "{mapper}: {stderr}");
+        assert!(stdout.contains("energy="), "{mapper}");
+    }
+}
+
+#[test]
+fn compile_network_summary() {
+    let (stdout, _, code) = run(&["compile", "--network", "alexnet", "--arch", "shidiannao"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("AlexNet_conv5"));
+    assert!(stdout.contains("total:"));
+}
+
+#[test]
+fn compile_from_network_file() {
+    let path = std::env::temp_dir().join("lm_cli_net.yaml");
+    std::fs::write(
+        &path,
+        "layers:\n  - name: a\n    m: 16\n    c: 8\n    r: 3\n    s: 3\n    p: 14\n    q: 14\n",
+    )
+    .unwrap();
+    let (stdout, _, code) = run(&["compile", "--network-file", path.to_str().unwrap()]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("layers=1"));
+    // Malformed file → clean error.
+    std::fs::write(&path, "layers:\n  - m: 16\n").unwrap();
+    let (_, stderr, code) = run(&["compile", "--network-file", path.to_str().unwrap()]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"));
+}
+
+#[test]
+fn table2_exact() {
+    let (stdout, _, code) = run(&["table2"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("51380224"));
+    assert!(stdout.contains("1849688064"));
+}
+
+#[test]
+fn table3_small_budget_and_csv() {
+    let (stdout, _, code) = run(&["table3", "--budget", "40", "--seed", "1"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("Speedup"));
+    let (csv, _, code) = run(&["table3", "--budget", "40", "--seed", "1", "--csv"]);
+    assert_eq!(code, 0);
+    assert_eq!(csv.lines().count(), 28); // header + 27 cells
+}
+
+#[test]
+fn fig3_small() {
+    let (stdout, _, code) = run(&["fig3", "--n", "50", "--seed", "3"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("random_max"));
+    assert!(stdout.contains("spread"));
+}
+
+#[test]
+fn fig7_small() {
+    let (stdout, _, code) = run(&["fig7", "--budget", "30", "--seed", "3"]);
+    assert_eq!(code, 0);
+    assert_eq!(stdout.matches("== ").count(), 9, "nine panels");
+    assert!(stdout.contains("LOCAL"));
+}
+
+#[test]
+fn mapspace_sizes() {
+    let (stdout, _, code) = run(&["mapspace"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("3.732e8"));
+}
+
+#[test]
+fn arch_dump_roundtrips_through_file() {
+    let (yaml, _, code) = run(&["arch", "--name", "nvdla", "--dump"]);
+    assert_eq!(code, 0);
+    let path = std::env::temp_dir().join("lm_cli_arch.yaml");
+    std::fs::write(&path, &yaml).unwrap();
+    let (stdout, _, code) = run(&["arch", "--file", path.to_str().unwrap()]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("NVDLA"));
+}
+
+#[test]
+fn simulate_reports_bottleneck() {
+    let (stdout, _, code) = run(&["simulate", "--layer", "vgg16:9", "--arch", "eyeriss"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("bottleneck level"));
+    assert!(stdout.contains("tile-pipeline sim"));
+    let (single, _, _) = run(&["simulate", "--layer", "vgg16:9", "--arch", "eyeriss", "--single-buffer"]);
+    assert!(single.contains("single-buffered"));
+}
+
+#[test]
+fn explore_prints_pareto() {
+    let (stdout, _, code) = run(&["explore", "--network", "alexnet", "--arch", "eyeriss"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("Pareto front"));
+}
+
+#[test]
+fn run_errors_cleanly_without_artifacts() {
+    let (_, stderr, code) = run(&["run", "--artifacts", "/nonexistent/dir"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("error"));
+}

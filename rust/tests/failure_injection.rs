@@ -1,0 +1,146 @@
+//! Failure-injection tests: the framework must fail loudly and precisely
+//! on impossible hardware, malformed configs, corrupt manifests and
+//! unsatisfiable mappings — a compiler component cannot silently mis-map.
+
+use local_mapper::arch::{config, presets, Accelerator, Noc, PeArray, StorageLevel, Style};
+use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::mapping::{Mapping, MappingError};
+use local_mapper::model::evaluate;
+use local_mapper::runtime::read_manifest;
+use local_mapper::workload::{zoo, ConvLayer};
+
+fn tiny_rf_acc(rf_depth: u64) -> Accelerator {
+    Accelerator {
+        name: "broken".into(),
+        style: Style::EyerissLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", rf_depth, 16),
+            StorageLevel::buffer("GLB", 1024, 64),
+            StorageLevel::dram(64),
+        ],
+        pe: PeArray::new(2, 2),
+        noc: Noc::default(),
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    }
+}
+
+#[test]
+fn local_survives_degenerate_rf() {
+    // A 3-element RF can hold exactly the all-1 tile (W+I+O): LOCAL must
+    // still produce a valid (if poor) mapping.
+    let acc = tiny_rf_acc(3);
+    let layer = zoo::alexnet()[2].clone();
+    let m = LocalMapper::new().map(&layer, &acc).unwrap();
+    m.validate(&layer, &acc).unwrap();
+}
+
+#[test]
+fn validate_rejects_impossible_rf() {
+    // 2 elements cannot hold W+I+O of even a 1×1×…×1 tile.
+    let acc = tiny_rf_acc(2);
+    let layer = zoo::alexnet()[2].clone();
+    let m = Mapping::trivial(&layer, acc.n_levels());
+    let err = m.validate(&layer, &acc).unwrap_err();
+    assert!(matches!(err, MappingError::Bounding { level: 0, .. }), "{err}");
+}
+
+#[test]
+fn evaluate_refuses_cross_arch_mapping() {
+    // Mapping built for a 3-level machine must be rejected on a 2-level one.
+    let eyeriss = presets::eyeriss();
+    let layer = zoo::vgg16()[0].clone();
+    let m = LocalMapper::new().map(&layer, &eyeriss).unwrap();
+    let two_level = Accelerator {
+        levels: vec![StorageLevel::register_file("RF", 16, 16), StorageLevel::dram(64)],
+        ..eyeriss
+    };
+    let err = evaluate(&layer, &two_level, &m).unwrap_err();
+    assert!(matches!(err, MappingError::LevelMismatch { found: 3, expected: 2 }));
+}
+
+#[test]
+fn config_rejects_garbage() {
+    for src in [
+        "accelerator: [not, a, map]",
+        "accelerator:\n  name: x\n  pe_array: [0, 4]\n  levels:\n    - name: DRAM\n      width: 64\n      unbounded: true\n",
+        "accelerator:\n  name: x\n  pe_array: [4]\n  levels:\n    - name: DRAM\n      width: 64\n      unbounded: true\n",
+        ": no key",
+    ] {
+        assert!(config::accelerator_from_str(src).is_err(), "accepted: {src}");
+    }
+}
+
+#[test]
+fn config_missing_file_is_io_error() {
+    let e = config::accelerator_from_file("/nonexistent/acc.yaml").unwrap_err();
+    assert!(format!("{e}").contains("io"), "{e}");
+}
+
+#[test]
+fn manifest_corruption_detected() {
+    let dir = std::env::temp_dir().join("lm_fail_manifest");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Tab-indented YAML.
+    std::fs::write(dir.join("manifest.yaml"), "artifacts:\n\t- name: x\n").unwrap();
+    assert!(read_manifest(&dir.join("manifest.yaml")).is_err());
+    // Bad shape element.
+    std::fs::write(
+        dir.join("manifest.yaml"),
+        "artifacts:\n  - name: k\n    file: k.hlo.txt\n    inputs:\n      - [1, banana]\n    output: [1]\n",
+    )
+    .unwrap();
+    assert!(read_manifest(&dir.join("manifest.yaml")).is_err());
+}
+
+#[test]
+fn zero_dim_layers_rejected_by_construction() {
+    // ConvLayer::bound==0 would break factorization; trivial mapping on a
+    // malformed layer must fail coverage validation, not panic.
+    let mut layer = ConvLayer::new("bad", 4, 4, 1, 1, 4, 4);
+    layer.m = 0;
+    let acc = presets::eyeriss();
+    let m = Mapping::trivial(&ConvLayer::new("ok", 4, 4, 1, 1, 4, 4), acc.n_levels());
+    assert!(m.validate(&layer, &acc).is_err());
+}
+
+#[test]
+fn service_reports_errors_in_metrics() {
+    // A mapper that always fails must surface through metrics and replies,
+    // not crash workers.
+    #[derive(Clone)]
+    struct FailingMapper;
+    impl Mapper for FailingMapper {
+        fn name(&self) -> String {
+            "failing".into()
+        }
+        fn map(
+            &self,
+            _layer: &ConvLayer,
+            _acc: &Accelerator,
+        ) -> Result<local_mapper::mapping::Mapping, local_mapper::mappers::MapError> {
+            Err(local_mapper::mappers::MapError::NoValidMapping("injected".into()))
+        }
+    }
+    let svc = local_mapper::coordinator::MappingService::start(presets::eyeriss(), FailingMapper, 2);
+    let replies = svc.map_all(&zoo::alexnet());
+    assert!(replies.iter().all(|r| r.is_err()));
+    assert_eq!(svc.metrics.errors.load(std::sync::atomic::Ordering::Relaxed), 5);
+    svc.shutdown();
+}
+
+#[test]
+fn constrained_search_reports_exhaustion() {
+    // With budget 1 on a heavily constrained space the search may fail to
+    // find any valid candidate; it must return NoValidMapping, not panic.
+    use local_mapper::mappers::ConstrainedSearch;
+    use local_mapper::mapspace::Dataflow;
+    let acc = tiny_rf_acc(3);
+    let layer = zoo::vgg16()[8].clone();
+    let s = ConstrainedSearch::new(Dataflow::WeightStationary, 1, 0);
+    match s.run(&layer, &acc) {
+        Ok(out) => out.mapping.validate(&layer, &acc).unwrap(),
+        Err(e) => assert!(format!("{e}").contains("no valid mapping")),
+    }
+}

@@ -1,0 +1,135 @@
+//! Integration tests: full pipelines across modules (workload → mapper →
+//! model → energy → report → coordinator), all presets, all experiments at
+//! reduced budgets.
+
+use local_mapper::arch::{config, presets};
+use local_mapper::coordinator::{compile_network, MappingService};
+use local_mapper::mappers::genetic::GeneticMapper;
+use local_mapper::mappers::{ConstrainedSearch, LocalMapper, Mapper, RandomMapper};
+use local_mapper::mapspace::Dataflow;
+use local_mapper::model::evaluate;
+use local_mapper::report;
+use local_mapper::workload::zoo;
+
+#[test]
+fn every_mapper_maps_every_preset_and_category() {
+    let mappers: Vec<Box<dyn Mapper>> = vec![
+        Box::new(LocalMapper::new()),
+        Box::new(RandomMapper::new(16, 1)),
+        Box::new(ConstrainedSearch::new(Dataflow::RowStationary, 40, 1)),
+        Box::new(ConstrainedSearch::new(Dataflow::WeightStationary, 40, 1)),
+        Box::new(ConstrainedSearch::new(Dataflow::OutputStationary, 40, 1)),
+        Box::new(GeneticMapper::new(8, 3, 1)),
+    ];
+    for acc in presets::all() {
+        for row in zoo::table2_workloads() {
+            for m in &mappers {
+                let out = m
+                    .run(&row.layer, &acc)
+                    .unwrap_or_else(|e| panic!("{} on {}×{}: {e}", m.name(), row.layer.name, acc.name));
+                assert!(out.evaluation.energy.total_pj() > 0.0);
+                assert!(out.evaluation.utilization > 0.0 && out.evaluation.utilization <= 1.0);
+            }
+        }
+    }
+}
+
+#[test]
+fn whole_zoo_compiles_on_every_preset() {
+    for net in zoo::NETWORKS {
+        let layers = zoo::network(net).unwrap();
+        for acc in presets::all() {
+            let plan = compile_network(&layers, &acc, &LocalMapper::new(), 4)
+                .unwrap_or_else(|e| panic!("{net} on {}: {e}", acc.name));
+            assert_eq!(plan.layers.len(), layers.len());
+            assert_eq!(plan.total_macs(), layers.iter().map(|l| l.macs()).sum::<u64>());
+        }
+    }
+}
+
+#[test]
+fn energy_totals_consistent_between_breakdown_and_total() {
+    let acc = presets::eyeriss();
+    for layer in zoo::vgg16() {
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        let component_sum: f64 =
+            e.energy.components(&acc).iter().map(|(_, pj)| pj).sum();
+        assert!((component_sum - e.energy.total_pj()).abs() < 1e-6 * e.energy.total_pj());
+    }
+}
+
+#[test]
+fn table3_experiment_shape_holds_at_small_budget() {
+    let cells = report::table3(120, 7);
+    assert_eq!(cells.len(), 27);
+    // LOCAL faster on ≥ 24/27; energy within 2× on most cells.
+    let faster = cells.iter().filter(|c| c.speedup > 1.0).count();
+    assert!(faster >= 24, "{faster}/27");
+    let close = cells.iter().filter(|c| c.local_energy_uj <= 2.0 * c.baseline_energy_uj).count();
+    assert!(close >= 18, "LOCAL energy within 2x on only {close}/27");
+}
+
+#[test]
+fn fig7_dram_dominance() {
+    let panels = report::fig7(60, 11);
+    let mut dominant = 0;
+    let mut cells = 0;
+    for p in &panels {
+        for (_, base, _) in &p.entries {
+            cells += 1;
+            let on_chip_max = base.energy.level_pj[..base.energy.level_pj.len() - 1]
+                .iter()
+                .cloned()
+                .fold(0.0f64, f64::max);
+            if base.energy.dram_pj() >= on_chip_max * 0.5 {
+                dominant += 1;
+            }
+        }
+    }
+    // DRAM is a (near-)dominant component on the large majority of cells.
+    assert!(dominant * 10 >= cells * 7, "{dominant}/{cells}");
+}
+
+#[test]
+fn service_survives_mixed_workload_burst() {
+    let svc = MappingService::start(presets::nvdla(), LocalMapper::new(), 4);
+    let mut layers = Vec::new();
+    layers.extend(zoo::vgg16());
+    layers.extend(zoo::squeezenet());
+    layers.extend(zoo::alexnet());
+    let replies = svc.map_all(&layers);
+    assert_eq!(replies.len(), layers.len());
+    assert!(replies.iter().all(|r| r.is_ok()));
+    let m = &svc.metrics;
+    assert_eq!(m.requests.load(std::sync::atomic::Ordering::Relaxed), layers.len() as u64);
+    assert_eq!(m.errors.load(std::sync::atomic::Ordering::Relaxed), 0);
+    svc.shutdown();
+}
+
+#[test]
+fn arch_yaml_roundtrip_preserves_evaluation() {
+    // A mapping evaluated on a preset must evaluate identically on the
+    // YAML round-tripped copy of that preset.
+    let layer = zoo::vgg16()[0].clone();
+    for acc in presets::all() {
+        let acc2 = config::accelerator_from_str(&config::accelerator_to_yaml(&acc)).unwrap();
+        let m = LocalMapper::new().map(&layer, &acc).unwrap();
+        let e1 = evaluate(&layer, &acc, &m).unwrap();
+        let e2 = evaluate(&layer, &acc2, &m).unwrap();
+        assert_eq!(e1, e2, "{}", acc.name);
+    }
+}
+
+#[test]
+fn depthwise_network_end_to_end() {
+    let layers = zoo::mobilenet_v2();
+    let acc = presets::eyeriss();
+    let plan = compile_network(&layers, &acc, &LocalMapper::new(), 4).unwrap();
+    // Depthwise layers must carry less weight traffic than their dense
+    // shape would imply; at minimum, the plan is complete and consistent.
+    assert_eq!(plan.layers.len(), 52);
+    for lp in &plan.layers {
+        assert!(lp.outcome.evaluation.energy.total_pj() > 0.0, "{}", lp.layer.name);
+    }
+}

@@ -1,0 +1,247 @@
+//! Property tests (hand-rolled SplitMix64 driver — proptest is not in the
+//! offline crate set). Each property sweeps randomized layers, machines
+//! and mappings and asserts an invariant of the system.
+
+use local_mapper::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
+use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::mapspace::{repair, sample_random};
+use local_mapper::model::{evaluate, evaluate_unchecked, TensorIdx};
+use local_mapper::util::rng::SplitMix64;
+use local_mapper::workload::{ConvLayer, Dim, Tensor};
+
+/// Random plausible conv layer (dims drawn from real-network ranges).
+fn random_layer(rng: &mut SplitMix64) -> ConvLayer {
+    let pick = |rng: &mut SplitMix64, xs: &[u64]| xs[rng.index(xs.len())];
+    let k = pick(rng, &[1, 3, 5, 7]);
+    let pq = pick(rng, &[7, 13, 14, 27, 28, 56]);
+    ConvLayer::new(
+        "prop",
+        pick(rng, &[8, 16, 64, 96, 128, 256]),
+        pick(rng, &[3, 8, 16, 64, 128, 512]),
+        k,
+        k,
+        pq,
+        pq,
+    )
+}
+
+/// Random accelerator: style, PE dims, buffer geometry.
+fn random_acc(rng: &mut SplitMix64) -> Accelerator {
+    let styles = [Style::EyerissLike, Style::NvdlaLike, Style::ShiDianNaoLike];
+    let pick = |rng: &mut SplitMix64, xs: &[u64]| xs[rng.index(xs.len())];
+    let acc = Accelerator {
+        name: "prop".into(),
+        style: styles[rng.index(3)],
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", pick(rng, &[16, 32, 64]), 16),
+            StorageLevel::buffer("GLB", pick(rng, &[4096, 16384, 65536]), 64),
+            StorageLevel::dram(64),
+        ],
+        pe: PeArray::new(pick(rng, &[4, 8, 12, 16]), pick(rng, &[4, 8, 14, 16])),
+        noc: Noc::default(),
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    };
+    acc.validate().unwrap();
+    acc
+}
+
+#[test]
+fn prop_local_always_yields_valid_mapping() {
+    let mut rng = SplitMix64::new(0xA11CE);
+    for _ in 0..300 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let m = LocalMapper::new()
+            .map(&layer, &acc)
+            .unwrap_or_else(|e| panic!("LOCAL failed: {layer} on {acc}: {e}"));
+        m.validate(&layer, &acc).unwrap();
+    }
+}
+
+#[test]
+fn prop_random_samples_always_valid() {
+    let mut rng = SplitMix64::new(0xBEEF);
+    for _ in 0..300 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let m = sample_random(&layer, &acc, &mut rng);
+        m.validate(&layer, &acc).unwrap();
+    }
+}
+
+#[test]
+fn prop_mac_energy_is_mapping_invariant() {
+    // The MAC component of energy depends only on the layer, never on the
+    // mapping (conservation of compute).
+    let mut rng = SplitMix64::new(0xC0FFEE);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let a = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+        let b = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+        assert_eq!(a.macs, layer.macs());
+        assert_eq!(a.macs, b.macs);
+        assert_eq!(a.energy.mac_pj, b.energy.mac_pj);
+    }
+}
+
+#[test]
+fn prop_rf_datapath_reads_equal_macs() {
+    // Every MAC reads W and I from the RF exactly once in our model,
+    // regardless of mapping.
+    let mut rng = SplitMix64::new(0xDADA);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let e = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+        assert_eq!(e.access[0][Tensor::Weight.t_idx()].reads, e.macs);
+        assert_eq!(e.access[0][Tensor::Input.t_idx()].reads, e.macs);
+    }
+}
+
+#[test]
+fn prop_dram_reads_bounded_below_by_tensor_volume() {
+    // DRAM must serve at least one full read of W and I (no compression,
+    // no bypass), and at least one full write of O.
+    let mut rng = SplitMix64::new(0xFEED);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let e = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+        let top = acc.n_levels() - 1;
+        assert!(e.access[top][Tensor::Weight.t_idx()].reads >= layer.tensor_volume(Tensor::Weight));
+        assert!(e.access[top][Tensor::Output.t_idx()].writes >= layer.tensor_volume(Tensor::Output));
+    }
+}
+
+#[test]
+fn prop_energy_positive_and_finite() {
+    let mut rng = SplitMix64::new(0x5EED);
+    for _ in 0..200 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let e = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+        let pj = e.energy.total_pj();
+        assert!(pj.is_finite() && pj > 0.0);
+        assert!(e.latency_cycles > 0);
+        assert!(e.utilization > 0.0 && e.utilization <= 1.0);
+    }
+}
+
+#[test]
+fn prop_repair_is_idempotent() {
+    let mut rng = SplitMix64::new(0x1D3A);
+    for _ in 0..200 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let m = sample_random(&layer, &acc, &mut rng);
+        let mut m2 = m.clone();
+        repair(&layer, &acc, &mut m2);
+        assert_eq!(m, m2);
+    }
+}
+
+#[test]
+fn prop_more_parallelism_never_decreases_utilization_metric() {
+    // Utilization equals spatial fan-out / PE count by construction.
+    let mut rng = SplitMix64::new(0xFACE);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let m = sample_random(&layer, &acc, &mut rng);
+        let e = evaluate_unchecked(&layer, &acc, &m);
+        let expect = (m.spatial_x_used() * m.spatial_y_used()) as f64 / acc.pe.count() as f64;
+        assert!((e.utilization - expect).abs() < 1e-12);
+    }
+}
+
+#[test]
+fn prop_local_energy_at_most_random_median() {
+    // LOCAL must consistently land in the good half of the random
+    // distribution (Fig. 3 vs §5): check across random scenes.
+    let mut rng = SplitMix64::new(0xB0B);
+    let mut wins = 0;
+    let mut total = 0;
+    for _ in 0..40 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let local = LocalMapper::new().run(&layer, &acc).unwrap();
+        let mut energies: Vec<f64> = (0..31)
+            .map(|_| {
+                evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng))
+                    .energy
+                    .total_pj()
+            })
+            .collect();
+        energies.sort_by(f64::total_cmp);
+        let median = energies[energies.len() / 2];
+        total += 1;
+        if local.evaluation.energy.total_pj() <= median {
+            wins += 1;
+        }
+    }
+    assert!(wins * 10 >= total * 9, "LOCAL beat the random median on only {wins}/{total} scenes");
+}
+
+#[test]
+fn prop_trivial_mapping_is_energy_upper_bound_class() {
+    // The all-at-DRAM mapping is never better than LOCAL.
+    let mut rng = SplitMix64::new(0xE0F);
+    for _ in 0..50 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let trivial = local_mapper::mapping::Mapping::trivial(&layer, acc.n_levels());
+        let e_triv = evaluate(&layer, &acc, &trivial).unwrap();
+        let e_local = LocalMapper::new().run(&layer, &acc).unwrap().evaluation;
+        assert!(
+            e_local.energy.total_pj() <= e_triv.energy.total_pj() * 1.001,
+            "{layer} on {acc}: LOCAL {} > trivial {}",
+            e_local.energy.total_pj(),
+            e_triv.energy.total_pj()
+        );
+    }
+}
+
+#[test]
+fn prop_permutation_only_changes_energy_not_macs_or_footprint() {
+    let mut rng = SplitMix64::new(0xAB);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = presets::eyeriss();
+        let mut m = sample_random(&layer, &acc, &mut rng);
+        let e1 = evaluate_unchecked(&layer, &acc, &m);
+        for l in 0..m.n_levels() {
+            rng.shuffle(&mut m.permutation[l]);
+        }
+        let e2 = evaluate_unchecked(&layer, &acc, &m);
+        assert_eq!(e1.macs, e2.macs);
+        assert_eq!(e1.utilization, e2.utilization);
+        // Footprints (tile sizes) unchanged → validity unchanged.
+        m.validate(&layer, &acc).unwrap();
+    }
+}
+
+#[test]
+fn prop_dim_coverage_under_mutation_stress() {
+    // Hammer the mapping with random factor migrations + repairs; coverage
+    // (Π factors == bound) must never break.
+    let mut rng = SplitMix64::new(0xCE11);
+    let layer = random_layer(&mut rng);
+    let acc = random_acc(&mut rng);
+    let mut m = sample_random(&layer, &acc, &mut rng);
+    for _ in 0..500 {
+        // Random legal migration: top-level temporal → L0.
+        let d = rng.index(7);
+        let top = m.n_levels() - 1;
+        if m.temporal[top][d] % 2 == 0 {
+            m.temporal[top][d] /= 2;
+            m.temporal[0][d] *= 2;
+        }
+        repair(&layer, &acc, &mut m);
+        for dim in Dim::ALL {
+            assert_eq!(m.extent(dim), layer.bound(dim), "dim {dim} broke");
+        }
+    }
+}

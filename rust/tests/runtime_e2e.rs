@@ -1,0 +1,127 @@
+//! Runtime end-to-end tests: load the AOT artifacts and execute them via
+//! PJRT, verifying numerics against the host conv oracle.
+//!
+//! These tests need `make artifacts` to have run; they self-skip (with a
+//! loud message) when the artifacts directory is absent so `cargo test`
+//! stays green on a fresh checkout.
+
+use local_mapper::runtime::{read_manifest, reference_conv, reference_depthwise, Runtime};
+use local_mapper::util::rng::SplitMix64;
+use std::path::PathBuf;
+
+fn artifacts_dir() -> Option<PathBuf> {
+    let dir = std::env::var_os("LOCAL_MAPPER_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts"));
+    if dir.join("manifest.yaml").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP runtime_e2e: no artifacts at {} (run `make artifacts`)", dir.display());
+        None
+    }
+}
+
+fn random_input(len: usize, seed: u64) -> Vec<f32> {
+    let mut rng = SplitMix64::new(seed);
+    (0..len).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+}
+
+#[test]
+fn manifest_lists_all_expected_kernels() {
+    let Some(dir) = artifacts_dir() else { return };
+    let entries = read_manifest(&dir.join("manifest.yaml")).unwrap();
+    let names: Vec<&str> = entries.iter().map(|e| e.name.as_str()).collect();
+    for expect in ["conv_quickstart", "conv_high_c", "conv_high_m", "conv_high_pq", "conv_batched"] {
+        assert!(names.contains(&expect), "missing {expect} in {names:?}");
+    }
+}
+
+#[test]
+fn all_artifacts_execute_and_match_host_oracle() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    let names = rt.load_manifest_dir(&dir).unwrap();
+    for name in names {
+        let k = rt.kernel(&name).unwrap();
+        let inputs: Vec<Vec<f32>> = k
+            .input_shapes
+            .iter()
+            .enumerate()
+            .map(|(i, s)| random_input(s.iter().product::<i64>() as usize, 10 + i as u64))
+            .collect();
+        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+        let out = k.execute_f32(&refs).unwrap_or_else(|e| panic!("{name}: {e}"));
+        assert_eq!(out.len(), k.output_len(), "{name}: output length");
+
+        let (si, sw) = (&k.input_shapes[0], &k.input_shapes[1]);
+        let expect = if sw.len() == 3 {
+            // Depthwise artifact: weights are (C, R, S).
+            reference_depthwise(
+                &inputs[0],
+                &inputs[1],
+                si[0] as usize,
+                si[1] as usize,
+                si[2] as usize,
+                si[3] as usize,
+                sw[1] as usize,
+                sw[2] as usize,
+                1,
+            )
+        } else {
+            reference_conv(
+                &inputs[0],
+                &inputs[1],
+                si[0] as usize,
+                si[1] as usize,
+                si[2] as usize,
+                si[3] as usize,
+                sw[0] as usize,
+                sw[2] as usize,
+                sw[3] as usize,
+                1,
+            )
+        };
+        let max_err = out.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+        assert!(max_err < 1e-3, "{name}: max err {max_err}");
+    }
+}
+
+#[test]
+fn execution_is_deterministic() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_manifest_dir(&dir).unwrap();
+    let k = rt.kernel("conv_quickstart").unwrap();
+    let inputs: Vec<Vec<f32>> = k
+        .input_shapes
+        .iter()
+        .map(|s| random_input(s.iter().product::<i64>() as usize, 77))
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let a = k.execute_f32(&refs).unwrap();
+    let b = k.execute_f32(&refs).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn wrong_arity_and_shape_are_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_manifest_dir(&dir).unwrap();
+    let k = rt.kernel("conv_quickstart").unwrap();
+    // Wrong arity.
+    let one = vec![0f32; 8];
+    assert!(k.execute_f32(&[&one]).is_err());
+    // Wrong element count.
+    let bad = vec![0f32; 17];
+    let w = vec![0f32; k.input_shapes[1].iter().product::<i64>() as usize];
+    assert!(k.execute_f32(&[&bad, &w]).is_err());
+}
+
+#[test]
+fn unknown_kernel_is_an_error() {
+    let Some(dir) = artifacts_dir() else { return };
+    let mut rt = Runtime::cpu().unwrap();
+    rt.load_manifest_dir(&dir).unwrap();
+    assert!(rt.kernel("nope").is_err());
+}
