@@ -1,0 +1,33 @@
+# Convenience targets for the local-mapper workspace.
+#
+#   make check      fmt --check + clippy -D warnings + tier-1 build/tests
+#   make test       tier-1 only (what the CI gate runs)
+#   make bench      all nine paper/ablation reports
+#   make doc        rustdoc, warnings are errors
+#   make artifacts  AOT-compile the JAX/Pallas conv artifacts (needs jax)
+
+.PHONY: check fmt clippy test bench doc artifacts
+
+check: fmt clippy test
+
+fmt:
+	cargo fmt --all -- --check
+
+clippy:
+	cargo clippy --workspace --all-targets -- -D warnings
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	for b in ablation_latency_sim fig3_random fig7_energy mapper_quality \
+	         motivation_mapspace noc_validation perf_analyzer \
+	         table2_workloads table3_mapping_time; do \
+	    cargo bench --bench $$b || exit 1; \
+	done
+
+doc:
+	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps
+
+artifacts:
+	python3 python/compile/aot.py --out artifacts

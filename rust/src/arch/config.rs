@@ -29,16 +29,49 @@
 
 use super::{Accelerator, Noc, PeArray, StorageLevel, Style};
 use crate::util::yaml::{self, Value};
+use std::fmt;
 
 /// Configuration error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum ConfigError {
-    #[error("{0}")]
-    Yaml(#[from] yaml::YamlError),
-    #[error("config: {0}")]
+    /// YAML syntax error.
+    Yaml(yaml::YamlError),
+    /// Structurally invalid configuration.
     Invalid(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ConfigError::Yaml(e) => fmt::Display::fmt(e, f),
+            ConfigError::Invalid(msg) => write!(f, "config: {msg}"),
+            ConfigError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            ConfigError::Yaml(e) => Some(e),
+            ConfigError::Invalid(_) => None,
+            ConfigError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<yaml::YamlError> for ConfigError {
+    fn from(e: yaml::YamlError) -> Self {
+        ConfigError::Yaml(e)
+    }
+}
+
+impl From<std::io::Error> for ConfigError {
+    fn from(e: std::io::Error) -> Self {
+        ConfigError::Io(e)
+    }
 }
 
 fn invalid<T>(msg: impl Into<String>) -> Result<T, ConfigError> {

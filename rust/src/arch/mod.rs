@@ -24,12 +24,16 @@ use std::fmt;
 ///   see DESIGN.md §4.)
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Style {
+    /// Single L1 buffer broadcasting to the whole PE array (Eq. 14).
     NvdlaLike,
+    /// Banked L1, one bank per PE column (Eq. 15–16).
     EyerissLike,
+    /// Output-stationary grid; output pixels are spatial.
     ShiDianNaoLike,
 }
 
 impl Style {
+    /// Canonical lowercase name.
     pub fn name(self) -> &'static str {
         match self {
             Style::NvdlaLike => "nvdla",
@@ -38,6 +42,7 @@ impl Style {
         }
     }
 
+    /// Parse a (case-insensitive) style name.
     pub fn parse(s: &str) -> Option<Style> {
         match s.to_ascii_lowercase().as_str() {
             "nvdla" | "nvdla-like" | "nvdla_like" => Some(Style::NvdlaLike),
@@ -112,11 +117,13 @@ impl StorageLevel {
         }
     }
 
+    /// Builder: set the bank count.
     pub fn with_banks(mut self, banks: u64) -> Self {
         self.banks = banks;
         self
     }
 
+    /// Builder: set the sustained bandwidth in words/cycle.
     pub fn with_bandwidth(mut self, words_per_cycle: f64) -> Self {
         self.bandwidth_words_per_cycle = words_per_cycle;
         self
@@ -145,11 +152,14 @@ impl StorageLevel {
 /// spatial Y, following the paper's `parallel_for ... in Rang(m) spatial x`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PeArray {
+    /// Rows (spatial X).
     pub m: u64,
+    /// Columns (spatial Y).
     pub n: u64,
 }
 
 impl PeArray {
+    /// Construct an `m × n` PE array; both dims must be positive.
     pub fn new(m: u64, n: u64) -> Self {
         assert!(m > 0 && n > 0, "PE array dims must be positive");
         Self { m, n }
@@ -180,14 +190,18 @@ impl Default for Noc {
 /// A complete spatial accelerator (Eq. 10).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Accelerator {
+    /// Machine name ("Eyeriss", "NVDLA", ...).
     pub name: String,
+    /// L1↔PE connection style (drives LOCAL's parallelization step).
     pub style: Style,
     /// Data element width in bits (weights/activations).
     pub datawidth_bits: u64,
     /// Storage hierarchy, **innermost first** (levels[0] = per-PE L0; the
     /// last level must be unbounded DRAM).
     pub levels: Vec<StorageLevel>,
+    /// The 2D PE array.
     pub pe: PeArray,
+    /// NoC parameters.
     pub noc: Noc,
     /// Energy of one MAC, pJ.
     pub mac_energy_pj: f64,

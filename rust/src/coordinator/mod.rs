@@ -7,10 +7,15 @@
 //! repeat shapes constantly — VGG's conv blocks, ResNet's bottlenecks).
 //! [`service::MappingService`] wraps the same machinery as a persistent
 //! request loop with metrics, the form a compiler would embed.
+//! [`compile_batch`] scales the service to whole model zoos: every layer of
+//! every network is sharded across the worker pool behind one
+//! **cross-network** mapping cache keyed by [`layer_key`], and the batch
+//! reports aggregate [`ServiceMetrics`] (hit rate, p50/p99 service time) —
+//! the `compile-all` CLI subcommand in production form.
 
 pub mod service;
 
-pub use service::{MappingService, ServiceMetrics};
+pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
 
 use crate::arch::Accelerator;
 use crate::mappers::{MapError, MapOutcome, Mapper};
@@ -20,10 +25,12 @@ use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
-/// Cache key: everything that determines a mapping for a layer on an arch.
+/// Cache key: everything that determines a mapping for a layer on an arch
+/// (all seven dims plus stride, dilation and the depthwise flag — dilation
+/// changes the input halo, hence footprints and every downstream metric).
 pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> String {
     format!(
-        "{}|n{}m{}c{}r{}s{}p{}q{}st{}dw{}",
+        "{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}dw{}",
         acc.name,
         layer.n,
         layer.m,
@@ -33,6 +40,7 @@ pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> String {
         layer.p,
         layer.q,
         layer.stride,
+        layer.dilation,
         layer.depthwise
     )
 }
@@ -40,7 +48,9 @@ pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> String {
 /// One mapped layer in a network plan.
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
+    /// The layer that was mapped.
     pub layer: ConvLayer,
+    /// The mapping result.
     pub outcome: MapOutcome,
     /// Served from the mapping cache (shape already mapped).
     pub cached: bool,
@@ -49,8 +59,11 @@ pub struct LayerPlan {
 /// A whole-network mapping plan.
 #[derive(Debug, Clone)]
 pub struct NetworkPlan {
+    /// Accelerator name the plan targets.
     pub arch: String,
+    /// Mapper that produced the plan.
     pub mapper: String,
+    /// Per-layer plans in network order.
     pub layers: Vec<LayerPlan>,
     /// Wall-clock of the whole compile (all layers, parallel).
     pub compile_time: Duration,
@@ -70,6 +83,11 @@ impl NetworkPlan {
     /// Total MACs.
     pub fn total_macs(&self) -> u64 {
         self.layers.iter().map(|l| l.outcome.evaluation.macs).sum()
+    }
+
+    /// Network-wide energy per MAC, pJ.
+    pub fn pj_per_mac(&self) -> f64 {
+        self.total_energy_uj() * 1e6 / self.total_macs().max(1) as f64
     }
 
     /// Sum of per-layer mapping times (the compile-cost metric; cached
@@ -185,6 +203,144 @@ where
     })
 }
 
+/// The result of batch-compiling many networks through one shared
+/// [`MappingService`]: per-network plans plus the batch-wide service
+/// metrics (cross-network cache hit rate, p50/p99 service time).
+#[derive(Debug, Clone)]
+pub struct BatchPlan {
+    /// Accelerator name the batch targets.
+    pub arch: String,
+    /// Mapper that produced the batch.
+    pub mapper: String,
+    /// `(network name, plan)` in submission order.
+    pub networks: Vec<(String, NetworkPlan)>,
+    /// Wall-clock of the whole batch (submit → last reply).
+    pub batch_time: Duration,
+    /// Total layer-mapping requests served.
+    pub requests: u64,
+    /// Requests served from the cross-network mapping cache.
+    pub cache_hits: u64,
+    /// Median in-service time per request (queue + map).
+    pub p50_service: Duration,
+    /// 99th-percentile in-service time per request.
+    pub p99_service: Duration,
+}
+
+impl BatchPlan {
+    /// Cross-network cache hit rate in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.requests as f64
+    }
+
+    /// Layers compiled across all networks.
+    pub fn total_layers(&self) -> usize {
+        self.networks.iter().map(|(_, p)| p.layers.len()).sum()
+    }
+
+    /// Total energy over every network, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.networks.iter().map(|(_, p)| p.total_energy_uj()).sum()
+    }
+
+    /// Total MACs over every network.
+    pub fn total_macs(&self) -> u64 {
+        self.networks.iter().map(|(_, p)| p.total_macs()).sum()
+    }
+}
+
+/// Compile a whole batch of networks on one accelerator: spin up a
+/// [`MappingService`] with `threads` workers, submit **every layer of every
+/// network up front** (so the queue shards the whole batch across the
+/// pool), then collect per-network plans in submission order.
+///
+/// Unlike [`compile_network`], whose cache is scoped to one network, the
+/// service cache here is shared across the batch — a ResNet bottleneck
+/// shape already mapped for one network is a hit for every later network
+/// on the same accelerator. `LayerPlan::cached` reflects that cross-network
+/// cache, and each `NetworkPlan::compile_time` measures that network's
+/// reply-collection wall-clock within the batch.
+pub fn compile_batch<M>(
+    networks: &[(String, Vec<ConvLayer>)],
+    acc: &Accelerator,
+    mapper: &M,
+    threads: usize,
+) -> Result<BatchPlan, MapError>
+where
+    M: Mapper + Clone + Send + 'static,
+{
+    let t0 = std::time::Instant::now();
+    let svc = MappingService::start(acc.clone(), mapper.clone(), threads.max(1));
+
+    // Shard: all layers of all networks enter the queue immediately.
+    let submitted: Vec<(String, Vec<(ConvLayer, JobHandle)>)> = networks
+        .iter()
+        .map(|(name, layers)| {
+            let handles =
+                layers.iter().map(|l| (l.clone(), svc.submit(l.clone()))).collect();
+            (name.clone(), handles)
+        })
+        .collect();
+
+    // Collect per network, preserving network and layer order. Every reply
+    // is drained even after a failure — the queue already holds the whole
+    // batch, so returning early would just hide the same wait inside the
+    // service's Drop; instead the first error surfaces after the drain.
+    let mut plans = Vec::with_capacity(submitted.len());
+    let mut first_error: Option<MapError> = None;
+    for (name, handles) in submitted {
+        let n0 = std::time::Instant::now();
+        let mut layer_plans = Vec::with_capacity(handles.len());
+        for (layer, handle) in handles {
+            match handle.wait() {
+                Ok(reply) => layer_plans.push(LayerPlan {
+                    layer,
+                    outcome: reply.outcome,
+                    cached: reply.cached,
+                }),
+                Err(e) => {
+                    if first_error.is_none() {
+                        first_error = Some(MapError::NoValidMapping(format!(
+                            "{name}/{}: {e}",
+                            layer.name
+                        )));
+                    }
+                }
+            }
+        }
+        plans.push((
+            name,
+            NetworkPlan {
+                arch: acc.name.clone(),
+                mapper: mapper.name(),
+                layers: layer_plans,
+                compile_time: n0.elapsed(),
+            },
+        ));
+    }
+    if let Some(e) = first_error {
+        return Err(e);
+    }
+
+    // Freeze the metrics before tearing the service down.
+    let metrics = std::sync::Arc::clone(&svc.metrics);
+    svc.shutdown();
+    let ordering = std::sync::atomic::Ordering::Relaxed;
+    let percentiles = metrics.service_time_percentiles(&[0.50, 0.99]);
+    Ok(BatchPlan {
+        arch: acc.name.clone(),
+        mapper: mapper.name(),
+        networks: plans,
+        batch_time: t0.elapsed(),
+        requests: metrics.requests.load(ordering),
+        cache_hits: metrics.cache_hits.load(ordering),
+        p50_service: percentiles[0],
+        p99_service: percentiles[1],
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -227,6 +383,26 @@ mod tests {
     }
 
     #[test]
+    fn batch_compiles_two_networks_with_cross_network_cache() {
+        let acc = presets::eyeriss();
+        let networks = vec![
+            ("alexnet".to_string(), zoo::alexnet()),
+            ("alexnet-again".to_string(), zoo::alexnet()),
+        ];
+        let batch = compile_batch(&networks, &acc, &LocalMapper::new(), 1).unwrap();
+        assert_eq!(batch.networks.len(), 2);
+        assert_eq!(batch.total_layers(), 10);
+        assert_eq!(batch.requests, 10);
+        // One worker processes requests in submission order, so every layer
+        // of the second (identical) network hits the shared cache.
+        assert_eq!(batch.cache_hits, 5);
+        assert!((batch.hit_rate() - 0.5).abs() < 1e-12);
+        assert!(batch.p50_service <= batch.p99_service);
+        assert!(batch.total_energy_uj() > 0.0);
+        assert_eq!(batch.total_macs(), 2 * zoo::alexnet().iter().map(|l| l.macs()).sum::<u64>());
+    }
+
+    #[test]
     fn layer_key_distinguishes_arch_and_shape() {
         let a = presets::eyeriss();
         let b = presets::nvdla();
@@ -235,5 +411,9 @@ mod tests {
         assert_ne!(layer_key(&l1, &a), layer_key(&l1, &b));
         assert_ne!(layer_key(&l1, &a), layer_key(&l2, &a));
         assert_eq!(layer_key(&l1, &a), layer_key(&l1, &a));
+        // Dilation changes the input halo and must not collide in the cache.
+        let mut dilated = l1.clone();
+        dilated.dilation = 2;
+        assert_ne!(layer_key(&l1, &a), layer_key(&dilated, &a));
     }
 }

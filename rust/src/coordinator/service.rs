@@ -19,31 +19,133 @@ use std::time::{Duration, Instant};
 struct MapRequest {
     layer: ConvLayer,
     reply: mpsc::Sender<Result<MapReply, String>>,
+    /// Stamped at submission so `service_time` covers queue wait + map.
+    submitted: Instant,
 }
 
 /// Service answer.
 #[derive(Debug, Clone)]
 pub struct MapReply {
+    /// The mapping result.
     pub outcome: MapOutcome,
+    /// Served from the mapping cache (shape already mapped).
     pub cached: bool,
     /// Total in-service time (queue + map).
     pub service_time: Duration,
 }
 
-/// Counters exported by the service.
+/// Cap on retained service-time samples: percentiles are computed over the
+/// most recent window so a long-lived (compiler-embedded) service's memory
+/// stays bounded at ~512 KiB however many requests it serves.
+const MAX_SAMPLES: usize = 1 << 16;
+
+/// Bounded ring of recent service-time samples, ns.
+#[derive(Debug, Default)]
+struct SampleRing {
+    buf: Vec<u64>,
+    next: usize,
+}
+
+impl SampleRing {
+    fn push(&mut self, ns: u64) {
+        if self.buf.len() < MAX_SAMPLES {
+            self.buf.push(ns);
+        } else {
+            self.buf[self.next] = ns;
+            self.next = (self.next + 1) % MAX_SAMPLES;
+        }
+    }
+}
+
+/// Nearest-rank percentile over an ascending-sorted sample slice.
+fn percentile_of(sorted: &[u64], q: f64) -> Duration {
+    if sorted.is_empty() {
+        return Duration::ZERO;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let idx = ((sorted.len() - 1) as f64 * q).round() as usize;
+    Duration::from_nanos(sorted[idx])
+}
+
+/// Counters exported by the service: monotone totals plus a bounded window
+/// of service-time samples for percentile queries (the batch pipeline
+/// reports p50/p99).
 #[derive(Debug, Default)]
 pub struct ServiceMetrics {
+    /// Requests answered (hits + misses + errors).
     pub requests: AtomicU64,
+    /// Requests served from the mapping cache.
     pub cache_hits: AtomicU64,
+    /// Requests answered with a mapper error.
     pub errors: AtomicU64,
     /// Sum of service times, ns (divide by requests for the mean).
     pub service_ns: AtomicU64,
+    /// Most recent service times, ns (percentile source; bounded).
+    samples_ns: Mutex<SampleRing>,
 }
 
 impl ServiceMetrics {
+    /// Record one answered request. Called by the workers; totals only ever
+    /// grow, so readers can treat every counter as monotone.
+    fn record(&self, service_time: Duration, cached: bool, error: bool) {
+        let ns = service_time.as_nanos() as u64;
+        self.requests.fetch_add(1, Ordering::Relaxed);
+        self.service_ns.fetch_add(ns, Ordering::Relaxed);
+        if cached {
+            self.cache_hits.fetch_add(1, Ordering::Relaxed);
+        }
+        if error {
+            self.errors.fetch_add(1, Ordering::Relaxed);
+        }
+        self.samples_ns.lock().unwrap().push(ns);
+    }
+
+    /// Sorted snapshot of the retained service-time window.
+    fn sorted_samples(&self) -> Vec<u64> {
+        let mut samples = self.samples_ns.lock().unwrap().buf.clone();
+        samples.sort_unstable();
+        samples
+    }
+
+    /// Mean service time over all requests so far.
     pub fn mean_service_time(&self) -> Duration {
         let n = self.requests.load(Ordering::Relaxed).max(1);
         Duration::from_nanos(self.service_ns.load(Ordering::Relaxed) / n)
+    }
+
+    /// Service-time percentile (`q` in `[0, 1]`, nearest-rank) over the
+    /// retained window; zero before any request completes.
+    pub fn percentile_service_time(&self, q: f64) -> Duration {
+        percentile_of(&self.sorted_samples(), q)
+    }
+
+    /// Several percentiles from a single sorted snapshot (one lock, one
+    /// sort — use this instead of repeated [`percentile_service_time`]
+    /// calls when reporting more than one quantile).
+    ///
+    /// [`percentile_service_time`]: ServiceMetrics::percentile_service_time
+    pub fn service_time_percentiles(&self, qs: &[f64]) -> Vec<Duration> {
+        let sorted = self.sorted_samples();
+        qs.iter().map(|&q| percentile_of(&sorted, q)).collect()
+    }
+
+    /// Median (p50) service time.
+    pub fn p50_service_time(&self) -> Duration {
+        self.percentile_service_time(0.50)
+    }
+
+    /// Tail (p99) service time.
+    pub fn p99_service_time(&self) -> Duration {
+        self.percentile_service_time(0.99)
+    }
+
+    /// Cache hit rate in `[0, 1]` (0 before any request completes).
+    pub fn hit_rate(&self) -> f64 {
+        let requests = self.requests.load(Ordering::Relaxed);
+        if requests == 0 {
+            return 0.0;
+        }
+        self.cache_hits.load(Ordering::Relaxed) as f64 / requests as f64
     }
 }
 
@@ -51,6 +153,7 @@ impl ServiceMetrics {
 pub struct MappingService {
     tx: Option<mpsc::Sender<MapRequest>>,
     workers: Vec<std::thread::JoinHandle<()>>,
+    /// Live service counters; clone the `Arc` to keep them past shutdown.
     pub metrics: Arc<ServiceMetrics>,
 }
 
@@ -78,7 +181,6 @@ impl MappingService {
                     guard.recv()
                 };
                 let Ok(req) = req else { break }; // channel closed → drain
-                let t0 = Instant::now();
                 let key = layer_key(&req.layer, &acc);
                 let hit = cache.lock().unwrap().get(&key).cloned();
                 let (result, cached) = match hit {
@@ -91,15 +193,8 @@ impl MappingService {
                         Err(e) => (Err(e.to_string()), false),
                     },
                 };
-                let service_time = t0.elapsed();
-                metrics.requests.fetch_add(1, Ordering::Relaxed);
-                metrics.service_ns.fetch_add(service_time.as_nanos() as u64, Ordering::Relaxed);
-                if cached {
-                    metrics.cache_hits.fetch_add(1, Ordering::Relaxed);
-                }
-                if result.is_err() {
-                    metrics.errors.fetch_add(1, Ordering::Relaxed);
-                }
+                let service_time = req.submitted.elapsed();
+                metrics.record(service_time, cached, result.is_err());
                 // Receiver may have given up; ignore send failures.
                 let _ = req.reply.send(result.map(|outcome| MapReply { outcome, cached, service_time }));
             }));
@@ -113,7 +208,7 @@ impl MappingService {
         self.tx
             .as_ref()
             .expect("service running")
-            .send(MapRequest { layer, reply: reply_tx })
+            .send(MapRequest { layer, reply: reply_tx, submitted: Instant::now() })
             .expect("workers alive");
         JobHandle { rx: reply_rx }
     }
@@ -204,5 +299,39 @@ mod tests {
         let h = svc.submit(zoo::alexnet()[0].clone());
         h.wait().unwrap();
         svc.shutdown(); // must not hang
+    }
+
+    #[test]
+    fn percentiles_and_hit_rate_track_requests() {
+        let svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 2);
+        let replies = svc.map_all(&zoo::vgg16());
+        assert!(replies.iter().all(|r| r.is_ok()));
+        let m = &svc.metrics;
+        assert!(m.p50_service_time() > Duration::ZERO);
+        assert!(m.p50_service_time() <= m.p99_service_time());
+        // The first request of a fresh service is always a miss.
+        assert!(m.hit_rate() < 1.0);
+        assert!(m.percentile_service_time(0.0) <= m.percentile_service_time(1.0));
+        svc.shutdown();
+    }
+
+    #[test]
+    fn empty_metrics_are_zero() {
+        let m = ServiceMetrics::default();
+        assert_eq!(m.p50_service_time(), Duration::ZERO);
+        assert_eq!(m.p99_service_time(), Duration::ZERO);
+        assert_eq!(m.hit_rate(), 0.0);
+        assert_eq!(m.service_time_percentiles(&[0.5, 0.99]), vec![Duration::ZERO; 2]);
+    }
+
+    #[test]
+    fn sample_ring_is_bounded() {
+        let mut ring = SampleRing::default();
+        for i in 0..(MAX_SAMPLES + 10) as u64 {
+            ring.push(i);
+        }
+        assert_eq!(ring.buf.len(), MAX_SAMPLES);
+        // The overflow entries overwrote the oldest slots.
+        assert!(ring.buf.contains(&(MAX_SAMPLES as u64 + 5)));
     }
 }

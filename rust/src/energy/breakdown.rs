@@ -16,6 +16,7 @@ pub struct EnergyBreakdown {
 }
 
 impl EnergyBreakdown {
+    /// All-zero breakdown for a machine with `n_levels` storage levels.
     pub fn zero(n_levels: usize) -> Self {
         Self { level_pj: vec![0.0; n_levels], noc_pj: 0.0, mac_pj: 0.0 }
     }

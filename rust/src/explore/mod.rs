@@ -15,23 +15,31 @@ use crate::workload::ConvLayer;
 /// One hardware design point to evaluate.
 #[derive(Debug, Clone)]
 pub struct DesignPoint {
+    /// Human-readable design label.
     pub label: String,
+    /// The accelerator variant.
     pub acc: Accelerator,
 }
 
 /// Aggregated result of mapping the workload set on one design.
 #[derive(Debug, Clone)]
 pub struct DesignResult {
+    /// Human-readable design label.
     pub label: String,
+    /// Total energy over the workload set, µJ.
     pub total_energy_uj: f64,
+    /// Total roofline latency over the workload set, cycles.
     pub total_latency_cycles: u64,
+    /// MAC-weighted mean PE utilization.
     pub mean_utilization: f64,
+    /// Total MACs over the workload set.
     pub total_macs: u64,
     /// Energy-delay product, µJ · Mcycles.
     pub edp: f64,
 }
 
 impl DesignResult {
+    /// Energy per MAC, pJ.
     pub fn pj_per_mac(&self) -> f64 {
         self.total_energy_uj * 1e6 / self.total_macs.max(1) as f64
     }
@@ -41,7 +49,9 @@ impl DesignResult {
 /// accelerator.
 #[derive(Debug, Clone)]
 pub struct SweepGrid {
+    /// PE-array geometries `(rows, cols)` to try.
     pub pe_dims: Vec<(u64, u64)>,
+    /// Level-1 buffer depths (words) to try.
     pub l1_depths: Vec<u64>,
 }
 

@@ -18,9 +18,13 @@
 //! * [`mapspace`] — map-space enumeration, sizes and dataflow constraints.
 //! * [`mappers`] — LOCAL (one pass) and the baseline mappers (dataflow-
 //!   constrained search, random, exhaustive, genetic).
-//! * [`coordinator`] — the multi-layer compile-time mapping service.
-//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels.
-//! * [`report`] — emitters for the paper's tables and figures.
+//! * [`coordinator`] — the multi-layer compile-time mapping service and the
+//!   batch pipeline ([`coordinator::compile_batch`]) that shards whole
+//!   model zoos across the worker pool behind one cross-network cache.
+//! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels
+//!   (behind the `pjrt` feature; a stub otherwise).
+//! * [`report`] — emitters for the paper's tables and figures plus the
+//!   batch-compile summary.
 //!
 //! ## Quickstart
 //!
@@ -37,6 +41,8 @@
 //! let eval = evaluate(&layer, &acc, &mapping).unwrap();
 //! assert!(eval.energy.total_pj() > 0.0);
 //! ```
+
+#![warn(missing_docs)]
 
 pub mod arch;
 pub mod coordinator;

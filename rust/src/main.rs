@@ -1,9 +1,10 @@
 //! `local-mapper` — CLI for the LOCAL mapping framework.
 //!
 //! Subcommands (see `local-mapper help`):
-//!   map       map one layer, print the loop nest + evaluation
-//!   compile   map a whole network through the coordinator
-//!   table2    reproduce paper Table 2 (workloads + MAC counts)
+//!   map         map one layer, print the loop nest + evaluation
+//!   compile     map a whole network through the coordinator
+//!   compile-all batch-compile the whole zoo through the shared-cache service
+//!   table2      reproduce paper Table 2 (workloads + MAC counts)
 //!   table3    reproduce paper Table 3 (mapping time, LOCAL vs RS/WS/OS)
 //!   fig3      reproduce paper Fig. 3 (random-mapping energy distribution)
 //!   fig7      reproduce paper Fig. 7 (energy breakdowns)
@@ -12,7 +13,7 @@
 //!   run       execute an AOT conv artifact via PJRT and verify numerics
 
 use local_mapper::arch::{config, presets, Accelerator};
-use local_mapper::coordinator::compile_network;
+use local_mapper::coordinator::{compile_batch, compile_network, BatchPlan};
 use local_mapper::mappers::genetic::GeneticMapper;
 use local_mapper::mappers::{ConstrainedSearch, LocalMapper, Mapper, RandomMapper};
 use local_mapper::mapspace::{self, Dataflow};
@@ -28,6 +29,7 @@ fn main() {
     let code = match args.subcommand() {
         Some("map") => cmd_map(&args),
         Some("compile") => cmd_compile(&args),
+        Some("compile-all") => cmd_compile_all(&args),
         Some("table2") => cmd_table2(),
         Some("table3") => cmd_table3(&args),
         Some("fig3") => cmd_fig3(&args),
@@ -59,6 +61,9 @@ USAGE: local-mapper <subcommand> [options]
   map      --layer <net:idx|MxCxRxSxPxQ> [--arch eyeriss] [--mapper local|rs|ws|os|random|ga]
   compile  --network <vgg16|vgg02|resnet50|resnet18|googlenet|squeezenet|mobilenetv2|alexnet>
            | --network-file <layers.yaml>   [--arch eyeriss] [--threads 4]
+  compile-all  [--arch eyeriss] [--threads 4] [--mapper local|rs|ws|os|random|ga]
+           (batch-compiles vgg16+resnet50+mobilenetv2+squeezenet+alexnet
+            through the shared-cache service; reports hit rate + p50/p99)
   table2
   table3   [--budget 3000] [--seed 42] [--csv]
   fig3     [--n 3000] [--seed 42] [--csv]
@@ -179,6 +184,57 @@ fn cmd_compile(args: &Args) -> i32 {
         Ok(())
     };
     report_result(run())
+}
+
+/// Batch-compile the whole zoo ([`zoo::batch_zoo`]) through the
+/// shared-cache mapping service and print the summary table plus the
+/// batch-wide cache/service metrics.
+fn cmd_compile_all(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let acc = resolve_arch(args)?;
+        let threads = args.get_num::<usize>("threads", 4);
+        let seed = args.get_num::<u64>("seed", 42);
+        let budget = args.get_num::<u64>("budget", 300);
+        let networks = zoo::batch_zoo();
+        let batch = match args.get_or("mapper", "local") {
+            "local" => compile_batch(&networks, &acc, &LocalMapper::new(), threads),
+            "random" => compile_batch(&networks, &acc, &RandomMapper::new(budget, seed), threads),
+            "ga" => compile_batch(&networks, &acc, &GeneticMapper::new(32, 20, seed), threads),
+            df => {
+                let d = Dataflow::parse(df).ok_or_else(|| format!("unknown mapper '{df}'"))?;
+                compile_batch(&networks, &acc, &ConstrainedSearch::new(d, budget, seed), threads)
+            }
+        }
+        .map_err(|e| e.to_string())?;
+        print_batch(&batch, threads);
+        Ok(())
+    };
+    report_result(run())
+}
+
+fn print_batch(batch: &BatchPlan, threads: usize) {
+    println!("{}", report::render_batch_summary(batch).render());
+    println!(
+        "batch: arch={} mapper={} networks={} layers={} threads={threads}",
+        batch.arch,
+        batch.mapper,
+        batch.networks.len(),
+        batch.total_layers(),
+    );
+    println!(
+        "cache: {}/{} hits ({:.1}%)  service time: p50={} p99={}  batch wall-clock: {}",
+        batch.cache_hits,
+        batch.requests,
+        batch.hit_rate() * 100.0,
+        local_mapper::util::bench::fmt_duration(batch.p50_service),
+        local_mapper::util::bench::fmt_duration(batch.p99_service),
+        local_mapper::util::bench::fmt_duration(batch.batch_time)
+    );
+    println!(
+        "total: {} MACs, {} µJ across the batch",
+        batch.total_macs(),
+        fmt_f64(batch.total_energy_uj())
+    );
 }
 
 fn cmd_table2() -> i32 {

@@ -15,16 +15,19 @@ use std::cell::Cell;
 /// permutation-swap moves and a geometric cooling schedule.
 #[derive(Debug, Clone)]
 pub struct AnnealingMapper {
+    /// Number of annealing steps.
     pub steps: u64,
     /// Initial acceptance temperature as a fraction of the starting energy.
     pub t0_frac: f64,
     /// Geometric cooling factor per step.
     pub alpha: f64,
+    /// PRNG seed (deterministic across runs).
     pub seed: u64,
     evaluated: Cell<u64>,
 }
 
 impl AnnealingMapper {
+    /// SA mapper with the given step budget and seed.
     pub fn new(steps: u64, seed: u64) -> Self {
         assert!(steps > 0);
         Self { steps, t0_frac: 0.1, alpha: 0.995, seed, evaluated: Cell::new(0) }

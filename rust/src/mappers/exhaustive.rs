@@ -23,10 +23,12 @@ pub struct ExhaustiveMapper {
 }
 
 impl ExhaustiveMapper {
+    /// Enumerator truncated at `max_candidates` evaluations.
     pub fn new(max_candidates: u64) -> Self {
         Self { max_candidates, permute: false, evaluated: Cell::new(0) }
     }
 
+    /// Builder: also enumerate the rotation set of per-level permutations.
     pub fn with_permutations(mut self) -> Self {
         self.permute = true;
         self

@@ -16,14 +16,19 @@ use std::cell::Cell;
 /// factor-migration mutation, per-dim crossover, elitism.
 #[derive(Debug, Clone)]
 pub struct GeneticMapper {
+    /// Population size (≥ 4; a quarter survives as elite).
     pub population: usize,
+    /// Number of generations.
     pub generations: usize,
+    /// Per-child mutation probability.
     pub mutation_rate: f64,
+    /// PRNG seed (deterministic across runs).
     pub seed: u64,
     evaluated: Cell<u64>,
 }
 
 impl GeneticMapper {
+    /// GA mapper with the given population, generations and seed.
     pub fn new(population: usize, generations: usize, seed: u64) -> Self {
         assert!(population >= 4);
         Self { population, generations, mutation_rate: 0.3, seed, evaluated: Cell::new(0) }

@@ -31,6 +31,7 @@ use crate::workload::{ConvLayer, Dim};
 pub struct LocalMapper;
 
 impl LocalMapper {
+    /// Construct the (stateless) LOCAL mapper.
     pub fn new() -> Self {
         LocalMapper
     }

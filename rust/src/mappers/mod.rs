@@ -22,22 +22,49 @@ use crate::arch::Accelerator;
 use crate::mapping::{Mapping, MappingError};
 use crate::model::{evaluate_unchecked, Evaluation};
 use crate::workload::ConvLayer;
+use std::fmt;
 use std::time::{Duration, Instant};
 
 /// Mapper failure.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum MapError {
-    #[error("no valid mapping found: {0}")]
+    /// The mapper exhausted its budget/space without a valid mapping.
     NoValidMapping(String),
-    #[error(transparent)]
-    Invalid(#[from] MappingError),
+    /// A constructed mapping failed validation.
+    Invalid(MappingError),
+}
+
+impl fmt::Display for MapError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapError::NoValidMapping(msg) => write!(f, "no valid mapping found: {msg}"),
+            MapError::Invalid(e) => fmt::Display::fmt(e, f),
+        }
+    }
+}
+
+impl std::error::Error for MapError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            MapError::NoValidMapping(_) => None,
+            MapError::Invalid(e) => Some(e),
+        }
+    }
+}
+
+impl From<MappingError> for MapError {
+    fn from(e: MappingError) -> Self {
+        MapError::Invalid(e)
+    }
 }
 
 /// Result of running a mapper: the chosen mapping, its evaluation, and the
 /// search cost (the paper's *mapping time*, Table 3).
 #[derive(Debug, Clone)]
 pub struct MapOutcome {
+    /// The chosen mapping.
     pub mapping: Mapping,
+    /// Analytical evaluation of the chosen mapping.
     pub evaluation: Evaluation,
     /// Number of candidate evaluations performed (2 for LOCAL — its
     /// constant-size schedule comparison; hundreds–thousands for search).

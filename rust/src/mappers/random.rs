@@ -12,11 +12,14 @@ use crate::workload::ConvLayer;
 /// Best-energy-of-N random mapper.
 #[derive(Debug, Clone)]
 pub struct RandomMapper {
+    /// Number of random candidates to draw.
     pub samples: u64,
+    /// PRNG seed (deterministic across runs).
     pub seed: u64,
 }
 
 impl RandomMapper {
+    /// Best-of-`samples` random mapper with the given seed.
     pub fn new(samples: u64, seed: u64) -> Self {
         assert!(samples > 0);
         Self { samples, seed }
@@ -53,21 +56,26 @@ impl Mapper for RandomMapper {
 pub struct RandomDistribution {
     /// Sorted ascending, µJ.
     pub energies_uj: Vec<f64>,
-    /// The evaluations behind min / median / max (for breakdown plots).
+    /// The evaluation behind the minimum-energy mapping.
     pub min: Evaluation,
+    /// The evaluation behind the median-energy mapping.
     pub med: Evaluation,
+    /// The evaluation behind the maximum-energy mapping.
     pub max: Evaluation,
 }
 
 impl RandomDistribution {
+    /// Minimum energy, µJ (`random_min`).
     pub fn min_uj(&self) -> f64 {
         self.energies_uj[0]
     }
 
+    /// Median energy, µJ (`random_med`).
     pub fn med_uj(&self) -> f64 {
         self.energies_uj[self.energies_uj.len() / 2]
     }
 
+    /// Maximum energy, µJ (`random_max`).
     pub fn max_uj(&self) -> f64 {
         *self.energies_uj.last().unwrap()
     }

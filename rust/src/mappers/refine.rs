@@ -19,13 +19,17 @@ use std::cell::Cell;
 /// or `patience` consecutive rejections.
 #[derive(Debug, Clone)]
 pub struct LocalRefined {
+    /// Hard cap on candidate evaluations (including the LOCAL seed).
     pub budget: u64,
+    /// Consecutive rejections before stopping early.
     pub patience: u64,
+    /// PRNG seed (deterministic across runs).
     pub seed: u64,
     evaluated: Cell<u64>,
 }
 
 impl LocalRefined {
+    /// Refiner around the LOCAL seed with the given budget and seed.
     pub fn new(budget: u64, seed: u64) -> Self {
         assert!(budget > 0);
         Self { budget, patience: budget / 3 + 1, seed, evaluated: Cell::new(0) }

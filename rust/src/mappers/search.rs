@@ -21,17 +21,20 @@ use std::cell::Cell;
 /// Search within a dataflow-constrained map-space.
 #[derive(Debug, Clone)]
 pub struct ConstrainedSearch {
+    /// The stationary dataflow restricting the map-space.
     pub dataflow: Dataflow,
     /// Hard cap on candidate evaluations.
     pub budget: u64,
     /// Victory condition: consecutive non-improving candidates before
     /// declaring convergence (Timeloop's `victory-condition`).
     pub patience: u64,
+    /// PRNG seed (deterministic across runs).
     pub seed: u64,
     evaluated: Cell<u64>,
 }
 
 impl ConstrainedSearch {
+    /// Search inside `dataflow`'s subspace with the given budget and seed.
     pub fn new(dataflow: Dataflow, budget: u64, seed: u64) -> Self {
         assert!(budget > 0);
         Self { dataflow, budget, patience: budget / 4 + 1, seed, evaluated: Cell::new(0) }

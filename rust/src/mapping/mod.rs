@@ -40,21 +40,84 @@ pub struct Mapping {
 }
 
 /// Why a mapping is invalid for a (layer, accelerator) pair.
-#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[derive(Debug, Clone, PartialEq, Eq)]
 pub enum MappingError {
-    #[error("level count {found} does not match accelerator levels {expected}")]
-    LevelMismatch { found: usize, expected: usize },
-    #[error("dim {dim}: factors product {product} != layer bound {bound}")]
-    Coverage { dim: Dim, product: u64, bound: u64 },
-    #[error("spatial X factor {used} exceeds PE rows {avail}")]
-    SpatialX { used: u64, avail: u64 },
-    #[error("spatial Y factor {used} exceeds PE cols {avail}")]
-    SpatialY { used: u64, avail: u64 },
-    #[error("level {level} ({name}): tile footprint {footprint} elements exceeds capacity {capacity}")]
-    Bounding { level: usize, name: String, footprint: u64, capacity: u64 },
-    #[error("level {level}: permutation is not a permutation of all dims")]
-    BadPermutation { level: usize },
+    /// The mapping addresses a different number of storage levels than the
+    /// accelerator has.
+    LevelMismatch {
+        /// Levels in the mapping.
+        found: usize,
+        /// Levels in the accelerator.
+        expected: usize,
+    },
+    /// The product of a dimension's factors does not cover its bound.
+    Coverage {
+        /// The offending dimension.
+        dim: Dim,
+        /// Product of all the dimension's factors.
+        product: u64,
+        /// The layer's bound for the dimension.
+        bound: u64,
+    },
+    /// Spatial-X fan-out exceeds the PE array rows.
+    SpatialX {
+        /// Fan-out used.
+        used: u64,
+        /// PE rows available.
+        avail: u64,
+    },
+    /// Spatial-Y fan-out exceeds the PE array columns.
+    SpatialY {
+        /// Fan-out used.
+        used: u64,
+        /// PE columns available.
+        avail: u64,
+    },
+    /// A tile does not fit its storage level (bounding, Eq. 18).
+    Bounding {
+        /// Storage level index.
+        level: usize,
+        /// Storage level name.
+        name: String,
+        /// Tile footprint in elements.
+        footprint: u64,
+        /// Level capacity in elements.
+        capacity: u64,
+    },
+    /// A level's loop order is not a permutation of all seven dims.
+    BadPermutation {
+        /// Storage level index.
+        level: usize,
+    },
 }
+
+impl fmt::Display for MappingError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MappingError::LevelMismatch { found, expected } => {
+                write!(f, "level count {found} does not match accelerator levels {expected}")
+            }
+            MappingError::Coverage { dim, product, bound } => {
+                write!(f, "dim {dim}: factors product {product} != layer bound {bound}")
+            }
+            MappingError::SpatialX { used, avail } => {
+                write!(f, "spatial X factor {used} exceeds PE rows {avail}")
+            }
+            MappingError::SpatialY { used, avail } => {
+                write!(f, "spatial Y factor {used} exceeds PE cols {avail}")
+            }
+            MappingError::Bounding { level, name, footprint, capacity } => write!(
+                f,
+                "level {level} ({name}): tile footprint {footprint} elements exceeds capacity {capacity}"
+            ),
+            MappingError::BadPermutation { level } => {
+                write!(f, "level {level}: permutation is not a permutation of all dims")
+            }
+        }
+    }
+}
+
+impl std::error::Error for MappingError {}
 
 impl Mapping {
     /// The identity ("everything at DRAM") mapping for a layer on an

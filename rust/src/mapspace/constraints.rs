@@ -31,6 +31,7 @@ pub enum Dataflow {
 }
 
 impl Dataflow {
+    /// Canonical short name ("RS"/"WS"/"OS").
     pub fn name(self) -> &'static str {
         match self {
             Dataflow::RowStationary => "RS",
@@ -39,6 +40,7 @@ impl Dataflow {
         }
     }
 
+    /// Parse a (case-insensitive) dataflow name.
     pub fn parse(s: &str) -> Option<Dataflow> {
         match s.to_ascii_uppercase().as_str() {
             "RS" | "ROW" | "ROW-STATIONARY" => Some(Dataflow::RowStationary),
@@ -88,6 +90,7 @@ impl Dataflow {
 /// A restriction of the map-space expressing one dataflow's stationarity.
 #[derive(Debug, Clone)]
 pub struct Constraints {
+    /// Constraint-set name (matches the dataflow short name).
     pub name: &'static str,
     /// Dim that must occupy the spatial-X slot (as much of it as fits).
     pub spatial_x: Option<Dim>,

@@ -52,6 +52,7 @@ pub struct Access {
 }
 
 impl Access {
+    /// Reads + writes.
     pub fn total(&self) -> u64 {
         self.reads + self.writes
     }
@@ -239,6 +240,7 @@ pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mappin
 
 /// Tensor index into `Evaluation::access` rows.
 pub trait TensorIdx {
+    /// Dense row index in `Tensor::ALL` (W, I, O) order.
     fn t_idx(self) -> usize;
 }
 

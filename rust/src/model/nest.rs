@@ -31,14 +31,17 @@ impl LoopList {
         self.len += 1;
     }
 
+    /// Number of non-degenerate loops in the list.
     pub fn len(&self) -> usize {
         self.len
     }
 
+    /// True when no non-degenerate loop is present.
     pub fn is_empty(&self) -> bool {
         self.len == 0
     }
 
+    /// Iterate the loops inner→outer.
     pub fn iter(&self) -> std::slice::Iter<'_, LoopIter> {
         self.items[..self.len].iter()
     }

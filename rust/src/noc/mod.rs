@@ -23,15 +23,18 @@ use std::collections::HashMap;
 /// port of the row (the L1/GLB side).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct Link {
+    /// Source router `(row, col)`.
     pub from: (i32, i32),
+    /// Destination router `(row, col)`.
     pub to: (i32, i32),
 }
 
 /// Mesh traffic accounting for one mapping.
 #[derive(Debug, Clone)]
 pub struct MeshTraffic {
-    /// Active sub-mesh extent (rows = spatial-X fan-out).
+    /// Active sub-mesh rows (spatial-X fan-out).
     pub rows: u64,
+    /// Active sub-mesh columns (spatial-Y fan-out).
     pub cols: u64,
     /// Total word·hops across all links (exact NoC energy numerator).
     pub word_hops: u64,

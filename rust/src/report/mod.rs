@@ -38,14 +38,23 @@ pub fn table2() -> (Vec<Table2Row>, Table) {
 /// native stationary dataflow search vs LOCAL.
 #[derive(Debug, Clone)]
 pub struct Table3Cell {
+    /// Workload category (Table-2 grouping).
     pub category: Category,
+    /// Workload (layer) name.
     pub workload: String,
+    /// Accelerator name.
     pub arch: String,
+    /// Native dataflow the baseline searched under ("RS"/"WS"/"OS").
     pub dataflow: &'static str,
+    /// Wall-clock of the baseline search.
     pub baseline_time: Duration,
+    /// Candidate evaluations the baseline performed.
     pub baseline_evals: u64,
+    /// Baseline best energy, µJ.
     pub baseline_energy_uj: f64,
+    /// Wall-clock of the LOCAL pass.
     pub local_time: Duration,
+    /// LOCAL energy, µJ.
     pub local_energy_uj: f64,
     /// Mapping-time speedup: baseline / LOCAL (the paper's 2×–49× claim).
     pub speedup: f64,
@@ -133,8 +142,11 @@ pub fn fig3(n: usize, seed: u64) -> (RandomDistribution, Table) {
 /// in the category.
 #[derive(Debug, Clone)]
 pub struct Fig7Panel {
+    /// Accelerator name.
     pub arch: String,
+    /// Native dataflow the baseline searched under.
     pub dataflow: &'static str,
+    /// Workload category of the panel.
     pub category: Category,
     /// (workload, baseline eval, LOCAL eval).
     pub entries: Vec<(String, Evaluation, Evaluation)>,
@@ -186,6 +198,33 @@ pub fn render_fig7_panel(panel: &Fig7Panel, acc: &Accelerator) -> Table {
     t
 }
 
+/// ------------------------------------------------------------ Batch compile
+
+/// Render the `compile-all` batch summary: one row per network with
+/// energy/latency/utilization aggregates plus the cross-network cache
+/// column (the hit rate and service percentiles live on the
+/// [`crate::coordinator::BatchPlan`] itself).
+pub fn render_batch_summary(batch: &crate::coordinator::BatchPlan) -> Table {
+    let mut t = Table::new(vec![
+        "network", "layers", "MACs", "energy (µJ)", "pJ/MAC", "latency (cyc)", "mean util",
+        "cached", "compile",
+    ]);
+    for (name, plan) in &batch.networks {
+        t.row(vec![
+            name.clone(),
+            plan.layers.len().to_string(),
+            plan.total_macs().to_string(),
+            fmt_f64(plan.total_energy_uj()),
+            fmt_f64(plan.pj_per_mac()),
+            plan.total_latency_cycles().to_string(),
+            format!("{:.0}%", plan.mean_utilization() * 100.0),
+            format!("{}/{}", plan.cache_hits(), plan.layers.len()),
+            crate::util::bench::fmt_duration(plan.compile_time),
+        ]);
+    }
+    t
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -213,6 +252,24 @@ mod tests {
         let (d, t) = fig3(50, 7);
         assert!(d.min_uj() <= d.med_uj());
         assert_eq!(t.n_rows(), 3);
+    }
+
+    #[test]
+    fn batch_summary_has_one_row_per_network() {
+        let acc = presets::eyeriss();
+        let networks = vec![
+            ("alexnet".to_string(), zoo::alexnet()),
+            ("vgg02".to_string(), zoo::vgg02()),
+        ];
+        let batch = crate::coordinator::compile_batch(
+            &networks,
+            &acc,
+            &crate::mappers::LocalMapper::new(),
+            2,
+        )
+        .unwrap();
+        let t = render_batch_summary(&batch);
+        assert_eq!(t.n_rows(), 2);
     }
 
     #[test]

@@ -4,135 +4,282 @@
 //!
 //! The interchange format is HLO **text**: jax ≥ 0.5 serializes protos with
 //! 64-bit instruction ids that xla_extension 0.5.1 rejects; the text parser
-//! reassigns ids (see /opt/xla-example/README.md and DESIGN.md §5).
+//! reassigns ids (see DESIGN.md §5).
+//!
+//! # Feature gating
+//!
+//! Actual PJRT execution needs an `xla` binding crate that is not in the
+//! offline crate set, so it sits behind the **`pjrt`** cargo feature. The
+//! default build compiles a stub [`Runtime`] with the same API whose
+//! constructor returns a clean [`RuntimeError`]; manifest parsing and the
+//! host conv oracles below are pure Rust and always available, so the
+//! failure-injection and e2e test suites compile (and self-skip) either way.
 
 use crate::util::yaml::{self, Value};
-use anyhow::{anyhow, bail, Context, Result};
-use std::collections::BTreeMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-/// A PJRT CPU runtime holding compiled executables by name.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    kernels: BTreeMap<String, CompiledKernel>,
+/// Runtime failure: PJRT unavailability, manifest corruption, shape
+/// mismatches, execution errors.
+#[derive(Debug)]
+pub struct RuntimeError(String);
+
+impl RuntimeError {
+    /// Build an error from any displayable message.
+    pub fn msg(m: impl Into<String>) -> Self {
+        RuntimeError(m.into())
+    }
 }
 
-/// One compiled artifact plus its manifest metadata.
-pub struct CompiledKernel {
-    exe: xla::PjRtLoadedExecutable,
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+/// Runtime result alias.
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+/// Manifest entry describing one artifact (written by aot.py).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ManifestEntry {
+    /// Kernel name used for lookup.
     pub name: String,
+    /// HLO-text file, relative to the manifest directory.
+    pub file: String,
     /// Input shapes (row-major dims) in argument order.
     pub input_shapes: Vec<Vec<i64>>,
     /// Output shape (single-array output inside a 1-tuple).
     pub output_shape: Vec<i64>,
 }
 
-/// Manifest entry describing one artifact (written by aot.py).
-#[derive(Debug, Clone, PartialEq)]
-pub struct ManifestEntry {
-    pub name: String,
-    pub file: String,
-    pub input_shapes: Vec<Vec<i64>>,
-    pub output_shape: Vec<i64>,
-}
+#[cfg(feature = "pjrt")]
+mod pjrt_backend {
+    use super::{read_manifest, Result, RuntimeError};
+    use std::collections::BTreeMap;
+    use std::path::Path;
 
-impl Runtime {
-    /// Create a CPU PJRT client.
-    pub fn cpu() -> Result<Self> {
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, kernels: BTreeMap::new() })
+    /// A PJRT CPU runtime holding compiled executables by name.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        kernels: BTreeMap<String, CompiledKernel>,
     }
 
-    /// PJRT platform string (e.g. "cpu").
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// One compiled artifact plus its manifest metadata.
+    pub struct CompiledKernel {
+        exe: xla::PjRtLoadedExecutable,
+        /// Kernel name.
+        pub name: String,
+        /// Input shapes (row-major dims) in argument order.
+        pub input_shapes: Vec<Vec<i64>>,
+        /// Output shape (single-array output inside a 1-tuple).
+        pub output_shape: Vec<i64>,
     }
 
-    /// Load + compile one HLO-text artifact under the given name.
-    pub fn load_hlo_text(
-        &mut self,
-        name: &str,
-        path: &Path,
-        input_shapes: Vec<Vec<i64>>,
-        output_shape: Vec<i64>,
-    ) -> Result<()> {
-        let proto = xla::HloModuleProto::from_text_file(path)
-            .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        self.kernels.insert(
-            name.to_string(),
-            CompiledKernel { exe, name: name.to_string(), input_shapes, output_shape },
-        );
-        Ok(())
-    }
-
-    /// Load every artifact listed in `<dir>/manifest.yaml`.
-    pub fn load_manifest_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
-        let entries = read_manifest(&dir.join("manifest.yaml"))?;
-        let mut names = Vec::new();
-        for e in entries {
-            self.load_hlo_text(&e.name, &dir.join(&e.file), e.input_shapes, e.output_shape)?;
-            names.push(e.name);
+    impl Runtime {
+        /// Create a CPU PJRT client.
+        pub fn cpu() -> Result<Self> {
+            let client = xla::PjRtClient::cpu()
+                .map_err(|e| RuntimeError::msg(format!("creating PJRT CPU client: {e}")))?;
+            Ok(Self { client, kernels: BTreeMap::new() })
         }
-        Ok(names)
-    }
 
-    /// Access a loaded kernel.
-    pub fn kernel(&self, name: &str) -> Result<&CompiledKernel> {
-        self.kernels
-            .get(name)
-            .ok_or_else(|| anyhow!("kernel '{name}' not loaded (have: {:?})", self.kernel_names()))
-    }
+        /// PJRT platform string (e.g. "cpu").
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
 
-    pub fn kernel_names(&self) -> Vec<&str> {
-        self.kernels.keys().map(|s| s.as_str()).collect()
-    }
-}
-
-impl CompiledKernel {
-    /// Execute with f32 inputs (shape-checked against the manifest) and
-    /// return the flattened f32 output.
-    pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
-        if inputs.len() != self.input_shapes.len() {
-            bail!(
-                "kernel {}: got {} inputs, expected {}",
-                self.name,
-                inputs.len(),
-                self.input_shapes.len()
+        /// Load + compile one HLO-text artifact under the given name.
+        pub fn load_hlo_text(
+            &mut self,
+            name: &str,
+            path: &Path,
+            input_shapes: Vec<Vec<i64>>,
+            output_shape: Vec<i64>,
+        ) -> Result<()> {
+            let proto = xla::HloModuleProto::from_text_file(path)
+                .map_err(|e| RuntimeError::msg(format!("parsing HLO text {}: {e}", path.display())))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| RuntimeError::msg(format!("compiling {}: {e}", path.display())))?;
+            self.kernels.insert(
+                name.to_string(),
+                CompiledKernel { exe, name: name.to_string(), input_shapes, output_shape },
             );
+            Ok(())
         }
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (i, (data, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
-            let expect: i64 = shape.iter().product();
-            if data.len() as i64 != expect {
-                bail!(
-                    "kernel {}: input {i} has {} elements, shape {shape:?} needs {expect}",
+
+        /// Load every artifact listed in `<dir>/manifest.yaml`.
+        pub fn load_manifest_dir(&mut self, dir: &Path) -> Result<Vec<String>> {
+            let entries = read_manifest(&dir.join("manifest.yaml"))?;
+            let mut names = Vec::new();
+            for e in entries {
+                self.load_hlo_text(&e.name, &dir.join(&e.file), e.input_shapes, e.output_shape)?;
+                names.push(e.name);
+            }
+            Ok(names)
+        }
+
+        /// Access a loaded kernel.
+        pub fn kernel(&self, name: &str) -> Result<&CompiledKernel> {
+            self.kernels.get(name).ok_or_else(|| {
+                RuntimeError::msg(format!(
+                    "kernel '{name}' not loaded (have: {:?})",
+                    self.kernel_names()
+                ))
+            })
+        }
+
+        /// Names of every loaded kernel.
+        pub fn kernel_names(&self) -> Vec<&str> {
+            self.kernels.keys().map(|s| s.as_str()).collect()
+        }
+    }
+
+    impl CompiledKernel {
+        /// Execute with f32 inputs (shape-checked against the manifest) and
+        /// return the flattened f32 output.
+        pub fn execute_f32(&self, inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            if inputs.len() != self.input_shapes.len() {
+                return Err(RuntimeError::msg(format!(
+                    "kernel {}: got {} inputs, expected {}",
                     self.name,
-                    data.len()
+                    inputs.len(),
+                    self.input_shapes.len()
+                )));
+            }
+            let err = |e: String| RuntimeError::msg(format!("kernel {}: {e}", self.name));
+            let mut literals = Vec::with_capacity(inputs.len());
+            for (i, (data, shape)) in inputs.iter().zip(&self.input_shapes).enumerate() {
+                let expect: i64 = shape.iter().product();
+                if data.len() as i64 != expect {
+                    return Err(RuntimeError::msg(format!(
+                        "kernel {}: input {i} has {} elements, shape {shape:?} needs {expect}",
+                        self.name,
+                        data.len()
+                    )));
+                }
+                literals.push(
+                    xla::Literal::vec1(data)
+                        .reshape(shape)
+                        .map_err(|e| err(format!("reshaping input {i}: {e}")))?,
                 );
             }
-            literals.push(xla::Literal::vec1(data).reshape(shape)?);
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| err(format!("execute: {e}")))?[0][0]
+                .to_literal_sync()
+                .map_err(|e| err(format!("readback: {e}")))?;
+            // aot.py lowers with return_tuple=True → single-element tuple.
+            let out = result.to_tuple1().map_err(|e| err(format!("untuple: {e}")))?;
+            let v = out.to_vec::<f32>().map_err(|e| err(format!("to_vec: {e}")))?;
+            let expect: i64 = self.output_shape.iter().product();
+            if v.len() as i64 != expect {
+                return Err(RuntimeError::msg(format!(
+                    "kernel {}: output has {} elements, expected {expect}",
+                    self.name,
+                    v.len()
+                )));
+            }
+            Ok(v)
         }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → single-element tuple.
-        let out = result.to_tuple1()?;
-        let v = out.to_vec::<f32>()?;
-        let expect: i64 = self.output_shape.iter().product();
-        if v.len() as i64 != expect {
-            bail!("kernel {}: output has {} elements, expected {expect}", self.name, v.len());
-        }
-        Ok(v)
-    }
 
-    /// Output element count.
-    pub fn output_len(&self) -> usize {
-        self.output_shape.iter().product::<i64>() as usize
+        /// Output element count.
+        pub fn output_len(&self) -> usize {
+            self.output_shape.iter().product::<i64>() as usize
+        }
     }
 }
+
+#[cfg(feature = "pjrt")]
+pub use pjrt_backend::{CompiledKernel, Runtime};
+
+#[cfg(not(feature = "pjrt"))]
+mod stub_backend {
+    use super::{Result, RuntimeError};
+    use std::collections::BTreeMap;
+    use std::path::Path;
+
+    const UNAVAILABLE: &str = "built without the `pjrt` feature: PJRT execution is unavailable \
+         (rebuild with `--features pjrt` and a vendored xla crate)";
+
+    /// Stub runtime compiled when the `pjrt` feature is off. Mirrors the
+    /// PJRT-backed API; [`Runtime::cpu`] always fails with a clean error.
+    pub struct Runtime {
+        kernels: BTreeMap<String, CompiledKernel>,
+    }
+
+    /// Stub compiled-kernel record (never constructed: the stub
+    /// [`Runtime::cpu`] refuses to start).
+    pub struct CompiledKernel {
+        /// Kernel name.
+        pub name: String,
+        /// Input shapes (row-major dims) in argument order.
+        pub input_shapes: Vec<Vec<i64>>,
+        /// Output shape (single-array output inside a 1-tuple).
+        pub output_shape: Vec<i64>,
+    }
+
+    impl Runtime {
+        /// Refuses to start: the build carries no PJRT backend.
+        pub fn cpu() -> Result<Self> {
+            Err(RuntimeError::msg(UNAVAILABLE))
+        }
+
+        /// PJRT platform string (stub).
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        /// Unavailable in the stub.
+        pub fn load_hlo_text(
+            &mut self,
+            _name: &str,
+            _path: &Path,
+            _input_shapes: Vec<Vec<i64>>,
+            _output_shape: Vec<i64>,
+        ) -> Result<()> {
+            Err(RuntimeError::msg(UNAVAILABLE))
+        }
+
+        /// Unavailable in the stub.
+        pub fn load_manifest_dir(&mut self, _dir: &Path) -> Result<Vec<String>> {
+            Err(RuntimeError::msg(UNAVAILABLE))
+        }
+
+        /// Access a loaded kernel (the stub never holds any).
+        pub fn kernel(&self, name: &str) -> Result<&CompiledKernel> {
+            self.kernels.get(name).ok_or_else(|| {
+                RuntimeError::msg(format!("kernel '{name}' not loaded ({UNAVAILABLE})"))
+            })
+        }
+
+        /// Names of every loaded kernel (always empty in the stub).
+        pub fn kernel_names(&self) -> Vec<&str> {
+            self.kernels.keys().map(|s| s.as_str()).collect()
+        }
+    }
+
+    impl CompiledKernel {
+        /// Unavailable in the stub.
+        pub fn execute_f32(&self, _inputs: &[&[f32]]) -> Result<Vec<f32>> {
+            Err(RuntimeError::msg(UNAVAILABLE))
+        }
+
+        /// Output element count.
+        pub fn output_len(&self) -> usize {
+            self.output_shape.iter().product::<i64>() as usize
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+pub use stub_backend::{CompiledKernel, Runtime};
 
 /// Parse an artifacts manifest (see `python/compile/aot.py`):
 ///
@@ -147,17 +294,19 @@ impl CompiledKernel {
 /// ```
 pub fn read_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
     let src = std::fs::read_to_string(path)
-        .with_context(|| format!("reading manifest {}", path.display()))?;
-    let doc = yaml::parse(&src).map_err(|e| anyhow!("{e}"))?;
+        .map_err(|e| RuntimeError::msg(format!("reading manifest {}: {e}", path.display())))?;
+    let doc = yaml::parse(&src).map_err(|e| RuntimeError::msg(e.to_string()))?;
     let list = doc
         .get("artifacts")
         .and_then(Value::as_list)
-        .ok_or_else(|| anyhow!("manifest missing 'artifacts' list"))?;
+        .ok_or_else(|| RuntimeError::msg("manifest missing 'artifacts' list"))?;
     let shape = |v: &Value| -> Result<Vec<i64>> {
         v.as_list()
-            .ok_or_else(|| anyhow!("shape must be a list"))?
+            .ok_or_else(|| RuntimeError::msg("shape must be a list"))?
             .iter()
-            .map(|x| x.as_u64().map(|u| u as i64).ok_or_else(|| anyhow!("bad shape element")))
+            .map(|x| {
+                x.as_u64().map(|u| u as i64).ok_or_else(|| RuntimeError::msg("bad shape element"))
+            })
             .collect()
     };
     let mut out = Vec::new();
@@ -165,22 +314,23 @@ pub fn read_manifest(path: &Path) -> Result<Vec<ManifestEntry>> {
         let name = e
             .get("name")
             .and_then(Value::as_str)
-            .ok_or_else(|| anyhow!("manifest entry missing name"))?
+            .ok_or_else(|| RuntimeError::msg("manifest entry missing name"))?
             .to_string();
         let file = e
             .get("file")
             .and_then(Value::as_str)
-            .ok_or_else(|| anyhow!("manifest entry {name} missing file"))?
+            .ok_or_else(|| RuntimeError::msg(format!("manifest entry {name} missing file")))?
             .to_string();
         let input_shapes = e
             .get("inputs")
             .and_then(Value::as_list)
-            .ok_or_else(|| anyhow!("manifest entry {name} missing inputs"))?
+            .ok_or_else(|| RuntimeError::msg(format!("manifest entry {name} missing inputs")))?
             .iter()
             .map(shape)
             .collect::<Result<Vec<_>>>()?;
         let output_shape = shape(
-            e.get("output").ok_or_else(|| anyhow!("manifest entry {name} missing output"))?,
+            e.get("output")
+                .ok_or_else(|| RuntimeError::msg(format!("manifest entry {name} missing output")))?,
         )?;
         out.push(ManifestEntry { name, file, input_shapes, output_shape });
     }
@@ -240,6 +390,7 @@ pub fn reference_conv(
 
 /// Reference depthwise convolution (NCHW input, (C,R,S) weights, stride,
 /// no padding) — oracle for the `dw_mobilenet` artifact.
+#[allow(clippy::too_many_arguments)]
 pub fn reference_depthwise(
     input: &[f32],
     weights: &[f32],
@@ -319,6 +470,13 @@ mod tests {
         let path = dir.join("manifest.yaml");
         std::fs::write(&path, "artifacts:\n  - name: k\n").unwrap();
         assert!(read_manifest(&path).is_err());
+    }
+
+    #[test]
+    #[cfg(not(feature = "pjrt"))]
+    fn stub_runtime_fails_cleanly() {
+        let e = Runtime::cpu().err().expect("stub must refuse to start");
+        assert!(e.to_string().contains("pjrt"), "{e}");
     }
 
     #[test]

@@ -10,9 +10,13 @@ use std::time::{Duration, Instant};
 /// Result of a timed run: median, min, max over the measured iterations.
 #[derive(Debug, Clone, Copy)]
 pub struct Timed {
+    /// Median of the measured iterations.
     pub median: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Slowest iteration.
     pub max: Duration,
+    /// Number of measured iterations.
     pub iters: usize,
 }
 

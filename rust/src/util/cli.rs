@@ -8,6 +8,7 @@ use std::collections::BTreeMap;
 /// Parsed arguments: subcommand-style positionals plus `--key value` options.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// Positional arguments in order (first is the subcommand).
     pub positional: Vec<String>,
     options: BTreeMap<String, String>,
     flags: Vec<String>,

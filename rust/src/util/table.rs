@@ -27,10 +27,12 @@ impl Table {
         self
     }
 
+    /// True when the table has no data rows.
     pub fn is_empty(&self) -> bool {
         self.rows.is_empty()
     }
 
+    /// Number of data rows (excluding the header).
     pub fn n_rows(&self) -> usize {
         self.rows.len()
     }

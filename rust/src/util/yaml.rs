@@ -15,15 +15,20 @@ use std::fmt;
 /// Parsed YAML value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Value {
+    /// Scalar (numbers/bools stay strings until a typed accessor runs).
     Str(String),
+    /// Block or inline list.
     List(Vec<Value>),
+    /// Nested map.
     Map(BTreeMap<String, Value>),
 }
 
 /// Parse error with 1-based line information.
 #[derive(Debug, Clone, PartialEq)]
 pub struct YamlError {
+    /// 1-based source line of the error.
     pub line: usize,
+    /// Human-readable description.
     pub msg: String,
 }
 
@@ -36,6 +41,7 @@ impl fmt::Display for YamlError {
 impl std::error::Error for YamlError {}
 
 impl Value {
+    /// Scalar as a string slice.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Value::Str(s) => Some(s),
@@ -43,14 +49,17 @@ impl Value {
         }
     }
 
+    /// Scalar parsed as u64 (underscore separators allowed).
     pub fn as_u64(&self) -> Option<u64> {
         self.as_str().and_then(|s| s.replace('_', "").parse().ok())
     }
 
+    /// Scalar parsed as f64.
     pub fn as_f64(&self) -> Option<f64> {
         self.as_str().and_then(|s| s.parse().ok())
     }
 
+    /// Scalar parsed as a bool (`true`/`yes`/`false`/`no`).
     pub fn as_bool(&self) -> Option<bool> {
         match self.as_str()? {
             "true" | "yes" => Some(true),
@@ -59,6 +68,7 @@ impl Value {
         }
     }
 
+    /// List contents.
     pub fn as_list(&self) -> Option<&[Value]> {
         match self {
             Value::List(v) => Some(v),
@@ -66,6 +76,7 @@ impl Value {
         }
     }
 
+    /// Map contents.
     pub fn as_map(&self) -> Option<&BTreeMap<String, Value>> {
         match self {
             Value::Map(m) => Some(m),

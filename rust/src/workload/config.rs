@@ -24,16 +24,49 @@
 
 use super::ConvLayer;
 use crate::util::yaml::{self, Value};
+use std::fmt;
 
 /// Workload-config error.
-#[derive(Debug, thiserror::Error)]
+#[derive(Debug)]
 pub enum WorkloadError {
-    #[error("{0}")]
-    Yaml(#[from] yaml::YamlError),
-    #[error("workload: {0}")]
+    /// YAML syntax error.
+    Yaml(yaml::YamlError),
+    /// Structurally invalid workload description.
     Invalid(String),
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    /// Underlying I/O failure.
+    Io(std::io::Error),
+}
+
+impl fmt::Display for WorkloadError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            WorkloadError::Yaml(e) => fmt::Display::fmt(e, f),
+            WorkloadError::Invalid(msg) => write!(f, "workload: {msg}"),
+            WorkloadError::Io(e) => write!(f, "io: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for WorkloadError {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            WorkloadError::Yaml(e) => Some(e),
+            WorkloadError::Invalid(_) => None,
+            WorkloadError::Io(e) => Some(e),
+        }
+    }
+}
+
+impl From<yaml::YamlError> for WorkloadError {
+    fn from(e: yaml::YamlError) -> Self {
+        WorkloadError::Yaml(e)
+    }
+}
+
+impl From<std::io::Error> for WorkloadError {
+    fn from(e: std::io::Error) -> Self {
+        WorkloadError::Io(e)
+    }
 }
 
 fn need(v: &Value, key: &str, ctx: &str) -> Result<u64, WorkloadError> {

@@ -18,12 +18,19 @@ use std::fmt;
 /// The seven convolution problem dimensions (paper Eq. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Dim {
+    /// Batch size.
     N,
+    /// Output channels (filters).
     M,
+    /// Input channels.
     C,
+    /// Filter height.
     R,
+    /// Filter width.
     S,
+    /// Output height.
     P,
+    /// Output width.
     Q,
 }
 
@@ -44,10 +51,12 @@ impl Dim {
         }
     }
 
+    /// Inverse of [`Dim::idx`].
     pub fn from_idx(i: usize) -> Dim {
         Dim::ALL[i]
     }
 
+    /// Canonical single-letter name.
     pub fn name(self) -> &'static str {
         match self {
             Dim::N => "N",
@@ -60,6 +69,7 @@ impl Dim {
         }
     }
 
+    /// Parse a (case-insensitive) single-letter dimension name.
     pub fn parse(s: &str) -> Option<Dim> {
         match s {
             "N" | "n" => Some(Dim::N),
@@ -83,14 +93,19 @@ impl fmt::Display for Dim {
 /// The three convolution tensors (paper Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tensor {
+    /// Filter weights `W ∈ R^{MCRS}`.
     Weight,
+    /// Input feature map `I ∈ R^{NCHW}`.
     Input,
+    /// Output feature map `O ∈ R^{NMPQ}`.
     Output,
 }
 
 impl Tensor {
+    /// All tensors in canonical (W, I, O) order.
     pub const ALL: [Tensor; 3] = [Tensor::Weight, Tensor::Input, Tensor::Output];
 
+    /// Display name.
     pub fn name(self) -> &'static str {
         match self {
             Tensor::Weight => "Weight",
@@ -136,14 +151,23 @@ impl fmt::Display for Tensor {
 pub struct ConvLayer {
     /// e.g. `"VGG16_conv9"` — network + index, used in reports and caches.
     pub name: String,
+    /// Batch size.
     pub n: u64,
+    /// Output channels.
     pub m: u64,
+    /// Input channels.
     pub c: u64,
+    /// Filter height.
     pub r: u64,
+    /// Filter width.
     pub s: u64,
+    /// Output height.
     pub p: u64,
+    /// Output width.
     pub q: u64,
+    /// Convolution stride (both axes).
     pub stride: u64,
+    /// Filter dilation (both axes).
     pub dilation: u64,
     /// Depthwise convolution: one filter per channel (`M == C` groups of 1).
     /// Changes weight volume (`M·R·S`) and MAC count (`M·R·S·P·Q·N`).

@@ -306,17 +306,34 @@ pub const NETWORKS: [&str; 8] = [
     "alexnet",
 ];
 
+/// The five-network set the batch-compilation pipeline
+/// (`coordinator::compile_batch`, CLI `compile-all`) shards by default:
+/// the networks the paper's evaluation names.
+pub const BATCH_NETWORKS: [&str; 5] =
+    ["vgg16", "resnet50", "mobilenetv2", "squeezenet", "alexnet"];
+
+/// Materialized batch set: `(network name, layers)` for every entry of
+/// [`BATCH_NETWORKS`], ready to hand to `coordinator::compile_batch`.
+pub fn batch_zoo() -> Vec<(String, Vec<ConvLayer>)> {
+    BATCH_NETWORKS.iter().map(|&n| (n.to_string(), network(n).expect("known network"))).collect()
+}
+
 /// Table-2 workload category.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Category {
+    /// Many input channels (C ≥ M).
     HighC,
+    /// Many output channels (M > C).
     HighM,
+    /// Large spatial output (stem convolutions).
     HighPQ,
 }
 
 impl Category {
+    /// All categories in Table-2 order.
     pub const ALL: [Category; 3] = [Category::HighC, Category::HighM, Category::HighPQ];
 
+    /// The paper's category label.
     pub fn name(self) -> &'static str {
         match self {
             Category::HighC => "High C value",
@@ -329,8 +346,11 @@ impl Category {
 /// One Table-2 row: category, layer, paper-reported MAC count.
 #[derive(Debug, Clone)]
 pub struct Table2Row {
+    /// Workload category.
     pub category: Category,
+    /// The layer as the paper accounted it.
     pub layer: ConvLayer,
+    /// MAC count reported in the paper's Table 2.
     pub paper_macs: u64,
 }
 
@@ -453,6 +473,17 @@ mod tests {
             assert!(network(n).is_some(), "{n}");
         }
         assert!(network("nope").is_none());
+    }
+
+    #[test]
+    fn batch_zoo_covers_the_five_paper_networks() {
+        let batch = batch_zoo();
+        assert_eq!(batch.len(), 5);
+        let layer_counts: Vec<usize> = batch.iter().map(|(_, ls)| ls.len()).collect();
+        assert_eq!(layer_counts, vec![13, 53, 52, 26, 5]);
+        for (name, layers) in &batch {
+            assert!(!layers.is_empty(), "{name}");
+        }
     }
 
     #[test]

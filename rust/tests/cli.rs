@@ -20,7 +20,10 @@ fn run(args: &[&str]) -> (String, String, i32) {
 fn help_lists_subcommands() {
     let (stdout, _, code) = run(&["help"]);
     assert_eq!(code, 0);
-    for sub in ["map", "compile", "table3", "fig3", "fig7", "mapspace", "arch", "run", "simulate", "explore"] {
+    for sub in [
+        "map", "compile", "compile-all", "table3", "fig3", "fig7", "mapspace", "arch", "run",
+        "simulate", "explore",
+    ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
 }
@@ -96,6 +99,27 @@ fn compile_from_network_file() {
     let (_, stderr, code) = run(&["compile", "--network-file", path.to_str().unwrap()]);
     assert_eq!(code, 1);
     assert!(stderr.contains("error"));
+}
+
+#[test]
+fn compile_all_prints_batch_summary_and_metrics() {
+    let (stdout, stderr, code) = run(&["compile-all", "--arch", "eyeriss", "--threads", "4"]);
+    assert_eq!(code, 0, "{stderr}");
+    for net in ["vgg16", "resnet50", "mobilenetv2", "squeezenet", "alexnet"] {
+        assert!(stdout.contains(net), "summary missing {net}");
+    }
+    assert!(stdout.contains("cache:"), "missing cache hit-rate line");
+    assert!(stdout.contains("p50="), "missing p50 service time");
+    assert!(stdout.contains("p99="), "missing p99 service time");
+    assert!(stdout.contains("energy (µJ)"), "missing energy column");
+    assert!(stdout.contains("latency (cyc)"), "missing latency column");
+}
+
+#[test]
+fn compile_all_rejects_unknown_mapper() {
+    let (_, stderr, code) = run(&["compile-all", "--mapper", "frob"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("unknown mapper"));
 }
 
 #[test]

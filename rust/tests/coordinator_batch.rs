@@ -1,0 +1,125 @@
+//! Batch-pipeline integration tests: `compile_batch` must agree with
+//! sequential `compile_network` layer-for-layer, exploit the cross-network
+//! mapping cache on repeated networks, and keep `ServiceMetrics` monotone
+//! across successive batches on one service.
+
+use local_mapper::arch::presets;
+use local_mapper::coordinator::{compile_batch, compile_network, MappingService};
+use local_mapper::mappers::LocalMapper;
+use local_mapper::workload::zoo;
+use std::sync::atomic::Ordering;
+use std::time::Duration;
+
+#[test]
+fn batch_equals_sequential_compile_layer_for_layer() {
+    let acc = presets::eyeriss();
+    let networks = vec![
+        ("vgg16".to_string(), zoo::vgg16()),
+        ("alexnet".to_string(), zoo::alexnet()),
+        ("squeezenet".to_string(), zoo::squeezenet()),
+    ];
+    let batch = compile_batch(&networks, &acc, &LocalMapper::new(), 4).unwrap();
+    assert_eq!(batch.networks.len(), 3);
+    for (name, plan) in &batch.networks {
+        let layers = zoo::network(name).unwrap();
+        let seq = compile_network(&layers, &acc, &LocalMapper::new(), 1).unwrap();
+        assert_eq!(plan.layers.len(), seq.layers.len(), "{name}");
+        for (a, b) in plan.layers.iter().zip(&seq.layers) {
+            assert_eq!(a.layer, b.layer, "{name}: layer order diverged");
+            assert_eq!(a.outcome.mapping, b.outcome.mapping, "{name}/{}", a.layer.name);
+            assert_eq!(a.outcome.evaluation, b.outcome.evaluation, "{name}/{}", a.layer.name);
+        }
+        assert_eq!(plan.total_macs(), seq.total_macs(), "{name}");
+    }
+}
+
+#[test]
+fn repeated_networks_hit_the_cross_network_cache() {
+    let acc = presets::nvdla();
+    // Two copies of the same network on one worker: the worker processes
+    // requests in submission order, so every layer of the second copy is a
+    // guaranteed cache hit (plus any within-network shape repeats).
+    let networks = vec![
+        ("vgg16-a".to_string(), zoo::vgg16()),
+        ("vgg16-b".to_string(), zoo::vgg16()),
+    ];
+    let batch = compile_batch(&networks, &acc, &LocalMapper::new(), 1).unwrap();
+    assert_eq!(batch.requests, 26);
+    assert!(batch.hit_rate() > 0.0);
+    assert!(
+        batch.cache_hits >= 13,
+        "whole second copy should hit: {} hits",
+        batch.cache_hits
+    );
+    // Per-layer flags agree with the aggregate.
+    let flagged: usize = batch
+        .networks
+        .iter()
+        .flat_map(|(_, p)| &p.layers)
+        .filter(|lp| lp.cached)
+        .count();
+    assert_eq!(flagged as u64, batch.cache_hits);
+    // The second copy is entirely cached.
+    assert!(batch.networks[1].1.layers.iter().all(|lp| lp.cached));
+}
+
+#[test]
+fn batch_reports_service_percentiles() {
+    let acc = presets::shidiannao();
+    let batch = compile_batch(
+        &[("mobilenetv2".to_string(), zoo::mobilenet_v2())],
+        &acc,
+        &LocalMapper::new(),
+        4,
+    )
+    .unwrap();
+    assert_eq!(batch.requests, 52);
+    assert!(batch.p50_service > Duration::ZERO);
+    assert!(batch.p50_service <= batch.p99_service);
+    assert!(batch.batch_time >= batch.p99_service);
+}
+
+#[test]
+fn service_metrics_are_monotone_across_batches() {
+    let svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 2);
+    let mut last_requests = 0u64;
+    let mut last_hits = 0u64;
+    let mut last_ns = 0u64;
+    for round in 0..3 {
+        let replies = svc.map_all(&zoo::alexnet());
+        assert!(replies.iter().all(|r| r.is_ok()));
+        let requests = svc.metrics.requests.load(Ordering::Relaxed);
+        let hits = svc.metrics.cache_hits.load(Ordering::Relaxed);
+        let ns = svc.metrics.service_ns.load(Ordering::Relaxed);
+        assert_eq!(requests, last_requests + 5, "round {round}");
+        assert!(hits >= last_hits, "round {round}");
+        assert!(ns >= last_ns, "round {round}");
+        last_requests = requests;
+        last_hits = hits;
+        last_ns = ns;
+    }
+    // After the first round every AlexNet shape is cached: rounds 2 and 3
+    // are all hits.
+    assert!(last_hits >= 10, "hits: {last_hits}");
+    assert!(svc.metrics.p50_service_time() <= svc.metrics.p99_service_time());
+    assert!(svc.metrics.hit_rate() > 0.0);
+    svc.shutdown();
+}
+
+#[test]
+fn whole_batch_zoo_compiles_on_every_preset() {
+    for acc in presets::all() {
+        let batch = compile_batch(&zoo::batch_zoo(), &acc, &LocalMapper::new(), 4)
+            .unwrap_or_else(|e| panic!("batch on {}: {e}", acc.name));
+        assert_eq!(batch.networks.len(), 5);
+        assert_eq!(batch.total_layers(), 13 + 53 + 52 + 26 + 5);
+        assert_eq!(batch.requests, batch.total_layers() as u64);
+        // The zoo repeats shapes heavily (ResNet bottlenecks, VGG pairs):
+        // the shared cache must see hits even under racy workers.
+        assert!(batch.hit_rate() > 0.0, "{}: no cache hits", acc.name);
+        for (name, plan) in &batch.networks {
+            assert!(plan.total_energy_uj() > 0.0, "{name}");
+            assert!(plan.total_latency_cycles() > 0, "{name}");
+        }
+    }
+}
