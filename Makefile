@@ -3,10 +3,11 @@
 #   make check      fmt --check + clippy -D warnings + tier-1 build/tests
 #   make test       tier-1 only (what the CI gate runs)
 #   make bench      all nine paper/ablation reports
+#   make bench-json perf harness (smoke) → BENCH_eval.json at the repo root
 #   make doc        rustdoc, warnings are errors
 #   make artifacts  AOT-compile the JAX/Pallas conv artifacts (needs jax)
 
-.PHONY: check fmt clippy test bench doc artifacts
+.PHONY: check fmt clippy test bench bench-json doc artifacts
 
 check: fmt clippy test
 
@@ -25,6 +26,9 @@ bench:
 	         table2_workloads table3_mapping_time; do \
 	    cargo bench --bench $$b || exit 1; \
 	done
+
+bench-json:
+	cargo run --release --bin local-mapper -- perf --smoke --out BENCH_eval.json
 
 doc:
 	RUSTDOCFLAGS="-D warnings" cargo doc --no-deps

@@ -28,21 +28,94 @@ use std::time::Duration;
 /// Cache key: everything that determines a mapping for a layer on an arch
 /// (all seven dims plus stride, dilation and the depthwise flag — dilation
 /// changes the input halo, hence footprints and every downstream metric).
-pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> String {
-    format!(
-        "{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}dw{}",
-        acc.name,
-        layer.n,
-        layer.m,
-        layer.c,
-        layer.r,
-        layer.s,
-        layer.p,
-        layer.q,
-        layer.stride,
-        layer.dilation,
-        layer.depthwise
-    )
+///
+/// Formerly a formatted `String`; now a plain struct so keys hash without
+/// formatting on every request, and [`LayerKey::fnv1a`] gives a stable
+/// 64-bit fingerprint for cache sharding ([`service::MappingService`]'s
+/// shard pick). The [`std::fmt::Display`] impl reproduces the old string
+/// form for logs and reports.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct LayerKey {
+    /// Accelerator name (presets are unique by name; YAML configs should
+    /// be, too).
+    pub arch: String,
+    /// The seven problem-dimension bounds, [`crate::workload::Dim::idx`]
+    /// order (N, M, C, R, S, P, Q).
+    pub dims: [u64; 7],
+    /// Convolution stride.
+    pub stride: u64,
+    /// Filter dilation (changes the input halo).
+    pub dilation: u64,
+    /// Depthwise flag (changes weight volume and Input relevance).
+    pub depthwise: bool,
+}
+
+impl LayerKey {
+    /// Build the key for a layer on an accelerator.
+    pub fn new(layer: &ConvLayer, acc: &Accelerator) -> Self {
+        Self {
+            arch: acc.name.clone(),
+            dims: [layer.n, layer.m, layer.c, layer.r, layer.s, layer.p, layer.q],
+            stride: layer.stride,
+            dilation: layer.dilation,
+            depthwise: layer.depthwise,
+        }
+    }
+
+    /// Stable FNV-1a 64-bit fingerprint over the canonical field encoding
+    /// (arch bytes, then each numeric field little-endian). Used for cache
+    /// sharding — stability across processes matters more than hash
+    /// quality here, and FNV mixes the low bits well enough for a
+    /// power-of-two shard count.
+    pub fn fnv1a(&self) -> u64 {
+        let mut h = fnv_bytes(0xcbf2_9ce4_8422_2325, self.arch.as_bytes());
+        for v in self.dims {
+            h = fnv_bytes(h, &v.to_le_bytes());
+        }
+        h = fnv_bytes(h, &self.stride.to_le_bytes());
+        h = fnv_bytes(h, &self.dilation.to_le_bytes());
+        fnv_bytes(h, &[self.depthwise as u8])
+    }
+
+    /// Shard index for an `n`-shard cache.
+    pub fn shard(&self, n: usize) -> usize {
+        (self.fnv1a() % n.max(1) as u64) as usize
+    }
+}
+
+/// One FNV-1a round over a byte slice.
+fn fnv_bytes(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl std::fmt::Display for LayerKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}dw{}",
+            self.arch,
+            self.dims[0],
+            self.dims[1],
+            self.dims[2],
+            self.dims[3],
+            self.dims[4],
+            self.dims[5],
+            self.dims[6],
+            self.stride,
+            self.dilation,
+            self.depthwise
+        )
+    }
+}
+
+/// Build the cache key for a layer on an accelerator (kept as the
+/// call-site-compatible spelling of [`LayerKey::new`]).
+pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> LayerKey {
+    LayerKey::new(layer, acc)
 }
 
 /// One mapped layer in a network plan.
@@ -149,8 +222,8 @@ where
     let threads = threads.max(1);
 
     // Deduplicate shapes.
-    let mut unique: Vec<(String, ConvLayer)> = Vec::new();
-    let mut seen: HashMap<String, usize> = HashMap::new();
+    let mut unique: Vec<(LayerKey, ConvLayer)> = Vec::new();
+    let mut seen: HashMap<LayerKey, usize> = HashMap::new();
     for l in layers {
         let key = layer_key(l, acc);
         if !seen.contains_key(&key) {
@@ -160,7 +233,7 @@ where
     }
 
     // Parallel map over unique shapes.
-    let results: Mutex<HashMap<String, Result<MapOutcome, String>>> = Mutex::new(HashMap::new());
+    let results: Mutex<HashMap<LayerKey, Result<MapOutcome, String>>> = Mutex::new(HashMap::new());
     let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads.min(unique.len().max(1)) {
@@ -183,7 +256,7 @@ where
     // Assemble in network order; duplicate shapes are cache hits.
     let results = results.into_inner().unwrap();
     let mut plans = Vec::with_capacity(layers.len());
-    let mut first_use: std::collections::HashSet<String> = std::collections::HashSet::new();
+    let mut first_use: std::collections::HashSet<LayerKey> = std::collections::HashSet::new();
     for l in layers {
         let key = layer_key(l, acc);
         let out = results
@@ -400,6 +473,32 @@ mod tests {
         assert!(batch.p50_service <= batch.p99_service);
         assert!(batch.total_energy_uj() > 0.0);
         assert_eq!(batch.total_macs(), 2 * zoo::alexnet().iter().map(|l| l.macs()).sum::<u64>());
+    }
+
+    #[test]
+    fn layer_key_display_matches_legacy_string_format() {
+        let acc = presets::eyeriss();
+        let l = zoo::vgg16()[0].clone(); // 64×3×3×3×224×224, stride 1
+        let key = layer_key(&l, &acc);
+        assert_eq!(
+            key.to_string(),
+            format!("{}|n1m64c3r3s3p224q224st1di1dwfalse", acc.name)
+        );
+    }
+
+    #[test]
+    fn layer_key_hash_tracks_equality() {
+        let a = presets::eyeriss();
+        let b = presets::nvdla();
+        let l1 = zoo::vgg16()[0].clone();
+        let l2 = zoo::vgg16()[1].clone();
+        assert_eq!(layer_key(&l1, &a).fnv1a(), layer_key(&l1, &a).fnv1a());
+        assert_ne!(layer_key(&l1, &a).fnv1a(), layer_key(&l1, &b).fnv1a());
+        assert_ne!(layer_key(&l1, &a).fnv1a(), layer_key(&l2, &a).fnv1a());
+        // Shard index is always in range.
+        for n in [1usize, 2, 16, 17] {
+            assert!(layer_key(&l1, &a).shard(n) < n);
+        }
     }
 
     #[test]

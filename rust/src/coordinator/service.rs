@@ -5,13 +5,20 @@
 //! channel. Metrics (requests, cache hits, p50 service time) are exported
 //! for the coordinator's own observability — the paper's compile-time
 //! claim is only credible if mapping latency is measured in situ.
+//!
+//! Two hot-path design points: the cache is **sharded** into
+//! independently-locked shards keyed by the [`LayerKey`] FNV-1a
+//! fingerprint (the old single `Mutex<HashMap>` serialized every worker),
+//! and service-time samples land in a **lock-free ring** — recording a
+//! request is atomic counter bumps plus one relaxed slot store, so metrics
+//! never block the request path.
 
-use super::layer_key;
+use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
 use crate::mappers::{MapOutcome, Mapper};
 use crate::workload::ConvLayer;
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -36,24 +43,94 @@ pub struct MapReply {
 
 /// Cap on retained service-time samples: percentiles are computed over the
 /// most recent window so a long-lived (compiler-embedded) service's memory
-/// stays bounded at ~512 KiB however many requests it serves.
+/// stays bounded at ~512 KiB however many requests it serves. The ring is
+/// allocated up front (lock-free slots cannot grow lazily) — a deliberate
+/// trade of one fixed allocation per service for a mutex-free record path.
 const MAX_SAMPLES: usize = 1 << 16;
 
-/// Bounded ring of recent service-time samples, ns.
-#[derive(Debug, Default)]
+/// Number of independently-locked cache shards. A power of two comfortably
+/// above any realistic worker count, so concurrent misses on *different*
+/// shapes almost never contend on the same lock.
+const CACHE_SHARDS: usize = 16;
+
+/// The mapping cache, split into [`CACHE_SHARDS`] independently-locked
+/// shards keyed by [`LayerKey::shard`] (FNV-1a fingerprint). Replaces the
+/// old single `Mutex<HashMap>` whose one lock serialized every worker's
+/// cache probe and fill.
+struct ShardedCache {
+    shards: Vec<Mutex<HashMap<LayerKey, MapOutcome>>>,
+}
+
+impl ShardedCache {
+    fn new() -> Self {
+        Self { shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
+    }
+
+    fn get(&self, key: &LayerKey) -> Option<MapOutcome> {
+        self.shards[key.shard(CACHE_SHARDS)].lock().unwrap().get(key).cloned()
+    }
+
+    fn insert(&self, key: LayerKey, outcome: MapOutcome) {
+        let shard = key.shard(CACHE_SHARDS);
+        self.shards[shard].lock().unwrap().insert(key, outcome);
+    }
+}
+
+/// Lock-free bounded ring of recent service-time samples, ns.
+///
+/// Writers claim a slot index with a relaxed `fetch_add` on `claimed`,
+/// store the sample, and only then bump `published` — metrics recording
+/// never takes a lock on the request critical path, and readers size their
+/// snapshot by `published`, so a claimed-but-unwritten slot is (almost
+/// never — see below) exposed as a phantom sample. Readers are best-effort
+/// telemetry: a slot overwritten concurrently yields a value from either
+/// generation, and while writers race, out-of-order completions can
+/// transiently expose up to one claimed-but-unwritten slot per in-flight
+/// writer; both resolve as soon as the writers finish. Totals are exact at
+/// quiescence: once every request
+/// has been recorded, `published == claimed` and every counted slot holds
+/// a real sample (asserted by `metrics_totals_exact_with_lock_free_samples`).
 struct SampleRing {
-    buf: Vec<u64>,
-    next: usize,
+    slots: Box<[AtomicU64]>,
+    /// Slot claims ever issued (monotone; next write position).
+    claimed: AtomicUsize,
+    /// Completed stores (monotone; readers snapshot up to this).
+    published: AtomicUsize,
+}
+
+impl Default for SampleRing {
+    fn default() -> Self {
+        Self {
+            slots: (0..MAX_SAMPLES).map(|_| AtomicU64::new(0)).collect(),
+            claimed: AtomicUsize::new(0),
+            published: AtomicUsize::new(0),
+        }
+    }
+}
+
+impl std::fmt::Debug for SampleRing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SampleRing")
+            .field("published", &self.published.load(Ordering::Relaxed))
+            .finish()
+    }
 }
 
 impl SampleRing {
-    fn push(&mut self, ns: u64) {
-        if self.buf.len() < MAX_SAMPLES {
-            self.buf.push(ns);
-        } else {
-            self.buf[self.next] = ns;
-            self.next = (self.next + 1) % MAX_SAMPLES;
-        }
+    fn push(&self, ns: u64) {
+        let i = self.claimed.fetch_add(1, Ordering::Relaxed) % MAX_SAMPLES;
+        self.slots[i].store(ns, Ordering::Release);
+        self.published.fetch_add(1, Ordering::Release);
+    }
+
+    /// Samples retained (exact once all in-flight pushes complete, capped
+    /// at the window size).
+    fn len(&self) -> usize {
+        self.published.load(Ordering::Acquire).min(MAX_SAMPLES)
+    }
+
+    fn snapshot(&self) -> Vec<u64> {
+        (0..self.len()).map(|i| self.slots[i].load(Ordering::Acquire)).collect()
     }
 }
 
@@ -80,13 +157,16 @@ pub struct ServiceMetrics {
     pub errors: AtomicU64,
     /// Sum of service times, ns (divide by requests for the mean).
     pub service_ns: AtomicU64,
-    /// Most recent service times, ns (percentile source; bounded).
-    samples_ns: Mutex<SampleRing>,
+    /// Most recent service times, ns (percentile source; bounded,
+    /// lock-free).
+    samples_ns: SampleRing,
 }
 
 impl ServiceMetrics {
     /// Record one answered request. Called by the workers; totals only ever
-    /// grow, so readers can treat every counter as monotone.
+    /// grow, so readers can treat every counter as monotone. The entire
+    /// record is atomic counter bumps plus one lock-free ring-slot write —
+    /// nothing on the request critical path blocks.
     fn record(&self, service_time: Duration, cached: bool, error: bool) {
         let ns = service_time.as_nanos() as u64;
         self.requests.fetch_add(1, Ordering::Relaxed);
@@ -97,12 +177,12 @@ impl ServiceMetrics {
         if error {
             self.errors.fetch_add(1, Ordering::Relaxed);
         }
-        self.samples_ns.lock().unwrap().push(ns);
+        self.samples_ns.push(ns);
     }
 
     /// Sorted snapshot of the retained service-time window.
     fn sorted_samples(&self) -> Vec<u64> {
-        let mut samples = self.samples_ns.lock().unwrap().buf.clone();
+        let mut samples = self.samples_ns.snapshot();
         samples.sort_unstable();
         samples
     }
@@ -119,8 +199,8 @@ impl ServiceMetrics {
         percentile_of(&self.sorted_samples(), q)
     }
 
-    /// Several percentiles from a single sorted snapshot (one lock, one
-    /// sort — use this instead of repeated [`percentile_service_time`]
+    /// Several percentiles from a single sorted snapshot (one snapshot,
+    /// one sort — use this instead of repeated [`percentile_service_time`]
     /// calls when reporting more than one quantile).
     ///
     /// [`percentile_service_time`]: ServiceMetrics::percentile_service_time
@@ -165,7 +245,7 @@ impl MappingService {
     {
         let (tx, rx) = mpsc::channel::<MapRequest>();
         let rx = Arc::new(Mutex::new(rx));
-        let cache: Arc<Mutex<HashMap<String, MapOutcome>>> = Arc::new(Mutex::new(HashMap::new()));
+        let cache: Arc<ShardedCache> = Arc::new(ShardedCache::new());
         let metrics = Arc::new(ServiceMetrics::default());
         let mut workers = Vec::new();
         for _ in 0..threads.max(1) {
@@ -182,12 +262,12 @@ impl MappingService {
                 };
                 let Ok(req) = req else { break }; // channel closed → drain
                 let key = layer_key(&req.layer, &acc);
-                let hit = cache.lock().unwrap().get(&key).cloned();
+                let hit = cache.get(&key);
                 let (result, cached) = match hit {
                     Some(outcome) => (Ok(outcome), true),
                     None => match mapper.run(&req.layer, &acc) {
                         Ok(outcome) => {
-                            cache.lock().unwrap().insert(key, outcome.clone());
+                            cache.insert(key, outcome.clone());
                             (Ok(outcome), false)
                         }
                         Err(e) => (Err(e.to_string()), false),
@@ -326,12 +406,33 @@ mod tests {
 
     #[test]
     fn sample_ring_is_bounded() {
-        let mut ring = SampleRing::default();
+        let ring = SampleRing::default();
         for i in 0..(MAX_SAMPLES + 10) as u64 {
             ring.push(i);
         }
-        assert_eq!(ring.buf.len(), MAX_SAMPLES);
+        assert_eq!(ring.len(), MAX_SAMPLES);
         // The overflow entries overwrote the oldest slots.
-        assert!(ring.buf.contains(&(MAX_SAMPLES as u64 + 5)));
+        assert!(ring.snapshot().contains(&(MAX_SAMPLES as u64 + 5)));
+    }
+
+    #[test]
+    fn metrics_totals_exact_with_lock_free_samples() {
+        // Per-request totals must stay exact under concurrent recording:
+        // every request bumps the counters and claims exactly one ring
+        // slot, with no lock on the request path to drop or batch samples.
+        let svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 4);
+        let mut layers = Vec::new();
+        for _ in 0..3 {
+            layers.extend(zoo::vgg16());
+        }
+        let replies = svc.map_all(&layers);
+        assert_eq!(replies.len(), 39);
+        assert!(replies.iter().all(|r| r.is_ok()));
+        let m = &svc.metrics;
+        assert_eq!(m.requests.load(Ordering::Relaxed), 39);
+        assert_eq!(m.errors.load(Ordering::Relaxed), 0);
+        assert_eq!(m.samples_ns.len(), 39);
+        assert!(m.p50_service_time() > Duration::ZERO);
+        svc.shutdown();
     }
 }

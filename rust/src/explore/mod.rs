@@ -7,6 +7,11 @@
 //! buffer sizes), maps a workload set onto each with any mapper, and
 //! returns per-design aggregates; [`pareto`] extracts the energy/latency
 //! frontier.
+//!
+//! Every `(layer, design)` evaluation rides the zero-allocation
+//! [`crate::model::EvalContext`] engine through [`Mapper::run`], so sweeps
+//! with search mappers (thousands of candidates per design point) stay on
+//! the hot path end to end.
 
 use crate::arch::Accelerator;
 use crate::mappers::{MapError, Mapper};

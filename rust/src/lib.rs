@@ -21,6 +21,9 @@
 //! * [`coordinator`] — the multi-layer compile-time mapping service and the
 //!   batch pipeline ([`coordinator::compile_batch`]) that shards whole
 //!   model zoos across the worker pool behind one cross-network cache.
+//! * [`perf`] — the performance harness behind `BENCH_eval.json`: old-vs-
+//!   new evaluator throughput, exhaustive thread scaling, zoo batch wall
+//!   time.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels
 //!   (behind the `pjrt` feature; a stub otherwise).
 //! * [`report`] — emitters for the paper's tables and figures plus the
@@ -53,6 +56,7 @@ pub mod mapping;
 pub mod mapspace;
 pub mod model;
 pub mod noc;
+pub mod perf;
 pub mod report;
 pub mod runtime;
 pub mod sim;

@@ -11,6 +11,7 @@
 //!   mapspace  print §3 map-space / design-space sizes
 //!   arch      show or validate an accelerator config
 //!   run       execute an AOT conv artifact via PJRT and verify numerics
+//!   perf      run the performance harness and write BENCH_eval.json
 
 use local_mapper::arch::{config, presets, Accelerator};
 use local_mapper::coordinator::{compile_batch, compile_network, BatchPlan};
@@ -39,6 +40,7 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("simulate") => cmd_simulate(&args),
         Some("explore") => cmd_explore(&args),
+        Some("perf") => cmd_perf(&args),
         Some("help") | None => {
             print_help();
             0
@@ -72,7 +74,10 @@ USAGE: local-mapper <subcommand> [options]
   arch     [--name eyeriss] [--file cfg.yaml] [--dump]
   run      [--artifacts artifacts] [--kernel <name>] [--iters 20] [--verify]
   simulate --layer <spec> [--arch eyeriss] [--single-buffer]
-  explore  --network <name> [--arch eyeriss] (PE × buffer sweep, Pareto front)"
+  explore  --network <name> [--arch eyeriss] (PE × buffer sweep, Pareto front)
+  perf     [--smoke] [--out BENCH_eval.json]
+           (evals/sec old vs context path, exhaustive 1/2/4/8-thread
+            scaling, zoo batch wall time → machine-readable JSON)"
     );
 }
 
@@ -482,6 +487,24 @@ fn cmd_explore(args: &Args) -> i32 {
                 r.total_latency_cycles
             );
         }
+        Ok(())
+    };
+    report_result(run())
+}
+
+/// Run the perf harness and write the `BENCH_eval.json` artifact.
+fn cmd_perf(args: &Args) -> i32 {
+    let run = || -> Result<(), String> {
+        let cfg = if args.flag("smoke") {
+            local_mapper::perf::PerfConfig::smoke()
+        } else {
+            local_mapper::perf::PerfConfig::full()
+        };
+        let report = local_mapper::perf::run(&cfg);
+        println!("{}", report.summary());
+        let out = args.get_or("out", "BENCH_eval.json");
+        std::fs::write(out, report.to_json()).map_err(|e| format!("writing {out}: {e}"))?;
+        println!("wrote {out}");
         Ok(())
     };
     report_result(run())

@@ -6,7 +6,7 @@ use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
-use crate::model::evaluate_unchecked;
+use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
 use crate::workload::ConvLayer;
 use std::cell::Cell;
@@ -106,8 +106,9 @@ impl Mapper for AnnealingMapper {
 
     fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let mut rng = SplitMix64::new(self.seed);
+        let mut ctx = EvalContext::new(layer, acc);
         let mut current = sample_random(layer, acc, &mut rng);
-        let mut cur_e = evaluate_unchecked(layer, acc, &current).energy.total_pj();
+        let mut cur_e = ctx.energy_pj(&current);
         let mut best = current.clone();
         let mut best_e = cur_e;
         let mut temperature = cur_e * self.t0_frac;
@@ -118,7 +119,7 @@ impl Mapper for AnnealingMapper {
             if cand.validate(layer, acc).is_err() {
                 continue;
             }
-            let e = evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            let e = ctx.energy_pj(&cand);
             evaluated += 1;
             let accept = e < cur_e || rng.next_f64() < (-(e - cur_e) / temperature.max(1e-12)).exp();
             if accept {

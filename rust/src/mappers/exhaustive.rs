@@ -2,35 +2,65 @@
 //! straw man, usable here only on small layers / truncated budgets.
 //! Serves as the test oracle: on layers where full enumeration is
 //! feasible, no other mapper may beat it.
+//!
+//! # Parallel enumeration
+//!
+//! The factorization space is an odometer over per-dim ordered splits;
+//! each odometer slot optionally fans out into 7 rotated per-level
+//! permutations. Every candidate therefore has a stable **global index**
+//! `slot × perms + rot`, independent of how the work is divided. The
+//! mapper partitions the (budget-truncated) slot range into contiguous
+//! shards, one per worker thread ([`std::thread::scope`]); each worker
+//! enumerates its shard with a reusable candidate `Mapping` (rotations
+//! applied in place and reset per slot — no per-candidate clone) and a
+//! per-worker [`EvalContext`], tracking its best `(energy, global index,
+//! mapping)`.
+//!
+//! The merge is deterministic: lowest energy wins, exact-tie broken by the
+//! lowest global candidate index. That is precisely the order in which the
+//! single-threaded loop would have kept candidates (strict `<` keeps the
+//! earliest minimum), so the result is identical for every thread count —
+//! pinned by `prop_parallel_exhaustive_matches_single_thread` in
+//! `rust/tests/property.rs`.
 
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
-use crate::model::evaluate_unchecked;
+use crate::model::EvalContext;
 use crate::util::factor::factorizations;
 use crate::workload::{ConvLayer, Dim};
 use std::cell::Cell;
 
 /// Deterministic enumeration of the factorization space (canonical
-/// permutations; optionally a rotation set) with best-energy selection.
+/// permutations; optionally a rotation set) with best-energy selection,
+/// sharded across worker threads.
 #[derive(Debug, Clone)]
 pub struct ExhaustiveMapper {
     /// Stop after this many candidates (the space explodes quickly).
     pub max_candidates: u64,
     /// Also try rotated per-level permutations (×7 candidates).
     pub permute: bool,
+    /// Worker threads the odometer space is sharded across (≥ 1). The
+    /// result is identical for every value (deterministic merge).
+    pub threads: usize,
     evaluated: Cell<u64>,
 }
 
 impl ExhaustiveMapper {
     /// Enumerator truncated at `max_candidates` evaluations.
     pub fn new(max_candidates: u64) -> Self {
-        Self { max_candidates, permute: false, evaluated: Cell::new(0) }
+        Self { max_candidates, permute: false, threads: 1, evaluated: Cell::new(0) }
     }
 
     /// Builder: also enumerate the rotation set of per-level permutations.
     pub fn with_permutations(mut self) -> Self {
         self.permute = true;
+        self
+    }
+
+    /// Builder: shard the enumeration across `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
         self
     }
 
@@ -43,6 +73,26 @@ impl ExhaustiveMapper {
             })
             .product()
     }
+}
+
+/// Decode a linear odometer position into per-dim indices. Dim 0 is the
+/// least-significant digit, matching the serial odometer's carry order.
+fn odometer_at(mut linear: u64, per_dim: &[Vec<Vec<u64>>]) -> [usize; 7] {
+    let mut idx = [0usize; 7];
+    for d in 0..7 {
+        let len = per_dim[d].len() as u64;
+        idx[d] = (linear % len) as usize;
+        linear /= len;
+    }
+    idx
+}
+
+/// Start of shard `w` when `total` slots are split across `workers`
+/// contiguous shards (shard `w` covers `[start(w), start(w + 1))`).
+fn shard_start(total: u64, workers: u64, w: u64) -> u64 {
+    let base = total / workers;
+    let rem = total % workers;
+    w * base + w.min(rem)
 }
 
 impl Mapper for ExhaustiveMapper {
@@ -62,60 +112,94 @@ impl Mapper for ExhaustiveMapper {
         let per_dim: Vec<Vec<Vec<u64>>> =
             Dim::ALL.iter().map(|&d| factorizations(layer.bound(d), slots)).collect();
 
-        // Odometer over the per-dim choices.
-        let mut idx = [0usize; 7];
-        let mut evaluated = 0u64;
-        let mut best: Option<(f64, Mapping)> = None;
-        'outer: loop {
-            // Assemble the candidate.
-            let mut m = Mapping {
-                temporal: vec![[1u64; 7]; n_levels],
-                permutation: vec![Dim::ALL; n_levels],
-                spatial_x: [1; 7],
-                spatial_y: [1; 7],
-            };
-            for d in 0..7 {
-                let split = &per_dim[d][idx[d]];
-                m.spatial_x[d] = split[0];
-                m.spatial_y[d] = split[1];
-                for l in 0..n_levels {
-                    m.temporal[l][d] = split[2 + l];
-                }
+        let perms: u64 = if self.permute { 7 } else { 1 };
+        // Budget-truncated slot range: candidate `slot × perms + rot` is
+        // evaluated iff its global index is below the budget, so only the
+        // first ceil(budget / perms) odometer slots can contribute. (A zero
+        // budget still evaluates one candidate, like the serial loop did.)
+        let budget = self.max_candidates.max(1);
+        let total_slots: u128 = per_dim.iter().map(|v| v.len() as u128).product();
+        let slots_needed = budget.div_ceil(perms);
+        let visit_slots: u64 =
+            if total_slots < slots_needed as u128 { total_slots as u64 } else { slots_needed };
+
+        let n_workers = self.threads.max(1).min(visit_slots.max(1) as usize) as u64;
+        let mut evaluated_total = 0u64;
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        std::thread::scope(|scope| {
+            let mut handles = Vec::with_capacity(n_workers as usize);
+            for w in 0..n_workers {
+                let per_dim = &per_dim;
+                let start = shard_start(visit_slots, n_workers, w);
+                let end = shard_start(visit_slots, n_workers, w + 1);
+                handles.push(scope.spawn(move || {
+                    let mut ctx = EvalContext::new(layer, acc);
+                    // One reusable candidate per worker; rotations mutate it
+                    // in place (no per-rotation clone — the old inner loop
+                    // cloned two Vecs per candidate).
+                    let mut m = Mapping {
+                        temporal: vec![[1u64; 7]; n_levels],
+                        permutation: vec![Dim::ALL; n_levels],
+                        spatial_x: [1; 7],
+                        spatial_y: [1; 7],
+                    };
+                    let mut shard_best: Option<(f64, u64, Mapping)> = None;
+                    let mut evaluated = 0u64;
+                    for slot in start..end {
+                        let idx = odometer_at(slot, per_dim);
+                        for d in 0..7 {
+                            let split = &per_dim[d][idx[d]];
+                            m.spatial_x[d] = split[0];
+                            m.spatial_y[d] = split[1];
+                            for l in 0..n_levels {
+                                m.temporal[l][d] = split[2 + l];
+                            }
+                        }
+                        for p in m.permutation.iter_mut() {
+                            *p = Dim::ALL;
+                        }
+                        for rot in 0..perms {
+                            let cand_index = slot * perms + rot;
+                            if cand_index >= budget {
+                                break;
+                            }
+                            if rot > 0 {
+                                for p in m.permutation.iter_mut() {
+                                    p.rotate_left(1);
+                                }
+                            }
+                            if m.validate(layer, acc).is_ok() {
+                                let pj = ctx.energy_pj(&m);
+                                let improves =
+                                    shard_best.as_ref().map(|(b, _, _)| pj < *b).unwrap_or(true);
+                                if improves {
+                                    shard_best = Some((pj, cand_index, m.clone()));
+                                }
+                            }
+                            evaluated += 1;
+                        }
+                    }
+                    (evaluated, shard_best)
+                }));
             }
-            let perms: u64 = if self.permute { 7 } else { 1 };
-            for rot in 0..perms {
-                let mut cand = m.clone();
-                for l in 0..n_levels {
-                    cand.permutation[l].rotate_left(rot as usize);
-                }
-                if cand.validate(layer, acc).is_ok() {
-                    let e = evaluate_unchecked(layer, acc, &cand);
-                    let pj = e.energy.total_pj();
-                    if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
-                        best = Some((pj, cand));
+            for h in handles {
+                let (ev, shard_best) = h.join().expect("exhaustive shard worker panicked");
+                evaluated_total += ev;
+                if let Some((pj, ci, m)) = shard_best {
+                    let better = match &best {
+                        None => true,
+                        // Deterministic merge: lowest energy; exact tie →
+                        // lowest global candidate index (serial order).
+                        Some((bpj, bci, _)) => pj < *bpj || (pj == *bpj && ci < *bci),
+                    };
+                    if better {
+                        best = Some((pj, ci, m));
                     }
                 }
-                evaluated += 1;
-                if evaluated >= self.max_candidates {
-                    break 'outer;
-                }
             }
-            // Advance the odometer.
-            let mut d = 0;
-            loop {
-                idx[d] += 1;
-                if idx[d] < per_dim[d].len() {
-                    break;
-                }
-                idx[d] = 0;
-                d += 1;
-                if d == 7 {
-                    break 'outer;
-                }
-            }
-        }
-        self.evaluated.set(evaluated);
-        best.map(|(_, m)| m)
+        });
+        self.evaluated.set(evaluated_total);
+        best.map(|(_, _, m)| m)
             .ok_or_else(|| MapError::NoValidMapping("exhaustive found no valid mapping".into()))
     }
 }
@@ -173,6 +257,42 @@ mod tests {
             local.evaluation.energy.total_pj(),
             best.evaluation.energy.total_pj()
         );
+    }
+
+    #[test]
+    fn sharded_enumeration_matches_single_thread() {
+        // Same best mapping, same best energy bits, same evaluation count
+        // at every thread count — the deterministic-merge contract.
+        let acc = small_acc();
+        let layer = ConvLayer::new("tiny", 4, 2, 1, 1, 4, 4);
+        let serial = ExhaustiveMapper::new(40_000).with_permutations();
+        let base = serial.run(&layer, &acc).unwrap();
+        for threads in [2usize, 4, 8] {
+            let par = ExhaustiveMapper::new(40_000).with_permutations().with_threads(threads);
+            let out = par.run(&layer, &acc).unwrap();
+            assert_eq!(out.mapping, base.mapping, "threads={threads}");
+            assert_eq!(
+                out.evaluation.energy.total_pj().to_bits(),
+                base.evaluation.energy.total_pj().to_bits(),
+                "threads={threads}"
+            );
+            assert_eq!(out.evaluations, base.evaluations, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn budget_truncation_is_thread_invariant() {
+        // A budget that cuts mid-rotation must still evaluate exactly the
+        // same candidate set (global indices below the budget).
+        let acc = small_acc();
+        let layer = small_layer();
+        let a = ExhaustiveMapper::new(999).with_permutations();
+        let base = a.run(&layer, &acc).unwrap();
+        assert_eq!(base.evaluations, 999);
+        let b = ExhaustiveMapper::new(999).with_permutations().with_threads(3);
+        let out = b.run(&layer, &acc).unwrap();
+        assert_eq!(out.evaluations, 999);
+        assert_eq!(out.mapping, base.mapping);
     }
 
     #[test]

@@ -7,7 +7,7 @@ use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
-use crate::model::evaluate_unchecked;
+use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
 use crate::workload::ConvLayer;
 use std::cell::Cell;
@@ -35,8 +35,8 @@ impl GeneticMapper {
     }
 }
 
-fn fitness(layer: &ConvLayer, acc: &Accelerator, m: &Mapping) -> f64 {
-    evaluate_unchecked(layer, acc, m).energy.total_pj()
+fn fitness(ctx: &mut EvalContext, m: &Mapping) -> f64 {
+    ctx.energy_pj(m)
 }
 
 /// Mutation: move one prime factor of one dim between two random slots
@@ -144,13 +144,14 @@ impl Mapper for GeneticMapper {
 
     fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let mut rng = SplitMix64::new(self.seed);
+        let mut ctx = EvalContext::new(layer, acc);
         let mut evaluated = 0u64;
         // Initial population.
         let mut pop: Vec<(f64, Mapping)> = (0..self.population)
             .map(|_| {
                 let m = sample_random(layer, acc, &mut rng);
                 evaluated += 1;
-                (fitness(layer, acc, &m), m)
+                (fitness(&mut ctx, &m), m)
             })
             .collect();
         pop.sort_by(|a, b| a.0.total_cmp(&b.0));
@@ -174,7 +175,7 @@ impl Mapper for GeneticMapper {
                 repair(layer, acc, &mut child);
                 if child.validate(layer, acc).is_ok() {
                     evaluated += 1;
-                    next.push((fitness(layer, acc, &child), child));
+                    next.push((fitness(&mut ctx, &child), child));
                 }
             }
             next.sort_by(|a, b| a.0.total_cmp(&b.0));

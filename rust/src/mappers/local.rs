@@ -120,6 +120,7 @@ impl Mapper for LocalMapper {
         // O(1) — 2 model evaluations, DESIGN.md §4):
         //   A. range-descending innermost (big loops near cheap memory);
         //   B. reduction dims (C,R,S) innermost (partial sums stationary).
+        let mut ctx = crate::model::EvalContext::new(layer, acc);
         let mut best: Option<(f64, Mapping)> = None;
         for reduction_first in [false, true] {
             let mut cand = m.clone();
@@ -139,7 +140,7 @@ impl Mapper for LocalMapper {
                 cand.permutation[l] = dims;
             }
             cand.validate(layer, acc).map_err(MapError::Invalid)?;
-            let pj = crate::model::evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            let pj = ctx.energy_pj(&cand);
             if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
                 best = Some((pj, cand));
             }

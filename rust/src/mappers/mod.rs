@@ -13,6 +13,7 @@ pub mod refine;
 pub mod search;
 
 pub use annealing::AnnealingMapper;
+pub use exhaustive::ExhaustiveMapper;
 pub use local::LocalMapper;
 pub use random::RandomMapper;
 pub use refine::LocalRefined;
@@ -20,7 +21,7 @@ pub use search::ConstrainedSearch;
 
 use crate::arch::Accelerator;
 use crate::mapping::{Mapping, MappingError};
-use crate::model::{evaluate_unchecked, Evaluation};
+use crate::model::{EvalContext, Evaluation};
 use crate::workload::ConvLayer;
 use std::fmt;
 use std::time::{Duration, Instant};
@@ -88,12 +89,20 @@ pub trait Mapper {
     }
 
     /// Run with timing: the measured quantity of the paper's Table 3.
+    /// The final evaluation goes through the same [`EvalContext`] engine
+    /// the search loops use (bit-identical to the legacy evaluator), so
+    /// every caller — coordinator workers, `explore::sweep`, the CLI —
+    /// exercises one evaluation path. For this single evaluation the
+    /// context is built fresh (a one-time cost dwarfed by the `map()`
+    /// search it follows); the zero-allocation payoff is inside the
+    /// mappers' candidate loops.
     fn run(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<MapOutcome, MapError> {
         let t0 = Instant::now();
         let mapping = self.map(layer, acc)?;
         let elapsed = t0.elapsed();
         mapping.validate(layer, acc)?;
-        let evaluation = evaluate_unchecked(layer, acc, &mapping);
+        let mut ctx = EvalContext::new(layer, acc);
+        let evaluation = ctx.evaluate_into(&mapping).clone();
         Ok(MapOutcome { mapping, evaluation, evaluations: self.evaluations(), elapsed })
     }
 }

@@ -5,7 +5,7 @@ use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::sample_random;
-use crate::model::{evaluate_unchecked, Evaluation};
+use crate::model::{EvalContext, Evaluation};
 use crate::util::rng::SplitMix64;
 use crate::workload::ConvLayer;
 
@@ -37,11 +37,11 @@ impl Mapper for RandomMapper {
 
     fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let mut rng = SplitMix64::new(self.seed);
+        let mut ctx = EvalContext::new(layer, acc);
         let mut best: Option<(f64, Mapping)> = None;
         for _ in 0..self.samples {
             let m = sample_random(layer, acc, &mut rng);
-            let e = evaluate_unchecked(layer, acc, &m);
-            let pj = e.energy.total_pj();
+            let pj = ctx.energy_pj(&m);
             if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
                 best = Some((pj, m));
             }
@@ -96,18 +96,22 @@ pub fn random_distribution(
 ) -> RandomDistribution {
     assert!(n >= 3);
     let mut rng = SplitMix64::new(seed);
-    let mut evals: Vec<(f64, Evaluation)> = (0..n)
+    let mut ctx = EvalContext::new(layer, acc);
+    // Keep only (energy, mapping) per draw — the three representative
+    // evaluations are recomputed after sorting (deterministic model), so
+    // the sweep itself stays on the zero-allocation context path.
+    let mut evals: Vec<(f64, Mapping)> = (0..n)
         .map(|_| {
             let m = sample_random(layer, acc, &mut rng);
-            let e = evaluate_unchecked(layer, acc, &m);
-            (e.energy.total_uj(), e)
+            let uj = ctx.evaluate_into(&m).energy.total_uj();
+            (uj, m)
         })
         .collect();
     evals.sort_by(|a, b| a.0.total_cmp(&b.0));
     let energies_uj: Vec<f64> = evals.iter().map(|(uj, _)| *uj).collect();
-    let min = evals.first().unwrap().1.clone();
-    let med = evals[evals.len() / 2].1.clone();
-    let max = evals.last().unwrap().1.clone();
+    let min = ctx.evaluate_into(&evals.first().unwrap().1).clone();
+    let med = ctx.evaluate_into(&evals[evals.len() / 2].1).clone();
+    let max = ctx.evaluate_into(&evals.last().unwrap().1).clone();
     RandomDistribution { energies_uj, min, med, max }
 }
 

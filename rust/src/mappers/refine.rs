@@ -9,7 +9,7 @@ use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::repair;
-use crate::model::evaluate_unchecked;
+use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
 use crate::workload::ConvLayer;
 use std::cell::Cell;
@@ -47,8 +47,9 @@ impl Mapper for LocalRefined {
 
     fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let seed_mapping = LocalMapper::new().map(layer, acc)?;
+        let mut ctx = EvalContext::new(layer, acc);
         let mut best = seed_mapping;
-        let mut best_e = evaluate_unchecked(layer, acc, &best).energy.total_pj();
+        let mut best_e = ctx.energy_pj(&best);
         let mut evaluated = 1u64 + 2; // LOCAL's own schedule comparison
         let mut rng = SplitMix64::new(self.seed);
         let mut rejected = 0u64;
@@ -93,7 +94,7 @@ impl Mapper for LocalRefined {
                 rejected += 1;
                 continue;
             }
-            let e = evaluate_unchecked(layer, acc, &cand).energy.total_pj();
+            let e = ctx.energy_pj(&cand);
             evaluated += 1;
             if e < best_e {
                 best = cand;

@@ -13,7 +13,7 @@ use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{sample_random, Dataflow};
-use crate::model::evaluate_unchecked;
+use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
 use crate::workload::ConvLayer;
 use std::cell::Cell;
@@ -58,6 +58,7 @@ impl Mapper for ConstrainedSearch {
     fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let cons = self.dataflow.constraints();
         let mut rng = SplitMix64::new(self.seed);
+        let mut ctx = EvalContext::new(layer, acc);
         let mut best: Option<(f64, Mapping)> = None;
         let mut since_improved = 0u64;
         let mut evaluated = 0u64;
@@ -70,9 +71,8 @@ impl Mapper for ConstrainedSearch {
                 evaluated += 1;
                 continue;
             }
-            let e = evaluate_unchecked(layer, acc, &m);
+            let pj = ctx.energy_pj(&m);
             evaluated += 1;
-            let pj = e.energy.total_pj();
             if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
                 best = Some((pj, m));
                 since_improved = 0;

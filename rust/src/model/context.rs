@@ -1,0 +1,313 @@
+//! The reusable, zero-allocation evaluation engine.
+//!
+//! [`evaluate_unchecked`] is the inner loop of every search mapper, but it
+//! heap-allocates on every call: the access table, the bandwidth vector,
+//! the [`Ert`] (rebuilt from the accelerator geometry each time) and the
+//! returned [`Evaluation`] all hit the allocator per candidate. Search
+//! mappers evaluate the *same* (layer, accelerator) pair thousands to
+//! millions of times, so everything that depends only on that pair can be
+//! hoisted out of the loop.
+//!
+//! [`EvalContext`] does exactly that: it precomputes the energy reference
+//! table, the per-tensor dimension-relevance masks (layer-aware — depthwise
+//! layers add `M` to Input's relevance), and owns a scratch [`Evaluation`]
+//! whose vectors are sized once at construction. The hot path,
+//! [`EvalContext::evaluate_into`], overwrites the scratch in place and
+//! returns a borrow — **zero heap allocations per candidate** (the loop
+//! list is a fixed-capacity stack array, tile math is `[u64; 7]` arrays).
+//!
+//! Results are bit-identical to the legacy [`evaluate_unchecked`] path:
+//! the floating-point operations run in the same order on the same
+//! precomputed values (pinned by `prop_eval_context_bit_identical_to_legacy`
+//! in `rust/tests/property.rs`).
+//!
+//! [`evaluate_unchecked`]: super::evaluate_unchecked
+
+use super::nest::{loop_list_above, LoopIter};
+use super::{Access, Evaluation, TensorIdx};
+use crate::arch::Accelerator;
+use crate::energy::{EnergyBreakdown, Ert};
+use crate::mapping::{tensor_elems, Mapping, MappingError};
+use crate::workload::{ConvLayer, Dim, Tensor};
+
+/// Precomputed per-(layer, accelerator) evaluation state with reusable
+/// scratch buffers. Construct once per search, call
+/// [`EvalContext::evaluate_into`] per candidate.
+#[derive(Debug, Clone)]
+pub struct EvalContext {
+    layer: ConvLayer,
+    acc: Accelerator,
+    ert: Ert,
+    /// `relevance[tensor_idx][dim_idx]` — layer-aware tensor/dim relevance.
+    relevance: [[bool; 7]; 3],
+    scratch: Evaluation,
+}
+
+impl EvalContext {
+    /// Precompute the ERT, relevance masks and scratch buffers for one
+    /// (layer, accelerator) pair. This is the only allocating step; every
+    /// subsequent [`EvalContext::evaluate_into`] call is allocation-free.
+    pub fn new(layer: &ConvLayer, acc: &Accelerator) -> Self {
+        let n_levels = acc.n_levels();
+        let mut relevance = [[false; 7]; 3];
+        for t in Tensor::ALL {
+            for d in Dim::ALL {
+                relevance[t.t_idx()][d.idx()] = t.relevant_for(layer, d);
+            }
+        }
+        let scratch = Evaluation {
+            access: vec![[Access::default(); 3]; n_levels],
+            noc_words: 0,
+            noc_avg_hops: 0.0,
+            macs: 0,
+            active_pes: 0,
+            utilization: 0.0,
+            compute_cycles: 0,
+            bandwidth_cycles: vec![0; n_levels],
+            latency_cycles: 0,
+            energy: EnergyBreakdown::zero(n_levels),
+        };
+        Self {
+            layer: layer.clone(),
+            acc: acc.clone(),
+            ert: Ert::for_accelerator(acc),
+            relevance,
+            scratch,
+        }
+    }
+
+    /// The layer this context evaluates against.
+    pub fn layer(&self) -> &ConvLayer {
+        &self.layer
+    }
+
+    /// The accelerator this context evaluates against.
+    pub fn acc(&self) -> &Accelerator {
+        &self.acc
+    }
+
+    /// Validate-then-evaluate convenience (mirrors [`super::evaluate`]).
+    pub fn evaluate(&mut self, mapping: &Mapping) -> Result<&Evaluation, MappingError> {
+        mapping.validate(&self.layer, &self.acc)?;
+        Ok(self.evaluate_into(mapping))
+    }
+
+    /// Hot-path accessor: total energy (pJ) of one candidate. What the
+    /// search mappers rank by.
+    pub fn energy_pj(&mut self, mapping: &Mapping) -> f64 {
+        self.evaluate_into(mapping).energy.total_pj()
+    }
+
+    /// Evaluate one candidate into the scratch buffers and return a borrow.
+    /// Performs **no heap allocation**: the access table, bandwidth vector
+    /// and energy breakdown are overwritten in place, the loop list above
+    /// each boundary is a fixed-capacity stack array, and all tile math is
+    /// `[u64; 7]` stack arrays. Clone the returned `Evaluation` only when a
+    /// candidate is kept (once per improvement, not once per candidate).
+    ///
+    /// The mapping must be valid for this context's (layer, accelerator)
+    /// pair (debug builds assert); the arithmetic is identical to
+    /// [`super::evaluate_unchecked`], operation for operation.
+    pub fn evaluate_into(&mut self, mapping: &Mapping) -> &Evaluation {
+        let EvalContext { layer, acc, ert, relevance, scratch } = self;
+        debug_assert!(mapping.validate(layer, acc).is_ok());
+        let n_levels = acc.n_levels();
+        debug_assert_eq!(mapping.n_levels(), n_levels);
+
+        for row in scratch.access.iter_mut() {
+            *row = [Access::default(); 3];
+        }
+
+        let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+
+        // Spatial tile: per-PE tile ⊗ spatial factors (unique data across
+        // the whole PE array).
+        let tile0 = mapping.tile0();
+        let mut spatial_tile = tile0;
+        for d in 0..7 {
+            spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
+        }
+
+        // --- Level-0 (RF) datapath traffic.
+        let macs = layer.macs();
+        scratch.access[0][Tensor::Weight.t_idx()].reads += macs;
+        scratch.access[0][Tensor::Input.t_idx()].reads += macs;
+        scratch.access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+        scratch.access[0][Tensor::Output.t_idx()].writes += macs; // accumulator write
+
+        let mut noc_words: u64 = 0;
+
+        // --- Boundaries (see `super::evaluate_unchecked` for the model).
+        for l in 1..n_levels {
+            let loops = loop_list_above(layer, mapping, l);
+            for t in Tensor::ALL {
+                let ti = t.t_idx();
+                let mask = &relevance[ti];
+                let (unique_child, aggregate_child) = if l == 1 {
+                    let unique = tensor_elems(layer, &spatial_tile, t);
+                    let aggregate = fanout * tensor_elems(layer, &tile0, t);
+                    (unique, aggregate)
+                } else {
+                    let e = mapping.tensor_tile_elems(layer, l - 1, t);
+                    (e, e)
+                };
+                match t {
+                    Tensor::Weight | Tensor::Input => {
+                        let rounds = fetch_rounds_masked(mask, &loops);
+                        let served = if l == 1 && !acc.noc.multicast {
+                            aggregate_child
+                        } else {
+                            unique_child
+                        };
+                        scratch.access[l][ti].reads += rounds * served;
+                        scratch.access[l - 1][ti].writes += rounds * aggregate_child;
+                        if l == 1 {
+                            noc_words += rounds * served;
+                        }
+                    }
+                    Tensor::Output => {
+                        let v = fetch_rounds_masked(mask, &loops);
+                        let u = distinct_tiles_masked(mask, &loops);
+                        debug_assert!(v >= u);
+                        scratch.access[l][ti].writes += v * unique_child;
+                        scratch.access[l][ti].reads += (v - u) * unique_child;
+                        scratch.access[l - 1][ti].reads += v * aggregate_child;
+                        scratch.access[l - 1][ti].writes += (v - u) * aggregate_child;
+                        if l == 1 {
+                            noc_words += v * unique_child + (v - u) * unique_child;
+                            noc_words += v * (aggregate_child - unique_child);
+                        }
+                    }
+                }
+            }
+        }
+
+        // --- Latency roofline (same instance/bandwidth model as legacy).
+        let compute_cycles: u64 = mapping.temporal.iter().flatten().product();
+        for l in 0..n_levels {
+            let words: u64 = (0..3).map(|ti| scratch.access[l][ti].total()).sum();
+            let instances = if acc.levels[l].per_pe { fanout.max(1) } else { 1 };
+            let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
+                * instances as f64;
+            scratch.bandwidth_cycles[l] = (words as f64 / bw).ceil() as u64;
+        }
+        let latency_cycles =
+            compute_cycles.max(scratch.bandwidth_cycles.iter().copied().max().unwrap_or(0));
+
+        // --- Energy roll-up from the precomputed ERT.
+        for l in 0..n_levels {
+            let words: u64 = (0..3).map(|ti| scratch.access[l][ti].total()).sum();
+            scratch.energy.level_pj[l] = words as f64 * ert.level(l);
+        }
+        let noc_avg_hops = (mapping.spatial_x_used() + mapping.spatial_y_used()) as f64 / 2.0;
+        scratch.energy.noc_pj = noc_words as f64 * ert.noc_hop_pj * noc_avg_hops;
+        scratch.energy.mac_pj = macs as f64 * ert.mac_pj;
+
+        scratch.noc_words = noc_words;
+        scratch.noc_avg_hops = noc_avg_hops;
+        scratch.macs = macs;
+        scratch.active_pes = fanout;
+        scratch.utilization = mapping.pe_utilization(acc);
+        scratch.compute_cycles = compute_cycles;
+        scratch.latency_cycles = latency_cycles;
+        scratch
+    }
+}
+
+/// Mask-based [`super::nest::fetch_rounds`]: identical integer arithmetic,
+/// with the per-loop relevance test replaced by a precomputed table lookup.
+fn fetch_rounds_masked(mask: &[bool; 7], loops: &[LoopIter]) -> u64 {
+    let mut rounds = 1u64;
+    let mut seen_relevant = false;
+    for &(d, trip) in loops {
+        if !seen_relevant {
+            if mask[d.idx()] {
+                seen_relevant = true;
+            } else {
+                continue; // stationary across this loop
+            }
+        }
+        rounds = rounds.saturating_mul(trip);
+    }
+    rounds
+}
+
+/// Mask-based [`super::nest::distinct_tiles`].
+fn distinct_tiles_masked(mask: &[bool; 7], loops: &[LoopIter]) -> u64 {
+    loops
+        .iter()
+        .filter(|&&(d, _)| mask[d.idx()])
+        .map(|&(_, trip)| trip)
+        .product()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapspace::sample_random;
+    use crate::model::evaluate_unchecked;
+    use crate::util::rng::SplitMix64;
+    use crate::workload::zoo;
+
+    #[test]
+    fn context_matches_legacy_on_zoo_layer() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let mut rng = SplitMix64::new(11);
+        for _ in 0..25 {
+            let m = sample_random(&layer, &acc, &mut rng);
+            let legacy = evaluate_unchecked(&layer, &acc, &m);
+            let fast = ctx.evaluate_into(&m);
+            assert_eq!(&legacy, fast);
+        }
+    }
+
+    #[test]
+    fn context_matches_legacy_on_depthwise() {
+        // Depthwise relevance (Input follows M) must be baked into the mask.
+        let acc = presets::eyeriss();
+        let layer = zoo::mobilenet_v2().into_iter().find(|l| l.depthwise).unwrap();
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let mut rng = SplitMix64::new(13);
+        for _ in 0..25 {
+            let m = sample_random(&layer, &acc, &mut rng);
+            assert_eq!(&evaluate_unchecked(&layer, &acc, &m), ctx.evaluate_into(&m));
+        }
+    }
+
+    #[test]
+    fn context_is_reusable_across_candidates() {
+        // Stale scratch state from one candidate must not leak into the next:
+        // evaluate A, then B, then A again — the two A evaluations agree.
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[0].clone();
+        let mut rng = SplitMix64::new(17);
+        let a = sample_random(&layer, &acc, &mut rng);
+        let b = sample_random(&layer, &acc, &mut rng);
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let first = ctx.evaluate_into(&a).clone();
+        let _ = ctx.evaluate_into(&b);
+        assert_eq!(first, *ctx.evaluate_into(&a));
+    }
+
+    #[test]
+    fn evaluate_rejects_invalid() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let mut m = Mapping::trivial(&layer, acc.n_levels());
+        m.temporal[2][0] = 999;
+        let mut ctx = EvalContext::new(&layer, &acc);
+        assert!(ctx.evaluate(&m).is_err());
+    }
+
+    #[test]
+    fn accessors_expose_the_pair() {
+        let acc = presets::shidiannao();
+        let layer = zoo::alexnet()[0].clone();
+        let ctx = EvalContext::new(&layer, &acc);
+        assert_eq!(ctx.layer().name, layer.name);
+        assert_eq!(ctx.acc().name, acc.name);
+    }
+}

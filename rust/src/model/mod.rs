@@ -33,6 +33,7 @@
 //! (reduction dim mapped spatially) contribute `aggregate − unique` extra
 //! NoC words for the inter-PE psum tree.
 
+pub mod context;
 pub mod nest;
 
 use crate::arch::Accelerator;
@@ -40,6 +41,7 @@ use crate::energy::{EnergyBreakdown, Ert};
 use crate::mapping::{tensor_elems, Mapping, MappingError};
 use crate::workload::{ConvLayer, Tensor};
 
+pub use context::EvalContext;
 pub use nest::{distinct_tiles, fetch_rounds, loop_list_above, LoopIter, LoopList};
 
 /// Per-level access counts for one tensor, in words (data elements).
@@ -112,8 +114,15 @@ pub fn evaluate(
     Ok(evaluate_unchecked(layer, acc, mapping))
 }
 
-/// Evaluate without re-validating (hot path for mappers that construct
-/// valid-by-construction candidates; debug builds still assert).
+/// Evaluate without re-validating (debug builds still assert validity).
+///
+/// This is the **legacy, allocating** path: it rebuilds the [`Ert`] and
+/// allocates the access/bandwidth/energy vectors on every call. Search
+/// loops should use [`EvalContext::evaluate_into`] instead, which hoists
+/// the per-(layer, accelerator) work out of the loop and reuses scratch
+/// buffers — bit-identical results, zero allocations per candidate. This
+/// function is kept as the API-stable one-shot entry point and as the
+/// reference implementation the context path is property-tested against.
 pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mapping) -> Evaluation {
     debug_assert!(mapping.validate(layer, acc).is_ok());
     let n_levels = acc.n_levels();

@@ -1,0 +1,317 @@
+//! The performance harness behind `BENCH_eval.json`.
+//!
+//! The paper's entire argument is compile-time speed, so the repo tracks
+//! its own "evaluations/second" denominator as a machine-readable
+//! artifact. [`run`] measures three things:
+//!
+//! 1. **Evaluator throughput** — the legacy allocating
+//!    [`crate::model::evaluate_unchecked`] vs the zero-allocation
+//!    [`EvalContext::evaluate_into`] hot path, over the same pre-sampled
+//!    candidate pool (VGG-16 conv9 × Eyeriss).
+//! 2. **Exhaustive scaling** — sharded parallel enumeration throughput at
+//!    1/2/4/8 threads on a small fixed layer.
+//! 3. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
+//!    the five-network zoo through the shared-cache service.
+//!
+//! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
+//! schema (see the README "Performance" section); the `perf` CLI
+//! subcommand and the `perf_analyzer` bench both write it so every PR can
+//! track the trajectory. Smoke mode (`PerfConfig::smoke`) bounds the
+//! iteration counts for CI.
+
+use crate::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
+use crate::coordinator::compile_batch;
+use crate::mappers::{ExhaustiveMapper, LocalMapper, Mapper};
+use crate::mapping::Mapping;
+use crate::mapspace::sample_random;
+use crate::model::{evaluate_unchecked, EvalContext};
+use crate::util::bench::median_time;
+use crate::util::rng::SplitMix64;
+use crate::workload::{zoo, ConvLayer};
+use std::time::Instant;
+
+/// Harness configuration.
+#[derive(Debug, Clone)]
+pub struct PerfConfig {
+    /// Bound every measurement for CI smoke runs (seconds, not minutes).
+    pub smoke: bool,
+}
+
+impl PerfConfig {
+    /// Full-fidelity run (the `perf_analyzer` bench default).
+    pub fn full() -> Self {
+        Self { smoke: false }
+    }
+
+    /// Bounded-iteration run (the CI `bench-json` target).
+    pub fn smoke() -> Self {
+        Self { smoke: true }
+    }
+}
+
+/// Old-vs-new evaluator throughput.
+#[derive(Debug, Clone)]
+pub struct EvalThroughput {
+    /// Legacy allocating `evaluate_unchecked`, evaluations per second.
+    pub legacy_evals_per_sec: f64,
+    /// `EvalContext::evaluate_into`, evaluations per second.
+    pub context_evals_per_sec: f64,
+}
+
+impl EvalThroughput {
+    /// Context-path speedup over the legacy path.
+    pub fn speedup(&self) -> f64 {
+        self.context_evals_per_sec / self.legacy_evals_per_sec.max(f64::MIN_POSITIVE)
+    }
+}
+
+/// One exhaustive-scaling data point.
+#[derive(Debug, Clone)]
+pub struct ExhaustivePoint {
+    /// Worker threads the enumeration was sharded across.
+    pub threads: usize,
+    /// Wall-clock of the whole enumeration, ms.
+    pub wall_ms: f64,
+    /// Candidate evaluations per second (including invalid candidates,
+    /// matching the mapper's own accounting).
+    pub evals_per_sec: f64,
+}
+
+/// Batch-pipeline measurement over the five-network zoo.
+#[derive(Debug, Clone)]
+pub struct ZooBatch {
+    /// Networks compiled.
+    pub networks: usize,
+    /// Layers compiled across all networks.
+    pub layers: usize,
+    /// Wall-clock of the whole batch, ms.
+    pub wall_ms: f64,
+    /// Cross-network cache hit rate in `[0, 1]`.
+    pub cache_hit_rate: f64,
+}
+
+/// Everything `BENCH_eval.json` carries.
+#[derive(Debug, Clone)]
+pub struct PerfReport {
+    /// Schema version of the JSON layout.
+    pub schema: u32,
+    /// Whether this was a bounded smoke run.
+    pub smoke: bool,
+    /// Old-vs-new evaluator throughput.
+    pub evaluator: EvalThroughput,
+    /// Exhaustive scaling at 1/2/4/8 threads.
+    pub exhaustive: Vec<ExhaustivePoint>,
+    /// Zoo batch-pipeline wall time.
+    pub zoo_batch: ZooBatch,
+}
+
+/// Render a finite float for JSON (JSON has no NaN/Inf; rates here are
+/// always finite, but belt and braces for a machine-parsed artifact).
+fn jnum(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x:.3}")
+    } else {
+        "0".to_string()
+    }
+}
+
+impl PerfReport {
+    /// The machine-readable `BENCH_eval.json` body (stable key set; CI
+    /// fails the build if it does not parse or a rate reads as zero).
+    pub fn to_json(&self) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"schema\": {},\n", self.schema));
+        s.push_str(&format!("  \"smoke\": {},\n", self.smoke));
+        s.push_str(&format!(
+            "  \"evaluator\": {{\"legacy_evals_per_sec\": {}, \"context_evals_per_sec\": {}, \"speedup\": {}}},\n",
+            jnum(self.evaluator.legacy_evals_per_sec),
+            jnum(self.evaluator.context_evals_per_sec),
+            jnum(self.evaluator.speedup())
+        ));
+        s.push_str("  \"exhaustive\": [\n");
+        for (i, p) in self.exhaustive.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"threads\": {}, \"wall_ms\": {}, \"evals_per_sec\": {}}}{}\n",
+                p.threads,
+                jnum(p.wall_ms),
+                jnum(p.evals_per_sec),
+                if i + 1 < self.exhaustive.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+        s.push_str(&format!(
+            "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}}\n",
+            self.zoo_batch.networks,
+            self.zoo_batch.layers,
+            jnum(self.zoo_batch.wall_ms),
+            jnum(self.zoo_batch.cache_hit_rate)
+        ));
+        s.push_str("}\n");
+        s
+    }
+
+    /// Human-readable one-screen summary (what the CLI and bench print).
+    pub fn summary(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "evaluator: legacy {:.0} evals/s → context {:.0} evals/s ({:.2}x)\n",
+            self.evaluator.legacy_evals_per_sec,
+            self.evaluator.context_evals_per_sec,
+            self.evaluator.speedup()
+        ));
+        for p in &self.exhaustive {
+            s.push_str(&format!(
+                "exhaustive {}T: {:.1} ms wall, {:.0} evals/s\n",
+                p.threads, p.wall_ms, p.evals_per_sec
+            ));
+        }
+        s.push_str(&format!(
+            "zoo batch: {} networks, {} layers, {:.1} ms wall, {:.0}% cache hits",
+            self.zoo_batch.networks,
+            self.zoo_batch.layers,
+            self.zoo_batch.wall_ms,
+            self.zoo_batch.cache_hit_rate * 100.0
+        ));
+        s
+    }
+}
+
+/// Small 3-level machine for the exhaustive-scaling measurement (the
+/// full-size presets' spaces are too large to enumerate meaningfully).
+fn scaling_acc() -> Accelerator {
+    Accelerator {
+        name: "perf-small".into(),
+        style: Style::NvdlaLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 64, 16),
+            StorageLevel::buffer("GLB", 1024, 64),
+            StorageLevel::dram(64),
+        ],
+        pe: PeArray::new(4, 4),
+        noc: Noc::default(),
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    }
+}
+
+/// Run the whole harness and return the report.
+pub fn run(cfg: &PerfConfig) -> PerfReport {
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg16()[8].clone();
+    let (warmup, iters) = if cfg.smoke { (8, 64) } else { (64, 512) };
+
+    // Shared candidate pool so both paths evaluate identical mappings.
+    let mut rng = SplitMix64::new(7);
+    let pool: Vec<Mapping> = (0..128).map(|_| sample_random(&layer, &acc, &mut rng)).collect();
+
+    let mut i = 0usize;
+    let t_legacy = median_time(warmup, iters, || {
+        let e = evaluate_unchecked(&layer, &acc, &pool[i % pool.len()]);
+        i += 1;
+        e.latency_cycles
+    });
+    let mut ctx = EvalContext::new(&layer, &acc);
+    let mut j = 0usize;
+    let t_ctx = median_time(warmup, iters, || {
+        let lat = ctx.evaluate_into(&pool[j % pool.len()]).latency_cycles;
+        j += 1;
+        lat
+    });
+    let evaluator = EvalThroughput {
+        legacy_evals_per_sec: 1e9 / t_legacy.median_ns().max(1.0),
+        context_evals_per_sec: 1e9 / t_ctx.median_ns().max(1.0),
+    };
+
+    // Exhaustive scaling on a small fixed space.
+    let ex_layer = ConvLayer::new("perf-ex", 8, 4, 3, 3, 8, 8);
+    let ex_acc = scaling_acc();
+    let budget = if cfg.smoke { 2_000 } else { 50_000 };
+    let mut exhaustive = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let ex = ExhaustiveMapper::new(budget).with_permutations().with_threads(threads);
+        let t0 = Instant::now();
+        let out = ex.run(&ex_layer, &ex_acc).expect("exhaustive maps the perf layer");
+        let wall = t0.elapsed();
+        exhaustive.push(ExhaustivePoint {
+            threads,
+            wall_ms: wall.as_secs_f64() * 1e3,
+            evals_per_sec: out.evaluations as f64 / wall.as_secs_f64().max(1e-9),
+        });
+    }
+
+    // Zoo batch pipeline (LOCAL is µs/layer, so this is cheap even full).
+    let networks = zoo::batch_zoo();
+    let t0 = Instant::now();
+    let batch =
+        compile_batch(&networks, &acc, &LocalMapper::new(), 4).expect("zoo batch compiles");
+    let wall = t0.elapsed();
+    let zoo_batch = ZooBatch {
+        networks: batch.networks.len(),
+        layers: batch.total_layers(),
+        wall_ms: wall.as_secs_f64() * 1e3,
+        cache_hit_rate: batch.hit_rate(),
+    };
+
+    PerfReport { schema: 1, smoke: cfg.smoke, evaluator, exhaustive, zoo_batch }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_run_produces_sane_report() {
+        let r = run(&PerfConfig::smoke());
+        assert!(r.smoke);
+        assert!(r.evaluator.legacy_evals_per_sec > 0.0);
+        assert!(r.evaluator.context_evals_per_sec > 0.0);
+        assert_eq!(r.exhaustive.len(), 4);
+        assert_eq!(r.exhaustive.iter().map(|p| p.threads).collect::<Vec<_>>(), vec![1, 2, 4, 8]);
+        assert!(r.exhaustive.iter().all(|p| p.evals_per_sec > 0.0));
+        assert_eq!(r.zoo_batch.networks, 5);
+        assert!(r.zoo_batch.layers > 100);
+        assert!(r.zoo_batch.wall_ms > 0.0);
+    }
+
+    #[test]
+    fn json_has_the_stable_key_set() {
+        let r = PerfReport {
+            schema: 1,
+            smoke: true,
+            evaluator: EvalThroughput {
+                legacy_evals_per_sec: 100.0,
+                context_evals_per_sec: 400.0,
+            },
+            exhaustive: vec![ExhaustivePoint { threads: 1, wall_ms: 2.0, evals_per_sec: 50.0 }],
+            zoo_batch: ZooBatch { networks: 5, layers: 149, wall_ms: 10.0, cache_hit_rate: 0.4 },
+        };
+        let json = r.to_json();
+        for key in [
+            "\"schema\"",
+            "\"smoke\"",
+            "\"evaluator\"",
+            "\"legacy_evals_per_sec\"",
+            "\"context_evals_per_sec\"",
+            "\"speedup\"",
+            "\"exhaustive\"",
+            "\"threads\"",
+            "\"wall_ms\"",
+            "\"evals_per_sec\"",
+            "\"zoo_batch\"",
+            "\"cache_hit_rate\"",
+        ] {
+            assert!(json.contains(key), "missing {key} in {json}");
+        }
+        assert!(json.contains("\"speedup\": 4.000"));
+        assert!(r.summary().contains("4.00x"));
+    }
+
+    #[test]
+    fn jnum_never_emits_non_finite() {
+        assert_eq!(jnum(f64::NAN), "0");
+        assert_eq!(jnum(f64::INFINITY), "0");
+        assert_eq!(jnum(1.5), "1.500");
+    }
+}

@@ -22,7 +22,7 @@ fn help_lists_subcommands() {
     assert_eq!(code, 0);
     for sub in [
         "map", "compile", "compile-all", "table3", "fig3", "fig7", "mapspace", "arch", "run",
-        "simulate", "explore",
+        "simulate", "explore", "perf",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
@@ -189,6 +189,24 @@ fn explore_prints_pareto() {
     let (stdout, _, code) = run(&["explore", "--network", "alexnet", "--arch", "eyeriss"]);
     assert_eq!(code, 0);
     assert!(stdout.contains("Pareto front"));
+}
+
+#[test]
+fn perf_smoke_writes_valid_bench_json() {
+    let path = std::env::temp_dir().join("lm_cli_bench_eval.json");
+    let (stdout, stderr, code) =
+        run(&["perf", "--smoke", "--out", path.to_str().unwrap()]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("evals/s"), "{stdout}");
+    assert!(stdout.contains("exhaustive"), "{stdout}");
+    let json = std::fs::read_to_string(&path).unwrap();
+    for key in ["\"evaluator\"", "\"exhaustive\"", "\"zoo_batch\"", "\"smoke\": true"] {
+        assert!(json.contains(key), "missing {key} in {json}");
+    }
+    // A rate of exactly 0 means the harness measured nothing — the same
+    // condition the CI validation step rejects.
+    assert!(!json.contains("\"legacy_evals_per_sec\": 0.000"), "{json}");
+    assert!(!json.contains("\"context_evals_per_sec\": 0.000"), "{json}");
 }
 
 #[test]

@@ -3,11 +3,11 @@
 //! and mappings and asserts an invariant of the system.
 
 use local_mapper::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
-use local_mapper::mappers::{LocalMapper, Mapper};
+use local_mapper::mappers::{ExhaustiveMapper, LocalMapper, Mapper};
 use local_mapper::mapspace::{repair, sample_random};
-use local_mapper::model::{evaluate, evaluate_unchecked, TensorIdx};
+use local_mapper::model::{evaluate, evaluate_unchecked, EvalContext, TensorIdx};
 use local_mapper::util::rng::SplitMix64;
-use local_mapper::workload::{ConvLayer, Dim, Tensor};
+use local_mapper::workload::{zoo, ConvLayer, Dim, Tensor};
 
 /// Random plausible conv layer (dims drawn from real-network ranges).
 fn random_layer(rng: &mut SplitMix64) -> ConvLayer {
@@ -45,6 +45,86 @@ fn random_acc(rng: &mut SplitMix64) -> Accelerator {
     };
     acc.validate().unwrap();
     acc
+}
+
+#[test]
+fn prop_eval_context_bit_identical_to_legacy() {
+    // The zero-allocation EvalContext path must produce *bit-identical*
+    // Evaluations to the legacy allocating evaluator: same integers, same
+    // floats (same operations in the same order), across random valid
+    // mappings × the full five-network zoo × all three presets.
+    let mut rng = SplitMix64::new(0x2026);
+    for acc in presets::all() {
+        for (net, layers) in zoo::batch_zoo() {
+            for layer in &layers {
+                let mut ctx = EvalContext::new(layer, &acc);
+                for _ in 0..3 {
+                    let m = sample_random(layer, &acc, &mut rng);
+                    let legacy = evaluate_unchecked(layer, &acc, &m);
+                    let fast = ctx.evaluate_into(&m);
+                    assert_eq!(
+                        &legacy, fast,
+                        "context/legacy diverged on {net}/{} × {}",
+                        layer.name, acc.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eval_context_bit_identical_on_random_scenes() {
+    // Same bit-identity over randomized layers and machines (covers
+    // depthwise-free shapes the zoo sweep may miss and random PE/buffer
+    // geometries).
+    let mut rng = SplitMix64::new(0x1DEA);
+    for _ in 0..100 {
+        let layer = random_layer(&mut rng);
+        let acc = random_acc(&mut rng);
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let m = sample_random(&layer, &acc, &mut rng);
+        assert_eq!(&evaluate_unchecked(&layer, &acc, &m), ctx.evaluate_into(&m));
+    }
+}
+
+#[test]
+fn prop_parallel_exhaustive_matches_single_thread() {
+    // Sharded parallel enumeration must return the identical best mapping,
+    // best-energy bits and evaluation count as the single-threaded oracle
+    // at every thread count (deterministic best-of-shards merge).
+    let acc = Accelerator {
+        name: "prop-ex".into(),
+        style: Style::NvdlaLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 64, 16),
+            StorageLevel::buffer("GLB", 1024, 64),
+            StorageLevel::dram(64),
+        ],
+        pe: PeArray::new(4, 4),
+        noc: Noc::default(),
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    };
+    let layer = ConvLayer::new("prop-tiny", 4, 2, 1, 1, 4, 4);
+    let size = ExhaustiveMapper::space_size(&layer, &acc);
+    assert!(size < 2_000_000, "space too big for the determinism sweep: {size}");
+    let base = ExhaustiveMapper::new(size).with_permutations().run(&layer, &acc).unwrap();
+    for threads in [2usize, 3, 4, 8] {
+        let par = ExhaustiveMapper::new(size)
+            .with_permutations()
+            .with_threads(threads)
+            .run(&layer, &acc)
+            .unwrap();
+        assert_eq!(par.mapping, base.mapping, "threads={threads}");
+        assert_eq!(
+            par.evaluation.energy.total_pj().to_bits(),
+            base.evaluation.energy.total_pj().to_bits(),
+            "threads={threads}"
+        );
+        assert_eq!(par.evaluations, base.evaluations, "threads={threads}");
+    }
 }
 
 #[test]
