@@ -1,10 +1,11 @@
 //! The compile-time coordinator — the paper's "usability at the compiler
 //! level" claim made concrete.
 //!
-//! [`compile_network`] maps every conv layer of a network onto an
-//! accelerator with a chosen mapper, in parallel across worker threads,
-//! deduplicating identical layer shapes through a mapping cache (networks
-//! repeat shapes constantly — VGG's conv blocks, ResNet's bottlenecks).
+//! [`compile_network`] maps every layer of a network — conv, matmul,
+//! pooling or elementwise — onto an accelerator with a chosen mapper, in
+//! parallel across worker threads, deduplicating identical layer shapes
+//! through a mapping cache (networks repeat shapes constantly — VGG's conv
+//! blocks, ResNet's bottlenecks, BERT's twelve identical encoder blocks).
 //! [`service::MappingService`] wraps the same machinery as a persistent
 //! request loop with metrics, the form a compiler would embed.
 //! [`compile_batch`] scales the service to whole model zoos: every layer of
@@ -20,34 +21,41 @@ pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
 use crate::arch::Accelerator;
 use crate::mappers::{MapError, MapOutcome, Mapper};
 use crate::util::table::{fmt_f64, Table};
-use crate::workload::ConvLayer;
+use crate::workload::{ConvLayer, OpKind};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Cache key: everything that determines a mapping for a layer on an arch
-/// (all seven dims plus stride, dilation and the depthwise flag — dilation
+/// (the operator kind plus all seven dims, stride and dilation — dilation
 /// changes the input halo, hence footprints and every downstream metric).
+///
+/// The operator kind is a *correctness* field, not bookkeeping: a matmul,
+/// a pooling window and a 1×1 conv can share identical dimension bounds
+/// while carrying different relevance sets and tensor volumes, so keys
+/// must never collide across ops (pinned by
+/// `prop_layer_keys_distinct_across_ops` in `rust/tests/property.rs`).
 ///
 /// Formerly a formatted `String`; now a plain struct so keys hash without
 /// formatting on every request, and [`LayerKey::fnv1a`] gives a stable
 /// 64-bit fingerprint for cache sharding ([`service::MappingService`]'s
-/// shard pick). The [`std::fmt::Display`] impl reproduces the old string
-/// form for logs and reports.
+/// shard pick). The [`std::fmt::Display`] impl renders the canonical
+/// string form for logs and reports.
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
 pub struct LayerKey {
     /// Accelerator name (presets are unique by name; YAML configs should
     /// be, too).
     pub arch: String,
+    /// Operator kind of the layer (distinct ops with identical dims must
+    /// produce distinct keys).
+    pub op: OpKind,
     /// The seven problem-dimension bounds, [`crate::workload::Dim::idx`]
     /// order (N, M, C, R, S, P, Q).
     pub dims: [u64; 7],
-    /// Convolution stride.
+    /// Stride.
     pub stride: u64,
     /// Filter dilation (changes the input halo).
     pub dilation: u64,
-    /// Depthwise flag (changes weight volume and Input relevance).
-    pub depthwise: bool,
 }
 
 impl LayerKey {
@@ -55,26 +63,26 @@ impl LayerKey {
     pub fn new(layer: &ConvLayer, acc: &Accelerator) -> Self {
         Self {
             arch: acc.name.clone(),
+            op: layer.op,
             dims: [layer.n, layer.m, layer.c, layer.r, layer.s, layer.p, layer.q],
             stride: layer.stride,
             dilation: layer.dilation,
-            depthwise: layer.depthwise,
         }
     }
 
     /// Stable FNV-1a 64-bit fingerprint over the canonical field encoding
-    /// (arch bytes, then each numeric field little-endian). Used for cache
-    /// sharding — stability across processes matters more than hash
-    /// quality here, and FNV mixes the low bits well enough for a
-    /// power-of-two shard count.
+    /// (arch bytes, op name bytes, then each numeric field little-endian).
+    /// Used for cache sharding — stability across processes matters more
+    /// than hash quality here, and FNV mixes the low bits well enough for
+    /// a power-of-two shard count.
     pub fn fnv1a(&self) -> u64 {
         let mut h = fnv_bytes(0xcbf2_9ce4_8422_2325, self.arch.as_bytes());
+        h = fnv_bytes(h, self.op.name().as_bytes());
         for v in self.dims {
             h = fnv_bytes(h, &v.to_le_bytes());
         }
         h = fnv_bytes(h, &self.stride.to_le_bytes());
-        h = fnv_bytes(h, &self.dilation.to_le_bytes());
-        fnv_bytes(h, &[self.depthwise as u8])
+        fnv_bytes(h, &self.dilation.to_le_bytes())
     }
 
     /// Shard index for an `n`-shard cache.
@@ -96,8 +104,9 @@ impl std::fmt::Display for LayerKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}dw{}",
+            "{}|{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}",
             self.arch,
+            self.op,
             self.dims[0],
             self.dims[1],
             self.dims[2],
@@ -106,8 +115,7 @@ impl std::fmt::Display for LayerKey {
             self.dims[5],
             self.dims[6],
             self.stride,
-            self.dilation,
-            self.depthwise
+            self.dilation
         )
     }
 }
@@ -207,8 +215,9 @@ impl NetworkPlan {
 }
 
 /// Map every layer of a network, in parallel over `threads` workers, with
-/// shape deduplication. The mapper is cloned per worker (search mappers
-/// carry interior counters).
+/// shape deduplication. The mapper is cloned per worker before the spawn
+/// (search mappers carry interior `Cell` counters, so `Sync` is neither
+/// required nor available for every [`crate::mappers::AnyMapper`] variant).
 pub fn compile_network<M>(
     layers: &[ConvLayer],
     acc: &Accelerator,
@@ -216,7 +225,7 @@ pub fn compile_network<M>(
     threads: usize,
 ) -> Result<NetworkPlan, MapError>
 where
-    M: Mapper + Clone + Send + Sync,
+    M: Mapper + Clone + Send,
 {
     let t0 = std::time::Instant::now();
     let threads = threads.max(1);
@@ -476,14 +485,36 @@ mod tests {
     }
 
     #[test]
-    fn layer_key_display_matches_legacy_string_format() {
+    fn layer_key_display_is_canonical() {
         let acc = presets::eyeriss();
         let l = zoo::vgg16()[0].clone(); // 64×3×3×3×224×224, stride 1
         let key = layer_key(&l, &acc);
+        assert_eq!(key.to_string(), format!("{}|conv|n1m64c3r3s3p224q224st1di1", acc.name));
+        let mm = ConvLayer::matmul("mm", 768, 768, 128);
         assert_eq!(
-            key.to_string(),
-            format!("{}|n1m64c3r3s3p224q224st1di1dwfalse", acc.name)
+            layer_key(&mm, &acc).to_string(),
+            format!("{}|matmul|n1m768c768r1s1p128q1st1di1", acc.name)
         );
+    }
+
+    #[test]
+    fn layer_key_distinguishes_op_kinds_with_identical_dims() {
+        // A 1×1 conv, a 1×1 pooling window and an elementwise add can all
+        // carry the same seven bounds: the op field must keep their cache
+        // entries apart (different relevance → different mappings).
+        let acc = presets::eyeriss();
+        let conv = ConvLayer::new("c", 64, 1, 1, 1, 14, 14);
+        let pool = ConvLayer::pooling("p", 64, 1, 14, 14);
+        let add = ConvLayer::elementwise("a", 64, 14, 14);
+        assert_eq!(conv.bounds(), pool.bounds());
+        assert_eq!(conv.bounds(), add.bounds());
+        let keys = [layer_key(&conv, &acc), layer_key(&pool, &acc), layer_key(&add, &acc)];
+        assert_ne!(keys[0], keys[1]);
+        assert_ne!(keys[0], keys[2]);
+        assert_ne!(keys[1], keys[2]);
+        assert_ne!(keys[0].fnv1a(), keys[1].fnv1a());
+        assert_ne!(keys[0].fnv1a(), keys[2].fnv1a());
+        assert_ne!(keys[1].fnv1a(), keys[2].fnv1a());
     }
 
     #[test]

@@ -6,8 +6,11 @@
 //!
 //! The crate provides:
 //!
-//! * [`workload`] — convolution problem dimensions and the network zoo
-//!   (VGG-16/VGG-02, ResNet-50, SqueezeNet, MobileNet-V2, AlexNet).
+//! * [`workload`] — the operator-generic workload IR
+//!   ([`workload::OpKind`] × the Eq.-3 problem dimensions: conv,
+//!   depthwise, matmul/FC, pooling, elementwise add) and the network zoo
+//!   (VGG-16/VGG-02, ResNet-50, SqueezeNet, MobileNet-V2, AlexNet, plus
+//!   a BERT-style matmul stack, pooled VGG and residual MobileNet).
 //! * [`arch`] — the spatial-accelerator model (storage hierarchy, PE array,
 //!   NoC) with Eyeriss / NVDLA / ShiDianNao presets and YAML configs.
 //! * [`mapping`] — the mapping IR (tiling, permutation, spatial partition)
@@ -17,7 +20,9 @@
 //! * [`energy`] — the Accelergy-lite energy model and Fig.-7 breakdowns.
 //! * [`mapspace`] — map-space enumeration, sizes and dataflow constraints.
 //! * [`mappers`] — LOCAL (one pass) and the baseline mappers (dataflow-
-//!   constrained search, random, exhaustive, genetic).
+//!   constrained search, random, exhaustive, genetic, annealing,
+//!   LOCAL+refine), all reachable through one resolver
+//!   ([`mappers::AnyMapper`]).
 //! * [`coordinator`] — the multi-layer compile-time mapping service and the
 //!   batch pipeline ([`coordinator::compile_batch`]) that shards whole
 //!   model zoos across the worker pool behind one cross-network cache.

@@ -15,9 +15,8 @@
 
 use local_mapper::arch::{config, presets, Accelerator};
 use local_mapper::coordinator::{compile_batch, compile_network, BatchPlan};
-use local_mapper::mappers::genetic::GeneticMapper;
-use local_mapper::mappers::{ConstrainedSearch, LocalMapper, Mapper, RandomMapper};
-use local_mapper::mapspace::{self, Dataflow};
+use local_mapper::mappers::{AnyMapper, Mapper};
+use local_mapper::mapspace;
 use local_mapper::report;
 use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime};
 use local_mapper::util::cli::Args;
@@ -60,12 +59,16 @@ fn print_help() {
 
 USAGE: local-mapper <subcommand> [options]
 
-  map      --layer <net:idx|MxCxRxSxPxQ> [--arch eyeriss] [--mapper local|rs|ws|os|random|ga]
-  compile  --network <vgg16|vgg02|resnet50|resnet18|googlenet|squeezenet|mobilenetv2|alexnet>
+  map      --layer <net:idx|MxCxRxSxPxQ> [--arch eyeriss]
+           [--mapper local|rs|ws|os|random|ga|annealing|refine|exhaustive]
+  compile  --network <vgg16|vgg02|resnet50|resnet18|googlenet|squeezenet
+           |mobilenetv2|alexnet|bert|vgg16pool|mobilenetv2res>
            | --network-file <layers.yaml>   [--arch eyeriss] [--threads 4]
-  compile-all  [--arch eyeriss] [--threads 4] [--mapper local|rs|ws|os|random|ga]
-           (batch-compiles vgg16+resnet50+mobilenetv2+squeezenet+alexnet
-            through the shared-cache service; reports hit rate + p50/p99)
+           [--mapper ...]
+  compile-all  [--arch eyeriss] [--threads 4] [--mapper ...]
+           (batch-compiles the operator-diverse zoo — the five paper
+            networks plus bert/vgg16pool/mobilenetv2res — through the
+            shared-cache service; reports hit rate + p50/p99)
   table2
   table3   [--budget 3000] [--seed 42] [--csv]
   fig3     [--n 3000] [--seed 42] [--csv]
@@ -73,11 +76,18 @@ USAGE: local-mapper <subcommand> [options]
   mapspace [--layer vgg02:5] [--arch eyeriss]
   arch     [--name eyeriss] [--file cfg.yaml] [--dump]
   run      [--artifacts artifacts] [--kernel <name>] [--iters 20] [--verify]
-  simulate --layer <spec> [--arch eyeriss] [--single-buffer]
-  explore  --network <name> [--arch eyeriss] (PE × buffer sweep, Pareto front)
+  simulate --layer <spec> [--arch eyeriss] [--single-buffer] [--mapper ...]
+  explore  --network <name> [--arch eyeriss] [--mapper ...]
+           (PE × buffer sweep, Pareto front)
   perf     [--smoke] [--out BENCH_eval.json]
-           (evals/sec old vs context path, exhaustive 1/2/4/8-thread
-            scaling, zoo batch wall time → machine-readable JSON)"
+           (evals/sec old vs context path, per-operator-kind throughput,
+            exhaustive 1/2/4/8-thread scaling, zoo batch wall time
+            → machine-readable JSON)
+
+All --mapper flags accept: local|rs|ws|os|random|ga|annealing|refine|exhaustive
+(--budget caps search evaluations per layer mapping — default 3000, or 300
+ for the compile/compile-all/explore batches; ga derives its generations
+ from the budget; --seed fixes stochastic mappers)."
     );
 }
 
@@ -111,18 +121,23 @@ fn resolve_layer(spec: &str) -> Result<ConvLayer, String> {
     }
 }
 
-fn resolve_mapper(args: &Args) -> Result<Box<dyn Mapper>, String> {
+/// Resolve `--mapper`: one resolver for `map`, `compile`, `compile-all`,
+/// `simulate` and `explore`, exposing every mapper the crate ships.
+/// `default_budget` varies per subcommand: single-layer commands default
+/// to the paper's 3000-candidate budget, batch commands (`compile`,
+/// `compile-all`, `explore`) to 300 — the budget applies per layer
+/// mapping, so batches pay it many times over.
+fn resolve_mapper_with(args: &Args, default_budget: u64) -> Result<AnyMapper, String> {
     let seed = args.get_num::<u64>("seed", 42);
-    let budget = args.get_num::<u64>("budget", 3000);
-    Ok(match args.get_or("mapper", "local") {
-        "local" => Box::new(LocalMapper::new()),
-        "random" => Box::new(RandomMapper::new(budget, seed)),
-        "ga" => Box::new(GeneticMapper::new(32, 20, seed)),
-        df => {
-            let d = Dataflow::parse(df).ok_or_else(|| format!("unknown mapper '{df}'"))?;
-            Box::new(ConstrainedSearch::new(d, budget, seed))
-        }
-    })
+    let budget = args.get_num::<u64>("budget", default_budget);
+    let spec = args.get_or("mapper", "local");
+    AnyMapper::parse(spec, budget, seed)
+        .ok_or_else(|| format!("unknown mapper '{spec}' ({})", AnyMapper::SPEC))
+}
+
+/// [`resolve_mapper_with`] at the single-layer default budget.
+fn resolve_mapper(args: &Args) -> Result<AnyMapper, String> {
+    resolve_mapper_with(args, 3000)
 }
 
 fn cmd_map(args: &Args) -> i32 {
@@ -169,12 +184,15 @@ fn cmd_compile(args: &Args) -> i32 {
         };
         let net = net.as_str();
         let threads = args.get_num::<usize>("threads", 4);
-        let mapper = LocalMapper::new();
+        // Per-shape budget default 300, like compile-all (whole-network
+        // batches pay the budget once per unique layer shape).
+        let mapper = resolve_mapper_with(args, 300)?;
         let plan = compile_network(&layers, &acc, &mapper, threads).map_err(|e| e.to_string())?;
         println!("{}", plan.render().render());
         println!(
-            "network={net} arch={} layers={} cache_hits={} compile_time={}",
+            "network={net} arch={} mapper={} layers={} cache_hits={} compile_time={}",
             plan.arch,
+            plan.mapper,
             plan.layers.len(),
             plan.cache_hits(),
             local_mapper::util::bench::fmt_duration(plan.compile_time)
@@ -198,19 +216,13 @@ fn cmd_compile_all(args: &Args) -> i32 {
     let run = || -> Result<(), String> {
         let acc = resolve_arch(args)?;
         let threads = args.get_num::<usize>("threads", 4);
-        let seed = args.get_num::<u64>("seed", 42);
-        let budget = args.get_num::<u64>("budget", 300);
+        // Batch compiles keep the historical per-shape budget default of
+        // 300 (325 layers × a 3000-candidate search would be a 10x
+        // wall-time surprise for search mappers).
+        let mapper = resolve_mapper_with(args, 300)?;
         let networks = zoo::batch_zoo();
-        let batch = match args.get_or("mapper", "local") {
-            "local" => compile_batch(&networks, &acc, &LocalMapper::new(), threads),
-            "random" => compile_batch(&networks, &acc, &RandomMapper::new(budget, seed), threads),
-            "ga" => compile_batch(&networks, &acc, &GeneticMapper::new(32, 20, seed), threads),
-            df => {
-                let d = Dataflow::parse(df).ok_or_else(|| format!("unknown mapper '{df}'"))?;
-                compile_batch(&networks, &acc, &ConstrainedSearch::new(d, budget, seed), threads)
-            }
-        }
-        .map_err(|e| e.to_string())?;
+        let batch =
+            compile_batch(&networks, &acc, &mapper, threads).map_err(|e| e.to_string())?;
         print_batch(&batch, threads);
         Ok(())
     };
@@ -460,9 +472,12 @@ fn cmd_explore(args: &Args) -> i32 {
         let base = resolve_arch(args)?;
         let net = args.get_or("network", "vgg02");
         let layers = zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
+        // Batch default like compile/compile-all: the sweep maps every
+        // grid point × every layer with no shape dedup.
+        let mapper = resolve_mapper_with(args, 300)?;
         let grid = local_mapper::explore::SweepGrid::default_grid();
         let points = grid.points(&base);
-        let results = local_mapper::explore::sweep(&points, &layers, &LocalMapper::new())
+        let results = local_mapper::explore::sweep(&points, &layers, &mapper)
             .map_err(|e| e.to_string())?;
         let mut t = local_mapper::util::table::Table::new(vec![
             "design", "energy (µJ)", "pJ/MAC", "latency (cyc)", "EDP", "util",

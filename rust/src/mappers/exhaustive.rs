@@ -296,6 +296,21 @@ mod tests {
     }
 
     #[test]
+    fn dead_dims_shrink_the_enumeration_space() {
+        // An op's pinned dims carry exactly one divisor, so the odometer
+        // space of a matmul is a strict subset of the same-size conv's.
+        let acc = small_acc();
+        let mm = ConvLayer::matmul("mm", 8, 4, 8);
+        let conv = ConvLayer::new("c", 8, 4, 3, 3, 8, 8);
+        let mm_size = ExhaustiveMapper::space_size(&mm, &acc);
+        assert!(mm_size < ExhaustiveMapper::space_size(&conv, &acc));
+        // Exhaustive enumeration of the projected space stays feasible and
+        // returns a valid mapping.
+        let out = ExhaustiveMapper::new(mm_size.min(50_000)).run(&mm, &acc).unwrap();
+        out.mapping.validate(&mm, &acc).unwrap();
+    }
+
+    #[test]
     fn space_size_matches_paper_scale() {
         // The §3 example: mapping spaces are astronomically large even
         // before permutations.

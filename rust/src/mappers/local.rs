@@ -24,7 +24,7 @@ use super::{MapError, Mapper};
 use crate::arch::{Accelerator, Style};
 use crate::mapping::{tensor_footprint, Mapping};
 use crate::util::factor::{divisors, factor_splits};
-use crate::workload::{ConvLayer, Dim};
+use crate::workload::{ConvLayer, Dim, OpKind};
 
 /// The LOCAL one-pass mapper.
 #[derive(Debug, Clone, Default)]
@@ -37,13 +37,46 @@ impl LocalMapper {
     }
 
     /// The style-dependent spatial dims (paper Fig. 5 / Fig. 4 lines 3–8):
-    /// returns (X dim, Y dim).
+    /// returns (X dim, Y dim). This is the conv assignment; for the
+    /// operator-aware variant see [`LocalMapper::spatial_dims_for`].
     pub fn spatial_dims(style: Style) -> (Dim, Dim) {
         match style {
             Style::NvdlaLike => (Dim::C, Dim::M),
             Style::EyerissLike => (Dim::Q, Dim::S),
             Style::ShiDianNaoLike => (Dim::Q, Dim::P),
         }
+    }
+
+    /// Operator-aware spatial dims. Conv and depthwise layers keep the
+    /// paper's Fig. 5 assignment verbatim (conv-path mappings are
+    /// bit-identical to the Conv-only pipeline); other ops walk the
+    /// style's preference order and pick the first two *live* dims of the
+    /// projection (a dead dim — bound pinned to 1 — would waste the whole
+    /// array axis; e.g. matmul on an Eyeriss grid gets rows on X and the
+    /// `C` reduction on Y instead of the degenerate `Q`/`S` pair).
+    pub fn spatial_dims_for(layer: &ConvLayer, style: Style) -> (Dim, Dim) {
+        let (dx, dy) = Self::spatial_dims(style);
+        if matches!(layer.op, OpKind::Conv | OpKind::DepthwiseConv) {
+            return (dx, dy);
+        }
+        let prefs_x: &[Dim] = match style {
+            Style::NvdlaLike => &[Dim::C, Dim::Q, Dim::P, Dim::M],
+            Style::EyerissLike => &[Dim::Q, Dim::P, Dim::C, Dim::M],
+            Style::ShiDianNaoLike => &[Dim::Q, Dim::P, Dim::M],
+        };
+        let prefs_y: &[Dim] = match style {
+            Style::NvdlaLike => &[Dim::M, Dim::P, Dim::Q],
+            Style::EyerissLike => &[Dim::S, Dim::R, Dim::C, Dim::M, Dim::P],
+            Style::ShiDianNaoLike => &[Dim::P, Dim::Q, Dim::M],
+        };
+        let live = |d: &Dim| layer.bound(*d) > 1;
+        let x = prefs_x.iter().copied().find(live).unwrap_or(dx);
+        let y = prefs_y
+            .iter()
+            .copied()
+            .find(|d| live(d) && *d != x)
+            .unwrap_or(if dy == x { dx } else { dy });
+        (x, y)
     }
 }
 
@@ -68,8 +101,8 @@ impl Mapper for LocalMapper {
             spatial_y: [1; 7],
         };
 
-        // ---- Phase 1: parallelization.
-        let (dx, dy) = Self::spatial_dims(acc.style);
+        // ---- Phase 1: parallelization (operator-aware, Fig. 5 for conv).
+        let (dx, dy) = Self::spatial_dims_for(layer, acc.style);
         debug_assert_ne!(dx, dy);
         let (sx, _) = factor_splits(layer.bound(dx), acc.pe.m);
         m.spatial_x[dx.idx()] = sx;
@@ -119,7 +152,9 @@ impl Mapper for LocalMapper {
         // a constant-size comparison of the two natural policies (still
         // O(1) — 2 model evaluations, DESIGN.md §4):
         //   A. range-descending innermost (big loops near cheap memory);
-        //   B. reduction dims (C,R,S) innermost (partial sums stationary).
+        //   B. the op's reduction dims innermost (partial sums stationary;
+        //      C,R,S for conv, C for matmul, R,S for pooling).
+        let reduction_dims = layer.op.reduction_dims();
         let mut ctx = crate::model::EvalContext::new(layer, acc);
         let mut best: Option<(f64, Mapping)> = None;
         for reduction_first in [false, true] {
@@ -129,7 +164,7 @@ impl Mapper for LocalMapper {
                 let t = cand.temporal[l];
                 dims.sort_by_key(|d| {
                     let f = t[d.idx()];
-                    let reduction = matches!(d, Dim::C | Dim::R | Dim::S);
+                    let reduction = reduction_dims.contains(d);
                     if reduction_first {
                         (!reduction, std::cmp::Reverse(f), false)
                     } else {
@@ -270,8 +305,65 @@ mod tests {
     #[test]
     fn works_on_depthwise_layers() {
         let acc = presets::eyeriss();
-        let dw = zoo::mobilenet_v2().into_iter().find(|l| l.depthwise).unwrap();
+        let dw = zoo::mobilenet_v2().into_iter().find(|l| l.is_depthwise()).unwrap();
         let m = LocalMapper::new().map(&dw, &acc).unwrap();
         m.validate(&dw, &acc).unwrap();
+    }
+
+    #[test]
+    fn conv_spatial_dims_unchanged_by_op_awareness() {
+        // The conv path must keep the Fig. 5 assignment verbatim — even
+        // for 1×1 convs whose S bound is dead (bit-identity requirement).
+        let one_by_one = ConvLayer::new("c1x1", 64, 32, 1, 1, 14, 14);
+        for style in [Style::NvdlaLike, Style::EyerissLike, Style::ShiDianNaoLike] {
+            assert_eq!(
+                LocalMapper::spatial_dims_for(&one_by_one, style),
+                LocalMapper::spatial_dims(style)
+            );
+        }
+    }
+
+    #[test]
+    fn matmul_spatial_dims_use_live_subset() {
+        let mm = ConvLayer::matmul("mm", 768, 768, 128);
+        // NVDLA keeps (C, M) — both live for matmul.
+        assert_eq!(LocalMapper::spatial_dims_for(&mm, Style::NvdlaLike), (Dim::C, Dim::M));
+        // Eyeriss substitutes the dead Q/S pair with rows × reduction.
+        assert_eq!(LocalMapper::spatial_dims_for(&mm, Style::EyerissLike), (Dim::P, Dim::C));
+        // ShiDianNao: rows on X, output features on Y.
+        assert_eq!(LocalMapper::spatial_dims_for(&mm, Style::ShiDianNaoLike), (Dim::P, Dim::M));
+        // The chosen pair never collides.
+        for l in [
+            ConvLayer::matmul("mm1", 64, 1, 7),
+            ConvLayer::pooling("p", 64, 2, 14, 14),
+            ConvLayer::elementwise("e", 64, 14, 14),
+            ConvLayer::elementwise("tiny", 1, 1, 1),
+        ] {
+            for style in [Style::NvdlaLike, Style::EyerissLike, Style::ShiDianNaoLike] {
+                let (x, y) = LocalMapper::spatial_dims_for(&l, style);
+                assert_ne!(x, y, "{} on {style:?}", l.name);
+            }
+        }
+    }
+
+    #[test]
+    fn maps_every_op_kind_on_every_preset() {
+        let layers = [
+            ConvLayer::matmul("mm", 768, 768, 128),
+            ConvLayer::matmul("ffn", 3072, 768, 128),
+            ConvLayer::pooling("pool", 64, 2, 112, 112).with_stride(2),
+            ConvLayer::elementwise("add", 256, 28, 28),
+        ];
+        for acc in presets::all() {
+            for layer in &layers {
+                let m = LocalMapper::new().map(layer, &acc).unwrap_or_else(|e| {
+                    panic!("LOCAL failed on {} × {}: {e}", layer.name, acc.name)
+                });
+                m.validate(layer, &acc).unwrap();
+                // Live-subset parallelization engages at least one axis for
+                // these amply-sized layers.
+                assert!(m.spatial_x_used() * m.spatial_y_used() > 1, "{}", layer.name);
+            }
+        }
     }
 }

@@ -14,6 +14,7 @@ pub mod search;
 
 pub use annealing::AnnealingMapper;
 pub use exhaustive::ExhaustiveMapper;
+pub use genetic::GeneticMapper;
 pub use local::LocalMapper;
 pub use random::RandomMapper;
 pub use refine::LocalRefined;
@@ -107,6 +108,88 @@ pub trait Mapper {
     }
 }
 
+/// Every mapper in the framework behind one cloneable, sendable dispatch
+/// type — the single resolver the CLI's `map`, `compile`, `compile-all`
+/// and `explore` subcommands all share ([`AnyMapper::parse`]), so the
+/// full mapper set is exposed consistently everywhere a `--mapper` flag
+/// is accepted.
+#[derive(Debug, Clone)]
+pub enum AnyMapper {
+    /// The LOCAL one-pass mapper (the paper's contribution).
+    Local(LocalMapper),
+    /// Best-of-N random sampling (Fig. 3 baseline).
+    Random(RandomMapper),
+    /// GAMMA-style genetic search.
+    Genetic(GeneticMapper),
+    /// Simulated annealing.
+    Annealing(AnnealingMapper),
+    /// LOCAL seed + bounded hill-climbing refinement.
+    Refine(LocalRefined),
+    /// Sharded-parallel exhaustive enumeration (budget-truncated).
+    Exhaustive(ExhaustiveMapper),
+    /// Dataflow-constrained search (the RS/WS/OS Table-3 baselines).
+    Search(ConstrainedSearch),
+}
+
+impl AnyMapper {
+    /// The mapper spec strings [`AnyMapper::parse`] accepts (shown in CLI
+    /// help and error messages).
+    pub const SPEC: &str = "local|rs|ws|os|random|ga|annealing|refine|exhaustive";
+
+    /// Resolve a mapper spec. `budget` caps search mappers (candidate
+    /// evaluations / annealing steps; the GA scales its generation count
+    /// as `budget / 150`, so the historical 3000 default yields the
+    /// classic p32/g20 configuration); `seed` makes stochastic mappers
+    /// deterministic. Returns `None` for an unknown spec.
+    pub fn parse(spec: &str, budget: u64, seed: u64) -> Option<AnyMapper> {
+        let budget = budget.max(1);
+        Some(match spec.to_ascii_lowercase().as_str() {
+            "local" => AnyMapper::Local(LocalMapper::new()),
+            "random" => AnyMapper::Random(RandomMapper::new(budget, seed)),
+            "ga" | "genetic" => {
+                let generations = (budget / 150).max(1) as usize;
+                AnyMapper::Genetic(GeneticMapper::new(32, generations, seed))
+            }
+            "annealing" | "sa" => AnyMapper::Annealing(AnnealingMapper::new(budget, seed)),
+            "refine" | "local+refine" => AnyMapper::Refine(LocalRefined::new(budget, seed)),
+            "exhaustive" => {
+                AnyMapper::Exhaustive(ExhaustiveMapper::new(budget).with_permutations())
+            }
+            df => AnyMapper::Search(ConstrainedSearch::new(
+                crate::mapspace::Dataflow::parse(df)?,
+                budget,
+                seed,
+            )),
+        })
+    }
+
+    fn inner(&self) -> &dyn Mapper {
+        match self {
+            AnyMapper::Local(m) => m,
+            AnyMapper::Random(m) => m,
+            AnyMapper::Genetic(m) => m,
+            AnyMapper::Annealing(m) => m,
+            AnyMapper::Refine(m) => m,
+            AnyMapper::Exhaustive(m) => m,
+            AnyMapper::Search(m) => m,
+        }
+    }
+}
+
+impl Mapper for AnyMapper {
+    fn name(&self) -> String {
+        self.inner().name()
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.inner().evaluations()
+    }
+
+    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.inner().map(layer, acc)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -120,5 +203,38 @@ mod tests {
         let out = LocalMapper::new().run(&layer, &acc).unwrap();
         assert_eq!(out.evaluations, 2);
         assert!(out.evaluation.energy.total_pj() > 0.0);
+    }
+
+    #[test]
+    fn any_mapper_resolves_all_seven_mechanisms() {
+        let acc = presets::eyeriss();
+        let layer = zoo::alexnet()[2].clone();
+        for spec in ["local", "rs", "ws", "os", "random", "ga", "annealing", "refine", "exhaustive"]
+        {
+            let m = AnyMapper::parse(spec, 40, 1)
+                .unwrap_or_else(|| panic!("spec '{spec}' did not resolve"));
+            let out =
+                m.run(&layer, &acc).unwrap_or_else(|e| panic!("{spec} failed to map: {e}"));
+            out.mapping.validate(&layer, &acc).unwrap();
+        }
+        assert!(AnyMapper::parse("frob", 40, 1).is_none());
+        // Aliases resolve to the same mechanisms.
+        assert_eq!(AnyMapper::parse("sa", 10, 1).unwrap().name(), "SA(10)");
+        assert_eq!(AnyMapper::parse("ROW", 10, 1).unwrap().name(), "RS-search");
+        // The GA honours the budget: the historical 3000 default resolves
+        // to the classic p32/g20; small budgets shrink the generations.
+        assert_eq!(AnyMapper::parse("ga", 3000, 1).unwrap().name(), "GA(p32g20)");
+        assert_eq!(AnyMapper::parse("ga", 40, 1).unwrap().name(), "GA(p32g1)");
+    }
+
+    #[test]
+    fn any_mapper_is_usable_by_the_batch_pipeline() {
+        // AnyMapper must satisfy the coordinator bounds (Clone + Send) so
+        // one resolver serves map, compile, compile-all and explore.
+        let acc = presets::eyeriss();
+        let m = AnyMapper::parse("local", 40, 1).unwrap();
+        let plan =
+            crate::coordinator::compile_network(&zoo::alexnet(), &acc, &m, 2).unwrap();
+        assert_eq!(plan.layers.len(), 5);
     }
 }

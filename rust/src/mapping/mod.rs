@@ -10,7 +10,7 @@
 //! and level 1. Dim `d`'s full extent is the product of all its factors.
 
 use crate::arch::Accelerator;
-use crate::workload::{ConvLayer, Dim, Tensor};
+use crate::workload::{ConvLayer, Dim, OpKind, Tensor};
 use std::fmt;
 
 /// Per-dimension factor array indexed by [`Dim::idx`].
@@ -300,25 +300,27 @@ impl Mapping {
     }
 }
 
-/// Elements of tensor `t` inside a tile with the given per-dim factors.
-/// Input uses the layer's sliding-window extents (halo); depthwise weights
-/// drop the C factor.
+/// Elements of tensor `t` inside a tile with the given per-dim factors,
+/// under the layer's operator projection: Input uses the layer's
+/// sliding-window extents (halo) and the op's channel axis (`M` for
+/// per-channel ops, `C` otherwise) scaled by the operand count; depthwise
+/// weights drop the C factor; weight-less ops (pooling, elementwise)
+/// contribute zero weight elements.
 pub fn tensor_elems(layer: &ConvLayer, tile: &Factors, t: Tensor) -> u64 {
     let f = |d: Dim| tile[d.idx()].min(layer.bound(d)).max(1);
     match t {
-        Tensor::Weight => {
-            if layer.depthwise {
-                f(Dim::M) * f(Dim::R) * f(Dim::S)
-            } else {
-                f(Dim::M) * f(Dim::C) * f(Dim::R) * f(Dim::S)
-            }
-        }
+        Tensor::Weight => match layer.op {
+            OpKind::Conv | OpKind::MatMul => f(Dim::M) * f(Dim::C) * f(Dim::R) * f(Dim::S),
+            OpKind::DepthwiseConv => f(Dim::M) * f(Dim::R) * f(Dim::S),
+            OpKind::Pooling | OpKind::Elementwise => 0,
+        },
         Tensor::Input => {
             let h = layer.input_extent(f(Dim::P), f(Dim::R));
             let w = layer.input_extent(f(Dim::Q), f(Dim::S));
-            // Depthwise: input channels ride on M (C is collapsed to 1).
-            let ch = if layer.depthwise { f(Dim::M) } else { f(Dim::C) };
-            f(Dim::N) * ch * h * w
+            // Per-channel ops: input channels ride on M (C is collapsed
+            // to 1); elementwise adds keep both operands resident.
+            let ch = if layer.op.channels_on_m() { f(Dim::M) } else { f(Dim::C) };
+            layer.op.input_operands() * f(Dim::N) * ch * h * w
         }
         Tensor::Output => f(Dim::N) * f(Dim::M) * f(Dim::P) * f(Dim::Q),
     }
@@ -429,6 +431,29 @@ mod tests {
         assert_eq!(tensor_elems(&l, &tile, Tensor::Input), 6);
         assert_eq!(tensor_elems(&l, &tile, Tensor::Output), 4);
         assert_eq!(tensor_elems(&l, &tile, Tensor::Weight), 3);
+    }
+
+    #[test]
+    fn op_aware_tile_elems() {
+        let mut tile: Factors = [1; 7];
+        tile[Dim::M.idx()] = 2;
+        tile[Dim::C.idx()] = 4;
+        tile[Dim::P.idx()] = 8;
+        let mm = ConvLayer::matmul("mm", 8, 4, 16);
+        assert_eq!(tensor_elems(&mm, &tile, Tensor::Weight), 2 * 4);
+        assert_eq!(tensor_elems(&mm, &tile, Tensor::Input), 4 * 8);
+        assert_eq!(tensor_elems(&mm, &tile, Tensor::Output), 2 * 8);
+        // Weight-less ops: zero weight elements and footprint share.
+        let pool = ConvLayer::pooling("p", 8, 2, 8, 8).with_stride(2);
+        assert_eq!(tensor_elems(&pool, &tile, Tensor::Weight), 0);
+        let add = ConvLayer::elementwise("a", 8, 8, 8);
+        assert_eq!(tensor_elems(&add, &tile, Tensor::Weight), 0);
+        // Both add operands resident: 2 × M2 × P8.
+        assert_eq!(tensor_elems(&add, &tile, Tensor::Input), 2 * 2 * 8);
+        assert_eq!(
+            tensor_footprint(&add, &tile),
+            tensor_elems(&add, &tile, Tensor::Input) + tensor_elems(&add, &tile, Tensor::Output)
+        );
     }
 
     #[test]

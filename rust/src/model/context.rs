@@ -9,8 +9,9 @@
 //! hoisted out of the loop.
 //!
 //! [`EvalContext`] does exactly that: it precomputes the energy reference
-//! table, the per-tensor dimension-relevance masks (layer-aware — depthwise
-//! layers add `M` to Input's relevance), and owns a scratch [`Evaluation`]
+//! table, the per-tensor dimension-relevance masks (operator-aware — built
+//! from the layer's [`crate::workload::OpKind`] projection, e.g. depthwise
+//! Input follows `M`, matmul drops `R`/`S`), and owns a scratch [`Evaluation`]
 //! whose vectors are sized once at construction. The hot path,
 //! [`EvalContext::evaluate_into`], overwrites the scratch in place and
 //! returns a borrow — **zero heap allocations per candidate** (the loop
@@ -128,11 +129,19 @@ impl EvalContext {
             spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
         }
 
-        // --- Level-0 (RF) datapath traffic.
+        // --- Level-0 (RF) datapath traffic (weight-less ops skip W;
+        // elementwise adds read both summands).
         let macs = layer.macs();
-        scratch.access[0][Tensor::Weight.t_idx()].reads += macs;
-        scratch.access[0][Tensor::Input.t_idx()].reads += macs;
-        scratch.access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+        if layer.op.uses_weights() {
+            scratch.access[0][Tensor::Weight.t_idx()].reads += macs;
+        }
+        scratch.access[0][Tensor::Input.t_idx()].reads += macs * layer.op.input_operands();
+        if !layer.op.reduction_dims().is_empty() {
+            // Accumulation: each op read-modify-writes a partial sum. Ops
+            // with no reduction dims (elementwise add) write each output
+            // exactly once and never read it back.
+            scratch.access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+        }
         scratch.access[0][Tensor::Output.t_idx()].writes += macs; // accumulator write
 
         let mut noc_words: u64 = 0;
@@ -141,6 +150,9 @@ impl EvalContext {
         for l in 1..n_levels {
             let loops = loop_list_above(layer, mapping, l);
             for t in Tensor::ALL {
+                if t == Tensor::Weight && !layer.op.uses_weights() {
+                    continue; // no weight tensor: zero elements at every level
+                }
                 let ti = t.t_idx();
                 let mask = &relevance[ti];
                 let (unique_child, aggregate_child) = if l == 1 {
@@ -268,12 +280,36 @@ mod tests {
     fn context_matches_legacy_on_depthwise() {
         // Depthwise relevance (Input follows M) must be baked into the mask.
         let acc = presets::eyeriss();
-        let layer = zoo::mobilenet_v2().into_iter().find(|l| l.depthwise).unwrap();
+        let layer = zoo::mobilenet_v2().into_iter().find(|l| l.is_depthwise()).unwrap();
         let mut ctx = EvalContext::new(&layer, &acc);
         let mut rng = SplitMix64::new(13);
         for _ in 0..25 {
             let m = sample_random(&layer, &acc, &mut rng);
             assert_eq!(&evaluate_unchecked(&layer, &acc, &m), ctx.evaluate_into(&m));
+        }
+    }
+
+    #[test]
+    fn context_matches_legacy_on_every_op_kind() {
+        // The op-aware masks and weight gating must agree with the legacy
+        // evaluator on every operator projection, not just conv.
+        let acc = presets::eyeriss();
+        let mut rng = SplitMix64::new(19);
+        for layer in [
+            ConvLayer::matmul("mm", 96, 64, 56),
+            ConvLayer::pooling("pool", 64, 2, 28, 28).with_stride(2),
+            ConvLayer::elementwise("add", 96, 28, 28),
+        ] {
+            let mut ctx = EvalContext::new(&layer, &acc);
+            for _ in 0..15 {
+                let m = sample_random(&layer, &acc, &mut rng);
+                assert_eq!(
+                    &evaluate_unchecked(&layer, &acc, &m),
+                    ctx.evaluate_into(&m),
+                    "{}",
+                    layer.name
+                );
+            }
         }
     }
 

@@ -4,7 +4,11 @@
 //! [`Accelerator`], this module computes per-level per-tensor access
 //! counts, NoC traffic, PE utilization (paper Eq. 25), a roofline latency,
 //! and — through [`crate::energy`] — the per-component energy breakdown the
-//! paper's Fig. 3/7 report.
+//! paper's Fig. 3/7 report. The model is operator-generic: tensor/dim
+//! relevance and tile element counts come from the layer's
+//! [`crate::workload::OpKind`] projection, so matmul, pooling and
+//! elementwise layers ride the same engine (weight-less ops simply carry
+//! zero weight traffic; elementwise adds read two operands per result).
 //!
 //! # Reuse model
 //!
@@ -138,12 +142,20 @@ pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mappin
         spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
     }
 
-    // --- Level-0 (RF) datapath traffic: every MAC reads W, I and
+    // --- Level-0 (RF) datapath traffic: every op reads its operands
+    // (weight-less ops skip W; elementwise adds read both summands) and
     // read-modify-writes the accumulator.
     let macs = layer.macs();
-    access[0][Tensor::Weight.t_idx()].reads += macs;
-    access[0][Tensor::Input.t_idx()].reads += macs;
-    access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+    if layer.op.uses_weights() {
+        access[0][Tensor::Weight.t_idx()].reads += macs;
+    }
+    access[0][Tensor::Input.t_idx()].reads += macs * layer.op.input_operands();
+    if !layer.op.reduction_dims().is_empty() {
+        // Accumulation: each op read-modify-writes a partial sum. Ops with
+        // no reduction dims (elementwise add) write each output exactly
+        // once and never read it back.
+        access[0][Tensor::Output.t_idx()].reads += macs; // accumulator read
+    }
     access[0][Tensor::Output.t_idx()].writes += macs; // accumulator write
 
     let mut noc_words: u64 = 0;
@@ -154,6 +166,9 @@ pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mappin
     for l in 1..n_levels {
         let loops = loop_list_above(layer, mapping, l);
         for t in Tensor::ALL {
+            if t == Tensor::Weight && !layer.op.uses_weights() {
+                continue; // no weight tensor: zero elements at every level
+            }
             let ti = t.t_idx();
             // Child tile uniqueness at this boundary.
             let (unique_child, aggregate_child) = if l == 1 {
@@ -405,6 +420,53 @@ mod tests {
         assert!(e.energy.total_pj() > 0.0);
         // Everything streams from DRAM: DRAM must dominate storage energy.
         assert!(e.energy.dram_pj() > e.energy.level_pj[1]);
+    }
+
+    #[test]
+    fn weightless_ops_carry_no_weight_traffic() {
+        let acc = presets::eyeriss();
+        for layer in [
+            ConvLayer::pooling("pool", 64, 2, 28, 28).with_stride(2),
+            ConvLayer::elementwise("add", 64, 28, 28),
+        ] {
+            let m = Mapping::trivial(&layer, acc.n_levels());
+            let e = evaluate(&layer, &acc, &m).unwrap();
+            for l in 0..acc.n_levels() {
+                assert_eq!(
+                    e.access[l][Tensor::Weight.t_idx()].total(),
+                    0,
+                    "{} level {l}",
+                    layer.name
+                );
+            }
+            assert!(e.energy.total_pj() > 0.0);
+        }
+    }
+
+    #[test]
+    fn elementwise_reads_two_operands_per_add() {
+        let acc = presets::eyeriss();
+        let layer = ConvLayer::elementwise("add", 8, 4, 4);
+        let m = Mapping::trivial(&layer, acc.n_levels());
+        let e = evaluate(&layer, &acc, &m).unwrap();
+        assert_eq!(e.access[0][Tensor::Input.t_idx()].reads, 2 * e.macs);
+        // No reduction → no accumulator read-back: L0 output reads are the
+        // value hand-ups alone (one per result for this trivial mapping).
+        assert_eq!(e.access[0][Tensor::Output.t_idx()].reads, e.macs);
+        // Both operands stream from DRAM at least once.
+        let top = acc.n_levels() - 1;
+        assert!(e.access[top][Tensor::Input.t_idx()].reads >= 2 * layer.m * layer.p * layer.q);
+    }
+
+    #[test]
+    fn matmul_matches_equivalent_1x1_conv() {
+        // A matmul is numerically the 1×1-conv projection with rows on P:
+        // identical traffic, latency and energy under the same mapping.
+        let acc = presets::eyeriss();
+        let mm = ConvLayer::matmul("mm", 64, 32, 16);
+        let conv = ConvLayer::new("conv", 64, 32, 1, 1, 16, 1);
+        let m = Mapping::trivial(&mm, acc.n_levels());
+        assert_eq!(evaluate(&mm, &acc, &m).unwrap(), evaluate(&conv, &acc, &m).unwrap());
     }
 
     #[test]

@@ -8,10 +8,14 @@
 //!    [`crate::model::evaluate_unchecked`] vs the zero-allocation
 //!    [`EvalContext::evaluate_into`] hot path, over the same pre-sampled
 //!    candidate pool (VGG-16 conv9 × Eyeriss).
-//! 2. **Exhaustive scaling** — sharded parallel enumeration throughput at
+//! 2. **Per-operator throughput** — context-path evaluations/second for a
+//!    representative layer of each [`crate::workload::OpKind`] (conv vs
+//!    matmul vs pooling vs elementwise), so operator-IR regressions show
+//!    up per projection, not just on conv.
+//! 3. **Exhaustive scaling** — sharded parallel enumeration throughput at
 //!    1/2/4/8 threads on a small fixed layer.
-//! 3. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
-//!    the five-network zoo through the shared-cache service.
+//! 4. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
+//!    the operator-diverse zoo through the shared-cache service.
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
 //! schema (see the README "Performance" section); the `perf` CLI
@@ -65,6 +69,17 @@ impl EvalThroughput {
     }
 }
 
+/// Context-path throughput for one representative layer of an operator
+/// kind.
+#[derive(Debug, Clone)]
+pub struct OpThroughput {
+    /// Operator-kind name (`conv` / `matmul` / `pool` / `add`).
+    pub op: &'static str,
+    /// `EvalContext::evaluate_into` evaluations per second on the
+    /// representative layer.
+    pub evals_per_sec: f64,
+}
+
 /// One exhaustive-scaling data point.
 #[derive(Debug, Clone)]
 pub struct ExhaustivePoint {
@@ -99,6 +114,8 @@ pub struct PerfReport {
     pub smoke: bool,
     /// Old-vs-new evaluator throughput.
     pub evaluator: EvalThroughput,
+    /// Context-path throughput per operator kind.
+    pub per_op: Vec<OpThroughput>,
     /// Exhaustive scaling at 1/2/4/8 threads.
     pub exhaustive: Vec<ExhaustivePoint>,
     /// Zoo batch-pipeline wall time.
@@ -129,6 +146,16 @@ impl PerfReport {
             jnum(self.evaluator.context_evals_per_sec),
             jnum(self.evaluator.speedup())
         ));
+        s.push_str("  \"per_op\": [\n");
+        for (i, p) in self.per_op.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"op\": \"{}\", \"evals_per_sec\": {}}}{}\n",
+                p.op,
+                jnum(p.evals_per_sec),
+                if i + 1 < self.per_op.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str("  \"exhaustive\": [\n");
         for (i, p) in self.exhaustive.iter().enumerate() {
             s.push_str(&format!(
@@ -160,6 +187,9 @@ impl PerfReport {
             self.evaluator.context_evals_per_sec,
             self.evaluator.speedup()
         ));
+        for p in &self.per_op {
+            s.push_str(&format!("per-op {}: {:.0} evals/s\n", p.op, p.evals_per_sec));
+        }
         for p in &self.exhaustive {
             s.push_str(&format!(
                 "exhaustive {}T: {:.1} ms wall, {:.0} evals/s\n",
@@ -224,6 +254,28 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         context_evals_per_sec: 1e9 / t_ctx.median_ns().max(1.0),
     };
 
+    // Per-operator-kind throughput: one representative layer per op, same
+    // pre-sampled-pool methodology as the evaluator section.
+    let op_layers: [(&'static str, ConvLayer); 4] = [
+        ("conv", zoo::vgg16()[8].clone()),
+        ("matmul", ConvLayer::matmul("perf-mm", 768, 768, 128)),
+        ("pool", ConvLayer::pooling("perf-pool", 64, 2, 112, 112).with_stride(2)),
+        ("add", ConvLayer::elementwise("perf-add", 768, 128, 1)),
+    ];
+    let mut per_op = Vec::with_capacity(op_layers.len());
+    for (op, l) in op_layers {
+        let mut rng = SplitMix64::new(17);
+        let pool: Vec<Mapping> = (0..64).map(|_| sample_random(&l, &acc, &mut rng)).collect();
+        let mut ctx = EvalContext::new(&l, &acc);
+        let mut k = 0usize;
+        let t = median_time(warmup, iters, || {
+            let lat = ctx.evaluate_into(&pool[k % pool.len()]).latency_cycles;
+            k += 1;
+            lat
+        });
+        per_op.push(OpThroughput { op, evals_per_sec: 1e9 / t.median_ns().max(1.0) });
+    }
+
     // Exhaustive scaling on a small fixed space.
     let ex_layer = ConvLayer::new("perf-ex", 8, 4, 3, 3, 8, 8);
     let ex_acc = scaling_acc();
@@ -254,7 +306,7 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         cache_hit_rate: batch.hit_rate(),
     };
 
-    PerfReport { schema: 1, smoke: cfg.smoke, evaluator, exhaustive, zoo_batch }
+    PerfReport { schema: 2, smoke: cfg.smoke, evaluator, per_op, exhaustive, zoo_batch }
 }
 
 #[cfg(test)]
@@ -267,25 +319,34 @@ mod tests {
         assert!(r.smoke);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
+        assert_eq!(
+            r.per_op.iter().map(|p| p.op).collect::<Vec<_>>(),
+            vec!["conv", "matmul", "pool", "add"]
+        );
+        assert!(r.per_op.iter().all(|p| p.evals_per_sec > 0.0));
         assert_eq!(r.exhaustive.len(), 4);
         assert_eq!(r.exhaustive.iter().map(|p| p.threads).collect::<Vec<_>>(), vec![1, 2, 4, 8]);
         assert!(r.exhaustive.iter().all(|p| p.evals_per_sec > 0.0));
-        assert_eq!(r.zoo_batch.networks, 5);
-        assert!(r.zoo_batch.layers > 100);
+        assert_eq!(r.zoo_batch.networks, 8);
+        assert!(r.zoo_batch.layers > 300);
         assert!(r.zoo_batch.wall_ms > 0.0);
     }
 
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 1,
+            schema: 2,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
                 context_evals_per_sec: 400.0,
             },
+            per_op: vec![
+                OpThroughput { op: "conv", evals_per_sec: 300.0 },
+                OpThroughput { op: "matmul", evals_per_sec: 500.0 },
+            ],
             exhaustive: vec![ExhaustivePoint { threads: 1, wall_ms: 2.0, evals_per_sec: 50.0 }],
-            zoo_batch: ZooBatch { networks: 5, layers: 149, wall_ms: 10.0, cache_hit_rate: 0.4 },
+            zoo_batch: ZooBatch { networks: 8, layers: 325, wall_ms: 10.0, cache_hit_rate: 0.4 },
         };
         let json = r.to_json();
         for key in [
@@ -295,6 +356,9 @@ mod tests {
             "\"legacy_evals_per_sec\"",
             "\"context_evals_per_sec\"",
             "\"speedup\"",
+            "\"per_op\"",
+            "\"op\": \"conv\"",
+            "\"op\": \"matmul\"",
             "\"exhaustive\"",
             "\"threads\"",
             "\"wall_ms\"",
@@ -306,6 +370,7 @@ mod tests {
         }
         assert!(json.contains("\"speedup\": 4.000"));
         assert!(r.summary().contains("4.00x"));
+        assert!(r.summary().contains("per-op matmul"));
     }
 
     #[test]

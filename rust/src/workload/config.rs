@@ -11,18 +11,41 @@
 //!     q: 112
 //!     stride: 2
 //!   - name: dw3x3
+//!     op: dwconv
 //!     m: 64
 //!     r: 3
 //!     s: 3
 //!     p: 56
 //!     q: 56
-//!     depthwise: true
+//!   - name: fc
+//!     op: matmul
+//!     m: 1000
+//!     c: 512
+//!     p: 1
+//!   - name: pool2x2
+//!     op: pool
+//!     m: 64
+//!     r: 2
+//!     s: 2
+//!     p: 28
+//!     q: 28
+//!     stride: 2
+//!   - name: skip
+//!     op: add
+//!     m: 64
+//!     p: 28
+//!     q: 28
 //! ```
 //!
-//! Used by `local-mapper compile --network-file <path>` so the framework
-//! maps arbitrary user networks, not just the paper's.
+//! `op:` selects the operator projection ([`OpKind::parse`] names and
+//! aliases); it defaults to dense conv, and the legacy `depthwise: true`
+//! flag is still accepted as a synonym for `op: dwconv`. Each op requires
+//! only its live fields — weight-less ops skip `c`, matmul skips `r`/`s`
+//! (`q` defaults to 1). Used by `local-mapper compile --network-file
+//! <path>` so the framework maps arbitrary user networks, not just the
+//! paper's.
 
-use super::ConvLayer;
+use super::{ConvLayer, Dim, OpKind};
 use crate::util::yaml::{self, Value};
 use std::fmt;
 
@@ -93,25 +116,64 @@ pub fn layers_from_str(src: &str) -> Result<Vec<ConvLayer>, WorkloadError> {
             .and_then(Value::as_str)
             .map(str::to_string)
             .unwrap_or_else(|| format!("layer{}", i + 1));
+        // `op:` selects the projection; the legacy `depthwise: true` flag
+        // is an accepted synonym for `op: dwconv`.
         let depthwise = lv.get("depthwise").and_then(Value::as_bool).unwrap_or(false);
+        let op = match lv.get("op").and_then(Value::as_str) {
+            None => {
+                if depthwise {
+                    OpKind::DepthwiseConv
+                } else {
+                    OpKind::Conv
+                }
+            }
+            Some(s) => OpKind::parse(s)
+                .ok_or_else(|| WorkloadError::Invalid(format!("{name}: unknown op '{s}'")))?,
+        };
+        // Dims an op pins to 1 are optional in the YAML — but if the user
+        // *does* write one, read it and let the invariant check below
+        // reject a non-1 value rather than silently overwrite it (turning
+        // a conv entry into `op: add` must not quietly drop its shape).
+        let opt1 = |key: &str| lv.get(key).and_then(Value::as_u64).unwrap_or(1);
         let m = need(lv, "m", &name)?;
-        // Depthwise layers take channels from m; dense layers need c.
-        let c = if depthwise { 1 } else { need(lv, "c", &name)? };
-        let mut layer = ConvLayer::new(
-            &name,
-            m,
-            c.max(1),
-            need(lv, "r", &name)?,
-            need(lv, "s", &name)?,
-            need(lv, "p", &name)?,
-            need(lv, "q", &name)?,
-        );
+        // Channels ride on M for per-channel ops; conv and matmul need c.
+        let c = match op {
+            OpKind::Conv | OpKind::MatMul => need(lv, "c", &name)?,
+            _ => opt1("c"),
+        };
+        let (r, s) = match op {
+            OpKind::MatMul | OpKind::Elementwise => (opt1("r"), opt1("s")),
+            _ => (need(lv, "r", &name)?, need(lv, "s", &name)?),
+        };
+        let p = need(lv, "p", &name)?;
+        let q = match op {
+            OpKind::MatMul => opt1("q").max(1),
+            _ => need(lv, "q", &name)?,
+        };
+        let mut layer = ConvLayer::new(&name, m, c.max(1), r, s, p, q);
+        layer.op = op;
         layer.stride = lv.get("stride").and_then(Value::as_u64).unwrap_or(1).max(1);
         layer.n = lv.get("batch").and_then(Value::as_u64).unwrap_or(1).max(1);
         layer.dilation = lv.get("dilation").and_then(Value::as_u64).unwrap_or(1).max(1);
-        if depthwise {
-            layer.depthwise = true;
-            layer.c = 1;
+        // Enforce the op's projection invariants: a dead dim > 1 (e.g.
+        // `q: 4` on a matmul) would be silently mis-modeled — the op's
+        // relevance sets exclude it, so the evaluator would treat every
+        // iteration as full reuse. Reject rather than mis-count.
+        for d in Dim::ALL {
+            if !op.live_dims().contains(&d) && layer.bound(d) != 1 {
+                return Err(WorkloadError::Invalid(format!(
+                    "{name}: dim {d} must be 1 for op {op} (got {})",
+                    layer.bound(d)
+                )));
+            }
+        }
+        // Stride only has meaning for windowed ops (it scales the input
+        // halo); matmul/elementwise have no window.
+        if matches!(op, OpKind::MatMul | OpKind::Elementwise) && layer.stride != 1 {
+            return Err(WorkloadError::Invalid(format!(
+                "{name}: stride must be 1 for op {op} (got {})",
+                layer.stride
+            )));
         }
         out.push(layer);
     }
@@ -129,19 +191,22 @@ pub fn layers_to_yaml(layers: &[ConvLayer]) -> String {
     let mut s = String::from("layers:\n");
     for l in layers {
         s.push_str(&format!("  - name: {}\n", l.name));
+        if l.op != OpKind::Conv {
+            s.push_str(&format!("    op: {}\n", l.op));
+        }
         s.push_str(&format!("    m: {}\n", l.m));
-        if !l.depthwise {
+        if matches!(l.op, OpKind::Conv | OpKind::MatMul) {
             s.push_str(&format!("    c: {}\n", l.c));
         }
-        s.push_str(&format!("    r: {}\n    s: {}\n    p: {}\n    q: {}\n", l.r, l.s, l.p, l.q));
+        if !matches!(l.op, OpKind::MatMul | OpKind::Elementwise) {
+            s.push_str(&format!("    r: {}\n    s: {}\n", l.r, l.s));
+        }
+        s.push_str(&format!("    p: {}\n    q: {}\n", l.p, l.q));
         if l.stride != 1 {
             s.push_str(&format!("    stride: {}\n", l.stride));
         }
         if l.n != 1 {
             s.push_str(&format!("    batch: {}\n", l.n));
-        }
-        if l.depthwise {
-            s.push_str("    depthwise: true\n");
         }
     }
     s
@@ -163,12 +228,53 @@ mod tests {
 
     #[test]
     fn parse_depthwise_and_options() {
-        let src = "layers:\n  - name: dw\n    m: 32\n    r: 3\n    s: 3\n    p: 56\n    q: 56\n    stride: 2\n    batch: 4\n    depthwise: true\n";
+        // Legacy flag form and the op: form are synonyms.
+        for src in [
+            "layers:\n  - name: dw\n    m: 32\n    r: 3\n    s: 3\n    p: 56\n    q: 56\n    stride: 2\n    batch: 4\n    depthwise: true\n",
+            "layers:\n  - name: dw\n    op: dwconv\n    m: 32\n    r: 3\n    s: 3\n    p: 56\n    q: 56\n    stride: 2\n    batch: 4\n",
+        ] {
+            let ls = layers_from_str(src).unwrap();
+            assert!(ls[0].is_depthwise());
+            assert_eq!(ls[0].c, 1);
+            assert_eq!(ls[0].n, 4);
+            assert_eq!(ls[0].stride, 2);
+        }
+    }
+
+    #[test]
+    fn parse_operator_kinds() {
+        let src = "layers:\n  - name: fc\n    op: matmul\n    m: 1000\n    c: 512\n    p: 4\n  - name: pool\n    op: pool\n    m: 64\n    r: 2\n    s: 2\n    p: 28\n    q: 28\n    stride: 2\n  - name: skip\n    op: add\n    m: 64\n    p: 28\n    q: 28\n";
         let ls = layers_from_str(src).unwrap();
-        assert!(ls[0].depthwise);
-        assert_eq!(ls[0].c, 1);
-        assert_eq!(ls[0].n, 4);
-        assert_eq!(ls[0].stride, 2);
+        assert_eq!(ls[0].op, OpKind::MatMul);
+        assert_eq!((ls[0].r, ls[0].s, ls[0].q), (1, 1, 1));
+        assert_eq!(ls[0].macs(), 1000 * 512 * 4);
+        assert_eq!(ls[1].op, OpKind::Pooling);
+        assert_eq!(ls[1].c, 1);
+        assert_eq!(ls[2].op, OpKind::Elementwise);
+        assert_eq!((ls[2].c, ls[2].r, ls[2].s), (1, 1, 1));
+        // Unknown op is a clean error.
+        assert!(layers_from_str("layers:\n  - op: warp\n    m: 8\n    p: 4\n    q: 4\n").is_err());
+    }
+
+    #[test]
+    fn op_invariant_violations_rejected() {
+        // A dead dim > 1 would be silently mis-modeled (matmul relevance
+        // excludes Q): reject at parse time.
+        let mm_q = "layers:\n  - op: matmul\n    m: 8\n    c: 8\n    p: 4\n    q: 4\n";
+        assert!(layers_from_str(mm_q).is_err());
+        // Converting a conv entry to an add by editing only `op:` must not
+        // silently drop the c/r/s shape — it is rejected, not overwritten.
+        let add_crs =
+            "layers:\n  - op: add\n    m: 64\n    c: 256\n    r: 3\n    s: 3\n    p: 28\n    q: 28\n";
+        assert!(layers_from_str(add_crs).is_err());
+        // Stride is meaningless without a window.
+        let add_stride = "layers:\n  - op: add\n    m: 8\n    p: 4\n    q: 4\n    stride: 2\n";
+        assert!(layers_from_str(add_stride).is_err());
+        let mm_stride = "layers:\n  - op: matmul\n    m: 8\n    c: 8\n    p: 4\n    stride: 2\n";
+        assert!(layers_from_str(mm_stride).is_err());
+        // Strided pooling stays legal (windowed op).
+        let pool = "layers:\n  - op: pool\n    m: 8\n    r: 2\n    s: 2\n    p: 4\n    q: 4\n    stride: 2\n";
+        assert!(layers_from_str(pool).is_ok());
     }
 
     #[test]
@@ -176,6 +282,8 @@ mod tests {
         assert!(layers_from_str("layers:\n  - name: a\n    m: 8\n").is_err());
         assert!(layers_from_str("nope: 1\n").is_err());
         assert!(layers_from_str("layers:\n").is_err());
+        // Matmul still needs its reduction width.
+        assert!(layers_from_str("layers:\n  - op: matmul\n    m: 8\n    p: 4\n").is_err());
     }
 
     #[test]
@@ -186,14 +294,15 @@ mod tests {
 
     #[test]
     fn roundtrip_zoo_networks() {
-        for net in ["alexnet", "mobilenetv2"] {
+        for net in ["alexnet", "mobilenetv2", "bert", "vgg16pool", "mobilenetv2res"] {
             let layers = zoo::network(net).unwrap();
             let y = layers_to_yaml(&layers);
             let back = layers_from_str(&y).unwrap();
-            assert_eq!(layers.len(), back.len());
+            assert_eq!(layers.len(), back.len(), "{net}");
             for (a, b) in layers.iter().zip(&back) {
                 assert_eq!(a.macs(), b.macs(), "{}", a.name);
-                assert_eq!(a.depthwise, b.depthwise);
+                assert_eq!(a.op, b.op, "{}", a.name);
+                assert_eq!(a.bounds(), b.bounds(), "{}", a.name);
             }
         }
     }

@@ -1,21 +1,32 @@
-//! Convolution workloads — the paper's `CT = {Weight, Input, Output}`.
+//! Operator-generic workloads — the paper's `CT = {Weight, Input, Output}`
+//! generalized beyond convolution.
 //!
-//! A convolution layer is described by the seven problem dimensions of
-//! Eq. (3): `N` (batch), `M` (output channels), `C` (input channels),
-//! `R`/`S` (filter height/width), `P`/`Q` (output height/width), plus
-//! stride/dilation. The three tensors project onto those dimensions as in
-//! Eq. (6): `W ∈ R^{MCRS}`, `I ∈ R^{NCHW}`, `O ∈ R^{NMPQ}` with
-//! `H = (P-1)·stride + (R-1)·dilation + 1` (and likewise `W` from `Q`,`S`).
+//! Every layer is described by the seven problem dimensions of Eq. (3):
+//! `N` (batch), `M` (output channels), `C` (input channels), `R`/`S`
+//! (filter height/width), `P`/`Q` (output height/width), plus
+//! stride/dilation. A dense convolution projects the three tensors onto
+//! those dimensions as in Eq. (6): `W ∈ R^{MCRS}`, `I ∈ R^{NCHW}`,
+//! `O ∈ R^{NMPQ}` with `H = (P-1)·stride + (R-1)·dilation + 1` (and
+//! likewise `W` from `Q`,`S`).
+//!
+//! Other operators are *projections* of the same 7-dim nest ([`OpKind`]):
+//! matmul is a 1×1 "conv" over rows, pooling a weight-less window
+//! reduction, an elementwise add a weight-less identity map. Each op pins
+//! its dead dimensions to 1 and carries its own tensor/dimension relevance
+//! sets ([`OpKind::relevant_dims`]), which the reuse model, the mapping
+//! validator and every mapper consult — so one IR and one evaluation
+//! engine serve conv, matmul, pooling and residual-add traffic alike.
 //!
 //! The [`zoo`] submodule carries the layer tables for every network the
-//! paper's evaluation references (Tables 1 and 2).
+//! paper's evaluation references (Tables 1 and 2) plus the operator-diverse
+//! additions (BERT-style matmul stacks, pooled VGG, residual MobileNet).
 
 pub mod config;
 pub mod zoo;
 
 use std::fmt;
 
-/// The seven convolution problem dimensions (paper Eq. 3).
+/// The seven problem dimensions (paper Eq. 3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Dim {
     /// Batch size.
@@ -90,10 +101,10 @@ impl fmt::Display for Dim {
     }
 }
 
-/// The three convolution tensors (paper Eq. 1).
+/// The three workload tensors (paper Eq. 1).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Tensor {
-    /// Filter weights `W ∈ R^{MCRS}`.
+    /// Filter weights `W ∈ R^{MCRS}` (empty for weight-less ops).
     Weight,
     /// Input feature map `I ∈ R^{NCHW}`.
     Input,
@@ -116,27 +127,22 @@ impl Tensor {
 
     /// Which problem dimensions index this tensor directly (dense conv).
     /// Input is indexed by the *sliding-window* composites H(P,R), W(Q,S),
-    /// so all four of P,R,Q,S are relevant to Input. For depthwise layers
-    /// use [`Tensor::relevant_for`], which adds `M` to Input's relevance.
+    /// so all four of P,R,Q,S are relevant to Input. For the layer-aware
+    /// (operator-specific) sets use [`Tensor::relevant_for`] /
+    /// [`OpKind::relevant_dims`].
     pub fn relevant_dims(self) -> &'static [Dim] {
-        match self {
-            Tensor::Weight => &[Dim::M, Dim::C, Dim::R, Dim::S],
-            Tensor::Input => &[Dim::N, Dim::C, Dim::P, Dim::R, Dim::Q, Dim::S],
-            Tensor::Output => &[Dim::N, Dim::M, Dim::P, Dim::Q],
-        }
+        OpKind::Conv.relevant_dims(self)
     }
 
     /// True when `d` indexes this tensor (dense conv).
     pub fn relevant(self, d: Dim) -> bool {
-        self.relevant_dims().contains(&d)
+        OpKind::Conv.relevant(self, d)
     }
 
-    /// Layer-aware relevance: depthwise input channels ride on `M`.
-    pub fn relevant_for(self, layer: &ConvLayer, d: Dim) -> bool {
-        if layer.depthwise && self == Tensor::Input && d == Dim::M {
-            return true;
-        }
-        self.relevant(d)
+    /// Layer-aware relevance: delegates to the layer's operator projection
+    /// (e.g. depthwise input channels ride on `M`).
+    pub fn relevant_for(self, layer: &Layer, d: Dim) -> bool {
+        layer.op.relevant(self, d)
     }
 }
 
@@ -146,39 +152,182 @@ impl fmt::Display for Tensor {
     }
 }
 
-/// One convolution layer (the paper's CT shapes, Table 1 right column).
+/// The operator class of a layer: which projection of the 7-dim loop nest
+/// it executes. Each op defines which dims are live, which tensors exist,
+/// and each tensor's dimension-relevance set — the single source of truth
+/// the reuse model, the validator and the mappers all consult.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum OpKind {
+    /// Dense convolution: the full 7-dim nest.
+    Conv,
+    /// Depthwise convolution: one filter per channel; the shared channel
+    /// axis rides on `M` and the independent `C` dim collapses to 1
+    /// (promotes the former `depthwise: bool` flag).
+    DepthwiseConv,
+    /// Matmul / fully-connected: `O[p][m] = Σ_c W[m][c]·I[p][c]` — a 1×1
+    /// "conv" with rows on `P` (`R = S = Q = 1`).
+    MatMul,
+    /// Pooling: weight-less `R×S` window reduction per channel (channels
+    /// ride on `M`, `C = 1`).
+    Pooling,
+    /// Elementwise residual add: weight-less, two input operands, channels
+    /// ride on `M` (`C = R = S = 1`).
+    Elementwise,
+}
+
+impl OpKind {
+    /// All operator kinds in canonical order.
+    pub const ALL: [OpKind; 5] =
+        [OpKind::Conv, OpKind::DepthwiseConv, OpKind::MatMul, OpKind::Pooling, OpKind::Elementwise];
+
+    /// Canonical short name (stable: feeds [`crate::coordinator::LayerKey`]
+    /// fingerprints and the YAML `op:` field).
+    pub fn name(self) -> &'static str {
+        match self {
+            OpKind::Conv => "conv",
+            OpKind::DepthwiseConv => "dwconv",
+            OpKind::MatMul => "matmul",
+            OpKind::Pooling => "pool",
+            OpKind::Elementwise => "add",
+        }
+    }
+
+    /// Parse a (case-insensitive) operator name, accepting common aliases.
+    pub fn parse(s: &str) -> Option<OpKind> {
+        match s.to_ascii_lowercase().as_str() {
+            "conv" | "conv2d" => Some(OpKind::Conv),
+            "dwconv" | "depthwise" | "dw" => Some(OpKind::DepthwiseConv),
+            "matmul" | "fc" | "gemm" | "mm" | "linear" => Some(OpKind::MatMul),
+            "pool" | "pooling" | "maxpool" | "avgpool" => Some(OpKind::Pooling),
+            "add" | "elementwise" | "eltwise" | "residual" => Some(OpKind::Elementwise),
+            _ => None,
+        }
+    }
+
+    /// Does this operator carry a weight tensor at all? Weight-less ops
+    /// (pooling, elementwise) contribute zero weight volume, footprint and
+    /// traffic everywhere.
+    pub fn uses_weights(self) -> bool {
+        matches!(self, OpKind::Conv | OpKind::DepthwiseConv | OpKind::MatMul)
+    }
+
+    /// Does the Input channel axis ride on `M` (with `C` pinned to 1)?
+    /// True for per-channel ops: depthwise conv, pooling, elementwise.
+    pub fn channels_on_m(self) -> bool {
+        matches!(self, OpKind::DepthwiseConv | OpKind::Pooling | OpKind::Elementwise)
+    }
+
+    /// Number of input operands read per output element (2 for a residual
+    /// add — both summands must be resident and both cross each boundary).
+    pub fn input_operands(self) -> u64 {
+        match self {
+            OpKind::Elementwise => 2,
+            _ => 1,
+        }
+    }
+
+    /// The reduction dimensions of this op's loop nest (partial sums /
+    /// window accumulation live across these). LOCAL's scheduling phase
+    /// breaks ties in their favour to keep accumulators local.
+    pub fn reduction_dims(self) -> &'static [Dim] {
+        match self {
+            OpKind::Conv | OpKind::DepthwiseConv => &[Dim::C, Dim::R, Dim::S],
+            OpKind::MatMul => &[Dim::C],
+            OpKind::Pooling => &[Dim::R, Dim::S],
+            OpKind::Elementwise => &[],
+        }
+    }
+
+    /// Dimensions that may exceed 1 under this projection; every other dim
+    /// is pinned to 1 by construction, which shrinks every mapper's search
+    /// space for free (a bound of 1 has exactly one divisor).
+    pub fn live_dims(self) -> &'static [Dim] {
+        match self {
+            OpKind::Conv => &Dim::ALL,
+            OpKind::DepthwiseConv => &[Dim::N, Dim::M, Dim::R, Dim::S, Dim::P, Dim::Q],
+            OpKind::MatMul => &[Dim::N, Dim::M, Dim::C, Dim::P],
+            OpKind::Pooling => &[Dim::N, Dim::M, Dim::R, Dim::S, Dim::P, Dim::Q],
+            OpKind::Elementwise => &[Dim::N, Dim::M, Dim::P, Dim::Q],
+        }
+    }
+
+    /// This op's projection of tensor `t` onto the problem dimensions —
+    /// the per-(op, tensor) relevance set driving the stationarity model.
+    ///
+    /// Conv and depthwise reproduce the pre-refactor tables exactly (the
+    /// depthwise Weight set keeps the dead `C` entry the legacy special
+    /// case kept; `C` is pinned to 1 so it never fires) — conv-path
+    /// evaluations are bit-identical to the Conv-only pipeline, pinned by
+    /// `conv_relevance_tables_match_legacy` in `rust/tests/property.rs`.
+    pub fn relevant_dims(self, t: Tensor) -> &'static [Dim] {
+        match (self, t) {
+            (OpKind::Conv | OpKind::DepthwiseConv, Tensor::Weight) => {
+                &[Dim::M, Dim::C, Dim::R, Dim::S]
+            }
+            (OpKind::Conv, Tensor::Input) => &[Dim::N, Dim::C, Dim::P, Dim::R, Dim::Q, Dim::S],
+            (OpKind::DepthwiseConv, Tensor::Input) => {
+                &[Dim::N, Dim::M, Dim::C, Dim::P, Dim::R, Dim::Q, Dim::S]
+            }
+            (OpKind::MatMul, Tensor::Weight) => &[Dim::M, Dim::C],
+            (OpKind::MatMul, Tensor::Input) => &[Dim::N, Dim::C, Dim::P],
+            (OpKind::MatMul, Tensor::Output) => &[Dim::N, Dim::M, Dim::P],
+            (OpKind::Pooling | OpKind::Elementwise, Tensor::Weight) => &[],
+            (OpKind::Pooling, Tensor::Input) => &[Dim::N, Dim::M, Dim::P, Dim::R, Dim::Q, Dim::S],
+            (OpKind::Elementwise, Tensor::Input) => &[Dim::N, Dim::M, Dim::P, Dim::Q],
+            (_, Tensor::Output) => &[Dim::N, Dim::M, Dim::P, Dim::Q],
+        }
+    }
+
+    /// True when `d` indexes tensor `t` under this op's projection.
+    pub fn relevant(self, t: Tensor, d: Dim) -> bool {
+        self.relevant_dims(t).contains(&d)
+    }
+}
+
+impl fmt::Display for OpKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// One workload layer: an operator kind plus the seven dimension bounds
+/// (the paper's CT shapes, Table 1 right column, generalized per op).
 #[derive(Debug, Clone, PartialEq, Eq, Hash)]
-pub struct ConvLayer {
+pub struct Layer {
     /// e.g. `"VGG16_conv9"` — network + index, used in reports and caches.
     pub name: String,
+    /// Operator kind: which projection of the 7-dim nest this layer is.
+    pub op: OpKind,
     /// Batch size.
     pub n: u64,
     /// Output channels.
     pub m: u64,
     /// Input channels.
     pub c: u64,
-    /// Filter height.
+    /// Filter/window height.
     pub r: u64,
-    /// Filter width.
+    /// Filter/window width.
     pub s: u64,
-    /// Output height.
+    /// Output height (matmul: output rows).
     pub p: u64,
     /// Output width.
     pub q: u64,
-    /// Convolution stride (both axes).
+    /// Stride (both axes).
     pub stride: u64,
     /// Filter dilation (both axes).
     pub dilation: u64,
-    /// Depthwise convolution: one filter per channel (`M == C` groups of 1).
-    /// Changes weight volume (`M·R·S`) and MAC count (`M·R·S·P·Q·N`).
-    pub depthwise: bool,
 }
 
-impl ConvLayer {
+/// Compatibility alias for the pre-operator-IR name; every layer — conv or
+/// not — is a [`Layer`].
+pub type ConvLayer = Layer;
+
+impl Layer {
     /// Dense-conv constructor with stride 1, dilation 1, batch 1.
     pub fn new(name: &str, m: u64, c: u64, r: u64, s: u64, p: u64, q: u64) -> Self {
         Self {
             name: name.to_string(),
+            op: OpKind::Conv,
             n: 1,
             m,
             c,
@@ -188,8 +337,32 @@ impl ConvLayer {
             q,
             stride: 1,
             dilation: 1,
-            depthwise: false,
         }
+    }
+
+    /// Matmul / fully-connected constructor: `rows × c → rows × m`
+    /// (`P = rows`, `R = S = Q = 1`).
+    pub fn matmul(name: &str, m: u64, c: u64, rows: u64) -> Self {
+        let mut l = Self::new(name, m, c, 1, 1, rows, 1);
+        l.op = OpKind::MatMul;
+        l
+    }
+
+    /// Pooling constructor: `k × k` window over a `p × q` output with
+    /// `channels` channels riding on `M` (`C = 1`). Combine with
+    /// [`Layer::with_stride`] for strided pooling.
+    pub fn pooling(name: &str, channels: u64, k: u64, p: u64, q: u64) -> Self {
+        let mut l = Self::new(name, channels, 1, k, k, p, q);
+        l.op = OpKind::Pooling;
+        l
+    }
+
+    /// Elementwise residual-add constructor over a `p × q` map with
+    /// `channels` channels riding on `M` (`C = R = S = 1`, two operands).
+    pub fn elementwise(name: &str, channels: u64, p: u64, q: u64) -> Self {
+        let mut l = Self::new(name, channels, 1, 1, 1, p, q);
+        l.op = OpKind::Elementwise;
+        l
     }
 
     /// Builder: set stride.
@@ -207,11 +380,16 @@ impl ConvLayer {
     /// Builder: mark depthwise. The shared channel axis rides on `M`
     /// (one filter per channel), so the independent `C` mapping dimension
     /// collapses to 1 — `macs()` and all tile math stay uniform while the
-    /// Input channel count follows `M` (see [`ConvLayer::tensor_volume`]).
+    /// Input channel count follows `M` (see [`Layer::tensor_volume`]).
     pub fn depthwise(mut self) -> Self {
-        self.depthwise = true;
+        self.op = OpKind::DepthwiseConv;
         self.c = 1;
         self
+    }
+
+    /// Convenience: is this a depthwise convolution?
+    pub fn is_depthwise(&self) -> bool {
+        self.op == OpKind::DepthwiseConv
     }
 
     /// Bound (extent) of a problem dimension.
@@ -255,44 +433,49 @@ impl ConvLayer {
         self.input_extent(self.q, self.s)
     }
 
-    /// Number of multiply-accumulate operations (Table 2 accounting).
-    /// Uniform across dense and depthwise because depthwise layers carry
-    /// `c == 1` (channels ride on `M`).
+    /// Number of scalar compute operations (Table 2 accounting):
+    /// multiply-accumulates for conv/matmul, window accumulations for
+    /// pooling, adds for elementwise. Uniform across ops as the product of
+    /// all seven bounds, because every op pins its dead dims to 1 (e.g.
+    /// depthwise carries `c == 1`; channels ride on `M`).
     pub fn macs(&self) -> u64 {
         self.n * self.m * self.c * self.r * self.s * self.p * self.q
     }
 
-    /// Element count of one full tensor.
+    /// Element count of one full tensor under this layer's op projection.
     pub fn tensor_volume(&self, t: Tensor) -> u64 {
         match t {
-            Tensor::Weight => {
-                if self.depthwise {
-                    self.m * self.r * self.s
-                } else {
-                    self.m * self.c * self.r * self.s
-                }
-            }
+            Tensor::Weight => match self.op {
+                OpKind::Conv | OpKind::MatMul => self.m * self.c * self.r * self.s,
+                OpKind::DepthwiseConv => self.m * self.r * self.s,
+                OpKind::Pooling | OpKind::Elementwise => 0,
+            },
             Tensor::Input => {
-                let channels = if self.depthwise { self.m } else { self.c };
-                self.n * channels * self.h() * self.w()
+                let channels = if self.op.channels_on_m() { self.m } else { self.c };
+                self.op.input_operands() * self.n * channels * self.h() * self.w()
             }
             Tensor::Output => self.n * self.m * self.p * self.q,
         }
     }
 
-    /// Total data footprint (all three tensors), in elements.
+    /// Total data footprint (all tensors), in elements.
     pub fn total_volume(&self) -> u64 {
         Tensor::ALL.iter().map(|&t| self.tensor_volume(t)).sum()
     }
 
-    /// Arithmetic intensity: MACs per element touched (roofline axis).
+    /// Arithmetic intensity: ops per element touched (roofline axis).
     pub fn arithmetic_intensity(&self) -> f64 {
         self.macs() as f64 / self.total_volume() as f64
     }
 }
 
-impl fmt::Display for ConvLayer {
+impl fmt::Display for Layer {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let op_tag = match self.op {
+            OpKind::Conv => String::new(),
+            OpKind::DepthwiseConv => " dw".to_string(),
+            other => format!(" {}", other.name()),
+        };
         write!(
             f,
             "{} [N={} M={} C={} R={} S={} P={} Q={} stride={}{}]",
@@ -305,7 +488,7 @@ impl fmt::Display for ConvLayer {
             self.p,
             self.q,
             self.stride,
-            if self.depthwise { " dw" } else { "" }
+            op_tag
         )
     }
 }
@@ -314,9 +497,9 @@ impl fmt::Display for ConvLayer {
 mod tests {
     use super::*;
 
-    fn vgg02_l5() -> ConvLayer {
+    fn vgg02_l5() -> Layer {
         // Table 1 right column.
-        ConvLayer::new("VGG02_conv5", 256, 128, 3, 3, 56, 56)
+        Layer::new("VGG02_conv5", 256, 128, 3, 3, 56, 56)
     }
 
     #[test]
@@ -329,6 +512,17 @@ mod tests {
     }
 
     #[test]
+    fn op_kind_roundtrip() {
+        for op in OpKind::ALL {
+            assert_eq!(OpKind::parse(op.name()), Some(op));
+        }
+        assert_eq!(OpKind::parse("fc"), Some(OpKind::MatMul));
+        assert_eq!(OpKind::parse("depthwise"), Some(OpKind::DepthwiseConv));
+        assert_eq!(OpKind::parse("residual"), Some(OpKind::Elementwise));
+        assert_eq!(OpKind::parse("nope"), None);
+    }
+
+    #[test]
     fn relevance_projections() {
         assert!(Tensor::Weight.relevant(Dim::M));
         assert!(!Tensor::Weight.relevant(Dim::P));
@@ -337,6 +531,36 @@ mod tests {
         assert!(!Tensor::Input.relevant(Dim::M));
         assert!(Tensor::Output.relevant(Dim::M));
         assert!(!Tensor::Output.relevant(Dim::C));
+    }
+
+    #[test]
+    fn per_op_relevance_projections() {
+        // Matmul: weights touch only M,C; input rows ride on P.
+        assert!(OpKind::MatMul.relevant(Tensor::Weight, Dim::M));
+        assert!(!OpKind::MatMul.relevant(Tensor::Weight, Dim::R));
+        assert!(OpKind::MatMul.relevant(Tensor::Input, Dim::P));
+        assert!(!OpKind::MatMul.relevant(Tensor::Input, Dim::M));
+        // Weight-less ops have empty weight relevance.
+        assert!(OpKind::Pooling.relevant_dims(Tensor::Weight).is_empty());
+        assert!(OpKind::Elementwise.relevant_dims(Tensor::Weight).is_empty());
+        // Pooling/elementwise input channels ride on M.
+        assert!(OpKind::Pooling.relevant(Tensor::Input, Dim::M));
+        assert!(OpKind::Elementwise.relevant(Tensor::Input, Dim::M));
+        assert!(!OpKind::Elementwise.relevant(Tensor::Input, Dim::R));
+    }
+
+    #[test]
+    fn op_kind_traits() {
+        assert!(OpKind::Conv.uses_weights() && OpKind::MatMul.uses_weights());
+        assert!(!OpKind::Pooling.uses_weights() && !OpKind::Elementwise.uses_weights());
+        assert!(OpKind::DepthwiseConv.channels_on_m() && !OpKind::MatMul.channels_on_m());
+        assert_eq!(OpKind::Elementwise.input_operands(), 2);
+        assert_eq!(OpKind::Conv.input_operands(), 1);
+        assert_eq!(OpKind::MatMul.reduction_dims(), &[Dim::C]);
+        assert_eq!(OpKind::Pooling.reduction_dims(), &[Dim::R, Dim::S]);
+        assert!(OpKind::Elementwise.reduction_dims().is_empty());
+        assert_eq!(OpKind::Conv.live_dims().len(), 7);
+        assert!(!OpKind::MatMul.live_dims().contains(&Dim::R));
     }
 
     #[test]
@@ -368,8 +592,9 @@ mod tests {
 
     #[test]
     fn depthwise_accounting() {
-        let l = ConvLayer::new("dw", 32, 32, 3, 3, 112, 112).depthwise();
+        let l = Layer::new("dw", 32, 32, 3, 3, 112, 112).depthwise();
         assert_eq!(l.c, 1, "channel axis rides on M");
+        assert!(l.is_depthwise());
         assert_eq!(l.macs(), 32 * 9 * 112 * 112);
         assert_eq!(l.tensor_volume(Tensor::Weight), 32 * 9);
         // Input channel count follows M.
@@ -379,11 +604,71 @@ mod tests {
     }
 
     #[test]
+    fn matmul_accounting() {
+        let l = Layer::matmul("mm", 768, 768, 128);
+        assert_eq!(l.op, OpKind::MatMul);
+        assert_eq!((l.r, l.s, l.q), (1, 1, 1));
+        assert_eq!(l.macs(), 768 * 768 * 128);
+        assert_eq!(l.tensor_volume(Tensor::Weight), 768 * 768);
+        assert_eq!(l.tensor_volume(Tensor::Input), 768 * 128);
+        assert_eq!(l.tensor_volume(Tensor::Output), 768 * 128);
+    }
+
+    #[test]
+    fn pooling_accounting() {
+        let l = Layer::pooling("pool", 64, 2, 112, 112).with_stride(2);
+        assert_eq!(l.op, OpKind::Pooling);
+        assert_eq!(l.c, 1);
+        assert_eq!(l.macs(), 64 * 4 * 112 * 112);
+        assert_eq!(l.tensor_volume(Tensor::Weight), 0);
+        // Input covers the full 224² map per channel.
+        assert_eq!(l.h(), 224);
+        assert_eq!(l.tensor_volume(Tensor::Input), 64 * 224 * 224);
+        assert_eq!(l.tensor_volume(Tensor::Output), 64 * 112 * 112);
+    }
+
+    #[test]
+    fn elementwise_accounting() {
+        let l = Layer::elementwise("add", 768, 128, 1);
+        assert_eq!(l.op, OpKind::Elementwise);
+        assert_eq!(l.macs(), 768 * 128);
+        assert_eq!(l.tensor_volume(Tensor::Weight), 0);
+        // Two operands, channels on M.
+        assert_eq!(l.tensor_volume(Tensor::Input), 2 * 768 * 128);
+        assert_eq!(l.tensor_volume(Tensor::Output), 768 * 128);
+    }
+
+    #[test]
+    fn display_tags_ops() {
+        assert!(!format!("{}", vgg02_l5()).contains(" dw"));
+        assert!(format!("{}", Layer::new("d", 8, 8, 3, 3, 7, 7).depthwise()).contains(" dw"));
+        assert!(format!("{}", Layer::matmul("m", 8, 8, 7)).contains(" matmul"));
+        assert!(format!("{}", Layer::pooling("p", 8, 2, 7, 7)).contains(" pool"));
+        assert!(format!("{}", Layer::elementwise("e", 8, 7, 7)).contains(" add"));
+    }
+
+    #[test]
     fn bounds_array_consistent() {
         let l = vgg02_l5();
         let b = l.bounds();
         for d in Dim::ALL {
             assert_eq!(b[d.idx()], l.bound(d));
+        }
+    }
+
+    #[test]
+    fn dead_dims_pinned_to_one() {
+        for (l, op) in [
+            (Layer::matmul("m", 64, 32, 16), OpKind::MatMul),
+            (Layer::pooling("p", 64, 2, 16, 16), OpKind::Pooling),
+            (Layer::elementwise("e", 64, 16, 16), OpKind::Elementwise),
+        ] {
+            assert_eq!(l.op, op);
+            for d in Dim::ALL {
+                if !op.live_dims().contains(&d) {
+                    assert_eq!(l.bound(d), 1, "{op} dim {d} not pinned");
+                }
+            }
         }
     }
 }

@@ -1,5 +1,7 @@
-//! The workload zoo: conv-layer tables for every network the paper's
-//! evaluation references, plus the Table-2 category selection.
+//! The workload zoo: layer tables for every network the paper's
+//! evaluation references, plus the Table-2 category selection and the
+//! operator-diverse additions (a BERT-style matmul stack, pooled VGG-16,
+//! MobileNet-V2 with its residual adds).
 //!
 //! Layer numbering conventions (needed to resolve the paper's "conv 22 of
 //! ResNet50"-style references) are documented per network. Where the paper's
@@ -139,8 +141,21 @@ pub fn squeezenet() -> Vec<ConvLayer> {
 /// MobileNet-V2 — 52 convolutions (stem conv, 17 inverted-residual
 /// bottlenecks at three convs each except the first at two, final 1×1),
 /// matching the paper's "52-layer MobileNet-V2" map-space remark (§1).
-/// Depthwise 3×3 convs are flagged [`ConvLayer::depthwise`].
+/// Depthwise 3×3 convs carry [`crate::workload::OpKind::DepthwiseConv`].
 pub fn mobilenet_v2() -> Vec<ConvLayer> {
+    mobilenet_v2_layers(false)
+}
+
+/// MobileNet-V2 with its real residual structure: the 52 convolutions of
+/// [`mobilenet_v2`] (identical shapes and numbering) plus the 10
+/// elementwise residual adds of the stride-1 repeat blocks — 62 layers.
+pub fn mobilenet_v2_residual() -> Vec<ConvLayer> {
+    mobilenet_v2_layers(true)
+}
+
+/// Shared MobileNet-V2 builder; `residual_adds` interleaves the skip-add
+/// layers without disturbing the conv numbering.
+fn mobilenet_v2_layers(residual_adds: bool) -> Vec<ConvLayer> {
     let mut out: Vec<ConvLayer> = Vec::new();
     let mut idx = 0usize;
     let mut push = |out_vec: &mut Vec<ConvLayer>, m: u64, c: u64, k: u64, pq: u64, stride: u64, dw: bool| {
@@ -166,6 +181,7 @@ pub fn mobilenet_v2() -> Vec<ConvLayer> {
     ];
     let mut c_in = 32u64;
     let mut pq = 112u64;
+    let mut n_adds = 0usize;
     for &(t, c_out, n, s) in &cfg {
         for b in 0..n {
             let stride = if b == 0 { s } else { 1 };
@@ -176,12 +192,62 @@ pub fn mobilenet_v2() -> Vec<ConvLayer> {
             }
             push(&mut out, hidden, hidden, 3, pq_out, stride, true); // depthwise 3×3
             push(&mut out, c_out, hidden, 1, pq_out, 1, false); // project 1×1
+            // Repeat blocks (b > 0) keep shape and stride 1: the input
+            // skip connection adds into the projected output.
+            if residual_adds && b > 0 {
+                n_adds += 1;
+                out.push(ConvLayer::elementwise(
+                    &format!("MobileNetV2_add{n_adds}"),
+                    c_out,
+                    pq_out,
+                    pq_out,
+                ));
+            }
             c_in = c_out;
             pq = pq_out;
         }
     }
     // Final 1×1: 320→1280 @7².
     push(&mut out, 1280, 320, 1, 7, 1, false);
+    out
+}
+
+/// BERT-base-style encoder stack as matmul + residual-add layers: 12
+/// blocks of Q/K/V/output projections (768×768), the two FFN matmuls
+/// (768→3072→768) and the two residual adds, over a 128-token sequence
+/// (rows on `P`). 96 layers, only 3 distinct matmul shapes — a cache
+/// stress test for the shared-cache batch service.
+pub fn bert_base() -> Vec<ConvLayer> {
+    let (hidden, ff, seq, blocks) = (768u64, 3072u64, 128u64, 12usize);
+    let mut out = Vec::with_capacity(blocks * 8);
+    for b in 1..=blocks {
+        for role in ["q", "k", "v", "attn_out"] {
+            out.push(ConvLayer::matmul(&format!("BERT_b{b}_{role}"), hidden, hidden, seq));
+        }
+        out.push(ConvLayer::elementwise(&format!("BERT_b{b}_add1"), hidden, seq, 1));
+        out.push(ConvLayer::matmul(&format!("BERT_b{b}_ffn1"), ff, hidden, seq));
+        out.push(ConvLayer::matmul(&format!("BERT_b{b}_ffn2"), hidden, ff, seq));
+        out.push(ConvLayer::elementwise(&format!("BERT_b{b}_add2"), hidden, seq, 1));
+    }
+    out
+}
+
+/// VGG-16 with its five 2×2/2 max-pool layers interleaved between the conv
+/// stages — the classic-CNN pooling traffic the conv-only zoo dropped.
+/// 18 layers (13 convs, numbering identical to [`vgg16`], + 5 pools).
+pub fn vgg16_pooled() -> Vec<ConvLayer> {
+    // Pool after conv index (1-based): (channels, output spatial).
+    let pool_after: [(usize, u64, u64); 5] =
+        [(2, 64, 112), (4, 128, 56), (7, 256, 28), (10, 512, 14), (13, 512, 7)];
+    let mut out = Vec::with_capacity(18);
+    for (i, l) in vgg16().into_iter().enumerate() {
+        out.push(l);
+        let pool = pool_after.iter().enumerate().find(|(_, &(after, _, _))| after == i + 1);
+        if let Some((pi, &(_, ch, pq))) = pool {
+            let name = format!("VGG16_pool{}", pi + 1);
+            out.push(ConvLayer::pooling(&name, ch, 2, pq, pq).with_stride(2));
+        }
+    }
     out
 }
 
@@ -290,12 +356,17 @@ pub fn network(name: &str) -> Option<Vec<ConvLayer>> {
         "squeezenet" => Some(squeezenet()),
         "mobilenetv2" | "mobilenet-v2" | "mobilenet_v2" => Some(mobilenet_v2()),
         "alexnet" => Some(alexnet()),
+        "bert" | "bert-base" | "bert_base" => Some(bert_base()),
+        "vgg16pool" | "vgg16-pooled" | "vgg16_pooled" => Some(vgg16_pooled()),
+        "mobilenetv2res" | "mobilenetv2-res" | "mobilenet_v2_residual" => {
+            Some(mobilenet_v2_residual())
+        }
         _ => None,
     }
 }
 
 /// All network names known to [`network`].
-pub const NETWORKS: [&str; 8] = [
+pub const NETWORKS: [&str; 11] = [
     "vgg16",
     "vgg02",
     "resnet50",
@@ -304,13 +375,26 @@ pub const NETWORKS: [&str; 8] = [
     "squeezenet",
     "mobilenetv2",
     "alexnet",
+    "bert",
+    "vgg16pool",
+    "mobilenetv2res",
 ];
 
-/// The five-network set the batch-compilation pipeline
+/// The network set the batch-compilation pipeline
 /// (`coordinator::compile_batch`, CLI `compile-all`) shards by default:
-/// the networks the paper's evaluation names.
-pub const BATCH_NETWORKS: [&str; 5] =
-    ["vgg16", "resnet50", "mobilenetv2", "squeezenet", "alexnet"];
+/// the five networks the paper's evaluation names plus the
+/// operator-diverse additions (matmul/elementwise BERT stack, pooled
+/// VGG-16, residual MobileNet-V2).
+pub const BATCH_NETWORKS: [&str; 8] = [
+    "vgg16",
+    "resnet50",
+    "mobilenetv2",
+    "squeezenet",
+    "alexnet",
+    "bert",
+    "vgg16pool",
+    "mobilenetv2res",
+];
 
 /// Materialized batch set: `(network name, layers)` for every entry of
 /// [`BATCH_NETWORKS`], ready to hand to `coordinator::compile_batch`.
@@ -436,10 +520,65 @@ mod tests {
     fn mobilenet_v2_has_52_convs() {
         let v = mobilenet_v2();
         assert_eq!(v.len(), 52);
-        assert!(v.iter().any(|l| l.depthwise));
+        assert!(v.iter().any(|l| l.is_depthwise()));
         // Stem and head sanity.
         assert_eq!(v[0].m, 32);
         assert_eq!(v[51].m, 1280);
+    }
+
+    #[test]
+    fn mobilenet_v2_residual_adds_ten_skip_adds() {
+        use crate::workload::OpKind;
+        let v = mobilenet_v2_residual();
+        assert_eq!(v.len(), 62);
+        let adds: Vec<&ConvLayer> = v.iter().filter(|l| l.op == OpKind::Elementwise).collect();
+        assert_eq!(adds.len(), 10);
+        // The conv subsequence is exactly mobilenet_v2 (shapes + names).
+        let convs: Vec<ConvLayer> =
+            v.iter().filter(|l| l.op != OpKind::Elementwise).cloned().collect();
+        assert_eq!(convs, mobilenet_v2());
+        // First repeat block lives in the 24-channel stage at 56².
+        assert_eq!((adds[0].m, adds[0].p), (24, 56));
+    }
+
+    #[test]
+    fn bert_base_structure() {
+        use crate::workload::OpKind;
+        let v = bert_base();
+        assert_eq!(v.len(), 96);
+        assert_eq!(v.iter().filter(|l| l.op == OpKind::MatMul).count(), 72);
+        assert_eq!(v.iter().filter(|l| l.op == OpKind::Elementwise).count(), 24);
+        // Q projection: 768×768 over 128 rows; FFN expands to 3072.
+        assert_eq!((v[0].m, v[0].c, v[0].p, v[0].q), (768, 768, 128, 1));
+        let ffn1 = v.iter().find(|l| l.name == "BERT_b1_ffn1").unwrap();
+        assert_eq!((ffn1.m, ffn1.c), (3072, 768));
+        // Only three distinct matmul shapes across all twelve blocks
+        // (q/k/v/attn_out share 768×768; plus ffn1 and ffn2).
+        let mut shapes: Vec<(u64, u64)> = v
+            .iter()
+            .filter(|l| l.op == OpKind::MatMul)
+            .map(|l| (l.m, l.c))
+            .collect();
+        shapes.sort_unstable();
+        shapes.dedup();
+        assert_eq!(shapes.len(), 3); // 768×768, 768×3072, 3072×768
+    }
+
+    #[test]
+    fn vgg16_pooled_structure() {
+        use crate::workload::OpKind;
+        let v = vgg16_pooled();
+        assert_eq!(v.len(), 18);
+        let pools: Vec<&ConvLayer> = v.iter().filter(|l| l.op == OpKind::Pooling).collect();
+        assert_eq!(pools.len(), 5);
+        // Pool1 halves 224² → 112² over 64 channels with a 2×2/2 window.
+        assert_eq!((pools[0].m, pools[0].r, pools[0].p, pools[0].stride), (64, 2, 112, 2));
+        assert_eq!(pools[0].h(), 224);
+        // The conv subsequence is exactly vgg16.
+        let convs: Vec<ConvLayer> = v.iter().filter(|l| l.op == OpKind::Conv).cloned().collect();
+        assert_eq!(convs, vgg16());
+        // Pool2 follows conv4 immediately.
+        assert_eq!(v[5].name, "VGG16_pool2");
     }
 
     #[test]
@@ -476,13 +615,18 @@ mod tests {
     }
 
     #[test]
-    fn batch_zoo_covers_the_five_paper_networks() {
+    fn batch_zoo_covers_paper_networks_plus_operator_diverse_set() {
+        use crate::workload::OpKind;
         let batch = batch_zoo();
-        assert_eq!(batch.len(), 5);
+        assert_eq!(batch.len(), 8);
         let layer_counts: Vec<usize> = batch.iter().map(|(_, ls)| ls.len()).collect();
-        assert_eq!(layer_counts, vec![13, 53, 52, 26, 5]);
-        for (name, layers) in &batch {
-            assert!(!layers.is_empty(), "{name}");
+        assert_eq!(layer_counts, vec![13, 53, 52, 26, 5, 96, 18, 62]);
+        // The batch spans every operator kind.
+        for op in OpKind::ALL {
+            assert!(
+                batch.iter().flat_map(|(_, ls)| ls).any(|l| l.op == op),
+                "batch zoo missing op {op}"
+            );
         }
     }
 

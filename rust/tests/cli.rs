@@ -67,12 +67,36 @@ fn map_rejects_unknown_arch() {
 
 #[test]
 fn map_with_search_mappers() {
-    for mapper in ["rs", "ws", "os", "random", "ga"] {
+    // One resolver exposes all seven mapping mechanisms.
+    for mapper in ["rs", "ws", "os", "random", "ga", "annealing", "refine", "exhaustive"] {
         let (stdout, stderr, code) =
             run(&["map", "--layer", "alexnet:3", "--mapper", mapper, "--budget", "40"]);
         assert_eq!(code, 0, "{mapper}: {stderr}");
         assert!(stdout.contains("energy="), "{mapper}");
     }
+}
+
+#[test]
+fn map_matmul_and_pooling_layers_from_zoo() {
+    // Operator-diverse layers are addressable through the same CLI.
+    let (stdout, stderr, code) = run(&["map", "--layer", "bert:1", "--arch", "nvdla"]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("BERT_b1_q"), "{stdout}");
+    let (stdout, _, code) = run(&["map", "--layer", "vgg16pool:3", "--arch", "eyeriss"]);
+    assert_eq!(code, 0);
+    assert!(stdout.contains("VGG16_pool1"), "{stdout}");
+}
+
+#[test]
+fn compile_with_mapper_flag() {
+    let (stdout, stderr, code) = run(&[
+        "compile", "--network", "alexnet", "--mapper", "refine", "--budget", "60",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("mapper=LOCAL+refine"), "{stdout}");
+    let (_, stderr, code) = run(&["compile", "--network", "alexnet", "--mapper", "frob"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("unknown mapper"));
 }
 
 #[test]
@@ -105,7 +129,16 @@ fn compile_from_network_file() {
 fn compile_all_prints_batch_summary_and_metrics() {
     let (stdout, stderr, code) = run(&["compile-all", "--arch", "eyeriss", "--threads", "4"]);
     assert_eq!(code, 0, "{stderr}");
-    for net in ["vgg16", "resnet50", "mobilenetv2", "squeezenet", "alexnet"] {
+    for net in [
+        "vgg16",
+        "resnet50",
+        "mobilenetv2",
+        "squeezenet",
+        "alexnet",
+        "bert",
+        "vgg16pool",
+        "mobilenetv2res",
+    ] {
         assert!(stdout.contains(net), "summary missing {net}");
     }
     assert!(stdout.contains("cache:"), "missing cache hit-rate line");
@@ -200,7 +233,9 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("evals/s"), "{stdout}");
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
-    for key in ["\"evaluator\"", "\"exhaustive\"", "\"zoo_batch\"", "\"smoke\": true"] {
+    for key in
+        ["\"evaluator\"", "\"per_op\"", "\"exhaustive\"", "\"zoo_batch\"", "\"smoke\": true"]
+    {
         assert!(json.contains(key), "missing {key} in {json}");
     }
     // A rate of exactly 0 means the harness measured nothing — the same

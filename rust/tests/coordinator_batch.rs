@@ -111,15 +111,38 @@ fn whole_batch_zoo_compiles_on_every_preset() {
     for acc in presets::all() {
         let batch = compile_batch(&zoo::batch_zoo(), &acc, &LocalMapper::new(), 4)
             .unwrap_or_else(|e| panic!("batch on {}: {e}", acc.name));
-        assert_eq!(batch.networks.len(), 5);
-        assert_eq!(batch.total_layers(), 13 + 53 + 52 + 26 + 5);
+        assert_eq!(batch.networks.len(), 8);
+        assert_eq!(batch.total_layers(), 13 + 53 + 52 + 26 + 5 + 96 + 18 + 62);
         assert_eq!(batch.requests, batch.total_layers() as u64);
-        // The zoo repeats shapes heavily (ResNet bottlenecks, VGG pairs):
-        // the shared cache must see hits even under racy workers.
+        // The zoo repeats shapes heavily (ResNet bottlenecks, VGG pairs,
+        // BERT's identical encoder blocks): the shared cache must see hits
+        // even under racy workers.
         assert!(batch.hit_rate() > 0.0, "{}: no cache hits", acc.name);
         for (name, plan) in &batch.networks {
             assert!(plan.total_energy_uj() > 0.0, "{name}");
             assert!(plan.total_latency_cycles() > 0, "{name}");
         }
+    }
+}
+
+#[test]
+fn operator_diverse_networks_ride_the_shared_cache() {
+    // The acceptance scenario: matmul/pooling/elementwise networks flow
+    // through the same shared-cache service as the conv zoo. BERT's 12
+    // identical encoder blocks make most of its 96 layers cache hits.
+    let acc = presets::eyeriss();
+    let networks = vec![
+        ("bert".to_string(), zoo::bert_base()),
+        ("vgg16pool".to_string(), zoo::vgg16_pooled()),
+        ("mobilenetv2res".to_string(), zoo::mobilenet_v2_residual()),
+    ];
+    let batch = compile_batch(&networks, &acc, &LocalMapper::new(), 1).unwrap();
+    assert_eq!(batch.total_layers(), 96 + 18 + 62);
+    // One worker → deterministic order: BERT has only 4 unique shapes
+    // (q/k/v/attn_out share one matmul shape, plus ffn1, ffn2 and the
+    // add), so 92 of its 96 requests hit the cache.
+    assert!(batch.cache_hits >= 90, "hits: {}", batch.cache_hits);
+    for (name, plan) in &batch.networks {
+        assert!(plan.total_energy_uj() > 0.0, "{name}");
     }
 }

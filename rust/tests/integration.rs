@@ -133,3 +133,38 @@ fn depthwise_network_end_to_end() {
         assert!(lp.outcome.evaluation.energy.total_pj() > 0.0, "{}", lp.layer.name);
     }
 }
+
+#[test]
+fn operator_diverse_networks_end_to_end() {
+    use local_mapper::model::TensorIdx;
+    use local_mapper::workload::{OpKind, Tensor};
+    // The full pipeline (zoo → LOCAL → EvalContext → coordinator) must
+    // handle matmul, pooling and elementwise layers on every preset.
+    for (net, expect_layers) in [("bert", 96), ("vgg16pool", 18), ("mobilenetv2res", 62)] {
+        let layers = zoo::network(net).unwrap();
+        for acc in presets::all() {
+            let plan = compile_network(&layers, &acc, &LocalMapper::new(), 4)
+                .unwrap_or_else(|e| panic!("{net} on {}: {e}", acc.name));
+            assert_eq!(plan.layers.len(), expect_layers);
+            for lp in &plan.layers {
+                let e = &lp.outcome.evaluation;
+                assert!(e.energy.total_pj() > 0.0, "{net}/{}", lp.layer.name);
+                // Weight-less ops carry zero weight traffic end to end.
+                if !lp.layer.op.uses_weights() {
+                    let w: u64 =
+                        e.access.iter().map(|row| row[Tensor::Weight.t_idx()].total()).sum();
+                    assert_eq!(w, 0, "{net}/{}", lp.layer.name);
+                }
+                if lp.layer.op == OpKind::Elementwise {
+                    // Both operands read per add at the datapath.
+                    assert_eq!(
+                        e.access[0][Tensor::Input.t_idx()].reads,
+                        2 * e.macs,
+                        "{net}/{}",
+                        lp.layer.name
+                    );
+                }
+            }
+        }
+    }
+}

@@ -3,11 +3,12 @@
 //! and mappings and asserts an invariant of the system.
 
 use local_mapper::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
+use local_mapper::coordinator::layer_key;
 use local_mapper::mappers::{ExhaustiveMapper, LocalMapper, Mapper};
 use local_mapper::mapspace::{repair, sample_random};
 use local_mapper::model::{evaluate, evaluate_unchecked, EvalContext, TensorIdx};
 use local_mapper::util::rng::SplitMix64;
-use local_mapper::workload::{zoo, ConvLayer, Dim, Tensor};
+use local_mapper::workload::{zoo, ConvLayer, Dim, OpKind, Tensor};
 
 /// Random plausible conv layer (dims drawn from real-network ranges).
 fn random_layer(rng: &mut SplitMix64) -> ConvLayer {
@@ -23,6 +24,29 @@ fn random_layer(rng: &mut SplitMix64) -> ConvLayer {
         pq,
         pq,
     )
+}
+
+/// Random plausible layer of a given operator kind (dims drawn from
+/// real-network ranges of that op's live subset).
+fn random_op_layer(op: OpKind, rng: &mut SplitMix64) -> ConvLayer {
+    let pick = |rng: &mut SplitMix64, xs: &[u64]| xs[rng.index(xs.len())];
+    let ch = pick(rng, &[8, 16, 64, 96, 128, 256]);
+    let pq = pick(rng, &[7, 13, 14, 27, 28, 56]);
+    match op {
+        OpKind::Conv => random_layer(rng),
+        OpKind::DepthwiseConv => {
+            ConvLayer::new("prop-dw", ch, ch, 3, 3, pq, pq).depthwise()
+        }
+        OpKind::MatMul => {
+            let c = pick(rng, &[8, 64, 256, 768]);
+            let rows = pick(rng, &[8, 64, 128]);
+            ConvLayer::matmul("prop-mm", ch, c, rows)
+        }
+        OpKind::Pooling => {
+            ConvLayer::pooling("prop-pool", ch, pick(rng, &[2, 3]), pq, pq).with_stride(2)
+        }
+        OpKind::Elementwise => ConvLayer::elementwise("prop-add", ch, pq, pq),
+    }
 }
 
 /// Random accelerator: style, PE dims, buffer geometry.
@@ -124,6 +148,112 @@ fn prop_parallel_exhaustive_matches_single_thread() {
             "threads={threads}"
         );
         assert_eq!(par.evaluations, base.evaluations, "threads={threads}");
+    }
+}
+
+#[test]
+fn conv_relevance_tables_match_legacy() {
+    // The conv-path bit-identity guarantee starts here: the op-generic
+    // relevance tables must reproduce the pre-refactor hand-coded sets
+    // exactly for dense conv (the old `Tensor::relevant`) and depthwise
+    // (the old special case adding M to Input's relevance).
+    let dense: [(Tensor, &[Dim]); 3] = [
+        (Tensor::Weight, &[Dim::M, Dim::C, Dim::R, Dim::S]),
+        (Tensor::Input, &[Dim::N, Dim::C, Dim::P, Dim::R, Dim::Q, Dim::S]),
+        (Tensor::Output, &[Dim::N, Dim::M, Dim::P, Dim::Q]),
+    ];
+    for (t, legacy) in dense {
+        for d in Dim::ALL {
+            assert_eq!(OpKind::Conv.relevant(t, d), legacy.contains(&d), "conv {t} {d}");
+            // Depthwise = dense + (Input, M), exactly as the old
+            // `relevant_for` special case computed it.
+            let legacy_dw = legacy.contains(&d) || (t == Tensor::Input && d == Dim::M);
+            assert_eq!(OpKind::DepthwiseConv.relevant(t, d), legacy_dw, "dw {t} {d}");
+        }
+    }
+}
+
+#[test]
+fn prop_local_valid_for_every_op_kind_on_every_preset() {
+    // LOCAL must construct a valid mapping for every OpKind × arch preset
+    // across randomized layer shapes of each op's live dimension subset.
+    let mut rng = SplitMix64::new(0x0123);
+    for op in OpKind::ALL {
+        for acc in presets::all() {
+            for _ in 0..20 {
+                let layer = random_op_layer(op, &mut rng);
+                let m = LocalMapper::new().map(&layer, &acc).unwrap_or_else(|e| {
+                    panic!("LOCAL failed on {op} {layer} × {}: {e}", acc.name)
+                });
+                m.validate(&layer, &acc).unwrap_or_else(|e| {
+                    panic!("invalid LOCAL mapping on {op} {layer} × {}: {e}", acc.name)
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_eval_context_bit_identical_across_op_kinds() {
+    // The op-aware masks and weight gating of the zero-allocation path
+    // must agree bit-for-bit with the legacy evaluator on every operator
+    // projection and random machines, not just conv.
+    let mut rng = SplitMix64::new(0x0FF1CE);
+    for op in OpKind::ALL {
+        for _ in 0..30 {
+            let layer = random_op_layer(op, &mut rng);
+            let acc = random_acc(&mut rng);
+            let mut ctx = EvalContext::new(&layer, &acc);
+            let m = sample_random(&layer, &acc, &mut rng);
+            assert_eq!(
+                &evaluate_unchecked(&layer, &acc, &m),
+                ctx.evaluate_into(&m),
+                "context/legacy diverged on {op} {layer} × random acc"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_layer_keys_distinct_across_ops() {
+    // Distinct op kinds with identical dimension bounds must never share
+    // a cache key or a shard fingerprint (cross-op cache collisions would
+    // serve a matmul a pooling mapping).
+    let mut rng = SplitMix64::new(0xD15C0);
+    let acc = presets::eyeriss();
+    for _ in 0..100 {
+        let pick = |rng: &mut SplitMix64, xs: &[u64]| xs[rng.index(xs.len())];
+        let ch = pick(&mut rng, &[8, 64, 256]);
+        let pq = pick(&mut rng, &[7, 14, 28]);
+        // Three ops sharing the exact same seven bounds.
+        let conv = ConvLayer::new("k", ch, 1, 1, 1, pq, pq);
+        let pool = ConvLayer::pooling("k", ch, 1, pq, pq);
+        let add = ConvLayer::elementwise("k", ch, pq, pq);
+        assert_eq!(conv.bounds(), pool.bounds());
+        assert_eq!(conv.bounds(), add.bounds());
+        let keys = [layer_key(&conv, &acc), layer_key(&pool, &acc), layer_key(&add, &acc)];
+        for i in 0..3 {
+            for j in i + 1..3 {
+                assert_ne!(keys[i], keys[j], "op keys collided at ch={ch} pq={pq}");
+                assert_ne!(keys[i].fnv1a(), keys[j].fnv1a(), "fingerprints collided");
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_weightless_ops_have_zero_weight_traffic_everywhere() {
+    let mut rng = SplitMix64::new(0xADD);
+    for op in [OpKind::Pooling, OpKind::Elementwise] {
+        for _ in 0..40 {
+            let layer = random_op_layer(op, &mut rng);
+            let acc = random_acc(&mut rng);
+            let e = evaluate_unchecked(&layer, &acc, &sample_random(&layer, &acc, &mut rng));
+            for l in 0..acc.n_levels() {
+                assert_eq!(e.access[l][Tensor::Weight.t_idx()].total(), 0, "{op} level {l}");
+            }
+            assert!(e.energy.total_pj() > 0.0 && e.energy.total_pj().is_finite());
+        }
     }
 }
 
