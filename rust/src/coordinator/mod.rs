@@ -19,22 +19,26 @@ pub mod service;
 pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
 
 use crate::arch::Accelerator;
-use crate::mappers::{MapError, MapOutcome, Mapper};
+use crate::mappers::{MapError, MapOutcome, Mapper, Objective};
 use crate::util::table::{fmt_f64, Table};
-use crate::workload::{ConvLayer, OpKind};
+use crate::workload::{Layer, OpKind};
 use std::collections::HashMap;
 use std::sync::Mutex;
 use std::time::Duration;
 
 /// Cache key: everything that determines a mapping for a layer on an arch
 /// (the operator kind plus all seven dims, stride and dilation — dilation
-/// changes the input halo, hence footprints and every downstream metric).
+/// changes the input halo, hence footprints and every downstream metric —
+/// plus the search objective).
 ///
 /// The operator kind is a *correctness* field, not bookkeeping: a matmul,
 /// a pooling window and a 1×1 conv can share identical dimension bounds
 /// while carrying different relevance sets and tensor volumes, so keys
 /// must never collide across ops (pinned by
 /// `prop_layer_keys_distinct_across_ops` in `rust/tests/property.rs`).
+/// The objective is equally load-bearing: the delay-optimal mapping of a
+/// shape is not its energy-optimal mapping, so distinct objectives must
+/// never share a cache entry ([`LayerKey::for_objective`]).
 ///
 /// Formerly a formatted `String`; now a plain struct so keys hash without
 /// formatting on every request, and [`LayerKey::fnv1a`] gives a stable
@@ -56,25 +60,37 @@ pub struct LayerKey {
     pub stride: u64,
     /// Filter dilation (changes the input halo).
     pub dilation: u64,
+    /// The objective the mapper optimized (distinct objectives must never
+    /// share a cache entry).
+    pub objective: Objective,
 }
 
 impl LayerKey {
-    /// Build the key for a layer on an accelerator.
-    pub fn new(layer: &ConvLayer, acc: &Accelerator) -> Self {
+    /// Build the key for a layer on an accelerator (at the default energy
+    /// objective; see [`LayerKey::for_objective`]).
+    pub fn new(layer: &Layer, acc: &Accelerator) -> Self {
         Self {
             arch: acc.name.clone(),
             op: layer.op,
             dims: [layer.n, layer.m, layer.c, layer.r, layer.s, layer.p, layer.q],
             stride: layer.stride,
             dilation: layer.dilation,
+            objective: Objective::Energy,
         }
     }
 
+    /// Builder: rekey for a mapper's objective (the coordinator and the
+    /// service always key by `mapper.objective()`).
+    pub fn for_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
     /// Stable FNV-1a 64-bit fingerprint over the canonical field encoding
-    /// (arch bytes, op name bytes, then each numeric field little-endian).
-    /// Used for cache sharding — stability across processes matters more
-    /// than hash quality here, and FNV mixes the low bits well enough for
-    /// a power-of-two shard count.
+    /// (arch bytes, op name bytes, each numeric field little-endian, then
+    /// the objective name bytes). Used for cache sharding — stability
+    /// across processes matters more than hash quality here, and FNV
+    /// mixes the low bits well enough for a power-of-two shard count.
     pub fn fnv1a(&self) -> u64 {
         let mut h = fnv_bytes(0xcbf2_9ce4_8422_2325, self.arch.as_bytes());
         h = fnv_bytes(h, self.op.name().as_bytes());
@@ -82,7 +98,8 @@ impl LayerKey {
             h = fnv_bytes(h, &v.to_le_bytes());
         }
         h = fnv_bytes(h, &self.stride.to_le_bytes());
-        fnv_bytes(h, &self.dilation.to_le_bytes())
+        h = fnv_bytes(h, &self.dilation.to_le_bytes());
+        fnv_bytes(h, self.objective.name().as_bytes())
     }
 
     /// Shard index for an `n`-shard cache.
@@ -104,7 +121,7 @@ impl std::fmt::Display for LayerKey {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         write!(
             f,
-            "{}|{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}",
+            "{}|{}|n{}m{}c{}r{}s{}p{}q{}st{}di{}|{}",
             self.arch,
             self.op,
             self.dims[0],
@@ -115,14 +132,16 @@ impl std::fmt::Display for LayerKey {
             self.dims[5],
             self.dims[6],
             self.stride,
-            self.dilation
+            self.dilation,
+            self.objective
         )
     }
 }
 
 /// Build the cache key for a layer on an accelerator (kept as the
-/// call-site-compatible spelling of [`LayerKey::new`]).
-pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> LayerKey {
+/// call-site-compatible spelling of [`LayerKey::new`]; compose with
+/// [`LayerKey::for_objective`] for non-energy mappers).
+pub fn layer_key(layer: &Layer, acc: &Accelerator) -> LayerKey {
     LayerKey::new(layer, acc)
 }
 
@@ -130,7 +149,7 @@ pub fn layer_key(layer: &ConvLayer, acc: &Accelerator) -> LayerKey {
 #[derive(Debug, Clone)]
 pub struct LayerPlan {
     /// The layer that was mapped.
-    pub layer: ConvLayer,
+    pub layer: Layer,
     /// The mapping result.
     pub outcome: MapOutcome,
     /// Served from the mapping cache (shape already mapped).
@@ -219,7 +238,7 @@ impl NetworkPlan {
 /// (search mappers carry interior `Cell` counters, so `Sync` is neither
 /// required nor available for every [`crate::mappers::AnyMapper`] variant).
 pub fn compile_network<M>(
-    layers: &[ConvLayer],
+    layers: &[Layer],
     acc: &Accelerator,
     mapper: &M,
     threads: usize,
@@ -230,11 +249,13 @@ where
     let t0 = std::time::Instant::now();
     let threads = threads.max(1);
 
-    // Deduplicate shapes.
-    let mut unique: Vec<(LayerKey, ConvLayer)> = Vec::new();
+    // Deduplicate shapes under the mapper's objective (distinct
+    // objectives must never share an entry).
+    let objective = mapper.objective();
+    let mut unique: Vec<(LayerKey, Layer)> = Vec::new();
     let mut seen: HashMap<LayerKey, usize> = HashMap::new();
     for l in layers {
-        let key = layer_key(l, acc);
+        let key = layer_key(l, acc).for_objective(objective);
         if !seen.contains_key(&key) {
             seen.insert(key.clone(), unique.len());
             unique.push((key, l.clone()));
@@ -267,7 +288,7 @@ where
     let mut plans = Vec::with_capacity(layers.len());
     let mut first_use: std::collections::HashSet<LayerKey> = std::collections::HashSet::new();
     for l in layers {
-        let key = layer_key(l, acc);
+        let key = layer_key(l, acc).for_objective(objective);
         let out = results
             .get(&key)
             .expect("every key mapped")
@@ -345,7 +366,7 @@ impl BatchPlan {
 /// cache, and each `NetworkPlan::compile_time` measures that network's
 /// reply-collection wall-clock within the batch.
 pub fn compile_batch<M>(
-    networks: &[(String, Vec<ConvLayer>)],
+    networks: &[(String, Vec<Layer>)],
     acc: &Accelerator,
     mapper: &M,
     threads: usize,
@@ -357,7 +378,7 @@ where
     let svc = MappingService::start(acc.clone(), mapper.clone(), threads.max(1));
 
     // Shard: all layers of all networks enter the queue immediately.
-    let submitted: Vec<(String, Vec<(ConvLayer, JobHandle)>)> = networks
+    let submitted: Vec<(String, Vec<(Layer, JobHandle)>)> = networks
         .iter()
         .map(|(name, layers)| {
             let handles =
@@ -489,12 +510,30 @@ mod tests {
         let acc = presets::eyeriss();
         let l = zoo::vgg16()[0].clone(); // 64×3×3×3×224×224, stride 1
         let key = layer_key(&l, &acc);
-        assert_eq!(key.to_string(), format!("{}|conv|n1m64c3r3s3p224q224st1di1", acc.name));
-        let mm = ConvLayer::matmul("mm", 768, 768, 128);
+        assert_eq!(key.to_string(), format!("{}|conv|n1m64c3r3s3p224q224st1di1|energy", acc.name));
+        let mm = Layer::matmul("mm", 768, 768, 128);
         assert_eq!(
-            layer_key(&mm, &acc).to_string(),
-            format!("{}|matmul|n1m768c768r1s1p128q1st1di1", acc.name)
+            layer_key(&mm, &acc).for_objective(Objective::Edp).to_string(),
+            format!("{}|matmul|n1m768c768r1s1p128q1st1di1|edp", acc.name)
         );
+    }
+
+    #[test]
+    fn layer_key_distinguishes_objectives() {
+        // The delay-optimal mapping of a shape is not its energy-optimal
+        // mapping: objectives must never share a cache entry or shard
+        // fingerprint.
+        let acc = presets::eyeriss();
+        let l = zoo::vgg16()[0].clone();
+        let keys: Vec<LayerKey> =
+            Objective::ALL.iter().map(|&o| layer_key(&l, &acc).for_objective(o)).collect();
+        for i in 0..keys.len() {
+            for j in i + 1..keys.len() {
+                assert_ne!(keys[i], keys[j]);
+                assert_ne!(keys[i].fnv1a(), keys[j].fnv1a());
+            }
+        }
+        assert_eq!(layer_key(&l, &acc), layer_key(&l, &acc).for_objective(Objective::Energy));
     }
 
     #[test]
@@ -503,9 +542,9 @@ mod tests {
         // carry the same seven bounds: the op field must keep their cache
         // entries apart (different relevance → different mappings).
         let acc = presets::eyeriss();
-        let conv = ConvLayer::new("c", 64, 1, 1, 1, 14, 14);
-        let pool = ConvLayer::pooling("p", 64, 1, 14, 14);
-        let add = ConvLayer::elementwise("a", 64, 14, 14);
+        let conv = Layer::new("c", 64, 1, 1, 1, 14, 14);
+        let pool = Layer::pooling("p", 64, 1, 14, 14);
+        let add = Layer::elementwise("a", 64, 14, 14);
         assert_eq!(conv.bounds(), pool.bounds());
         assert_eq!(conv.bounds(), add.bounds());
         let keys = [layer_key(&conv, &acc), layer_key(&pool, &acc), layer_key(&add, &acc)];

@@ -16,7 +16,7 @@
 use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
 use crate::mappers::{MapOutcome, Mapper};
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -24,7 +24,7 @@ use std::time::{Duration, Instant};
 
 /// A mapping request: one layer on the service's accelerator.
 struct MapRequest {
-    layer: ConvLayer,
+    layer: Layer,
     reply: mpsc::Sender<Result<MapReply, String>>,
     /// Stamped at submission so `service_time` covers queue wait + map.
     submitted: Instant,
@@ -254,36 +254,45 @@ impl MappingService {
             let metrics = Arc::clone(&metrics);
             let acc = acc.clone();
             let mapper = mapper.clone();
-            workers.push(std::thread::spawn(move || loop {
-                // Holding the lock only for recv keeps workers independent.
-                let req = {
-                    let guard = rx.lock().unwrap();
-                    guard.recv()
-                };
-                let Ok(req) = req else { break }; // channel closed → drain
-                let key = layer_key(&req.layer, &acc);
-                let hit = cache.get(&key);
-                let (result, cached) = match hit {
-                    Some(outcome) => (Ok(outcome), true),
-                    None => match mapper.run(&req.layer, &acc) {
-                        Ok(outcome) => {
-                            cache.insert(key, outcome.clone());
-                            (Ok(outcome), false)
-                        }
-                        Err(e) => (Err(e.to_string()), false),
-                    },
-                };
-                let service_time = req.submitted.elapsed();
-                metrics.record(service_time, cached, result.is_err());
-                // Receiver may have given up; ignore send failures.
-                let _ = req.reply.send(result.map(|outcome| MapReply { outcome, cached, service_time }));
+            workers.push(std::thread::spawn(move || {
+                // Cache entries are keyed by the mapper's objective, so a
+                // (hypothetical) cache shared across services can never
+                // serve a delay-optimal mapping to an energy request.
+                let objective = mapper.objective();
+                loop {
+                    // Holding the lock only for recv keeps workers
+                    // independent.
+                    let req = {
+                        let guard = rx.lock().unwrap();
+                        guard.recv()
+                    };
+                    let Ok(req) = req else { break }; // channel closed → drain
+                    let key = layer_key(&req.layer, &acc).for_objective(objective);
+                    let hit = cache.get(&key);
+                    let (result, cached) = match hit {
+                        Some(outcome) => (Ok(outcome), true),
+                        None => match mapper.run(&req.layer, &acc) {
+                            Ok(outcome) => {
+                                cache.insert(key, outcome.clone());
+                                (Ok(outcome), false)
+                            }
+                            Err(e) => (Err(e.to_string()), false),
+                        },
+                    };
+                    let service_time = req.submitted.elapsed();
+                    metrics.record(service_time, cached, result.is_err());
+                    // Receiver may have given up; ignore send failures.
+                    let _ = req
+                        .reply
+                        .send(result.map(|outcome| MapReply { outcome, cached, service_time }));
+                }
             }));
         }
         Self { tx: Some(tx), workers, metrics }
     }
 
     /// Submit a layer; returns a handle to await the reply.
-    pub fn submit(&self, layer: ConvLayer) -> JobHandle {
+    pub fn submit(&self, layer: Layer) -> JobHandle {
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .as_ref()
@@ -294,7 +303,7 @@ impl MappingService {
     }
 
     /// Map a batch and wait for all replies (in request order).
-    pub fn map_all(&self, layers: &[ConvLayer]) -> Vec<Result<MapReply, String>> {
+    pub fn map_all(&self, layers: &[Layer]) -> Vec<Result<MapReply, String>> {
         let handles: Vec<JobHandle> = layers.iter().map(|l| self.submit(l.clone())).collect();
         handles.into_iter().map(|h| h.wait()).collect()
     }
@@ -371,6 +380,31 @@ mod tests {
         assert!(!a.cached);
         assert!(b.cached);
         assert_eq!(a.outcome.mapping, b.outcome.mapping);
+    }
+
+    #[test]
+    fn service_keys_cache_entries_by_objective() {
+        // Two services over the same shapes but different objectives must
+        // key their entries apart; each reply carries its own objective.
+        use crate::mappers::Objective;
+        let layer = zoo::vgg16()[8].clone();
+        let energy_svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 1);
+        let delay_svc = MappingService::start(
+            presets::eyeriss(),
+            LocalMapper::new().with_objective(Objective::Delay),
+            1,
+        );
+        let e = energy_svc.submit(layer.clone()).wait().unwrap();
+        let d = delay_svc.submit(layer.clone()).wait().unwrap();
+        assert_eq!(e.outcome.objective, Objective::Energy);
+        assert_eq!(d.outcome.objective, Objective::Delay);
+        let acc = presets::eyeriss();
+        assert_ne!(
+            layer_key(&layer, &acc).for_objective(Objective::Energy),
+            layer_key(&layer, &acc).for_objective(Objective::Delay)
+        );
+        energy_svc.shutdown();
+        delay_svc.shutdown();
     }
 
     #[test]

@@ -15,7 +15,7 @@
 
 use local_mapper::arch::{config, presets, Accelerator};
 use local_mapper::coordinator::{compile_batch, compile_network, BatchPlan};
-use local_mapper::mappers::{AnyMapper, Mapper};
+use local_mapper::mappers::{AnyMapper, Mapper, Objective, SearchParams};
 use local_mapper::mapspace;
 use local_mapper::report;
 use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime};
@@ -81,13 +81,27 @@ USAGE: local-mapper <subcommand> [options]
            (PE × buffer sweep, Pareto front)
   perf     [--smoke] [--out BENCH_eval.json]
            (evals/sec old vs context path, per-operator-kind throughput,
-            exhaustive 1/2/4/8-thread scaling, zoo batch wall time
+            exhaustive 1/2/4/8-thread scaling, engine pruned-vs-unpruned
+            and search-thread scaling, zoo batch wall time
             → machine-readable JSON)
 
 All --mapper flags accept: local|rs|ws|os|random|ga|annealing|refine|exhaustive
 (--budget caps search evaluations per layer mapping — default 3000, or 300
  for the compile/compile-all/explore batches; ga derives its generations
- from the budget; --seed fixes stochastic mappers)."
+ from the budget; --seed fixes stochastic mappers).
+
+Search-engine flags (wherever --mapper is accepted):
+  --objective energy|delay|edp   the metric every mapper minimizes
+                                 (default energy; distinct objectives never
+                                 share a mapping-cache entry)
+  --search-threads N             shard indexed searches (random, rs/ws/os,
+                                 exhaustive; GA generation scoring) across
+                                 N worker threads — results are identical
+                                 at every N (default 1)
+  --no-prune                     disable the bound-based pruner that is on
+                                 by default for exhaustive and rs/ws/os
+                                 (pruning never changes the selected
+                                 mapping, only cuts evaluations)"
     );
 }
 
@@ -128,10 +142,18 @@ fn resolve_layer(spec: &str) -> Result<ConvLayer, String> {
 /// `compile-all`, `explore`) to 300 — the budget applies per layer
 /// mapping, so batches pay it many times over.
 fn resolve_mapper_with(args: &Args, default_budget: u64) -> Result<AnyMapper, String> {
-    let seed = args.get_num::<u64>("seed", 42);
-    let budget = args.get_num::<u64>("budget", default_budget);
     let spec = args.get_or("mapper", "local");
-    AnyMapper::parse(spec, budget, seed)
+    let objective_spec = args.get_or("objective", "energy");
+    let objective = Objective::parse(objective_spec)
+        .ok_or_else(|| format!("unknown objective '{objective_spec}' ({})", Objective::SPEC))?;
+    let params = SearchParams {
+        budget: args.get_num::<u64>("budget", default_budget),
+        seed: args.get_num::<u64>("seed", 42),
+        objective,
+        threads: args.get_num::<usize>("search-threads", 1).max(1),
+        prune: !args.flag("no-prune"),
+    };
+    AnyMapper::parse(spec, params)
         .ok_or_else(|| format!("unknown mapper '{spec}' ({})", AnyMapper::SPEC))
 }
 
@@ -149,8 +171,10 @@ fn cmd_map(args: &Args) -> i32 {
         println!("{}", out.mapping.render(&layer, &acc));
         let e = &out.evaluation;
         println!(
-            "mapper={} evaluations={} map_time={}",
+            "mapper={} objective={} score={} evaluations={} map_time={}",
             mapper.name(),
+            out.objective,
+            fmt_f64(out.score),
             out.evaluations,
             local_mapper::util::bench::fmt_duration(out.elapsed)
         );

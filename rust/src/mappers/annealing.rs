@@ -1,14 +1,22 @@
 //! Simulated-annealing mapper — the second iterative-heuristic baseline
 //! (alongside the GA) for the mapper-quality ablation: where does LOCAL
 //! sit on the quality-vs-evaluations curve?
+//!
+//! The SA chain is inherently sequential (each proposal mutates the
+//! current state, acceptance depends on the previous score), so it rides
+//! the engine as a one-candidate-per-batch [`BatchSource`]: the shared
+//! [`SearchDriver`] owns budget truncation, validity filtering, objective
+//! scoring and best tracking, while the source owns only the neighbourhood
+//! move, the acceptance rule and the cooling schedule.
 
+use super::engine::source::candidate_seed;
+use super::engine::{BatchSource, Objective, SearchDriver};
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
-use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
 use std::cell::Cell;
 
 /// Simulated annealing over the map-space with factor-migration and
@@ -17,25 +25,46 @@ use std::cell::Cell;
 pub struct AnnealingMapper {
     /// Number of annealing steps.
     pub steps: u64,
-    /// Initial acceptance temperature as a fraction of the starting energy.
+    /// Initial acceptance temperature as a fraction of the starting score.
     pub t0_frac: f64,
     /// Geometric cooling factor per step.
     pub alpha: f64,
     /// PRNG seed (deterministic across runs).
     pub seed: u64,
+    /// The objective being minimized (and annealed over).
+    pub objective: Objective,
     evaluated: Cell<u64>,
 }
 
 impl AnnealingMapper {
     /// SA mapper with the given step budget and seed.
     pub fn new(steps: u64, seed: u64) -> Self {
-        assert!(steps > 0);
-        Self { steps, t0_frac: 0.1, alpha: 0.995, seed, evaluated: Cell::new(0) }
+        Self {
+            steps,
+            t0_frac: 0.1,
+            alpha: 0.995,
+            seed,
+            objective: Objective::Energy,
+            evaluated: Cell::new(0),
+        }
+    }
+
+    /// Mapper configured from shared engine params (`budget` = steps).
+    pub fn from_params(params: &super::SearchParams) -> Self {
+        let mut m = Self::new(params.budget, params.seed);
+        m.objective = params.objective;
+        m
+    }
+
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
     }
 }
 
 /// One random neighbourhood move (in place), then repair.
-fn neighbour(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
+fn neighbour(layer: &Layer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
     let n_levels = m.n_levels();
     match rng.next_below(4) {
         0 => {
@@ -95,45 +124,108 @@ fn smallest_prime(n: u64) -> u64 {
     n
 }
 
+/// The SA chain as an engine source: proposes the start sample, then one
+/// neighbour per batch, folding each score back into the chain state.
+struct SaChain<'a> {
+    layer: &'a Layer,
+    acc: &'a Accelerator,
+    seed: u64,
+    rng: SplitMix64,
+    t0_frac: f64,
+    alpha: f64,
+    steps_left: u64,
+    /// The chain position and its score (None before the start sample is
+    /// scored).
+    current: Option<(Mapping, f64)>,
+    /// The proposal awaiting feedback.
+    proposed: Option<Mapping>,
+    temperature: f64,
+}
+
+impl BatchSource for SaChain<'_> {
+    fn next_batch(&mut self, feedback: &[Option<f64>], out: &mut Vec<Mapping>) {
+        // Fold the previous proposal's score into the chain.
+        if let Some(prev) = self.proposed.take() {
+            match (feedback.first().copied().flatten(), self.current.take()) {
+                (Some(score), None) => {
+                    // The start sample: fixes the initial temperature.
+                    self.temperature = score * self.t0_frac;
+                    self.current = Some((prev, score));
+                }
+                (Some(score), Some((cur, cur_score))) => {
+                    let accept = score < cur_score
+                        || self.rng.next_f64()
+                            < (-(score - cur_score) / self.temperature.max(1e-12)).exp();
+                    self.current = Some(if accept { (prev, score) } else { (cur, cur_score) });
+                    self.temperature *= self.alpha;
+                }
+                // Invalid proposal: no acceptance draw, no cooling (the
+                // historical behaviour).
+                (None, cur) => self.current = cur,
+            }
+        }
+        // Propose the next candidate. The start sample is drawn exactly
+        // like the random stream's candidate 0 for this seed, so SA is
+        // comparable to (and never worse than) the single-draw baseline.
+        let cand = match &self.current {
+            None => {
+                let mut start_rng = SplitMix64::new(candidate_seed(self.seed, 0));
+                sample_random(self.layer, self.acc, &mut start_rng)
+            }
+            Some((cur, _)) => {
+                if self.steps_left == 0 {
+                    return;
+                }
+                self.steps_left -= 1;
+                let mut cand = cur.clone();
+                neighbour(self.layer, self.acc, &mut cand, &mut self.rng);
+                cand
+            }
+        };
+        self.proposed = Some(cand.clone());
+        out.push(cand);
+    }
+}
+
 impl Mapper for AnnealingMapper {
     fn name(&self) -> String {
         format!("SA({})", self.steps)
+    }
+
+    fn objective(&self) -> Objective {
+        self.objective
     }
 
     fn evaluations(&self) -> u64 {
         self.evaluated.get()
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let mut rng = SplitMix64::new(self.seed);
-        let mut ctx = EvalContext::new(layer, acc);
-        let mut current = sample_random(layer, acc, &mut rng);
-        let mut cur_e = ctx.energy_pj(&current);
-        let mut best = current.clone();
-        let mut best_e = cur_e;
-        let mut temperature = cur_e * self.t0_frac;
-        let mut evaluated = 1u64;
-        for _ in 0..self.steps {
-            let mut cand = current.clone();
-            neighbour(layer, acc, &mut cand, &mut rng);
-            if cand.validate(layer, acc).is_err() {
-                continue;
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let mut chain = SaChain {
+            layer,
+            acc,
+            seed: self.seed,
+            rng: SplitMix64::new(self.seed),
+            t0_frac: self.t0_frac,
+            alpha: self.alpha,
+            steps_left: self.steps.max(1),
+            current: None,
+            proposed: None,
+            temperature: 0.0,
+        };
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.steps.saturating_add(1),
+            threads: 1,
+            prune: false,
+        };
+        match driver.search_batched(layer, acc, &mut chain) {
+            Some(b) => {
+                self.evaluated.set(b.scored);
+                Ok(b.mapping)
             }
-            let e = ctx.energy_pj(&cand);
-            evaluated += 1;
-            let accept = e < cur_e || rng.next_f64() < (-(e - cur_e) / temperature.max(1e-12)).exp();
-            if accept {
-                current = cand;
-                cur_e = e;
-                if e < best_e {
-                    best = current.clone();
-                    best_e = e;
-                }
-            }
-            temperature *= self.alpha;
+            None => Err(MapError::NoValidMapping("SA chain never left the start".into())),
         }
-        self.evaluated.set(evaluated);
-        Ok(best)
     }
 }
 

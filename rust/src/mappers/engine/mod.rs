@@ -1,0 +1,524 @@
+//! The shared search engine behind every mapper.
+//!
+//! Each of the seven mappers used to own a private candidate loop with its
+//! own budget accounting, validity filtering and best tracking — and only
+//! `ExhaustiveMapper` knew how to shard work across threads. The engine
+//! centralizes all of that (DESIGN.md §11):
+//!
+//! * [`Objective`] — the scalar being minimized (energy / delay / EDP),
+//!   threaded through scoring, [`crate::mappers::MapOutcome`] and the
+//!   coordinator cache key.
+//! * [`CandidateSource`] / [`BatchSource`] — where candidates come from:
+//!   indexed streams (odometer enumeration, seeded random, constrained
+//!   random) and adaptive proposals (SA, GA, hill-climbing).
+//! * [`SearchDriver`] — budget truncation, validity filtering, objective
+//!   scoring through the zero-allocation [`EvalContext`], deterministic
+//!   best-merge, scoped-thread sharding for indexed sources, and the
+//!   bound-based pruner.
+//!
+//! # Determinism
+//!
+//! Indexed searches are **bit-identical at every thread count**. Every
+//! candidate has a stable global index `block × block_len + member`; each
+//! worker keeps its best `(score, index)` pair and the merge takes the
+//! lowest score, exact ties broken by the lowest index — precisely the
+//! order a single-threaded loop keeps candidates (strict `<` keeps the
+//! earliest minimum). Pruning decisions compare each block's lower bound
+//! against the incumbent **frozen at the start of the round**, never a
+//! worker-local running best, so the set of evaluated candidates (and
+//! hence every count) is also thread-count-invariant.
+//!
+//! # Pruning
+//!
+//! With [`SearchParams::prune`] on, the driver asks
+//! [`EvalContext::objective_bound`] for a cheap, permutation-independent
+//! lower bound of each block's objective before materializing its members.
+//! A block is skipped only when its bound **strictly exceeds** the
+//! incumbent score; any skipped candidate therefore scores strictly worse
+//! than the final best and can affect neither the argmin nor its
+//! tie-break index. Warm-starting the incumbent (e.g. exhaustive search
+//! seeding with the LOCAL mapping) makes the pruner effective from the
+//! first block; seed candidates carry indices **after** the whole stream,
+//! so an exact tie is still resolved in favour of the enumerated
+//! candidate.
+
+pub mod objective;
+pub mod source;
+
+pub use objective::Objective;
+pub use source::{BatchSource, CandidateSource, OdometerSource, RandomStream};
+
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::model::EvalContext;
+use crate::workload::Layer;
+
+/// Engine-wide knobs shared by every search mapper; the `--budget`,
+/// `--seed`, `--objective`, `--search-threads` and `--no-prune` CLI flags
+/// resolve into one of these ([`crate::mappers::AnyMapper::parse`]).
+#[derive(Debug, Clone, Copy)]
+pub struct SearchParams {
+    /// Hard cap on candidate evaluations per layer mapping.
+    pub budget: u64,
+    /// PRNG seed for stochastic sources (deterministic across runs).
+    pub seed: u64,
+    /// The scalar every mapper minimizes.
+    pub objective: Objective,
+    /// Worker threads for indexed sources (results are identical at every
+    /// value).
+    pub threads: usize,
+    /// Bound-based block pruning for the mappers that support it
+    /// (exhaustive and dataflow-constrained search have it on by default).
+    pub prune: bool,
+}
+
+impl SearchParams {
+    /// Params with the given budget and seed at the default objective,
+    /// single-threaded, pruning on.
+    pub fn new(budget: u64, seed: u64) -> Self {
+        Self { budget, seed, ..Self::default() }
+    }
+
+    /// Builder: set the objective.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Builder: set the worker-thread count.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder: disable bound-based pruning.
+    pub fn without_pruning(mut self) -> Self {
+        self.prune = false;
+        self
+    }
+}
+
+impl Default for SearchParams {
+    fn default() -> Self {
+        Self { budget: 3000, seed: 42, objective: Objective::Energy, threads: 1, prune: true }
+    }
+}
+
+/// What a driver run found.
+#[derive(Debug, Clone)]
+pub struct SearchBest {
+    /// The winning mapping (lowest objective score; exact ties go to the
+    /// lowest global candidate index).
+    pub mapping: Mapping,
+    /// Its objective score.
+    pub score: f64,
+    /// Its global candidate index (the tie-break witness; seed candidates
+    /// sit after the whole stream).
+    pub index: u64,
+    /// Candidates materialized and validity-checked (valid or not); the
+    /// historical "evaluations" accounting of the enumerative mappers.
+    pub examined: u64,
+    /// Candidates that passed validation and were fully scored.
+    pub scored: u64,
+    /// Candidates skipped by the bound-based pruner without being
+    /// materialized.
+    pub pruned: u64,
+}
+
+/// Incumbent refreshes per pruned search: the block range is processed in
+/// this many synchronized rounds so later rounds prune against the best of
+/// all earlier ones.
+const PRUNE_ROUNDS: u64 = 32;
+
+/// Floor on blocks per round: bounds the sharding/merge overhead and
+/// guarantees a pruned search still examines a meaningful unpruned prefix
+/// when it has no warm-start seed.
+const MIN_ROUND_BLOCKS: u64 = 128;
+
+/// Start of shard `w` when `total` items are split across `workers`
+/// contiguous shards (shard `w` covers `[start(w), start(w + 1))`).
+fn shard_start(total: u64, workers: u64, w: u64) -> u64 {
+    let base = total / workers;
+    let rem = total % workers;
+    w * base + w.min(rem)
+}
+
+/// Fold one scored candidate into the running best: lowest score wins,
+/// exact ties go to the lowest global index.
+fn merge_best(best: &mut Option<(f64, u64, Mapping)>, score: f64, index: u64, m: &Mapping) {
+    let better = match best {
+        None => true,
+        Some((bs, bi, _)) => score < *bs || (score == *bs && index < *bi),
+    };
+    if better {
+        *best = Some((score, index, m.clone()));
+    }
+}
+
+/// Per-worker tallies and best for one round shard.
+#[derive(Debug, Default)]
+struct ShardResult {
+    examined: u64,
+    scored: u64,
+    pruned: u64,
+    best: Option<(f64, u64, Mapping)>,
+}
+
+/// The shared search driver (see the module docs).
+#[derive(Debug, Clone, Copy)]
+pub struct SearchDriver {
+    /// The scalar being minimized.
+    pub objective: Objective,
+    /// Hard cap on candidate evaluations (global candidate indices at or
+    /// above the budget are never materialized; a zero budget still
+    /// admits one candidate).
+    pub budget: u64,
+    /// Worker threads for indexed sources.
+    pub threads: usize,
+    /// Bound-based block pruning.
+    pub prune: bool,
+}
+
+impl SearchDriver {
+    /// Deterministic (thread-count-invariant) search over an indexed
+    /// source. `seeds` warm-start the incumbent: they are scored first,
+    /// carry post-stream indices (an exact tie prefers the enumerated
+    /// candidate), and make the pruner effective from the first block.
+    /// Returns `None` when no candidate passed validation.
+    pub fn search<S: CandidateSource>(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &S,
+        seeds: &[Mapping],
+    ) -> Option<SearchBest> {
+        let budget = self.budget.max(1);
+        let block_len = source.block_len().max(1);
+        let visit_blocks = source.n_blocks().min(budget.div_ceil(block_len));
+
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        let (mut examined, mut scored, mut pruned) = (0u64, 0u64, 0u64);
+
+        if !seeds.is_empty() {
+            let mut ctx = EvalContext::new(layer, acc);
+            for (i, s) in seeds.iter().enumerate() {
+                if s.validate(layer, acc).is_err() {
+                    continue;
+                }
+                examined += 1;
+                scored += 1;
+                let score = self.objective.score(ctx.evaluate_into(s));
+                merge_best(&mut best, score, budget.saturating_add(i as u64), s);
+            }
+        }
+
+        let n_workers = (self.threads.max(1) as u64).min(visit_blocks.max(1));
+        let round_blocks = if self.prune {
+            visit_blocks.div_ceil(PRUNE_ROUNDS).max(MIN_ROUND_BLOCKS)
+        } else {
+            visit_blocks.max(1)
+        };
+        let mut workers: Vec<(EvalContext, Mapping)> = (0..n_workers)
+            .map(|_| (EvalContext::new(layer, acc), Mapping::trivial(layer, acc.n_levels())))
+            .collect();
+
+        let mut r0 = 0u64;
+        while r0 < visit_blocks {
+            let r1 = (r0 + round_blocks).min(visit_blocks);
+            let round_n = r1 - r0;
+            let w_n = n_workers.min(round_n);
+            // Frozen at the round boundary: every worker prunes against the
+            // same incumbent whatever the thread count.
+            let incumbent = best.as_ref().map(|(s, _, _)| *s);
+            let results: Vec<ShardResult> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(w_n as usize);
+                for (w, slot) in workers.iter_mut().take(w_n as usize).enumerate() {
+                    let start = r0 + shard_start(round_n, w_n, w as u64);
+                    let end = r0 + shard_start(round_n, w_n, w as u64 + 1);
+                    handles.push(scope.spawn(move || {
+                        let (ctx, scratch) = slot;
+                        let mut out = ShardResult::default();
+                        for b in start..end {
+                            if !source.emit_block(b, scratch) {
+                                continue;
+                            }
+                            let first = b * block_len;
+                            let members = block_len.min(budget - first);
+                            if self.prune {
+                                if let Some(inc) = incumbent {
+                                    let (e_lb, l_lb) = ctx.objective_bound(scratch);
+                                    if self.objective.compose(e_lb, l_lb) > inc {
+                                        out.pruned += members;
+                                        continue;
+                                    }
+                                }
+                            }
+                            for i in 0..members {
+                                if i > 0 {
+                                    source.emit_member(b, i, scratch);
+                                }
+                                out.examined += 1;
+                                if scratch.validate(layer, acc).is_ok() {
+                                    out.scored += 1;
+                                    let score =
+                                        self.objective.score(ctx.evaluate_into(scratch));
+                                    merge_best(&mut out.best, score, first + i, scratch);
+                                }
+                            }
+                        }
+                        out
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().expect("search worker panicked")).collect()
+            });
+            for r in results {
+                examined += r.examined;
+                scored += r.scored;
+                pruned += r.pruned;
+                if let Some((s, i, m)) = r.best {
+                    merge_best(&mut best, s, i, &m);
+                }
+            }
+            r0 = r1;
+        }
+
+        best.map(|(score, index, mapping)| SearchBest {
+            mapping,
+            score,
+            index,
+            examined,
+            scored,
+            pruned,
+        })
+    }
+
+    /// Adaptive search: pull proposal batches from the source, score them
+    /// (in parallel when a batch is large enough), feed the scores back,
+    /// repeat until the source dries up or the budget is reached. Proposal
+    /// order defines the global candidate index, so results are
+    /// deterministic at every thread count here too.
+    pub fn search_batched<S: BatchSource>(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &mut S,
+    ) -> Option<SearchBest> {
+        let budget = self.budget.max(1);
+        let n_workers = self.threads.max(1);
+        let mut ctxs: Vec<EvalContext> =
+            (0..n_workers).map(|_| EvalContext::new(layer, acc)).collect();
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        let (mut examined, mut scored) = (0u64, 0u64);
+        let mut feedback: Vec<Option<f64>> = Vec::new();
+        let mut batch: Vec<Mapping> = Vec::new();
+        let mut index = 0u64;
+        while index < budget {
+            batch.clear();
+            source.next_batch(&feedback, &mut batch);
+            if batch.is_empty() {
+                break;
+            }
+            batch.truncate((budget - index) as usize);
+            feedback = self.score_candidates(layer, acc, &mut ctxs, &batch);
+            for (m, s) in batch.iter().zip(&feedback) {
+                examined += 1;
+                if let Some(score) = s {
+                    scored += 1;
+                    merge_best(&mut best, *score, index, m);
+                }
+                index += 1;
+            }
+        }
+        best.map(|(score, index, mapping)| SearchBest {
+            mapping,
+            score,
+            index,
+            examined,
+            scored,
+            pruned: 0,
+        })
+    }
+
+    /// Validity-filter and score a fixed candidate batch; `None` marks an
+    /// invalid candidate. Sharded across the context pool when the batch
+    /// amortizes the spawn cost (every candidate is scored independently,
+    /// so the result is identical at any thread count).
+    fn score_candidates(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        ctxs: &mut [EvalContext],
+        batch: &[Mapping],
+    ) -> Vec<Option<f64>> {
+        let score_one = |ctx: &mut EvalContext, m: &Mapping| {
+            if m.validate(layer, acc).is_ok() {
+                Some(self.objective.score(ctx.evaluate_into(m)))
+            } else {
+                None
+            }
+        };
+        let w_n = ctxs.len().min(batch.len()).max(1);
+        if w_n <= 1 || batch.len() < 8 {
+            let ctx = &mut ctxs[0];
+            return batch.iter().map(|m| score_one(ctx, m)).collect();
+        }
+        let mut out = vec![None; batch.len()];
+        std::thread::scope(|scope| {
+            let mut rest = &mut out[..];
+            let mut batch_rest = batch;
+            for (w, ctx) in ctxs.iter_mut().take(w_n).enumerate() {
+                let start = shard_start(batch.len() as u64, w_n as u64, w as u64) as usize;
+                let end = shard_start(batch.len() as u64, w_n as u64, w as u64 + 1) as usize;
+                let (chunk, tail) = std::mem::take(&mut rest).split_at_mut(end - start);
+                rest = tail;
+                let (bchunk, btail) = batch_rest.split_at(end - start);
+                batch_rest = btail;
+                scope.spawn(move || {
+                    for (slot, m) in chunk.iter_mut().zip(bchunk) {
+                        *slot = score_one(ctx, m);
+                    }
+                });
+            }
+        });
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn shard_bounds_partition_the_range() {
+        for total in [0u64, 1, 7, 100, 999] {
+            for workers in [1u64, 2, 3, 8] {
+                assert_eq!(shard_start(total, workers, 0), 0);
+                assert_eq!(shard_start(total, workers, workers), total);
+                for w in 0..workers {
+                    assert!(shard_start(total, workers, w) <= shard_start(total, workers, w + 1));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn indexed_search_is_thread_invariant_with_and_without_pruning() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        for prune in [false, true] {
+            let src = RandomStream::new(&layer, &acc, 11, 400);
+            let base = SearchDriver {
+                objective: Objective::Energy,
+                budget: 400,
+                threads: 1,
+                prune,
+            }
+            .search(&layer, &acc, &src, &[])
+            .unwrap();
+            for threads in [2usize, 4, 8] {
+                let par = SearchDriver {
+                    objective: Objective::Energy,
+                    budget: 400,
+                    threads,
+                    prune,
+                }
+                .search(&layer, &acc, &src, &[])
+                .unwrap();
+                assert_eq!(par.mapping, base.mapping, "prune={prune} threads={threads}");
+                assert_eq!(par.score.to_bits(), base.score.to_bits());
+                assert_eq!(par.index, base.index);
+                assert_eq!(par.examined, base.examined);
+                assert_eq!(par.pruned, base.pruned);
+            }
+        }
+    }
+
+    #[test]
+    fn pruning_never_changes_the_selected_candidate() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        for objective in Objective::ALL {
+            let src = RandomStream::new(&layer, &acc, 5, 300);
+            let full = SearchDriver { objective, budget: 300, threads: 1, prune: false }
+                .search(&layer, &acc, &src, &[])
+                .unwrap();
+            let pruned = SearchDriver { objective, budget: 300, threads: 1, prune: true }
+                .search(&layer, &acc, &src, &[])
+                .unwrap();
+            assert_eq!(pruned.mapping, full.mapping, "{objective}");
+            assert_eq!(pruned.score.to_bits(), full.score.to_bits());
+            assert_eq!(pruned.index, full.index);
+            assert!(pruned.examined <= full.examined);
+            assert_eq!(pruned.examined + pruned.pruned, full.examined);
+        }
+    }
+
+    #[test]
+    fn seeds_warm_start_but_lose_exact_ties_to_the_stream() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 11, 64);
+        let driver =
+            SearchDriver { objective: Objective::Energy, budget: 64, threads: 1, prune: false };
+        let plain = driver.search(&layer, &acc, &src, &[]).unwrap();
+        // Seeding with the stream's own winner cannot change the result —
+        // the tie resolves to the enumerated (lower-index) copy.
+        let seeded = driver.search(&layer, &acc, &src, &[plain.mapping.clone()]).unwrap();
+        assert_eq!(seeded.mapping, plain.mapping);
+        assert_eq!(seeded.index, plain.index);
+        assert_eq!(seeded.examined, plain.examined + 1);
+        // An invalid seed is ignored.
+        let mut broken = plain.mapping.clone();
+        broken.temporal[0][0] *= 7;
+        let s2 = driver.search(&layer, &acc, &src, &[broken]).unwrap();
+        assert_eq!(s2.examined, plain.examined);
+    }
+
+    #[test]
+    fn batched_search_tracks_best_and_budget() {
+        struct Fixed(Vec<Mapping>, usize);
+        impl BatchSource for Fixed {
+            fn next_batch(&mut self, _f: &[Option<f64>], out: &mut Vec<Mapping>) {
+                if self.1 == 0 {
+                    out.extend(self.0.iter().cloned());
+                    self.1 = 1;
+                }
+            }
+        }
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 3, 12);
+        let mut pool = Vec::new();
+        for b in 0..12 {
+            let mut m = Mapping::trivial(&layer, acc.n_levels());
+            src.emit_block(b, &mut m);
+            pool.push(m);
+        }
+        let driver =
+            SearchDriver { objective: Objective::Energy, budget: 3000, threads: 1, prune: false };
+        let out = driver.search_batched(&layer, &acc, &mut Fixed(pool.clone(), 0)).unwrap();
+        assert_eq!(out.examined, 12);
+        assert_eq!(out.scored, 12);
+        // Identical to the indexed search over the same candidates.
+        let indexed = driver.search(&layer, &acc, &src, &[]).unwrap();
+        assert_eq!(out.mapping, indexed.mapping);
+        assert_eq!(out.index, indexed.index);
+        // Budget truncation applies to proposals.
+        let tiny = SearchDriver { budget: 5, ..driver };
+        let cut = tiny.search_batched(&layer, &acc, &mut Fixed(pool, 0)).unwrap();
+        assert_eq!(cut.examined, 5);
+        // Parallel scoring matches (batch large enough to shard).
+        let par = SearchDriver { threads: 4, ..driver };
+        let mut big = Vec::new();
+        for b in 0..12 {
+            let mut m = Mapping::trivial(&layer, acc.n_levels());
+            src.emit_block(b, &mut m);
+            big.push(m);
+        }
+        let pout = par.search_batched(&layer, &acc, &mut Fixed(big, 0)).unwrap();
+        assert_eq!(pout.mapping, out.mapping);
+        assert_eq!(pout.score.to_bits(), out.score.to_bits());
+    }
+}

@@ -1,0 +1,104 @@
+//! The search objective: which scalar the engine minimizes.
+//!
+//! Historically every mapper hardcoded total energy. The engine threads a
+//! user-chosen [`Objective`] through candidate scoring, the best-merge
+//! tie-break, [`crate::mappers::MapOutcome`], the coordinator's cache key
+//! ([`crate::coordinator::LayerKey`]) and the `--objective` CLI flag, so
+//! distinct objectives are first-class and never share cached mappings.
+
+use crate::model::Evaluation;
+use std::fmt;
+
+/// The scalar a search minimizes over candidate mappings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Objective {
+    /// Total energy, pJ (the paper's Fig. 3 / Fig. 7 axis; the historical
+    /// hardcoded metric).
+    #[default]
+    Energy,
+    /// Roofline latency, cycles.
+    Delay,
+    /// Energy–delay product, pJ·cycles.
+    Edp,
+}
+
+impl Objective {
+    /// Spec strings [`Objective::parse`] accepts (CLI help text).
+    pub const SPEC: &str = "energy|delay|edp";
+
+    /// Every objective (report/bench sweeps).
+    pub const ALL: [Objective; 3] = [Objective::Energy, Objective::Delay, Objective::Edp];
+
+    /// Parse a CLI spec (case-insensitive; `latency` aliases `delay`).
+    pub fn parse(s: &str) -> Option<Objective> {
+        match s.to_ascii_lowercase().as_str() {
+            "energy" => Some(Objective::Energy),
+            "delay" | "latency" => Some(Objective::Delay),
+            "edp" => Some(Objective::Edp),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (cache keys, JSON, CLI echo).
+    pub fn name(self) -> &'static str {
+        match self {
+            Objective::Energy => "energy",
+            Objective::Delay => "delay",
+            Objective::Edp => "edp",
+        }
+    }
+
+    /// Compose the objective scalar from the two primitive metrics. Shared
+    /// by real scores ([`Objective::score`]) and the pruner's lower bounds:
+    /// composing component-wise lower bounds yields a lower bound of the
+    /// composed score because every composition is monotone in both
+    /// arguments (and IEEE rounding is monotone).
+    pub fn compose(self, energy_pj: f64, latency_cycles: u64) -> f64 {
+        match self {
+            Objective::Energy => energy_pj,
+            Objective::Delay => latency_cycles as f64,
+            Objective::Edp => energy_pj * latency_cycles as f64,
+        }
+    }
+
+    /// Score one evaluated candidate (lower is better).
+    pub fn score(self, e: &Evaluation) -> f64 {
+        self.compose(e.energy.total_pj(), e.latency_cycles)
+    }
+}
+
+impl fmt::Display for Objective {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::{LocalMapper, Mapper};
+    use crate::workload::zoo;
+
+    #[test]
+    fn parse_round_trips_and_aliases() {
+        for o in Objective::ALL {
+            assert_eq!(Objective::parse(o.name()), Some(o));
+            assert_eq!(o.to_string(), o.name());
+        }
+        assert_eq!(Objective::parse("LATENCY"), Some(Objective::Delay));
+        assert_eq!(Objective::parse("frob"), None);
+        assert_eq!(Objective::default(), Objective::Energy);
+    }
+
+    #[test]
+    fn scores_match_the_evaluation_fields() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let out = LocalMapper::new().run(&layer, &acc).unwrap();
+        let e = &out.evaluation;
+        assert_eq!(Objective::Energy.score(e), e.energy.total_pj());
+        assert_eq!(Objective::Delay.score(e), e.latency_cycles as f64);
+        assert_eq!(Objective::Edp.score(e), e.edp());
+    }
+}

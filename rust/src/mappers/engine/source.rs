@@ -1,0 +1,244 @@
+//! Candidate sources: where the engine's candidates come from.
+//!
+//! Two shapes cover all seven mappers:
+//!
+//! * [`CandidateSource`] — **indexed** generation: every candidate has a
+//!   stable global index `block × block_len + member`, computable
+//!   independently of every other candidate. Odometer enumeration
+//!   (exhaustive), the seeded random stream (random) and the
+//!   dataflow-constrained stream (RS/WS/OS search) are indexed, which is
+//!   what lets [`super::SearchDriver::search`] shard them across threads
+//!   with bit-identical results at any thread count, and lets the pruner
+//!   skip whole blocks.
+//! * [`BatchSource`] — **adaptive** generation: the next batch depends on
+//!   the scores of the previous one (SA neighbourhoods, GA population
+//!   steps, hill-climbing). [`super::SearchDriver::search_batched`] owns
+//!   budget truncation, validity filtering and best tracking; the source
+//!   owns only the proposal logic.
+
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::{sample_random, Constraints};
+use crate::util::factor::factorizations;
+use crate::util::rng::SplitMix64;
+use crate::workload::{Dim, Layer};
+
+/// An indexed candidate stream: candidate `block × block_len + member` is
+/// generated from its index alone (no sequential state), so the driver can
+/// shard blocks across worker threads deterministically.
+pub trait CandidateSource: Sync {
+    /// Blocks in the space (before the driver's budget truncation).
+    fn n_blocks(&self) -> u64;
+
+    /// Candidates per block. All members of one block must share the
+    /// block's **tiling** (only per-level permutations may differ) — the
+    /// contract that lets the pruner bound a whole block at once.
+    fn block_len(&self) -> u64 {
+        1
+    }
+
+    /// Materialize block `b`'s member 0 into `m`, overwriting it entirely.
+    /// Returns `false` when the block yields no candidate.
+    fn emit_block(&self, b: u64, m: &mut Mapping) -> bool;
+
+    /// Rewrite `m` (currently holding some member of block `b`) into
+    /// member `i ≥ 1`. Must not change the tiling.
+    fn emit_member(&self, b: u64, i: u64, m: &mut Mapping) {
+        let _ = (b, i, m);
+    }
+}
+
+/// An adaptive candidate stream: proposals depend on earlier scores.
+pub trait BatchSource {
+    /// Fill `out` with the next proposals given `feedback[i]` = the
+    /// objective score of the previous batch's candidate `i` (`None` when
+    /// it failed validation). Leave `out` empty to end the search. The
+    /// first call receives empty feedback.
+    fn next_batch(&mut self, feedback: &[Option<f64>], out: &mut Vec<Mapping>);
+}
+
+/// Mix a stream seed with a candidate index into an independent PRNG seed
+/// (SplitMix64 is explicitly designed for this kind of seed splitting).
+pub fn candidate_seed(seed: u64, index: u64) -> u64 {
+    seed ^ index.wrapping_add(1).wrapping_mul(0x9E37_79B9_7F4A_7C15)
+}
+
+/// The exhaustive odometer over per-dim ordered factorizations, optionally
+/// fanned out into the 7 rotated per-level permutations per slot (the
+/// enumeration previously private to `ExhaustiveMapper`).
+#[derive(Debug)]
+pub struct OdometerSource {
+    /// `per_dim[d]` = ordered splits of dim `d`'s bound across
+    /// `[sx, sy, t0, .., t_top]`.
+    per_dim: Vec<Vec<Vec<u64>>>,
+    n_levels: usize,
+    perms: u64,
+}
+
+impl OdometerSource {
+    /// Build the odometer for one (layer, accelerator) pair. `permute`
+    /// adds the 7-rotation permutation fan-out per slot.
+    pub fn new(layer: &Layer, acc: &Accelerator, permute: bool) -> Self {
+        let n_levels = acc.n_levels();
+        let slots = n_levels + 2;
+        let per_dim: Vec<Vec<Vec<u64>>> =
+            Dim::ALL.iter().map(|&d| factorizations(layer.bound(d), slots)).collect();
+        Self { per_dim, n_levels, perms: if permute { 7 } else { 1 } }
+    }
+
+    /// Decode a linear odometer position into per-dim split indices. Dim 0
+    /// is the least-significant digit (the serial odometer's carry order).
+    fn odometer_at(&self, mut linear: u64) -> [usize; 7] {
+        let mut idx = [0usize; 7];
+        for (d, splits) in self.per_dim.iter().enumerate() {
+            let len = splits.len() as u64;
+            idx[d] = (linear % len) as usize;
+            linear /= len;
+        }
+        idx
+    }
+}
+
+impl CandidateSource for OdometerSource {
+    fn n_blocks(&self) -> u64 {
+        let total: u128 = self.per_dim.iter().map(|v| v.len() as u128).product();
+        total.min(u64::MAX as u128) as u64
+    }
+
+    fn block_len(&self) -> u64 {
+        self.perms
+    }
+
+    fn emit_block(&self, b: u64, m: &mut Mapping) -> bool {
+        let idx = self.odometer_at(b);
+        for d in 0..7 {
+            let split = &self.per_dim[d][idx[d]];
+            m.spatial_x[d] = split[0];
+            m.spatial_y[d] = split[1];
+            for l in 0..self.n_levels {
+                m.temporal[l][d] = split[2 + l];
+            }
+        }
+        for p in m.permutation.iter_mut() {
+            *p = Dim::ALL;
+        }
+        true
+    }
+
+    fn emit_member(&self, _b: u64, i: u64, m: &mut Mapping) {
+        // Member `i` is the canonical permutation rotated left `i` times at
+        // every level — written from scratch so members need not be emitted
+        // in order.
+        let mut p = Dim::ALL;
+        p.rotate_left((i % 7) as usize);
+        for perm in m.permutation.iter_mut() {
+            *perm = p;
+        }
+    }
+}
+
+/// The seeded random stream (best-of-N sampling), optionally imprinted
+/// with dataflow [`Constraints`] (the RS/WS/OS searches). Candidate `i`
+/// draws from its own [`candidate_seed`]-derived PRNG, so the stream is a
+/// pure function of `(seed, i)` — shardable, and a budget extension only
+/// appends candidates (prefix property).
+#[derive(Debug)]
+pub struct RandomStream<'a> {
+    layer: &'a Layer,
+    acc: &'a Accelerator,
+    seed: u64,
+    samples: u64,
+    constraints: Option<Constraints>,
+}
+
+impl<'a> RandomStream<'a> {
+    /// Unconstrained stream of `samples` random candidates.
+    pub fn new(layer: &'a Layer, acc: &'a Accelerator, seed: u64, samples: u64) -> Self {
+        Self { layer, acc, seed, samples, constraints: None }
+    }
+
+    /// Builder: imprint every draw with dataflow constraints.
+    pub fn constrained(mut self, constraints: Constraints) -> Self {
+        self.constraints = Some(constraints);
+        self
+    }
+}
+
+impl CandidateSource for RandomStream<'_> {
+    fn n_blocks(&self) -> u64 {
+        self.samples
+    }
+
+    fn emit_block(&self, b: u64, m: &mut Mapping) -> bool {
+        let mut rng = SplitMix64::new(candidate_seed(self.seed, b));
+        *m = sample_random(self.layer, self.acc, &mut rng);
+        if let Some(cons) = &self.constraints {
+            cons.imprint(self.layer, self.acc, m, &mut rng);
+        }
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mapspace::Dataflow;
+    use crate::workload::zoo;
+
+    #[test]
+    fn odometer_blocks_cover_tilings_and_rotations() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = OdometerSource::new(&layer, &acc, true);
+        assert_eq!(src.block_len(), 7);
+        assert!(src.n_blocks() > 1_000_000);
+        let mut m = Mapping::trivial(&layer, acc.n_levels());
+        assert!(src.emit_block(0, &mut m));
+        // Block 0 is the all-at-DRAM split with canonical permutations.
+        assert_eq!(m.temporal[acc.n_levels() - 1], layer.bounds());
+        assert_eq!(m.permutation[0], Dim::ALL);
+        // Member emission only rotates permutations, never the tiling.
+        let tiling = (m.temporal.clone(), m.spatial_x, m.spatial_y);
+        src.emit_member(0, 3, &mut m);
+        assert_eq!((m.temporal.clone(), m.spatial_x, m.spatial_y), tiling);
+        let mut expect = Dim::ALL;
+        expect.rotate_left(3);
+        assert_eq!(m.permutation[1], expect);
+    }
+
+    #[test]
+    fn random_stream_is_a_pure_function_of_the_index() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 42, 16);
+        let mut a = Mapping::trivial(&layer, acc.n_levels());
+        let mut b = Mapping::trivial(&layer, acc.n_levels());
+        // Same index twice → identical candidate, regardless of call order.
+        assert!(src.emit_block(7, &mut a));
+        assert!(src.emit_block(3, &mut b));
+        assert!(src.emit_block(7, &mut b));
+        assert_eq!(a, b);
+        // Different indices → (virtually always) different candidates.
+        src.emit_block(8, &mut b);
+        assert_ne!(a, b);
+        a.validate(&layer, &acc).unwrap();
+    }
+
+    #[test]
+    fn constrained_stream_imprints_the_dataflow() {
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[8].clone();
+        let df = Dataflow::WeightStationary;
+        let src = RandomStream::new(&layer, &acc, 1, 64).constrained(df.constraints());
+        let mut m = Mapping::trivial(&layer, acc.n_levels());
+        let mut admitted = 0;
+        for b in 0..64 {
+            src.emit_block(b, &mut m);
+            if m.validate(&layer, &acc).is_ok() && df.constraints().admit(&layer, &acc, &m) {
+                admitted += 1;
+            }
+        }
+        assert!(admitted > 32, "only {admitted}/64 draws admitted");
+    }
+}

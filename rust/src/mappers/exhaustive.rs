@@ -3,37 +3,39 @@
 //! Serves as the test oracle: on layers where full enumeration is
 //! feasible, no other mapper may beat it.
 //!
-//! # Parallel enumeration
+//! The enumeration itself is the engine's [`OdometerSource`]: per-dim
+//! ordered splits, optionally fanned out into 7 rotated per-level
+//! permutations per slot, every candidate carrying a stable global index.
+//! The shared [`SearchDriver`] shards the (budget-truncated) block range
+//! across scoped worker threads with a deterministic best-merge — lowest
+//! objective score, exact tie broken by the lowest global index — so the
+//! result is identical for every thread count (pinned by
+//! `prop_parallel_exhaustive_matches_single_thread`).
 //!
-//! The factorization space is an odometer over per-dim ordered splits;
-//! each odometer slot optionally fans out into 7 rotated per-level
-//! permutations. Every candidate therefore has a stable **global index**
-//! `slot × perms + rot`, independent of how the work is divided. The
-//! mapper partitions the (budget-truncated) slot range into contiguous
-//! shards, one per worker thread ([`std::thread::scope`]); each worker
-//! enumerates its shard with a reusable candidate `Mapping` (rotations
-//! applied in place and reset per slot — no per-candidate clone) and a
-//! per-worker [`EvalContext`], tracking its best `(energy, global index,
-//! mapping)`.
+//! # Pruning
 //!
-//! The merge is deterministic: lowest energy wins, exact-tie broken by the
-//! lowest global candidate index. That is precisely the order in which the
-//! single-threaded loop would have kept candidates (strict `<` keeps the
-//! earliest minimum), so the result is identical for every thread count —
-//! pinned by `prop_parallel_exhaustive_matches_single_thread` in
-//! `rust/tests/property.rs`.
+//! By default the search **warm-starts** from the LOCAL mapping (scored
+//! with a post-stream index, so exact ties still go to the enumerated
+//! candidate) and lets the driver's bound-based pruner skip whole
+//! permutation blocks whose [`crate::model::EvalContext::objective_bound`]
+//! already exceeds the incumbent. Pruning never changes the selected
+//! mapping, its evaluation or its tie-break index — it only cuts
+//! evaluations (pinned by `prop_pruned_exhaustive_is_bit_identical` in
+//! `rust/tests/property.rs`). [`ExhaustiveMapper::without_pruning`] and
+//! [`ExhaustiveMapper::without_warm_start`] restore the raw enumeration
+//! (the perf harness uses it to measure fixed-work thread scaling).
 
-use super::{MapError, Mapper};
+use super::engine::{Objective, OdometerSource, SearchDriver};
+use super::{LocalMapper, MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
-use crate::model::EvalContext;
-use crate::util::factor::factorizations;
-use crate::workload::{ConvLayer, Dim};
+use crate::util::factor::count_factorizations;
+use crate::workload::{Dim, Layer};
 use std::cell::Cell;
 
 /// Deterministic enumeration of the factorization space (canonical
-/// permutations; optionally a rotation set) with best-energy selection,
-/// sharded across worker threads.
+/// permutations; optionally a rotation set) with best-objective selection,
+/// sharded across worker threads and bound-pruned by default.
 #[derive(Debug, Clone)]
 pub struct ExhaustiveMapper {
     /// Stop after this many candidates (the space explodes quickly).
@@ -41,15 +43,43 @@ pub struct ExhaustiveMapper {
     /// Also try rotated per-level permutations (×7 candidates).
     pub permute: bool,
     /// Worker threads the odometer space is sharded across (≥ 1). The
-    /// result is identical for every value (deterministic merge).
+    /// result — and every evaluation count — is identical for every value.
     pub threads: usize,
+    /// The objective being minimized.
+    pub objective: Objective,
+    /// Bound-based block pruning (on by default; never changes the
+    /// selected mapping).
+    pub prune: bool,
+    /// Warm-start the incumbent with the LOCAL mapping (on by default;
+    /// candidate set = LOCAL seed ∪ truncated enumeration either way, so
+    /// pruned and unpruned runs agree).
+    pub warm_start: bool,
     evaluated: Cell<u64>,
+    pruned: Cell<u64>,
 }
 
 impl ExhaustiveMapper {
     /// Enumerator truncated at `max_candidates` evaluations.
     pub fn new(max_candidates: u64) -> Self {
-        Self { max_candidates, permute: false, threads: 1, evaluated: Cell::new(0) }
+        Self {
+            max_candidates,
+            permute: false,
+            threads: 1,
+            objective: Objective::Energy,
+            prune: true,
+            warm_start: true,
+            evaluated: Cell::new(0),
+            pruned: Cell::new(0),
+        }
+    }
+
+    /// Enumerator configured from shared engine params.
+    pub fn from_params(params: &super::SearchParams) -> Self {
+        let mut e = Self::new(params.budget);
+        e.threads = params.threads.max(1);
+        e.objective = params.objective;
+        e.prune = params.prune;
+        e
     }
 
     /// Builder: also enumerate the rotation set of per-level permutations.
@@ -64,35 +94,38 @@ impl ExhaustiveMapper {
         self
     }
 
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Builder: disable bound-based pruning (every in-budget candidate is
+    /// materialized and checked — the historical accounting).
+    pub fn without_pruning(mut self) -> Self {
+        self.prune = false;
+        self
+    }
+
+    /// Builder: drop the LOCAL warm-start seed (pure enumeration; pruning
+    /// then only engages once the enumerated incumbent exists).
+    pub fn without_warm_start(mut self) -> Self {
+        self.warm_start = false;
+        self
+    }
+
+    /// Candidates skipped by the pruner on the last `map` call.
+    pub fn pruned(&self) -> u64 {
+        self.pruned.get()
+    }
+
     /// Size of the factorization space this would enumerate.
-    pub fn space_size(layer: &ConvLayer, acc: &Accelerator) -> u64 {
+    pub fn space_size(layer: &Layer, acc: &Accelerator) -> u64 {
         Dim::ALL
             .iter()
-            .map(|&d| {
-                crate::util::factor::count_factorizations(layer.bound(d), acc.n_levels() + 2)
-            })
+            .map(|&d| count_factorizations(layer.bound(d), acc.n_levels() + 2))
             .product()
     }
-}
-
-/// Decode a linear odometer position into per-dim indices. Dim 0 is the
-/// least-significant digit, matching the serial odometer's carry order.
-fn odometer_at(mut linear: u64, per_dim: &[Vec<Vec<u64>>]) -> [usize; 7] {
-    let mut idx = [0usize; 7];
-    for d in 0..7 {
-        let len = per_dim[d].len() as u64;
-        idx[d] = (linear % len) as usize;
-        linear /= len;
-    }
-    idx
-}
-
-/// Start of shard `w` when `total` slots are split across `workers`
-/// contiguous shards (shard `w` covers `[start(w), start(w + 1))`).
-fn shard_start(total: u64, workers: u64, w: u64) -> u64 {
-    let base = total / workers;
-    let rem = total % workers;
-    w * base + w.min(rem)
 }
 
 impl Mapper for ExhaustiveMapper {
@@ -100,107 +133,40 @@ impl Mapper for ExhaustiveMapper {
         "exhaustive".to_string()
     }
 
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+
     fn evaluations(&self) -> u64 {
         self.evaluated.get()
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let n_levels = acc.n_levels();
-        let slots = n_levels + 2; // spatial X, spatial Y, temporal levels
-        // Per-dim ordered factorizations across slots:
-        // [sx, sy, t0, t1, ..., t_top].
-        let per_dim: Vec<Vec<Vec<u64>>> =
-            Dim::ALL.iter().map(|&d| factorizations(layer.bound(d), slots)).collect();
-
-        let perms: u64 = if self.permute { 7 } else { 1 };
-        // Budget-truncated slot range: candidate `slot × perms + rot` is
-        // evaluated iff its global index is below the budget, so only the
-        // first ceil(budget / perms) odometer slots can contribute. (A zero
-        // budget still evaluates one candidate, like the serial loop did.)
-        let budget = self.max_candidates.max(1);
-        let total_slots: u128 = per_dim.iter().map(|v| v.len() as u128).product();
-        let slots_needed = budget.div_ceil(perms);
-        let visit_slots: u64 =
-            if total_slots < slots_needed as u128 { total_slots as u64 } else { slots_needed };
-
-        let n_workers = self.threads.max(1).min(visit_slots.max(1) as usize) as u64;
-        let mut evaluated_total = 0u64;
-        let mut best: Option<(f64, u64, Mapping)> = None;
-        std::thread::scope(|scope| {
-            let mut handles = Vec::with_capacity(n_workers as usize);
-            for w in 0..n_workers {
-                let per_dim = &per_dim;
-                let start = shard_start(visit_slots, n_workers, w);
-                let end = shard_start(visit_slots, n_workers, w + 1);
-                handles.push(scope.spawn(move || {
-                    let mut ctx = EvalContext::new(layer, acc);
-                    // One reusable candidate per worker; rotations mutate it
-                    // in place (no per-rotation clone — the old inner loop
-                    // cloned two Vecs per candidate).
-                    let mut m = Mapping {
-                        temporal: vec![[1u64; 7]; n_levels],
-                        permutation: vec![Dim::ALL; n_levels],
-                        spatial_x: [1; 7],
-                        spatial_y: [1; 7],
-                    };
-                    let mut shard_best: Option<(f64, u64, Mapping)> = None;
-                    let mut evaluated = 0u64;
-                    for slot in start..end {
-                        let idx = odometer_at(slot, per_dim);
-                        for d in 0..7 {
-                            let split = &per_dim[d][idx[d]];
-                            m.spatial_x[d] = split[0];
-                            m.spatial_y[d] = split[1];
-                            for l in 0..n_levels {
-                                m.temporal[l][d] = split[2 + l];
-                            }
-                        }
-                        for p in m.permutation.iter_mut() {
-                            *p = Dim::ALL;
-                        }
-                        for rot in 0..perms {
-                            let cand_index = slot * perms + rot;
-                            if cand_index >= budget {
-                                break;
-                            }
-                            if rot > 0 {
-                                for p in m.permutation.iter_mut() {
-                                    p.rotate_left(1);
-                                }
-                            }
-                            if m.validate(layer, acc).is_ok() {
-                                let pj = ctx.energy_pj(&m);
-                                let improves =
-                                    shard_best.as_ref().map(|(b, _, _)| pj < *b).unwrap_or(true);
-                                if improves {
-                                    shard_best = Some((pj, cand_index, m.clone()));
-                                }
-                            }
-                            evaluated += 1;
-                        }
-                    }
-                    (evaluated, shard_best)
-                }));
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let source = OdometerSource::new(layer, acc, self.permute);
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.max_candidates,
+            threads: self.threads,
+            prune: self.prune,
+        };
+        let seeds: Vec<Mapping> = if self.warm_start {
+            LocalMapper::new().map(layer, acc).into_iter().collect()
+        } else {
+            Vec::new()
+        };
+        let best = driver.search(layer, acc, &source, &seeds);
+        match best {
+            Some(b) => {
+                self.evaluated.set(b.examined);
+                self.pruned.set(b.pruned);
+                Ok(b.mapping)
             }
-            for h in handles {
-                let (ev, shard_best) = h.join().expect("exhaustive shard worker panicked");
-                evaluated_total += ev;
-                if let Some((pj, ci, m)) = shard_best {
-                    let better = match &best {
-                        None => true,
-                        // Deterministic merge: lowest energy; exact tie →
-                        // lowest global candidate index (serial order).
-                        Some((bpj, bci, _)) => pj < *bpj || (pj == *bpj && ci < *bci),
-                    };
-                    if better {
-                        best = Some((pj, ci, m));
-                    }
-                }
+            None => {
+                self.evaluated.set(0);
+                self.pruned.set(0);
+                Err(MapError::NoValidMapping("exhaustive found no valid mapping".into()))
             }
-        });
-        self.evaluated.set(evaluated_total);
-        best.map(|(_, _, m)| m)
-            .ok_or_else(|| MapError::NoValidMapping("exhaustive found no valid mapping".into()))
+        }
     }
 }
 
@@ -209,7 +175,6 @@ mod tests {
     use super::*;
     use crate::arch::presets;
     use crate::arch::{Accelerator, Noc, PeArray, StorageLevel, Style};
-    use crate::mappers::LocalMapper;
 
     fn small_acc() -> Accelerator {
         Accelerator {
@@ -228,15 +193,15 @@ mod tests {
         }
     }
 
-    fn small_layer() -> ConvLayer {
-        ConvLayer::new("small", 8, 4, 3, 3, 8, 8)
+    fn small_layer() -> Layer {
+        Layer::new("small", 8, 4, 3, 3, 8, 8)
     }
 
     #[test]
     fn enumerates_and_finds_valid_best() {
         let acc = small_acc();
         let layer = small_layer();
-        let ex = ExhaustiveMapper::new(200_000);
+        let ex = ExhaustiveMapper::new(200_000).without_pruning().without_warm_start();
         let out = ex.run(&layer, &acc).unwrap();
         out.mapping.validate(&layer, &acc).unwrap();
         assert!(out.evaluations > 1000);
@@ -245,7 +210,7 @@ mod tests {
     #[test]
     fn oracle_no_mapper_beats_full_enumeration() {
         let acc = small_acc();
-        let layer = ConvLayer::new("tiny", 4, 2, 1, 1, 4, 4);
+        let layer = Layer::new("tiny", 4, 2, 1, 1, 4, 4);
         let size = ExhaustiveMapper::space_size(&layer, &acc);
         assert!(size < 2_000_000, "space too big for oracle test: {size}");
         let ex = ExhaustiveMapper::new(size).with_permutations();
@@ -261,12 +226,14 @@ mod tests {
 
     #[test]
     fn sharded_enumeration_matches_single_thread() {
-        // Same best mapping, same best energy bits, same evaluation count
-        // at every thread count — the deterministic-merge contract.
+        // Same best mapping, same best score bits, same evaluation and
+        // prune counts at every thread count — the deterministic-merge
+        // contract, with pruning and warm-start at their defaults.
         let acc = small_acc();
-        let layer = ConvLayer::new("tiny", 4, 2, 1, 1, 4, 4);
+        let layer = Layer::new("tiny", 4, 2, 1, 1, 4, 4);
         let serial = ExhaustiveMapper::new(40_000).with_permutations();
         let base = serial.run(&layer, &acc).unwrap();
+        let base_pruned = serial.pruned();
         for threads in [2usize, 4, 8] {
             let par = ExhaustiveMapper::new(40_000).with_permutations().with_threads(threads);
             let out = par.run(&layer, &acc).unwrap();
@@ -277,22 +244,47 @@ mod tests {
                 "threads={threads}"
             );
             assert_eq!(out.evaluations, base.evaluations, "threads={threads}");
+            assert_eq!(par.pruned(), base_pruned, "threads={threads}");
         }
     }
 
     #[test]
     fn budget_truncation_is_thread_invariant() {
-        // A budget that cuts mid-rotation must still evaluate exactly the
-        // same candidate set (global indices below the budget).
+        // Without pruning, a budget that cuts mid-rotation evaluates
+        // exactly the budgeted candidate set (plus the warm-start seed);
+        // with pruning, the pruned + examined split is thread-invariant
+        // and accounts for every in-budget candidate.
         let acc = small_acc();
         let layer = small_layer();
-        let a = ExhaustiveMapper::new(999).with_permutations();
-        let base = a.run(&layer, &acc).unwrap();
-        assert_eq!(base.evaluations, 999);
-        let b = ExhaustiveMapper::new(999).with_permutations().with_threads(3);
-        let out = b.run(&layer, &acc).unwrap();
-        assert_eq!(out.evaluations, 999);
+        let raw = ExhaustiveMapper::new(999).with_permutations().without_pruning();
+        let base = raw.run(&layer, &acc).unwrap();
+        assert_eq!(base.evaluations, 999 + 1); // + LOCAL warm-start seed
+        let sharded =
+            ExhaustiveMapper::new(999).with_permutations().without_pruning().with_threads(3);
+        let out = sharded.run(&layer, &acc).unwrap();
+        assert_eq!(out.evaluations, base.evaluations);
         assert_eq!(out.mapping, base.mapping);
+        let pruned = ExhaustiveMapper::new(999).with_permutations().with_threads(3);
+        let pout = pruned.run(&layer, &acc).unwrap();
+        assert_eq!(pout.mapping, base.mapping);
+        assert_eq!(pout.evaluations + pruned.pruned(), base.evaluations);
+    }
+
+    #[test]
+    fn pruning_preserves_the_argmin_and_cuts_work() {
+        let acc = small_acc();
+        let layer = small_layer();
+        let full = ExhaustiveMapper::new(50_000).with_permutations().without_pruning();
+        let base = full.run(&layer, &acc).unwrap();
+        let fast = ExhaustiveMapper::new(50_000).with_permutations();
+        let out = fast.run(&layer, &acc).unwrap();
+        assert_eq!(out.mapping, base.mapping);
+        assert_eq!(
+            out.evaluation.energy.total_pj().to_bits(),
+            base.evaluation.energy.total_pj().to_bits()
+        );
+        assert!(out.evaluations <= base.evaluations);
+        assert_eq!(out.evaluations + fast.pruned(), base.evaluations);
     }
 
     #[test]
@@ -300,8 +292,8 @@ mod tests {
         // An op's pinned dims carry exactly one divisor, so the odometer
         // space of a matmul is a strict subset of the same-size conv's.
         let acc = small_acc();
-        let mm = ConvLayer::matmul("mm", 8, 4, 8);
-        let conv = ConvLayer::new("c", 8, 4, 3, 3, 8, 8);
+        let mm = Layer::matmul("mm", 8, 4, 8);
+        let conv = Layer::new("c", 8, 4, 3, 3, 8, 8);
         let mm_size = ExhaustiveMapper::space_size(&mm, &acc);
         assert!(mm_size < ExhaustiveMapper::space_size(&conv, &acc));
         // Exhaustive enumeration of the projected space stays feasible and

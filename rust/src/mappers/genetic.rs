@@ -2,14 +2,23 @@
 //! paper positions LOCAL against (§1, §7): good energy, but many
 //! evaluations and long mapping time. Used by the ablation bench to place
 //! LOCAL on the quality-vs-time curve.
+//!
+//! The population step is an engine [`BatchSource`]: each generation's
+//! children are bred sequentially (selection needs the previous
+//! generation's scores), handed to the shared [`SearchDriver`] as one
+//! batch, and scored through the zero-allocation context — in parallel
+//! across the driver's worker threads when configured, with identical
+//! results at every thread count (each candidate is scored
+//! independently).
 
+use super::engine::source::candidate_seed;
+use super::engine::{BatchSource, Objective, SearchDriver};
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
-use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
 use std::cell::Cell;
 
 /// Genetic-algorithm mapper: population of mappings, tournament selection,
@@ -24,6 +33,11 @@ pub struct GeneticMapper {
     pub mutation_rate: f64,
     /// PRNG seed (deterministic across runs).
     pub seed: u64,
+    /// The objective used as fitness.
+    pub objective: Objective,
+    /// Worker threads for scoring each generation (identical results at
+    /// every value).
+    pub threads: usize,
     evaluated: Cell<u64>,
 }
 
@@ -31,17 +45,35 @@ impl GeneticMapper {
     /// GA mapper with the given population, generations and seed.
     pub fn new(population: usize, generations: usize, seed: u64) -> Self {
         assert!(population >= 4);
-        Self { population, generations, mutation_rate: 0.3, seed, evaluated: Cell::new(0) }
+        Self {
+            population,
+            generations,
+            mutation_rate: 0.3,
+            seed,
+            objective: Objective::Energy,
+            threads: 1,
+            evaluated: Cell::new(0),
+        }
     }
-}
 
-fn fitness(ctx: &mut EvalContext, m: &Mapping) -> f64 {
-    ctx.energy_pj(m)
+    /// Builder: apply the shared engine params (objective + threads; the
+    /// population/generation shape stays as constructed).
+    pub fn with_params(mut self, params: &super::SearchParams) -> Self {
+        self.objective = params.objective;
+        self.threads = params.threads.max(1);
+        self
+    }
+
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
 }
 
 /// Mutation: move one prime factor of one dim between two random slots
 /// (levels / spatial), or swap two permutation entries at one level.
-fn mutate(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
+fn mutate(layer: &Layer, acc: &Accelerator, m: &mut Mapping, rng: &mut SplitMix64) {
     let n_levels = m.n_levels();
     match rng.next_below(3) {
         0 => {
@@ -133,56 +165,126 @@ fn smallest_prime(n: u64) -> u64 {
     n
 }
 
+/// The GA population step as an engine source: batch `0` is the seed
+/// population (each member drawn like the random stream's same-index
+/// candidate, so the GA provably contains the single-draw baseline);
+/// every later batch is one generation of pre-validated children.
+struct GaPopulation<'a> {
+    layer: &'a Layer,
+    acc: &'a Accelerator,
+    rng: SplitMix64,
+    seed: u64,
+    population: usize,
+    generations: usize,
+    mutation_rate: f64,
+    /// Scored survivors: elite carried over + last batch, sorted by score.
+    pop: Vec<(f64, Mapping)>,
+    /// Elite carried across the pending batch (already scored).
+    elite: Vec<(f64, Mapping)>,
+    /// The batch awaiting feedback.
+    pending: Vec<Mapping>,
+    generations_done: usize,
+}
+
+impl GaPopulation<'_> {
+    fn fold_feedback(&mut self, feedback: &[Option<f64>]) {
+        let mut next = std::mem::take(&mut self.elite);
+        for (m, s) in self.pending.drain(..).zip(feedback) {
+            if let Some(score) = s {
+                next.push((*score, m));
+            }
+        }
+        next.sort_by(|a, b| a.0.total_cmp(&b.0));
+        self.pop = next;
+    }
+}
+
+impl BatchSource for GaPopulation<'_> {
+    fn next_batch(&mut self, feedback: &[Option<f64>], out: &mut Vec<Mapping>) {
+        if self.pop.is_empty() && self.pending.is_empty() {
+            // Seed population.
+            for i in 0..self.population {
+                let mut rng = SplitMix64::new(candidate_seed(self.seed, i as u64));
+                out.push(sample_random(self.layer, self.acc, &mut rng));
+            }
+            self.pending = out.clone();
+            return;
+        }
+        self.fold_feedback(feedback);
+        if self.generations_done >= self.generations || self.pop.is_empty() {
+            return;
+        }
+        self.generations_done += 1;
+        let elite_n = self.population / 4;
+        self.elite = self.pop[..elite_n.min(self.pop.len())].to_vec();
+        while out.len() < self.population - self.elite.len() {
+            // Tournament selection from the current population.
+            let pick = |rng: &mut SplitMix64, pop: &[(f64, Mapping)]| {
+                let i = rng.index(pop.len());
+                let j = rng.index(pop.len());
+                if pop[i].0 < pop[j].0 {
+                    i
+                } else {
+                    j
+                }
+            };
+            let pa = pick(&mut self.rng, &self.pop);
+            let pb = pick(&mut self.rng, &self.pop);
+            let mut child = crossover(&self.pop[pa].1, &self.pop[pb].1, &mut self.rng);
+            if self.rng.next_f64() < self.mutation_rate {
+                mutate(self.layer, self.acc, &mut child, &mut self.rng);
+            }
+            repair(self.layer, self.acc, &mut child);
+            if child.validate(self.layer, self.acc).is_ok() {
+                out.push(child);
+            }
+        }
+        self.pending = out.clone();
+    }
+}
+
 impl Mapper for GeneticMapper {
     fn name(&self) -> String {
         format!("GA(p{}g{})", self.population, self.generations)
+    }
+
+    fn objective(&self) -> Objective {
+        self.objective
     }
 
     fn evaluations(&self) -> u64 {
         self.evaluated.get()
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let mut rng = SplitMix64::new(self.seed);
-        let mut ctx = EvalContext::new(layer, acc);
-        let mut evaluated = 0u64;
-        // Initial population.
-        let mut pop: Vec<(f64, Mapping)> = (0..self.population)
-            .map(|_| {
-                let m = sample_random(layer, acc, &mut rng);
-                evaluated += 1;
-                (fitness(&mut ctx, &m), m)
-            })
-            .collect();
-        pop.sort_by(|a, b| a.0.total_cmp(&b.0));
-
-        for _gen in 0..self.generations {
-            let elite = self.population / 4;
-            let mut next: Vec<(f64, Mapping)> = pop[..elite].to_vec();
-            while next.len() < self.population {
-                // Tournament selection from the current population.
-                let pick = |rng: &mut SplitMix64| {
-                    let i = rng.index(pop.len());
-                    let j = rng.index(pop.len());
-                    if pop[i].0 < pop[j].0 { i } else { j }
-                };
-                let pa = pick(&mut rng);
-                let pb = pick(&mut rng);
-                let mut child = crossover(&pop[pa].1, &pop[pb].1, &mut rng);
-                if rng.next_f64() < self.mutation_rate {
-                    mutate(layer, acc, &mut child, &mut rng);
-                }
-                repair(layer, acc, &mut child);
-                if child.validate(layer, acc).is_ok() {
-                    evaluated += 1;
-                    next.push((fitness(&mut ctx, &child), child));
-                }
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let mut source = GaPopulation {
+            layer,
+            acc,
+            rng: SplitMix64::new(self.seed),
+            seed: self.seed,
+            population: self.population,
+            generations: self.generations,
+            mutation_rate: self.mutation_rate,
+            pop: Vec::new(),
+            elite: Vec::new(),
+            pending: Vec::new(),
+            generations_done: 0,
+        };
+        // The GA's budget is its population × generation shape; the driver
+        // still owns validity filtering, scoring and best tracking.
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: u64::MAX,
+            threads: self.threads,
+            prune: false,
+        };
+        match driver.search_batched(layer, acc, &mut source) {
+            Some(b) => {
+                self.evaluated.set(b.scored);
+                Ok(b.mapping)
             }
-            next.sort_by(|a, b| a.0.total_cmp(&b.0));
-            pop = next;
+            None => Err(MapError::NoValidMapping("GA produced no valid candidate".into())),
         }
-        self.evaluated.set(evaluated);
-        Ok(pop.remove(0).1)
     }
 }
 
@@ -210,6 +312,20 @@ mod tests {
         let ga = GeneticMapper::new(16, 10, 1).run(&layer, &acc).unwrap();
         let rnd = RandomMapper::new(1, 1).run(&layer, &acc).unwrap();
         assert!(ga.evaluation.energy.total_pj() <= rnd.evaluation.energy.total_pj());
+    }
+
+    #[test]
+    fn ga_is_thread_invariant() {
+        // Children are bred sequentially and scored independently, so the
+        // parallel-scored GA returns the identical mapping.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let base = GeneticMapper::new(16, 4, 7).map(&layer, &acc).unwrap();
+        for threads in [2usize, 8] {
+            let mut ga = GeneticMapper::new(16, 4, 7);
+            ga.threads = threads;
+            assert_eq!(ga.map(&layer, &acc).unwrap(), base, "threads={threads}");
+        }
     }
 
     #[test]

@@ -15,25 +15,79 @@
 //!    bounding constraint Eq. (18).
 //! 3. **Scheduling** (lines 17–22): per level, loops are permuted so
 //!    higher-range loops sit innermost (toward the cheaper memory);
-//!    reduction dims (C, R, S) win ties to keep partial sums local.
+//!    reduction dims (C, R, S) win ties to keep partial sums local. The
+//!    constant two-policy comparison runs through the shared
+//!    [`SearchDriver`] as a two-candidate [`CandidateSource`], so it ranks
+//!    by the configured [`Objective`] like every other mapper.
 //!
 //! Complexity: O(dims × levels × divisors) — a few microseconds; the
 //! whole point of the paper (Table 3).
 
+use super::engine::{CandidateSource, Objective, SearchDriver};
 use super::{MapError, Mapper};
 use crate::arch::{Accelerator, Style};
 use crate::mapping::{tensor_footprint, Mapping};
 use crate::util::factor::{divisors, factor_splits};
-use crate::workload::{ConvLayer, Dim, OpKind};
+use crate::workload::{Dim, Layer, OpKind};
 
 /// The LOCAL one-pass mapper.
-#[derive(Debug, Clone, Default)]
-pub struct LocalMapper;
+#[derive(Debug, Clone, Copy, Default)]
+pub struct LocalMapper {
+    /// The objective ranking the two schedule candidates.
+    pub objective: Objective,
+}
+
+/// The constant two-candidate schedule comparison, expressed as an engine
+/// source: one tiling, two per-level permutation policies (range-descending
+/// and reduction-first — DESIGN.md §4).
+#[derive(Debug)]
+struct ScheduleSource {
+    base: Mapping,
+    reduction_dims: &'static [Dim],
+}
+
+impl ScheduleSource {
+    fn policy(&self, reduction_first: bool, m: &mut Mapping) {
+        m.clone_from(&self.base);
+        for l in 0..m.n_levels() {
+            let mut dims = Dim::ALL;
+            let t = m.temporal[l];
+            dims.sort_by_key(|d| {
+                let f = t[d.idx()];
+                let reduction = self.reduction_dims.contains(d);
+                if reduction_first {
+                    (!reduction, std::cmp::Reverse(f), false)
+                } else {
+                    // Descending factor; reduction wins ties.
+                    (false, std::cmp::Reverse(f), !reduction)
+                }
+            });
+            m.permutation[l] = dims;
+        }
+    }
+}
+
+impl CandidateSource for ScheduleSource {
+    fn n_blocks(&self) -> u64 {
+        2
+    }
+
+    fn emit_block(&self, b: u64, m: &mut Mapping) -> bool {
+        self.policy(b == 1, m);
+        true
+    }
+}
 
 impl LocalMapper {
-    /// Construct the (stateless) LOCAL mapper.
+    /// Construct the (stateless) LOCAL mapper at the default objective.
     pub fn new() -> Self {
-        LocalMapper
+        LocalMapper::default()
+    }
+
+    /// Builder: rank the schedule comparison by `objective`.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
     }
 
     /// The style-dependent spatial dims (paper Fig. 5 / Fig. 4 lines 3–8):
@@ -54,7 +108,7 @@ impl LocalMapper {
     /// projection (a dead dim — bound pinned to 1 — would waste the whole
     /// array axis; e.g. matmul on an Eyeriss grid gets rows on X and the
     /// `C` reduction on Y instead of the degenerate `Q`/`S` pair).
-    pub fn spatial_dims_for(layer: &ConvLayer, style: Style) -> (Dim, Dim) {
+    pub fn spatial_dims_for(layer: &Layer, style: Style) -> (Dim, Dim) {
         let (dx, dy) = Self::spatial_dims(style);
         if matches!(layer.op, OpKind::Conv | OpKind::DepthwiseConv) {
             return (dx, dy);
@@ -85,13 +139,17 @@ impl Mapper for LocalMapper {
         "LOCAL".to_string()
     }
 
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+
     /// One construction pass + the constant two-candidate schedule
     /// comparison (DESIGN.md §4).
     fn evaluations(&self) -> u64 {
         2
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
         let n_levels = acc.n_levels();
         let top = n_levels - 1;
         let mut m = Mapping {
@@ -150,37 +208,20 @@ impl Mapper for LocalMapper {
         // level assignment ("higher range tensor to lower s_i") but leaves
         // the within-level loop order under-specified; we resolve it with
         // a constant-size comparison of the two natural policies (still
-        // O(1) — 2 model evaluations, DESIGN.md §4):
+        // O(1) — 2 model evaluations through the shared engine):
         //   A. range-descending innermost (big loops near cheap memory);
         //   B. the op's reduction dims innermost (partial sums stationary;
         //      C,R,S for conv, C for matmul, R,S for pooling).
-        let reduction_dims = layer.op.reduction_dims();
-        let mut ctx = crate::model::EvalContext::new(layer, acc);
-        let mut best: Option<(f64, Mapping)> = None;
-        for reduction_first in [false, true] {
-            let mut cand = m.clone();
-            for l in 0..n_levels {
-                let mut dims = Dim::ALL;
-                let t = cand.temporal[l];
-                dims.sort_by_key(|d| {
-                    let f = t[d.idx()];
-                    let reduction = reduction_dims.contains(d);
-                    if reduction_first {
-                        (!reduction, std::cmp::Reverse(f), false)
-                    } else {
-                        // Descending factor; reduction wins ties.
-                        (false, std::cmp::Reverse(f), !reduction)
-                    }
-                });
-                cand.permutation[l] = dims;
-            }
-            cand.validate(layer, acc).map_err(MapError::Invalid)?;
-            let pj = ctx.energy_pj(&cand);
-            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
-                best = Some((pj, cand));
-            }
-        }
-        Ok(best.expect("two candidates evaluated").1)
+        let source = ScheduleSource { base: m, reduction_dims: layer.op.reduction_dims() };
+        let driver =
+            SearchDriver { objective: self.objective, budget: 2, threads: 1, prune: false };
+        let best = driver.search(layer, acc, &source, &[]).ok_or_else(|| {
+            MapError::NoValidMapping(format!(
+                "LOCAL construction does not fit {} on {}",
+                layer.name, acc.name
+            ))
+        })?;
+        Ok(best.mapping)
     }
 }
 
@@ -276,6 +317,22 @@ mod tests {
     }
 
     #[test]
+    fn objective_changes_only_the_schedule_pick() {
+        // Every objective yields a valid mapping with the same tiling
+        // (phases 1–2 are objective-free; only the two-policy pick moves).
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let energy = LocalMapper::new().map(&layer, &acc).unwrap();
+        for o in Objective::ALL {
+            let m = LocalMapper::new().with_objective(o).map(&layer, &acc).unwrap();
+            m.validate(&layer, &acc).unwrap();
+            assert_eq!(m.temporal, energy.temporal, "{o}");
+            assert_eq!(m.spatial_x, energy.spatial_x, "{o}");
+            assert_eq!(m.spatial_y, energy.spatial_y, "{o}");
+        }
+    }
+
+    #[test]
     fn one_pass_beats_trivial_mapping_on_energy() {
         for acc in presets::all() {
             let layer = zoo::vgg16()[8].clone();
@@ -314,7 +371,7 @@ mod tests {
     fn conv_spatial_dims_unchanged_by_op_awareness() {
         // The conv path must keep the Fig. 5 assignment verbatim — even
         // for 1×1 convs whose S bound is dead (bit-identity requirement).
-        let one_by_one = ConvLayer::new("c1x1", 64, 32, 1, 1, 14, 14);
+        let one_by_one = Layer::new("c1x1", 64, 32, 1, 1, 14, 14);
         for style in [Style::NvdlaLike, Style::EyerissLike, Style::ShiDianNaoLike] {
             assert_eq!(
                 LocalMapper::spatial_dims_for(&one_by_one, style),
@@ -325,7 +382,7 @@ mod tests {
 
     #[test]
     fn matmul_spatial_dims_use_live_subset() {
-        let mm = ConvLayer::matmul("mm", 768, 768, 128);
+        let mm = Layer::matmul("mm", 768, 768, 128);
         // NVDLA keeps (C, M) — both live for matmul.
         assert_eq!(LocalMapper::spatial_dims_for(&mm, Style::NvdlaLike), (Dim::C, Dim::M));
         // Eyeriss substitutes the dead Q/S pair with rows × reduction.
@@ -334,10 +391,10 @@ mod tests {
         assert_eq!(LocalMapper::spatial_dims_for(&mm, Style::ShiDianNaoLike), (Dim::P, Dim::M));
         // The chosen pair never collides.
         for l in [
-            ConvLayer::matmul("mm1", 64, 1, 7),
-            ConvLayer::pooling("p", 64, 2, 14, 14),
-            ConvLayer::elementwise("e", 64, 14, 14),
-            ConvLayer::elementwise("tiny", 1, 1, 1),
+            Layer::matmul("mm1", 64, 1, 7),
+            Layer::pooling("p", 64, 2, 14, 14),
+            Layer::elementwise("e", 64, 14, 14),
+            Layer::elementwise("tiny", 1, 1, 1),
         ] {
             for style in [Style::NvdlaLike, Style::EyerissLike, Style::ShiDianNaoLike] {
                 let (x, y) = LocalMapper::spatial_dims_for(&l, style);
@@ -349,10 +406,10 @@ mod tests {
     #[test]
     fn maps_every_op_kind_on_every_preset() {
         let layers = [
-            ConvLayer::matmul("mm", 768, 768, 128),
-            ConvLayer::matmul("ffn", 3072, 768, 128),
-            ConvLayer::pooling("pool", 64, 2, 112, 112).with_stride(2),
-            ConvLayer::elementwise("add", 256, 28, 28),
+            Layer::matmul("mm", 768, 768, 128),
+            Layer::matmul("ffn", 3072, 768, 128),
+            Layer::pooling("pool", 64, 2, 112, 112).with_stride(2),
+            Layer::elementwise("add", 256, 28, 28),
         ];
         for acc in presets::all() {
             for layer in &layers {

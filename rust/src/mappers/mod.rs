@@ -3,8 +3,16 @@
 //! Table-3 RS/WS/OS columns), pure random sampling (Fig. 3), exhaustive
 //! enumeration (test oracle on small layers) and a GAMMA-style genetic
 //! search (related-work ablation, §7).
+//!
+//! All seven run on the shared [`engine`]: candidate generation is a
+//! [`engine::CandidateSource`] (indexed streams) or
+//! [`engine::BatchSource`] (adaptive proposals), and the
+//! [`engine::SearchDriver`] owns budget truncation, validity filtering,
+//! objective scoring, deterministic best-merge, thread sharding and
+//! bound-based pruning (DESIGN.md §11).
 
 pub mod annealing;
+pub mod engine;
 pub mod exhaustive;
 pub mod genetic;
 pub mod local;
@@ -13,6 +21,7 @@ pub mod refine;
 pub mod search;
 
 pub use annealing::AnnealingMapper;
+pub use engine::{Objective, SearchDriver, SearchParams};
 pub use exhaustive::ExhaustiveMapper;
 pub use genetic::GeneticMapper;
 pub use local::LocalMapper;
@@ -23,7 +32,7 @@ pub use search::ConstrainedSearch;
 use crate::arch::Accelerator;
 use crate::mapping::{Mapping, MappingError};
 use crate::model::{EvalContext, Evaluation};
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
 use std::fmt;
 use std::time::{Duration, Instant};
 
@@ -73,6 +82,10 @@ pub struct MapOutcome {
     pub evaluations: u64,
     /// Wall-clock search time.
     pub elapsed: Duration,
+    /// The objective the mapper minimized.
+    pub objective: Objective,
+    /// The chosen mapping's objective score (lower is better).
+    pub score: f64,
 }
 
 /// A mapping algorithm: layer × accelerator → mapping.
@@ -80,8 +93,14 @@ pub trait Mapper {
     /// Short display name ("LOCAL", "RS-search", ...).
     fn name(&self) -> String;
 
+    /// The objective this mapper instance minimizes (engine mappers carry
+    /// it as configuration; the default is the historical energy metric).
+    fn objective(&self) -> Objective {
+        Objective::Energy
+    }
+
     /// Construct the mapping only (no timing bookkeeping).
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError>;
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError>;
 
     /// Number of candidate evaluations `map` performs (reported in
     /// Table 3 next to wall-clock).
@@ -96,15 +115,24 @@ pub trait Mapper {
     /// exercises one evaluation path. For this single evaluation the
     /// context is built fresh (a one-time cost dwarfed by the `map()`
     /// search it follows); the zero-allocation payoff is inside the
-    /// mappers' candidate loops.
-    fn run(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<MapOutcome, MapError> {
+    /// engine's candidate loops.
+    fn run(&self, layer: &Layer, acc: &Accelerator) -> Result<MapOutcome, MapError> {
         let t0 = Instant::now();
         let mapping = self.map(layer, acc)?;
         let elapsed = t0.elapsed();
         mapping.validate(layer, acc)?;
         let mut ctx = EvalContext::new(layer, acc);
         let evaluation = ctx.evaluate_into(&mapping).clone();
-        Ok(MapOutcome { mapping, evaluation, evaluations: self.evaluations(), elapsed })
+        let objective = self.objective();
+        let score = objective.score(&evaluation);
+        Ok(MapOutcome {
+            mapping,
+            evaluation,
+            evaluations: self.evaluations(),
+            elapsed,
+            objective,
+            score,
+        })
     }
 }
 
@@ -125,7 +153,7 @@ pub enum AnyMapper {
     Annealing(AnnealingMapper),
     /// LOCAL seed + bounded hill-climbing refinement.
     Refine(LocalRefined),
-    /// Sharded-parallel exhaustive enumeration (budget-truncated).
+    /// Sharded-parallel exhaustive enumeration (budget-truncated, pruned).
     Exhaustive(ExhaustiveMapper),
     /// Dataflow-constrained search (the RS/WS/OS Table-3 baselines).
     Search(ConstrainedSearch),
@@ -136,29 +164,31 @@ impl AnyMapper {
     /// help and error messages).
     pub const SPEC: &str = "local|rs|ws|os|random|ga|annealing|refine|exhaustive";
 
-    /// Resolve a mapper spec. `budget` caps search mappers (candidate
-    /// evaluations / annealing steps; the GA scales its generation count
-    /// as `budget / 150`, so the historical 3000 default yields the
-    /// classic p32/g20 configuration); `seed` makes stochastic mappers
-    /// deterministic. Returns `None` for an unknown spec.
-    pub fn parse(spec: &str, budget: u64, seed: u64) -> Option<AnyMapper> {
-        let budget = budget.max(1);
+    /// Resolve a mapper spec under shared [`SearchParams`]. The budget
+    /// caps search mappers (candidate evaluations / annealing steps; the
+    /// GA scales its generation count as `budget / 150`, so the
+    /// historical 3000 default yields the classic p32/g20 configuration);
+    /// the seed makes stochastic mappers deterministic; the objective,
+    /// thread count and pruning switch are threaded into every engine
+    /// mapper. Returns `None` for an unknown spec.
+    pub fn parse(spec: &str, params: SearchParams) -> Option<AnyMapper> {
+        let params = SearchParams { budget: params.budget.max(1), ..params };
         Some(match spec.to_ascii_lowercase().as_str() {
-            "local" => AnyMapper::Local(LocalMapper::new()),
-            "random" => AnyMapper::Random(RandomMapper::new(budget, seed)),
+            "local" => AnyMapper::Local(LocalMapper::new().with_objective(params.objective)),
+            "random" => AnyMapper::Random(RandomMapper::from_params(&params)),
             "ga" | "genetic" => {
-                let generations = (budget / 150).max(1) as usize;
-                AnyMapper::Genetic(GeneticMapper::new(32, generations, seed))
+                let generations = (params.budget / 150).max(1) as usize;
+                let ga = GeneticMapper::new(32, generations, params.seed).with_params(&params);
+                AnyMapper::Genetic(ga)
             }
-            "annealing" | "sa" => AnyMapper::Annealing(AnnealingMapper::new(budget, seed)),
-            "refine" | "local+refine" => AnyMapper::Refine(LocalRefined::new(budget, seed)),
+            "annealing" | "sa" => AnyMapper::Annealing(AnnealingMapper::from_params(&params)),
+            "refine" | "local+refine" => AnyMapper::Refine(LocalRefined::from_params(&params)),
             "exhaustive" => {
-                AnyMapper::Exhaustive(ExhaustiveMapper::new(budget).with_permutations())
+                AnyMapper::Exhaustive(ExhaustiveMapper::from_params(&params).with_permutations())
             }
-            df => AnyMapper::Search(ConstrainedSearch::new(
+            df => AnyMapper::Search(ConstrainedSearch::from_params(
                 crate::mapspace::Dataflow::parse(df)?,
-                budget,
-                seed,
+                &params,
             )),
         })
     }
@@ -181,11 +211,15 @@ impl Mapper for AnyMapper {
         self.inner().name()
     }
 
+    fn objective(&self) -> Objective {
+        self.inner().objective()
+    }
+
     fn evaluations(&self) -> u64 {
         self.inner().evaluations()
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
         self.inner().map(layer, acc)
     }
 }
@@ -203,6 +237,19 @@ mod tests {
         let out = LocalMapper::new().run(&layer, &acc).unwrap();
         assert_eq!(out.evaluations, 2);
         assert!(out.evaluation.energy.total_pj() > 0.0);
+        // The outcome carries the objective and its score.
+        assert_eq!(out.objective, Objective::Energy);
+        assert_eq!(out.score, out.evaluation.energy.total_pj());
+    }
+
+    #[test]
+    fn run_scores_the_configured_objective() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[0].clone();
+        let out =
+            LocalMapper::new().with_objective(Objective::Edp).run(&layer, &acc).unwrap();
+        assert_eq!(out.objective, Objective::Edp);
+        assert_eq!(out.score, out.evaluation.edp());
     }
 
     #[test]
@@ -211,20 +258,42 @@ mod tests {
         let layer = zoo::alexnet()[2].clone();
         for spec in ["local", "rs", "ws", "os", "random", "ga", "annealing", "refine", "exhaustive"]
         {
-            let m = AnyMapper::parse(spec, 40, 1)
+            let m = AnyMapper::parse(spec, SearchParams::new(40, 1))
                 .unwrap_or_else(|| panic!("spec '{spec}' did not resolve"));
             let out =
                 m.run(&layer, &acc).unwrap_or_else(|e| panic!("{spec} failed to map: {e}"));
             out.mapping.validate(&layer, &acc).unwrap();
         }
-        assert!(AnyMapper::parse("frob", 40, 1).is_none());
+        assert!(AnyMapper::parse("frob", SearchParams::new(40, 1)).is_none());
         // Aliases resolve to the same mechanisms.
-        assert_eq!(AnyMapper::parse("sa", 10, 1).unwrap().name(), "SA(10)");
-        assert_eq!(AnyMapper::parse("ROW", 10, 1).unwrap().name(), "RS-search");
+        assert_eq!(AnyMapper::parse("sa", SearchParams::new(10, 1)).unwrap().name(), "SA(10)");
+        assert_eq!(AnyMapper::parse("ROW", SearchParams::new(10, 1)).unwrap().name(), "RS-search");
         // The GA honours the budget: the historical 3000 default resolves
         // to the classic p32/g20; small budgets shrink the generations.
-        assert_eq!(AnyMapper::parse("ga", 3000, 1).unwrap().name(), "GA(p32g20)");
-        assert_eq!(AnyMapper::parse("ga", 40, 1).unwrap().name(), "GA(p32g1)");
+        let ga = AnyMapper::parse("ga", SearchParams::new(3000, 1)).unwrap();
+        assert_eq!(ga.name(), "GA(p32g20)");
+        assert_eq!(AnyMapper::parse("ga", SearchParams::new(40, 1)).unwrap().name(), "GA(p32g1)");
+    }
+
+    #[test]
+    fn any_mapper_threads_the_objective_through_parse() {
+        let params = SearchParams::new(40, 1).with_objective(Objective::Delay);
+        for spec in ["local", "rs", "random", "ga", "annealing", "refine", "exhaustive"] {
+            let m = AnyMapper::parse(spec, params).unwrap();
+            assert_eq!(m.objective(), Objective::Delay, "{spec}");
+        }
+        // An objective-aware mapper minimizes what it was asked to: on a
+        // searched layer the delay-optimal pick is never slower than the
+        // energy-optimal pick.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let p = SearchParams::new(200, 7);
+        let energy = AnyMapper::parse("random", p).unwrap().run(&layer, &acc).unwrap();
+        let delay = AnyMapper::parse("random", p.with_objective(Objective::Delay))
+            .unwrap()
+            .run(&layer, &acc)
+            .unwrap();
+        assert!(delay.evaluation.latency_cycles <= energy.evaluation.latency_cycles);
     }
 
     #[test]
@@ -232,7 +301,7 @@ mod tests {
         // AnyMapper must satisfy the coordinator bounds (Clone + Send) so
         // one resolver serves map, compile, compile-all and explore.
         let acc = presets::eyeriss();
-        let m = AnyMapper::parse("local", 40, 1).unwrap();
+        let m = AnyMapper::parse("local", SearchParams::new(40, 1)).unwrap();
         let plan =
             crate::coordinator::compile_network(&zoo::alexnet(), &acc, &m, 2).unwrap();
         assert_eq!(plan.layers.len(), 5);

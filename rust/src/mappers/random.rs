@@ -1,28 +1,80 @@
 //! Random mapping — the paper's §3 motivation experiment (Fig. 3) and the
 //! best-of-N random baseline.
+//!
+//! The best-of-N mapper rides the engine's [`RandomStream`]: candidate `i`
+//! is a pure function of `(seed, i)`, so the [`SearchDriver`] shards the
+//! stream across worker threads with bit-identical outcomes at every
+//! thread count, and a larger budget only appends candidates (more budget
+//! never hurts). Pruning is off by default here so `evaluations` keeps the
+//! exact best-of-N accounting; [`RandomMapper::with_pruning`] opts in.
 
+use super::engine::{Objective, RandomStream, SearchDriver};
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::sample_random;
 use crate::model::{EvalContext, Evaluation};
 use crate::util::rng::SplitMix64;
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
+use std::cell::Cell;
 
-/// Best-energy-of-N random mapper.
+/// Best-objective-of-N random mapper.
 #[derive(Debug, Clone)]
 pub struct RandomMapper {
     /// Number of random candidates to draw.
     pub samples: u64,
     /// PRNG seed (deterministic across runs).
     pub seed: u64,
+    /// The objective being minimized.
+    pub objective: Objective,
+    /// Worker threads (identical results at every value).
+    pub threads: usize,
+    /// Bound-based pruning (off by default: best-of-N keeps exact
+    /// evaluation accounting).
+    pub prune: bool,
+    evaluated: Cell<u64>,
 }
 
 impl RandomMapper {
     /// Best-of-`samples` random mapper with the given seed.
     pub fn new(samples: u64, seed: u64) -> Self {
         assert!(samples > 0);
-        Self { samples, seed }
+        Self {
+            samples,
+            seed,
+            objective: Objective::Energy,
+            threads: 1,
+            prune: false,
+            evaluated: Cell::new(0),
+        }
+    }
+
+    /// Mapper configured from shared engine params (`budget` = samples;
+    /// pruning stays off — see the type docs).
+    pub fn from_params(params: &super::SearchParams) -> Self {
+        let mut m = Self::new(params.budget, params.seed);
+        m.objective = params.objective;
+        m.threads = params.threads.max(1);
+        m
+    }
+
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Builder: shard the stream across `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder: enable bound-based pruning (never changes the selected
+    /// mapping; `evaluations` then reports only the unpruned candidates).
+    pub fn with_pruning(mut self) -> Self {
+        self.prune = true;
+        self
     }
 }
 
@@ -31,22 +83,37 @@ impl Mapper for RandomMapper {
         format!("random×{}", self.samples)
     }
 
-    fn evaluations(&self) -> u64 {
-        self.samples
+    fn objective(&self) -> Objective {
+        self.objective
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let mut rng = SplitMix64::new(self.seed);
-        let mut ctx = EvalContext::new(layer, acc);
-        let mut best: Option<(f64, Mapping)> = None;
-        for _ in 0..self.samples {
-            let m = sample_random(layer, acc, &mut rng);
-            let pj = ctx.energy_pj(&m);
-            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
-                best = Some((pj, m));
+    fn evaluations(&self) -> u64 {
+        // `samples` until a map runs; afterwards the engine's examined
+        // count (identical unless pruning was opted in).
+        if self.evaluated.get() > 0 {
+            self.evaluated.get()
+        } else {
+            self.samples
+        }
+    }
+
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let source = RandomStream::new(layer, acc, self.seed, self.samples);
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.samples,
+            threads: self.threads,
+            prune: self.prune,
+        };
+        match driver.search(layer, acc, &source, &[]) {
+            Some(b) => {
+                self.evaluated.set(b.examined);
+                Ok(b.mapping)
+            }
+            None => {
+                Err(MapError::NoValidMapping("random stream produced no candidate".into()))
             }
         }
-        Ok(best.expect("samples > 0").1)
     }
 }
 
@@ -89,7 +156,7 @@ impl RandomDistribution {
 
 /// Run the Fig. 3 experiment: `n` random mappings of `layer` on `acc`.
 pub fn random_distribution(
-    layer: &ConvLayer,
+    layer: &Layer,
     acc: &Accelerator,
     n: usize,
     seed: u64,
@@ -129,6 +196,19 @@ mod tests {
         let e64 = RandomMapper::new(64, 42).run(&layer, &acc).unwrap();
         assert!(e64.evaluation.energy.total_pj() <= e1.evaluation.energy.total_pj());
         assert_eq!(e64.evaluations, 64);
+    }
+
+    #[test]
+    fn parallel_and_pruned_runs_match_the_serial_mapping() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let base = RandomMapper::new(200, 9).run(&layer, &acc).unwrap();
+        for threads in [2usize, 4, 8] {
+            let out = RandomMapper::new(200, 9).with_threads(threads).run(&layer, &acc).unwrap();
+            assert_eq!(out.mapping, base.mapping, "threads={threads}");
+        }
+        let pruned = RandomMapper::new(200, 9).with_pruning().run(&layer, &acc).unwrap();
+        assert_eq!(pruned.mapping, base.mapping);
     }
 
     #[test]

@@ -1,17 +1,22 @@
 //! LOCAL + refinement — the natural extension the paper's conclusion
 //! gestures at: keep LOCAL's one-pass construction as the seed, then spend
 //! a *small, bounded* budget hill-climbing around it. Quantifies how much
-//! energy the single pass leaves on the table (ablation bench
+//! of the objective the single pass leaves on the table (ablation bench
 //! `mapper_quality`).
+//!
+//! The climb is an engine [`BatchSource`]: the LOCAL seed is candidate 0,
+//! each later proposal mutates the incumbent, and the shared
+//! [`SearchDriver`] owns the budget, validity filtering, scoring and best
+//! tracking (greedy: only strict improvements move the incumbent).
 
+use super::engine::{BatchSource, Objective, SearchDriver};
 use super::local::LocalMapper;
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::repair;
-use crate::model::EvalContext;
 use crate::util::rng::SplitMix64;
-use crate::workload::ConvLayer;
+use crate::workload::Layer;
 use std::cell::Cell;
 
 /// Greedy hill-climbing around the LOCAL seed: try factor migrations and
@@ -25,6 +30,8 @@ pub struct LocalRefined {
     pub patience: u64,
     /// PRNG seed (deterministic across runs).
     pub seed: u64,
+    /// The objective being climbed.
+    pub objective: Objective,
     evaluated: Cell<u64>,
 }
 
@@ -32,80 +39,127 @@ impl LocalRefined {
     /// Refiner around the LOCAL seed with the given budget and seed.
     pub fn new(budget: u64, seed: u64) -> Self {
         assert!(budget > 0);
-        Self { budget, patience: budget / 3 + 1, seed, evaluated: Cell::new(0) }
+        Self {
+            budget,
+            patience: budget / 3 + 1,
+            seed,
+            objective: Objective::Energy,
+            evaluated: Cell::new(0),
+        }
+    }
+
+    /// Refiner configured from shared engine params.
+    pub fn from_params(params: &super::SearchParams) -> Self {
+        let mut m = Self::new(params.budget, params.seed);
+        m.objective = params.objective;
+        m
+    }
+
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
     }
 }
 
-impl Mapper for LocalRefined {
-    fn name(&self) -> String {
-        format!("LOCAL+refine({})", self.budget)
-    }
+/// The greedy climb as an engine source: tracks the incumbent from the
+/// driver's feedback and proposes one mutated neighbour per batch. The
+/// budget counts **scored** candidates (invalid proposals only burn
+/// patience, like the pre-engine loop), so the source owns the stop
+/// condition and the driver's proposal cap stays open.
+struct Climb<'a> {
+    layer: &'a Layer,
+    acc: &'a Accelerator,
+    rng: SplitMix64,
+    budget: u64,
+    scored: u64,
+    patience: u64,
+    rejected: u64,
+    seed_mapping: Option<Mapping>,
+    /// Incumbent `(mapping, score)` rebuilt from feedback.
+    best: Option<(Mapping, f64)>,
+    /// Proposal awaiting feedback.
+    proposed: Option<Mapping>,
+}
 
-    fn evaluations(&self) -> u64 {
-        self.evaluated.get()
-    }
-
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let seed_mapping = LocalMapper::new().map(layer, acc)?;
-        let mut ctx = EvalContext::new(layer, acc);
-        let mut best = seed_mapping;
-        let mut best_e = ctx.energy_pj(&best);
-        let mut evaluated = 1u64 + 2; // LOCAL's own schedule comparison
-        let mut rng = SplitMix64::new(self.seed);
-        let mut rejected = 0u64;
-        let n_levels = best.n_levels();
-        while evaluated < self.budget && rejected < self.patience {
-            let mut cand = best.clone();
-            match rng.next_below(3) {
-                0 => {
-                    // Migrate a prime factor one level outward/inward.
-                    let d = rng.index(7);
-                    let l = rng.index(n_levels - 1);
-                    let (a, b) = if rng.next_below(2) == 0 { (l, l + 1) } else { (l + 1, l) };
-                    if cand.temporal[a][d] > 1 {
-                        let f = smallest_prime(cand.temporal[a][d]);
-                        cand.temporal[a][d] /= f;
-                        cand.temporal[b][d] *= f;
-                    }
-                }
-                1 => {
-                    // Swap adjacent loops at one level.
-                    let l = rng.index(n_levels);
-                    let i = rng.index(6);
-                    cand.permutation[l].swap(i, i + 1);
-                }
-                _ => {
-                    // Grow a spatial slot from the top temporal level.
-                    let d = rng.index(7);
-                    let top = n_levels - 1;
-                    if cand.temporal[top][d] > 1 {
-                        let f = smallest_prime(cand.temporal[top][d]);
-                        cand.temporal[top][d] /= f;
-                        if rng.next_below(2) == 0 {
-                            cand.spatial_x[d] *= f;
-                        } else {
-                            cand.spatial_y[d] *= f;
-                        }
-                    }
-                }
+impl BatchSource for Climb<'_> {
+    fn next_batch(&mut self, feedback: &[Option<f64>], out: &mut Vec<Mapping>) {
+        if let Some(prev) = self.proposed.take() {
+            let fb = feedback.first().copied().flatten();
+            if fb.is_some() {
+                self.scored += 1;
             }
-            repair(layer, acc, &mut cand);
-            if cand.validate(layer, acc).is_err() {
-                rejected += 1;
-                continue;
-            }
-            let e = ctx.energy_pj(&cand);
-            evaluated += 1;
-            if e < best_e {
-                best = cand;
-                best_e = e;
-                rejected = 0;
+            let improved = match fb {
+                Some(score) => self.best.as_ref().map(|(_, b)| score < *b).unwrap_or(true),
+                None => false,
+            };
+            if improved {
+                self.best = Some((prev, fb.expect("improvement implies a score")));
+                self.rejected = 0;
             } else {
-                rejected += 1;
+                self.rejected += 1;
+                if self.rejected >= self.patience {
+                    return;
+                }
             }
         }
-        self.evaluated.set(evaluated);
-        Ok(best)
+        if self.scored >= self.budget {
+            return;
+        }
+        if let Some(seed) = self.seed_mapping.take() {
+            // Candidate 0 is the LOCAL seed itself.
+            self.proposed = Some(seed.clone());
+            out.push(seed);
+            return;
+        }
+        let Some((best, _)) = &self.best else {
+            return; // seed never scored — give up
+        };
+        let mut cand = best.clone();
+        self.mutate(&mut cand);
+        self.proposed = Some(cand.clone());
+        out.push(cand);
+    }
+}
+
+impl Climb<'_> {
+    fn mutate(&mut self, cand: &mut Mapping) {
+        let n_levels = cand.n_levels();
+        let rng = &mut self.rng;
+        match rng.next_below(3) {
+            0 => {
+                // Migrate a prime factor one level outward/inward.
+                let d = rng.index(7);
+                let l = rng.index(n_levels - 1);
+                let (a, b) = if rng.next_below(2) == 0 { (l, l + 1) } else { (l + 1, l) };
+                if cand.temporal[a][d] > 1 {
+                    let f = smallest_prime(cand.temporal[a][d]);
+                    cand.temporal[a][d] /= f;
+                    cand.temporal[b][d] *= f;
+                }
+            }
+            1 => {
+                // Swap adjacent loops at one level.
+                let l = rng.index(n_levels);
+                let i = rng.index(6);
+                cand.permutation[l].swap(i, i + 1);
+            }
+            _ => {
+                // Grow a spatial slot from the top temporal level.
+                let d = rng.index(7);
+                let top = n_levels - 1;
+                if cand.temporal[top][d] > 1 {
+                    let f = smallest_prime(cand.temporal[top][d]);
+                    cand.temporal[top][d] /= f;
+                    if rng.next_below(2) == 0 {
+                        cand.spatial_x[d] *= f;
+                    } else {
+                        cand.spatial_y[d] *= f;
+                    }
+                }
+            }
+        }
+        repair(self.layer, self.acc, cand);
     }
 }
 
@@ -118,6 +172,54 @@ fn smallest_prime(n: u64) -> u64 {
         i += 1;
     }
     n
+}
+
+impl Mapper for LocalRefined {
+    fn name(&self) -> String {
+        format!("LOCAL+refine({})", self.budget)
+    }
+
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+
+    fn evaluations(&self) -> u64 {
+        self.evaluated.get()
+    }
+
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let seed_mapping =
+            LocalMapper::new().with_objective(self.objective).map(layer, acc)?;
+        let mut climb = Climb {
+            layer,
+            acc,
+            rng: SplitMix64::new(self.seed),
+            budget: self.budget,
+            scored: 0,
+            patience: self.patience,
+            rejected: 0,
+            seed_mapping: Some(seed_mapping),
+            best: None,
+            proposed: None,
+        };
+        // The climb self-limits on *scored* candidates (see `Climb`), so
+        // the driver's proposal cap stays above any realistic
+        // invalid-proposal overhead.
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.budget.saturating_mul(4).saturating_add(8),
+            threads: 1,
+            prune: false,
+        };
+        match driver.search_batched(layer, acc, &mut climb) {
+            Some(b) => {
+                // + LOCAL's own two-candidate schedule comparison.
+                self.evaluated.set(b.scored + 2);
+                Ok(b.mapping)
+            }
+            None => Err(MapError::NoValidMapping("refinement seed failed validation".into())),
+        }
+    }
 }
 
 #[cfg(test)]
@@ -151,6 +253,19 @@ mod tests {
         let r = LocalRefined::new(50, 1);
         r.run(&layer, &acc).unwrap();
         assert!(r.evaluations() <= 50 + 3);
+    }
+
+    #[test]
+    fn refine_climbs_the_configured_objective() {
+        // A delay-objective climb never ends slower than the LOCAL seed.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let local = LocalMapper::new().with_objective(Objective::Delay).run(&layer, &acc).unwrap();
+        let refined = LocalRefined::new(200, 3)
+            .with_objective(Objective::Delay)
+            .run(&layer, &acc)
+            .unwrap();
+        assert!(refined.evaluation.latency_cycles <= local.evaluation.latency_cycles);
     }
 
     #[test]

@@ -4,18 +4,24 @@
 //! extracted from the Timeloop-Accelergy framework by defining data-reuse
 //! constraints … we still need many comparisons to select the appropriate
 //! case". We reproduce that experiment design: the dataflow becomes a
-//! [`Constraints`] restriction of the map-space, and a sampling search with
-//! a Timeloop-style victory condition (stop after `patience` consecutive
-//! non-improving candidates, or at `budget`) picks the best-energy mapping.
-//! Mapping time = wall-clock of the whole search; LOCAL does one pass.
+//! [`crate::mapspace::Constraints`] restriction of the map-space imprinted on the engine's
+//! [`RandomStream`], and the shared [`SearchDriver`] picks the
+//! best-objective mapping under the evaluation budget. Mapping time =
+//! wall-clock of the whole search; LOCAL does one pass.
+//!
+//! Because the stream is indexed, the search is **parallel** (identical
+//! outcomes at every thread count) and **pruned** by default: candidates
+//! whose [`crate::model::EvalContext::objective_bound`] already exceeds
+//! the incumbent are skipped without a model evaluation — the
+//! Turbo-Charged-Mapper move — which never changes the selected mapping
+//! (`prop_pruned_constrained_search_is_bit_identical`).
 
+use super::engine::{Objective, RandomStream, SearchDriver};
 use super::{MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
-use crate::mapspace::{sample_random, Dataflow};
-use crate::model::EvalContext;
-use crate::util::rng::SplitMix64;
-use crate::workload::ConvLayer;
+use crate::mapspace::Dataflow;
+use crate::workload::Layer;
 use std::cell::Cell;
 
 /// Search within a dataflow-constrained map-space.
@@ -25,24 +31,71 @@ pub struct ConstrainedSearch {
     pub dataflow: Dataflow,
     /// Hard cap on candidate evaluations.
     pub budget: u64,
-    /// Victory condition: consecutive non-improving candidates before
-    /// declaring convergence (Timeloop's `victory-condition`).
-    pub patience: u64,
     /// PRNG seed (deterministic across runs).
     pub seed: u64,
+    /// The objective being minimized.
+    pub objective: Objective,
+    /// Worker threads (identical results at every value).
+    pub threads: usize,
+    /// Bound-based pruning (on by default; never changes the selected
+    /// mapping, only cuts evaluations).
+    pub prune: bool,
     evaluated: Cell<u64>,
+    pruned: Cell<u64>,
 }
 
 impl ConstrainedSearch {
     /// Search inside `dataflow`'s subspace with the given budget and seed.
     pub fn new(dataflow: Dataflow, budget: u64, seed: u64) -> Self {
         assert!(budget > 0);
-        Self { dataflow, budget, patience: budget / 4 + 1, seed, evaluated: Cell::new(0) }
+        Self {
+            dataflow,
+            budget,
+            seed,
+            objective: Objective::Energy,
+            threads: 1,
+            prune: true,
+            evaluated: Cell::new(0),
+            pruned: Cell::new(0),
+        }
+    }
+
+    /// Search configured from shared engine params.
+    pub fn from_params(dataflow: Dataflow, params: &super::SearchParams) -> Self {
+        let mut s = Self::new(dataflow, params.budget, params.seed);
+        s.objective = params.objective;
+        s.threads = params.threads.max(1);
+        s.prune = params.prune;
+        s
     }
 
     /// Timeloop-ish defaults used by the Table-3 bench.
     pub fn table3(dataflow: Dataflow, seed: u64) -> Self {
         Self::new(dataflow, 3000, seed)
+    }
+
+    /// Builder: minimize `objective` instead of energy.
+    pub fn with_objective(mut self, objective: Objective) -> Self {
+        self.objective = objective;
+        self
+    }
+
+    /// Builder: shard the stream across `threads` workers.
+    pub fn with_threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Builder: disable bound-based pruning (every in-budget draw is
+    /// materialized and checked — the historical accounting).
+    pub fn without_pruning(mut self) -> Self {
+        self.prune = false;
+        self
+    }
+
+    /// Candidates skipped by the pruner on the last `map` call.
+    pub fn pruned(&self) -> u64 {
+        self.pruned.get()
     }
 }
 
@@ -51,48 +104,44 @@ impl Mapper for ConstrainedSearch {
         format!("{}-search", self.dataflow.name())
     }
 
+    fn objective(&self) -> Objective {
+        self.objective
+    }
+
     fn evaluations(&self) -> u64 {
         self.evaluated.get()
     }
 
-    fn map(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let cons = self.dataflow.constraints();
-        let mut rng = SplitMix64::new(self.seed);
-        let mut ctx = EvalContext::new(layer, acc);
-        let mut best: Option<(f64, Mapping)> = None;
-        let mut since_improved = 0u64;
-        let mut evaluated = 0u64;
-        while evaluated < self.budget {
-            let mut m = sample_random(layer, acc, &mut rng);
-            cons.imprint(layer, acc, &mut m, &mut rng);
-            if m.validate(layer, acc).is_err() {
-                // Imprint could not satisfy both constraints and capacity
-                // for this draw; count it (Timeloop counts invalids too).
-                evaluated += 1;
-                continue;
+    fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        let source = RandomStream::new(layer, acc, self.seed, self.budget)
+            .constrained(self.dataflow.constraints());
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.budget,
+            threads: self.threads,
+            prune: self.prune,
+        };
+        // No warm-start seed here: the candidate set must stay inside the
+        // dataflow's subspace (an imprinted draw can still fail validation;
+        // the driver counts it like Timeloop counts invalids).
+        match driver.search(layer, acc, &source, &[]) {
+            Some(b) => {
+                self.evaluated.set(b.examined);
+                self.pruned.set(b.pruned);
+                Ok(b.mapping)
             }
-            let pj = ctx.energy_pj(&m);
-            evaluated += 1;
-            if best.as_ref().map(|(b, _)| pj < *b).unwrap_or(true) {
-                best = Some((pj, m));
-                since_improved = 0;
-            } else {
-                since_improved += 1;
-                if since_improved >= self.patience {
-                    break;
-                }
+            None => {
+                self.evaluated.set(self.budget);
+                self.pruned.set(0);
+                Err(MapError::NoValidMapping(format!(
+                    "{} found no valid candidate in {} draws on {} × {}",
+                    self.name(),
+                    self.budget,
+                    layer.name,
+                    acc.name
+                )))
             }
         }
-        self.evaluated.set(evaluated);
-        best.map(|(_, m)| m).ok_or_else(|| {
-            MapError::NoValidMapping(format!(
-                "{} found no valid candidate in {} draws on {} × {}",
-                self.name(),
-                self.budget,
-                layer.name,
-                acc.name
-            ))
-        })
     }
 }
 
@@ -132,6 +181,33 @@ mod tests {
         let small = ConstrainedSearch::new(Dataflow::RowStationary, 50, 3).run(&layer, &acc).unwrap();
         let big = ConstrainedSearch::new(Dataflow::RowStationary, 500, 3).run(&layer, &acc).unwrap();
         assert!(big.evaluation.energy.total_pj() <= small.evaluation.energy.total_pj());
+    }
+
+    #[test]
+    fn parallel_search_is_thread_invariant() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let serial = ConstrainedSearch::new(Dataflow::RowStationary, 400, 7);
+        let base = serial.run(&layer, &acc).unwrap();
+        for threads in [2usize, 4, 8] {
+            let s = ConstrainedSearch::new(Dataflow::RowStationary, 400, 7).with_threads(threads);
+            let out = s.run(&layer, &acc).unwrap();
+            assert_eq!(out.mapping, base.mapping, "threads={threads}");
+            assert_eq!(out.evaluations, base.evaluations, "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn pruning_only_cuts_evaluations() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let full = ConstrainedSearch::new(Dataflow::RowStationary, 600, 11).without_pruning();
+        let base = full.run(&layer, &acc).unwrap();
+        let fast = ConstrainedSearch::new(Dataflow::RowStationary, 600, 11);
+        let out = fast.run(&layer, &acc).unwrap();
+        assert_eq!(out.mapping, base.mapping);
+        assert!(out.evaluations <= base.evaluations);
+        assert_eq!(out.evaluations + fast.pruned(), base.evaluations);
     }
 
     #[test]

@@ -10,7 +10,7 @@
 //! and level 1. Dim `d`'s full extent is the product of all its factors.
 
 use crate::arch::Accelerator;
-use crate::workload::{ConvLayer, Dim, OpKind, Tensor};
+use crate::workload::{Dim, Layer, OpKind, Tensor};
 use std::fmt;
 
 /// Per-dimension factor array indexed by [`Dim::idx`].
@@ -123,7 +123,7 @@ impl Mapping {
     /// The identity ("everything at DRAM") mapping for a layer on an
     /// accelerator with `n_levels` storage levels: all factors 1 except the
     /// outermost temporal level, canonical permutations, no parallelism.
-    pub fn trivial(layer: &ConvLayer, n_levels: usize) -> Self {
+    pub fn trivial(layer: &Layer, n_levels: usize) -> Self {
         let mut temporal = vec![[1u64; 7]; n_levels];
         temporal[n_levels - 1] = layer.bounds();
         Mapping {
@@ -172,13 +172,13 @@ impl Mapping {
 
     /// Elements of tensor `t` in one level-`l` tile (Input uses the
     /// sliding-window halo of the layer).
-    pub fn tensor_tile_elems(&self, layer: &ConvLayer, l: usize, t: Tensor) -> u64 {
+    pub fn tensor_tile_elems(&self, layer: &Layer, l: usize, t: Tensor) -> u64 {
         tensor_elems(layer, &self.tile_at(l), t)
     }
 
     /// Sum of all three tensors' level-`l` tile sizes (what bounding checks
     /// against the level capacity, Eq. 18).
-    pub fn footprint(&self, layer: &ConvLayer, l: usize) -> u64 {
+    pub fn footprint(&self, layer: &Layer, l: usize) -> u64 {
         Tensor::ALL.iter().map(|&t| self.tensor_tile_elems(layer, l, t)).sum()
     }
 
@@ -199,7 +199,7 @@ impl Mapping {
 
     /// Full validity check: structure, coverage, spatial bounds, per-level
     /// bounding (Eq. 18) and permutation well-formedness.
-    pub fn validate(&self, layer: &ConvLayer, acc: &Accelerator) -> Result<(), MappingError> {
+    pub fn validate(&self, layer: &Layer, acc: &Accelerator) -> Result<(), MappingError> {
         if self.temporal.len() != acc.n_levels() || self.permutation.len() != acc.n_levels() {
             return Err(MappingError::LevelMismatch {
                 found: self.temporal.len(),
@@ -262,7 +262,7 @@ impl Mapping {
     }
 
     /// Pretty loop-nest rendering in the paper's Fig. 1 style.
-    pub fn render(&self, layer: &ConvLayer, acc: &Accelerator) -> String {
+    pub fn render(&self, layer: &Layer, acc: &Accelerator) -> String {
         let mut s = String::new();
         s.push_str(&format!("mapping of {} onto {}\n", layer.name, acc.name));
         let mut indent = 0usize;
@@ -306,7 +306,7 @@ impl Mapping {
 /// per-channel ops, `C` otherwise) scaled by the operand count; depthwise
 /// weights drop the C factor; weight-less ops (pooling, elementwise)
 /// contribute zero weight elements.
-pub fn tensor_elems(layer: &ConvLayer, tile: &Factors, t: Tensor) -> u64 {
+pub fn tensor_elems(layer: &Layer, tile: &Factors, t: Tensor) -> u64 {
     let f = |d: Dim| tile[d.idx()].min(layer.bound(d)).max(1);
     match t {
         Tensor::Weight => match layer.op {
@@ -327,7 +327,7 @@ pub fn tensor_elems(layer: &ConvLayer, tile: &Factors, t: Tensor) -> u64 {
 }
 
 /// Footprint of all three tensors for a tile.
-pub fn tensor_footprint(layer: &ConvLayer, tile: &Factors) -> u64 {
+pub fn tensor_footprint(layer: &Layer, tile: &Factors) -> u64 {
     Tensor::ALL.iter().map(|&t| tensor_elems(layer, tile, t)).sum()
 }
 
@@ -362,7 +362,7 @@ mod tests {
     use crate::arch::presets;
     use crate::workload::zoo;
 
-    fn layer() -> ConvLayer {
+    fn layer() -> Layer {
         zoo::vgg02()[4].clone() // Table-1 layer
     }
 
@@ -439,14 +439,14 @@ mod tests {
         tile[Dim::M.idx()] = 2;
         tile[Dim::C.idx()] = 4;
         tile[Dim::P.idx()] = 8;
-        let mm = ConvLayer::matmul("mm", 8, 4, 16);
+        let mm = Layer::matmul("mm", 8, 4, 16);
         assert_eq!(tensor_elems(&mm, &tile, Tensor::Weight), 2 * 4);
         assert_eq!(tensor_elems(&mm, &tile, Tensor::Input), 4 * 8);
         assert_eq!(tensor_elems(&mm, &tile, Tensor::Output), 2 * 8);
         // Weight-less ops: zero weight elements and footprint share.
-        let pool = ConvLayer::pooling("p", 8, 2, 8, 8).with_stride(2);
+        let pool = Layer::pooling("p", 8, 2, 8, 8).with_stride(2);
         assert_eq!(tensor_elems(&pool, &tile, Tensor::Weight), 0);
-        let add = ConvLayer::elementwise("a", 8, 8, 8);
+        let add = Layer::elementwise("a", 8, 8, 8);
         assert_eq!(tensor_elems(&add, &tile, Tensor::Weight), 0);
         // Both add operands resident: 2 × M2 × P8.
         assert_eq!(tensor_elems(&add, &tile, Tensor::Input), 2 * 2 * 8);

@@ -16,7 +16,7 @@ use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::util::factor::count_factorizations;
 use crate::util::rng::SplitMix64;
-use crate::workload::{ConvLayer, Dim};
+use crate::workload::{Dim, Layer};
 
 /// `(n!)^m` — the §3 permutation-space size for `n` swappable loop-nests
 /// over `m` storage levels.
@@ -27,7 +27,7 @@ pub fn permutation_space(n_loops: u64, m_levels: u32) -> f64 {
 
 /// Factorization-space size: ordered splits of every dim across
 /// `slots` positions (temporal levels + spatial slots).
-pub fn factorization_space(layer: &ConvLayer, slots: usize) -> f64 {
+pub fn factorization_space(layer: &Layer, slots: usize) -> f64 {
     Dim::ALL
         .iter()
         .map(|&d| count_factorizations(layer.bound(d), slots) as f64)
@@ -38,7 +38,7 @@ pub fn factorization_space(layer: &ConvLayer, slots: usize) -> f64 {
 /// factorizations × per-level permutations (the paper counts the six
 /// non-degenerate loops of a conv layer; we count exactly the
 /// non-degenerate dims of this layer).
-pub fn map_space(layer: &ConvLayer, acc: &Accelerator) -> f64 {
+pub fn map_space(layer: &Layer, acc: &Accelerator) -> f64 {
     let n_loops = Dim::ALL.iter().filter(|&&d| layer.bound(d) > 1).count() as u64;
     let slots = acc.n_levels() + 2; // temporal levels + spatial X/Y
     factorization_space(layer, slots) * permutation_space(n_loops, acc.n_levels() as u32)
@@ -58,7 +58,7 @@ pub fn design_space(k: u64, c: u64, y: u64, x: u64, r: u64, s: u64, m_levels: u3
 /// violations by migrating factors outward (toward DRAM), which always
 /// terminates because the DRAM level is unbounded. Spatial overflows are
 /// repaired by folding the excess back into the outermost temporal level.
-pub fn sample_random(layer: &ConvLayer, acc: &Accelerator, rng: &mut SplitMix64) -> Mapping {
+pub fn sample_random(layer: &Layer, acc: &Accelerator, rng: &mut SplitMix64) -> Mapping {
     let n_levels = acc.n_levels();
     let mut m = Mapping {
         temporal: vec![[1u64; 7]; n_levels],
@@ -105,7 +105,7 @@ pub fn sample_random(layer: &ConvLayer, acc: &Accelerator, rng: &mut SplitMix64)
 
 /// Repair a candidate in place: clamp spatial fan-out to the PE array and
 /// migrate tile factors outward until every bounded level fits.
-pub fn repair(layer: &ConvLayer, acc: &Accelerator, m: &mut Mapping) {
+pub fn repair(layer: &Layer, acc: &Accelerator, m: &mut Mapping) {
     let n_levels = acc.n_levels();
     let top = n_levels - 1;
 

@@ -29,14 +29,14 @@ use super::{Access, Evaluation, TensorIdx};
 use crate::arch::Accelerator;
 use crate::energy::{EnergyBreakdown, Ert};
 use crate::mapping::{tensor_elems, Mapping, MappingError};
-use crate::workload::{ConvLayer, Dim, Tensor};
+use crate::workload::{Dim, Layer, Tensor};
 
 /// Precomputed per-(layer, accelerator) evaluation state with reusable
 /// scratch buffers. Construct once per search, call
 /// [`EvalContext::evaluate_into`] per candidate.
 #[derive(Debug, Clone)]
 pub struct EvalContext {
-    layer: ConvLayer,
+    layer: Layer,
     acc: Accelerator,
     ert: Ert,
     /// `relevance[tensor_idx][dim_idx]` — layer-aware tensor/dim relevance.
@@ -48,7 +48,7 @@ impl EvalContext {
     /// Precompute the ERT, relevance masks and scratch buffers for one
     /// (layer, accelerator) pair. This is the only allocating step; every
     /// subsequent [`EvalContext::evaluate_into`] call is allocation-free.
-    pub fn new(layer: &ConvLayer, acc: &Accelerator) -> Self {
+    pub fn new(layer: &Layer, acc: &Accelerator) -> Self {
         let n_levels = acc.n_levels();
         let mut relevance = [[false; 7]; 3];
         for t in Tensor::ALL {
@@ -78,7 +78,7 @@ impl EvalContext {
     }
 
     /// The layer this context evaluates against.
-    pub fn layer(&self) -> &ConvLayer {
+    pub fn layer(&self) -> &Layer {
         &self.layer
     }
 
@@ -226,6 +226,176 @@ impl EvalContext {
     }
 }
 
+/// Most storage levels any supported accelerator carries (bound scratch is
+/// stack-allocated at this size).
+const MAX_BOUND_LEVELS: usize = 8;
+
+impl EvalContext {
+    /// Permutation-independent **lower bound** on `(total energy pJ,
+    /// roofline latency cycles)` over every per-level loop permutation of
+    /// `mapping`'s tiling — the bound-based pruner's primitive
+    /// ([`crate::mappers::engine::SearchDriver`]).
+    ///
+    /// The bound replaces each tensor's fetch rounds at each boundary with
+    /// their minimum over all permutations: the stationarity gate cannot
+    /// open below the lowest level `L*` holding a relevant non-degenerate
+    /// loop, at `L*` only the relevant trips are forced (irrelevant loops
+    /// can sit innermost), and above `L*` every trip is forced (it sits
+    /// above the first relevant loop whatever the order). Everything else —
+    /// per-tensor footprints from the precomputed relevance masks, the
+    /// spatial boundary, multicast, the compulsory datapath traffic and
+    /// compute cycles — is already permutation-independent and computed
+    /// exactly. Word counts are composed with saturating arithmetic and
+    /// rolled up in the same order as [`EvalContext::evaluate_into`]
+    /// (IEEE rounding is monotone), so the returned pair never exceeds the
+    /// real evaluation of **any** member of the tiling's permutation block:
+    /// skipping a block whose bound already exceeds the incumbent can
+    /// never change a search's argmin (pinned by
+    /// `prop_objective_bound_is_a_true_lower_bound` and the pruned-vs-
+    /// unpruned sweeps in `rust/tests/property.rs`).
+    ///
+    /// The mapping need not be valid (invalid candidates may be bounded
+    /// before validation); only its level count must match.
+    pub fn objective_bound(&self, mapping: &Mapping) -> (f64, u64) {
+        let EvalContext { layer, acc, ert, relevance, .. } = self;
+        let n_levels = acc.n_levels();
+        debug_assert_eq!(mapping.n_levels(), n_levels);
+        if n_levels > MAX_BOUND_LEVELS {
+            // Deeper hierarchies than the stack scratch covers: return the
+            // trivially-valid bound (prunes nothing, stays correct).
+            return (0.0, 0);
+        }
+        let mut words = [0u64; MAX_BOUND_LEVELS];
+
+        let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+        let tile0 = mapping.tile0();
+        let mut spatial_tile = tile0;
+        for d in 0..7 {
+            spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
+        }
+
+        // Level-0 datapath traffic: exact and mapping-order-free.
+        let macs = layer.macs();
+        if layer.op.uses_weights() {
+            words[0] += macs;
+        }
+        words[0] += macs * layer.op.input_operands();
+        if !layer.op.reduction_dims().is_empty() {
+            words[0] += macs; // accumulator read-back
+        }
+        words[0] += macs; // accumulator write
+
+        // Per-level trip products: `rel[l][t]` over the t-relevant dims,
+        // `all[l]` over every dim.
+        let mut rel = [[1u64; 3]; MAX_BOUND_LEVELS];
+        let mut all = [1u64; MAX_BOUND_LEVELS];
+        for l in 0..n_levels {
+            for d in 0..7 {
+                let f = mapping.temporal[l][d];
+                all[l] = all[l].saturating_mul(f);
+                for (t, mask) in relevance.iter().enumerate() {
+                    if mask[d] {
+                        rel[l][t] = rel[l][t].saturating_mul(f);
+                    }
+                }
+            }
+        }
+        // Minimum fetch rounds of tensor `t` above boundary `l`.
+        let rounds_min = |t: usize, l: usize| -> u64 {
+            let Some(lstar) = (l..n_levels).find(|&lev| rel[lev][t] > 1) else {
+                return 1;
+            };
+            let mut r = rel[lstar][t];
+            for lev in lstar + 1..n_levels {
+                r = r.saturating_mul(all[lev]);
+            }
+            r
+        };
+        // Distinct child tiles of `t` above boundary `l` (exact).
+        let distinct = |t: usize, l: usize| -> u64 {
+            (l..n_levels).fold(1u64, |u, lev| u.saturating_mul(rel[lev][t]))
+        };
+
+        let mut noc_words: u64 = 0;
+        for l in 1..n_levels {
+            for t in Tensor::ALL {
+                if t == Tensor::Weight && !layer.op.uses_weights() {
+                    continue;
+                }
+                let ti = t.t_idx();
+                let (unique_child, aggregate_child) = if l == 1 {
+                    let unique = tensor_elems(layer, &spatial_tile, t);
+                    let aggregate = fanout * tensor_elems(layer, &tile0, t);
+                    (unique, aggregate)
+                } else {
+                    let e = mapping.tensor_tile_elems(layer, l - 1, t);
+                    (e, e)
+                };
+                match t {
+                    Tensor::Weight | Tensor::Input => {
+                        let rounds = rounds_min(ti, l);
+                        let served = if l == 1 && !acc.noc.multicast {
+                            aggregate_child
+                        } else {
+                            unique_child
+                        };
+                        words[l] = words[l].saturating_add(rounds.saturating_mul(served));
+                        words[l - 1] =
+                            words[l - 1].saturating_add(rounds.saturating_mul(aggregate_child));
+                        if l == 1 {
+                            noc_words = noc_words.saturating_add(rounds.saturating_mul(served));
+                        }
+                    }
+                    Tensor::Output => {
+                        let v = rounds_min(ti, l);
+                        let u = distinct(ti, l);
+                        debug_assert!(v >= u);
+                        let extra = v - u;
+                        words[l] = words[l]
+                            .saturating_add(v.saturating_mul(unique_child))
+                            .saturating_add(extra.saturating_mul(unique_child));
+                        words[l - 1] = words[l - 1]
+                            .saturating_add(v.saturating_mul(aggregate_child))
+                            .saturating_add(extra.saturating_mul(aggregate_child));
+                        if l == 1 {
+                            noc_words = noc_words
+                                .saturating_add(v.saturating_mul(unique_child))
+                                .saturating_add(extra.saturating_mul(unique_child))
+                                .saturating_add(
+                                    v.saturating_mul(aggregate_child - unique_child),
+                                );
+                        }
+                    }
+                }
+            }
+        }
+
+        // Latency lower bound: exact compute roofline vs bandwidth over
+        // the lower-bound word counts (same instance model as the
+        // evaluator).
+        let compute_cycles: u64 = mapping.temporal.iter().flatten().product();
+        let mut latency = compute_cycles;
+        for l in 0..n_levels {
+            let instances = if acc.levels[l].per_pe { fanout.max(1) } else { 1 };
+            let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
+                * instances as f64;
+            latency = latency.max((words[l] as f64 / bw).ceil() as u64);
+        }
+
+        // Energy roll-up in the evaluator's summation order (levels
+        // ascending, then NoC, then MAC) so float monotonicity carries
+        // over to the total.
+        let mut energy = 0.0f64;
+        for (l, &w) in words.iter().enumerate().take(n_levels) {
+            energy += w as f64 * ert.level(l);
+        }
+        let noc_avg_hops = (mapping.spatial_x_used() + mapping.spatial_y_used()) as f64 / 2.0;
+        energy += noc_words as f64 * ert.noc_hop_pj * noc_avg_hops;
+        energy += macs as f64 * ert.mac_pj;
+        (energy, latency)
+    }
+}
+
 /// Mask-based [`super::nest::fetch_rounds`]: identical integer arithmetic,
 /// with the per-loop relevance test replaced by a precomputed table lookup.
 fn fetch_rounds_masked(mask: &[bool; 7], loops: &[LoopIter]) -> u64 {
@@ -296,9 +466,9 @@ mod tests {
         let acc = presets::eyeriss();
         let mut rng = SplitMix64::new(19);
         for layer in [
-            ConvLayer::matmul("mm", 96, 64, 56),
-            ConvLayer::pooling("pool", 64, 2, 28, 28).with_stride(2),
-            ConvLayer::elementwise("add", 96, 28, 28),
+            Layer::matmul("mm", 96, 64, 56),
+            Layer::pooling("pool", 64, 2, 28, 28).with_stride(2),
+            Layer::elementwise("add", 96, 28, 28),
         ] {
             let mut ctx = EvalContext::new(&layer, &acc);
             for _ in 0..15 {

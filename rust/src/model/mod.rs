@@ -1,6 +1,6 @@
 //! The Timeloop-lite analytical engine.
 //!
-//! Given a validated [`Mapping`] of a [`ConvLayer`] onto an
+//! Given a validated [`Mapping`] of a [`Layer`] onto an
 //! [`Accelerator`], this module computes per-level per-tensor access
 //! counts, NoC traffic, PE utilization (paper Eq. 25), a roofline latency,
 //! and — through [`crate::energy`] — the per-component energy breakdown the
@@ -43,7 +43,7 @@ pub mod nest;
 use crate::arch::Accelerator;
 use crate::energy::{EnergyBreakdown, Ert};
 use crate::mapping::{tensor_elems, Mapping, MappingError};
-use crate::workload::{ConvLayer, Tensor};
+use crate::workload::{Layer, Tensor};
 
 pub use context::EvalContext;
 pub use nest::{distinct_tiles, fetch_rounds, loop_list_above, LoopIter, LoopList};
@@ -110,7 +110,7 @@ impl Evaluation {
 /// Evaluate a mapping. Validates first; returns the mapping error if the
 /// mapping does not fit (callers in search loops rely on this being cheap).
 pub fn evaluate(
-    layer: &ConvLayer,
+    layer: &Layer,
     acc: &Accelerator,
     mapping: &Mapping,
 ) -> Result<Evaluation, MappingError> {
@@ -127,7 +127,7 @@ pub fn evaluate(
 /// buffers — bit-identical results, zero allocations per candidate. This
 /// function is kept as the API-stable one-shot entry point and as the
 /// reference implementation the context path is property-tested against.
-pub fn evaluate_unchecked(layer: &ConvLayer, acc: &Accelerator, mapping: &Mapping) -> Evaluation {
+pub fn evaluate_unchecked(layer: &Layer, acc: &Accelerator, mapping: &Mapping) -> Evaluation {
     debug_assert!(mapping.validate(layer, acc).is_ok());
     let n_levels = acc.n_levels();
     let mut access = vec![[Access::default(); 3]; n_levels];
@@ -304,8 +304,8 @@ mod tests {
     }
 
     /// M=2, C=2, P=2, everything else 1. 8 MACs.
-    fn tiny_layer() -> ConvLayer {
-        ConvLayer::new("tiny", 2, 2, 1, 1, 2, 1)
+    fn tiny_layer() -> Layer {
+        Layer::new("tiny", 2, 2, 1, 1, 2, 1)
     }
 
     #[test]
@@ -426,8 +426,8 @@ mod tests {
     fn weightless_ops_carry_no_weight_traffic() {
         let acc = presets::eyeriss();
         for layer in [
-            ConvLayer::pooling("pool", 64, 2, 28, 28).with_stride(2),
-            ConvLayer::elementwise("add", 64, 28, 28),
+            Layer::pooling("pool", 64, 2, 28, 28).with_stride(2),
+            Layer::elementwise("add", 64, 28, 28),
         ] {
             let m = Mapping::trivial(&layer, acc.n_levels());
             let e = evaluate(&layer, &acc, &m).unwrap();
@@ -446,7 +446,7 @@ mod tests {
     #[test]
     fn elementwise_reads_two_operands_per_add() {
         let acc = presets::eyeriss();
-        let layer = ConvLayer::elementwise("add", 8, 4, 4);
+        let layer = Layer::elementwise("add", 8, 4, 4);
         let m = Mapping::trivial(&layer, acc.n_levels());
         let e = evaluate(&layer, &acc, &m).unwrap();
         assert_eq!(e.access[0][Tensor::Input.t_idx()].reads, 2 * e.macs);
@@ -463,8 +463,8 @@ mod tests {
         // A matmul is numerically the 1×1-conv projection with rows on P:
         // identical traffic, latency and energy under the same mapping.
         let acc = presets::eyeriss();
-        let mm = ConvLayer::matmul("mm", 64, 32, 16);
-        let conv = ConvLayer::new("conv", 64, 32, 1, 1, 16, 1);
+        let mm = Layer::matmul("mm", 64, 32, 16);
+        let conv = Layer::new("conv", 64, 32, 1, 1, 16, 1);
         let m = Mapping::trivial(&mm, acc.n_levels());
         assert_eq!(evaluate(&mm, &acc, &m).unwrap(), evaluate(&conv, &acc, &m).unwrap());
     }

@@ -2,7 +2,7 @@
 //!
 //! The paper's entire argument is compile-time speed, so the repo tracks
 //! its own "evaluations/second" denominator as a machine-readable
-//! artifact. [`run`] measures three things:
+//! artifact. [`run`] measures five things:
 //!
 //! 1. **Evaluator throughput** — the legacy allocating
 //!    [`crate::model::evaluate_unchecked`] vs the zero-allocation
@@ -13,8 +13,14 @@
 //!    matmul vs pooling vs elementwise), so operator-IR regressions show
 //!    up per projection, not just on conv.
 //! 3. **Exhaustive scaling** — sharded parallel enumeration throughput at
-//!    1/2/4/8 threads on a small fixed layer.
-//! 4. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
+//!    1/2/4/8 threads on a small fixed layer (pruning and warm-start off,
+//!    so every thread count does identical work).
+//! 4. **Search engine** (schema 3) — the [`crate::mappers::engine`]
+//!    numbers: pruned-vs-unpruned evaluations and wall time for the
+//!    mappers with pruning on by default (exhaustive, RS-search), plus
+//!    thread scaling for the newly parallel random and constrained
+//!    searches.
+//! 5. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
 //!    the operator-diverse zoo through the shared-cache service.
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
@@ -25,13 +31,13 @@
 
 use crate::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
 use crate::coordinator::compile_batch;
-use crate::mappers::{ExhaustiveMapper, LocalMapper, Mapper};
+use crate::mappers::{ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, RandomMapper};
 use crate::mapping::Mapping;
-use crate::mapspace::sample_random;
+use crate::mapspace::{sample_random, Dataflow};
 use crate::model::{evaluate_unchecked, EvalContext};
 use crate::util::bench::median_time;
 use crate::util::rng::SplitMix64;
-use crate::workload::{zoo, ConvLayer};
+use crate::workload::{zoo, Layer};
 use std::time::Instant;
 
 /// Harness configuration.
@@ -92,6 +98,49 @@ pub struct ExhaustivePoint {
     pub evals_per_sec: f64,
 }
 
+/// Pruned-vs-unpruned cost of one mapper whose pruning is on by default.
+#[derive(Debug, Clone)]
+pub struct PruneStat {
+    /// Mapper name (`exhaustive` / `rs-search`).
+    pub mapper: &'static str,
+    /// Candidate evaluations without pruning (the full budgeted set).
+    pub evals_unpruned: u64,
+    /// Candidate evaluations with pruning (bound-skipped blocks excluded).
+    pub evals_pruned: u64,
+    /// Wall-clock of the unpruned search, ms.
+    pub wall_ms_unpruned: f64,
+    /// Wall-clock of the pruned search, ms.
+    pub wall_ms_pruned: f64,
+}
+
+impl PruneStat {
+    /// Evaluation-count cut factor (unpruned / pruned).
+    pub fn cut(&self) -> f64 {
+        self.evals_unpruned as f64 / self.evals_pruned.max(1) as f64
+    }
+}
+
+/// Thread-scaling point for one newly parallel search mapper.
+#[derive(Debug, Clone)]
+pub struct ScalePoint {
+    /// Mapper name (`random` / `rs-search`).
+    pub mapper: &'static str,
+    /// Worker threads the indexed stream was sharded across.
+    pub threads: usize,
+    /// Wall-clock of the whole search, ms.
+    pub wall_ms: f64,
+}
+
+/// The schema-3 `search` section: engine pruning and thread scaling.
+#[derive(Debug, Clone)]
+pub struct SearchSection {
+    /// Pruned-vs-unpruned evaluations/wall per default-pruned mapper.
+    pub pruning: Vec<PruneStat>,
+    /// Thread scaling for the newly parallel mappers (fixed work:
+    /// pruning off).
+    pub scaling: Vec<ScalePoint>,
+}
+
 /// Batch-pipeline measurement over the five-network zoo.
 #[derive(Debug, Clone)]
 pub struct ZooBatch {
@@ -118,6 +167,8 @@ pub struct PerfReport {
     pub per_op: Vec<OpThroughput>,
     /// Exhaustive scaling at 1/2/4/8 threads.
     pub exhaustive: Vec<ExhaustivePoint>,
+    /// Engine pruning + thread-scaling numbers (schema 3).
+    pub search: SearchSection,
     /// Zoo batch-pipeline wall time.
     pub zoo_batch: ZooBatch,
 }
@@ -167,6 +218,33 @@ impl PerfReport {
             ));
         }
         s.push_str("  ],\n");
+        s.push_str("  \"search\": {\n");
+        s.push_str("    \"pruning\": [\n");
+        for (i, p) in self.search.pruning.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"mapper\": \"{}\", \"evals_unpruned\": {}, \"evals_pruned\": {}, \"cut\": {}, \"wall_ms_unpruned\": {}, \"wall_ms_pruned\": {}}}{}\n",
+                p.mapper,
+                p.evals_unpruned,
+                p.evals_pruned,
+                jnum(p.cut()),
+                jnum(p.wall_ms_unpruned),
+                jnum(p.wall_ms_pruned),
+                if i + 1 < self.search.pruning.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("    ],\n");
+        s.push_str("    \"scaling\": [\n");
+        for (i, p) in self.search.scaling.iter().enumerate() {
+            s.push_str(&format!(
+                "      {{\"mapper\": \"{}\", \"threads\": {}, \"wall_ms\": {}}}{}\n",
+                p.mapper,
+                p.threads,
+                jnum(p.wall_ms),
+                if i + 1 < self.search.scaling.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("    ]\n");
+        s.push_str("  },\n");
         s.push_str(&format!(
             "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}}\n",
             self.zoo_batch.networks,
@@ -194,6 +272,23 @@ impl PerfReport {
             s.push_str(&format!(
                 "exhaustive {}T: {:.1} ms wall, {:.0} evals/s\n",
                 p.threads, p.wall_ms, p.evals_per_sec
+            ));
+        }
+        for p in &self.search.pruning {
+            s.push_str(&format!(
+                "prune {}: {} → {} evals ({:.2}x cut), {:.1} → {:.1} ms\n",
+                p.mapper,
+                p.evals_unpruned,
+                p.evals_pruned,
+                p.cut(),
+                p.wall_ms_unpruned,
+                p.wall_ms_pruned
+            ));
+        }
+        for p in &self.search.scaling {
+            s.push_str(&format!(
+                "scale {} {}T: {:.1} ms wall\n",
+                p.mapper, p.threads, p.wall_ms
             ));
         }
         s.push_str(&format!(
@@ -226,6 +321,13 @@ fn scaling_acc() -> Accelerator {
     }
 }
 
+/// Time one mapper run, returning (evaluations, wall ms).
+fn timed_map<M: Mapper>(mapper: &M, layer: &Layer, acc: &Accelerator) -> (u64, f64) {
+    let t0 = Instant::now();
+    let out = mapper.run(layer, acc).expect("perf mapper maps the layer");
+    (out.evaluations, t0.elapsed().as_secs_f64() * 1e3)
+}
+
 /// Run the whole harness and return the report.
 pub fn run(cfg: &PerfConfig) -> PerfReport {
     let acc = presets::eyeriss();
@@ -256,11 +358,11 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
 
     // Per-operator-kind throughput: one representative layer per op, same
     // pre-sampled-pool methodology as the evaluator section.
-    let op_layers: [(&'static str, ConvLayer); 4] = [
+    let op_layers: [(&'static str, Layer); 4] = [
         ("conv", zoo::vgg16()[8].clone()),
-        ("matmul", ConvLayer::matmul("perf-mm", 768, 768, 128)),
-        ("pool", ConvLayer::pooling("perf-pool", 64, 2, 112, 112).with_stride(2)),
-        ("add", ConvLayer::elementwise("perf-add", 768, 128, 1)),
+        ("matmul", Layer::matmul("perf-mm", 768, 768, 128)),
+        ("pool", Layer::pooling("perf-pool", 64, 2, 112, 112).with_stride(2)),
+        ("add", Layer::elementwise("perf-add", 768, 128, 1)),
     ];
     let mut per_op = Vec::with_capacity(op_layers.len());
     for (op, l) in op_layers {
@@ -276,13 +378,19 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         per_op.push(OpThroughput { op, evals_per_sec: 1e9 / t.median_ns().max(1.0) });
     }
 
-    // Exhaustive scaling on a small fixed space.
-    let ex_layer = ConvLayer::new("perf-ex", 8, 4, 3, 3, 8, 8);
+    // Exhaustive scaling on a small fixed space (pruning and warm-start
+    // off: every thread count enumerates the identical candidate set, so
+    // wall-time differences are pure sharding).
+    let ex_layer = Layer::new("perf-ex", 8, 4, 3, 3, 8, 8);
     let ex_acc = scaling_acc();
     let budget = if cfg.smoke { 2_000 } else { 50_000 };
     let mut exhaustive = Vec::new();
     for &threads in &[1usize, 2, 4, 8] {
-        let ex = ExhaustiveMapper::new(budget).with_permutations().with_threads(threads);
+        let ex = ExhaustiveMapper::new(budget)
+            .with_permutations()
+            .without_pruning()
+            .without_warm_start()
+            .with_threads(threads);
         let t0 = Instant::now();
         let out = ex.run(&ex_layer, &ex_acc).expect("exhaustive maps the perf layer");
         let wall = t0.elapsed();
@@ -292,6 +400,50 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
             evals_per_sec: out.evaluations as f64 / wall.as_secs_f64().max(1e-9),
         });
     }
+
+    // Search-engine section: pruned-vs-unpruned for the default-pruned
+    // mappers, then thread scaling for the newly parallel streams
+    // (pruning off so the work is fixed).
+    let search_layer = zoo::vgg02()[4].clone();
+    let search_budget: u64 = if cfg.smoke { 3_000 } else { 10_000 };
+    let mut pruning = Vec::new();
+    {
+        let full = ExhaustiveMapper::new(search_budget).with_permutations().without_pruning();
+        let (ev_full, ms_full) = timed_map(&full, &search_layer, &acc);
+        let fast = ExhaustiveMapper::new(search_budget).with_permutations();
+        let (ev_fast, ms_fast) = timed_map(&fast, &search_layer, &acc);
+        pruning.push(PruneStat {
+            mapper: "exhaustive",
+            evals_unpruned: ev_full,
+            evals_pruned: ev_fast,
+            wall_ms_unpruned: ms_full,
+            wall_ms_pruned: ms_fast,
+        });
+        let cs_budget = search_budget / 10;
+        let full = ConstrainedSearch::new(Dataflow::RowStationary, cs_budget, 42).without_pruning();
+        let (ev_full, ms_full) = timed_map(&full, &search_layer, &acc);
+        let fast = ConstrainedSearch::new(Dataflow::RowStationary, cs_budget, 42);
+        let (ev_fast, ms_fast) = timed_map(&fast, &search_layer, &acc);
+        pruning.push(PruneStat {
+            mapper: "rs-search",
+            evals_unpruned: ev_full,
+            evals_pruned: ev_fast,
+            wall_ms_unpruned: ms_full,
+            wall_ms_pruned: ms_fast,
+        });
+    }
+    let mut scaling = Vec::new();
+    for &threads in &[1usize, 2, 4, 8] {
+        let rnd = RandomMapper::new(search_budget, 42).with_threads(threads);
+        let (_, ms) = timed_map(&rnd, &search_layer, &acc);
+        scaling.push(ScalePoint { mapper: "random", threads, wall_ms: ms });
+        let rs = ConstrainedSearch::new(Dataflow::RowStationary, search_budget, 42)
+            .without_pruning()
+            .with_threads(threads);
+        let (_, ms) = timed_map(&rs, &search_layer, &acc);
+        scaling.push(ScalePoint { mapper: "rs-search", threads, wall_ms: ms });
+    }
+    let search = SearchSection { pruning, scaling };
 
     // Zoo batch pipeline (LOCAL is µs/layer, so this is cheap even full).
     let networks = zoo::batch_zoo();
@@ -306,7 +458,7 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         cache_hit_rate: batch.hit_rate(),
     };
 
-    PerfReport { schema: 2, smoke: cfg.smoke, evaluator, per_op, exhaustive, zoo_batch }
+    PerfReport { schema: 3, smoke: cfg.smoke, evaluator, per_op, exhaustive, search, zoo_batch }
 }
 
 #[cfg(test)]
@@ -317,6 +469,7 @@ mod tests {
     fn smoke_run_produces_sane_report() {
         let r = run(&PerfConfig::smoke());
         assert!(r.smoke);
+        assert_eq!(r.schema, 3);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
         assert_eq!(
@@ -327,6 +480,18 @@ mod tests {
         assert_eq!(r.exhaustive.len(), 4);
         assert_eq!(r.exhaustive.iter().map(|p| p.threads).collect::<Vec<_>>(), vec![1, 2, 4, 8]);
         assert!(r.exhaustive.iter().all(|p| p.evals_per_sec > 0.0));
+        // Schema-3 search section: both default-pruned mappers report, and
+        // pruning never examines more than the unpruned run.
+        assert_eq!(
+            r.search.pruning.iter().map(|p| p.mapper).collect::<Vec<_>>(),
+            vec!["exhaustive", "rs-search"]
+        );
+        for p in &r.search.pruning {
+            assert!(p.evals_pruned > 0, "{}", p.mapper);
+            assert!(p.evals_pruned <= p.evals_unpruned, "{}", p.mapper);
+        }
+        assert_eq!(r.search.scaling.len(), 8);
+        assert!(r.search.scaling.iter().all(|p| p.wall_ms > 0.0));
         assert_eq!(r.zoo_batch.networks, 8);
         assert!(r.zoo_batch.layers > 300);
         assert!(r.zoo_batch.wall_ms > 0.0);
@@ -335,7 +500,7 @@ mod tests {
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 2,
+            schema: 3,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
@@ -346,11 +511,21 @@ mod tests {
                 OpThroughput { op: "matmul", evals_per_sec: 500.0 },
             ],
             exhaustive: vec![ExhaustivePoint { threads: 1, wall_ms: 2.0, evals_per_sec: 50.0 }],
+            search: SearchSection {
+                pruning: vec![PruneStat {
+                    mapper: "exhaustive",
+                    evals_unpruned: 3001,
+                    evals_pruned: 1000,
+                    wall_ms_unpruned: 8.0,
+                    wall_ms_pruned: 3.0,
+                }],
+                scaling: vec![ScalePoint { mapper: "random", threads: 2, wall_ms: 4.0 }],
+            },
             zoo_batch: ZooBatch { networks: 8, layers: 325, wall_ms: 10.0, cache_hit_rate: 0.4 },
         };
         let json = r.to_json();
         for key in [
-            "\"schema\"",
+            "\"schema\": 3",
             "\"smoke\"",
             "\"evaluator\"",
             "\"legacy_evals_per_sec\"",
@@ -363,6 +538,13 @@ mod tests {
             "\"threads\"",
             "\"wall_ms\"",
             "\"evals_per_sec\"",
+            "\"search\"",
+            "\"pruning\"",
+            "\"evals_unpruned\": 3001",
+            "\"evals_pruned\": 1000",
+            "\"cut\": 3.001",
+            "\"scaling\"",
+            "\"mapper\": \"random\"",
             "\"zoo_batch\"",
             "\"cache_hit_rate\"",
         ] {
@@ -371,6 +553,8 @@ mod tests {
         assert!(json.contains("\"speedup\": 4.000"));
         assert!(r.summary().contains("4.00x"));
         assert!(r.summary().contains("per-op matmul"));
+        assert!(r.summary().contains("prune exhaustive"));
+        assert!(r.summary().contains("scale random 2T"));
     }
 
     #[test]

@@ -26,6 +26,10 @@ fn help_lists_subcommands() {
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
+    // The search-engine flags are documented.
+    for flag in ["--objective", "--search-threads", "--no-prune"] {
+        assert!(stdout.contains(flag), "help missing {flag}");
+    }
 }
 
 #[test]
@@ -85,6 +89,51 @@ fn map_matmul_and_pooling_layers_from_zoo() {
     let (stdout, _, code) = run(&["map", "--layer", "vgg16pool:3", "--arch", "eyeriss"]);
     assert_eq!(code, 0);
     assert!(stdout.contains("VGG16_pool1"), "{stdout}");
+}
+
+#[test]
+fn objective_flag_works_end_to_end() {
+    // map: the chosen objective is echoed and scored.
+    let (stdout, stderr, code) = run(&[
+        "map", "--layer", "alexnet:3", "--objective", "delay", "--mapper", "refine",
+        "--budget", "40",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("objective=delay"), "{stdout}");
+    let (_, stderr, code) = run(&["map", "--objective", "frob"]);
+    assert_eq!(code, 1);
+    assert!(stderr.contains("unknown objective"), "{stderr}");
+    // compile: whole-network compile under a non-default objective.
+    let (stdout, stderr, code) =
+        run(&["compile", "--network", "alexnet", "--objective", "edp"]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("total:"), "{stdout}");
+    // compile-all: the batch pipeline accepts it too (LOCAL is µs/layer).
+    let (stdout, stderr, code) =
+        run(&["compile-all", "--objective", "delay", "--threads", "4"]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("cache:"), "{stdout}");
+    // explore: the co-design sweep accepts it.
+    let (stdout, stderr, code) =
+        run(&["explore", "--network", "alexnet", "--objective", "edp"]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("Pareto front"), "{stdout}");
+}
+
+#[test]
+fn engine_flags_are_accepted() {
+    // --search-threads and --no-prune parse and keep results valid.
+    let (stdout, stderr, code) = run(&[
+        "map", "--layer", "alexnet:3", "--mapper", "rs", "--budget", "200",
+        "--search-threads", "4",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("energy="), "{stdout}");
+    let (stdout, stderr, code) = run(&[
+        "map", "--layer", "alexnet:3", "--mapper", "exhaustive", "--budget", "200", "--no-prune",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stdout.contains("energy="), "{stdout}");
 }
 
 #[test]
@@ -233,9 +282,17 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("evals/s"), "{stdout}");
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
-    for key in
-        ["\"evaluator\"", "\"per_op\"", "\"exhaustive\"", "\"zoo_batch\"", "\"smoke\": true"]
-    {
+    for key in [
+        "\"schema\": 3",
+        "\"evaluator\"",
+        "\"per_op\"",
+        "\"exhaustive\"",
+        "\"search\"",
+        "\"pruning\"",
+        "\"scaling\"",
+        "\"zoo_batch\"",
+        "\"smoke\": true",
+    ] {
         assert!(json.contains(key), "missing {key} in {json}");
     }
     // A rate of exactly 0 means the harness measured nothing — the same

@@ -4,8 +4,11 @@
 
 use local_mapper::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
 use local_mapper::coordinator::layer_key;
-use local_mapper::mappers::{ExhaustiveMapper, LocalMapper, Mapper};
-use local_mapper::mapspace::{repair, sample_random};
+use local_mapper::mappers::engine::{OdometerSource, SearchDriver};
+use local_mapper::mappers::{
+    ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, Objective, RandomMapper,
+};
+use local_mapper::mapspace::{repair, sample_random, Dataflow};
 use local_mapper::model::{evaluate, evaluate_unchecked, EvalContext, TensorIdx};
 use local_mapper::util::rng::SplitMix64;
 use local_mapper::workload::{zoo, ConvLayer, Dim, OpKind, Tensor};
@@ -148,6 +151,156 @@ fn prop_parallel_exhaustive_matches_single_thread() {
             "threads={threads}"
         );
         assert_eq!(par.evaluations, base.evaluations, "threads={threads}");
+    }
+}
+
+#[test]
+fn prop_objective_bound_is_a_true_lower_bound() {
+    // The pruner's contract: `EvalContext::objective_bound` of a tiling
+    // never exceeds the real (energy, latency) of ANY per-level
+    // permutation of that tiling — across random ops, machines and
+    // mappings. A violated bound could prune the argmin.
+    let mut rng = SplitMix64::new(0xB0_07D);
+    for trial in 0..150 {
+        let op = OpKind::ALL[trial % OpKind::ALL.len()];
+        let layer = random_op_layer(op, &mut rng);
+        let acc = random_acc(&mut rng);
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let base = sample_random(&layer, &acc, &mut rng);
+        let (e_lb, l_lb) = ctx.objective_bound(&base);
+        // The mapping itself plus shuffled/rotated permutation variants
+        // all share the tiling, so all must respect the bound.
+        let mut m = base.clone();
+        for variant in 0..8 {
+            if variant > 0 {
+                for l in 0..m.n_levels() {
+                    rng.shuffle(&mut m.permutation[l]);
+                }
+            }
+            let e = ctx.evaluate_into(&m);
+            assert!(
+                e_lb <= e.energy.total_pj(),
+                "energy bound {e_lb} > actual {} for {layer} on {acc}",
+                e.energy.total_pj()
+            );
+            assert!(
+                l_lb <= e.latency_cycles,
+                "latency bound {l_lb} > actual {} for {layer} on {acc}",
+                e.latency_cycles
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_pruned_exhaustive_is_bit_identical_and_cuts_2x() {
+    // Bound-based pruning must return the bit-identical best mapping and
+    // evaluation as the unpruned enumeration on every (preset, zoo layer,
+    // budget) — while evaluating strictly fewer candidates, at least 2x
+    // fewer somewhere on every preset.
+    for acc in presets::all() {
+        let mut best_cut = 1.0f64;
+        let mut pruned_any = false;
+        let cases: [(ConvLayer, u64); 3] = [
+            (zoo::vgg02()[4].clone(), 3_000),
+            (zoo::vgg02()[4].clone(), 10_000),
+            (zoo::vgg16()[8].clone(), 20_000),
+        ];
+        for (layer, budget) in cases {
+            let full = ExhaustiveMapper::new(budget).with_permutations().without_pruning();
+            let base = full.run(&layer, &acc).unwrap();
+            let fast = ExhaustiveMapper::new(budget).with_permutations();
+            let out = fast.run(&layer, &acc).unwrap();
+            assert_eq!(out.mapping, base.mapping, "{} × {} b{budget}", layer.name, acc.name);
+            assert_eq!(
+                out.evaluation.energy.total_pj().to_bits(),
+                base.evaluation.energy.total_pj().to_bits(),
+                "{} × {} b{budget}",
+                layer.name,
+                acc.name
+            );
+            assert!(out.evaluations <= base.evaluations);
+            // Every in-budget candidate is either examined or pruned.
+            assert_eq!(out.evaluations + fast.pruned(), base.evaluations);
+            pruned_any |= fast.pruned() > 0;
+            best_cut = best_cut.max(base.evaluations as f64 / out.evaluations.max(1) as f64);
+        }
+        assert!(pruned_any, "{}: pruner never engaged", acc.name);
+        assert!(best_cut >= 2.0, "{}: best pruning cut only {best_cut:.2}x", acc.name);
+    }
+}
+
+#[test]
+fn prop_pruned_search_preserves_the_tiebreak_index() {
+    // At the driver level the whole triple (mapping, score bits, global
+    // tie-break index) must survive pruning, threads or both.
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg02()[4].clone();
+    let source = OdometerSource::new(&layer, &acc, true);
+    let seed = LocalMapper::new().map(&layer, &acc).unwrap();
+    let serial =
+        SearchDriver { objective: Objective::Energy, budget: 5_000, threads: 1, prune: false };
+    let base = serial.search(&layer, &acc, &source, std::slice::from_ref(&seed)).unwrap();
+    for (threads, prune) in [(1, true), (4, false), (4, true)] {
+        let out = SearchDriver { objective: Objective::Energy, budget: 5_000, threads, prune }
+            .search(&layer, &acc, &source, std::slice::from_ref(&seed))
+            .unwrap();
+        assert_eq!(out.mapping, base.mapping, "threads={threads} prune={prune}");
+        assert_eq!(out.score.to_bits(), base.score.to_bits());
+        assert_eq!(out.index, base.index, "threads={threads} prune={prune}");
+        assert_eq!(out.examined + out.pruned, base.examined);
+    }
+}
+
+#[test]
+fn prop_pruned_constrained_search_is_bit_identical() {
+    for acc in presets::all() {
+        for df in [Dataflow::RowStationary, Dataflow::WeightStationary] {
+            let layer = zoo::vgg16()[8].clone();
+            let full = ConstrainedSearch::new(df, 500, 13).without_pruning();
+            let base = full.run(&layer, &acc).unwrap();
+            let fast = ConstrainedSearch::new(df, 500, 13);
+            let out = fast.run(&layer, &acc).unwrap();
+            assert_eq!(out.mapping, base.mapping, "{} × {}", df.name(), acc.name);
+            assert_eq!(
+                out.evaluation.energy.total_pj().to_bits(),
+                base.evaluation.energy.total_pj().to_bits()
+            );
+            assert_eq!(out.evaluations + fast.pruned(), base.evaluations);
+        }
+    }
+}
+
+#[test]
+fn prop_parallel_stochastic_searches_are_thread_invariant() {
+    // The newly parallel mappers — best-of-N random and the constrained
+    // RS/WS/OS searches — return identical outcomes (mapping, evaluation
+    // bits, evaluation count) at 1/2/4/8 threads for a fixed seed.
+    for acc in presets::all() {
+        let layer = zoo::vgg02()[4].clone();
+        let rnd_base = RandomMapper::new(300, 21).run(&layer, &acc).unwrap();
+        let rs_base = ConstrainedSearch::new(Dataflow::RowStationary, 300, 21)
+            .run(&layer, &acc)
+            .unwrap();
+        for threads in [2usize, 4, 8] {
+            let rnd = RandomMapper::new(300, 21).with_threads(threads).run(&layer, &acc).unwrap();
+            assert_eq!(rnd.mapping, rnd_base.mapping, "random t={threads} on {}", acc.name);
+            assert_eq!(
+                rnd.evaluation.energy.total_pj().to_bits(),
+                rnd_base.evaluation.energy.total_pj().to_bits()
+            );
+            assert_eq!(rnd.evaluations, rnd_base.evaluations);
+            let rs = ConstrainedSearch::new(Dataflow::RowStationary, 300, 21)
+                .with_threads(threads)
+                .run(&layer, &acc)
+                .unwrap();
+            assert_eq!(rs.mapping, rs_base.mapping, "rs t={threads} on {}", acc.name);
+            assert_eq!(
+                rs.evaluation.energy.total_pj().to_bits(),
+                rs_base.evaluation.energy.total_pj().to_bits()
+            );
+            assert_eq!(rs.evaluations, rs_base.evaluations);
+        }
     }
 }
 
