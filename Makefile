@@ -1,15 +1,23 @@
 # Convenience targets for the local-mapper workspace.
 #
-#   make check      fmt --check + clippy -D warnings + tier-1 build/tests
+#   make check      fmt --check + clippy -D warnings + tier-1 build/tests + examples
 #   make test       tier-1 only (what the CI gate runs)
+#   make examples   build every cargo example (the public-API canary)
+#   make api-json   compile-all → compile_all.json (the api_v1 document CI validates)
 #   make bench      all nine paper/ablation reports
 #   make bench-json perf harness (smoke) → BENCH_eval.json at the repo root
 #   make doc        rustdoc, warnings are errors
 #   make artifacts  AOT-compile the JAX/Pallas conv artifacts (needs jax)
 
-.PHONY: check fmt clippy test bench bench-json doc artifacts
+.PHONY: check fmt clippy test examples api-json bench bench-json doc artifacts
 
-check: fmt clippy test
+check: fmt clippy test examples
+
+examples:
+	cargo build --examples
+
+api-json:
+	cargo run --release --bin local-mapper -- compile-all --threads 4 --format json > compile_all.json
 
 fmt:
 	cargo fmt --all -- --check

@@ -1,0 +1,74 @@
+//! The embeddable API end to end: compile VGG-16 through a [`Session`]
+//! with a typed [`CompileRequest`], stream per-layer results as the worker
+//! pool finishes them, re-compile to show the session's warm cache, and
+//! emit the versioned `"api_v1"` JSON document.
+//!
+//! This is the surface a service or another compiler embeds — no CLI, no
+//! string parsing, typed errors with stable codes.
+//!
+//! Run: `cargo run --release --example compile_vgg16`
+
+use local_mapper::api::{json, CompileRequest, Session};
+use local_mapper::mappers::Objective;
+use local_mapper::util::bench::fmt_duration;
+use local_mapper::util::table::fmt_f64;
+
+fn main() {
+    let session = Session::new();
+    let request = CompileRequest::new()
+        .network("vgg16")
+        .arch_preset("eyeriss")
+        .mapper("local")
+        .objective(Objective::Energy)
+        .threads(4);
+
+    // --- Streaming: consume layers as their shards finish.
+    println!("== streaming compile (results as shards finish) ==");
+    let stream = session.compile_iter(&request).expect("request resolves");
+    for layer in stream {
+        let l = layer.expect("layer maps");
+        println!(
+            "  {:<16} {:>12} MACs  {:>9} µJ  {:>10} cyc  {}",
+            l.layer.name,
+            l.macs(),
+            fmt_f64(l.energy_uj()),
+            l.latency_cycles(),
+            if l.cached { "(cached)" } else { "" }
+        );
+    }
+
+    // --- Blocking: one typed report with totals and cache statistics.
+    let report = session.compile(&request).expect("vgg16 compiles");
+    println!("\n== typed report ==");
+    println!(
+        "workload={} arch={} mapper={} objective={}",
+        report.workload, report.acc.name, report.mapper, report.objective
+    );
+    println!(
+        "layers={} total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
+        report.total_layers(),
+        report.total_macs(),
+        fmt_f64(report.total_energy_uj()),
+        report.total_latency_cycles(),
+        report.mean_utilization() * 100.0
+    );
+    println!(
+        "cache: {}/{} hits (the streaming pass warmed the session)  compile: {}",
+        report.cache_hits,
+        report.requests,
+        fmt_duration(report.compile_time)
+    );
+    let metrics = session.metrics();
+    println!(
+        "session: {} service(s), {} requests, {:.0}% hit rate",
+        metrics.services,
+        metrics.requests,
+        metrics.hit_rate() * 100.0
+    );
+
+    // --- Versioned JSON: what a network service would return.
+    let doc = json::compile_report(&report);
+    let preview: String = doc.lines().take(8).collect::<Vec<_>>().join("\n");
+    println!("\n== api_v1 JSON (first lines) ==\n{preview}\n  ...");
+    assert!(json::parse(&doc).is_ok(), "emitted JSON must parse");
+}

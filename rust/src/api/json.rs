@@ -1,0 +1,704 @@
+//! Versioned JSON output for the API's report types — and a strict parser
+//! for validating it.
+//!
+//! serde is not in the offline crate set, so this is a hand-rolled
+//! serializer with three hard guarantees the CLI tests pin:
+//!
+//! * **Versioned**: every document opens with `"schema": "api_v1"` and a
+//!   `"kind"` discriminator (`compile` / `simulate` / `explore`). Schema
+//!   changes bump the tag; consumers reject tags they don't know.
+//! * **Byte-stable key order**: keys are emitted in a fixed order, so two
+//!   runs over the same inputs differ only in measured wall-clock values —
+//!   diffs and golden tests stay meaningful.
+//! * **Strict numbers**: floats render via Rust's shortest round-trip
+//!   `Display` (re-parsing yields the identical `f64`; the property tests
+//!   rely on this), and non-finite values — which valid reports never
+//!   produce — degrade to `0` rather than emitting invalid JSON.
+//!
+//! [`parse`] is the matching strict reader used by the golden CLI tests
+//! and the schema-validation tooling; it preserves object key order so
+//! tests can assert byte-stable ordering structurally.
+
+use super::session::{CompileReport, ExploreReport, LayerReport, SimulateReport};
+use crate::explore::DesignResult;
+use crate::mapping::Mapping;
+use std::fmt;
+
+/// The schema tag every document carries.
+pub const SCHEMA: &str = "api_v1";
+
+/// Render a finite float in shortest round-trip form; non-finite values
+/// (which no valid report produces) degrade to `0` so the document stays
+/// parseable.
+fn jf(x: f64) -> String {
+    if x.is_finite() {
+        format!("{x}")
+    } else {
+        "0".to_string()
+    }
+}
+
+/// Duration in fractional milliseconds.
+fn jms(d: std::time::Duration) -> String {
+    jf(d.as_secs_f64() * 1e3)
+}
+
+/// JSON string escaping (quotes, backslashes, control characters; UTF-8
+/// passes through).
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len() + 2);
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+/// One `[u64; 7]` factor array.
+fn factors(f: &[u64; 7]) -> String {
+    let items: Vec<String> = f.iter().map(u64::to_string).collect();
+    format!("[{}]", items.join(", "))
+}
+
+/// A mapping as structured JSON: per-level temporal factors
+/// ([`crate::workload::Dim`] order N,M,C,R,S,P,Q), per-level permutation
+/// strings (innermost dim first), spatial X/Y factors.
+fn mapping(m: &Mapping) -> String {
+    let temporal: Vec<String> = m.temporal.iter().map(factors).collect();
+    let permutation: Vec<String> = m
+        .permutation
+        .iter()
+        .map(|p| {
+            let order: String = p.iter().map(|d| d.name()).collect();
+            format!("\"{order}\"")
+        })
+        .collect();
+    format!(
+        "{{\"temporal\": [{}], \"permutation\": [{}], \"spatial_x\": {}, \"spatial_y\": {}}}",
+        temporal.join(", "),
+        permutation.join(", "),
+        factors(&m.spatial_x),
+        factors(&m.spatial_y)
+    )
+}
+
+/// One layer report as a single-line object.
+fn layer(l: &LayerReport) -> String {
+    let e = &l.outcome.evaluation;
+    format!(
+        "{{\"name\": \"{}\", \"op\": \"{}\", \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"utilization\": {}, \"evaluations\": {}, \"map_time_ms\": {}, \"score\": {}, \"cached\": {}, \"mapping\": {}}}",
+        esc(&l.layer.name),
+        l.layer.op.name(),
+        e.macs,
+        jf(e.energy.total_uj()),
+        jf(e.energy.pj_per_mac(e.macs)),
+        e.latency_cycles,
+        jf(e.utilization),
+        l.outcome.evaluations,
+        jms(l.outcome.elapsed),
+        jf(l.outcome.score),
+        l.cached,
+        mapping(&l.outcome.mapping)
+    )
+}
+
+/// Serialize a [`CompileReport`] (the `map`, `compile` and `compile-all`
+/// document; they share one schema — `map` is a one-network, one-layer
+/// compile).
+pub fn compile_report(r: &CompileReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str("  \"kind\": \"compile\",\n");
+    s.push_str(&format!("  \"workload\": \"{}\",\n", esc(&r.workload)));
+    s.push_str(&format!("  \"arch\": \"{}\",\n", esc(&r.acc.name)));
+    s.push_str(&format!("  \"mapper\": \"{}\",\n", esc(&r.mapper)));
+    s.push_str(&format!("  \"objective\": \"{}\",\n", r.objective.name()));
+    s.push_str("  \"networks\": [\n");
+    for (i, net) in r.networks.iter().enumerate() {
+        s.push_str("    {\n");
+        s.push_str(&format!("      \"name\": \"{}\",\n", esc(&net.name)));
+        s.push_str("      \"layers\": [\n");
+        for (j, l) in net.layers.iter().enumerate() {
+            s.push_str("        ");
+            s.push_str(&layer(l));
+            s.push_str(if j + 1 < net.layers.len() { ",\n" } else { "\n" });
+        }
+        s.push_str("      ],\n");
+        s.push_str(&format!(
+            "      \"totals\": {{\"layers\": {}, \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"mean_utilization\": {}, \"cache_hits\": {}}},\n",
+            net.layers.len(),
+            net.total_macs(),
+            jf(net.total_energy_uj()),
+            jf(net.pj_per_mac()),
+            net.total_latency_cycles(),
+            jf(net.mean_utilization()),
+            net.cache_hits()
+        ));
+        s.push_str(&format!("      \"compile_time_ms\": {}\n", jms(net.compile_time)));
+        s.push_str(if i + 1 < r.networks.len() { "    },\n" } else { "    }\n" });
+    }
+    s.push_str("  ],\n");
+    s.push_str(&format!(
+        "  \"totals\": {{\"layers\": {}, \"macs\": {}, \"energy_uj\": {}, \"latency_cycles\": {}, \"mean_utilization\": {}}},\n",
+        r.total_layers(),
+        r.total_macs(),
+        jf(r.total_energy_uj()),
+        r.total_latency_cycles(),
+        jf(r.mean_utilization())
+    ));
+    s.push_str(&format!(
+        "  \"cache\": {{\"requests\": {}, \"hits\": {}, \"hit_rate\": {}, \"p50_service_ms\": {}, \"p99_service_ms\": {}}},\n",
+        r.requests,
+        r.cache_hits,
+        jf(r.hit_rate()),
+        jms(r.p50_service),
+        jms(r.p99_service)
+    ));
+    s.push_str(&format!("  \"compile_time_ms\": {}\n", jms(r.compile_time)));
+    s.push_str("}\n");
+    s
+}
+
+/// Serialize a [`SimulateReport`] (the `simulate` document).
+pub fn simulate_report(r: &SimulateReport) -> String {
+    let e = &r.outcome.evaluation;
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str("  \"kind\": \"simulate\",\n");
+    s.push_str(&format!("  \"layer\": \"{}\",\n", esc(&r.layer.name)));
+    s.push_str(&format!("  \"op\": \"{}\",\n", r.layer.op.name()));
+    s.push_str(&format!("  \"arch\": \"{}\",\n", esc(&r.acc.name)));
+    s.push_str(&format!("  \"mapper\": \"{}\",\n", esc(&r.mapper)));
+    s.push_str(&format!("  \"objective\": \"{}\",\n", r.outcome.objective.name()));
+    s.push_str(&format!(
+        "  \"analytical\": {{\"energy_uj\": {}, \"latency_cycles\": {}, \"utilization\": {}}},\n",
+        jf(e.energy.total_uj()),
+        e.latency_cycles,
+        jf(e.utilization)
+    ));
+    s.push_str(&format!(
+        "  \"sim\": {{\"double_buffer\": {}, \"total_cycles\": {}, \"compute_cycles\": {}, \"slowdown\": {}, \"bottleneck_level\": \"{}\", \"levels\": [\n",
+        r.options.double_buffer,
+        r.sim.total_cycles,
+        r.sim.compute_cycles,
+        jf(r.sim.slowdown),
+        esc(&r.acc.levels[r.sim.bottleneck_level].name)
+    ));
+    for (i, p) in r.sim.levels.iter().enumerate() {
+        s.push_str(&format!(
+            "    {{\"name\": \"{}\", \"rounds\": {}, \"transfer_cycles\": {}, \"stall_cycles\": {}}}{}\n",
+            esc(&r.acc.levels[i].name),
+            p.rounds,
+            p.transfer_cycles,
+            p.stall_cycles,
+            if i + 1 < r.sim.levels.len() { "," } else { "" }
+        ));
+    }
+    s.push_str("  ]},\n");
+    s.push_str(&format!(
+        "  \"mesh\": {{\"word_hops\": {}, \"max_link_words\": {}, \"energy_uj\": {}, \"analytical_noc_uj\": {}}}\n",
+        r.mesh.word_hops,
+        r.mesh.max_link_words,
+        jf(r.mesh_energy_uj()),
+        jf(r.analytical_noc_uj())
+    ));
+    s.push_str("}\n");
+    s
+}
+
+/// One design-sweep aggregate as a single-line object.
+fn design(d: &DesignResult) -> String {
+    format!(
+        "{{\"design\": \"{}\", \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"edp\": {}, \"mean_utilization\": {}}}",
+        esc(&d.label),
+        jf(d.total_energy_uj),
+        jf(d.pj_per_mac()),
+        d.total_latency_cycles,
+        jf(d.edp),
+        jf(d.mean_utilization)
+    )
+}
+
+/// Serialize an [`ExploreReport`] (the `explore` document).
+pub fn explore_report(r: &ExploreReport) -> String {
+    let mut s = String::new();
+    s.push_str("{\n");
+    s.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+    s.push_str("  \"kind\": \"explore\",\n");
+    s.push_str(&format!("  \"network\": \"{}\",\n", esc(&r.network)));
+    s.push_str(&format!("  \"arch\": \"{}\",\n", esc(&r.acc.name)));
+    s.push_str(&format!("  \"mapper\": \"{}\",\n", esc(&r.mapper)));
+    s.push_str("  \"results\": [\n");
+    for (i, d) in r.results.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&design(d));
+        s.push_str(if i + 1 < r.results.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ],\n");
+    s.push_str("  \"pareto\": [\n");
+    for (i, d) in r.front.iter().enumerate() {
+        s.push_str("    ");
+        s.push_str(&design(d));
+        s.push_str(if i + 1 < r.front.len() { ",\n" } else { "\n" });
+    }
+    s.push_str("  ]\n");
+    s.push_str("}\n");
+    s
+}
+
+// --------------------------------------------------------------- parsing
+
+/// A parsed JSON value. Object keys keep document order so golden tests
+/// can assert the byte-stable key ordering structurally.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any number (stored as `f64`; the serializer never emits values
+    /// outside the exact-integer range).
+    Num(f64),
+    /// A string (escapes resolved).
+    Str(String),
+    /// An array.
+    Arr(Vec<Json>),
+    /// An object, in document key order.
+    Obj(Vec<(String, Json)>),
+}
+
+impl Json {
+    /// Object member by key.
+    pub fn get(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(members) => members.iter().find(|(k, _)| k == key).map(|(_, v)| v),
+            _ => None,
+        }
+    }
+
+    /// The value as a float.
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Json::Num(x) => Some(*x),
+            _ => None,
+        }
+    }
+
+    /// The value as an exact unsigned integer.
+    pub fn as_u64(&self) -> Option<u64> {
+        match self {
+            Json::Num(x) if *x >= 0.0 && x.fract() == 0.0 && *x <= u64::MAX as f64 => {
+                Some(*x as u64)
+            }
+            _ => None,
+        }
+    }
+
+    /// The value as a string slice.
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Json::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+
+    /// The value as a bool.
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Json::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+
+    /// The value as an array slice.
+    pub fn as_arr(&self) -> Option<&[Json]> {
+        match self {
+            Json::Arr(items) => Some(items),
+            _ => None,
+        }
+    }
+
+    /// Object keys in document order.
+    pub fn keys(&self) -> Vec<&str> {
+        match self {
+            Json::Obj(members) => members.iter().map(|(k, _)| k.as_str()).collect(),
+            _ => Vec::new(),
+        }
+    }
+}
+
+/// Parse error with a byte offset into the source.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct JsonError {
+    /// Byte offset of the error.
+    pub pos: usize,
+    /// Human-readable description.
+    pub msg: String,
+}
+
+impl fmt::Display for JsonError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "json error at byte {}: {}", self.pos, self.msg)
+    }
+}
+
+impl std::error::Error for JsonError {}
+
+/// Strictly parse one JSON document (trailing whitespace allowed, trailing
+/// content rejected).
+pub fn parse(src: &str) -> Result<Json, JsonError> {
+    let mut p = Parser { bytes: src.as_bytes(), pos: 0 };
+    p.skip_ws();
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing content after document"));
+    }
+    Ok(v)
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl Parser<'_> {
+    fn err(&self, msg: impl Into<String>) -> JsonError {
+        JsonError { pos: self.pos, msg: msg.into() }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn skip_ws(&mut self) {
+        while matches!(self.peek(), Some(b' ' | b'\t' | b'\n' | b'\r')) {
+            self.pos += 1;
+        }
+    }
+
+    fn expect(&mut self, b: u8) -> Result<(), JsonError> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<Json, JsonError> {
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(Json::Str(self.string()?)),
+            Some(b't') => self.literal("true", Json::Bool(true)),
+            Some(b'f') => self.literal("false", Json::Bool(false)),
+            Some(b'n') => self.literal("null", Json::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            _ => Err(self.err("expected a JSON value")),
+        }
+    }
+
+    fn literal(&mut self, word: &str, v: Json) -> Result<Json, JsonError> {
+        if self.bytes[self.pos..].starts_with(word.as_bytes()) {
+            self.pos += word.len();
+            Ok(v)
+        } else {
+            Err(self.err(format!("expected '{word}'")))
+        }
+    }
+
+    fn object(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'{')?;
+        let mut members = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(Json::Obj(members));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            if members.iter().any(|(k, _)| *k == key) {
+                return Err(self.err(format!("duplicate key '{key}'")));
+            }
+            self.skip_ws();
+            self.expect(b':')?;
+            self.skip_ws();
+            let v = self.value()?;
+            members.push((key, v));
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(Json::Obj(members));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json, JsonError> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(Json::Arr(items));
+        }
+        loop {
+            self.skip_ws();
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => self.pos += 1,
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(Json::Arr(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String, JsonError> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    match self.peek() {
+                        Some(b'"') => out.push('"'),
+                        Some(b'\\') => out.push('\\'),
+                        Some(b'/') => out.push('/'),
+                        Some(b'n') => out.push('\n'),
+                        Some(b'r') => out.push('\r'),
+                        Some(b't') => out.push('\t'),
+                        Some(b'u') => {
+                            let hex = self
+                                .bytes
+                                .get(self.pos + 1..self.pos + 5)
+                                .ok_or_else(|| self.err("truncated \\u escape"))?;
+                            let hex = std::str::from_utf8(hex)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            out.push(
+                                char::from_u32(code)
+                                    .ok_or_else(|| self.err("bad \\u code point"))?,
+                            );
+                            self.pos += 4;
+                        }
+                        _ => return Err(self.err("bad escape")),
+                    }
+                    self.pos += 1;
+                }
+                Some(_) => {
+                    // Consume one UTF-8 scalar (multi-byte sequences pass
+                    // through unmodified; the source is a &str, so they
+                    // are valid by construction).
+                    let start = self.pos;
+                    self.pos += 1;
+                    while self.pos < self.bytes.len() && (self.bytes[self.pos] & 0xc0) == 0x80 {
+                        self.pos += 1;
+                    }
+                    out.push_str(
+                        std::str::from_utf8(&self.bytes[start..self.pos])
+                            .map_err(|_| self.err("invalid UTF-8"))?,
+                    );
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json, JsonError> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+            self.pos += 1;
+        }
+        if self.peek() == Some(b'.') {
+            self.pos += 1;
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        if matches!(self.peek(), Some(b'e' | b'E')) {
+            self.pos += 1;
+            if matches!(self.peek(), Some(b'+' | b'-')) {
+                self.pos += 1;
+            }
+            while matches!(self.peek(), Some(c) if c.is_ascii_digit()) {
+                self.pos += 1;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos]).unwrap();
+        text.parse::<f64>()
+            .map(Json::Num)
+            .map_err(|_| self.err(format!("bad number '{text}'")))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::{CompileRequest, Session};
+
+    #[test]
+    fn parser_round_trips_scalars_and_structure() {
+        let doc = r#"{"a": 1.5, "b": [true, false, null, "x\n\"y\""], "c": {"d": -3e2}}"#;
+        let v = parse(doc).unwrap();
+        assert_eq!(v.keys(), vec!["a", "b", "c"]);
+        assert_eq!(v.get("a").unwrap().as_f64(), Some(1.5));
+        let b = v.get("b").unwrap().as_arr().unwrap();
+        assert_eq!(b[0].as_bool(), Some(true));
+        assert_eq!(b[3].as_str(), Some("x\n\"y\""));
+        assert_eq!(v.get("c").unwrap().get("d").unwrap().as_f64(), Some(-300.0));
+    }
+
+    #[test]
+    fn parser_rejects_malformed_documents() {
+        for bad in [
+            "",
+            "{",
+            "[1,]",
+            "{\"a\": 1,}",
+            "{\"a\": 1} extra",
+            "{\"a\": 1, \"a\": 2}",
+            "\"unterminated",
+            "nul",
+        ] {
+            assert!(parse(bad).is_err(), "{bad:?} parsed");
+        }
+    }
+
+    #[test]
+    fn floats_round_trip_exactly_through_shortest_display() {
+        for x in [0.1, 1.0 / 3.0, 123456.789, 1e-9, 2.5e17] {
+            let doc = format!("{{\"x\": {}}}", jf(x));
+            let v = parse(&doc).unwrap();
+            assert_eq!(v.get("x").unwrap().as_f64(), Some(x), "{x}");
+        }
+        assert_eq!(jf(f64::NAN), "0");
+        assert_eq!(jf(f64::INFINITY), "0");
+    }
+
+    #[test]
+    fn escaping_survives_round_trip() {
+        let nasty = "a\"b\\c\nd\te\u{1}µ";
+        let doc = format!("{{\"s\": \"{}\"}}", esc(nasty));
+        let v = parse(&doc).unwrap();
+        assert_eq!(v.get("s").unwrap().as_str(), Some(nasty));
+    }
+
+    #[test]
+    fn compile_document_has_the_versioned_skeleton() {
+        let session = Session::new();
+        let r = session
+            .compile(&CompileRequest::new().network("alexnet").threads(2))
+            .unwrap();
+        let doc = compile_report(&r);
+        let v = parse(&doc).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("compile"));
+        assert_eq!(
+            v.keys(),
+            vec![
+                "schema",
+                "kind",
+                "workload",
+                "arch",
+                "mapper",
+                "objective",
+                "networks",
+                "totals",
+                "cache",
+                "compile_time_ms"
+            ]
+        );
+        let nets = v.get("networks").unwrap().as_arr().unwrap();
+        assert_eq!(nets.len(), 1);
+        assert_eq!(nets[0].keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
+        let layers = nets[0].get("layers").unwrap().as_arr().unwrap();
+        assert_eq!(layers.len(), 5);
+        assert_eq!(
+            layers[0].keys(),
+            vec![
+                "name",
+                "op",
+                "macs",
+                "energy_uj",
+                "pj_per_mac",
+                "latency_cycles",
+                "utilization",
+                "evaluations",
+                "map_time_ms",
+                "score",
+                "cached",
+                "mapping"
+            ]
+        );
+        assert_eq!(
+            layers[0].get("mapping").unwrap().keys(),
+            vec!["temporal", "permutation", "spatial_x", "spatial_y"]
+        );
+        // Totals in the document equal the typed report exactly (shortest
+        // round-trip floats).
+        let totals = v.get("totals").unwrap();
+        assert_eq!(totals.get("layers").unwrap().as_u64(), Some(5));
+        assert_eq!(totals.get("macs").unwrap().as_u64(), Some(r.total_macs()));
+        assert_eq!(
+            totals.get("energy_uj").unwrap().as_f64(),
+            Some(r.total_energy_uj())
+        );
+        assert_eq!(
+            totals.get("latency_cycles").unwrap().as_u64(),
+            Some(r.total_latency_cycles())
+        );
+    }
+
+    #[test]
+    fn simulate_and_explore_documents_parse() {
+        use crate::explore::SweepGrid;
+        use crate::sim::SimOptions;
+        let session = Session::new();
+        let sim = session
+            .simulate(&CompileRequest::new().layer_spec("vgg02:5"), SimOptions::default())
+            .unwrap();
+        let v = parse(&simulate_report(&sim)).unwrap();
+        assert_eq!(v.get("schema").unwrap().as_str(), Some(SCHEMA));
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("simulate"));
+        assert!(v.get("sim").unwrap().get("total_cycles").unwrap().as_u64().is_some());
+        assert_eq!(
+            v.get("sim").unwrap().get("levels").unwrap().as_arr().unwrap().len(),
+            sim.acc.n_levels()
+        );
+
+        let grid = SweepGrid { pe_dims: vec![(8, 8)], l1_depths: vec![8192, 16384] };
+        let ex = session
+            .explore(&CompileRequest::new().network("alexnet"), &grid)
+            .unwrap();
+        let v = parse(&explore_report(&ex)).unwrap();
+        assert_eq!(v.get("kind").unwrap().as_str(), Some("explore"));
+        assert_eq!(v.get("results").unwrap().as_arr().unwrap().len(), 2);
+        assert!(!v.get("pareto").unwrap().as_arr().unwrap().is_empty());
+    }
+}

@@ -1,0 +1,279 @@
+//! The stable, embeddable compilation API.
+//!
+//! Everything the CLI can do is reachable programmatically through three
+//! pieces, layered so a service or another compiler can embed the mapper
+//! without touching `main.rs`:
+//!
+//! 1. [`CompileRequest`] — a typed, builder-style description of *what* to
+//!    compile: a workload ([`WorkloadSpec`]: zoo network, single layer
+//!    spec, YAML file, explicit layer list, or the whole batch zoo), an
+//!    accelerator ([`ArchSpec`]: preset name, YAML file, or an in-memory
+//!    config), a mapper spec plus [`crate::mappers::SearchParams`], and
+//!    the worker-thread count.
+//! 2. [`Session`] — the facade that owns the
+//!    [`crate::coordinator::MappingService`] instances behind the
+//!    requests. Services (hence mapping caches and
+//!    [`crate::coordinator::ServiceMetrics`]) are keyed by
+//!    (arch, mapper, search params, threads) and **live for the whole
+//!    session**, so repeated requests share warm caches. [`Session::compile`]
+//!    returns a typed [`CompileReport`]; [`Session::compile_iter`] streams
+//!    [`LayerReport`]s as the worker pool finishes them.
+//! 3. [`json`] — a dependency-free, versioned JSON serializer (schema tag
+//!    `"api_v1"`, byte-stable key order) for every report type, plus a
+//!    strict parser used by the validation tooling and tests.
+//!
+//! All failures funnel into one crate-wide [`Error`] with a stable
+//! [`Error::code`] per category and an [`ErrorClass`] that fixes the CLI
+//! exit code (usage = 2, invalid input = 3, mapping/execution failure
+//! = 4).
+//!
+//! ```
+//! use local_mapper::api::{CompileRequest, Session};
+//!
+//! let session = Session::new();
+//! let report = session
+//!     .compile(&CompileRequest::new().network("alexnet"))
+//!     .unwrap();
+//! assert_eq!(report.total_layers(), 5);
+//! assert!(report.total_energy_uj() > 0.0);
+//! let doc = local_mapper::api::json::compile_report(&report);
+//! assert!(doc.starts_with("{\n  \"schema\": \"api_v1\""));
+//! ```
+
+pub mod json;
+pub mod request;
+pub mod session;
+
+pub use request::{ArchSpec, CompileRequest, WorkloadSpec};
+pub use session::{
+    CompileReport, ExploreReport, LayerReport, LayerStream, NetworkReport, Session,
+    SessionMetrics, SimulateReport,
+};
+
+use crate::arch::config::ConfigError;
+use crate::mappers::MapError;
+use crate::mapping::MappingError;
+use crate::runtime::RuntimeError;
+use crate::util::yaml::YamlError;
+use crate::workload::config::WorkloadError;
+use std::fmt;
+
+/// Coarse error class: what kind of failure this is, independent of the
+/// module that produced it. Fixes the CLI exit code so scripts can branch
+/// on *category* without parsing messages.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ErrorClass {
+    /// The request itself is malformed: unknown network/mapper/arch/
+    /// objective/format name, bad layer spec, empty workload (exit 2).
+    Usage,
+    /// The request is well-formed but an input failed to load or parse:
+    /// YAML syntax/structure errors, I/O failures (exit 3).
+    InvalidInput,
+    /// Valid inputs, but mapping or execution failed: no valid mapping in
+    /// budget, mapping validation failure, runtime error (exit 4).
+    Failure,
+}
+
+impl ErrorClass {
+    /// The process exit code the CLI uses for this class.
+    pub fn exit_code(self) -> i32 {
+        match self {
+            ErrorClass::Usage => 2,
+            ErrorClass::InvalidInput => 3,
+            ErrorClass::Failure => 4,
+        }
+    }
+}
+
+/// The crate-wide error: one enum wrapping every module error so embedders
+/// handle a single type with stable codes, instead of six module enums and
+/// ad-hoc `String`s.
+#[derive(Debug)]
+pub enum Error {
+    /// Malformed request (unknown names, bad specs). Produced by the
+    /// request resolver and the CLI flag parser.
+    Request(String),
+    /// Workload YAML loading/validation failed
+    /// ([`crate::workload::config`]).
+    Workload(WorkloadError),
+    /// Accelerator config loading/validation failed
+    /// ([`crate::arch::config`]).
+    Config(ConfigError),
+    /// Raw YAML syntax error outside a workload/config wrapper
+    /// ([`crate::util::yaml`]).
+    Yaml(YamlError),
+    /// A constructed mapping failed validation
+    /// ([`crate::mapping::MappingError`]).
+    Mapping(MappingError),
+    /// A mapper failed to produce a valid mapping
+    /// ([`crate::mappers::MapError`]).
+    Map(MapError),
+    /// PJRT runtime failure ([`crate::runtime::RuntimeError`]).
+    Runtime(RuntimeError),
+    /// Filesystem I/O failure on a path named by the request.
+    Io {
+        /// The path being read or written.
+        path: String,
+        /// The underlying I/O error.
+        source: std::io::Error,
+    },
+}
+
+impl Error {
+    /// Build a [`Error::Request`] from any displayable message.
+    pub fn request(msg: impl Into<String>) -> Self {
+        Error::Request(msg.into())
+    }
+
+    /// Build a [`Error::Io`] tagged with the offending path.
+    pub fn io(path: impl Into<String>, source: std::io::Error) -> Self {
+        Error::Io { path: path.into(), source }
+    }
+
+    /// Stable machine-readable code for the error category. These are part
+    /// of the API contract: embedders and scripts may match on them, so a
+    /// code is never renamed or reused (pinned by `error_codes_are_stable`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            Error::Request(_) => "E_REQUEST",
+            Error::Workload(_) => "E_WORKLOAD",
+            Error::Config(_) => "E_CONFIG",
+            Error::Yaml(_) => "E_YAML",
+            Error::Mapping(_) => "E_MAPPING",
+            Error::Map(_) => "E_SEARCH",
+            Error::Runtime(_) => "E_RUNTIME",
+            Error::Io { .. } => "E_IO",
+        }
+    }
+
+    /// The error's [`ErrorClass`] (hence CLI exit code).
+    pub fn class(&self) -> ErrorClass {
+        match self {
+            Error::Request(_) => ErrorClass::Usage,
+            Error::Workload(_) | Error::Config(_) | Error::Yaml(_) | Error::Io { .. } => {
+                ErrorClass::InvalidInput
+            }
+            Error::Mapping(_) | Error::Map(_) | Error::Runtime(_) => ErrorClass::Failure,
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Request(msg) => f.write_str(msg),
+            Error::Workload(e) => fmt::Display::fmt(e, f),
+            Error::Config(e) => fmt::Display::fmt(e, f),
+            Error::Yaml(e) => fmt::Display::fmt(e, f),
+            Error::Mapping(e) => fmt::Display::fmt(e, f),
+            Error::Map(e) => fmt::Display::fmt(e, f),
+            Error::Runtime(e) => fmt::Display::fmt(e, f),
+            Error::Io { path, source } => write!(f, "io: {path}: {source}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Request(_) => None,
+            Error::Workload(e) => Some(e),
+            Error::Config(e) => Some(e),
+            Error::Yaml(e) => Some(e),
+            Error::Mapping(e) => Some(e),
+            Error::Map(e) => Some(e),
+            Error::Runtime(e) => Some(e),
+            Error::Io { source, .. } => Some(source),
+        }
+    }
+}
+
+impl From<WorkloadError> for Error {
+    fn from(e: WorkloadError) -> Self {
+        Error::Workload(e)
+    }
+}
+
+impl From<ConfigError> for Error {
+    fn from(e: ConfigError) -> Self {
+        Error::Config(e)
+    }
+}
+
+impl From<YamlError> for Error {
+    fn from(e: YamlError) -> Self {
+        Error::Yaml(e)
+    }
+}
+
+impl From<MappingError> for Error {
+    fn from(e: MappingError) -> Self {
+        Error::Mapping(e)
+    }
+}
+
+impl From<MapError> for Error {
+    fn from(e: MapError) -> Self {
+        Error::Map(e)
+    }
+}
+
+impl From<RuntimeError> for Error {
+    fn from(e: RuntimeError) -> Self {
+        Error::Runtime(e)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_codes_are_stable() {
+        // Codes and exit codes are API contract: scripts match on them.
+        let cases: Vec<(Error, &str, i32)> = vec![
+            (Error::request("x"), "E_REQUEST", 2),
+            (
+                Error::from(WorkloadError::Invalid("x".into())),
+                "E_WORKLOAD",
+                3,
+            ),
+            (Error::from(ConfigError::Invalid("x".into())), "E_CONFIG", 3),
+            (
+                Error::from(YamlError { line: 1, msg: "x".into() }),
+                "E_YAML",
+                3,
+            ),
+            (
+                Error::from(MappingError::LevelMismatch { found: 2, expected: 3 }),
+                "E_MAPPING",
+                4,
+            ),
+            (
+                Error::from(MapError::NoValidMapping("x".into())),
+                "E_SEARCH",
+                4,
+            ),
+            (Error::from(RuntimeError::msg("x")), "E_RUNTIME", 4),
+            (
+                Error::io("/p", std::io::Error::new(std::io::ErrorKind::NotFound, "x")),
+                "E_IO",
+                3,
+            ),
+        ];
+        for (e, code, exit) in cases {
+            assert_eq!(e.code(), code);
+            assert_eq!(e.class().exit_code(), exit, "{code}");
+            assert!(!e.to_string().is_empty());
+        }
+    }
+
+    #[test]
+    fn wrapped_sources_are_reachable() {
+        use std::error::Error as _;
+        let e = Error::from(WorkloadError::Invalid("bad".into()));
+        assert!(e.source().is_some());
+        assert!(e.to_string().contains("bad"));
+        assert!(Error::request("no").source().is_none());
+    }
+}

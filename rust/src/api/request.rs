@@ -1,0 +1,375 @@
+//! Typed compilation requests — the builder side of the API.
+//!
+//! A [`CompileRequest`] names a workload, an accelerator, a mapper and its
+//! search knobs without resolving any of them; [`CompileRequest::resolve`]
+//! turns the specs into concrete layers, an [`Accelerator`] and an
+//! [`AnyMapper`] with typed [`crate::api::Error`]s for every way that can
+//! fail. The CLI's `map`, `compile`, `compile-all`, `simulate` and
+//! `explore` subcommands are all thin translations of their flags into one
+//! of these.
+
+use super::Error;
+use crate::arch::{config, presets, Accelerator};
+use crate::mappers::{AnyMapper, Objective, SearchParams};
+use crate::workload::{config as wconfig, zoo, Layer};
+
+/// What to compile.
+#[derive(Debug, Clone)]
+pub enum WorkloadSpec {
+    /// A zoo network by name ([`zoo::network`] spellings).
+    Network(String),
+    /// One layer, CLI spelling: `network:index` (1-based) or explicit
+    /// `MxCxRxSxPxQ` dims (see [`parse_layer_spec`]).
+    LayerSpec(String),
+    /// An explicit, already-constructed layer.
+    Layer(Layer),
+    /// A workload YAML file ([`crate::workload::config`] format).
+    File(String),
+    /// An explicit named layer list (embedders with their own IR).
+    Layers {
+        /// Label used in reports.
+        name: String,
+        /// The layers, in network order.
+        layers: Vec<Layer>,
+    },
+    /// The whole batch zoo ([`zoo::batch_zoo`]) — what `compile-all`
+    /// compiles.
+    Zoo,
+}
+
+/// Which accelerator to target.
+#[derive(Debug, Clone)]
+pub enum ArchSpec {
+    /// A preset by name ([`presets::by_name`]: eyeriss / nvdla /
+    /// shidiannao).
+    Preset(String),
+    /// A Timeloop-style YAML config file ([`crate::arch::config`]).
+    File(String),
+    /// An explicit, already-constructed accelerator.
+    Config(Box<Accelerator>),
+}
+
+/// A typed compilation request. Build with the fluent setters, hand to
+/// [`crate::api::Session::compile`]; nothing resolves until then.
+#[derive(Debug, Clone)]
+pub struct CompileRequest {
+    /// The workload to compile.
+    pub workload: WorkloadSpec,
+    /// The accelerator to target.
+    pub arch: ArchSpec,
+    /// Mapper spec ([`AnyMapper::SPEC`] spellings).
+    pub mapper: String,
+    /// Search knobs threaded into the mapper (budget, seed, objective,
+    /// search threads, pruning).
+    pub search: SearchParams,
+    /// Worker threads for the mapping service the request runs on.
+    pub threads: usize,
+}
+
+impl Default for CompileRequest {
+    fn default() -> Self {
+        Self {
+            workload: WorkloadSpec::Network("vgg16".into()),
+            arch: ArchSpec::Preset("eyeriss".into()),
+            mapper: "local".into(),
+            search: SearchParams::default(),
+            threads: 4,
+        }
+    }
+}
+
+impl CompileRequest {
+    /// A request with the defaults: VGG-16 on Eyeriss, LOCAL mapper,
+    /// default [`SearchParams`], 4 service workers.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Select a zoo network by name.
+    pub fn network(mut self, name: impl Into<String>) -> Self {
+        self.workload = WorkloadSpec::Network(name.into());
+        self
+    }
+
+    /// Select one layer by CLI spec (`network:index` or `MxCxRxSxPxQ`).
+    pub fn layer_spec(mut self, spec: impl Into<String>) -> Self {
+        self.workload = WorkloadSpec::LayerSpec(spec.into());
+        self
+    }
+
+    /// Select one explicit layer.
+    pub fn layer(mut self, layer: Layer) -> Self {
+        self.workload = WorkloadSpec::Layer(layer);
+        self
+    }
+
+    /// Select a workload YAML file.
+    pub fn workload_file(mut self, path: impl Into<String>) -> Self {
+        self.workload = WorkloadSpec::File(path.into());
+        self
+    }
+
+    /// Select an explicit named layer list.
+    pub fn layers(mut self, name: impl Into<String>, layers: Vec<Layer>) -> Self {
+        self.workload = WorkloadSpec::Layers { name: name.into(), layers };
+        self
+    }
+
+    /// Select the whole batch zoo (`compile-all`).
+    pub fn zoo(mut self) -> Self {
+        self.workload = WorkloadSpec::Zoo;
+        self
+    }
+
+    /// Target an accelerator preset by name.
+    pub fn arch_preset(mut self, name: impl Into<String>) -> Self {
+        self.arch = ArchSpec::Preset(name.into());
+        self
+    }
+
+    /// Target an accelerator YAML config file.
+    pub fn arch_file(mut self, path: impl Into<String>) -> Self {
+        self.arch = ArchSpec::File(path.into());
+        self
+    }
+
+    /// Target an explicit accelerator config.
+    pub fn accelerator(mut self, acc: Accelerator) -> Self {
+        self.arch = ArchSpec::Config(Box::new(acc));
+        self
+    }
+
+    /// Choose the mapper ([`AnyMapper::SPEC`] spellings).
+    pub fn mapper(mut self, spec: impl Into<String>) -> Self {
+        self.mapper = spec.into();
+        self
+    }
+
+    /// Replace the whole search-parameter block.
+    pub fn search(mut self, params: SearchParams) -> Self {
+        self.search = params;
+        self
+    }
+
+    /// Set the per-layer search budget.
+    pub fn budget(mut self, budget: u64) -> Self {
+        self.search.budget = budget;
+        self
+    }
+
+    /// Set the stochastic-mapper seed.
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.search.seed = seed;
+        self
+    }
+
+    /// Set the search objective.
+    pub fn objective(mut self, objective: Objective) -> Self {
+        self.search.objective = objective;
+        self
+    }
+
+    /// Set the per-mapper search-thread count.
+    pub fn search_threads(mut self, threads: usize) -> Self {
+        self.search.threads = threads.max(1);
+        self
+    }
+
+    /// Enable/disable bound-based pruning.
+    pub fn prune(mut self, prune: bool) -> Self {
+        self.search.prune = prune;
+        self
+    }
+
+    /// Set the mapping-service worker-thread count.
+    pub fn threads(mut self, threads: usize) -> Self {
+        self.threads = threads.max(1);
+        self
+    }
+
+    /// Resolve every spec into concrete values. All the ways a request can
+    /// be wrong surface here as typed errors: unknown names are
+    /// [`Error::Request`] (usage), unreadable/invalid files are
+    /// [`Error::Workload`] / [`Error::Config`] (invalid input).
+    pub fn resolve(&self) -> Result<ResolvedRequest, Error> {
+        let networks = match &self.workload {
+            WorkloadSpec::Network(name) => {
+                let layers = zoo::network(name)
+                    .ok_or_else(|| Error::request(format!("unknown network '{name}'")))?;
+                vec![(name.clone(), layers)]
+            }
+            WorkloadSpec::LayerSpec(spec) => {
+                let layer = parse_layer_spec(spec)?;
+                vec![(layer.name.clone(), vec![layer])]
+            }
+            WorkloadSpec::Layer(layer) => vec![(layer.name.clone(), vec![layer.clone()])],
+            WorkloadSpec::File(path) => {
+                let layers = wconfig::layers_from_file(path)?;
+                vec![(path.clone(), layers)]
+            }
+            WorkloadSpec::Layers { name, layers } => {
+                if layers.is_empty() {
+                    return Err(Error::request(format!("workload '{name}' has no layers")));
+                }
+                vec![(name.clone(), layers.clone())]
+            }
+            WorkloadSpec::Zoo => zoo::batch_zoo(),
+        };
+        let acc = match &self.arch {
+            ArchSpec::Preset(name) => presets::by_name(name).ok_or_else(|| {
+                Error::request(format!("unknown arch '{name}' (eyeriss|nvdla|shidiannao)"))
+            })?,
+            ArchSpec::File(path) => config::accelerator_from_file(path)?,
+            ArchSpec::Config(acc) => (**acc).clone(),
+        };
+        let params = SearchParams { budget: self.search.budget.max(1), ..self.search };
+        let mapper = AnyMapper::parse(&self.mapper, params).ok_or_else(|| {
+            Error::request(format!("unknown mapper '{}' ({})", self.mapper, AnyMapper::SPEC))
+        })?;
+        Ok(ResolvedRequest { networks, acc, mapper, threads: self.threads.max(1) })
+    }
+}
+
+/// A fully-resolved request: concrete layers, accelerator and mapper.
+#[derive(Debug, Clone)]
+pub struct ResolvedRequest {
+    /// `(network name, layers)` in submission order.
+    pub networks: Vec<(String, Vec<Layer>)>,
+    /// The accelerator to map onto.
+    pub acc: Accelerator,
+    /// The resolved mapper.
+    pub mapper: AnyMapper,
+    /// Service worker threads.
+    pub threads: usize,
+}
+
+impl ResolvedRequest {
+    /// Label for reports: the single network's name, or `zoo(n)` for a
+    /// multi-network batch.
+    pub fn workload_label(&self) -> String {
+        if self.networks.len() == 1 {
+            self.networks[0].0.clone()
+        } else {
+            format!("zoo({})", self.networks.len())
+        }
+    }
+}
+
+/// Parse a CLI layer spec: `network:index` (1-based into the zoo network)
+/// or explicit `MxCxRxSxPxQ` dims (a dense conv named `custom`).
+pub fn parse_layer_spec(spec: &str) -> Result<Layer, Error> {
+    if let Some((net, idx)) = spec.split_once(':') {
+        let layers = zoo::network(net)
+            .ok_or_else(|| Error::request(format!("unknown network '{net}'")))?;
+        let i: usize = idx
+            .parse()
+            .map_err(|_| Error::request(format!("bad layer index '{idx}' in '{spec}'")))?;
+        if i == 0 || i > layers.len() {
+            return Err(Error::request(format!("{net} has layers 1..={}", layers.len())));
+        }
+        Ok(layers[i - 1].clone())
+    } else {
+        let dims: Vec<u64> = spec
+            .split('x')
+            .map(|p| {
+                p.parse().map_err(|_| Error::request(format!("bad dim '{p}' in '{spec}'")))
+            })
+            .collect::<Result<_, _>>()?;
+        match dims[..] {
+            [m, c, r, s, p, q] => Ok(Layer::new("custom", m, c, r, s, p, q)),
+            _ => Err(Error::request(format!(
+                "layer dims must be MxCxRxSxPxQ (got '{spec}')"
+            ))),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ErrorClass;
+
+    #[test]
+    fn builder_resolves_network_and_preset() {
+        let r = CompileRequest::new()
+            .network("alexnet")
+            .arch_preset("nvdla")
+            .mapper("local")
+            .resolve()
+            .unwrap();
+        assert_eq!(r.networks.len(), 1);
+        assert_eq!(r.networks[0].1.len(), 5);
+        assert_eq!(r.acc.name, "NVDLA");
+        assert_eq!(r.workload_label(), "alexnet");
+    }
+
+    #[test]
+    fn layer_specs_parse_both_spellings() {
+        let l = parse_layer_spec("vgg02:5").unwrap();
+        assert_eq!(l.name, "VGG02_conv5");
+        let l = parse_layer_spec("16x8x3x3x14x14").unwrap();
+        assert_eq!(l.name, "custom");
+        assert_eq!(l.bounds(), [1, 16, 8, 3, 3, 14, 14]);
+        for bad in ["vgg02:0", "vgg02:99", "frob:1", "vgg02:x", "3x3", "axbxcxdxexf"] {
+            let e = parse_layer_spec(bad).unwrap_err();
+            assert_eq!(e.class(), ErrorClass::Usage, "{bad}");
+        }
+    }
+
+    #[test]
+    fn unknown_names_are_usage_errors() {
+        for req in [
+            CompileRequest::new().network("frobnet"),
+            CompileRequest::new().arch_preset("tpu"),
+            CompileRequest::new().mapper("frob"),
+            CompileRequest::new().layers("empty", vec![]),
+        ] {
+            let e = req.resolve().unwrap_err();
+            assert_eq!(e.class(), ErrorClass::Usage, "{e}");
+            assert_eq!(e.code(), "E_REQUEST");
+        }
+    }
+
+    #[test]
+    fn missing_files_are_invalid_input() {
+        let e = CompileRequest::new()
+            .workload_file("/nonexistent/layers.yaml")
+            .resolve()
+            .unwrap_err();
+        assert_eq!(e.class(), ErrorClass::InvalidInput);
+        assert_eq!(e.code(), "E_WORKLOAD");
+        let e = CompileRequest::new()
+            .arch_file("/nonexistent/arch.yaml")
+            .resolve()
+            .unwrap_err();
+        assert_eq!(e.code(), "E_CONFIG");
+    }
+
+    #[test]
+    fn zoo_request_resolves_the_batch_set() {
+        let r = CompileRequest::new().zoo().resolve().unwrap();
+        assert_eq!(r.networks.len(), 8);
+        assert_eq!(r.workload_label(), "zoo(8)");
+        assert_eq!(
+            r.networks.iter().map(|(_, l)| l.len()).sum::<usize>(),
+            13 + 53 + 52 + 26 + 5 + 96 + 18 + 62
+        );
+    }
+
+    #[test]
+    fn search_knobs_thread_through() {
+        let r = CompileRequest::new()
+            .network("alexnet")
+            .mapper("random")
+            .budget(40)
+            .seed(7)
+            .objective(Objective::Edp)
+            .search_threads(2)
+            .prune(false)
+            .resolve()
+            .unwrap();
+        use crate::mappers::Mapper;
+        assert_eq!(r.mapper.objective(), Objective::Edp);
+        assert_eq!(r.mapper.name(), "random×40");
+    }
+}

@@ -1,0 +1,743 @@
+//! The [`Session`] facade — the embeddable face of the compiler.
+//!
+//! A session owns the [`MappingService`] instances that serve its
+//! requests. Services are keyed by (accelerator, mapper spec, search
+//! params, worker count) and live for the whole session, so the mapping
+//! cache and [`ServiceMetrics`] behind a key are **shared across
+//! requests**: compiling the same network twice through one session is a
+//! 100% cache hit the second time, and a long-lived embedder (a compiler
+//! daemon, a serving tier) keeps its warm caches between callers.
+//!
+//! [`Session::compile`] returns a typed [`CompileReport`];
+//! [`Session::compile_iter`] streams [`LayerReport`]s as the worker pool
+//! finishes them, so batch callers can render progress without waiting for
+//! the last shard. [`Session::simulate`] and [`Session::explore`] wrap the
+//! tile-pipeline simulator and the co-design sweep behind the same
+//! request/report surface.
+
+use super::request::{CompileRequest, ResolvedRequest};
+use super::Error;
+use crate::arch::Accelerator;
+use crate::coordinator::{JobHandle, MappingService, ServiceMetrics};
+use crate::explore::{self, DesignResult, SweepGrid};
+use crate::mappers::{MapError, MapOutcome, Mapper, Objective};
+use crate::noc::{self, MeshTraffic};
+use crate::sim::{self, SimOptions, SimResult};
+use crate::workload::Layer;
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Everything that distinguishes one mapping service from another: two
+/// requests with equal keys share a service (hence cache and metrics).
+/// The accelerator contributes its name **and** a fingerprint of its full
+/// YAML serialization, so two in-memory configs that happen to share a
+/// name never share a service (the per-service mapping cache keys by name
+/// only — [`crate::coordinator::LayerKey`] — so a collision there would
+/// silently serve results computed for the wrong hardware).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+struct ServiceKey {
+    arch: String,
+    arch_fp: u64,
+    mapper: String,
+    budget: u64,
+    seed: u64,
+    objective: Objective,
+    search_threads: usize,
+    prune: bool,
+    workers: usize,
+}
+
+/// FNV-1a over a byte string (stable fingerprint for [`ServiceKey`]).
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+impl ServiceKey {
+    fn of(req: &CompileRequest, resolved: &ResolvedRequest) -> Self {
+        Self {
+            arch: resolved.acc.name.clone(),
+            arch_fp: fnv1a(crate::arch::config::accelerator_to_yaml(&resolved.acc).as_bytes()),
+            mapper: req.mapper.to_ascii_lowercase(),
+            budget: req.search.budget.max(1),
+            seed: req.search.seed,
+            objective: req.search.objective,
+            search_threads: req.search.threads.max(1),
+            prune: req.search.prune,
+            workers: resolved.threads,
+        }
+    }
+}
+
+/// One mapped layer, as reported to API callers.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    /// The network the layer belongs to (workload label for single-layer
+    /// requests).
+    pub network: String,
+    /// The layer that was mapped.
+    pub layer: Layer,
+    /// The mapping result: mapping, evaluation, objective, score, search
+    /// cost.
+    pub outcome: MapOutcome,
+    /// Served from the session's mapping cache (shape already mapped under
+    /// the same objective).
+    pub cached: bool,
+}
+
+impl LayerReport {
+    /// Layer energy, µJ.
+    pub fn energy_uj(&self) -> f64 {
+        self.outcome.evaluation.energy.total_uj()
+    }
+
+    /// Layer energy per MAC, pJ.
+    pub fn pj_per_mac(&self) -> f64 {
+        self.outcome.evaluation.energy.pj_per_mac(self.outcome.evaluation.macs)
+    }
+
+    /// Roofline latency, cycles.
+    pub fn latency_cycles(&self) -> u64 {
+        self.outcome.evaluation.latency_cycles
+    }
+
+    /// MAC operations in the layer.
+    pub fn macs(&self) -> u64 {
+        self.outcome.evaluation.macs
+    }
+
+    /// PE utilization in `[0, 1]`.
+    pub fn utilization(&self) -> f64 {
+        self.outcome.evaluation.utilization
+    }
+}
+
+/// All layers of one network within a [`CompileReport`].
+#[derive(Debug, Clone)]
+pub struct NetworkReport {
+    /// Network name (workload label).
+    pub name: String,
+    /// Per-layer reports in network order.
+    pub layers: Vec<LayerReport>,
+    /// Reply-collection wall-clock for this network within the request.
+    pub compile_time: Duration,
+}
+
+impl NetworkReport {
+    /// Total MACs over the network.
+    pub fn total_macs(&self) -> u64 {
+        self.layers.iter().map(LayerReport::macs).sum()
+    }
+
+    /// Total energy over the network, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.layers.iter().map(LayerReport::energy_uj).sum()
+    }
+
+    /// Total roofline latency (sequential execution), cycles.
+    pub fn total_latency_cycles(&self) -> u64 {
+        self.layers.iter().map(LayerReport::latency_cycles).sum()
+    }
+
+    /// Network-wide energy per MAC, pJ.
+    pub fn pj_per_mac(&self) -> f64 {
+        self.total_energy_uj() * 1e6 / self.total_macs().max(1) as f64
+    }
+
+    /// MAC-weighted mean PE utilization.
+    pub fn mean_utilization(&self) -> f64 {
+        let total = self.total_macs() as f64;
+        self.layers.iter().map(|l| l.utilization() * l.macs() as f64).sum::<f64>()
+            / total.max(1.0)
+    }
+
+    /// Layers served from the session cache.
+    pub fn cache_hits(&self) -> usize {
+        self.layers.iter().filter(|l| l.cached).count()
+    }
+}
+
+/// The typed result of [`Session::compile`]: per-network, per-layer
+/// reports plus request-wide cache statistics.
+#[derive(Debug, Clone)]
+pub struct CompileReport {
+    /// Workload label (network name, file path, layer name or `zoo(n)`).
+    pub workload: String,
+    /// The accelerator the request targeted.
+    pub acc: Accelerator,
+    /// Mapper display name.
+    pub mapper: String,
+    /// The objective the mapper minimized.
+    pub objective: Objective,
+    /// Per-network reports in submission order.
+    pub networks: Vec<NetworkReport>,
+    /// Wall-clock of the whole request (submit → last reply).
+    pub compile_time: Duration,
+    /// Layer-mapping requests this compile submitted.
+    pub requests: u64,
+    /// Requests served from the session cache (within this request).
+    pub cache_hits: u64,
+    /// Median service time over the backing service's sample window. The
+    /// window is session-scoped, so on a warm session it includes earlier
+    /// requests against the same (arch, mapper, params) key.
+    pub p50_service: Duration,
+    /// 99th-percentile service time over the same window.
+    pub p99_service: Duration,
+}
+
+impl CompileReport {
+    /// Layers compiled across all networks.
+    pub fn total_layers(&self) -> usize {
+        self.networks.iter().map(|n| n.layers.len()).sum()
+    }
+
+    /// Total MACs across all networks.
+    pub fn total_macs(&self) -> u64 {
+        self.networks.iter().map(NetworkReport::total_macs).sum()
+    }
+
+    /// Total energy across all networks, µJ.
+    pub fn total_energy_uj(&self) -> f64 {
+        self.networks.iter().map(NetworkReport::total_energy_uj).sum()
+    }
+
+    /// Total roofline latency across all networks, cycles.
+    pub fn total_latency_cycles(&self) -> u64 {
+        self.networks.iter().map(NetworkReport::total_latency_cycles).sum()
+    }
+
+    /// MAC-weighted mean PE utilization across all networks.
+    pub fn mean_utilization(&self) -> f64 {
+        let total = self.total_macs() as f64;
+        self.networks
+            .iter()
+            .flat_map(|n| n.layers.iter())
+            .map(|l| l.utilization() * l.macs() as f64)
+            .sum::<f64>()
+            / total.max(1.0)
+    }
+
+    /// Request-level cache hit rate in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.requests as f64
+    }
+}
+
+/// The typed result of [`Session::simulate`]: the mapping outcome plus the
+/// tile-pipeline and mesh-NoC refinements of its analytical evaluation.
+#[derive(Debug, Clone)]
+pub struct SimulateReport {
+    /// The simulated layer.
+    pub layer: Layer,
+    /// The accelerator simulated on.
+    pub acc: Accelerator,
+    /// Mapper display name.
+    pub mapper: String,
+    /// The mapping outcome (analytical evaluation inside).
+    pub outcome: MapOutcome,
+    /// Buffering/lockstep options the simulator ran with.
+    pub options: SimOptions,
+    /// Tile-pipeline simulation result.
+    pub sim: SimResult,
+    /// Exact mesh-NoC traffic for the same mapping.
+    pub mesh: MeshTraffic,
+}
+
+impl SimulateReport {
+    /// Exact mesh-NoC energy, µJ.
+    pub fn mesh_energy_uj(&self) -> f64 {
+        self.mesh.energy_pj(self.acc.noc.hop_energy_pj) / 1e6
+    }
+
+    /// The analytical model's NoC energy, µJ (comparison point).
+    pub fn analytical_noc_uj(&self) -> f64 {
+        self.outcome.evaluation.energy.noc_pj / 1e6
+    }
+}
+
+/// The typed result of [`Session::explore`]: one aggregate per design
+/// point plus the (energy, latency) Pareto front.
+#[derive(Debug, Clone)]
+pub struct ExploreReport {
+    /// The workload the sweep mapped on every design.
+    pub network: String,
+    /// The base accelerator the grid varied.
+    pub acc: Accelerator,
+    /// Mapper display name.
+    pub mapper: String,
+    /// Per-design aggregates in grid order.
+    pub results: Vec<DesignResult>,
+    /// Pareto-optimal subset, energy ascending.
+    pub front: Vec<DesignResult>,
+}
+
+/// Aggregate counters over every service a session has started.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SessionMetrics {
+    /// Distinct (arch, mapper, params, workers) services started.
+    pub services: usize,
+    /// Layer-mapping requests answered across all services.
+    pub requests: u64,
+    /// Requests served from a mapping cache.
+    pub cache_hits: u64,
+    /// Requests answered with a mapper error.
+    pub errors: u64,
+}
+
+impl SessionMetrics {
+    /// Session-wide cache hit rate in `[0, 1]`.
+    pub fn hit_rate(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        self.cache_hits as f64 / self.requests as f64
+    }
+}
+
+/// Streaming view of a batch compile: yields one [`LayerReport`] per
+/// submitted layer, in submission order, blocking only until *that*
+/// layer's shard finishes — early layers are consumable while late ones
+/// are still mapping. Obtained from [`Session::compile_iter`]; the
+/// backing services outlive the stream (they belong to the session).
+pub struct LayerStream<'a> {
+    items: std::vec::IntoIter<(String, Layer, JobHandle)>,
+    _session: std::marker::PhantomData<&'a Session>,
+}
+
+impl Iterator for LayerStream<'_> {
+    type Item = Result<LayerReport, Error>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        let (network, layer, handle) = self.items.next()?;
+        Some(match handle.wait() {
+            Ok(reply) => Ok(LayerReport {
+                network,
+                layer,
+                outcome: reply.outcome,
+                cached: reply.cached,
+            }),
+            Err(e) => Err(layer_error(&network, &layer.name, e)),
+        })
+    }
+
+    fn size_hint(&self) -> (usize, Option<usize>) {
+        self.items.size_hint()
+    }
+}
+
+impl ExactSizeIterator for LayerStream<'_> {}
+
+impl std::fmt::Debug for LayerStream<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("LayerStream").field("remaining", &self.items.len()).finish()
+    }
+}
+
+/// Handles for one submitted network: `(layer, reply handle)` per layer.
+type NetworkHandles = Vec<(Layer, JobHandle)>;
+
+/// Attach network/layer context to a service-side mapping failure.
+fn layer_error(network: &str, layer: &str, e: MapError) -> Error {
+    Error::Map(match e {
+        MapError::NoValidMapping(msg) => {
+            MapError::NoValidMapping(format!("{network}/{layer}: {msg}"))
+        }
+        other => other,
+    })
+}
+
+/// The session facade: owns the mapping services, shares their caches and
+/// metrics across requests, and turns [`CompileRequest`]s into typed
+/// reports. See the [module docs](self) for the lifecycle.
+pub struct Session {
+    services: Mutex<HashMap<ServiceKey, Arc<MappingService>>>,
+}
+
+impl Default for Session {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl std::fmt::Debug for Session {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let n = self.services.lock().map(|g| g.len()).unwrap_or(0);
+        f.debug_struct("Session").field("services", &n).finish()
+    }
+}
+
+impl Session {
+    /// An empty session; services start lazily on the first request that
+    /// needs them.
+    pub fn new() -> Self {
+        Self { services: Mutex::new(HashMap::new()) }
+    }
+
+    /// Submit every layer of the resolved request to its service, starting
+    /// the service if this is the first request under its key. Returns the
+    /// per-network handles plus the service's live metrics. The session
+    /// lock is held only for the map lookup/insert — submission happens on
+    /// a cloned `Arc`, so concurrent compiles against *different* services
+    /// never serialize on each other.
+    fn submit_all(
+        &self,
+        req: &CompileRequest,
+        resolved: &ResolvedRequest,
+    ) -> (Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>) {
+        let key = ServiceKey::of(req, resolved);
+        let svc = {
+            let mut guard = self.services.lock().unwrap();
+            Arc::clone(guard.entry(key).or_insert_with(|| {
+                Arc::new(MappingService::start(
+                    resolved.acc.clone(),
+                    resolved.mapper.clone(),
+                    resolved.threads,
+                ))
+            }))
+        };
+        let submitted = resolved
+            .networks
+            .iter()
+            .map(|(name, layers)| {
+                let handles =
+                    layers.iter().map(|l| (l.clone(), svc.submit(l.clone()))).collect();
+                (name.clone(), handles)
+            })
+            .collect();
+        (submitted, Arc::clone(&svc.metrics))
+    }
+
+    /// Compile a request to a typed [`CompileReport`]. All layers of all
+    /// networks are submitted up front (the service shards them across its
+    /// worker pool); replies are collected in network order. On a mapping
+    /// failure the remaining replies are still drained (the queue already
+    /// holds them) and the first error is returned.
+    pub fn compile(&self, req: &CompileRequest) -> Result<CompileReport, Error> {
+        self.compile_resolved(req, req.resolve()?)
+    }
+
+    /// [`Session::compile`] on an already-resolved request (resolution
+    /// touches the filesystem for file-based specs, so callers that have
+    /// to inspect the resolution — e.g. [`Session::simulate`] — resolve
+    /// exactly once).
+    fn compile_resolved(
+        &self,
+        req: &CompileRequest,
+        resolved: ResolvedRequest,
+    ) -> Result<CompileReport, Error> {
+        let workload = resolved.workload_label();
+        let mapper = resolved.mapper.name();
+        let objective = resolved.mapper.objective();
+        let t0 = Instant::now();
+        let (submitted, metrics) = self.submit_all(req, &resolved);
+
+        let mut networks = Vec::with_capacity(submitted.len());
+        let mut first_error: Option<Error> = None;
+        let mut requests = 0u64;
+        let mut cache_hits = 0u64;
+        for (name, handles) in submitted {
+            let n0 = Instant::now();
+            let mut layers = Vec::with_capacity(handles.len());
+            for (layer, handle) in handles {
+                requests += 1;
+                match handle.wait() {
+                    Ok(reply) => {
+                        if reply.cached {
+                            cache_hits += 1;
+                        }
+                        layers.push(LayerReport {
+                            network: name.clone(),
+                            layer,
+                            outcome: reply.outcome,
+                            cached: reply.cached,
+                        });
+                    }
+                    Err(e) => {
+                        if first_error.is_none() {
+                            first_error = Some(layer_error(&name, &layer.name, e));
+                        }
+                    }
+                }
+            }
+            networks.push(NetworkReport { name, layers, compile_time: n0.elapsed() });
+        }
+        if let Some(e) = first_error {
+            return Err(e);
+        }
+
+        let percentiles = metrics.service_time_percentiles(&[0.50, 0.99]);
+        Ok(CompileReport {
+            workload,
+            acc: resolved.acc,
+            mapper,
+            objective,
+            networks,
+            compile_time: t0.elapsed(),
+            requests,
+            cache_hits,
+            p50_service: percentiles[0],
+            p99_service: percentiles[1],
+        })
+    }
+
+    /// Compile a request as a stream: every layer is submitted up front,
+    /// and the returned iterator yields each [`LayerReport`] as soon as
+    /// its shard finishes (submission order), so callers can consume a
+    /// 300-layer batch incrementally instead of waiting on the slowest
+    /// network.
+    pub fn compile_iter(&self, req: &CompileRequest) -> Result<LayerStream<'_>, Error> {
+        let resolved = req.resolve()?;
+        let (submitted, _) = self.submit_all(req, &resolved);
+        let items: Vec<(String, Layer, JobHandle)> = submitted
+            .into_iter()
+            .flat_map(|(name, handles)| {
+                handles.into_iter().map(move |(layer, handle)| (name.clone(), layer, handle))
+            })
+            .collect();
+        Ok(LayerStream { items: items.into_iter(), _session: std::marker::PhantomData })
+    }
+
+    /// Map a single-layer request through the session (warm-cache
+    /// included) and refine its evaluation with the tile-pipeline
+    /// simulator and the exact mesh-NoC model.
+    pub fn simulate(
+        &self,
+        req: &CompileRequest,
+        options: SimOptions,
+    ) -> Result<SimulateReport, Error> {
+        let resolved = req.resolve()?;
+        let total: usize = resolved.networks.iter().map(|(_, l)| l.len()).sum();
+        if total != 1 {
+            return Err(Error::request(format!(
+                "simulate needs a single-layer workload (got {total} layers)"
+            )));
+        }
+        let report = self.compile_resolved(req, resolved)?;
+        let layer = report.networks[0].layers[0].clone();
+        let sim = sim::simulate(&layer.layer, &report.acc, &layer.outcome.mapping, options);
+        let mesh = noc::simulate_mesh(&layer.layer, &report.acc, &layer.outcome.mapping);
+        Ok(SimulateReport {
+            layer: layer.layer,
+            acc: report.acc,
+            mapper: report.mapper,
+            outcome: layer.outcome,
+            options,
+            sim,
+            mesh,
+        })
+    }
+
+    /// Sweep the hardware/mapping co-design grid for the request's
+    /// workload: map every layer on every design point with the request's
+    /// mapper and aggregate per design, returning the grid results and
+    /// the (energy, latency) Pareto front.
+    pub fn explore(
+        &self,
+        req: &CompileRequest,
+        grid: &SweepGrid,
+    ) -> Result<ExploreReport, Error> {
+        let resolved = req.resolve()?;
+        let name = resolved.workload_label();
+        let layers: Vec<Layer> =
+            resolved.networks.iter().flat_map(|(_, l)| l.iter().cloned()).collect();
+        let points = grid.points(&resolved.acc);
+        let results = explore::sweep(&points, &layers, &resolved.mapper)?;
+        let front = explore::pareto(&results);
+        Ok(ExploreReport {
+            network: name,
+            acc: resolved.acc,
+            mapper: resolved.mapper.name(),
+            results,
+            front,
+        })
+    }
+
+    /// Aggregate counters over every service this session has started.
+    pub fn metrics(&self) -> SessionMetrics {
+        use std::sync::atomic::Ordering;
+        let guard = self.services.lock().unwrap();
+        let mut m = SessionMetrics { services: guard.len(), requests: 0, cache_hits: 0, errors: 0 };
+        for svc in guard.values() {
+            m.requests += svc.metrics.requests.load(Ordering::Relaxed);
+            m.cache_hits += svc.metrics.cache_hits.load(Ordering::Relaxed);
+            m.errors += svc.metrics.errors.load(Ordering::Relaxed);
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::ErrorClass;
+
+    fn quick(net: &str) -> CompileRequest {
+        CompileRequest::new().network(net).threads(2)
+    }
+
+    #[test]
+    fn compile_reports_totals_and_cache() {
+        let session = Session::new();
+        let r = session.compile(&quick("alexnet")).unwrap();
+        assert_eq!(r.total_layers(), 5);
+        assert_eq!(r.requests, 5);
+        assert_eq!(r.workload, "alexnet");
+        assert_eq!(r.mapper, "LOCAL");
+        assert!(r.total_energy_uj() > 0.0);
+        assert!(r.total_latency_cycles() > 0);
+        assert!(r.mean_utilization() > 0.0);
+        assert_eq!(
+            r.total_macs(),
+            crate::workload::zoo::alexnet().iter().map(|l| l.macs()).sum::<u64>()
+        );
+    }
+
+    #[test]
+    fn session_cache_is_warm_across_requests() {
+        // The tentpole claim: services (hence caches) outlive requests.
+        let session = Session::new();
+        let req = quick("alexnet").threads(1);
+        let cold = session.compile(&req).unwrap();
+        assert_eq!(cold.cache_hits, 0);
+        let warm = session.compile(&req).unwrap();
+        assert_eq!(warm.cache_hits, 5, "second compile must be fully cached");
+        assert!((warm.hit_rate() - 1.0).abs() < 1e-12);
+        let m = session.metrics();
+        assert_eq!(m.services, 1);
+        assert_eq!(m.requests, 10);
+        assert_eq!(m.cache_hits, 5);
+        // Identical outcomes from cache.
+        for (a, b) in cold.networks[0].layers.iter().zip(&warm.networks[0].layers) {
+            assert_eq!(a.outcome.mapping, b.outcome.mapping);
+        }
+    }
+
+    #[test]
+    fn distinct_params_get_distinct_services() {
+        let session = Session::new();
+        session.compile(&quick("alexnet")).unwrap();
+        session.compile(&quick("alexnet").objective(Objective::Delay)).unwrap();
+        session.compile(&quick("alexnet").arch_preset("nvdla")).unwrap();
+        assert_eq!(session.metrics().services, 3);
+    }
+
+    #[test]
+    fn same_name_different_configs_get_distinct_services() {
+        // The per-service mapping cache keys layers by arch *name*, so the
+        // session must never let two different configs that share a name
+        // land on one service — that would silently serve results computed
+        // for the wrong hardware.
+        let session = Session::new();
+        let mut a = crate::arch::presets::eyeriss();
+        a.name = "custom".into();
+        let mut b = crate::arch::presets::nvdla();
+        b.name = "custom".into();
+        let req = CompileRequest::new().network("alexnet").threads(1);
+        let ra = session.compile(&req.clone().accelerator(a)).unwrap();
+        let rb = session.compile(&req.accelerator(b)).unwrap();
+        assert_eq!(session.metrics().services, 2, "same-name configs shared a service");
+        assert_ne!(ra.total_energy_uj(), rb.total_energy_uj());
+    }
+
+    #[test]
+    fn zoo_compile_matches_batch_counts() {
+        let session = Session::new();
+        let r = session.compile(&CompileRequest::new().zoo().threads(4)).unwrap();
+        assert_eq!(r.networks.len(), 8);
+        assert_eq!(r.total_layers(), 13 + 53 + 52 + 26 + 5 + 96 + 18 + 62);
+        assert_eq!(r.requests, r.total_layers() as u64);
+        assert!(r.cache_hits > 0, "zoo has repeated shapes across networks");
+        assert!(r.p50_service <= r.p99_service);
+    }
+
+    #[test]
+    fn streaming_iter_yields_every_layer_in_order() {
+        let session = Session::new();
+        let stream = session.compile_iter(&quick("vgg02")).unwrap();
+        assert_eq!(stream.len(), 8);
+        let reports: Vec<LayerReport> = stream.map(|r| r.unwrap()).collect();
+        assert_eq!(reports.len(), 8);
+        for (i, r) in reports.iter().enumerate() {
+            assert_eq!(r.network, "vgg02");
+            assert_eq!(r.layer.name, format!("VGG02_conv{}", i + 1));
+            assert!(r.energy_uj() > 0.0);
+        }
+    }
+
+    #[test]
+    fn simulate_requires_single_layer_and_reports_pipeline() {
+        let session = Session::new();
+        let e = session.simulate(&quick("alexnet"), SimOptions::default()).unwrap_err();
+        assert_eq!(e.class(), ErrorClass::Usage);
+        let r = session
+            .simulate(
+                &CompileRequest::new().layer_spec("vgg02:5"),
+                SimOptions::default(),
+            )
+            .unwrap();
+        assert!(r.sim.total_cycles >= r.sim.compute_cycles);
+        assert!(r.mesh.word_hops > 0);
+        assert!(r.mesh_energy_uj() > 0.0);
+    }
+
+    #[test]
+    fn explore_reports_grid_and_front() {
+        let session = Session::new();
+        let grid = SweepGrid { pe_dims: vec![(8, 8), (16, 16)], l1_depths: vec![8192] };
+        let r = session
+            .explore(&CompileRequest::new().network("alexnet"), &grid)
+            .unwrap();
+        assert_eq!(r.results.len(), 2);
+        assert!(!r.front.is_empty());
+        assert_eq!(r.network, "alexnet");
+    }
+
+    #[test]
+    fn mapping_failures_carry_layer_context() {
+        // Budget-1 constrained search on a large layer cannot find a valid
+        // candidate; the error must name the network/layer and classify as
+        // a mapping failure (exit 4).
+        let session = Session::new();
+        let req = CompileRequest::new()
+            .layer_spec("vgg16:9")
+            .mapper("rs")
+            .budget(1)
+            .threads(1)
+            .accelerator(tiny_acc());
+        match session.compile(&req) {
+            Err(e) => {
+                assert_eq!(e.class(), ErrorClass::Failure, "{e}");
+                assert_eq!(e.code(), "E_SEARCH");
+                assert!(e.to_string().contains("VGG16_conv9"), "{e}");
+            }
+            Ok(r) => panic!("expected failure, got {} layers", r.total_layers()),
+        }
+    }
+
+    /// An accelerator so starved a budget-1 search cannot fit a tile.
+    fn tiny_acc() -> Accelerator {
+        use crate::arch::{Noc, PeArray, StorageLevel, Style};
+        Accelerator {
+            name: "tiny".into(),
+            style: Style::EyerissLike,
+            datawidth_bits: 16,
+            levels: vec![
+                StorageLevel::register_file("RF", 2, 16),
+                StorageLevel::buffer("GLB", 4, 64),
+                StorageLevel::dram(64),
+            ],
+            pe: PeArray::new(2, 2),
+            noc: Noc::default(),
+            mac_energy_pj: 1.0,
+            clock_mhz: 200.0,
+        }
+    }
+}

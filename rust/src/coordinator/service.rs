@@ -2,9 +2,12 @@
 //!
 //! Worker threads pull [`MapRequest`]s from a shared queue, consult the
 //! mapping cache, run the mapper on misses, and answer on a per-request
-//! channel. Metrics (requests, cache hits, p50 service time) are exported
-//! for the coordinator's own observability — the paper's compile-time
-//! claim is only credible if mapping latency is measured in situ.
+//! channel; failures cross the channel as typed [`MapError`]s so
+//! embedders ([`crate::api::Session`], the batch pipeline) never parse
+//! error strings. Metrics (requests, cache hits, p50 service time) are
+//! exported for the coordinator's own observability — the paper's
+//! compile-time claim is only credible if mapping latency is measured in
+//! situ.
 //!
 //! Two hot-path design points: the cache is **sharded** into
 //! independently-locked shards keyed by the [`LayerKey`] FNV-1a
@@ -15,7 +18,7 @@
 
 use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
-use crate::mappers::{MapOutcome, Mapper};
+use crate::mappers::{MapError, MapOutcome, Mapper};
 use crate::workload::Layer;
 use std::collections::HashMap;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -25,7 +28,7 @@ use std::time::{Duration, Instant};
 /// A mapping request: one layer on the service's accelerator.
 struct MapRequest {
     layer: Layer,
-    reply: mpsc::Sender<Result<MapReply, String>>,
+    reply: mpsc::Sender<Result<MapReply, MapError>>,
     /// Stamped at submission so `service_time` covers queue wait + map.
     submitted: Instant,
 }
@@ -276,7 +279,7 @@ impl MappingService {
                                 cache.insert(key, outcome.clone());
                                 (Ok(outcome), false)
                             }
-                            Err(e) => (Err(e.to_string()), false),
+                            Err(e) => (Err(e), false),
                         },
                     };
                     let service_time = req.submitted.elapsed();
@@ -303,7 +306,7 @@ impl MappingService {
     }
 
     /// Map a batch and wait for all replies (in request order).
-    pub fn map_all(&self, layers: &[Layer]) -> Vec<Result<MapReply, String>> {
+    pub fn map_all(&self, layers: &[Layer]) -> Vec<Result<MapReply, MapError>> {
         let handles: Vec<JobHandle> = layers.iter().map(|l| self.submit(l.clone())).collect();
         handles.into_iter().map(|h| h.wait()).collect()
     }
@@ -328,17 +331,21 @@ impl Drop for MappingService {
 
 /// Await handle for one submitted request.
 pub struct JobHandle {
-    rx: mpsc::Receiver<Result<MapReply, String>>,
+    rx: mpsc::Receiver<Result<MapReply, MapError>>,
 }
 
 impl JobHandle {
-    /// Block until the reply arrives.
-    pub fn wait(self) -> Result<MapReply, String> {
-        self.rx.recv().map_err(|_| "service dropped request".to_string())?
+    /// Block until the reply arrives. Failures come back as the worker's
+    /// typed [`MapError`] (a dropped request — service torn down with the
+    /// job still queued — reports as `NoValidMapping`).
+    pub fn wait(self) -> Result<MapReply, MapError> {
+        self.rx
+            .recv()
+            .map_err(|_| MapError::NoValidMapping("service dropped request".to_string()))?
     }
 
     /// Non-blocking poll.
-    pub fn try_wait(&self) -> Option<Result<MapReply, String>> {
+    pub fn try_wait(&self) -> Option<Result<MapReply, MapError>> {
         self.rx.try_recv().ok()
     }
 }

@@ -6,6 +6,13 @@
 //!
 //! The crate provides:
 //!
+//! * [`api`] — **the stable, embeddable surface**: typed
+//!   [`api::CompileRequest`]s, the [`api::Session`] facade (persistent
+//!   mapping services, warm caches and metrics shared across requests,
+//!   streaming per-layer results), one crate-wide [`api::Error`] with
+//!   stable codes, and the versioned [`api::json`] serializer
+//!   (`"api_v1"`). The CLI, the tests and any embedding compiler all sit
+//!   on this layer.
 //! * [`workload`] — the operator-generic workload IR
 //!   ([`workload::OpKind`] × the Eq.-3 problem dimensions: conv,
 //!   depthwise, matmul/FC, pooling, elementwise add) and the network zoo
@@ -16,42 +23,76 @@
 //! * [`mapping`] — the mapping IR (tiling, permutation, spatial partition)
 //!   with full validity checking.
 //! * [`model`] — the Timeloop-lite analytical engine: loop-nest reuse
-//!   analysis, access counts, NoC traffic, PE utilization, latency.
+//!   analysis, access counts, NoC traffic, PE utilization, latency — with
+//!   the zero-allocation [`model::EvalContext`] hot path every search
+//!   loop rides.
 //! * [`energy`] — the Accelergy-lite energy model and Fig.-7 breakdowns.
 //! * [`mapspace`] — map-space enumeration, sizes and dataflow constraints.
 //! * [`mappers`] — LOCAL (one pass) and the baseline mappers (dataflow-
 //!   constrained search, random, exhaustive, genetic, annealing,
 //!   LOCAL+refine), all reachable through one resolver
-//!   ([`mappers::AnyMapper`]).
+//!   ([`mappers::AnyMapper`]) and all running on the shared
+//!   [`mappers::engine`]: candidate sources feeding one `SearchDriver`
+//!   that owns budget truncation, pluggable [`mappers::Objective`]s
+//!   (energy / delay / EDP), deterministic thread sharding
+//!   (`--search-threads`) and bound-based pruning (`--no-prune` to
+//!   disable).
 //! * [`coordinator`] — the multi-layer compile-time mapping service and the
 //!   batch pipeline ([`coordinator::compile_batch`]) that shards whole
-//!   model zoos across the worker pool behind one cross-network cache.
+//!   model zoos across the worker pool behind one cross-network cache
+//!   keyed by [`coordinator::LayerKey`] (shape × op × objective).
 //! * [`perf`] — the performance harness behind `BENCH_eval.json`: old-vs-
-//!   new evaluator throughput, exhaustive thread scaling, zoo batch wall
-//!   time.
+//!   new evaluator throughput, per-operator throughput, exhaustive thread
+//!   scaling, engine pruning/scaling, zoo batch wall time.
+//! * [`sim`] — the tile-pipeline latency simulator (single/double
+//!   buffering) refining the analytical roofline.
+//! * [`explore`] — hardware/mapping co-design sweeps and Pareto fronts.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels
 //!   (behind the `pjrt` feature; a stub otherwise).
 //! * [`report`] — emitters for the paper's tables and figures plus the
-//!   batch-compile summary.
+//!   renderers for the API's typed reports.
 //!
 //! ## Quickstart
 //!
+//! The embeddable path — a session, a typed request, a typed report:
+//!
+//! ```
+//! use local_mapper::api::{CompileRequest, Session};
+//!
+//! let session = Session::new();
+//! let report = session
+//!     .compile(&CompileRequest::new().network("alexnet").arch_preset("eyeriss"))
+//!     .unwrap();
+//! assert_eq!(report.total_layers(), 5);
+//! assert!(report.total_energy_uj() > 0.0);
+//!
+//! // Same shapes again → served from the session's warm cache.
+//! let again = session
+//!     .compile(&CompileRequest::new().network("alexnet").arch_preset("eyeriss"))
+//!     .unwrap();
+//! assert_eq!(again.cache_hits, again.requests);
+//!
+//! // Versioned machine-readable output (schema "api_v1").
+//! let doc = local_mapper::api::json::compile_report(&report);
+//! assert!(doc.contains("\"schema\": \"api_v1\""));
+//! ```
+//!
+//! One layer, one mapper, no session — the low-level path is still there:
+//!
 //! ```
 //! use local_mapper::arch::presets;
-//! use local_mapper::mappers::local::LocalMapper;
-//! use local_mapper::mappers::Mapper;
-//! use local_mapper::model::evaluate;
+//! use local_mapper::mappers::{LocalMapper, Mapper};
 //! use local_mapper::workload::zoo;
 //!
 //! let acc = presets::eyeriss();
 //! let layer = zoo::vgg16()[8].clone(); // conv9
-//! let mapping = LocalMapper::new().map(&layer, &acc).unwrap();
-//! let eval = evaluate(&layer, &acc, &mapping).unwrap();
-//! assert!(eval.energy.total_pj() > 0.0);
+//! let out = LocalMapper::new().run(&layer, &acc).unwrap();
+//! assert!(out.evaluation.energy.total_pj() > 0.0);
 //! ```
 
 #![warn(missing_docs)]
 
+pub mod api;
 pub mod arch;
 pub mod coordinator;
 pub mod energy;

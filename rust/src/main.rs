@@ -1,8 +1,16 @@
 //! `local-mapper` — CLI for the LOCAL mapping framework.
 //!
+//! The binary is a thin adapter over [`local_mapper::api`]: each
+//! subcommand parses its flags into an [`api::CompileRequest`], dispatches
+//! through one process-wide [`api::Session`], and renders the typed report
+//! as a table or as versioned `"api_v1"` JSON (`--format json`). Errors
+//! are [`api::Error`]s: the stable error code is printed and the exit code
+//! is the error class (usage = 2, invalid input = 3, mapping/execution
+//! failure = 4).
+//!
 //! Subcommands (see `local-mapper help`):
 //!   map         map one layer, print the loop nest + evaluation
-//!   compile     map a whole network through the coordinator
+//!   compile     map a whole network through the session
 //!   compile-all batch-compile the whole zoo through the shared-cache service
 //!   table2      reproduce paper Table 2 (workloads + MAC counts)
 //!   table3    reproduce paper Table 3 (mapping time, LOCAL vs RS/WS/OS)
@@ -13,33 +21,34 @@
 //!   run       execute an AOT conv artifact via PJRT and verify numerics
 //!   perf      run the performance harness and write BENCH_eval.json
 
+use local_mapper::api::{self, CompileRequest, Error, Session};
 use local_mapper::arch::{config, presets, Accelerator};
-use local_mapper::coordinator::{compile_batch, compile_network, BatchPlan};
-use local_mapper::mappers::{AnyMapper, Mapper, Objective, SearchParams};
+use local_mapper::mappers::{Objective, SearchParams};
 use local_mapper::mapspace;
 use local_mapper::report;
-use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime};
+use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime, RuntimeError};
+use local_mapper::util::bench::fmt_duration;
 use local_mapper::util::cli::Args;
 use local_mapper::util::rng::SplitMix64;
 use local_mapper::util::table::fmt_f64;
-use local_mapper::workload::{zoo, ConvLayer};
 
 fn main() {
     let args = Args::from_env();
+    let session = Session::new();
     let code = match args.subcommand() {
-        Some("map") => cmd_map(&args),
-        Some("compile") => cmd_compile(&args),
-        Some("compile-all") => cmd_compile_all(&args),
+        Some("map") => finish(cmd_map(&args, &session)),
+        Some("compile") => finish(cmd_compile(&args, &session)),
+        Some("compile-all") => finish(cmd_compile_all(&args, &session)),
         Some("table2") => cmd_table2(),
         Some("table3") => cmd_table3(&args),
         Some("fig3") => cmd_fig3(&args),
         Some("fig7") => cmd_fig7(&args),
-        Some("mapspace") => cmd_mapspace(&args),
-        Some("arch") => cmd_arch(&args),
-        Some("run") => cmd_run(&args),
-        Some("simulate") => cmd_simulate(&args),
-        Some("explore") => cmd_explore(&args),
-        Some("perf") => cmd_perf(&args),
+        Some("mapspace") => finish(cmd_mapspace(&args)),
+        Some("arch") => finish(cmd_arch(&args)),
+        Some("run") => finish(cmd_run(&args)),
+        Some("simulate") => finish(cmd_simulate(&args, &session)),
+        Some("explore") => finish(cmd_explore(&args, &session)),
+        Some("perf") => finish(cmd_perf(&args)),
         Some("help") | None => {
             print_help();
             0
@@ -51,6 +60,17 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Report an [`Error`] with its stable code and exit with its class code.
+fn finish(r: Result<(), Error>) -> i32 {
+    match r {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error[{}]: {e}", e.code());
+            e.class().exit_code()
+        }
+    }
 }
 
 fn print_help() {
@@ -101,181 +121,185 @@ Search-engine flags (wherever --mapper is accepted):
   --no-prune                     disable the bound-based pruner that is on
                                  by default for exhaustive and rs/ws/os
                                  (pruning never changes the selected
-                                 mapping, only cuts evaluations)"
+                                 mapping, only cuts evaluations)
+
+Output and errors:
+  --format json|table            map, compile, compile-all, simulate and
+                                 explore emit either the human table
+                                 (default) or one versioned JSON document
+                                 (schema \"api_v1\", stable key order)
+  exit codes                     0 ok · 2 usage (E_REQUEST) · 3 invalid
+                                 input (E_WORKLOAD/E_CONFIG/E_YAML/E_IO) ·
+                                 4 mapping/execution failure
+                                 (E_SEARCH/E_MAPPING/E_RUNTIME)"
     );
 }
 
-/// Resolve `--arch`: preset name or YAML file via `--arch-file`.
-fn resolve_arch(args: &Args) -> Result<Accelerator, String> {
-    if let Some(path) = args.get("arch-file") {
-        return config::accelerator_from_file(path).map_err(|e| e.to_string());
-    }
-    let name = args.get_or("arch", "eyeriss");
-    presets::by_name(name).ok_or_else(|| format!("unknown arch '{name}' (eyeriss|nvdla|shidiannao)"))
+/// Output format for the API-backed subcommands.
+enum Format {
+    Table,
+    Json,
 }
 
-/// Resolve `--layer`: `network:index` (1-based) or `MxCxRxSxPxQ` dims.
-fn resolve_layer(spec: &str) -> Result<ConvLayer, String> {
-    if let Some((net, idx)) = spec.split_once(':') {
-        let layers = zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
-        let i: usize = idx.parse().map_err(|_| format!("bad layer index '{idx}'"))?;
-        if i == 0 || i > layers.len() {
-            return Err(format!("{net} has layers 1..={}", layers.len()));
-        }
-        Ok(layers[i - 1].clone())
-    } else {
-        let dims: Vec<u64> = spec
-            .split('x')
-            .map(|p| p.parse().map_err(|_| format!("bad dim '{p}' in '{spec}'")))
-            .collect::<Result<_, _>>()?;
-        match dims[..] {
-            [m, c, r, s, p, q] => Ok(ConvLayer::new("custom", m, c, r, s, p, q)),
-            _ => Err("layer dims must be MxCxRxSxPxQ".to_string()),
-        }
+/// Parse `--format` (default `table`).
+fn output_format(args: &Args) -> Result<Format, Error> {
+    match args.get_or("format", "table") {
+        "table" => Ok(Format::Table),
+        "json" => Ok(Format::Json),
+        other => Err(Error::request(format!("unknown format '{other}' (json|table)"))),
     }
 }
 
-/// Resolve `--mapper`: one resolver for `map`, `compile`, `compile-all`,
-/// `simulate` and `explore`, exposing every mapper the crate ships.
-/// `default_budget` varies per subcommand: single-layer commands default
-/// to the paper's 3000-candidate budget, batch commands (`compile`,
-/// `compile-all`, `explore`) to 300 — the budget applies per layer
-/// mapping, so batches pay it many times over.
-fn resolve_mapper_with(args: &Args, default_budget: u64) -> Result<AnyMapper, String> {
-    let spec = args.get_or("mapper", "local");
+/// Parse the shared search-engine flags into [`SearchParams`].
+fn search_params(args: &Args, default_budget: u64) -> Result<SearchParams, Error> {
     let objective_spec = args.get_or("objective", "energy");
-    let objective = Objective::parse(objective_spec)
-        .ok_or_else(|| format!("unknown objective '{objective_spec}' ({})", Objective::SPEC))?;
-    let params = SearchParams {
+    let objective = Objective::parse(objective_spec).ok_or_else(|| {
+        Error::request(format!("unknown objective '{objective_spec}' ({})", Objective::SPEC))
+    })?;
+    Ok(SearchParams {
         budget: args.get_num::<u64>("budget", default_budget),
         seed: args.get_num::<u64>("seed", 42),
         objective,
         threads: args.get_num::<usize>("search-threads", 1).max(1),
         prune: !args.flag("no-prune"),
+    })
+}
+
+/// Translate the shared flags (`--arch`/`--arch-file`, `--mapper`, search
+/// engine flags, `--threads`) into a request; each subcommand then picks
+/// its workload. `default_budget` is 3000 for single-layer commands and
+/// 300 for the batch commands (the budget applies per layer mapping).
+fn base_request(args: &Args, default_budget: u64) -> Result<CompileRequest, Error> {
+    let mut req = CompileRequest::new()
+        .mapper(args.get_or("mapper", "local"))
+        .search(search_params(args, default_budget)?)
+        .threads(args.get_num::<usize>("threads", 4));
+    req = if let Some(path) = args.get("arch-file") {
+        req.arch_file(path)
+    } else {
+        req.arch_preset(args.get_or("arch", "eyeriss"))
     };
-    AnyMapper::parse(spec, params)
-        .ok_or_else(|| format!("unknown mapper '{spec}' ({})", AnyMapper::SPEC))
+    Ok(req)
 }
 
-/// [`resolve_mapper_with`] at the single-layer default budget.
-fn resolve_mapper(args: &Args) -> Result<AnyMapper, String> {
-    resolve_mapper_with(args, 3000)
+/// Resolve `--arch`/`--arch-file` directly (for the subcommands that need
+/// an accelerator without a compile request).
+fn resolve_arch(args: &Args) -> Result<Accelerator, Error> {
+    if let Some(path) = args.get("arch-file") {
+        return Ok(config::accelerator_from_file(path)?);
+    }
+    let name = args.get_or("arch", "eyeriss");
+    presets::by_name(name)
+        .ok_or_else(|| Error::request(format!("unknown arch '{name}' (eyeriss|nvdla|shidiannao)")))
 }
 
-fn cmd_map(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = resolve_arch(args)?;
-        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
-        let mapper = resolve_mapper(args)?;
-        let out = mapper.run(&layer, &acc).map_err(|e| e.to_string())?;
-        println!("{}", out.mapping.render(&layer, &acc));
-        let e = &out.evaluation;
-        println!(
-            "mapper={} objective={} score={} evaluations={} map_time={}",
-            mapper.name(),
-            out.objective,
-            fmt_f64(out.score),
-            out.evaluations,
-            local_mapper::util::bench::fmt_duration(out.elapsed)
-        );
-        println!(
-            "energy={}µJ ({} pJ/MAC)  utilization={:.1}%  latency={} cycles",
-            fmt_f64(e.energy.total_uj()),
-            fmt_f64(e.energy.pj_per_mac(e.macs)),
-            e.utilization * 100.0,
-            e.latency_cycles
-        );
-        for (name, pj) in e.energy.components(&acc) {
-            println!("  {name:>6}: {} µJ", fmt_f64(pj / 1e6));
+fn cmd_map(args: &Args, session: &Session) -> Result<(), Error> {
+    let format = output_format(args)?;
+    let req = base_request(args, 3000)?.layer_spec(args.get_or("layer", "vgg02:5"));
+    let r = session.compile(&req)?;
+    match format {
+        Format::Json => print!("{}", api::json::compile_report(&r)),
+        Format::Table => {
+            let l = &r.networks[0].layers[0];
+            let e = &l.outcome.evaluation;
+            println!("{}", l.outcome.mapping.render(&l.layer, &r.acc));
+            println!(
+                "mapper={} objective={} score={} evaluations={} map_time={}",
+                r.mapper,
+                l.outcome.objective,
+                fmt_f64(l.outcome.score),
+                l.outcome.evaluations,
+                fmt_duration(l.outcome.elapsed)
+            );
+            println!(
+                "energy={}µJ ({} pJ/MAC)  utilization={:.1}%  latency={} cycles",
+                fmt_f64(l.energy_uj()),
+                fmt_f64(l.pj_per_mac()),
+                l.utilization() * 100.0,
+                l.latency_cycles()
+            );
+            for (name, pj) in e.energy.components(&r.acc) {
+                println!("  {name:>6}: {} µJ", fmt_f64(pj / 1e6));
+            }
         }
-        Ok(())
-    };
-    report_result(run())
+    }
+    Ok(())
 }
 
-fn cmd_compile(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = resolve_arch(args)?;
-        let (net, layers) = if let Some(path) = args.get("network-file") {
-            let layers = local_mapper::workload::config::layers_from_file(path)
-                .map_err(|e| e.to_string())?;
-            (path.to_string(), layers)
-        } else {
-            let net = args.get_or("network", "vgg16");
-            let layers =
-                zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
-            (net.to_string(), layers)
-        };
-        let net = net.as_str();
-        let threads = args.get_num::<usize>("threads", 4);
-        // Per-shape budget default 300, like compile-all (whole-network
-        // batches pay the budget once per unique layer shape).
-        let mapper = resolve_mapper_with(args, 300)?;
-        let plan = compile_network(&layers, &acc, &mapper, threads).map_err(|e| e.to_string())?;
-        println!("{}", plan.render().render());
-        println!(
-            "network={net} arch={} mapper={} layers={} cache_hits={} compile_time={}",
-            plan.arch,
-            plan.mapper,
-            plan.layers.len(),
-            plan.cache_hits(),
-            local_mapper::util::bench::fmt_duration(plan.compile_time)
-        );
-        println!(
-            "total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
-            plan.total_macs(),
-            fmt_f64(plan.total_energy_uj()),
-            plan.total_latency_cycles(),
-            plan.mean_utilization() * 100.0
-        );
-        Ok(())
+fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
+    let format = output_format(args)?;
+    // Per-shape budget default 300, like compile-all (whole-network
+    // batches pay the budget once per unique layer shape).
+    let mut req = base_request(args, 300)?;
+    req = if let Some(path) = args.get("network-file") {
+        req.workload_file(path)
+    } else {
+        req.network(args.get_or("network", "vgg16"))
     };
-    report_result(run())
+    let r = session.compile(&req)?;
+    match format {
+        Format::Json => print!("{}", api::json::compile_report(&r)),
+        Format::Table => {
+            println!("{}", report::render_layer_reports(&r.networks[0]).render());
+            println!(
+                "network={} arch={} mapper={} layers={} cache_hits={} compile_time={}",
+                r.workload,
+                r.acc.name,
+                r.mapper,
+                r.total_layers(),
+                r.cache_hits,
+                fmt_duration(r.compile_time)
+            );
+            println!(
+                "total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
+                r.total_macs(),
+                fmt_f64(r.total_energy_uj()),
+                r.total_latency_cycles(),
+                r.mean_utilization() * 100.0
+            );
+        }
+    }
+    Ok(())
 }
 
-/// Batch-compile the whole zoo ([`zoo::batch_zoo`]) through the
-/// shared-cache mapping service and print the summary table plus the
-/// batch-wide cache/service metrics.
-fn cmd_compile_all(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = resolve_arch(args)?;
-        let threads = args.get_num::<usize>("threads", 4);
-        // Batch compiles keep the historical per-shape budget default of
-        // 300 (325 layers × a 3000-candidate search would be a 10x
-        // wall-time surprise for search mappers).
-        let mapper = resolve_mapper_with(args, 300)?;
-        let networks = zoo::batch_zoo();
-        let batch =
-            compile_batch(&networks, &acc, &mapper, threads).map_err(|e| e.to_string())?;
-        print_batch(&batch, threads);
-        Ok(())
-    };
-    report_result(run())
-}
-
-fn print_batch(batch: &BatchPlan, threads: usize) {
-    println!("{}", report::render_batch_summary(batch).render());
-    println!(
-        "batch: arch={} mapper={} networks={} layers={} threads={threads}",
-        batch.arch,
-        batch.mapper,
-        batch.networks.len(),
-        batch.total_layers(),
-    );
-    println!(
-        "cache: {}/{} hits ({:.1}%)  service time: p50={} p99={}  batch wall-clock: {}",
-        batch.cache_hits,
-        batch.requests,
-        batch.hit_rate() * 100.0,
-        local_mapper::util::bench::fmt_duration(batch.p50_service),
-        local_mapper::util::bench::fmt_duration(batch.p99_service),
-        local_mapper::util::bench::fmt_duration(batch.batch_time)
-    );
-    println!(
-        "total: {} MACs, {} µJ across the batch",
-        batch.total_macs(),
-        fmt_f64(batch.total_energy_uj())
-    );
+/// Batch-compile the whole zoo through the session's shared-cache service
+/// and print the summary table plus the batch-wide cache/service metrics.
+fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
+    let format = output_format(args)?;
+    // Batch compiles keep the historical per-shape budget default of 300
+    // (325 layers × a 3000-candidate search would be a 10x wall-time
+    // surprise for search mappers).
+    let req = base_request(args, 300)?.zoo();
+    let r = session.compile(&req)?;
+    match format {
+        Format::Json => print!("{}", api::json::compile_report(&r)),
+        Format::Table => {
+            println!("{}", report::render_network_summaries(&r).render());
+            println!(
+                "batch: arch={} mapper={} networks={} layers={} threads={}",
+                r.acc.name,
+                r.mapper,
+                r.networks.len(),
+                r.total_layers(),
+                req.threads,
+            );
+            println!(
+                "cache: {}/{} hits ({:.1}%)  service time: p50={} p99={}  batch wall-clock: {}",
+                r.cache_hits,
+                r.requests,
+                r.hit_rate() * 100.0,
+                fmt_duration(r.p50_service),
+                fmt_duration(r.p99_service),
+                fmt_duration(r.compile_time)
+            );
+            println!(
+                "total: {} MACs, {} µJ across the batch",
+                r.total_macs(),
+                fmt_f64(r.total_energy_uj())
+            );
+        }
+    }
+    Ok(())
 }
 
 fn cmd_table2() -> i32 {
@@ -336,225 +360,204 @@ fn cmd_fig7(args: &Args) -> i32 {
     0
 }
 
-fn cmd_mapspace(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = resolve_arch(args)?;
-        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
-        println!("layer: {layer}");
-        println!("accelerator: {acc}");
-        println!(
-            "permutation space (n!)^m: {:.3e}  (paper §3: (6!)^3 ≈ 3.7e8)",
-            mapspace::permutation_space(6, acc.n_levels() as u32)
-        );
-        println!(
-            "full map-space (factorizations × permutations): {:.3e}",
-            mapspace::map_space(&layer, &acc)
-        );
-        println!(
-            "co-design space (VGG16 conv2 example): {:.3e}  (paper: ≈1e17)",
-            mapspace::design_space(64, 64, 224, 224, 3, 3, 3)
-        );
-        Ok(())
-    };
-    report_result(run())
+fn cmd_mapspace(args: &Args) -> Result<(), Error> {
+    let acc = resolve_arch(args)?;
+    let layer = api::request::parse_layer_spec(args.get_or("layer", "vgg02:5"))?;
+    println!("layer: {layer}");
+    println!("accelerator: {acc}");
+    println!(
+        "permutation space (n!)^m: {:.3e}  (paper §3: (6!)^3 ≈ 3.7e8)",
+        mapspace::permutation_space(6, acc.n_levels() as u32)
+    );
+    println!(
+        "full map-space (factorizations × permutations): {:.3e}",
+        mapspace::map_space(&layer, &acc)
+    );
+    println!(
+        "co-design space (VGG16 conv2 example): {:.3e}  (paper: ≈1e17)",
+        mapspace::design_space(64, 64, 224, 224, 3, 3, 3)
+    );
+    Ok(())
 }
 
-fn cmd_arch(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = if let Some(f) = args.get("file") {
-            config::accelerator_from_file(f).map_err(|e| e.to_string())?
-        } else if let Some(name) = args.get("name") {
-            presets::by_name(name).ok_or_else(|| format!("unknown arch '{name}'"))?
-        } else {
-            resolve_arch(args)?
-        };
-        if args.flag("dump") {
-            print!("{}", config::accelerator_to_yaml(&acc));
-        } else {
-            println!("{acc}");
-            for (i, l) in acc.levels.iter().enumerate() {
-                let cap = if l.unbounded {
-                    "unbounded".to_string()
-                } else {
-                    format!("{} elems", acc.level_capacity(i))
-                };
-                println!("  L{i} {}: {cap}{}", l.name, if l.per_pe { " (per PE)" } else { "" });
-            }
-        }
-        Ok(())
+fn cmd_arch(args: &Args) -> Result<(), Error> {
+    let acc = if let Some(f) = args.get("file") {
+        config::accelerator_from_file(f)?
+    } else if let Some(name) = args.get("name") {
+        presets::by_name(name)
+            .ok_or_else(|| Error::request(format!("unknown arch '{name}'")))?
+    } else {
+        resolve_arch(args)?
     };
-    report_result(run())
-}
-
-fn cmd_run(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let dir = args
-            .get("artifacts")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(default_artifacts_dir);
-        let mut rt = Runtime::cpu().map_err(|e| e.to_string())?;
-        let names = rt.load_manifest_dir(&dir).map_err(|e| e.to_string())?;
-        println!("platform={} loaded={names:?}", rt.platform());
-        let kname = args.get("kernel").map(str::to_string).unwrap_or_else(|| names[0].clone());
-        let k = rt.kernel(&kname).map_err(|e| e.to_string())?;
-        // Deterministic pseudo-random inputs.
-        let mut rng = SplitMix64::new(args.get_num::<u64>("seed", 42));
-        let inputs: Vec<Vec<f32>> = k
-            .input_shapes
-            .iter()
-            .map(|s| {
-                let n: i64 = s.iter().product();
-                (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
-            })
-            .collect();
-        let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
-        let iters = args.get_num::<usize>("iters", 20);
-        let mut times = Vec::with_capacity(iters);
-        let mut out = Vec::new();
-        for _ in 0..iters {
-            let t0 = std::time::Instant::now();
-            out = k.execute_f32(&refs).map_err(|e| e.to_string())?;
-            times.push(t0.elapsed());
-        }
-        times.sort();
-        println!(
-            "kernel={kname} inputs={:?} output={:?} ({} elems)",
-            k.input_shapes,
-            k.output_shape,
-            out.len()
-        );
-        println!(
-            "latency p50={} min={} max={} over {iters} iters",
-            local_mapper::util::bench::fmt_duration(times[times.len() / 2]),
-            local_mapper::util::bench::fmt_duration(times[0]),
-            local_mapper::util::bench::fmt_duration(*times.last().unwrap()),
-        );
-        if args.flag("verify") {
-            // Conv artifacts are NCHW×MCRS; verify against the host oracle.
-            if let ([n, c, h, w], [m, _c2, r, s]) = (&k.input_shapes[0][..], &k.input_shapes[1][..])
-            {
-                let expect = reference_conv(
-                    &inputs[0], &inputs[1], *n as usize, *c as usize, *h as usize, *w as usize,
-                    *m as usize, *r as usize, *s as usize, 1,
-                );
-                let max_err =
-                    out.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
-                println!("verify: max |err| vs host conv oracle = {max_err:.2e}");
-                if max_err > 1e-3 {
-                    return Err(format!("verification FAILED (max err {max_err})"));
-                }
+    if args.flag("dump") {
+        print!("{}", config::accelerator_to_yaml(&acc));
+    } else {
+        println!("{acc}");
+        for (i, l) in acc.levels.iter().enumerate() {
+            let cap = if l.unbounded {
+                "unbounded".to_string()
             } else {
-                return Err("kernel shapes are not conv-like; cannot verify".into());
+                format!("{} elems", acc.level_capacity(i))
+            };
+            println!("  L{i} {}: {cap}{}", l.name, if l.per_pe { " (per PE)" } else { "" });
+        }
+    }
+    Ok(())
+}
+
+fn cmd_run(args: &Args) -> Result<(), Error> {
+    let dir = args
+        .get("artifacts")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(default_artifacts_dir);
+    let mut rt = Runtime::cpu()?;
+    let names = rt.load_manifest_dir(&dir)?;
+    println!("platform={} loaded={names:?}", rt.platform());
+    let kname = args.get("kernel").map(str::to_string).unwrap_or_else(|| names[0].clone());
+    let k = rt.kernel(&kname)?;
+    // Deterministic pseudo-random inputs.
+    let mut rng = SplitMix64::new(args.get_num::<u64>("seed", 42));
+    let inputs: Vec<Vec<f32>> = k
+        .input_shapes
+        .iter()
+        .map(|s| {
+            let n: i64 = s.iter().product();
+            (0..n).map(|_| (rng.next_f64() as f32) - 0.5).collect()
+        })
+        .collect();
+    let refs: Vec<&[f32]> = inputs.iter().map(|v| v.as_slice()).collect();
+    let iters = args.get_num::<usize>("iters", 20);
+    let mut times = Vec::with_capacity(iters);
+    let mut out = Vec::new();
+    for _ in 0..iters {
+        let t0 = std::time::Instant::now();
+        out = k.execute_f32(&refs)?;
+        times.push(t0.elapsed());
+    }
+    times.sort();
+    println!(
+        "kernel={kname} inputs={:?} output={:?} ({} elems)",
+        k.input_shapes,
+        k.output_shape,
+        out.len()
+    );
+    println!(
+        "latency p50={} min={} max={} over {iters} iters",
+        fmt_duration(times[times.len() / 2]),
+        fmt_duration(times[0]),
+        fmt_duration(*times.last().unwrap()),
+    );
+    if args.flag("verify") {
+        // Conv artifacts are NCHW×MCRS; verify against the host oracle.
+        if let ([n, c, h, w], [m, _c2, r, s]) = (&k.input_shapes[0][..], &k.input_shapes[1][..]) {
+            let expect = reference_conv(
+                &inputs[0], &inputs[1], *n as usize, *c as usize, *h as usize, *w as usize,
+                *m as usize, *r as usize, *s as usize, 1,
+            );
+            let max_err =
+                out.iter().zip(&expect).map(|(a, b)| (a - b).abs()).fold(0f32, f32::max);
+            println!("verify: max |err| vs host conv oracle = {max_err:.2e}");
+            if max_err > 1e-3 {
+                return Err(RuntimeError::msg(format!(
+                    "verification FAILED (max err {max_err})"
+                ))
+                .into());
+            }
+        } else {
+            return Err(RuntimeError::msg("kernel shapes are not conv-like; cannot verify")
+                .into());
+        }
+    }
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args, session: &Session) -> Result<(), Error> {
+    let format = output_format(args)?;
+    let req = base_request(args, 3000)?.layer_spec(args.get_or("layer", "vgg02:5"));
+    let opts = local_mapper::sim::SimOptions {
+        double_buffer: !args.flag("single-buffer"),
+        lockstep_pes: true,
+    };
+    let r = session.simulate(&req, opts)?;
+    match format {
+        Format::Json => print!("{}", api::json::simulate_report(&r)),
+        Format::Table => {
+            println!("layer: {}\naccelerator: {}\nmapper: {}\n", r.layer, r.acc, r.mapper);
+            println!("analytical roofline: {} cycles", r.outcome.evaluation.latency_cycles);
+            println!(
+                "tile-pipeline sim ({}-buffered): {} cycles ({:.2}x over pure compute)",
+                if r.options.double_buffer { "double" } else { "single" },
+                r.sim.total_cycles,
+                r.sim.slowdown
+            );
+            println!("bottleneck level: {}", r.acc.levels[r.sim.bottleneck_level].name);
+            for (l, p) in r.sim.levels.iter().enumerate().skip(1) {
+                println!(
+                    "  {}: {} rounds, {} transfer cycles, {} stall cycles",
+                    r.acc.levels[l].name, p.rounds, p.transfer_cycles, p.stall_cycles
+                );
+            }
+            println!(
+                "mesh NoC: {} word-hops ({} µJ exact vs {} µJ analytical), max link {} words",
+                r.mesh.word_hops,
+                fmt_f64(r.mesh_energy_uj()),
+                fmt_f64(r.analytical_noc_uj()),
+                r.mesh.max_link_words
+            );
+        }
+    }
+    Ok(())
+}
+
+fn cmd_explore(args: &Args, session: &Session) -> Result<(), Error> {
+    let format = output_format(args)?;
+    // Batch default like compile/compile-all: the sweep maps every grid
+    // point × every layer with no shape dedup.
+    let req = base_request(args, 300)?.network(args.get_or("network", "vgg02"));
+    let grid = local_mapper::explore::SweepGrid::default_grid();
+    let r = session.explore(&req, &grid)?;
+    match format {
+        Format::Json => print!("{}", api::json::explore_report(&r)),
+        Format::Table => {
+            let mut t = local_mapper::util::table::Table::new(vec![
+                "design", "energy (µJ)", "pJ/MAC", "latency (cyc)", "EDP", "util",
+            ]);
+            for d in &r.results {
+                t.row(vec![
+                    d.label.clone(),
+                    fmt_f64(d.total_energy_uj),
+                    fmt_f64(d.pj_per_mac()),
+                    d.total_latency_cycles.to_string(),
+                    fmt_f64(d.edp),
+                    format!("{:.0}%", d.mean_utilization * 100.0),
+                ]);
+            }
+            println!("{}", t.render());
+            println!("Pareto front (energy vs latency):");
+            for d in &r.front {
+                println!(
+                    "  {} — {} µJ, {} cycles",
+                    d.label,
+                    fmt_f64(d.total_energy_uj),
+                    d.total_latency_cycles
+                );
             }
         }
-        Ok(())
-    };
-    report_result(run())
-}
-
-fn cmd_simulate(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let acc = resolve_arch(args)?;
-        let layer = resolve_layer(args.get_or("layer", "vgg02:5"))?;
-        let mapper = resolve_mapper(args)?;
-        let out = mapper.run(&layer, &acc).map_err(|e| e.to_string())?;
-        let opts = local_mapper::sim::SimOptions {
-            double_buffer: !args.flag("single-buffer"),
-            lockstep_pes: true,
-        };
-        let r = local_mapper::sim::simulate(&layer, &acc, &out.mapping, opts);
-        println!("layer: {layer}\naccelerator: {acc}\nmapper: {}\n", mapper.name());
-        println!("analytical roofline: {} cycles", out.evaluation.latency_cycles);
-        println!(
-            "tile-pipeline sim ({}-buffered): {} cycles ({:.2}x over pure compute)",
-            if opts.double_buffer { "double" } else { "single" },
-            r.total_cycles,
-            r.slowdown
-        );
-        println!("bottleneck level: {}", acc.levels[r.bottleneck_level].name);
-        for (l, p) in r.levels.iter().enumerate().skip(1) {
-            println!(
-                "  {}: {} rounds, {} transfer cycles, {} stall cycles",
-                acc.levels[l].name, p.rounds, p.transfer_cycles, p.stall_cycles
-            );
-        }
-        let mesh = local_mapper::noc::simulate_mesh(&layer, &acc, &out.mapping);
-        println!(
-            "mesh NoC: {} word-hops ({} µJ exact vs {} µJ analytical), max link {} words",
-            mesh.word_hops,
-            fmt_f64(mesh.energy_pj(acc.noc.hop_energy_pj) / 1e6),
-            fmt_f64(out.evaluation.energy.noc_pj / 1e6),
-            mesh.max_link_words
-        );
-        Ok(())
-    };
-    report_result(run())
-}
-
-fn cmd_explore(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let base = resolve_arch(args)?;
-        let net = args.get_or("network", "vgg02");
-        let layers = zoo::network(net).ok_or_else(|| format!("unknown network '{net}'"))?;
-        // Batch default like compile/compile-all: the sweep maps every
-        // grid point × every layer with no shape dedup.
-        let mapper = resolve_mapper_with(args, 300)?;
-        let grid = local_mapper::explore::SweepGrid::default_grid();
-        let points = grid.points(&base);
-        let results = local_mapper::explore::sweep(&points, &layers, &mapper)
-            .map_err(|e| e.to_string())?;
-        let mut t = local_mapper::util::table::Table::new(vec![
-            "design", "energy (µJ)", "pJ/MAC", "latency (cyc)", "EDP", "util",
-        ]);
-        for r in &results {
-            t.row(vec![
-                r.label.clone(),
-                fmt_f64(r.total_energy_uj),
-                fmt_f64(r.pj_per_mac()),
-                r.total_latency_cycles.to_string(),
-                fmt_f64(r.edp),
-                format!("{:.0}%", r.mean_utilization * 100.0),
-            ]);
-        }
-        println!("{}", t.render());
-        println!("Pareto front (energy vs latency):");
-        for r in local_mapper::explore::pareto(&results) {
-            println!(
-                "  {} — {} µJ, {} cycles",
-                r.label,
-                fmt_f64(r.total_energy_uj),
-                r.total_latency_cycles
-            );
-        }
-        Ok(())
-    };
-    report_result(run())
+    }
+    Ok(())
 }
 
 /// Run the perf harness and write the `BENCH_eval.json` artifact.
-fn cmd_perf(args: &Args) -> i32 {
-    let run = || -> Result<(), String> {
-        let cfg = if args.flag("smoke") {
-            local_mapper::perf::PerfConfig::smoke()
-        } else {
-            local_mapper::perf::PerfConfig::full()
-        };
-        let report = local_mapper::perf::run(&cfg);
-        println!("{}", report.summary());
-        let out = args.get_or("out", "BENCH_eval.json");
-        std::fs::write(out, report.to_json()).map_err(|e| format!("writing {out}: {e}"))?;
-        println!("wrote {out}");
-        Ok(())
+fn cmd_perf(args: &Args) -> Result<(), Error> {
+    let cfg = if args.flag("smoke") {
+        local_mapper::perf::PerfConfig::smoke()
+    } else {
+        local_mapper::perf::PerfConfig::full()
     };
-    report_result(run())
-}
-
-fn report_result(r: Result<(), String>) -> i32 {
-    match r {
-        Ok(()) => 0,
-        Err(e) => {
-            eprintln!("error: {e}");
-            1
-        }
-    }
+    let report = local_mapper::perf::run(&cfg);
+    println!("{}", report.summary());
+    let out = args.get_or("out", "BENCH_eval.json");
+    std::fs::write(out, report.to_json()).map_err(|e| Error::io(out, e))?;
+    println!("wrote {out}");
+    Ok(())
 }

@@ -198,6 +198,52 @@ pub fn render_fig7_panel(panel: &Fig7Panel, acc: &Accelerator) -> Table {
     t
 }
 
+/// ------------------------------------------------------------- API reports
+
+/// Per-layer table for one network of an API compile report (what the
+/// `map` and `compile` subcommands print in table mode).
+pub fn render_layer_reports(net: &crate::api::NetworkReport) -> Table {
+    let mut t = Table::new(vec![
+        "layer", "MACs", "energy (µJ)", "pJ/MAC", "util", "latency (cyc)", "map time", "cached",
+    ]);
+    for l in &net.layers {
+        t.row(vec![
+            l.layer.name.clone(),
+            l.macs().to_string(),
+            fmt_f64(l.energy_uj()),
+            fmt_f64(l.pj_per_mac()),
+            format!("{:.0}%", l.utilization() * 100.0),
+            l.latency_cycles().to_string(),
+            crate::util::bench::fmt_duration(l.outcome.elapsed),
+            if l.cached { "yes" } else { "no" }.into(),
+        ]);
+    }
+    t
+}
+
+/// One-row-per-network summary of an API compile report (what the
+/// `compile-all` subcommand prints in table mode).
+pub fn render_network_summaries(r: &crate::api::CompileReport) -> Table {
+    let mut t = Table::new(vec![
+        "network", "layers", "MACs", "energy (µJ)", "pJ/MAC", "latency (cyc)", "mean util",
+        "cached", "compile",
+    ]);
+    for net in &r.networks {
+        t.row(vec![
+            net.name.clone(),
+            net.layers.len().to_string(),
+            net.total_macs().to_string(),
+            fmt_f64(net.total_energy_uj()),
+            fmt_f64(net.pj_per_mac()),
+            net.total_latency_cycles().to_string(),
+            format!("{:.0}%", net.mean_utilization() * 100.0),
+            format!("{}/{}", net.cache_hits(), net.layers.len()),
+            crate::util::bench::fmt_duration(net.compile_time),
+        ]);
+    }
+    t
+}
+
 /// ------------------------------------------------------------ Batch compile
 
 /// Render the `compile-all` batch summary: one row per network with
@@ -270,6 +316,19 @@ mod tests {
         .unwrap();
         let t = render_batch_summary(&batch);
         assert_eq!(t.n_rows(), 2);
+    }
+
+    #[test]
+    fn api_report_tables_cover_layers_and_networks() {
+        use crate::api::{CompileRequest, Session};
+        let session = Session::new();
+        let r = session
+            .compile(&CompileRequest::new().network("alexnet").threads(2))
+            .unwrap();
+        let per_layer = render_layer_reports(&r.networks[0]);
+        assert_eq!(per_layer.n_rows(), 5);
+        let summary = render_network_summaries(&r);
+        assert_eq!(summary.n_rows(), 1);
     }
 
     #[test]

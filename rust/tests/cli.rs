@@ -1,7 +1,13 @@
 //! CLI integration tests: drive the `local-mapper` binary end to end and
 //! check output shape and exit codes for every subcommand (reduced budgets
 //! so the suite stays fast).
+//!
+//! Exit codes follow the `api::Error` classes: 0 ok, 2 usage, 3 invalid
+//! input, 4 mapping/execution failure; stderr carries the stable error
+//! code as `error[E_*]: ...`. The `--format json` tests pin the `"api_v1"`
+//! schema and its byte-stable key order.
 
+use local_mapper::api::json::{parse, Json};
 use std::process::Command;
 
 fn run(args: &[&str]) -> (String, String, i32) {
@@ -26,8 +32,8 @@ fn help_lists_subcommands() {
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
-    // The search-engine flags are documented.
-    for flag in ["--objective", "--search-threads", "--no-prune"] {
+    // The search-engine and output flags are documented.
+    for flag in ["--objective", "--search-threads", "--no-prune", "--format"] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
 }
@@ -58,15 +64,25 @@ fn map_with_explicit_dims() {
 #[test]
 fn map_rejects_bad_layer_spec() {
     let (_, stderr, code) = run(&["map", "--layer", "not-a-layer"]);
-    assert_eq!(code, 1);
-    assert!(stderr.contains("error"));
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
 }
 
 #[test]
 fn map_rejects_unknown_arch() {
     let (_, stderr, code) = run(&["map", "--arch", "tpu"]);
-    assert_eq!(code, 1);
+    assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("unknown arch"));
+    assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
+}
+
+#[test]
+fn unknown_format_is_a_usage_error() {
+    for sub in ["map", "compile", "compile-all", "simulate", "explore"] {
+        let (_, stderr, code) = run(&[sub, "--format", "frob"]);
+        assert_eq!(code, 2, "{sub}: {stderr}");
+        assert!(stderr.contains("unknown format"), "{sub}: {stderr}");
+    }
 }
 
 #[test]
@@ -101,7 +117,7 @@ fn objective_flag_works_end_to_end() {
     assert_eq!(code, 0, "{stderr}");
     assert!(stdout.contains("objective=delay"), "{stdout}");
     let (_, stderr, code) = run(&["map", "--objective", "frob"]);
-    assert_eq!(code, 1);
+    assert_eq!(code, 2);
     assert!(stderr.contains("unknown objective"), "{stderr}");
     // compile: whole-network compile under a non-default objective.
     let (stdout, stderr, code) =
@@ -144,8 +160,9 @@ fn compile_with_mapper_flag() {
     assert_eq!(code, 0, "{stderr}");
     assert!(stdout.contains("mapper=LOCAL+refine"), "{stdout}");
     let (_, stderr, code) = run(&["compile", "--network", "alexnet", "--mapper", "frob"]);
-    assert_eq!(code, 1);
+    assert_eq!(code, 2);
     assert!(stderr.contains("unknown mapper"));
+    assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
 }
 
 #[test]
@@ -167,11 +184,11 @@ fn compile_from_network_file() {
     let (stdout, _, code) = run(&["compile", "--network-file", path.to_str().unwrap()]);
     assert_eq!(code, 0);
     assert!(stdout.contains("layers=1"));
-    // Malformed file → clean error.
+    // Malformed file → clean invalid-input error (exit 3, E_WORKLOAD).
     std::fs::write(&path, "layers:\n  - m: 16\n").unwrap();
     let (_, stderr, code) = run(&["compile", "--network-file", path.to_str().unwrap()]);
-    assert_eq!(code, 1);
-    assert!(stderr.contains("error"));
+    assert_eq!(code, 3, "{stderr}");
+    assert!(stderr.contains("error[E_WORKLOAD]"), "{stderr}");
 }
 
 #[test]
@@ -200,7 +217,7 @@ fn compile_all_prints_batch_summary_and_metrics() {
 #[test]
 fn compile_all_rejects_unknown_mapper() {
     let (_, stderr, code) = run(&["compile-all", "--mapper", "frob"]);
-    assert_eq!(code, 1);
+    assert_eq!(code, 2);
     assert!(stderr.contains("unknown mapper"));
 }
 
@@ -273,6 +290,171 @@ fn explore_prints_pareto() {
     assert!(stdout.contains("Pareto front"));
 }
 
+/// The exact top-level key order of an `"api_v1"` compile document. Key
+/// order is part of the output contract (byte-stable across runs); any
+/// reordering is a schema change and must bump the tag.
+const COMPILE_KEYS: [&str; 10] = [
+    "schema",
+    "kind",
+    "workload",
+    "arch",
+    "mapper",
+    "objective",
+    "networks",
+    "totals",
+    "cache",
+    "compile_time_ms",
+];
+
+const LAYER_KEYS: [&str; 12] = [
+    "name",
+    "op",
+    "macs",
+    "energy_uj",
+    "pj_per_mac",
+    "latency_cycles",
+    "utilization",
+    "evaluations",
+    "map_time_ms",
+    "score",
+    "cached",
+    "mapping",
+];
+
+fn assert_compile_skeleton(doc: &Json) {
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("api_v1"));
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("compile"));
+    assert_eq!(doc.keys(), COMPILE_KEYS.to_vec());
+    for net in doc.get("networks").unwrap().as_arr().unwrap() {
+        assert_eq!(net.keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
+        for layer in net.get("layers").unwrap().as_arr().unwrap() {
+            assert_eq!(layer.keys(), LAYER_KEYS.to_vec());
+            assert_eq!(
+                layer.get("mapping").unwrap().keys(),
+                vec!["temporal", "permutation", "spatial_x", "spatial_y"]
+            );
+        }
+    }
+}
+
+#[test]
+fn map_format_json_golden() {
+    let (stdout, stderr, code) =
+        run(&["map", "--layer", "vgg02:5", "--arch", "eyeriss", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    // The document opens with the schema tag, byte for byte.
+    assert!(
+        stdout.starts_with("{\n  \"schema\": \"api_v1\",\n  \"kind\": \"compile\",\n"),
+        "{stdout}"
+    );
+    let doc = parse(&stdout).expect("map JSON parses");
+    assert_compile_skeleton(&doc);
+    assert_eq!(doc.get("workload").unwrap().as_str(), Some("VGG02_conv5"));
+    assert_eq!(doc.get("arch").unwrap().as_str(), Some("Eyeriss"));
+    assert_eq!(doc.get("mapper").unwrap().as_str(), Some("LOCAL"));
+    assert_eq!(doc.get("objective").unwrap().as_str(), Some("energy"));
+    let layers = doc.get("networks").unwrap().as_arr().unwrap()[0]
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap();
+    assert_eq!(layers.len(), 1);
+    assert_eq!(layers[0].get("name").unwrap().as_str(), Some("VGG02_conv5"));
+    assert_eq!(layers[0].get("op").unwrap().as_str(), Some("conv"));
+    // Table-1 layer: M=256, C=128, R=S=3, P=Q=56.
+    assert_eq!(
+        layers[0].get("macs").unwrap().as_u64(),
+        Some(256 * 128 * 9 * 56 * 56)
+    );
+    assert!(layers[0].get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+    // Key order is byte-stable: a second run emits the identical key
+    // sequence (only measured wall-clock values may differ).
+    let (second, _, _) =
+        run(&["map", "--layer", "vgg02:5", "--arch", "eyeriss", "--format", "json"]);
+    let keys = |s: &str| -> Vec<String> {
+        s.lines()
+            .flat_map(|l| {
+                l.split('"')
+                    .skip(1)
+                    .step_by(2)
+                    .map(str::to_string)
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    };
+    assert_eq!(keys(&stdout), keys(&second), "key/string sequence diverged across runs");
+}
+
+#[test]
+fn compile_all_format_json_golden() {
+    let (stdout, stderr, code) = run(&["compile-all", "--threads", "4", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("compile-all JSON parses");
+    assert_compile_skeleton(&doc);
+    assert_eq!(doc.get("workload").unwrap().as_str(), Some("zoo(8)"));
+    // The batch zoo, in submission order, with its exact layer counts.
+    let nets = doc.get("networks").unwrap().as_arr().unwrap();
+    let expect: [(&str, u64); 8] = [
+        ("vgg16", 13),
+        ("resnet50", 53),
+        ("mobilenetv2", 52),
+        ("squeezenet", 26),
+        ("alexnet", 5),
+        ("bert", 96),
+        ("vgg16pool", 18),
+        ("mobilenetv2res", 62),
+    ];
+    assert_eq!(nets.len(), 8);
+    for (net, (name, layers)) in nets.iter().zip(expect) {
+        assert_eq!(net.get("name").unwrap().as_str(), Some(name));
+        assert_eq!(
+            net.get("layers").unwrap().as_arr().unwrap().len() as u64,
+            layers,
+            "{name}"
+        );
+        assert_eq!(
+            net.get("totals").unwrap().get("layers").unwrap().as_u64(),
+            Some(layers),
+            "{name}"
+        );
+    }
+    let totals = doc.get("totals").unwrap();
+    assert_eq!(totals.get("layers").unwrap().as_u64(), Some(325));
+    assert!(totals.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+    let cache = doc.get("cache").unwrap();
+    assert_eq!(cache.get("requests").unwrap().as_u64(), Some(325));
+    assert!(cache.get("hits").unwrap().as_u64().unwrap() > 0);
+}
+
+#[test]
+fn compile_simulate_explore_emit_api_v1_json() {
+    let (stdout, stderr, code) =
+        run(&["compile", "--network", "alexnet", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("compile JSON parses");
+    assert_compile_skeleton(&doc);
+    assert_eq!(doc.get("workload").unwrap().as_str(), Some("alexnet"));
+
+    let (stdout, stderr, code) =
+        run(&["simulate", "--layer", "vgg16:9", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("simulate JSON parses");
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("api_v1"));
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("simulate"));
+    let sim = doc.get("sim").unwrap();
+    assert!(sim.get("total_cycles").unwrap().as_u64().unwrap() > 0);
+    assert!(!sim.get("levels").unwrap().as_arr().unwrap().is_empty());
+
+    let (stdout, stderr, code) =
+        run(&["explore", "--network", "alexnet", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("explore JSON parses");
+    assert_eq!(doc.get("schema").unwrap().as_str(), Some("api_v1"));
+    assert_eq!(doc.get("kind").unwrap().as_str(), Some("explore"));
+    assert_eq!(doc.get("results").unwrap().as_arr().unwrap().len(), 28);
+    assert!(!doc.get("pareto").unwrap().as_arr().unwrap().is_empty());
+}
+
 #[test]
 fn perf_smoke_writes_valid_bench_json() {
     let path = std::env::temp_dir().join("lm_cli_bench_eval.json");
@@ -304,6 +486,6 @@ fn perf_smoke_writes_valid_bench_json() {
 #[test]
 fn run_errors_cleanly_without_artifacts() {
     let (_, stderr, code) = run(&["run", "--artifacts", "/nonexistent/dir"]);
-    assert_eq!(code, 1);
-    assert!(stderr.contains("error"));
+    assert_eq!(code, 4, "{stderr}");
+    assert!(stderr.contains("error[E_RUNTIME]"), "{stderr}");
 }
