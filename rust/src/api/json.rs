@@ -93,7 +93,7 @@ fn mapping(m: &Mapping) -> String {
 fn layer(l: &LayerReport) -> String {
     let e = &l.outcome.evaluation;
     format!(
-        "{{\"name\": \"{}\", \"op\": \"{}\", \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"utilization\": {}, \"evaluations\": {}, \"map_time_ms\": {}, \"score\": {}, \"cached\": {}, \"mapping\": {}}}",
+        "{{\"name\": \"{}\", \"op\": \"{}\", \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"utilization\": {}, \"evaluations\": {}, \"map_time_ms\": {}, \"score\": {}, \"cached\": {}, \"certified\": {}, \"mapping\": {}}}",
         esc(&l.layer.name),
         l.layer.op.name(),
         e.macs,
@@ -105,6 +105,7 @@ fn layer(l: &LayerReport) -> String {
         jms(l.outcome.elapsed),
         jf(l.outcome.score),
         l.cached,
+        l.outcome.certified,
         mapping(&l.outcome.mapping)
     )
 }
@@ -653,6 +654,7 @@ mod tests {
                 "map_time_ms",
                 "score",
                 "cached",
+                "certified",
                 "mapping"
             ]
         );

@@ -181,6 +181,14 @@ impl CompileRequest {
         self
     }
 
+    /// Request certified branch-and-bound search (exhaustive mapper):
+    /// the report's `certified` flag is `true` when the budget provably
+    /// covered the whole candidate space.
+    pub fn certify(mut self, certify: bool) -> Self {
+        self.search.certify = certify;
+        self
+    }
+
     /// Set the mapping-service worker-thread count.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);

@@ -45,6 +45,7 @@ struct ServiceKey {
     objective: Objective,
     search_threads: usize,
     prune: bool,
+    certify: bool,
     workers: usize,
 }
 
@@ -69,6 +70,7 @@ impl ServiceKey {
             objective: req.search.objective,
             search_threads: req.search.threads.max(1),
             prune: req.search.prune,
+            certify: req.search.certify,
             workers: resolved.threads,
         }
     }

@@ -122,6 +122,12 @@ Search-engine flags (wherever --mapper is accepted):
                                  by default for exhaustive and rs/ws/os
                                  (pruning never changes the selected
                                  mapping, only cuts evaluations)
+  --certify                      run branch-and-bound over the tiling
+                                 lattice (defaults --mapper to exhaustive);
+                                 the report's per-layer \"certified\" flag
+                                 is true when the budget provably covered
+                                 the whole candidate space, so the result
+                                 is the certified optimum
 
 Output and errors:
   --format json|table            map, compile, compile-all, simulate and
@@ -162,6 +168,7 @@ fn search_params(args: &Args, default_budget: u64) -> Result<SearchParams, Error
         objective,
         threads: args.get_num::<usize>("search-threads", 1).max(1),
         prune: !args.flag("no-prune"),
+        certify: args.flag("certify"),
     })
 }
 
@@ -170,8 +177,12 @@ fn search_params(args: &Args, default_budget: u64) -> Result<SearchParams, Error
 /// its workload. `default_budget` is 3000 for single-layer commands and
 /// 300 for the batch commands (the budget applies per layer mapping).
 fn base_request(args: &Args, default_budget: u64) -> Result<CompileRequest, Error> {
+    // `--certify` implies the branch-and-bound exhaustive mapper unless the
+    // caller picked a mapper explicitly (other mappers simply report
+    // `certified: false`).
+    let default_mapper = if args.flag("certify") { "exhaustive" } else { "local" };
     let mut req = CompileRequest::new()
-        .mapper(args.get_or("mapper", "local"))
+        .mapper(args.get_or("mapper", default_mapper))
         .search(search_params(args, default_budget)?)
         .threads(args.get_num::<usize>("threads", 4));
     req = if let Some(path) = args.get("arch-file") {

@@ -1,0 +1,476 @@
+//! True branch-and-bound over the tiling factorization lattice
+//! (DESIGN.md §13).
+//!
+//! [`super::SearchDriver::search`] over an [`super::OdometerSource`] prunes
+//! one permutation block at a time: it must still *materialize* every
+//! tiling before bounding it. [`BoundedLattice`] exposes the same candidate
+//! space as a lattice of partial factor assignments — dims are fixed one at
+//! a time in [`crate::mapspace::lattice_order`] (descending odometer
+//! significance), so every partial assignment owns one **contiguous** range
+//! of global block indices. [`SearchDriver::branch_and_bound`] walks that
+//! lattice depth-first, bounds each subtree with
+//! [`EvalContext::partial_bound`] and skips it wholesale when the bound
+//! already exceeds the incumbent — same argmin, same tie-break index, a
+//! fraction of the bound computations and none of the materialization for
+//! pruned subtrees.
+//!
+//! # Certification
+//!
+//! The walk covers exactly the driver's budget-truncated index range, and
+//! a skipped subtree provably contains no candidate better than the
+//! incumbent ([`EvalContext::partial_bound`]'s lower-bound contract). When
+//! the budget admits the *entire* space, the returned best is therefore a
+//! certified optimum over every enumerated tiling × rotation — reported as
+//! the `certified` flag, and surfaced all the way up through
+//! [`crate::mappers::MapOutcome`] and the `api_v1` JSON.
+//!
+//! # Determinism
+//!
+//! Identical machinery to [`super::SearchDriver::search`]: synchronized
+//! pruning rounds with the incumbent frozen at each round boundary,
+//! contiguous per-worker shards, and the lowest-score/lowest-index merge.
+//! A node's prune decision depends only on its bound and the frozen
+//! incumbent — never on which worker visits it — so the evaluated set,
+//! every count and the argmin are bit-identical at every thread count
+//! (pinned by `prop_branch_and_bound_matches_unpruned_exhaustive`).
+
+use super::{merge_best, shard_start, CandidateSource, SearchBest, SearchDriver, ShardResult};
+use super::{Objective, MIN_ROUND_BLOCKS, PRUNE_ROUNDS};
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::mapspace::lattice_order;
+use crate::model::EvalContext;
+use crate::util::factor::factorizations;
+use crate::workload::{Dim, Layer};
+
+/// The exhaustive tiling space exposed as a branch-and-bound lattice.
+///
+/// Enumerates exactly the candidates of [`super::OdometerSource`] under
+/// exactly the same global indices (`block × perms + rotation`, dim 0 the
+/// least-significant odometer digit), so an exact score tie between two
+/// distinct tilings resolves to the same winner whichever engine ran —
+/// the precondition for the bit-identity guarantees of
+/// [`SearchDriver::branch_and_bound`].
+#[derive(Debug)]
+pub struct BoundedLattice {
+    /// `per_dim[d]` = ordered splits of dim `d`'s bound across
+    /// `[sx, sy, t0, .., t_top]` (identical to the odometer's tables).
+    per_dim: Vec<Vec<Vec<u64>>>,
+    /// `weight[d]` = blocks per index step of dim `d` (`Π_{d' < d} len`),
+    /// `weight[7]` = the whole space; saturating.
+    weight: [u64; 8],
+    /// Lattice assignment order (descending significance); depth `k` of
+    /// the DFS fixes `order[k]`.
+    order: [Dim; 7],
+    n_levels: usize,
+    perms: u64,
+}
+
+impl BoundedLattice {
+    /// Build the lattice for one (layer, accelerator) pair. `permute` adds
+    /// the 7-rotation permutation fan-out per tiling, as the odometer does.
+    pub fn new(layer: &Layer, acc: &Accelerator, permute: bool) -> Self {
+        let n_levels = acc.n_levels();
+        let slots = n_levels + 2;
+        let per_dim: Vec<Vec<Vec<u64>>> =
+            Dim::ALL.iter().map(|&d| factorizations(layer.bound(d), slots)).collect();
+        let mut weight = [1u64; 8];
+        for d in 0..7 {
+            weight[d + 1] = weight[d].saturating_mul(per_dim[d].len() as u64);
+        }
+        #[cfg(debug_assertions)]
+        for depth in 0..=7usize {
+            // The subtree spans must agree with the mapspace accounting.
+            debug_assert_eq!(
+                weight[7 - depth],
+                crate::mapspace::lattice_subtree_blocks(layer, acc, depth),
+                "lattice span mismatch at depth {depth}"
+            );
+        }
+        Self { per_dim, weight, order: lattice_order(), n_levels, perms: if permute { 7 } else { 1 } }
+    }
+
+    /// Exact space size (blocks), before any u64 clamping.
+    fn blocks_u128(&self) -> u128 {
+        self.per_dim.iter().map(|v| v.len() as u128).product()
+    }
+
+    /// Write split `i` of dim `d` into `m`'s spatial/temporal slots.
+    fn assign(&self, d: usize, i: usize, m: &mut Mapping) {
+        let split = &self.per_dim[d][i];
+        m.spatial_x[d] = split[0];
+        m.spatial_y[d] = split[1];
+        for l in 0..self.n_levels {
+            m.temporal[l][d] = split[2 + l];
+        }
+    }
+
+    /// Reset dim `d` to the all-ones (unassigned) split.
+    fn clear(&self, d: usize, m: &mut Mapping) {
+        m.spatial_x[d] = 1;
+        m.spatial_y[d] = 1;
+        for l in 0..self.n_levels {
+            m.temporal[l][d] = 1;
+        }
+    }
+}
+
+impl CandidateSource for BoundedLattice {
+    fn n_blocks(&self) -> u64 {
+        self.blocks_u128().min(u64::MAX as u128) as u64
+    }
+
+    fn block_len(&self) -> u64 {
+        self.perms
+    }
+
+    fn emit_block(&self, b: u64, m: &mut Mapping) -> bool {
+        let mut linear = b;
+        for (d, splits) in self.per_dim.iter().enumerate() {
+            let len = splits.len() as u64;
+            let idx = (linear % len) as usize;
+            linear /= len;
+            let split = &splits[idx];
+            m.spatial_x[d] = split[0];
+            m.spatial_y[d] = split[1];
+            for l in 0..self.n_levels {
+                m.temporal[l][d] = split[2 + l];
+            }
+        }
+        for p in m.permutation.iter_mut() {
+            *p = Dim::ALL;
+        }
+        true
+    }
+
+    fn emit_member(&self, _b: u64, i: u64, m: &mut Mapping) {
+        let mut p = Dim::ALL;
+        p.rotate_left((i % 7) as usize);
+        for perm in m.permutation.iter_mut() {
+            *perm = p;
+        }
+    }
+
+    fn rotation_members(&self) -> bool {
+        true
+    }
+}
+
+/// One worker's depth-first walk over its contiguous block range.
+struct Dfs<'a> {
+    src: &'a BoundedLattice,
+    layer: &'a Layer,
+    acc: &'a Accelerator,
+    objective: Objective,
+    prune: bool,
+    ctx: &'a mut EvalContext,
+    /// Scratch mapping: unassigned dims carry 1 everywhere (the
+    /// [`EvalContext::partial_bound`] precondition).
+    m: &'a mut Mapping,
+    assigned: [bool; 7],
+    /// Incumbent frozen at the round boundary.
+    incumbent: Option<f64>,
+    /// This worker's block range within the round.
+    lo: u64,
+    hi: u64,
+    budget: u64,
+    visit_blocks: u64,
+    /// Candidates of the final visited block that fall past the budget.
+    overhang: u64,
+    out: ShardResult,
+    members_buf: Vec<Mapping>,
+    member_ids: Vec<u64>,
+    scores: Vec<(f64, u64)>,
+}
+
+impl Dfs<'_> {
+    /// In-budget candidate count of the block range `[a, b)`.
+    fn members_in(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < b && b <= self.visit_blocks);
+        let mut n = (b - a) * self.src.perms;
+        if b == self.visit_blocks {
+            n -= self.overhang;
+        }
+        n
+    }
+
+    /// Visit the lattice node whose first `depth` dims are assigned and
+    /// whose block range starts at `base`, clipped to `[lo, hi)`.
+    fn node(&mut self, depth: usize, base: u64) {
+        if depth == 7 {
+            self.leaf(base);
+            return;
+        }
+        let d = self.src.order[depth].idx();
+        let w = self.src.weight[d];
+        let len = self.src.per_dim[d].len() as u64;
+        for i in 0..len {
+            let child = base.saturating_add(i.saturating_mul(w));
+            if child >= self.hi {
+                break; // choices are index-ascending: nothing further overlaps
+            }
+            let child_end = child.saturating_add(w);
+            if child_end <= self.lo {
+                continue;
+            }
+            self.src.assign(d, i as usize, self.m);
+            self.assigned[d] = true;
+            let mut cut = false;
+            if self.prune {
+                if let Some(inc) = self.incumbent {
+                    let (e_lb, l_lb) = self.ctx.partial_bound(self.m, &self.assigned);
+                    if self.objective.compose(e_lb, l_lb) > inc {
+                        // No valid completion in this subtree can beat the
+                        // incumbent: skip it wholesale, counting only the
+                        // in-range, in-budget candidates.
+                        self.out.pruned +=
+                            self.members_in(child.max(self.lo), child_end.min(self.hi));
+                        cut = true;
+                    }
+                }
+            }
+            if !cut {
+                self.node(depth + 1, child);
+            }
+        }
+        self.src.clear(d, self.m);
+        self.assigned[d] = false;
+    }
+
+    /// Fully-assigned tiling: materialize and batch-score its rotations.
+    fn leaf(&mut self, b: u64) {
+        debug_assert!(b >= self.lo && b < self.hi);
+        let perms = self.src.perms;
+        let first = b * perms;
+        let members = perms.min(self.budget - first);
+        for p in self.m.permutation.iter_mut() {
+            *p = Dim::ALL;
+        }
+        self.member_ids.clear();
+        let mut n_valid = 0usize;
+        for i in 0..members {
+            if i > 0 {
+                self.src.emit_member(b, i, self.m);
+            }
+            self.out.examined += 1;
+            if self.m.validate(self.layer, self.acc).is_ok() {
+                if n_valid == self.members_buf.len() {
+                    self.members_buf.push(self.m.clone());
+                } else {
+                    super::copy_mapping_into(&mut self.members_buf[n_valid], self.m);
+                }
+                self.member_ids.push(first + i);
+                n_valid += 1;
+            }
+        }
+        if n_valid > 0 {
+            self.ctx.evaluate_many(&self.members_buf[..n_valid], &mut self.scores);
+            self.out.scored += n_valid as u64;
+            for (k, &(e_pj, lat)) in self.scores.iter().enumerate() {
+                let score = self.objective.compose(e_pj, lat);
+                merge_best(&mut self.out.best, score, self.member_ids[k], &self.members_buf[k]);
+            }
+        }
+    }
+}
+
+impl SearchDriver {
+    /// Branch-and-bound over the factorization lattice. Same candidate
+    /// space, budget semantics, seed handling and tie-breaks as
+    /// [`SearchDriver::search`] over the equivalent odometer — but whole
+    /// subtrees of tilings are pruned against the incumbent via
+    /// [`EvalContext::partial_bound`] before any of their blocks is
+    /// materialized. Returns the best (or `None` when nothing validated)
+    /// plus `certified`: `true` iff the budget admitted the entire space,
+    /// i.e. every candidate was either scored or provably bounded out and
+    /// the argmin is the space-wide optimum.
+    pub fn branch_and_bound(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &BoundedLattice,
+        seeds: &[Mapping],
+    ) -> (Option<SearchBest>, bool) {
+        let budget = self.budget.max(1);
+        let perms = source.block_len().max(1);
+        let visit_blocks = source.n_blocks().min(budget.div_ceil(perms));
+        let certified = source.blocks_u128() * perms as u128 <= budget as u128;
+        let overhang = visit_blocks.saturating_mul(perms).saturating_sub(budget);
+
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        let (mut examined, mut scored, mut pruned) = (0u64, 0u64, 0u64);
+
+        if !seeds.is_empty() {
+            let mut ctx = EvalContext::new(layer, acc);
+            for (i, s) in seeds.iter().enumerate() {
+                if s.validate(layer, acc).is_err() {
+                    continue;
+                }
+                examined += 1;
+                scored += 1;
+                let score = self.objective.score(ctx.evaluate_into(s));
+                merge_best(&mut best, score, budget.saturating_add(i as u64), s);
+            }
+        }
+
+        let n_workers = (self.threads.max(1) as u64).min(visit_blocks.max(1));
+        let round_blocks = if self.prune {
+            visit_blocks.div_ceil(PRUNE_ROUNDS).max(MIN_ROUND_BLOCKS)
+        } else {
+            visit_blocks.max(1)
+        };
+        let n_levels = acc.n_levels();
+        let mut workers: Vec<(EvalContext, Mapping)> = (0..n_workers)
+            .map(|_| (EvalContext::new(layer, acc), all_ones_mapping(n_levels)))
+            .collect();
+
+        let mut r0 = 0u64;
+        while r0 < visit_blocks {
+            let r1 = (r0 + round_blocks).min(visit_blocks);
+            let round_n = r1 - r0;
+            let w_n = n_workers.min(round_n);
+            let incumbent = best.as_ref().map(|(s, _, _)| *s);
+            let objective = self.objective;
+            let prune = self.prune;
+            let results: Vec<ShardResult> = std::thread::scope(|scope| {
+                let mut handles = Vec::with_capacity(w_n as usize);
+                for (w, slot) in workers.iter_mut().take(w_n as usize).enumerate() {
+                    let start = r0 + shard_start(round_n, w_n, w as u64);
+                    let end = r0 + shard_start(round_n, w_n, w as u64 + 1);
+                    handles.push(scope.spawn(move || {
+                        let (ctx, scratch) = slot;
+                        let mut dfs = Dfs {
+                            src: source,
+                            layer,
+                            acc,
+                            objective,
+                            prune,
+                            ctx,
+                            m: scratch,
+                            assigned: [false; 7],
+                            incumbent,
+                            lo: start,
+                            hi: end,
+                            budget,
+                            visit_blocks,
+                            overhang,
+                            out: ShardResult::default(),
+                            members_buf: Vec::new(),
+                            member_ids: Vec::new(),
+                            scores: Vec::new(),
+                        };
+                        dfs.node(0, 0);
+                        dfs.out
+                    }));
+                }
+                handles.into_iter().map(|h| h.join().expect("bnb worker panicked")).collect()
+            });
+            for r in results {
+                examined += r.examined;
+                scored += r.scored;
+                pruned += r.pruned;
+                if let Some((s, i, m)) = r.best {
+                    merge_best(&mut best, s, i, &m);
+                }
+            }
+            r0 = r1;
+        }
+
+        let best = best.map(|(score, index, mapping)| SearchBest {
+            mapping,
+            score,
+            index,
+            examined,
+            scored,
+            pruned,
+        });
+        (best, certified)
+    }
+}
+
+/// A mapping with factor 1 in every slot — the DFS scratch's rest state
+/// (every dim unassigned, the [`EvalContext::partial_bound`] precondition).
+fn all_ones_mapping(n_levels: usize) -> Mapping {
+    Mapping {
+        temporal: vec![[1u64; 7]; n_levels],
+        permutation: vec![Dim::ALL; n_levels],
+        spatial_x: [1; 7],
+        spatial_y: [1; 7],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::workload::zoo;
+
+    #[test]
+    fn lattice_indices_match_the_odometer() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let odo = super::super::OdometerSource::new(&layer, &acc, true);
+        let lat = BoundedLattice::new(&layer, &acc, true);
+        assert_eq!(lat.n_blocks(), odo.n_blocks());
+        assert_eq!(lat.block_len(), odo.block_len());
+        let mut a = all_ones_mapping(acc.n_levels());
+        let mut b = all_ones_mapping(acc.n_levels());
+        for blk in [0u64, 1, 7, 715, 9999, 123_456] {
+            assert!(lat.emit_block(blk, &mut a));
+            assert!(odo.emit_block(blk, &mut b));
+            assert_eq!(a, b, "block {blk}");
+            lat.emit_member(blk, 3, &mut a);
+            odo.emit_member(blk, 3, &mut b);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn branch_and_bound_matches_plain_search_counts() {
+        // On a budget-truncated slice of a real layer: identical argmin and
+        // a complete examined/pruned account of every in-budget candidate.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let lat = BoundedLattice::new(&layer, &acc, true);
+        let driver =
+            SearchDriver { objective: Objective::Energy, budget: 700, threads: 1, prune: false };
+        let base = driver.search(&layer, &acc, &lat, &[]).unwrap();
+        let bnb_driver = SearchDriver { prune: true, ..driver };
+        let (bnb, certified) =
+            bnb_driver.branch_and_bound(&layer, &acc, &lat, &[base.mapping.clone()]);
+        let bnb = bnb.unwrap();
+        assert!(!certified, "vgg02 conv5 space cannot fit a 700 budget");
+        assert_eq!(bnb.mapping, base.mapping);
+        assert_eq!(bnb.score.to_bits(), base.score.to_bits());
+        assert_eq!(bnb.index, base.index);
+        // Seed adds one examined candidate; every in-budget candidate is
+        // either examined or provably pruned.
+        assert_eq!(bnb.examined + bnb.pruned, base.examined + 1);
+        assert!(bnb.pruned > 0, "perfect incumbent must prune something");
+    }
+
+    #[test]
+    fn certified_when_the_budget_covers_the_space() {
+        // A tiny layer whose whole tiling × rotation space fits the budget.
+        let layer = crate::workload::Layer::new("tiny", 4, 2, 1, 1, 4, 2);
+        let acc = presets::eyeriss();
+        let lat = BoundedLattice::new(&layer, &acc, true);
+        let space = lat.blocks_u128() * lat.block_len() as u128;
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: space as u64,
+            threads: 1,
+            prune: true,
+        };
+        let (best, certified) = driver.branch_and_bound(&layer, &acc, &lat, &[]);
+        let best = best.unwrap();
+        assert!(certified);
+        // Certified = every candidate examined or pruned.
+        assert_eq!(best.examined + best.pruned, space as u64);
+        // And the argmin equals the unpruned space-wide optimum.
+        let full = SearchDriver { prune: false, ..driver }.search(&layer, &acc, &lat, &[]).unwrap();
+        assert_eq!(best.mapping, full.mapping);
+        assert_eq!(best.score.to_bits(), full.score.to_bits());
+        assert_eq!(best.index, full.index);
+    }
+}

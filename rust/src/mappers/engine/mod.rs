@@ -30,9 +30,12 @@
 //!
 //! # Pruning
 //!
-//! With [`SearchParams::prune`] on, the driver asks
-//! [`EvalContext::objective_bound`] for a cheap, permutation-independent
-//! lower bound of each block's objective before materializing its members.
+//! With [`SearchParams::prune`] on, the driver asks for a cheap lower
+//! bound of each block's objective before materializing its members —
+//! [`EvalContext::block_bound`] (exact per-rotation word assembly, min
+//! over the 7 rotations) when the source's members are rotations of the
+//! canonical order ([`CandidateSource::rotation_members`]), else the
+//! conservative all-permutation [`EvalContext::objective_bound`].
 //! A block is skipped only when its bound **strictly exceeds** the
 //! incumbent score; any skipped candidate therefore scores strictly worse
 //! than the final best and can affect neither the argmin nor its
@@ -42,9 +45,11 @@
 //! so an exact tie is still resolved in favour of the enumerated
 //! candidate.
 
+pub mod lattice;
 pub mod objective;
 pub mod source;
 
+pub use lattice::BoundedLattice;
 pub use objective::Objective;
 pub use source::{BatchSource, CandidateSource, OdometerSource, RandomStream};
 
@@ -70,6 +75,11 @@ pub struct SearchParams {
     /// Bound-based block pruning for the mappers that support it
     /// (exhaustive and dataflow-constrained search have it on by default).
     pub prune: bool,
+    /// Run the exhaustive mapper as branch-and-bound over the
+    /// factorization lattice ([`BoundedLattice`]) and report whether the
+    /// search provably covered the whole space (the `--certify` CLI flag;
+    /// surfaced as [`crate::mappers::MapOutcome::certified`]).
+    pub certify: bool,
 }
 
 impl SearchParams {
@@ -96,11 +106,24 @@ impl SearchParams {
         self.prune = false;
         self
     }
+
+    /// Builder: request certified branch-and-bound search.
+    pub fn with_certify(mut self, certify: bool) -> Self {
+        self.certify = certify;
+        self
+    }
 }
 
 impl Default for SearchParams {
     fn default() -> Self {
-        Self { budget: 3000, seed: 42, objective: Objective::Energy, threads: 1, prune: true }
+        Self {
+            budget: 3000,
+            seed: 42,
+            objective: Objective::Energy,
+            threads: 1,
+            prune: true,
+            certify: false,
+        }
     }
 }
 
@@ -155,6 +178,15 @@ fn merge_best(best: &mut Option<(f64, u64, Mapping)>, score: f64, index: u64, m:
     }
 }
 
+/// Allocation-reusing mapping copy (`Vec::clone_from` keeps the level
+/// vectors' buffers), for the batch-evaluation member staging buffers.
+fn copy_mapping_into(dst: &mut Mapping, src: &Mapping) {
+    dst.temporal.clone_from(&src.temporal);
+    dst.permutation.clone_from(&src.permutation);
+    dst.spatial_x = src.spatial_x;
+    dst.spatial_y = src.spatial_y;
+}
+
 /// Per-worker tallies and best for one round shard.
 #[derive(Debug, Default)]
 struct ShardResult {
@@ -195,6 +227,9 @@ impl SearchDriver {
         let budget = self.budget.max(1);
         let block_len = source.block_len().max(1);
         let visit_blocks = source.n_blocks().min(budget.div_ceil(block_len));
+        // Rotation-member sources get the tight per-rotation block bound;
+        // everything else keeps the conservative all-permutation bound.
+        let rotation_block = source.rotation_members();
 
         let mut best: Option<(f64, u64, Mapping)> = None;
         let (mut examined, mut scored, mut pruned) = (0u64, 0u64, 0u64);
@@ -238,6 +273,12 @@ impl SearchDriver {
                     handles.push(scope.spawn(move || {
                         let (ctx, scratch) = slot;
                         let mut out = ShardResult::default();
+                        // Member staging for batch scoring: reused across
+                        // blocks so a multi-member block costs no steady-
+                        // state allocation.
+                        let mut members_buf: Vec<Mapping> = Vec::new();
+                        let mut member_ids: Vec<u64> = Vec::new();
+                        let mut scores: Vec<(f64, u64)> = Vec::new();
                         for b in start..end {
                             if !source.emit_block(b, scratch) {
                                 continue;
@@ -246,23 +287,58 @@ impl SearchDriver {
                             let members = block_len.min(budget - first);
                             if self.prune {
                                 if let Some(inc) = incumbent {
-                                    let (e_lb, l_lb) = ctx.objective_bound(scratch);
+                                    let (e_lb, l_lb) = if rotation_block {
+                                        ctx.block_bound(scratch)
+                                    } else {
+                                        ctx.objective_bound(scratch)
+                                    };
                                     if self.objective.compose(e_lb, l_lb) > inc {
                                         out.pruned += members;
                                         continue;
                                     }
                                 }
                             }
+                            if members == 1 {
+                                out.examined += 1;
+                                if scratch.validate(layer, acc).is_ok() {
+                                    out.scored += 1;
+                                    let score =
+                                        self.objective.score(ctx.evaluate_into(scratch));
+                                    merge_best(&mut out.best, score, first, scratch);
+                                }
+                                continue;
+                            }
+                            // Permutation block: stage the valid members and
+                            // score them in one `evaluate_many` pass (bit-
+                            // identical to the per-member path).
+                            member_ids.clear();
+                            let mut n_valid = 0usize;
                             for i in 0..members {
                                 if i > 0 {
                                     source.emit_member(b, i, scratch);
                                 }
                                 out.examined += 1;
                                 if scratch.validate(layer, acc).is_ok() {
-                                    out.scored += 1;
-                                    let score =
-                                        self.objective.score(ctx.evaluate_into(scratch));
-                                    merge_best(&mut out.best, score, first + i, scratch);
+                                    if n_valid == members_buf.len() {
+                                        members_buf.push(scratch.clone());
+                                    } else {
+                                        copy_mapping_into(&mut members_buf[n_valid], scratch);
+                                    }
+                                    member_ids.push(first + i);
+                                    n_valid += 1;
+                                }
+                            }
+                            if n_valid > 0 {
+                                ctx.evaluate_many(&members_buf[..n_valid], &mut scores);
+                                out.scored += n_valid as u64;
+                                for (k, &(e_pj, lat)) in scores.iter().enumerate() {
+                                    let score = self.objective.compose(e_pj, lat);
+                                    merge_best(
+                                        &mut out.best,
+                                        score,
+                                        member_ids[k],
+                                        &members_buf[k],
+                                    );
                                 }
                             }
                         }

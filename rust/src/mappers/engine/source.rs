@@ -46,6 +46,19 @@ pub trait CandidateSource: Sync {
     fn emit_member(&self, b: u64, i: u64, m: &mut Mapping) {
         let _ = (b, i, m);
     }
+
+    /// `true` when every member of every block carries a **rotation** of
+    /// the canonical dim order as its per-level permutation (member `i` =
+    /// canonical order rotated left `i` at every level). The driver then
+    /// prunes blocks with the tight
+    /// [`crate::model::EvalContext::block_bound`] instead of the
+    /// conservative all-permutation
+    /// [`crate::model::EvalContext::objective_bound`] — sound only under
+    /// this contract, so leave the default `false` for anything that emits
+    /// shuffled or policy-sorted permutations.
+    fn rotation_members(&self) -> bool {
+        false
+    }
 }
 
 /// An adaptive candidate stream: proposals depend on earlier scores.
@@ -134,6 +147,13 @@ impl CandidateSource for OdometerSource {
         for perm in m.permutation.iter_mut() {
             *perm = p;
         }
+    }
+
+    fn rotation_members(&self) -> bool {
+        // Member 0 is the canonical order (rotation 0); with `permute` the
+        // fan-out is exactly the 7 rotations. Either way the tight block
+        // bound's contract holds.
+        true
     }
 }
 

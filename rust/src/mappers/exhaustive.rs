@@ -25,7 +25,7 @@
 //! [`ExhaustiveMapper::without_warm_start`] restore the raw enumeration
 //! (the perf harness uses it to measure fixed-work thread scaling).
 
-use super::engine::{Objective, OdometerSource, SearchDriver};
+use super::engine::{BoundedLattice, Objective, OdometerSource, SearchDriver};
 use super::{LocalMapper, MapError, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
@@ -54,8 +54,15 @@ pub struct ExhaustiveMapper {
     /// candidate set = LOCAL seed ∪ truncated enumeration either way, so
     /// pruned and unpruned runs agree).
     pub warm_start: bool,
+    /// Search via branch-and-bound over the factorization lattice
+    /// ([`BoundedLattice`]) instead of the flat odometer, reporting
+    /// certification when the budget admits the whole space (the
+    /// `--certify` CLI flag). Same candidate space, same argmin and
+    /// tie-break as the flat search.
+    pub certify: bool,
     evaluated: Cell<u64>,
     pruned: Cell<u64>,
+    certified: Cell<bool>,
 }
 
 impl ExhaustiveMapper {
@@ -68,8 +75,10 @@ impl ExhaustiveMapper {
             objective: Objective::Energy,
             prune: true,
             warm_start: true,
+            certify: false,
             evaluated: Cell::new(0),
             pruned: Cell::new(0),
+            certified: Cell::new(false),
         }
     }
 
@@ -79,7 +88,14 @@ impl ExhaustiveMapper {
         e.threads = params.threads.max(1);
         e.objective = params.objective;
         e.prune = params.prune;
+        e.certify = params.certify;
         e
+    }
+
+    /// Builder: search via branch-and-bound and report certification.
+    pub fn with_certification(mut self) -> Self {
+        self.certify = true;
+        self
     }
 
     /// Builder: also enumerate the rotation set of per-level permutations.
@@ -141,8 +157,11 @@ impl Mapper for ExhaustiveMapper {
         self.evaluated.get()
     }
 
+    fn certified(&self) -> bool {
+        self.certified.get()
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
-        let source = OdometerSource::new(layer, acc, self.permute);
         let driver = SearchDriver {
             objective: self.objective,
             budget: self.max_candidates,
@@ -154,16 +173,24 @@ impl Mapper for ExhaustiveMapper {
         } else {
             Vec::new()
         };
-        let best = driver.search(layer, acc, &source, &seeds);
+        let (best, certified) = if self.certify {
+            let source = BoundedLattice::new(layer, acc, self.permute);
+            driver.branch_and_bound(layer, acc, &source, &seeds)
+        } else {
+            let source = OdometerSource::new(layer, acc, self.permute);
+            (driver.search(layer, acc, &source, &seeds), false)
+        };
         match best {
             Some(b) => {
                 self.evaluated.set(b.examined);
                 self.pruned.set(b.pruned);
+                self.certified.set(certified);
                 Ok(b.mapping)
             }
             None => {
                 self.evaluated.set(0);
                 self.pruned.set(0);
+                self.certified.set(false);
                 Err(MapError::NoValidMapping("exhaustive found no valid mapping".into()))
             }
         }
@@ -285,6 +312,25 @@ mod tests {
         );
         assert!(out.evaluations <= base.evaluations);
         assert_eq!(out.evaluations + fast.pruned(), base.evaluations);
+    }
+
+    #[test]
+    fn certified_search_matches_flat_enumeration() {
+        let acc = small_acc();
+        let layer = Layer::new("tiny", 4, 2, 1, 1, 4, 2);
+        let budget = ExhaustiveMapper::space_size(&layer, &acc) * 7;
+        let flat = ExhaustiveMapper::new(budget).with_permutations().without_pruning();
+        let base = flat.run(&layer, &acc).unwrap();
+        assert!(!base.certified, "flat enumeration never claims certification");
+        let bnb = ExhaustiveMapper::new(budget).with_permutations().with_certification();
+        let out = bnb.run(&layer, &acc).unwrap();
+        assert!(out.certified, "full-space branch-and-bound run must certify");
+        assert_eq!(out.mapping, base.mapping);
+        assert_eq!(out.score.to_bits(), base.score.to_bits());
+        // Same candidate account: examined + pruned covers the space (and
+        // the LOCAL warm-start seed is in both runs' examined counts).
+        assert_eq!(out.evaluations + bnb.pruned(), base.evaluations);
+        assert!(bnb.pruned() > 0, "warm-started branch-and-bound must prune");
     }
 
     #[test]

@@ -86,6 +86,11 @@ pub struct MapOutcome {
     pub objective: Objective,
     /// The chosen mapping's objective score (lower is better).
     pub score: f64,
+    /// Whether the search provably covered its whole candidate space, so
+    /// `mapping` is a certified optimum over it (branch-and-bound under
+    /// `--certify` with a budget admitting the full space; always `false`
+    /// for heuristic and budget-truncated searches).
+    pub certified: bool,
 }
 
 /// A mapping algorithm: layer × accelerator → mapping.
@@ -106,6 +111,14 @@ pub trait Mapper {
     /// Table 3 next to wall-clock).
     fn evaluations(&self) -> u64 {
         1
+    }
+
+    /// Whether the last `map` call provably covered its whole candidate
+    /// space (branch-and-bound certification,
+    /// [`crate::mappers::engine::SearchDriver::branch_and_bound`]).
+    /// Mappers without a certification notion report `false`.
+    fn certified(&self) -> bool {
+        false
     }
 
     /// Run with timing: the measured quantity of the paper's Table 3.
@@ -132,6 +145,7 @@ pub trait Mapper {
             elapsed,
             objective,
             score,
+            certified: self.certified(),
         })
     }
 }
@@ -217,6 +231,10 @@ impl Mapper for AnyMapper {
 
     fn evaluations(&self) -> u64 {
         self.inner().evaluations()
+    }
+
+    fn certified(&self) -> bool {
+        self.inner().certified()
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {

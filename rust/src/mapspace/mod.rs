@@ -157,6 +157,33 @@ pub fn repair(layer: &Layer, acc: &Accelerator, m: &mut Mapping) {
     }
 }
 
+/// Branch-and-bound lattice assignment order: problem dims in descending
+/// odometer significance (`Q` is the outermost digit, `N` the least
+/// significant). Fixing the first `k` lattice dims therefore pins one
+/// **contiguous** range of odometer block indices — the invariant that
+/// lets [`crate::mappers::engine::BoundedLattice`] prune a whole subtree
+/// as a single index span (and count its skipped candidates exactly)
+/// while enumerating candidates in the very same global order as
+/// [`crate::mappers::engine::OdometerSource`], so tie-breaks on equal
+/// scores resolve identically.
+pub fn lattice_order() -> [Dim; 7] {
+    let mut order = Dim::ALL;
+    order.reverse();
+    order
+}
+
+/// Number of odometer blocks that share one fixed assignment of the first
+/// `depth` dims of [`lattice_order`]: the product of the remaining dims'
+/// ordered-split counts across `n_levels + 2` slots (`depth == 0` is the
+/// whole factorization space, `depth == 7` a single tiling). Saturates at
+/// `u64::MAX` like the sources' block accounting.
+pub fn lattice_subtree_blocks(layer: &Layer, acc: &Accelerator, depth: usize) -> u64 {
+    let slots = acc.n_levels() + 2;
+    lattice_order()[depth.min(7)..]
+        .iter()
+        .fold(1u64, |n, &d| n.saturating_mul(count_factorizations(layer.bound(d), slots)))
+}
+
 fn smallest_prime_factor(n: u64) -> u64 {
     debug_assert!(n > 1);
     let mut i = 2;
@@ -226,6 +253,38 @@ mod tests {
         let a = sample_random(&layer, &acc, &mut rng);
         let b = sample_random(&layer, &acc, &mut rng);
         assert_ne!(a, b);
+    }
+
+    #[test]
+    fn lattice_order_is_descending_significance() {
+        let o = lattice_order();
+        assert_eq!(o[0], Dim::Q);
+        assert_eq!(o[6], Dim::N);
+        for (k, d) in o.iter().enumerate() {
+            assert_eq!(d.idx(), 6 - k);
+        }
+    }
+
+    #[test]
+    fn lattice_subtree_blocks_telescopes() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let slots = acc.n_levels() + 2;
+        // depth 0 is the full factorization space; each extra fixed dim
+        // divides out exactly that dim's split count.
+        assert_eq!(
+            lattice_subtree_blocks(&layer, &acc, 0) as f64,
+            factorization_space(&layer, slots)
+        );
+        for depth in 0..7 {
+            let d = lattice_order()[depth];
+            assert_eq!(
+                lattice_subtree_blocks(&layer, &acc, depth),
+                lattice_subtree_blocks(&layer, &acc, depth + 1)
+                    * count_factorizations(layer.bound(d), slots)
+            );
+        }
+        assert_eq!(lattice_subtree_blocks(&layer, &acc, 7), 1);
     }
 
     #[test]

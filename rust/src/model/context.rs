@@ -224,6 +224,150 @@ impl EvalContext {
         scratch.latency_cycles = latency_cycles;
         scratch
     }
+
+    /// Score every member of one permutation block in a single pass
+    /// (structure-of-arrays batch evaluation).
+    ///
+    /// All `members` must share one tiling — identical temporal and
+    /// spatial factors, only the per-level loop permutations differing,
+    /// which is exactly what a [`crate::mappers::engine::CandidateSource`]
+    /// block yields (debug builds assert). Everything permutation-
+    /// independent — per-tensor footprints, per-boundary child tile sizes,
+    /// the compulsory datapath traffic, compute cycles, the NoC hop
+    /// model — is computed once per block; per member only the fetch
+    /// rounds (the sole permutation-dependent quantity) are recomputed.
+    ///
+    /// Pushes one `(total energy pJ, latency cycles)` pair per member into
+    /// `out` (cleared first), bit-identical to
+    /// `(evaluate_into(m).energy.total_pj(), evaluate_into(m).latency_cycles)`:
+    /// the per-level word sums are associative integer additions and the
+    /// float roll-up runs in [`EvalContext::evaluate_into`]'s exact order
+    /// (pinned by `prop_evaluate_many_bit_identical_to_evaluate_into`).
+    pub fn evaluate_many(&mut self, members: &[Mapping], out: &mut Vec<(f64, u64)>) {
+        out.clear();
+        if members.is_empty() {
+            return;
+        }
+        if self.acc.n_levels() > MAX_BOUND_LEVELS {
+            // Deeper hierarchies than the stack scratch covers: fall back
+            // to the one-at-a-time path (identical results, no batch win).
+            for m in members {
+                let e = self.evaluate_into(m);
+                out.push((e.energy.total_pj(), e.latency_cycles));
+            }
+            return;
+        }
+        let EvalContext { layer, acc, ert, relevance, .. } = self;
+        let n_levels = acc.n_levels();
+        let first = &members[0];
+        debug_assert_eq!(first.n_levels(), n_levels);
+
+        let fanout = first.spatial_x_used() * first.spatial_y_used();
+        let tile0 = first.tile0();
+        let mut spatial_tile = tile0;
+        for d in 0..7 {
+            spatial_tile[d] *= first.spatial_x[d] * first.spatial_y[d];
+        }
+
+        // Level-0 datapath traffic — identical for every member.
+        let macs = layer.macs();
+        let mut words0: u64 = 0;
+        if layer.op.uses_weights() {
+            words0 += macs;
+        }
+        words0 += macs * layer.op.input_operands();
+        if !layer.op.reduction_dims().is_empty() {
+            words0 += macs; // accumulator read-back
+        }
+        words0 += macs; // accumulator write
+
+        // Per-(boundary, tensor) child tile sizes and NoC serving size —
+        // tiling-only quantities, hoisted out of the member loop.
+        let mut unique = [[0u64; 3]; MAX_BOUND_LEVELS];
+        let mut aggregate = [[0u64; 3]; MAX_BOUND_LEVELS];
+        let mut served = [[0u64; 3]; MAX_BOUND_LEVELS];
+        for l in 1..n_levels {
+            for t in Tensor::ALL {
+                if t == Tensor::Weight && !layer.op.uses_weights() {
+                    continue;
+                }
+                let ti = t.t_idx();
+                let (uc, ac) = if l == 1 {
+                    let u = tensor_elems(layer, &spatial_tile, t);
+                    let a = fanout * tensor_elems(layer, &tile0, t);
+                    (u, a)
+                } else {
+                    let e = first.tensor_tile_elems(layer, l - 1, t);
+                    (e, e)
+                };
+                unique[l][ti] = uc;
+                aggregate[l][ti] = ac;
+                served[l][ti] = if l == 1 && !acc.noc.multicast { ac } else { uc };
+            }
+        }
+
+        let compute_cycles: u64 = first.temporal.iter().flatten().product();
+        let noc_avg_hops = (first.spatial_x_used() + first.spatial_y_used()) as f64 / 2.0;
+
+        for m in members {
+            debug_assert!(m.validate(layer, acc).is_ok());
+            debug_assert_eq!(m.temporal, first.temporal);
+            debug_assert_eq!(m.spatial_x, first.spatial_x);
+            debug_assert_eq!(m.spatial_y, first.spatial_y);
+
+            let mut words = [0u64; MAX_BOUND_LEVELS];
+            words[0] = words0;
+            let mut noc_words: u64 = 0;
+            for l in 1..n_levels {
+                let loops = loop_list_above(layer, m, l);
+                for t in Tensor::ALL {
+                    if t == Tensor::Weight && !layer.op.uses_weights() {
+                        continue;
+                    }
+                    let ti = t.t_idx();
+                    let mask = &relevance[ti];
+                    match t {
+                        Tensor::Weight | Tensor::Input => {
+                            let rounds = fetch_rounds_masked(mask, &loops);
+                            words[l] += rounds * served[l][ti];
+                            words[l - 1] += rounds * aggregate[l][ti];
+                            if l == 1 {
+                                noc_words += rounds * served[l][ti];
+                            }
+                        }
+                        Tensor::Output => {
+                            let v = fetch_rounds_masked(mask, &loops);
+                            let u = distinct_tiles_masked(mask, &loops);
+                            debug_assert!(v >= u);
+                            words[l] += v * unique[l][ti] + (v - u) * unique[l][ti];
+                            words[l - 1] +=
+                                v * aggregate[l][ti] + (v - u) * aggregate[l][ti];
+                            if l == 1 {
+                                noc_words += v * unique[l][ti] + (v - u) * unique[l][ti];
+                                noc_words += v * (aggregate[l][ti] - unique[l][ti]);
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut latency = compute_cycles;
+            for (l, &w) in words.iter().enumerate().take(n_levels) {
+                let instances = if acc.levels[l].per_pe { fanout.max(1) } else { 1 };
+                let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
+                    * instances as f64;
+                latency = latency.max((w as f64 / bw).ceil() as u64);
+            }
+
+            let mut energy = 0.0f64;
+            for (l, &w) in words.iter().enumerate().take(n_levels) {
+                energy += w as f64 * ert.level(l);
+            }
+            energy += noc_words as f64 * ert.noc_hop_pj * noc_avg_hops;
+            energy += macs as f64 * ert.mac_pj;
+            out.push((energy, latency));
+        }
+    }
 }
 
 /// Most storage levels any supported accelerator carries (bound scratch is
@@ -233,8 +377,11 @@ const MAX_BOUND_LEVELS: usize = 8;
 impl EvalContext {
     /// Permutation-independent **lower bound** on `(total energy pJ,
     /// roofline latency cycles)` over every per-level loop permutation of
-    /// `mapping`'s tiling — the bound-based pruner's primitive
-    /// ([`crate::mappers::engine::SearchDriver`]).
+    /// `mapping`'s tiling — the bound the pruner falls back to for sources
+    /// whose block members carry arbitrary permutations
+    /// ([`crate::mappers::engine::CandidateSource::rotation_members`] =
+    /// `false`; rotation-member blocks get the far tighter
+    /// [`EvalContext::block_bound`]).
     ///
     /// The bound replaces each tensor's fetch rounds at each boundary with
     /// their minimum over all permutations: the stationarity gate cannot
@@ -257,6 +404,245 @@ impl EvalContext {
     /// The mapping need not be valid (invalid candidates may be bounded
     /// before validation); only its level count must match.
     pub fn objective_bound(&self, mapping: &Mapping) -> (f64, u64) {
+        let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+        self.bound_impl(mapping, fanout)
+    }
+
+    /// **Tight** lower bound on `(total energy pJ, latency cycles)` over
+    /// the members of `mapping`'s tiling's **rotation block** — the 7
+    /// per-level-rotated permutations that [`crate::mappers::engine`]
+    /// sources with rotation members actually emit.
+    ///
+    /// Where [`EvalContext::objective_bound`] must hold for *every* loop
+    /// permutation (and therefore collapses each tensor's fetch rounds to
+    /// their all-permutation minimum, a bound loose enough that it rarely
+    /// exceeds an incumbent in practice), this bound only has to hold for
+    /// the 7 rotations a block contains, so it can run the evaluator's
+    /// exact word assembly once per rotation and take the element-wise
+    /// minimum. On a full assignment the energy leg is *exact*: it equals
+    /// the block's cheapest member bit-for-bit (pinned by
+    /// `partial_bound_fully_assigned_is_the_rotation_minimum`), which is
+    /// what makes bound-based pruning actually engage (see DESIGN.md §13).
+    ///
+    /// Unsound for arbitrary permutations: a shuffled member interleaving
+    /// irrelevant loops differently can score below every rotation, so
+    /// sources whose members are not rotations
+    /// ([`crate::mappers::engine::CandidateSource::rotation_members`] =
+    /// `false`) must keep using [`EvalContext::objective_bound`].
+    pub fn block_bound(&self, mapping: &Mapping) -> (f64, u64) {
+        let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+        self.rotation_bound_impl(mapping, fanout)
+    }
+
+    /// [`EvalContext::block_bound`] generalized to a **partial** tiling
+    /// assignment — the branch-and-bound primitive
+    /// ([`crate::mappers::engine::BoundedLattice`]).
+    ///
+    /// `assigned[d]` marks problem dims whose factor split is already
+    /// fixed; every unassigned dim must carry factor 1 in all of
+    /// `mapping`'s slots (spatial and temporal — debug builds assert). The
+    /// returned pair lower-bounds, per rotation and hence for the
+    /// element-wise minimum, every member of the **rotation block** of
+    /// every completion of the prefix: completing the assignment only
+    /// multiplies extra factors ≥ 1 into trip products and tile extents,
+    /// and with the rotation fixed every word-count term of the exact
+    /// assembly is monotone non-decreasing under that — a new trip either
+    /// joins a fetch-rounds product directly or, by becoming the first
+    /// relevant loop of a tensor, additionally un-skips the irrelevant
+    /// trips that previously led the nest; for the Output
+    /// `2·rounds − distinct` term because the trip scales `rounds` by ≥
+    /// its factor and `distinct` by exactly it, with `rounds ≥ distinct`.
+    /// The latency leg divides by the level bandwidth × instance count,
+    /// which *grows* with fan-out — so for per-PE levels the unknown
+    /// completed fan-out is replaced by its upper bound (assigned fan-out
+    /// × the full bound of every unassigned dim, capped at the PE count,
+    /// which no *valid* completion exceeds). With all dims assigned the
+    /// pair equals [`EvalContext::block_bound`] bit-for-bit on valid
+    /// mappings — the element-wise minimum over the block's 7 member
+    /// evaluations (pinned by `prop_partial_bound_*` in
+    /// `rust/tests/property.rs`).
+    pub fn partial_bound(&self, mapping: &Mapping, assigned: &[bool; 7]) -> (f64, u64) {
+        #[cfg(debug_assertions)]
+        for (d, &fixed) in assigned.iter().enumerate() {
+            if !fixed {
+                debug_assert_eq!(mapping.spatial_x[d], 1);
+                debug_assert_eq!(mapping.spatial_y[d], 1);
+                debug_assert!(mapping.temporal.iter().all(|t| t[d] == 1));
+            }
+        }
+        let mut fanout_ub = mapping.spatial_x_used() * mapping.spatial_y_used();
+        for (d, &fixed) in assigned.iter().enumerate() {
+            if !fixed {
+                fanout_ub = fanout_ub.saturating_mul(self.layer.bound(Dim::ALL[d]));
+            }
+        }
+        let fanout_ub = fanout_ub.min(self.acc.pe.count()).max(1);
+        self.rotation_bound_impl(mapping, fanout_ub)
+    }
+
+    /// Shared body of [`EvalContext::block_bound`] and
+    /// [`EvalContext::partial_bound`]: the evaluator's exact word assembly
+    /// run once per rotation of the canonical dim order (the 7 members a
+    /// rotation block contains), reduced to the element-wise minimum.
+    /// `latency_fanout` is the per-PE instance count used by the latency
+    /// leg (the mapping's own fan-out for the full bound, its completion
+    /// upper bound for the partial one). Word counts saturate; the float
+    /// roll-up runs in [`EvalContext::evaluate_into`]'s exact order, so on
+    /// a full assignment each rotation's energy matches that member's
+    /// evaluation bit-for-bit.
+    fn rotation_bound_impl(&self, mapping: &Mapping, latency_fanout: u64) -> (f64, u64) {
+        let EvalContext { layer, acc, ert, relevance, .. } = self;
+        let n_levels = acc.n_levels();
+        debug_assert_eq!(mapping.n_levels(), n_levels);
+        if n_levels > MAX_BOUND_LEVELS {
+            // Deeper hierarchies than the stack scratch covers: return the
+            // trivially-valid bound (prunes nothing, stays correct).
+            return (0.0, 0);
+        }
+
+        let fanout = mapping.spatial_x_used() * mapping.spatial_y_used();
+        let tile0 = mapping.tile0();
+        let mut spatial_tile = tile0;
+        for d in 0..7 {
+            spatial_tile[d] *= mapping.spatial_x[d] * mapping.spatial_y[d];
+        }
+
+        // Level-0 datapath traffic: exact and permutation-free.
+        let macs = layer.macs();
+        let mut words0: u64 = 0;
+        if layer.op.uses_weights() {
+            words0 += macs;
+        }
+        words0 += macs * layer.op.input_operands();
+        if !layer.op.reduction_dims().is_empty() {
+            words0 += macs; // accumulator read-back
+        }
+        words0 += macs; // accumulator write
+
+        // Per-(boundary, tensor) child tile sizes and NoC serving size —
+        // tiling-only, hoisted out of the rotation loop (the same
+        // quantities `evaluate_many` hoists out of its member loop).
+        let mut unique = [[0u64; 3]; MAX_BOUND_LEVELS];
+        let mut aggregate = [[0u64; 3]; MAX_BOUND_LEVELS];
+        let mut served = [[0u64; 3]; MAX_BOUND_LEVELS];
+        for l in 1..n_levels {
+            for t in Tensor::ALL {
+                if t == Tensor::Weight && !layer.op.uses_weights() {
+                    continue;
+                }
+                let ti = t.t_idx();
+                let (uc, ac) = if l == 1 {
+                    let u = tensor_elems(layer, &spatial_tile, t);
+                    let a = fanout * tensor_elems(layer, &tile0, t);
+                    (u, a)
+                } else {
+                    let e = mapping.tensor_tile_elems(layer, l - 1, t);
+                    (e, e)
+                };
+                unique[l][ti] = uc;
+                aggregate[l][ti] = ac;
+                served[l][ti] = if l == 1 && !acc.noc.multicast { ac } else { uc };
+            }
+        }
+
+        let compute_cycles: u64 = mapping.temporal.iter().flatten().product();
+        let noc_avg_hops = (mapping.spatial_x_used() + mapping.spatial_y_used()) as f64 / 2.0;
+
+        let mut e_min = f64::INFINITY;
+        let mut l_min = u64::MAX;
+        for rot in 0..7usize {
+            // The rotated nest, levels ascending, non-degenerate trips
+            // only — exactly `loop_list_above(_, member_rot, l)` as slices
+            // of one flat array.
+            let mut flat = [(Dim::N, 1u64); 7 * MAX_BOUND_LEVELS];
+            let mut offset = [0usize; MAX_BOUND_LEVELS + 1];
+            let mut len = 0usize;
+            for l in 0..n_levels {
+                offset[l] = len;
+                for k in 0..7 {
+                    let d = Dim::ALL[(k + rot) % 7];
+                    let trip = mapping.temporal[l][d.idx()];
+                    if trip > 1 {
+                        flat[len] = (d, trip);
+                        len += 1;
+                    }
+                }
+            }
+            offset[n_levels] = len;
+
+            let mut words = [0u64; MAX_BOUND_LEVELS];
+            words[0] = words0;
+            let mut noc_words: u64 = 0;
+            for l in 1..n_levels {
+                let loops = &flat[offset[l]..len];
+                for t in Tensor::ALL {
+                    if t == Tensor::Weight && !layer.op.uses_weights() {
+                        continue;
+                    }
+                    let ti = t.t_idx();
+                    let mask = &relevance[ti];
+                    match t {
+                        Tensor::Weight | Tensor::Input => {
+                            let rounds = fetch_rounds_masked(mask, loops);
+                            words[l] =
+                                words[l].saturating_add(rounds.saturating_mul(served[l][ti]));
+                            words[l - 1] = words[l - 1]
+                                .saturating_add(rounds.saturating_mul(aggregate[l][ti]));
+                            if l == 1 {
+                                noc_words = noc_words
+                                    .saturating_add(rounds.saturating_mul(served[l][ti]));
+                            }
+                        }
+                        Tensor::Output => {
+                            let v = fetch_rounds_masked(mask, loops);
+                            let u = distinct_tiles_masked(mask, loops);
+                            debug_assert!(v >= u);
+                            let extra = v - u;
+                            words[l] = words[l]
+                                .saturating_add(v.saturating_mul(unique[l][ti]))
+                                .saturating_add(extra.saturating_mul(unique[l][ti]));
+                            words[l - 1] = words[l - 1]
+                                .saturating_add(v.saturating_mul(aggregate[l][ti]))
+                                .saturating_add(extra.saturating_mul(aggregate[l][ti]));
+                            if l == 1 {
+                                noc_words = noc_words
+                                    .saturating_add(v.saturating_mul(unique[l][ti]))
+                                    .saturating_add(extra.saturating_mul(unique[l][ti]))
+                                    .saturating_add(
+                                        v.saturating_mul(aggregate[l][ti] - unique[l][ti]),
+                                    );
+                            }
+                        }
+                    }
+                }
+            }
+
+            let mut latency = compute_cycles;
+            for (l, &w) in words.iter().enumerate().take(n_levels) {
+                let instances = if acc.levels[l].per_pe { latency_fanout.max(1) } else { 1 };
+                let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
+                    * instances as f64;
+                latency = latency.max((w as f64 / bw).ceil() as u64);
+            }
+
+            let mut energy = 0.0f64;
+            for (l, &w) in words.iter().enumerate().take(n_levels) {
+                energy += w as f64 * ert.level(l);
+            }
+            energy += noc_words as f64 * ert.noc_hop_pj * noc_avg_hops;
+            energy += macs as f64 * ert.mac_pj;
+
+            e_min = e_min.min(energy);
+            l_min = l_min.min(latency);
+        }
+        (e_min, l_min)
+    }
+
+    /// Body of [`EvalContext::objective_bound`] — the all-permutation
+    /// relaxation. `latency_fanout` is the per-PE instance count used by
+    /// the latency leg; every other quantity is read from `mapping`
+    /// directly.
+    fn bound_impl(&self, mapping: &Mapping, latency_fanout: u64) -> (f64, u64) {
         let EvalContext { layer, acc, ert, relevance, .. } = self;
         let n_levels = acc.n_levels();
         debug_assert_eq!(mapping.n_levels(), n_levels);
@@ -376,7 +762,7 @@ impl EvalContext {
         let compute_cycles: u64 = mapping.temporal.iter().flatten().product();
         let mut latency = compute_cycles;
         for l in 0..n_levels {
-            let instances = if acc.levels[l].per_pe { fanout.max(1) } else { 1 };
+            let instances = if acc.levels[l].per_pe { latency_fanout.max(1) } else { 1 };
             let bw = acc.levels[l].bandwidth_words_per_cycle.max(f64::MIN_POSITIVE)
                 * instances as f64;
             latency = latency.max((words[l] as f64 / bw).ceil() as u64);
@@ -506,6 +892,72 @@ mod tests {
         m.temporal[2][0] = 999;
         let mut ctx = EvalContext::new(&layer, &acc);
         assert!(ctx.evaluate(&m).is_err());
+    }
+
+    #[test]
+    fn evaluate_many_matches_per_member_path() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[2].clone();
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let mut rng = SplitMix64::new(23);
+        let base = sample_random(&layer, &acc, &mut rng);
+        // One permutation block: the tiling of `base` under the odometer
+        // member rotations (rotations are valid permutations, so all pass).
+        let mut members = Vec::new();
+        for i in 0..7usize {
+            let mut m = base.clone();
+            let mut p = Dim::ALL;
+            p.rotate_left(i);
+            for perm in m.permutation.iter_mut() {
+                *perm = p;
+            }
+            members.push(m);
+        }
+        let mut out = Vec::new();
+        ctx.evaluate_many(&members, &mut out);
+        assert_eq!(out.len(), members.len());
+        for (m, &(e, lat)) in members.iter().zip(&out) {
+            let ev = ctx.evaluate_into(m);
+            assert_eq!(e.to_bits(), ev.energy.total_pj().to_bits());
+            assert_eq!(lat, ev.latency_cycles);
+        }
+    }
+
+    #[test]
+    fn partial_bound_fully_assigned_is_the_rotation_minimum() {
+        // On a full assignment the tight bound is exact: it equals the
+        // element-wise minimum over the tiling's 7 rotation members'
+        // evaluations bit-for-bit, agrees with `block_bound`, and never
+        // drops below the conservative all-permutation bound.
+        let acc = presets::nvdla();
+        let layer = zoo::vgg16()[4].clone();
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let mut rng = SplitMix64::new(29);
+        for _ in 0..20 {
+            let m = sample_random(&layer, &acc, &mut rng);
+            let (pe, pl) = ctx.partial_bound(&m, &[true; 7]);
+            let (ke, kl) = ctx.block_bound(&m);
+            assert_eq!(ke.to_bits(), pe.to_bits());
+            assert_eq!(kl, pl);
+            let mut e_min = f64::INFINITY;
+            let mut l_min = u64::MAX;
+            for rot in 0..7usize {
+                let mut member = m.clone();
+                let mut p = Dim::ALL;
+                p.rotate_left(rot);
+                for perm in member.permutation.iter_mut() {
+                    *perm = p;
+                }
+                let e = ctx.evaluate_into(&member);
+                e_min = e_min.min(e.energy.total_pj());
+                l_min = l_min.min(e.latency_cycles);
+            }
+            assert_eq!(pe.to_bits(), e_min.to_bits());
+            assert_eq!(pl, l_min);
+            let (oe, ol) = ctx.objective_bound(&m);
+            assert!(oe <= pe, "all-permutation bound above the rotation minimum");
+            assert!(ol <= pl);
+        }
     }
 
     #[test]

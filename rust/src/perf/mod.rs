@@ -20,7 +20,13 @@
 //!    mappers with pruning on by default (exhaustive, RS-search), plus
 //!    thread scaling for the newly parallel random and constrained
 //!    searches.
-//! 5. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
+//! 5. **Branch-and-bound** (schema 4) — certified lattice search
+//!    ([`crate::mappers::engine::BoundedLattice`]) against the unpruned
+//!    odometer baseline: one VGG-16 conv9 case per preset under the
+//!    oracle-incumbent protocol (the baseline's argmin seeds the B&B, so
+//!    the numbers isolate the pruning power of the partial bound), plus
+//!    one small space the budget fully covers (`certified: true`).
+//! 6. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
 //!    the operator-diverse zoo through the shared-cache service.
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
@@ -31,7 +37,10 @@
 
 use crate::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
 use crate::coordinator::compile_batch;
-use crate::mappers::{ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, RandomMapper};
+use crate::mappers::engine::{BoundedLattice, OdometerSource, SearchDriver};
+use crate::mappers::{
+    ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, Objective, RandomMapper,
+};
 use crate::mapping::Mapping;
 use crate::mapspace::{sample_random, Dataflow};
 use crate::model::{evaluate_unchecked, EvalContext};
@@ -131,6 +140,40 @@ pub struct ScalePoint {
     pub wall_ms: f64,
 }
 
+/// One branch-and-bound case of the schema-4 `bound_search` section:
+/// certified lattice search vs the unpruned odometer baseline over the
+/// identical budgeted candidate range.
+#[derive(Debug, Clone)]
+pub struct BoundCase {
+    /// Layer name.
+    pub layer: String,
+    /// Accelerator preset the case ran on.
+    pub arch: &'static str,
+    /// Evaluation budget both searches were capped at.
+    pub budget: u64,
+    /// Candidates the unpruned exhaustive baseline examined.
+    pub evals_unpruned: u64,
+    /// Candidates the branch-and-bound search examined (including its
+    /// warm-start seed, when one was given).
+    pub evals_bnb: u64,
+    /// Candidates branch-and-bound pruned without materializing.
+    pub pruned: u64,
+    /// Whether the budget provably covered the whole candidate space, so
+    /// the argmin is the certified optimum.
+    pub certified: bool,
+    /// Wall-clock of the unpruned baseline, ms.
+    pub wall_ms_unpruned: f64,
+    /// Wall-clock of the branch-and-bound search, ms.
+    pub wall_ms_bnb: f64,
+}
+
+impl BoundCase {
+    /// Evaluation-count cut factor (unpruned / branch-and-bound).
+    pub fn cut(&self) -> f64 {
+        self.evals_unpruned as f64 / self.evals_bnb.max(1) as f64
+    }
+}
+
 /// The schema-3 `search` section: engine pruning and thread scaling.
 #[derive(Debug, Clone)]
 pub struct SearchSection {
@@ -169,6 +212,8 @@ pub struct PerfReport {
     pub exhaustive: Vec<ExhaustivePoint>,
     /// Engine pruning + thread-scaling numbers (schema 3).
     pub search: SearchSection,
+    /// Certified branch-and-bound vs unpruned exhaustive (schema 4).
+    pub bound_search: Vec<BoundCase>,
     /// Zoo batch-pipeline wall time.
     pub zoo_batch: ZooBatch,
 }
@@ -245,6 +290,24 @@ impl PerfReport {
         }
         s.push_str("    ]\n");
         s.push_str("  },\n");
+        s.push_str("  \"bound_search\": [\n");
+        for (i, c) in self.bound_search.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"layer\": \"{}\", \"arch\": \"{}\", \"budget\": {}, \"evals_unpruned\": {}, \"evals_bnb\": {}, \"pruned\": {}, \"cut\": {}, \"certified\": {}, \"wall_ms_unpruned\": {}, \"wall_ms_bnb\": {}}}{}\n",
+                c.layer,
+                c.arch,
+                c.budget,
+                c.evals_unpruned,
+                c.evals_bnb,
+                c.pruned,
+                jnum(c.cut()),
+                c.certified,
+                jnum(c.wall_ms_unpruned),
+                jnum(c.wall_ms_bnb),
+                if i + 1 < self.bound_search.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str(&format!(
             "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}}\n",
             self.zoo_batch.networks,
@@ -291,6 +354,19 @@ impl PerfReport {
                 p.mapper, p.threads, p.wall_ms
             ));
         }
+        for c in &self.bound_search {
+            s.push_str(&format!(
+                "bound {}@{}: {} → {} evals ({:.2}x cut{}), {:.1} → {:.1} ms\n",
+                c.layer,
+                c.arch,
+                c.evals_unpruned,
+                c.evals_bnb,
+                c.cut(),
+                if c.certified { ", certified" } else { "" },
+                c.wall_ms_unpruned,
+                c.wall_ms_bnb
+            ));
+        }
         s.push_str(&format!(
             "zoo batch: {} networks, {} layers, {:.1} ms wall, {:.0}% cache hits",
             self.zoo_batch.networks,
@@ -318,6 +394,47 @@ fn scaling_acc() -> Accelerator {
         noc: Noc::default(),
         mac_energy_pj: 1.0,
         clock_mhz: 200.0,
+    }
+}
+
+/// Measure one `bound_search` case: the unpruned odometer baseline, then
+/// branch-and-bound over the same budgeted range. With `oracle_seed` the
+/// baseline's argmin warm-starts the B&B incumbent, so the cut factor
+/// isolates the pruning power of the partial bound (seeding with the
+/// eventual winner cannot change the argmin — an exact tie resolves to the
+/// enumerated copy).
+fn bound_case(
+    arch: &'static str,
+    layer: &Layer,
+    acc: &Accelerator,
+    budget: u64,
+    oracle_seed: bool,
+) -> BoundCase {
+    let full = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: false };
+    let odometer = OdometerSource::new(layer, acc, true);
+    let t0 = Instant::now();
+    let base = full.search(layer, acc, &odometer, &[]).expect("unpruned search maps the layer");
+    let wall_ms_unpruned = t0.elapsed().as_secs_f64() * 1e3;
+
+    let lattice = BoundedLattice::new(layer, acc, true);
+    let seeds = if oracle_seed { vec![base.mapping.clone()] } else { Vec::new() };
+    let bnb_driver = SearchDriver { prune: true, ..full };
+    let t0 = Instant::now();
+    let (bnb, certified) = bnb_driver.branch_and_bound(layer, acc, &lattice, &seeds);
+    let wall_ms_bnb = t0.elapsed().as_secs_f64() * 1e3;
+    let bnb = bnb.expect("branch-and-bound maps the layer");
+    assert_eq!(bnb.mapping, base.mapping, "B&B diverged from the unpruned argmin");
+    assert_eq!(bnb.score.to_bits(), base.score.to_bits());
+    BoundCase {
+        layer: layer.name.clone(),
+        arch,
+        budget,
+        evals_unpruned: base.examined,
+        evals_bnb: bnb.examined,
+        pruned: bnb.pruned,
+        certified,
+        wall_ms_unpruned,
+        wall_ms_bnb,
     }
 }
 
@@ -445,6 +562,20 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
     }
     let search = SearchSection { pruning, scaling };
 
+    // Branch-and-bound section (schema 4): one VGG-16 conv9 case per
+    // preset under the oracle-incumbent protocol, then one small space the
+    // budget fully covers so the `certified` flag is exercised for real.
+    let bnb_budget: u64 = if cfg.smoke { 6_000 } else { 20_000 };
+    let mut bound_search = vec![
+        bound_case("eyeriss", &layer, &presets::eyeriss(), bnb_budget, true),
+        bound_case("nvdla", &layer, &presets::nvdla(), bnb_budget, true),
+        bound_case("shidiannao", &layer, &presets::shidiannao(), bnb_budget, true),
+    ];
+    let tiny = Layer::new("perf-bnb", 4, 2, 1, 1, 4, 2);
+    let tiny_space =
+        crate::mapspace::lattice_subtree_blocks(&tiny, &ex_acc, 0).saturating_mul(7);
+    bound_search.push(bound_case("perf-small", &tiny, &ex_acc, tiny_space, false));
+
     // Zoo batch pipeline (LOCAL is µs/layer, so this is cheap even full).
     let networks = zoo::batch_zoo();
     let t0 = Instant::now();
@@ -458,7 +589,16 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         cache_hit_rate: batch.hit_rate(),
     };
 
-    PerfReport { schema: 3, smoke: cfg.smoke, evaluator, per_op, exhaustive, search, zoo_batch }
+    PerfReport {
+        schema: 4,
+        smoke: cfg.smoke,
+        evaluator,
+        per_op,
+        exhaustive,
+        search,
+        bound_search,
+        zoo_batch,
+    }
 }
 
 #[cfg(test)]
@@ -469,7 +609,7 @@ mod tests {
     fn smoke_run_produces_sane_report() {
         let r = run(&PerfConfig::smoke());
         assert!(r.smoke);
-        assert_eq!(r.schema, 3);
+        assert_eq!(r.schema, 4);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
         assert_eq!(
@@ -492,6 +632,23 @@ mod tests {
         }
         assert_eq!(r.search.scaling.len(), 8);
         assert!(r.search.scaling.iter().all(|p| p.wall_ms > 0.0));
+        // Schema-4 bound_search: one VGG-16 conv9 case per preset (oracle-
+        // incumbent protocol, so B&B covers the same in-budget candidate
+        // set as the baseline plus its one seed), then the small certified
+        // space (no seed, budget == space).
+        assert_eq!(
+            r.bound_search.iter().map(|c| c.arch).collect::<Vec<_>>(),
+            vec!["eyeriss", "nvdla", "shidiannao", "perf-small"]
+        );
+        for c in &r.bound_search[..3] {
+            assert_eq!(c.layer, "VGG16_conv9");
+            assert!(!c.certified, "{}: a 6k budget cannot cover conv9's space", c.arch);
+            assert!(c.pruned > 0, "{}: B&B pruned nothing", c.arch);
+            assert_eq!(c.evals_bnb + c.pruned, c.evals_unpruned + 1, "{}", c.arch);
+        }
+        let tiny = &r.bound_search[3];
+        assert!(tiny.certified, "budget == space must certify");
+        assert_eq!(tiny.evals_bnb + tiny.pruned, tiny.evals_unpruned);
         assert_eq!(r.zoo_batch.networks, 8);
         assert!(r.zoo_batch.layers > 300);
         assert!(r.zoo_batch.wall_ms > 0.0);
@@ -500,7 +657,7 @@ mod tests {
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 3,
+            schema: 4,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
@@ -521,11 +678,22 @@ mod tests {
                 }],
                 scaling: vec![ScalePoint { mapper: "random", threads: 2, wall_ms: 4.0 }],
             },
+            bound_search: vec![BoundCase {
+                layer: "VGG16_conv9".into(),
+                arch: "eyeriss",
+                budget: 20_000,
+                evals_unpruned: 20_000,
+                evals_bnb: 1_000,
+                pruned: 19_001,
+                certified: false,
+                wall_ms_unpruned: 40.0,
+                wall_ms_bnb: 3.0,
+            }],
             zoo_batch: ZooBatch { networks: 8, layers: 325, wall_ms: 10.0, cache_hit_rate: 0.4 },
         };
         let json = r.to_json();
         for key in [
-            "\"schema\": 3",
+            "\"schema\": 4",
             "\"smoke\"",
             "\"evaluator\"",
             "\"legacy_evals_per_sec\"",
@@ -545,6 +713,10 @@ mod tests {
             "\"cut\": 3.001",
             "\"scaling\"",
             "\"mapper\": \"random\"",
+            "\"bound_search\"",
+            "\"evals_bnb\": 1000",
+            "\"cut\": 20.000",
+            "\"certified\": false",
             "\"zoo_batch\"",
             "\"cache_hit_rate\"",
         ] {
@@ -555,6 +727,7 @@ mod tests {
         assert!(r.summary().contains("per-op matmul"));
         assert!(r.summary().contains("prune exhaustive"));
         assert!(r.summary().contains("scale random 2T"));
+        assert!(r.summary().contains("bound VGG16_conv9@eyeriss"));
     }
 
     #[test]

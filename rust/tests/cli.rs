@@ -33,7 +33,7 @@ fn help_lists_subcommands() {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
     // The search-engine and output flags are documented.
-    for flag in ["--objective", "--search-threads", "--no-prune", "--format"] {
+    for flag in ["--objective", "--search-threads", "--no-prune", "--certify", "--format"] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
 }
@@ -306,7 +306,7 @@ const COMPILE_KEYS: [&str; 10] = [
     "compile_time_ms",
 ];
 
-const LAYER_KEYS: [&str; 12] = [
+const LAYER_KEYS: [&str; 13] = [
     "name",
     "op",
     "macs",
@@ -318,6 +318,7 @@ const LAYER_KEYS: [&str; 12] = [
     "map_time_ms",
     "score",
     "cached",
+    "certified",
     "mapping",
 ];
 
@@ -456,6 +457,44 @@ fn compile_simulate_explore_emit_api_v1_json() {
 }
 
 #[test]
+fn certify_map_json_golden() {
+    // A custom layer small enough for the budget to cover the whole
+    // lattice: 4x2x1x1x4x2 on Eyeriss (3 levels → 5 factorization slots)
+    // has 15·5·15·5 = 5625 tilings × 7 rotations = 39375 candidates, so a
+    // 40k budget certifies the optimum. `--certify` defaults the mapper
+    // to exhaustive; the layer report must carry `"certified": true` in
+    // the pinned key position (after `cached`, before `mapping`).
+    let (stdout, stderr, code) = run(&[
+        "map", "--layer", "4x2x1x1x4x2", "--arch", "eyeriss", "--format", "json",
+        "--budget", "40000", "--certify",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("certify map JSON parses");
+    assert_compile_skeleton(&doc);
+    let layer = &doc.get("networks").unwrap().as_arr().unwrap()[0]
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0];
+    assert_eq!(layer.get("certified").unwrap().as_bool(), Some(true), "{stdout}");
+    assert_eq!(layer.get("cached").unwrap().as_bool(), Some(false));
+    assert!(layer.get("evaluations").unwrap().as_u64().unwrap() > 0);
+
+    // Without --certify the flag is false for every mapper (including
+    // budget-truncated exhaustive search).
+    let (stdout, stderr, code) =
+        run(&["map", "--layer", "4x2x1x1x4x2", "--arch", "eyeriss", "--format", "json"]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&stdout).expect("plain map JSON parses");
+    let layer = &doc.get("networks").unwrap().as_arr().unwrap()[0]
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()[0];
+    assert_eq!(layer.get("certified").unwrap().as_bool(), Some(false));
+}
+
+#[test]
 fn perf_smoke_writes_valid_bench_json() {
     let path = std::env::temp_dir().join("lm_cli_bench_eval.json");
     let (stdout, stderr, code) =
@@ -465,13 +504,16 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
     for key in [
-        "\"schema\": 3",
+        "\"schema\": 4",
         "\"evaluator\"",
         "\"per_op\"",
         "\"exhaustive\"",
         "\"search\"",
         "\"pruning\"",
         "\"scaling\"",
+        "\"bound_search\"",
+        "\"evals_bnb\"",
+        "\"certified\": true",
         "\"zoo_batch\"",
         "\"smoke\": true",
     ] {

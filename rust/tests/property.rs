@@ -4,11 +4,11 @@
 
 use local_mapper::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
 use local_mapper::coordinator::layer_key;
-use local_mapper::mappers::engine::{OdometerSource, SearchDriver};
+use local_mapper::mappers::engine::{BoundedLattice, OdometerSource, SearchDriver};
 use local_mapper::mappers::{
     ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, Objective, RandomMapper,
 };
-use local_mapper::mapspace::{repair, sample_random, Dataflow};
+use local_mapper::mapspace::{lattice_order, lattice_subtree_blocks, repair, sample_random, Dataflow};
 use local_mapper::model::{evaluate, evaluate_unchecked, EvalContext, TensorIdx};
 use local_mapper::util::rng::SplitMix64;
 use local_mapper::workload::{zoo, ConvLayer, Dim, OpKind, Tensor};
@@ -583,6 +583,190 @@ fn prop_permutation_only_changes_energy_not_macs_or_footprint() {
         assert_eq!(e1.utilization, e2.utilization);
         // Footprints (tile sizes) unchanged → validity unchanged.
         m.validate(&layer, &acc).unwrap();
+    }
+}
+
+#[test]
+fn prop_partial_bound_is_a_true_lower_bound_of_completions() {
+    // Branch-and-bound's contract: `EvalContext::partial_bound` of a
+    // prefix assignment never exceeds the real (energy, latency) — hence
+    // never the composed objective — of any **rotation-block member** of
+    // any completion of that prefix (rotations are exactly what the
+    // lattice source emits; the tight bound is deliberately unsound for
+    // arbitrary shuffled permutations). Every sampled valid mapping's
+    // tiling is a completion of each of its own prefixes along the DFS
+    // order, so we check all 8 prefix depths against each of its 7
+    // rotation members across sampled zoo layers × the three presets ×
+    // the three objectives.
+    let order = lattice_order();
+    let mut rng = SplitMix64::new(0xB0B0);
+    for acc in presets::all() {
+        for (net, layers) in zoo::batch_zoo() {
+            for (li, layer) in layers.iter().enumerate() {
+                if li % 9 != 0 {
+                    continue; // sample the zoo, don't sweep all 325 layers
+                }
+                let mut ctx = EvalContext::new(layer, &acc);
+                let m = sample_random(layer, &acc, &mut rng);
+                let mut variant = m.clone();
+                for rot in 0..7usize {
+                    let mut p = Dim::ALL;
+                    p.rotate_left(rot);
+                    for l in 0..variant.n_levels() {
+                        variant.permutation[l] = p;
+                    }
+                    let e = ctx.evaluate_into(&variant).clone();
+                    for depth in 0..=7usize {
+                        // The prefix: dims past `depth` in DFS order reset
+                        // to 1 everywhere (not yet assigned).
+                        let mut prefix = m.clone();
+                        let mut assigned = [true; 7];
+                        for &d in &order[depth..] {
+                            assigned[d.idx()] = false;
+                            for l in 0..prefix.n_levels() {
+                                prefix.temporal[l][d.idx()] = 1;
+                            }
+                            prefix.spatial_x[d.idx()] = 1;
+                            prefix.spatial_y[d.idx()] = 1;
+                        }
+                        let (e_lb, l_lb) = ctx.partial_bound(&prefix, &assigned);
+                        assert!(
+                            e_lb <= e.energy.total_pj(),
+                            "energy bound {e_lb} > actual {} at depth {depth} on {net}/{} × {}",
+                            e.energy.total_pj(),
+                            layer.name,
+                            acc.name
+                        );
+                        assert!(
+                            l_lb <= e.latency_cycles,
+                            "latency bound {l_lb} > actual {} at depth {depth} on {net}/{} × {}",
+                            e.latency_cycles,
+                            layer.name,
+                            acc.name
+                        );
+                        for objective in Objective::ALL {
+                            assert!(
+                                objective.compose(e_lb, l_lb) <= objective.score(&e),
+                                "{objective} bound inverted at depth {depth} on {net}/{}",
+                                layer.name
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_branch_and_bound_bit_identical_to_unpruned_exhaustive() {
+    // Branch-and-bound over the factorization lattice must return the
+    // identical triple (mapping, score bits, tie-break index) as the
+    // unpruned flat enumeration over the same budgeted range — for every
+    // objective, at 1/2/4/8 worker threads, with every in-budget
+    // candidate accounted examined-or-pruned.
+    let acc = presets::eyeriss();
+    let layer = zoo::vgg02()[4].clone();
+    let budget = 3_000u64;
+    let odometer = OdometerSource::new(&layer, &acc, true);
+    let lattice = BoundedLattice::new(&layer, &acc, true);
+    for objective in Objective::ALL {
+        let base = SearchDriver { objective, budget, threads: 1, prune: false }
+            .search(&layer, &acc, &odometer, &[])
+            .unwrap();
+        for threads in [1usize, 2, 4, 8] {
+            let driver = SearchDriver { objective, budget, threads, prune: true };
+            let (bnb, certified) = driver.branch_and_bound(&layer, &acc, &lattice, &[]);
+            let bnb = bnb.unwrap();
+            assert!(!certified, "a 3k budget cannot cover conv5's space");
+            assert_eq!(bnb.mapping, base.mapping, "{objective} t={threads}");
+            assert_eq!(bnb.score.to_bits(), base.score.to_bits(), "{objective} t={threads}");
+            assert_eq!(bnb.index, base.index, "{objective} t={threads}");
+            assert_eq!(
+                bnb.examined + bnb.pruned,
+                base.examined,
+                "{objective} t={threads}: candidates leaked"
+            );
+            assert!(bnb.pruned > 0, "{objective} t={threads}: B&B pruned nothing");
+        }
+    }
+}
+
+#[test]
+fn prop_certified_bnb_examines_at_most_a_tenth_of_exhaustive() {
+    // The headline acceptance property: on VGG-16 conv9 under every
+    // preset, branch-and-bound warm-started with the unpruned run's own
+    // argmin (the oracle-incumbent protocol — seeding with the eventual
+    // winner provably cannot change the argmin, since an exact tie
+    // resolves to the enumerated copy) examines at most 10% of the
+    // candidates the unpruned exhaustive search does, while returning the
+    // identical mapping and score.
+    let layer = zoo::vgg16()[8].clone();
+    let budget = 20_000u64;
+    for acc in presets::all() {
+        let odometer = OdometerSource::new(&layer, &acc, true);
+        let base = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: false }
+            .search(&layer, &acc, &odometer, &[])
+            .unwrap();
+        let lattice = BoundedLattice::new(&layer, &acc, true);
+        let driver = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: true };
+        let (bnb, _certified) =
+            driver.branch_and_bound(&layer, &acc, &lattice, std::slice::from_ref(&base.mapping));
+        let bnb = bnb.unwrap();
+        assert_eq!(bnb.mapping, base.mapping, "{}", acc.name);
+        assert_eq!(bnb.score.to_bits(), base.score.to_bits(), "{}", acc.name);
+        assert_eq!(bnb.index, base.index, "{}", acc.name);
+        // Oracle seed adds exactly one examined candidate on top of the
+        // examined-or-pruned partition of the in-budget range.
+        assert_eq!(bnb.examined + bnb.pruned, base.examined + 1, "{}", acc.name);
+        assert!(
+            bnb.examined * 10 <= base.examined,
+            "{}: B&B examined {} of {} (> 10%)",
+            acc.name,
+            bnb.examined,
+            base.examined
+        );
+    }
+}
+
+#[test]
+fn prop_certified_bnb_is_provably_optimal_on_a_covered_space() {
+    // When the budget covers the whole lattice, branch-and-bound reports
+    // `certified` and its argmin equals the full unpruned enumeration's —
+    // at every thread count.
+    let acc = Accelerator {
+        name: "prop-bnb".into(),
+        style: Style::NvdlaLike,
+        datawidth_bits: 16,
+        levels: vec![
+            StorageLevel::register_file("RF", 64, 16),
+            StorageLevel::buffer("GLB", 1024, 64),
+            StorageLevel::dram(64),
+        ],
+        pe: PeArray::new(4, 4),
+        noc: Noc::default(),
+        mac_energy_pj: 1.0,
+        clock_mhz: 200.0,
+    };
+    let layer = ConvLayer::new("prop-bnb-tiny", 4, 2, 1, 1, 4, 2);
+    let space = lattice_subtree_blocks(&layer, &acc, 0) * 7;
+    let odometer = OdometerSource::new(&layer, &acc, true);
+    let base = SearchDriver { objective: Objective::Energy, budget: space, threads: 1, prune: false }
+        .search(&layer, &acc, &odometer, &[])
+        .unwrap();
+    assert_eq!(base.examined, space, "baseline must enumerate the whole space");
+    let lattice = BoundedLattice::new(&layer, &acc, true);
+    for threads in [1usize, 2, 4, 8] {
+        let driver =
+            SearchDriver { objective: Objective::Energy, budget: space, threads, prune: true };
+        let (bnb, certified) = driver.branch_and_bound(&layer, &acc, &lattice, &[]);
+        let bnb = bnb.unwrap();
+        assert!(certified, "t={threads}: full-space budget must certify");
+        assert_eq!(bnb.mapping, base.mapping, "t={threads}");
+        assert_eq!(bnb.score.to_bits(), base.score.to_bits(), "t={threads}");
+        assert_eq!(bnb.index, base.index, "t={threads}");
+        assert_eq!(bnb.examined + bnb.pruned, space, "t={threads}");
+        assert!(bnb.pruned > 0, "t={threads}");
     }
 }
 
