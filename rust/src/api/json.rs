@@ -89,11 +89,13 @@ fn mapping(m: &Mapping) -> String {
     )
 }
 
-/// One layer report as a single-line object.
+/// One layer report as a single-line object. The `status` object always
+/// carries both keys: `kind` (`ok` / `degraded` / `fell_back`) and
+/// `reason` (empty for `ok`).
 fn layer(l: &LayerReport) -> String {
     let e = &l.outcome.evaluation;
     format!(
-        "{{\"name\": \"{}\", \"op\": \"{}\", \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"utilization\": {}, \"evaluations\": {}, \"map_time_ms\": {}, \"score\": {}, \"cached\": {}, \"certified\": {}, \"mapping\": {}}}",
+        "{{\"name\": \"{}\", \"op\": \"{}\", \"macs\": {}, \"energy_uj\": {}, \"pj_per_mac\": {}, \"latency_cycles\": {}, \"utilization\": {}, \"evaluations\": {}, \"map_time_ms\": {}, \"score\": {}, \"cached\": {}, \"certified\": {}, \"status\": {{\"kind\": \"{}\", \"reason\": \"{}\"}}, \"mapping\": {}}}",
         esc(&l.layer.name),
         l.layer.op.name(),
         e.macs,
@@ -106,6 +108,8 @@ fn layer(l: &LayerReport) -> String {
         jf(l.outcome.score),
         l.cached,
         l.outcome.certified,
+        l.outcome.status.kind(),
+        esc(l.outcome.status.reason()),
         mapping(&l.outcome.mapping)
     )
 }
@@ -163,6 +167,22 @@ pub fn compile_report(r: &CompileReport) -> String {
         jms(r.p50_service),
         jms(r.p99_service)
     ));
+    if r.failures.is_empty() {
+        s.push_str("  \"failures\": [],\n");
+    } else {
+        s.push_str("  \"failures\": [\n");
+        for (i, f) in r.failures.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"network\": \"{}\", \"layer\": \"{}\", \"code\": \"{}\", \"error\": \"{}\"}}{}\n",
+                esc(&f.network),
+                esc(&f.layer),
+                f.code,
+                esc(&f.error),
+                if i + 1 < r.failures.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
+    }
     s.push_str(&format!("  \"compile_time_ms\": {}\n", jms(r.compile_time)));
     s.push_str("}\n");
     s
@@ -632,9 +652,11 @@ mod tests {
                 "networks",
                 "totals",
                 "cache",
+                "failures",
                 "compile_time_ms"
             ]
         );
+        assert!(v.get("failures").unwrap().as_arr().unwrap().is_empty());
         let nets = v.get("networks").unwrap().as_arr().unwrap();
         assert_eq!(nets.len(), 1);
         assert_eq!(nets[0].keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
@@ -655,9 +677,14 @@ mod tests {
                 "score",
                 "cached",
                 "certified",
+                "status",
                 "mapping"
             ]
         );
+        let status = layers[0].get("status").unwrap();
+        assert_eq!(status.keys(), vec!["kind", "reason"]);
+        assert_eq!(status.get("kind").unwrap().as_str(), Some("ok"));
+        assert_eq!(status.get("reason").unwrap().as_str(), Some(""));
         assert_eq!(
             layers[0].get("mapping").unwrap().keys(),
             vec!["temporal", "permutation", "spatial_x", "spatial_y"]

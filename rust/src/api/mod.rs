@@ -140,6 +140,7 @@ impl Error {
             Error::Config(_) => "E_CONFIG",
             Error::Yaml(_) => "E_YAML",
             Error::Mapping(_) => "E_MAPPING",
+            Error::Map(MapError::Panicked(_)) => "E_PANIC",
             Error::Map(_) => "E_SEARCH",
             Error::Runtime(_) => "E_RUNTIME",
             Error::Io { .. } => "E_IO",
@@ -252,6 +253,11 @@ mod tests {
             (
                 Error::from(MapError::NoValidMapping("x".into())),
                 "E_SEARCH",
+                4,
+            ),
+            (
+                Error::from(MapError::Panicked("x".into())),
+                "E_PANIC",
                 4,
             ),
             (Error::from(RuntimeError::msg("x")), "E_RUNTIME", 4),

@@ -64,6 +64,10 @@ pub struct CompileRequest {
     pub search: SearchParams,
     /// Worker threads for the mapping service the request runs on.
     pub threads: usize,
+    /// Abort the batch on the first hard layer failure instead of
+    /// collecting it into [`crate::api::CompileReport::failures`] and
+    /// compiling the rest (off by default — per-layer isolation).
+    pub fail_fast: bool,
 }
 
 impl Default for CompileRequest {
@@ -74,6 +78,7 @@ impl Default for CompileRequest {
             mapper: "local".into(),
             search: SearchParams::default(),
             threads: 4,
+            fail_fast: false,
         }
     }
 }
@@ -186,6 +191,22 @@ impl CompileRequest {
     /// covered the whole candidate space.
     pub fn certify(mut self, certify: bool) -> Self {
         self.search.certify = certify;
+        self
+    }
+
+    /// Set a per-layer wall-clock search deadline in milliseconds. A
+    /// search that overruns it returns its best-so-far (status
+    /// `degraded`); one that cannot produce anything in time falls back
+    /// to the O(1) LOCAL mapping (status `fell_back`).
+    pub fn deadline_ms(mut self, ms: u64) -> Self {
+        self.search.deadline_ms = Some(ms);
+        self
+    }
+
+    /// Abort on the first hard layer failure instead of isolating it in
+    /// the report's `failures` list.
+    pub fn fail_fast(mut self, fail_fast: bool) -> Self {
+        self.fail_fast = fail_fast;
         self
     }
 

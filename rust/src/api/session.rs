@@ -46,6 +46,7 @@ struct ServiceKey {
     search_threads: usize,
     prune: bool,
     certify: bool,
+    deadline_ms: Option<u64>,
     workers: usize,
 }
 
@@ -71,6 +72,7 @@ impl ServiceKey {
             search_threads: req.search.threads.max(1),
             prune: req.search.prune,
             certify: req.search.certify,
+            deadline_ms: req.search.deadline_ms,
             workers: resolved.threads,
         }
     }
@@ -164,6 +166,24 @@ impl NetworkReport {
     }
 }
 
+/// One layer that failed to map, recorded in [`CompileReport::failures`]
+/// instead of aborting the batch (unless the request set
+/// [`CompileRequest::fail_fast`]). Failures here are *hard* failures —
+/// even the LOCAL fallback could not produce a valid mapping; degraded or
+/// fell-back layers still appear as ordinary [`LayerReport`]s with a
+/// non-`Ok` [`crate::mappers::MapStatus`].
+#[derive(Debug, Clone)]
+pub struct LayerFailure {
+    /// The network the failed layer belongs to.
+    pub network: String,
+    /// The failed layer's name.
+    pub layer: String,
+    /// Rendered error message (already carries network/layer context).
+    pub error: String,
+    /// Stable [`Error::code`] of the failure (e.g. `E_SEARCH`, `E_PANIC`).
+    pub code: &'static str,
+}
+
 /// The typed result of [`Session::compile`]: per-network, per-layer
 /// reports plus request-wide cache statistics.
 #[derive(Debug, Clone)]
@@ -178,6 +198,9 @@ pub struct CompileReport {
     pub objective: Objective,
     /// Per-network reports in submission order.
     pub networks: Vec<NetworkReport>,
+    /// Layers that failed to map (fallback included), in submission order.
+    /// Empty on a fully-successful compile; see [`LayerFailure`].
+    pub failures: Vec<LayerFailure>,
     /// Wall-clock of the whole request (submit → last reply).
     pub compile_time: Duration,
     /// Layer-mapping requests this compile submitted.
@@ -290,8 +313,16 @@ pub struct SessionMetrics {
     pub requests: u64,
     /// Requests served from a mapping cache.
     pub cache_hits: u64,
-    /// Requests answered with a mapper error.
+    /// Requests answered with a mapper error (fallback included — these
+    /// layers produced no mapping at all).
     pub errors: u64,
+    /// Mapper panics caught by the workers' containment region.
+    pub panics: u64,
+    /// Requests answered by the O(1) LOCAL fallback after the configured
+    /// mapper failed or panicked.
+    pub fallbacks: u64,
+    /// Dead worker threads respawned by the service supervisors.
+    pub respawns: u64,
 }
 
 impl SessionMetrics {
@@ -352,6 +383,7 @@ fn layer_error(network: &str, layer: &str, e: MapError) -> Error {
         MapError::NoValidMapping(msg) => {
             MapError::NoValidMapping(format!("{network}/{layer}: {msg}"))
         }
+        MapError::Panicked(msg) => MapError::Panicked(format!("{network}/{layer}: {msg}")),
         other => other,
     })
 }
@@ -396,7 +428,10 @@ impl Session {
     ) -> (Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>) {
         let key = ServiceKey::of(req, resolved);
         let svc = {
-            let mut guard = self.services.lock().unwrap();
+            // Poison-tolerant like the cache shards: a caller thread that
+            // panicked between entry and insert leaves the map consistent
+            // (entry/insert never partially apply), so keep serving.
+            let mut guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
             Arc::clone(guard.entry(key).or_insert_with(|| {
                 Arc::new(MappingService::start(
                     resolved.acc.clone(),
@@ -419,9 +454,12 @@ impl Session {
 
     /// Compile a request to a typed [`CompileReport`]. All layers of all
     /// networks are submitted up front (the service shards them across its
-    /// worker pool); replies are collected in network order. On a mapping
-    /// failure the remaining replies are still drained (the queue already
-    /// holds them) and the first error is returned.
+    /// worker pool); replies are collected in network order. A layer whose
+    /// mapping fails outright (even through the LOCAL fallback) is
+    /// recorded in [`CompileReport::failures`] and the rest of the batch
+    /// still compiles; set [`CompileRequest::fail_fast`] to instead abort
+    /// with the first error (remaining replies are drained either way —
+    /// the queue already holds them).
     pub fn compile(&self, req: &CompileRequest) -> Result<CompileReport, Error> {
         self.compile_resolved(req, req.resolve()?)
     }
@@ -442,6 +480,7 @@ impl Session {
         let (submitted, metrics) = self.submit_all(req, &resolved);
 
         let mut networks = Vec::with_capacity(submitted.len());
+        let mut failures: Vec<LayerFailure> = Vec::new();
         let mut first_error: Option<Error> = None;
         let mut requests = 0u64;
         let mut cache_hits = 0u64;
@@ -463,16 +502,27 @@ impl Session {
                         });
                     }
                     Err(e) => {
+                        let err = layer_error(&name, &layer.name, e);
+                        failures.push(LayerFailure {
+                            network: name.clone(),
+                            layer: layer.name.clone(),
+                            error: err.to_string(),
+                            code: err.code(),
+                        });
                         if first_error.is_none() {
-                            first_error = Some(layer_error(&name, &layer.name, e));
+                            first_error = Some(err);
                         }
                     }
                 }
             }
             networks.push(NetworkReport { name, layers, compile_time: n0.elapsed() });
         }
-        if let Some(e) = first_error {
-            return Err(e);
+        // Per-layer isolation: failures ride in the report unless the
+        // caller opted back into the abort-on-first-error contract.
+        if req.fail_fast {
+            if let Some(e) = first_error {
+                return Err(e);
+            }
         }
 
         let percentiles = metrics.service_time_percentiles(&[0.50, 0.99]);
@@ -482,6 +532,7 @@ impl Session {
             mapper,
             objective,
             networks,
+            failures,
             compile_time: t0.elapsed(),
             requests,
             cache_hits,
@@ -522,8 +573,16 @@ impl Session {
                 "simulate needs a single-layer workload (got {total} layers)"
             )));
         }
-        let report = self.compile_resolved(req, resolved)?;
-        let layer = report.networks[0].layers[0].clone();
+        // Force fail-fast: a failed single layer must surface as its typed
+        // error here, not as an empty report with a `failures` entry.
+        let strict = req.clone().fail_fast(true);
+        let report = self.compile_resolved(&strict, resolved)?;
+        let layer = report
+            .networks
+            .first()
+            .and_then(|n| n.layers.first())
+            .cloned()
+            .ok_or_else(|| Error::request("simulate: the layer produced no report"))?;
         let sim = sim::simulate(&layer.layer, &report.acc, &layer.outcome.mapping, options);
         let mesh = noc::simulate_mesh(&layer.layer, &report.acc, &layer.outcome.mapping);
         Ok(SimulateReport {
@@ -565,12 +624,25 @@ impl Session {
     /// Aggregate counters over every service this session has started.
     pub fn metrics(&self) -> SessionMetrics {
         use std::sync::atomic::Ordering;
-        let guard = self.services.lock().unwrap();
-        let mut m = SessionMetrics { services: guard.len(), requests: 0, cache_hits: 0, errors: 0 };
+        // Metrics are read-only over atomics; a poisoned map is still safe
+        // to aggregate from.
+        let guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
+        let mut m = SessionMetrics {
+            services: guard.len(),
+            requests: 0,
+            cache_hits: 0,
+            errors: 0,
+            panics: 0,
+            fallbacks: 0,
+            respawns: 0,
+        };
         for svc in guard.values() {
             m.requests += svc.metrics.requests.load(Ordering::Relaxed);
             m.cache_hits += svc.metrics.cache_hits.load(Ordering::Relaxed);
             m.errors += svc.metrics.errors.load(Ordering::Relaxed);
+            m.panics += svc.metrics.panics.load(Ordering::Relaxed);
+            m.fallbacks += svc.metrics.fallbacks.load(Ordering::Relaxed);
+            m.respawns += svc.metrics.respawns.load(Ordering::Relaxed);
         }
         m
     }
@@ -704,9 +776,12 @@ mod tests {
 
     #[test]
     fn mapping_failures_carry_layer_context() {
-        // Budget-1 constrained search on a large layer cannot find a valid
-        // candidate; the error must name the network/layer and classify as
-        // a mapping failure (exit 4).
+        // Budget-1 constrained search on a starved accelerator cannot find
+        // a valid candidate, and the accelerator is so small even the
+        // LOCAL fallback fails — a *hard* failure. By default it rides in
+        // `report.failures` (per-layer isolation); with `fail_fast` the
+        // old abort-on-first-error contract returns, naming the layer and
+        // classifying as a mapping failure (exit 4).
         let session = Session::new();
         let req = CompileRequest::new()
             .layer_spec("vgg16:9")
@@ -714,13 +789,20 @@ mod tests {
             .budget(1)
             .threads(1)
             .accelerator(tiny_acc());
-        match session.compile(&req) {
+        let r = session.compile(&req).unwrap();
+        assert_eq!(r.total_layers(), 0, "a hard failure must not yield a layer report");
+        assert_eq!(r.failures.len(), 1);
+        let f = &r.failures[0];
+        assert_eq!(f.code, "E_SEARCH");
+        assert_eq!(f.layer, "VGG16_conv9");
+        assert!(f.error.contains("VGG16_conv9"), "{}", f.error);
+        match session.compile(&req.clone().fail_fast(true)) {
             Err(e) => {
                 assert_eq!(e.class(), ErrorClass::Failure, "{e}");
                 assert_eq!(e.code(), "E_SEARCH");
                 assert!(e.to_string().contains("VGG16_conv9"), "{e}");
             }
-            Ok(r) => panic!("expected failure, got {} layers", r.total_layers()),
+            Ok(r) => panic!("expected fail-fast abort, got {} layers", r.total_layers()),
         }
     }
 

@@ -214,7 +214,15 @@ impl NetworkPlan {
     /// Per-layer report table.
     pub fn render(&self) -> Table {
         let mut t = Table::new(vec![
-            "layer", "MACs", "energy (µJ)", "pJ/MAC", "util", "latency (cyc)", "map time", "cached",
+            "layer",
+            "MACs",
+            "energy (µJ)",
+            "pJ/MAC",
+            "util",
+            "latency (cyc)",
+            "map time",
+            "cached",
+            "status",
         ]);
         for lp in &self.layers {
             let e = &lp.outcome.evaluation;
@@ -227,6 +235,7 @@ impl NetworkPlan {
                 e.latency_cycles.to_string(),
                 crate::util::bench::fmt_duration(lp.outcome.elapsed),
                 if lp.cached { "yes" } else { "no" }.into(),
+                lp.outcome.status.kind().into(),
             ]);
         }
         t
@@ -289,6 +298,10 @@ where
     let mut first_use: std::collections::HashSet<LayerKey> = std::collections::HashSet::new();
     for l in layers {
         let key = layer_key(l, acc).for_objective(objective);
+        // Invariant: the worker loop above visits every index of `unique`
+        // before its scope joins, and every layer's key was inserted into
+        // `unique` by the dedup pass — a miss here is a coordinator bug,
+        // not a reachable input condition.
         let out = results
             .get(&key)
             .expect("every key mapped")
@@ -306,6 +319,19 @@ where
     })
 }
 
+/// One layer that failed to map within a batch — even through the
+/// service's LOCAL fallback — recorded on [`BatchPlan::failures`] instead
+/// of aborting the rest of the batch.
+#[derive(Debug, Clone)]
+pub struct BatchFailure {
+    /// Network the failed layer belongs to.
+    pub network: String,
+    /// The failed layer's name.
+    pub layer: String,
+    /// Rendered mapper error.
+    pub error: String,
+}
+
 /// The result of batch-compiling many networks through one shared
 /// [`MappingService`]: per-network plans plus the batch-wide service
 /// metrics (cross-network cache hit rate, p50/p99 service time).
@@ -317,6 +343,9 @@ pub struct BatchPlan {
     pub mapper: String,
     /// `(network name, plan)` in submission order.
     pub networks: Vec<(String, NetworkPlan)>,
+    /// Layers that failed to map outright, in submission order (the rest
+    /// of the batch still compiled).
+    pub failures: Vec<BatchFailure>,
     /// Wall-clock of the whole batch (submit → last reply).
     pub batch_time: Duration,
     /// Total layer-mapping requests served.
@@ -364,7 +393,8 @@ impl BatchPlan {
 /// shape already mapped for one network is a hit for every later network
 /// on the same accelerator. `LayerPlan::cached` reflects that cross-network
 /// cache, and each `NetworkPlan::compile_time` measures that network's
-/// reply-collection wall-clock within the batch.
+/// reply-collection wall-clock within the batch. Layers that fail to map
+/// outright land in [`BatchPlan::failures`] instead of aborting the batch.
 pub fn compile_batch<M>(
     networks: &[(String, Vec<Layer>)],
     acc: &Accelerator,
@@ -387,12 +417,12 @@ where
         })
         .collect();
 
-    // Collect per network, preserving network and layer order. Every reply
-    // is drained even after a failure — the queue already holds the whole
-    // batch, so returning early would just hide the same wait inside the
-    // service's Drop; instead the first error surfaces after the drain.
+    // Collect per network, preserving network and layer order. A failed
+    // layer (the service already tried the LOCAL fallback) is recorded in
+    // `failures` and the rest of the batch still lands — one impossible
+    // layer must not discard an otherwise-complete zoo compile.
     let mut plans = Vec::with_capacity(submitted.len());
-    let mut first_error: Option<MapError> = None;
+    let mut failures: Vec<BatchFailure> = Vec::new();
     for (name, handles) in submitted {
         let n0 = std::time::Instant::now();
         let mut layer_plans = Vec::with_capacity(handles.len());
@@ -403,14 +433,11 @@ where
                     outcome: reply.outcome,
                     cached: reply.cached,
                 }),
-                Err(e) => {
-                    if first_error.is_none() {
-                        first_error = Some(MapError::NoValidMapping(format!(
-                            "{name}/{}: {e}",
-                            layer.name
-                        )));
-                    }
-                }
+                Err(e) => failures.push(BatchFailure {
+                    network: name.clone(),
+                    layer: layer.name.clone(),
+                    error: e.to_string(),
+                }),
             }
         }
         plans.push((
@@ -423,9 +450,6 @@ where
             },
         ));
     }
-    if let Some(e) = first_error {
-        return Err(e);
-    }
 
     // Freeze the metrics before tearing the service down.
     let metrics = std::sync::Arc::clone(&svc.metrics);
@@ -436,6 +460,7 @@ where
         arch: acc.name.clone(),
         mapper: mapper.name(),
         networks: plans,
+        failures,
         batch_time: t0.elapsed(),
         requests: metrics.requests.load(ordering),
         cache_hits: metrics.cache_hits.load(ordering),
@@ -494,6 +519,7 @@ mod tests {
         ];
         let batch = compile_batch(&networks, &acc, &LocalMapper::new(), 1).unwrap();
         assert_eq!(batch.networks.len(), 2);
+        assert!(batch.failures.is_empty());
         assert_eq!(batch.total_layers(), 10);
         assert_eq!(batch.requests, 10);
         // One worker processes requests in submission order, so every layer

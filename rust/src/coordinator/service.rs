@@ -15,14 +15,27 @@
 //! and service-time samples land in a **lock-free ring** — recording a
 //! request is atomic counter bumps plus one relaxed slot store, so metrics
 //! never block the request path.
+//!
+//! # Fault isolation (DESIGN.md §14)
+//!
+//! Each request body runs inside a `catch_unwind` boundary: a panicking
+//! mapper is converted into a typed [`MapError::Panicked`] instead of
+//! killing the worker, and — like any ordinary mapper error — degrades to
+//! the O(1) LOCAL fallback so the layer still gets a valid mapping
+//! (flagged [`MapStatus::FellBack`], never cached). Should a worker thread
+//! die anyway (a panic outside the boundary), [`MappingService::submit`]
+//! supervises the pool and respawns it. Panics, fallbacks and respawns
+//! are all counted in [`ServiceMetrics`].
 
 use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
-use crate::mappers::{MapError, MapOutcome, Mapper};
+use crate::mappers::{LocalMapper, MapError, MapOutcome, MapStatus, Mapper};
 use crate::workload::Layer;
 use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
 /// A mapping request: one layer on the service's accelerator.
@@ -31,6 +44,10 @@ struct MapRequest {
     reply: mpsc::Sender<Result<MapReply, MapError>>,
     /// Stamped at submission so `service_time` covers queue wait + map.
     submitted: Instant,
+    /// Process-wide submission ordinal ([`crate::fault::next_ordinal`]);
+    /// keys ordinal-targeted fault injection deterministically, whatever
+    /// the worker scheduling or cache state.
+    ordinal: u64,
 }
 
 /// Service answer.
@@ -69,13 +86,21 @@ impl ShardedCache {
         Self { shards: (0..CACHE_SHARDS).map(|_| Mutex::new(HashMap::new())).collect() }
     }
 
+    // Shard locks tolerate poisoning: a worker that panicked mid-insert
+    // leaves the map either without the entry or with a fully-cloned one
+    // (`HashMap::insert` doesn't tear values), so the data is safe to keep
+    // serving and one crashed request must not wedge the whole cache.
     fn get(&self, key: &LayerKey) -> Option<MapOutcome> {
-        self.shards[key.shard(CACHE_SHARDS)].lock().unwrap().get(key).cloned()
+        self.shards[key.shard(CACHE_SHARDS)]
+            .lock()
+            .unwrap_or_else(|p| p.into_inner())
+            .get(key)
+            .cloned()
     }
 
     fn insert(&self, key: LayerKey, outcome: MapOutcome) {
         let shard = key.shard(CACHE_SHARDS);
-        self.shards[shard].lock().unwrap().insert(key, outcome);
+        self.shards[shard].lock().unwrap_or_else(|p| p.into_inner()).insert(key, outcome);
     }
 }
 
@@ -158,6 +183,14 @@ pub struct ServiceMetrics {
     pub cache_hits: AtomicU64,
     /// Requests answered with a mapper error.
     pub errors: AtomicU64,
+    /// Mapper panics contained at the workers' unwind boundary.
+    pub panics: AtomicU64,
+    /// Requests answered by the LOCAL fallback rung after the primary
+    /// mapper failed or panicked (not counted in `errors`).
+    pub fallbacks: AtomicU64,
+    /// Worker threads respawned by the supervisor after dying to a panic
+    /// outside the containment region.
+    pub respawns: AtomicU64,
     /// Sum of service times, ns (divide by requests for the mean).
     pub service_ns: AtomicU64,
     /// Most recent service times, ns (percentile source; bounded,
@@ -232,10 +265,111 @@ impl ServiceMetrics {
     }
 }
 
+/// Cap on supervisor respawns over a service's lifetime — a crash-looping
+/// mapper must not leak an unbounded stream of threads. Far above anything
+/// a real workload hits (fault injection fires once).
+const MAX_RESPAWNS: u64 = 64;
+
+/// Extract a human-readable message from a caught panic payload.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// The per-worker request loop. A free function (not a closure in `start`)
+/// so the respawner can spawn byte-identical replacements.
+fn worker_loop<M: Mapper>(
+    rx: Arc<Mutex<mpsc::Receiver<MapRequest>>>,
+    cache: Arc<ShardedCache>,
+    metrics: Arc<ServiceMetrics>,
+    acc: Accelerator,
+    mapper: M,
+) {
+    // Cache entries are keyed by the mapper's objective, so a
+    // (hypothetical) cache shared across services can never serve a
+    // delay-optimal mapping to an energy request.
+    let objective = mapper.objective();
+    loop {
+        // Holding the lock only for recv keeps workers independent. A
+        // predecessor that died while holding it poisons the mutex; the
+        // queue underneath is intact, so keep draining.
+        let req = {
+            let guard = rx.lock().unwrap_or_else(|p| p.into_inner());
+            guard.recv()
+        };
+        let Ok(req) = req else { break }; // channel closed → drain
+        // Injected worker death fires OUTSIDE the containment region so
+        // the whole thread dies (exercising the supervisor's respawn
+        // path); the dropped reply sender surfaces upstream as a typed
+        // "service dropped request" error.
+        if crate::fault::should_kill_worker(req.ordinal) {
+            panic!("injected worker death at request ordinal {}", req.ordinal);
+        }
+        let key = layer_key(&req.layer, &acc).for_objective(objective);
+        // Containment region: the fault hook, the cache probe and the
+        // mapper all run under `catch_unwind`, so one buggy (or injected)
+        // panic degrades this request instead of killing the worker. The
+        // mapper resets its interior state on entry, so observing it after
+        // an unwind is safe (hence `AssertUnwindSafe`).
+        let attempt = catch_unwind(AssertUnwindSafe(|| {
+            crate::fault::inject(req.ordinal)?;
+            if let Some(outcome) = cache.get(&key) {
+                return Ok((outcome, true));
+            }
+            mapper.run(&req.layer, &acc).map(|outcome| (outcome, false))
+        }));
+        let primary = match attempt {
+            Ok(r) => r,
+            Err(payload) => {
+                metrics.panics.fetch_add(1, Ordering::Relaxed);
+                Err(MapError::Panicked(panic_message(payload.as_ref())))
+            }
+        };
+        let (result, cached) = match primary {
+            Ok((outcome, true)) => (Ok(outcome), true),
+            Ok((outcome, false)) => {
+                cache.insert(key, outcome.clone());
+                (Ok(outcome), false)
+            }
+            // Degradation ladder (DESIGN.md §14): any failure — panic or
+            // typed error — falls back to the O(1) LOCAL pass so the
+            // layer still gets a valid mapping. The stop-gap outcome is
+            // deliberately NOT cached (a transient failure must not
+            // poison the cache); if even LOCAL cannot map the layer, the
+            // ORIGINAL error propagates.
+            Err(e) => {
+                match LocalMapper::new().with_objective(objective).run(&req.layer, &acc) {
+                    Ok(mut outcome) => {
+                        outcome.status = MapStatus::FellBack { reason: e.to_string() };
+                        metrics.fallbacks.fetch_add(1, Ordering::Relaxed);
+                        (Ok(outcome), false)
+                    }
+                    Err(_) => (Err(e), false),
+                }
+            }
+        };
+        let service_time = req.submitted.elapsed();
+        metrics.record(service_time, cached, result.is_err());
+        // Receiver may have given up; ignore send failures.
+        let _ = req.reply.send(result.map(|outcome| MapReply { outcome, cached, service_time }));
+    }
+}
+
 /// A running mapping service over one accelerator and one mapper.
 pub struct MappingService {
     tx: Option<mpsc::Sender<MapRequest>>,
-    workers: Vec<std::thread::JoinHandle<()>>,
+    /// Live worker handles, behind a lock so [`MappingService::submit`]
+    /// can supervise (join the dead, install replacements) through
+    /// `&self`.
+    workers: Mutex<Vec<JoinHandle<()>>>,
+    /// Spawns one fresh worker on the service's queue/cache/metrics; used
+    /// at start and by the supervisor for respawns.
+    spawn_worker: Box<dyn Fn() -> JoinHandle<()> + Send + Sync>,
     /// Live service counters; clone the `Arc` to keep them past shutdown.
     pub metrics: Arc<ServiceMetrics>,
 }
@@ -250,58 +384,67 @@ impl MappingService {
         let rx = Arc::new(Mutex::new(rx));
         let cache: Arc<ShardedCache> = Arc::new(ShardedCache::new());
         let metrics = Arc::new(ServiceMetrics::default());
-        let mut workers = Vec::new();
-        for _ in 0..threads.max(1) {
-            let rx = Arc::clone(&rx);
-            let cache = Arc::clone(&cache);
+        // The prototype mapper sits behind a mutex so the respawner stays
+        // `Sync` even for mappers with interior (`Cell`) state.
+        let mapper = Mutex::new(mapper);
+        let spawn_worker: Box<dyn Fn() -> JoinHandle<()> + Send + Sync> = {
             let metrics = Arc::clone(&metrics);
-            let acc = acc.clone();
-            let mapper = mapper.clone();
-            workers.push(std::thread::spawn(move || {
-                // Cache entries are keyed by the mapper's objective, so a
-                // (hypothetical) cache shared across services can never
-                // serve a delay-optimal mapping to an energy request.
-                let objective = mapper.objective();
-                loop {
-                    // Holding the lock only for recv keeps workers
-                    // independent.
-                    let req = {
-                        let guard = rx.lock().unwrap();
-                        guard.recv()
-                    };
-                    let Ok(req) = req else { break }; // channel closed → drain
-                    let key = layer_key(&req.layer, &acc).for_objective(objective);
-                    let hit = cache.get(&key);
-                    let (result, cached) = match hit {
-                        Some(outcome) => (Ok(outcome), true),
-                        None => match mapper.run(&req.layer, &acc) {
-                            Ok(outcome) => {
-                                cache.insert(key, outcome.clone());
-                                (Ok(outcome), false)
-                            }
-                            Err(e) => (Err(e), false),
-                        },
-                    };
-                    let service_time = req.submitted.elapsed();
-                    metrics.record(service_time, cached, result.is_err());
-                    // Receiver may have given up; ignore send failures.
-                    let _ = req
-                        .reply
-                        .send(result.map(|outcome| MapReply { outcome, cached, service_time }));
-                }
-            }));
-        }
-        Self { tx: Some(tx), workers, metrics }
+            Box::new(move || {
+                let rx = Arc::clone(&rx);
+                let cache = Arc::clone(&cache);
+                let metrics = Arc::clone(&metrics);
+                let acc = acc.clone();
+                let mapper = mapper.lock().unwrap_or_else(|p| p.into_inner()).clone();
+                std::thread::spawn(move || worker_loop(rx, cache, metrics, acc, mapper))
+            })
+        };
+        let workers = (0..threads.max(1)).map(|_| spawn_worker()).collect();
+        Self { tx: Some(tx), workers: Mutex::new(workers), spawn_worker, metrics }
     }
 
-    /// Submit a layer; returns a handle to await the reply.
+    /// Join workers that died to a panic outside the containment region
+    /// (e.g. an injected worker death) and install replacements, up to
+    /// [`MAX_RESPAWNS`]. Cleanly-exited workers are reaped without
+    /// respawn.
+    fn supervise(&self) {
+        let mut workers = self.workers.lock().unwrap_or_else(|p| p.into_inner());
+        if workers.iter().all(|w| !w.is_finished()) {
+            return; // common case: everyone alive, nothing to reap
+        }
+        let handles = std::mem::take(&mut *workers);
+        for handle in handles {
+            if !handle.is_finished() {
+                workers.push(handle);
+                continue;
+            }
+            match handle.join() {
+                Ok(()) => {} // clean exit: queue closed, no respawn
+                Err(_) => {
+                    if self.metrics.respawns.load(Ordering::Relaxed) < MAX_RESPAWNS {
+                        self.metrics.respawns.fetch_add(1, Ordering::Relaxed);
+                        workers.push((self.spawn_worker)());
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit a layer; returns a handle to await the reply. Dead workers
+    /// are respawned first, so the pool self-heals request by request.
     pub fn submit(&self, layer: Layer) -> JobHandle {
+        self.supervise();
+        let ordinal = crate::fault::next_ordinal();
         let (reply_tx, reply_rx) = mpsc::channel();
         self.tx
             .as_ref()
+            // Invariant: `tx` is only taken by shutdown/drop, which
+            // consume/end the service — no submit can race them.
             .expect("service running")
-            .send(MapRequest { layer, reply: reply_tx, submitted: Instant::now() })
-            .expect("workers alive");
+            .send(MapRequest { layer, reply: reply_tx, submitted: Instant::now(), ordinal })
+            // Send fails only when every receiver is gone; the respawner
+            // closure holds the receiver `Arc` for the service's lifetime,
+            // so the queue outlives any worker crash.
+            .expect("request queue alive");
         JobHandle { rx: reply_rx }
     }
 
@@ -313,17 +456,21 @@ impl MappingService {
 
     /// Graceful shutdown: close the queue and join workers.
     pub fn shutdown(mut self) {
-        self.tx.take(); // close channel
-        for w in self.workers.drain(..) {
-            let _ = w.join();
-        }
+        self.tx.take(); // close channel; Drop joins the workers
     }
 }
 
 impl Drop for MappingService {
     fn drop(&mut self) {
         self.tx.take();
-        for w in self.workers.drain(..) {
+        // `get_mut` needs no lock (exclusive access); a poisoned mutex
+        // only means a worker died mid-supervision — the handles are
+        // still sound to join.
+        let workers = match self.workers.get_mut() {
+            Ok(w) => w,
+            Err(p) => p.into_inner(),
+        };
+        for w in workers.drain(..) {
             let _ = w.join();
         }
     }

@@ -1,0 +1,217 @@
+//! Deterministic fault injection for the compilation pipeline.
+//!
+//! The robustness tests and the CI smoke step need to provoke the failure
+//! paths — a mapper panic, a stalled search, a simulated allocation
+//! failure, a dead worker thread — on demand and *deterministically*. This
+//! module is the single arming point: a process-global plan set from the
+//! `--inject-fault <spec>` CLI flag or the [`ENV_VAR`] environment
+//! variable, consulted by the mapping-service workers through two hooks:
+//!
+//! * [`inject`] runs **inside** the worker's panic-containment region, so
+//!   an injected panic is caught, counted and degraded to the LOCAL
+//!   fallback exactly like a real mapper bug would be.
+//! * [`should_kill_worker`] runs **outside** that region, so the worker
+//!   thread genuinely dies and the service supervisor's respawn path is
+//!   exercised.
+//!
+//! Faults that target a specific request are keyed by the **submission
+//! ordinal** — the 0-based position of the request in process-wide
+//! submission order, stamped by [`next_ordinal`] at submit time. Ordinals
+//! are independent of worker scheduling and cache state, so `panic:3`
+//! deterministically hits the fourth submitted layer on every run.
+//!
+//! When nothing is armed every hook is a single relaxed atomic load — the
+//! module is compiled unconditionally and costs nothing in production.
+
+use crate::mappers::MapError;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Environment variable consulted by [`arm_from_env`]: holds the same
+/// `panic:<idx>` / `stall:<ms>` / `oom-sim` / `worker-death:<idx>` spec as
+/// the `--inject-fault` CLI flag.
+pub const ENV_VAR: &str = "LOCAL_MAPPER_INJECT_FAULT";
+
+/// The fault to inject, parsed from an `--inject-fault` spec.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Panic inside the worker's containment region when the request with
+    /// this submission ordinal is served (fires once).
+    Panic {
+        /// 0-based submission ordinal of the request to hit.
+        layer_idx: u64,
+    },
+    /// Sleep inside every request — simulates a stalled search so deadline
+    /// and degradation paths can be driven from the CLI.
+    Stall {
+        /// Milliseconds slept per request.
+        ms: u64,
+    },
+    /// Fail every request with a simulated allocation error (typed
+    /// [`MapError`], not a panic — exercises the ordinary-error fallback).
+    OomSim,
+    /// Kill the worker thread *outside* the containment region when the
+    /// request with this submission ordinal arrives (fires once) —
+    /// exercises the supervisor's respawn path.
+    WorkerDeath {
+        /// 0-based submission ordinal of the request to hit.
+        layer_idx: u64,
+    },
+}
+
+/// Hot-path gate: every hook bails on one relaxed load when disarmed.
+static ARMED: AtomicBool = AtomicBool::new(false);
+/// One-shot latch for the fire-once kinds (`panic`, `worker-death`).
+static FIRED: AtomicBool = AtomicBool::new(false);
+/// Process-wide submission counter; reset by [`arm`].
+static ORDINAL: AtomicU64 = AtomicU64::new(0);
+/// The armed plan (`None` while disarmed).
+static PLAN: Mutex<Option<FaultKind>> = Mutex::new(None);
+
+/// Parse an injection spec: `panic:<idx>`, `stall:<ms>`, `oom-sim` or
+/// `worker-death:<idx>`.
+pub fn parse(spec: &str) -> Result<FaultKind, String> {
+    if spec == "oom-sim" {
+        return Ok(FaultKind::OomSim);
+    }
+    let (kind, arg) = spec.split_once(':').ok_or_else(|| {
+        format!(
+            "bad fault spec {spec:?} (expected panic:<idx>, stall:<ms>, \
+             oom-sim or worker-death:<idx>)"
+        )
+    })?;
+    let n: u64 = arg
+        .parse()
+        .map_err(|_| format!("bad fault spec {spec:?}: {arg:?} is not a number"))?;
+    match kind {
+        "panic" => Ok(FaultKind::Panic { layer_idx: n }),
+        "stall" => Ok(FaultKind::Stall { ms: n }),
+        "worker-death" => Ok(FaultKind::WorkerDeath { layer_idx: n }),
+        _ => Err(format!("unknown fault kind {kind:?} in {spec:?}")),
+    }
+}
+
+/// Arm `kind` process-wide. Resets the submission-ordinal counter and the
+/// fire-once latch, so ordinal-keyed faults are deterministic relative to
+/// the submissions that follow.
+pub fn arm(kind: FaultKind) {
+    let mut plan = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    *plan = Some(kind);
+    ORDINAL.store(0, Ordering::Relaxed);
+    FIRED.store(false, Ordering::Relaxed);
+    ARMED.store(true, Ordering::Relaxed);
+}
+
+/// Disarm: every hook returns to its no-op fast path.
+pub fn disarm() {
+    ARMED.store(false, Ordering::Relaxed);
+    let mut plan = PLAN.lock().unwrap_or_else(|p| p.into_inner());
+    *plan = None;
+}
+
+/// Whether a fault is currently armed.
+pub fn is_armed() -> bool {
+    ARMED.load(Ordering::Relaxed)
+}
+
+/// Arm from [`ENV_VAR`] if it is set and non-empty. Returns `Ok(true)` if
+/// a fault was armed, `Ok(false)` if the variable is unset/empty, and the
+/// parse error for a malformed spec.
+pub fn arm_from_env() -> Result<bool, String> {
+    match std::env::var(ENV_VAR) {
+        Ok(spec) if !spec.is_empty() => {
+            arm(parse(&spec)?);
+            Ok(true)
+        }
+        _ => Ok(false),
+    }
+}
+
+/// RAII disarm guard for in-process tests: the fault stays armed exactly
+/// for the guard's lifetime.
+pub struct Armed(());
+
+/// Arm `kind` for the returned guard's lifetime.
+pub fn arm_guard(kind: FaultKind) -> Armed {
+    arm(kind);
+    Armed(())
+}
+
+impl Drop for Armed {
+    fn drop(&mut self) {
+        disarm();
+    }
+}
+
+/// Claim the next submission ordinal. Called by the service at submit
+/// time; a constant 0 while disarmed so unrelated submissions never
+/// advance the counter between [`arm`] and the faulted run.
+pub fn next_ordinal() -> u64 {
+    if !is_armed() {
+        return 0;
+    }
+    ORDINAL.fetch_add(1, Ordering::Relaxed)
+}
+
+fn plan() -> Option<FaultKind> {
+    if !ARMED.load(Ordering::Relaxed) {
+        return None;
+    }
+    *PLAN.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The in-containment hook: called by a service worker at the top of the
+/// guarded region for the request with `ordinal`. May panic (caught by the
+/// worker), sleep, or return a typed error, per the armed plan.
+pub fn inject(ordinal: u64) -> Result<(), MapError> {
+    match plan() {
+        None | Some(FaultKind::WorkerDeath { .. }) => Ok(()),
+        Some(FaultKind::Panic { layer_idx }) => {
+            if ordinal == layer_idx && !FIRED.swap(true, Ordering::Relaxed) {
+                panic!("injected panic at request ordinal {ordinal}");
+            }
+            Ok(())
+        }
+        Some(FaultKind::Stall { ms }) => {
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(())
+        }
+        Some(FaultKind::OomSim) => {
+            Err(MapError::NoValidMapping("injected oom-sim allocation failure".into()))
+        }
+    }
+}
+
+/// The out-of-containment hook: `true` exactly once for the
+/// `worker-death:<idx>` request, telling the worker to panic *outside* its
+/// unwind boundary so the thread dies and the supervisor must respawn it.
+pub fn should_kill_worker(ordinal: u64) -> bool {
+    matches!(plan(), Some(FaultKind::WorkerDeath { layer_idx }) if ordinal == layer_idx)
+        && !FIRED.swap(true, Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    // Only the pure parser is unit-tested here: arming mutates process
+    // globals and the lib's unit tests run concurrently, so everything
+    // that fires a fault lives in `tests/failure_injection.rs` (its own
+    // process, serialized there).
+    use super::*;
+
+    #[test]
+    fn specs_parse() {
+        assert_eq!(parse("panic:3"), Ok(FaultKind::Panic { layer_idx: 3 }));
+        assert_eq!(parse("stall:250"), Ok(FaultKind::Stall { ms: 250 }));
+        assert_eq!(parse("oom-sim"), Ok(FaultKind::OomSim));
+        assert_eq!(parse("worker-death:0"), Ok(FaultKind::WorkerDeath { layer_idx: 0 }));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_with_context() {
+        for bad in ["", "panic", "panic:x", "melt:1", "stall:", "oom-sim:1"] {
+            let err = parse(bad).unwrap_err();
+            assert!(err.contains("fault") || err.contains("unknown"), "{bad}: {err}");
+        }
+    }
+}

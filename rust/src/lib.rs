@@ -47,6 +47,9 @@
 //! * [`sim`] — the tile-pipeline latency simulator (single/double
 //!   buffering) refining the analytical roofline.
 //! * [`explore`] — hardware/mapping co-design sweeps and Pareto fronts.
+//! * [`fault`] — deterministic fault injection (`--inject-fault`) driving
+//!   the robustness tests and the CI smoke step through the service's
+//!   panic-containment, fallback and respawn paths.
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels
 //!   (behind the `pjrt` feature; a stub otherwise).
 //! * [`report`] — emitters for the paper's tables and figures plus the
@@ -97,6 +100,7 @@ pub mod arch;
 pub mod coordinator;
 pub mod energy;
 pub mod explore;
+pub mod fault;
 pub mod mappers;
 pub mod mapping;
 pub mod mapspace;

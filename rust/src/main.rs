@@ -23,7 +23,8 @@
 
 use local_mapper::api::{self, CompileRequest, Error, Session};
 use local_mapper::arch::{config, presets, Accelerator};
-use local_mapper::mappers::{Objective, SearchParams};
+use local_mapper::fault;
+use local_mapper::mappers::{MapError, Objective, SearchParams};
 use local_mapper::mapspace;
 use local_mapper::report;
 use local_mapper::runtime::{default_artifacts_dir, reference_conv, Runtime, RuntimeError};
@@ -34,6 +35,10 @@ use local_mapper::util::table::fmt_f64;
 
 fn main() {
     let args = Args::from_env();
+    if let Err(msg) = arm_faults(&args) {
+        eprintln!("error[E_REQUEST]: {msg}");
+        std::process::exit(2);
+    }
     let session = Session::new();
     let code = match args.subcommand() {
         Some("map") => finish(cmd_map(&args, &session)),
@@ -60,6 +65,37 @@ fn main() {
         }
     };
     std::process::exit(code);
+}
+
+/// Arm the deterministic fault injector before dispatch: an explicit
+/// `--inject-fault <spec>` wins; otherwise the
+/// `LOCAL_MAPPER_INJECT_FAULT` environment variable is consulted.
+fn arm_faults(args: &Args) -> Result<(), String> {
+    if let Some(spec) = args.get("inject-fault") {
+        fault::arm(fault::parse(spec)?);
+        Ok(())
+    } else {
+        fault::arm_from_env().map(|_| ())
+    }
+}
+
+/// Surface a compile report's hard per-layer failures: each one is printed
+/// to stderr with its stable code, and the returned error carries the
+/// count so the process exits with the mapping-failure class (4). Degraded
+/// or fell-back layers are *not* failures — they land in the report with a
+/// valid mapping and exit 0.
+fn surface_failures(r: &api::CompileReport) -> Result<(), Error> {
+    if r.failures.is_empty() {
+        return Ok(());
+    }
+    for f in &r.failures {
+        eprintln!("failed[{}]: {}", f.code, f.error);
+    }
+    Err(Error::from(MapError::NoValidMapping(format!(
+        "{} of {} layers failed to map (details above)",
+        r.failures.len(),
+        r.failures.len() + r.total_layers()
+    ))))
 }
 
 /// Report an [`Error`] with its stable code and exit with its class code.
@@ -128,6 +164,24 @@ Search-engine flags (wherever --mapper is accepted):
                                  is true when the budget provably covered
                                  the whole candidate space, so the result
                                  is the certified optimum
+  --deadline-ms N                per-layer wall-clock deadline for search
+                                 mappers: expiry mid-search keeps the
+                                 best-so-far mapping (status \"degraded\");
+                                 a search that cannot start in time falls
+                                 back to O(1) LOCAL (status \"fell_back\").
+                                 LOCAL itself ignores the deadline — it is
+                                 the bottom rung of the degradation ladder
+
+Failure isolation (map, compile, compile-all):
+  --fail-fast                    abort a batch compile on the first hard
+                                 layer failure (default: record it in the
+                                 report's \"failures\" list, exit 4, and
+                                 keep compiling the remaining layers)
+  --inject-fault <spec>          deterministic fault injection for tests
+                                 and CI: panic:<idx> | stall:<ms> |
+                                 oom-sim | worker-death:<idx> (also armed
+                                 via LOCAL_MAPPER_INJECT_FAULT in the
+                                 environment; the flag wins)
 
 Output and errors:
   --format json|table            map, compile, compile-all, simulate and
@@ -137,7 +191,9 @@ Output and errors:
   exit codes                     0 ok · 2 usage (E_REQUEST) · 3 invalid
                                  input (E_WORKLOAD/E_CONFIG/E_YAML/E_IO) ·
                                  4 mapping/execution failure
-                                 (E_SEARCH/E_MAPPING/E_RUNTIME)"
+                                 (E_SEARCH/E_MAPPING/E_RUNTIME/E_PANIC);
+                                 degraded or fell-back layers carry a
+                                 valid mapping and still exit 0"
     );
 }
 
@@ -162,6 +218,12 @@ fn search_params(args: &Args, default_budget: u64) -> Result<SearchParams, Error
     let objective = Objective::parse(objective_spec).ok_or_else(|| {
         Error::request(format!("unknown objective '{objective_spec}' ({})", Objective::SPEC))
     })?;
+    let deadline_ms = match args.get("deadline-ms") {
+        Some(v) => Some(v.parse::<u64>().map_err(|_| {
+            Error::request(format!("bad --deadline-ms '{v}' (expected milliseconds)"))
+        })?),
+        None => None,
+    };
     Ok(SearchParams {
         budget: args.get_num::<u64>("budget", default_budget),
         seed: args.get_num::<u64>("seed", 42),
@@ -169,6 +231,7 @@ fn search_params(args: &Args, default_budget: u64) -> Result<SearchParams, Error
         threads: args.get_num::<usize>("search-threads", 1).max(1),
         prune: !args.flag("no-prune"),
         certify: args.flag("certify"),
+        deadline_ms,
     })
 }
 
@@ -184,7 +247,8 @@ fn base_request(args: &Args, default_budget: u64) -> Result<CompileRequest, Erro
     let mut req = CompileRequest::new()
         .mapper(args.get_or("mapper", default_mapper))
         .search(search_params(args, default_budget)?)
-        .threads(args.get_num::<usize>("threads", 4));
+        .threads(args.get_num::<usize>("threads", 4))
+        .fail_fast(args.flag("fail-fast"));
     req = if let Some(path) = args.get("arch-file") {
         req.arch_file(path)
     } else {
@@ -211,6 +275,7 @@ fn cmd_map(args: &Args, session: &Session) -> Result<(), Error> {
     match format {
         Format::Json => print!("{}", api::json::compile_report(&r)),
         Format::Table => {
+            surface_failures(&r)?;
             let l = &r.networks[0].layers[0];
             let e = &l.outcome.evaluation;
             println!("{}", l.outcome.mapping.render(&l.layer, &r.acc));
@@ -234,7 +299,7 @@ fn cmd_map(args: &Args, session: &Session) -> Result<(), Error> {
             }
         }
     }
-    Ok(())
+    surface_failures(&r)
 }
 
 fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
@@ -270,7 +335,7 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
             );
         }
     }
-    Ok(())
+    surface_failures(&r)
 }
 
 /// Batch-compile the whole zoo through the session's shared-cache service
@@ -310,7 +375,7 @@ fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
             );
         }
     }
-    Ok(())
+    surface_failures(&r)
 }
 
 fn cmd_table2() -> i32 {

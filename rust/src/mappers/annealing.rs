@@ -10,8 +10,8 @@
 //! move, the acceptance rule and the cooling schedule.
 
 use super::engine::source::candidate_seed;
-use super::engine::{BatchSource, Objective, SearchDriver};
-use super::{MapError, Mapper};
+use super::engine::{deadline_instant, BatchSource, Objective, SearchDriver};
+use super::{MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
@@ -33,7 +33,10 @@ pub struct AnnealingMapper {
     pub seed: u64,
     /// The objective being minimized (and annealed over).
     pub objective: Objective,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
+    degraded: Cell<bool>,
 }
 
 impl AnnealingMapper {
@@ -45,7 +48,9 @@ impl AnnealingMapper {
             alpha: 0.995,
             seed,
             objective: Objective::Energy,
+            deadline_ms: None,
             evaluated: Cell::new(0),
+            degraded: Cell::new(false),
         }
     }
 
@@ -53,6 +58,7 @@ impl AnnealingMapper {
     pub fn from_params(params: &super::SearchParams) -> Self {
         let mut m = Self::new(params.budget, params.seed);
         m.objective = params.objective;
+        m.deadline_ms = params.deadline_ms;
         m
     }
 
@@ -200,7 +206,16 @@ impl Mapper for AnnealingMapper {
         self.evaluated.get()
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let mut chain = SaChain {
             layer,
             acc,
@@ -218,10 +233,12 @@ impl Mapper for AnnealingMapper {
             budget: self.steps.saturating_add(1),
             threads: 1,
             prune: false,
+            deadline: deadline_instant(self.deadline_ms),
         };
         match driver.search_batched(layer, acc, &mut chain) {
             Some(b) => {
                 self.evaluated.set(b.scored);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => Err(MapError::NoValidMapping("SA chain never left the start".into())),

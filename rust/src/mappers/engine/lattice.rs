@@ -291,10 +291,15 @@ impl SearchDriver {
         source: &BoundedLattice,
         seeds: &[Mapping],
     ) -> (Option<SearchBest>, bool) {
+        // An already-expired deadline covers nothing: no result, and
+        // certainly no certificate.
+        if self.expired() {
+            return (None, false);
+        }
         let budget = self.budget.max(1);
         let perms = source.block_len().max(1);
         let visit_blocks = source.n_blocks().min(budget.div_ceil(perms));
-        let certified = source.blocks_u128() * perms as u128 <= budget as u128;
+        let mut certified = source.blocks_u128() * perms as u128 <= budget as u128;
         let overhang = visit_blocks.saturating_mul(perms).saturating_sub(budget);
 
         let mut best: Option<(f64, u64, Mapping)> = None;
@@ -324,8 +329,17 @@ impl SearchDriver {
             .map(|_| (EvalContext::new(layer, acc), all_ones_mapping(n_levels)))
             .collect();
 
+        let mut degraded = false;
         let mut r0 = 0u64;
         while r0 < visit_blocks {
+            if self.expired() {
+                // Deadline hit mid-search: the remaining subtrees were
+                // neither examined nor bounded out, so the coverage
+                // certificate is forfeit along with them.
+                degraded = true;
+                certified = false;
+                break;
+            }
             let r1 = (r0 + round_blocks).min(visit_blocks);
             let round_n = r1 - r0;
             let w_n = n_workers.min(round_n);
@@ -383,6 +397,7 @@ impl SearchDriver {
             examined,
             scored,
             pruned,
+            degraded,
         });
         (best, certified)
     }
@@ -432,8 +447,13 @@ mod tests {
         let acc = presets::eyeriss();
         let layer = zoo::vgg02()[4].clone();
         let lat = BoundedLattice::new(&layer, &acc, true);
-        let driver =
-            SearchDriver { objective: Objective::Energy, budget: 700, threads: 1, prune: false };
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: 700,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
         let base = driver.search(&layer, &acc, &lat, &[]).unwrap();
         let bnb_driver = SearchDriver { prune: true, ..driver };
         let (bnb, certified) =
@@ -461,6 +481,7 @@ mod tests {
             budget: space as u64,
             threads: 1,
             prune: true,
+            deadline: None,
         };
         let (best, certified) = driver.branch_and_bound(&layer, &acc, &lat, &[]);
         let best = best.unwrap();

@@ -80,6 +80,13 @@ pub struct SearchParams {
     /// search provably covered the whole space (the `--certify` CLI flag;
     /// surfaced as [`crate::mappers::MapOutcome::certified`]).
     pub certify: bool,
+    /// Wall-clock deadline per layer mapping, milliseconds (the
+    /// `--deadline-ms` CLI flag). `None` means unbounded. Engine mappers
+    /// check it at round boundaries and return the best-so-far incumbent
+    /// flagged [`crate::mappers::MapStatus::Degraded`]; an expired
+    /// deadline with no incumbent yields the LOCAL fallback
+    /// ([`crate::mappers::MapStatus::FellBack`], DESIGN.md §14).
+    pub deadline_ms: Option<u64>,
 }
 
 impl SearchParams {
@@ -112,6 +119,12 @@ impl SearchParams {
         self.certify = certify;
         self
     }
+
+    /// Builder: set the per-layer wall-clock deadline in milliseconds.
+    pub fn with_deadline_ms(mut self, deadline_ms: u64) -> Self {
+        self.deadline_ms = Some(deadline_ms);
+        self
+    }
 }
 
 impl Default for SearchParams {
@@ -123,6 +136,7 @@ impl Default for SearchParams {
             threads: 1,
             prune: true,
             certify: false,
+            deadline_ms: None,
         }
     }
 }
@@ -146,6 +160,10 @@ pub struct SearchBest {
     /// Candidates skipped by the bound-based pruner without being
     /// materialized.
     pub pruned: u64,
+    /// `true` when the wall-clock deadline expired mid-search and this is
+    /// the best-so-far incumbent rather than the full run's answer
+    /// (surfaced as [`crate::mappers::MapStatus::Degraded`]).
+    pub degraded: bool,
 }
 
 /// Incumbent refreshes per pruned search: the block range is processed in
@@ -157,6 +175,17 @@ const PRUNE_ROUNDS: u64 = 32;
 /// guarantees a pruned search still examines a meaningful unpruned prefix
 /// when it has no warm-start seed.
 const MIN_ROUND_BLOCKS: u64 = 128;
+
+/// Resolve a relative per-layer deadline into an absolute instant
+/// anchored at "now" — called once at the start of each `map` so every
+/// driver round within that mapping shares one wall-clock budget.
+/// Absurdly large values that would overflow the clock saturate to
+/// unbounded (`None`).
+pub fn deadline_instant(deadline_ms: Option<u64>) -> Option<std::time::Instant> {
+    deadline_ms.and_then(|ms| {
+        std::time::Instant::now().checked_add(std::time::Duration::from_millis(ms))
+    })
+}
 
 /// Start of shard `w` when `total` items are split across `workers`
 /// contiguous shards (shard `w` covers `[start(w), start(w + 1))`).
@@ -209,9 +238,19 @@ pub struct SearchDriver {
     pub threads: usize,
     /// Bound-based block pruning.
     pub prune: bool,
+    /// Wall-clock deadline: checked at round boundaries only (never
+    /// inside a shard), so a truncated search still keeps the engine's
+    /// deterministic merge within every completed round. `None` means
+    /// unbounded.
+    pub deadline: Option<std::time::Instant>,
 }
 
 impl SearchDriver {
+    /// `true` once the wall-clock deadline (if any) has passed.
+    fn expired(&self) -> bool {
+        self.deadline.is_some_and(|d| std::time::Instant::now() >= d)
+    }
+
     /// Deterministic (thread-count-invariant) search over an indexed
     /// source. `seeds` warm-start the incumbent: they are scored first,
     /// carry post-stream indices (an exact tie prefers the enumerated
@@ -224,6 +263,12 @@ impl SearchDriver {
         source: &S,
         seeds: &[Mapping],
     ) -> Option<SearchBest> {
+        // An already-expired deadline admits no search at all: return
+        // `None` (not a zero-candidate incumbent) so the service worker
+        // drops to the LOCAL fallback rung of the degradation ladder.
+        if self.expired() {
+            return None;
+        }
         let budget = self.budget.max(1);
         let block_len = source.block_len().max(1);
         let visit_blocks = source.n_blocks().min(budget.div_ceil(block_len));
@@ -257,8 +302,13 @@ impl SearchDriver {
             .map(|_| (EvalContext::new(layer, acc), Mapping::trivial(layer, acc.n_levels())))
             .collect();
 
+        let mut degraded = false;
         let mut r0 = 0u64;
         while r0 < visit_blocks {
+            if self.expired() {
+                degraded = true;
+                break;
+            }
             let r1 = (r0 + round_blocks).min(visit_blocks);
             let round_n = r1 - r0;
             let w_n = n_workers.min(round_n);
@@ -365,6 +415,7 @@ impl SearchDriver {
             examined,
             scored,
             pruned,
+            degraded,
         })
     }
 
@@ -379,6 +430,11 @@ impl SearchDriver {
         acc: &Accelerator,
         source: &mut S,
     ) -> Option<SearchBest> {
+        // Same entry rule as `search`: an already-expired deadline means
+        // no proposals at all, and `None` routes to the LOCAL fallback.
+        if self.expired() {
+            return None;
+        }
         let budget = self.budget.max(1);
         let n_workers = self.threads.max(1);
         let mut ctxs: Vec<EvalContext> =
@@ -388,7 +444,12 @@ impl SearchDriver {
         let mut feedback: Vec<Option<f64>> = Vec::new();
         let mut batch: Vec<Mapping> = Vec::new();
         let mut index = 0u64;
+        let mut degraded = false;
         while index < budget {
+            if self.expired() {
+                degraded = true;
+                break;
+            }
             batch.clear();
             source.next_batch(&feedback, &mut batch);
             if batch.is_empty() {
@@ -412,6 +473,7 @@ impl SearchDriver {
             examined,
             scored,
             pruned: 0,
+            degraded,
         })
     }
 
@@ -490,6 +552,7 @@ mod tests {
                 budget: 400,
                 threads: 1,
                 prune,
+                deadline: None,
             }
             .search(&layer, &acc, &src, &[])
             .unwrap();
@@ -499,6 +562,7 @@ mod tests {
                     budget: 400,
                     threads,
                     prune,
+                    deadline: None,
                 }
                 .search(&layer, &acc, &src, &[])
                 .unwrap();
@@ -517,12 +581,14 @@ mod tests {
         let layer = zoo::vgg02()[4].clone();
         for objective in Objective::ALL {
             let src = RandomStream::new(&layer, &acc, 5, 300);
-            let full = SearchDriver { objective, budget: 300, threads: 1, prune: false }
-                .search(&layer, &acc, &src, &[])
-                .unwrap();
-            let pruned = SearchDriver { objective, budget: 300, threads: 1, prune: true }
-                .search(&layer, &acc, &src, &[])
-                .unwrap();
+            let full =
+                SearchDriver { objective, budget: 300, threads: 1, prune: false, deadline: None }
+                    .search(&layer, &acc, &src, &[])
+                    .unwrap();
+            let pruned =
+                SearchDriver { objective, budget: 300, threads: 1, prune: true, deadline: None }
+                    .search(&layer, &acc, &src, &[])
+                    .unwrap();
             assert_eq!(pruned.mapping, full.mapping, "{objective}");
             assert_eq!(pruned.score.to_bits(), full.score.to_bits());
             assert_eq!(pruned.index, full.index);
@@ -532,12 +598,47 @@ mod tests {
     }
 
     #[test]
+    fn deadlines_degrade_instead_of_failing() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 11, 400);
+        let unbounded = SearchDriver {
+            objective: Objective::Energy,
+            budget: 400,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
+        let base = unbounded.search(&layer, &acc, &src, &[]).unwrap();
+        assert!(!base.degraded);
+        // A generous deadline changes nothing — the run completes and is
+        // bit-identical to the unbounded one.
+        let roomy = SearchDriver {
+            deadline: Some(std::time::Instant::now() + std::time::Duration::from_secs(3600)),
+            ..unbounded
+        };
+        let out = roomy.search(&layer, &acc, &src, &[]).unwrap();
+        assert!(!out.degraded);
+        assert_eq!(out.mapping, base.mapping);
+        assert_eq!(out.score.to_bits(), base.score.to_bits());
+        // An already-expired deadline admits no candidates at all: `None`
+        // routes the caller to the LOCAL fallback.
+        let expired = SearchDriver { deadline: Some(std::time::Instant::now()), ..unbounded };
+        assert!(expired.search(&layer, &acc, &src, &[]).is_none());
+    }
+
+    #[test]
     fn seeds_warm_start_but_lose_exact_ties_to_the_stream() {
         let acc = presets::eyeriss();
         let layer = zoo::vgg02()[4].clone();
         let src = RandomStream::new(&layer, &acc, 11, 64);
-        let driver =
-            SearchDriver { objective: Objective::Energy, budget: 64, threads: 1, prune: false };
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: 64,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
         let plain = driver.search(&layer, &acc, &src, &[]).unwrap();
         // Seeding with the stream's own winner cannot change the result —
         // the tie resolves to the enumerated (lower-index) copy.
@@ -572,8 +673,13 @@ mod tests {
             src.emit_block(b, &mut m);
             pool.push(m);
         }
-        let driver =
-            SearchDriver { objective: Objective::Energy, budget: 3000, threads: 1, prune: false };
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: 3000,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
         let out = driver.search_batched(&layer, &acc, &mut Fixed(pool.clone(), 0)).unwrap();
         assert_eq!(out.examined, 12);
         assert_eq!(out.scored, 12);

@@ -25,8 +25,8 @@
 //! [`ExhaustiveMapper::without_warm_start`] restore the raw enumeration
 //! (the perf harness uses it to measure fixed-work thread scaling).
 
-use super::engine::{BoundedLattice, Objective, OdometerSource, SearchDriver};
-use super::{LocalMapper, MapError, Mapper};
+use super::engine::{deadline_instant, BoundedLattice, Objective, OdometerSource, SearchDriver};
+use super::{LocalMapper, MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::util::factor::count_factorizations;
@@ -60,9 +60,12 @@ pub struct ExhaustiveMapper {
     /// `--certify` CLI flag). Same candidate space, same argmin and
     /// tie-break as the flat search.
     pub certify: bool,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
     pruned: Cell<u64>,
     certified: Cell<bool>,
+    degraded: Cell<bool>,
 }
 
 impl ExhaustiveMapper {
@@ -76,9 +79,11 @@ impl ExhaustiveMapper {
             prune: true,
             warm_start: true,
             certify: false,
+            deadline_ms: None,
             evaluated: Cell::new(0),
             pruned: Cell::new(0),
             certified: Cell::new(false),
+            degraded: Cell::new(false),
         }
     }
 
@@ -89,6 +94,7 @@ impl ExhaustiveMapper {
         e.objective = params.objective;
         e.prune = params.prune;
         e.certify = params.certify;
+        e.deadline_ms = params.deadline_ms;
         e
     }
 
@@ -161,12 +167,22 @@ impl Mapper for ExhaustiveMapper {
         self.certified.get()
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let driver = SearchDriver {
             objective: self.objective,
             budget: self.max_candidates,
             threads: self.threads,
             prune: self.prune,
+            deadline: deadline_instant(self.deadline_ms),
         };
         let seeds: Vec<Mapping> = if self.warm_start {
             LocalMapper::new().map(layer, acc).into_iter().collect()
@@ -185,6 +201,7 @@ impl Mapper for ExhaustiveMapper {
                 self.evaluated.set(b.examined);
                 self.pruned.set(b.pruned);
                 self.certified.set(certified);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => {

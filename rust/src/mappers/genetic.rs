@@ -12,8 +12,8 @@
 //! independently).
 
 use super::engine::source::candidate_seed;
-use super::engine::{BatchSource, Objective, SearchDriver};
-use super::{MapError, Mapper};
+use super::engine::{deadline_instant, BatchSource, Objective, SearchDriver};
+use super::{MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::{repair, sample_random};
@@ -38,7 +38,10 @@ pub struct GeneticMapper {
     /// Worker threads for scoring each generation (identical results at
     /// every value).
     pub threads: usize,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
+    degraded: Cell<bool>,
 }
 
 impl GeneticMapper {
@@ -52,15 +55,18 @@ impl GeneticMapper {
             seed,
             objective: Objective::Energy,
             threads: 1,
+            deadline_ms: None,
             evaluated: Cell::new(0),
+            degraded: Cell::new(false),
         }
     }
 
-    /// Builder: apply the shared engine params (objective + threads; the
-    /// population/generation shape stays as constructed).
+    /// Builder: apply the shared engine params (objective + threads +
+    /// deadline; the population/generation shape stays as constructed).
     pub fn with_params(mut self, params: &super::SearchParams) -> Self {
         self.objective = params.objective;
         self.threads = params.threads.max(1);
+        self.deadline_ms = params.deadline_ms;
         self
     }
 
@@ -256,7 +262,16 @@ impl Mapper for GeneticMapper {
         self.evaluated.get()
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let mut source = GaPopulation {
             layer,
             acc,
@@ -277,10 +292,12 @@ impl Mapper for GeneticMapper {
             budget: u64::MAX,
             threads: self.threads,
             prune: false,
+            deadline: deadline_instant(self.deadline_ms),
         };
         match driver.search_batched(layer, acc, &mut source) {
             Some(b) => {
                 self.evaluated.set(b.scored);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => Err(MapError::NoValidMapping("GA produced no valid candidate".into())),

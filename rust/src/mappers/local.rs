@@ -213,8 +213,16 @@ impl Mapper for LocalMapper {
         //   B. the op's reduction dims innermost (partial sums stationary;
         //      C,R,S for conv, C for matmul, R,S for pooling).
         let source = ScheduleSource { base: m, reduction_dims: layer.op.reduction_dims() };
-        let driver =
-            SearchDriver { objective: self.objective, budget: 2, threads: 1, prune: false };
+        // LOCAL deliberately never takes a deadline: its O(1) two-candidate
+        // pass is the guaranteed bottom rung of the degradation ladder
+        // (DESIGN.md §14), so it must stay unconditionally runnable.
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: 2,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
         let best = driver.search(layer, acc, &source, &[]).ok_or_else(|| {
             MapError::NoValidMapping(format!(
                 "LOCAL construction does not fit {} on {}",

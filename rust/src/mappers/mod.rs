@@ -43,6 +43,11 @@ pub enum MapError {
     NoValidMapping(String),
     /// A constructed mapping failed validation.
     Invalid(MappingError),
+    /// The mapper panicked; the payload is the panic message. Produced by
+    /// the [`crate::coordinator::MappingService`] worker's `catch_unwind`
+    /// containment — a mapper bug surfaces as a typed, per-layer error
+    /// (stable code `E_PANIC`) instead of tearing down the process.
+    Panicked(String),
 }
 
 impl fmt::Display for MapError {
@@ -50,6 +55,7 @@ impl fmt::Display for MapError {
         match self {
             MapError::NoValidMapping(msg) => write!(f, "no valid mapping found: {msg}"),
             MapError::Invalid(e) => fmt::Display::fmt(e, f),
+            MapError::Panicked(msg) => write!(f, "mapper panicked: {msg}"),
         }
     }
 }
@@ -59,6 +65,7 @@ impl std::error::Error for MapError {
         match self {
             MapError::NoValidMapping(_) => None,
             MapError::Invalid(e) => Some(e),
+            MapError::Panicked(_) => None,
         }
     }
 }
@@ -66,6 +73,70 @@ impl std::error::Error for MapError {
 impl From<MappingError> for MapError {
     fn from(e: MappingError) -> Self {
         MapError::Invalid(e)
+    }
+}
+
+/// How a mapping was obtained — the degradation ladder's per-layer
+/// verdict (DESIGN.md §14).
+///
+/// `Ok` is the normal case. `Degraded` means a deadline cut the search
+/// short and the outcome is the best incumbent found so far — still a
+/// valid mapping, just not the one an uncut search would have returned.
+/// `FellBack` means the configured mapper failed outright (error or
+/// panic) and the service substituted the O(1) LOCAL schedule, so the
+/// layer still carries a valid mapping. Neither non-`Ok` state is a
+/// failure: the CLI exits 0 for both.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum MapStatus {
+    /// The configured mapper completed normally.
+    Ok,
+    /// A deadline truncated the search; the outcome is the best-so-far
+    /// incumbent rather than the full search's answer.
+    Degraded {
+        /// Human-readable cause (e.g. "deadline expired mid-search").
+        reason: String,
+    },
+    /// The configured mapper failed and the LOCAL fallback produced the
+    /// mapping instead.
+    FellBack {
+        /// The original failure that triggered the fallback.
+        reason: String,
+    },
+}
+
+impl MapStatus {
+    /// `true` for the normal, non-degraded case.
+    pub fn is_ok(&self) -> bool {
+        matches!(self, MapStatus::Ok)
+    }
+
+    /// Stable machine-readable discriminator: `ok` / `degraded` /
+    /// `fell_back` (the `status.kind` value in `api_v1` documents).
+    pub fn kind(&self) -> &'static str {
+        match self {
+            MapStatus::Ok => "ok",
+            MapStatus::Degraded { .. } => "degraded",
+            MapStatus::FellBack { .. } => "fell_back",
+        }
+    }
+
+    /// The degradation reason, empty for `Ok` (the `status.reason` value
+    /// in `api_v1` documents — both keys are always present).
+    pub fn reason(&self) -> &str {
+        match self {
+            MapStatus::Ok => "",
+            MapStatus::Degraded { reason } | MapStatus::FellBack { reason } => reason,
+        }
+    }
+}
+
+impl fmt::Display for MapStatus {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            MapStatus::Ok => write!(f, "ok"),
+            MapStatus::Degraded { reason } => write!(f, "degraded: {reason}"),
+            MapStatus::FellBack { reason } => write!(f, "fell back: {reason}"),
+        }
     }
 }
 
@@ -91,6 +162,9 @@ pub struct MapOutcome {
     /// `--certify` with a budget admitting the full space; always `false`
     /// for heuristic and budget-truncated searches).
     pub certified: bool,
+    /// How the mapping was obtained: normally, deadline-truncated, or via
+    /// the LOCAL fallback (DESIGN.md §14).
+    pub status: MapStatus,
 }
 
 /// A mapping algorithm: layer × accelerator → mapping.
@@ -121,6 +195,16 @@ pub trait Mapper {
         false
     }
 
+    /// Status of the last `map` call: [`MapStatus::Degraded`] when a
+    /// deadline truncated the search ([`SearchParams::deadline_ms`]).
+    /// Mappers without a deadline notion — LOCAL above all, whose O(1)
+    /// pass is the guaranteed bottom of the degradation ladder — report
+    /// [`MapStatus::Ok`]. (The [`MapStatus::FellBack`] state is assigned
+    /// by the service worker, never by a mapper itself.)
+    fn status(&self) -> MapStatus {
+        MapStatus::Ok
+    }
+
     /// Run with timing: the measured quantity of the paper's Table 3.
     /// The final evaluation goes through the same [`EvalContext`] engine
     /// the search loops use (bit-identical to the legacy evaluator), so
@@ -146,6 +230,7 @@ pub trait Mapper {
             objective,
             score,
             certified: self.certified(),
+            status: self.status(),
         })
     }
 }
@@ -235,6 +320,10 @@ impl Mapper for AnyMapper {
 
     fn certified(&self) -> bool {
         self.inner().certified()
+    }
+
+    fn status(&self) -> MapStatus {
+        self.inner().status()
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {

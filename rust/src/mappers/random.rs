@@ -8,8 +8,8 @@
 //! never hurts). Pruning is off by default here so `evaluations` keeps the
 //! exact best-of-N accounting; [`RandomMapper::with_pruning`] opts in.
 
-use super::engine::{Objective, RandomStream, SearchDriver};
-use super::{MapError, Mapper};
+use super::engine::{deadline_instant, Objective, RandomStream, SearchDriver};
+use super::{MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::sample_random;
@@ -32,7 +32,10 @@ pub struct RandomMapper {
     /// Bound-based pruning (off by default: best-of-N keeps exact
     /// evaluation accounting).
     pub prune: bool,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
+    degraded: Cell<bool>,
 }
 
 impl RandomMapper {
@@ -45,7 +48,9 @@ impl RandomMapper {
             objective: Objective::Energy,
             threads: 1,
             prune: false,
+            deadline_ms: None,
             evaluated: Cell::new(0),
+            degraded: Cell::new(false),
         }
     }
 
@@ -55,6 +60,7 @@ impl RandomMapper {
         let mut m = Self::new(params.budget, params.seed);
         m.objective = params.objective;
         m.threads = params.threads.max(1);
+        m.deadline_ms = params.deadline_ms;
         m
     }
 
@@ -97,17 +103,28 @@ impl Mapper for RandomMapper {
         }
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let source = RandomStream::new(layer, acc, self.seed, self.samples);
         let driver = SearchDriver {
             objective: self.objective,
             budget: self.samples,
             threads: self.threads,
             prune: self.prune,
+            deadline: deadline_instant(self.deadline_ms),
         };
         match driver.search(layer, acc, &source, &[]) {
             Some(b) => {
                 self.evaluated.set(b.examined);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => {

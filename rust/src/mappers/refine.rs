@@ -9,9 +9,9 @@
 //! [`SearchDriver`] owns the budget, validity filtering, scoring and best
 //! tracking (greedy: only strict improvements move the incumbent).
 
-use super::engine::{BatchSource, Objective, SearchDriver};
+use super::engine::{deadline_instant, BatchSource, Objective, SearchDriver};
 use super::local::LocalMapper;
-use super::{MapError, Mapper};
+use super::{MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::repair;
@@ -32,7 +32,10 @@ pub struct LocalRefined {
     pub seed: u64,
     /// The objective being climbed.
     pub objective: Objective,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
+    degraded: Cell<bool>,
 }
 
 impl LocalRefined {
@@ -44,7 +47,9 @@ impl LocalRefined {
             patience: budget / 3 + 1,
             seed,
             objective: Objective::Energy,
+            deadline_ms: None,
             evaluated: Cell::new(0),
+            degraded: Cell::new(false),
         }
     }
 
@@ -52,6 +57,7 @@ impl LocalRefined {
     pub fn from_params(params: &super::SearchParams) -> Self {
         let mut m = Self::new(params.budget, params.seed);
         m.objective = params.objective;
+        m.deadline_ms = params.deadline_ms;
         m
     }
 
@@ -187,7 +193,16 @@ impl Mapper for LocalRefined {
         self.evaluated.get()
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let seed_mapping =
             LocalMapper::new().with_objective(self.objective).map(layer, acc)?;
         let mut climb = Climb {
@@ -210,11 +225,13 @@ impl Mapper for LocalRefined {
             budget: self.budget.saturating_mul(4).saturating_add(8),
             threads: 1,
             prune: false,
+            deadline: deadline_instant(self.deadline_ms),
         };
         match driver.search_batched(layer, acc, &mut climb) {
             Some(b) => {
                 // + LOCAL's own two-candidate schedule comparison.
                 self.evaluated.set(b.scored + 2);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => Err(MapError::NoValidMapping("refinement seed failed validation".into())),

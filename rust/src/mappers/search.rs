@@ -16,8 +16,8 @@
 //! Turbo-Charged-Mapper move — which never changes the selected mapping
 //! (`prop_pruned_constrained_search_is_bit_identical`).
 
-use super::engine::{Objective, RandomStream, SearchDriver};
-use super::{MapError, Mapper};
+use super::engine::{deadline_instant, Objective, RandomStream, SearchDriver};
+use super::{MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
 use crate::mapspace::Dataflow;
@@ -40,8 +40,11 @@ pub struct ConstrainedSearch {
     /// Bound-based pruning (on by default; never changes the selected
     /// mapping, only cuts evaluations).
     pub prune: bool,
+    /// Per-layer wall-clock deadline, ms (`None` = unbounded).
+    pub deadline_ms: Option<u64>,
     evaluated: Cell<u64>,
     pruned: Cell<u64>,
+    degraded: Cell<bool>,
 }
 
 impl ConstrainedSearch {
@@ -55,8 +58,10 @@ impl ConstrainedSearch {
             objective: Objective::Energy,
             threads: 1,
             prune: true,
+            deadline_ms: None,
             evaluated: Cell::new(0),
             pruned: Cell::new(0),
+            degraded: Cell::new(false),
         }
     }
 
@@ -66,6 +71,7 @@ impl ConstrainedSearch {
         s.objective = params.objective;
         s.threads = params.threads.max(1);
         s.prune = params.prune;
+        s.deadline_ms = params.deadline_ms;
         s
     }
 
@@ -112,7 +118,16 @@ impl Mapper for ConstrainedSearch {
         self.evaluated.get()
     }
 
+    fn status(&self) -> MapStatus {
+        if self.degraded.get() {
+            MapStatus::Degraded { reason: "deadline expired mid-search".into() }
+        } else {
+            MapStatus::Ok
+        }
+    }
+
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
         let source = RandomStream::new(layer, acc, self.seed, self.budget)
             .constrained(self.dataflow.constraints());
         let driver = SearchDriver {
@@ -120,6 +135,7 @@ impl Mapper for ConstrainedSearch {
             budget: self.budget,
             threads: self.threads,
             prune: self.prune,
+            deadline: deadline_instant(self.deadline_ms),
         };
         // No warm-start seed here: the candidate set must stay inside the
         // dataflow's subspace (an imprinted draw can still fail validation;
@@ -128,6 +144,7 @@ impl Mapper for ConstrainedSearch {
             Some(b) => {
                 self.evaluated.set(b.examined);
                 self.pruned.set(b.pruned);
+                self.degraded.set(b.degraded);
                 Ok(b.mapping)
             }
             None => {

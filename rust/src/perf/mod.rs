@@ -410,7 +410,13 @@ fn bound_case(
     budget: u64,
     oracle_seed: bool,
 ) -> BoundCase {
-    let full = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: false };
+    let full = SearchDriver {
+        objective: Objective::Energy,
+        budget,
+        threads: 1,
+        prune: false,
+        deadline: None,
+    };
     let odometer = OdometerSource::new(layer, acc, true);
     let t0 = Instant::now();
     let base = full.search(layer, acc, &odometer, &[]).expect("unpruned search maps the layer");

@@ -204,7 +204,15 @@ pub fn render_fig7_panel(panel: &Fig7Panel, acc: &Accelerator) -> Table {
 /// `map` and `compile` subcommands print in table mode).
 pub fn render_layer_reports(net: &crate::api::NetworkReport) -> Table {
     let mut t = Table::new(vec![
-        "layer", "MACs", "energy (µJ)", "pJ/MAC", "util", "latency (cyc)", "map time", "cached",
+        "layer",
+        "MACs",
+        "energy (µJ)",
+        "pJ/MAC",
+        "util",
+        "latency (cyc)",
+        "map time",
+        "cached",
+        "status",
     ]);
     for l in &net.layers {
         t.row(vec![
@@ -216,6 +224,7 @@ pub fn render_layer_reports(net: &crate::api::NetworkReport) -> Table {
             l.latency_cycles().to_string(),
             crate::util::bench::fmt_duration(l.outcome.elapsed),
             if l.cached { "yes" } else { "no" }.into(),
+            l.outcome.status.kind().into(),
         ]);
     }
     t

@@ -32,8 +32,17 @@ fn help_lists_subcommands() {
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
-    // The search-engine and output flags are documented.
-    for flag in ["--objective", "--search-threads", "--no-prune", "--certify", "--format"] {
+    // The search-engine, robustness and output flags are documented.
+    for flag in [
+        "--objective",
+        "--search-threads",
+        "--no-prune",
+        "--certify",
+        "--format",
+        "--deadline-ms",
+        "--fail-fast",
+        "--inject-fault",
+    ] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
 }
@@ -293,7 +302,7 @@ fn explore_prints_pareto() {
 /// The exact top-level key order of an `"api_v1"` compile document. Key
 /// order is part of the output contract (byte-stable across runs); any
 /// reordering is a schema change and must bump the tag.
-const COMPILE_KEYS: [&str; 10] = [
+const COMPILE_KEYS: [&str; 11] = [
     "schema",
     "kind",
     "workload",
@@ -303,10 +312,11 @@ const COMPILE_KEYS: [&str; 10] = [
     "networks",
     "totals",
     "cache",
+    "failures",
     "compile_time_ms",
 ];
 
-const LAYER_KEYS: [&str; 13] = [
+const LAYER_KEYS: [&str; 14] = [
     "name",
     "op",
     "macs",
@@ -319,6 +329,7 @@ const LAYER_KEYS: [&str; 13] = [
     "score",
     "cached",
     "certified",
+    "status",
     "mapping",
 ];
 
@@ -330,6 +341,15 @@ fn assert_compile_skeleton(doc: &Json) {
         assert_eq!(net.keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
         for layer in net.get("layers").unwrap().as_arr().unwrap() {
             assert_eq!(layer.keys(), LAYER_KEYS.to_vec());
+            // Both status keys are always present; the kind is one of the
+            // three stable discriminators.
+            let status = layer.get("status").unwrap();
+            assert_eq!(status.keys(), vec!["kind", "reason"]);
+            let kind = status.get("kind").unwrap().as_str().unwrap();
+            assert!(
+                matches!(kind, "ok" | "degraded" | "fell_back"),
+                "unknown status kind {kind}"
+            );
             assert_eq!(
                 layer.get("mapping").unwrap().keys(),
                 vec!["temporal", "permutation", "spatial_x", "spatial_y"]
@@ -530,4 +550,116 @@ fn run_errors_cleanly_without_artifacts() {
     let (_, stderr, code) = run(&["run", "--artifacts", "/nonexistent/dir"]);
     assert_eq!(code, 4, "{stderr}");
     assert!(stderr.contains("error[E_RUNTIME]"), "{stderr}");
+}
+
+/// The layers of a compile document's first network.
+fn first_network_layers(doc: &Json) -> Vec<Json> {
+    doc.get("networks").unwrap().as_arr().unwrap()[0]
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .to_vec()
+}
+
+/// A layer object minus the members that legitimately vary across runs
+/// (measured wall-clock, cache state), for bit-identity comparisons.
+fn layer_identity(layer: &Json) -> Vec<(String, Json)> {
+    match layer {
+        Json::Obj(members) => members
+            .iter()
+            .filter(|(k, _)| k != "map_time_ms" && k != "cached")
+            .cloned()
+            .collect(),
+        _ => panic!("layer is not an object"),
+    }
+}
+
+#[test]
+fn injected_panic_is_contained_and_other_layers_are_bit_identical() {
+    // The acceptance property: `--inject-fault panic:<i>` must exit 0,
+    // report layer i as fell_back with a valid LOCAL mapping, and leave
+    // every other layer bit-identical (mapping, scores, tie-breaks) to
+    // the fault-free run — only wall-clock values may differ.
+    let base = ["compile", "--network", "alexnet", "--threads", "2", "--format", "json"];
+    let (clean, stderr, code) = run(&base);
+    assert_eq!(code, 0, "{stderr}");
+    let clean_layers = first_network_layers(&parse(&clean).expect("clean JSON parses"));
+    assert_eq!(clean_layers.len(), 5);
+    for i in [0usize, 2, 4] {
+        let spec = format!("panic:{i}");
+        let mut args: Vec<&str> = base.to_vec();
+        args.extend(["--inject-fault", &spec]);
+        let (out, stderr, code) = run(&args);
+        assert_eq!(code, 0, "panic:{i}: {stderr}");
+        let doc = parse(&out).expect("faulted JSON parses");
+        assert_compile_skeleton(&doc);
+        // A contained panic is a degradation, not a hard failure.
+        assert!(doc.get("failures").unwrap().as_arr().unwrap().is_empty(), "panic:{i}");
+        let layers = first_network_layers(&doc);
+        assert_eq!(layers.len(), clean_layers.len());
+        for (j, (got, want)) in layers.iter().zip(&clean_layers).enumerate() {
+            let status = got.get("status").unwrap();
+            if j == i {
+                assert_eq!(
+                    status.get("kind").unwrap().as_str(),
+                    Some("fell_back"),
+                    "panic:{i}: {out}"
+                );
+                assert!(
+                    status.get("reason").unwrap().as_str().unwrap().contains("panic"),
+                    "panic:{i}: {out}"
+                );
+                // The LOCAL fallback still produced a full mapping.
+                let mapping = got.get("mapping").unwrap();
+                assert!(!mapping.get("temporal").unwrap().as_arr().unwrap().is_empty());
+                assert!(got.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+            } else {
+                assert_eq!(
+                    layer_identity(got),
+                    layer_identity(want),
+                    "panic:{i} perturbed layer {j}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn deadline_zero_falls_back_to_local_on_every_layer() {
+    // An already-expired deadline means no search mapper can even start:
+    // every layer must degrade to the O(1) LOCAL fallback — valid
+    // mappings, fell_back status, exit 0, no hard failures.
+    let (out, stderr, code) = run(&[
+        "compile", "--network", "alexnet", "--mapper", "rs", "--budget", "50",
+        "--deadline-ms", "0", "--format", "json",
+    ]);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&out).expect("deadline JSON parses");
+    assert_compile_skeleton(&doc);
+    assert!(doc.get("failures").unwrap().as_arr().unwrap().is_empty());
+    let layers = first_network_layers(&doc);
+    assert_eq!(layers.len(), 5);
+    for l in &layers {
+        assert_eq!(
+            l.get("status").unwrap().get("kind").unwrap().as_str(),
+            Some("fell_back"),
+            "{out}"
+        );
+        assert!(!l.get("mapping").unwrap().get("temporal").unwrap().as_arr().unwrap().is_empty());
+        assert!(l.get("energy_uj").unwrap().as_f64().unwrap() > 0.0);
+    }
+    // A malformed deadline is a usage error.
+    let (_, stderr, code) = run(&["map", "--deadline-ms", "soon"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("deadline-ms"), "{stderr}");
+}
+
+#[test]
+fn bad_inject_fault_spec_is_a_usage_error() {
+    let (_, stderr, code) =
+        run(&["compile", "--network", "alexnet", "--inject-fault", "melt:1"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
+    assert!(stderr.contains("melt"), "{stderr}");
 }

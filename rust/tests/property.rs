@@ -238,13 +238,24 @@ fn prop_pruned_search_preserves_the_tiebreak_index() {
     let layer = zoo::vgg02()[4].clone();
     let source = OdometerSource::new(&layer, &acc, true);
     let seed = LocalMapper::new().map(&layer, &acc).unwrap();
-    let serial =
-        SearchDriver { objective: Objective::Energy, budget: 5_000, threads: 1, prune: false };
+    let serial = SearchDriver {
+        objective: Objective::Energy,
+        budget: 5_000,
+        threads: 1,
+        prune: false,
+        deadline: None,
+    };
     let base = serial.search(&layer, &acc, &source, std::slice::from_ref(&seed)).unwrap();
     for (threads, prune) in [(1, true), (4, false), (4, true)] {
-        let out = SearchDriver { objective: Objective::Energy, budget: 5_000, threads, prune }
-            .search(&layer, &acc, &source, std::slice::from_ref(&seed))
-            .unwrap();
+        let out = SearchDriver {
+            objective: Objective::Energy,
+            budget: 5_000,
+            threads,
+            prune,
+            deadline: None,
+        }
+        .search(&layer, &acc, &source, std::slice::from_ref(&seed))
+        .unwrap();
         assert_eq!(out.mapping, base.mapping, "threads={threads} prune={prune}");
         assert_eq!(out.score.to_bits(), base.score.to_bits());
         assert_eq!(out.index, base.index, "threads={threads} prune={prune}");
@@ -671,11 +682,11 @@ fn prop_branch_and_bound_bit_identical_to_unpruned_exhaustive() {
     let odometer = OdometerSource::new(&layer, &acc, true);
     let lattice = BoundedLattice::new(&layer, &acc, true);
     for objective in Objective::ALL {
-        let base = SearchDriver { objective, budget, threads: 1, prune: false }
+        let base = SearchDriver { objective, budget, threads: 1, prune: false, deadline: None }
             .search(&layer, &acc, &odometer, &[])
             .unwrap();
         for threads in [1usize, 2, 4, 8] {
-            let driver = SearchDriver { objective, budget, threads, prune: true };
+            let driver = SearchDriver { objective, budget, threads, prune: true, deadline: None };
             let (bnb, certified) = driver.branch_and_bound(&layer, &acc, &lattice, &[]);
             let bnb = bnb.unwrap();
             assert!(!certified, "a 3k budget cannot cover conv5's space");
@@ -705,11 +716,23 @@ fn prop_certified_bnb_examines_at_most_a_tenth_of_exhaustive() {
     let budget = 20_000u64;
     for acc in presets::all() {
         let odometer = OdometerSource::new(&layer, &acc, true);
-        let base = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: false }
-            .search(&layer, &acc, &odometer, &[])
-            .unwrap();
+        let base = SearchDriver {
+            objective: Objective::Energy,
+            budget,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        }
+        .search(&layer, &acc, &odometer, &[])
+        .unwrap();
         let lattice = BoundedLattice::new(&layer, &acc, true);
-        let driver = SearchDriver { objective: Objective::Energy, budget, threads: 1, prune: true };
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget,
+            threads: 1,
+            prune: true,
+            deadline: None,
+        };
         let (bnb, _certified) =
             driver.branch_and_bound(&layer, &acc, &lattice, std::slice::from_ref(&base.mapping));
         let bnb = bnb.unwrap();
@@ -751,14 +774,25 @@ fn prop_certified_bnb_is_provably_optimal_on_a_covered_space() {
     let layer = ConvLayer::new("prop-bnb-tiny", 4, 2, 1, 1, 4, 2);
     let space = lattice_subtree_blocks(&layer, &acc, 0) * 7;
     let odometer = OdometerSource::new(&layer, &acc, true);
-    let base = SearchDriver { objective: Objective::Energy, budget: space, threads: 1, prune: false }
-        .search(&layer, &acc, &odometer, &[])
-        .unwrap();
+    let base = SearchDriver {
+        objective: Objective::Energy,
+        budget: space,
+        threads: 1,
+        prune: false,
+        deadline: None,
+    }
+    .search(&layer, &acc, &odometer, &[])
+    .unwrap();
     assert_eq!(base.examined, space, "baseline must enumerate the whole space");
     let lattice = BoundedLattice::new(&layer, &acc, true);
     for threads in [1usize, 2, 4, 8] {
-        let driver =
-            SearchDriver { objective: Objective::Energy, budget: space, threads, prune: true };
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: space,
+            threads,
+            prune: true,
+            deadline: None,
+        };
         let (bnb, certified) = driver.branch_and_bound(&layer, &acc, &lattice, &[]);
         let bnb = bnb.unwrap();
         assert!(certified, "t={threads}: full-space budget must certify");
