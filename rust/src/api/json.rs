@@ -167,6 +167,13 @@ pub fn compile_report(r: &CompileReport) -> String {
         jms(r.p50_service),
         jms(r.p99_service)
     ));
+    s.push_str(&format!(
+        "  \"warm\": {{\"policy\": \"{}\", \"seeded\": {}, \"seed_quality\": {}, \"incremental_reused\": {}}},\n",
+        r.seed_policy.name(),
+        r.warm_seeded,
+        jf(r.seed_quality),
+        r.incremental_reused
+    ));
     if r.failures.is_empty() {
         s.push_str("  \"failures\": [],\n");
     } else {
@@ -274,6 +281,56 @@ pub fn explore_report(r: &ExploreReport) -> String {
     s.push_str("  ]\n");
     s.push_str("}\n");
     s
+}
+
+/// Parse a layer's `"mapping"` object (as emitted by [`compile_report`])
+/// back into a typed [`Mapping`]. Returns `None` on any structural
+/// mismatch — wrong arity, unknown dimension letters, non-integer factors
+/// — so callers treat unparsable donors as cache misses, not errors.
+pub fn parse_mapping(v: &Json) -> Option<Mapping> {
+    fn factors7(v: &Json) -> Option<[u64; 7]> {
+        let arr = v.as_arr()?;
+        if arr.len() != 7 {
+            return None;
+        }
+        let mut out = [0u64; 7];
+        for (slot, item) in out.iter_mut().zip(arr) {
+            *slot = item.as_u64()?;
+        }
+        Some(out)
+    }
+    fn permutation7(v: &Json) -> Option<crate::mapping::Permutation> {
+        let s = v.as_str()?;
+        if s.chars().count() != 7 {
+            return None;
+        }
+        let mut out = [crate::workload::Dim::N; 7];
+        for (slot, c) in out.iter_mut().zip(s.chars()) {
+            *slot = crate::workload::Dim::parse(&c.to_string())?;
+        }
+        Some(out)
+    }
+    let temporal: Vec<[u64; 7]> = v
+        .get("temporal")?
+        .as_arr()?
+        .iter()
+        .map(factors7)
+        .collect::<Option<Vec<_>>>()?;
+    let permutation: Vec<crate::mapping::Permutation> = v
+        .get("permutation")?
+        .as_arr()?
+        .iter()
+        .map(permutation7)
+        .collect::<Option<Vec<_>>>()?;
+    if temporal.is_empty() || permutation.len() != temporal.len() {
+        return None;
+    }
+    Some(Mapping {
+        temporal,
+        permutation,
+        spatial_x: factors7(v.get("spatial_x")?)?,
+        spatial_y: factors7(v.get("spatial_y")?)?,
+    })
 }
 
 // --------------------------------------------------------------- parsing
@@ -652,10 +709,15 @@ mod tests {
                 "networks",
                 "totals",
                 "cache",
+                "warm",
                 "failures",
                 "compile_time_ms"
             ]
         );
+        let warm = v.get("warm").unwrap();
+        assert_eq!(warm.keys(), vec!["policy", "seeded", "seed_quality", "incremental_reused"]);
+        assert_eq!(warm.get("policy").unwrap().as_str(), Some("adapt"));
+        assert_eq!(warm.get("incremental_reused").unwrap().as_u64(), Some(0));
         assert!(v.get("failures").unwrap().as_arr().unwrap().is_empty());
         let nets = v.get("networks").unwrap().as_arr().unwrap();
         assert_eq!(nets.len(), 1);
@@ -702,6 +764,32 @@ mod tests {
             totals.get("latency_cycles").unwrap().as_u64(),
             Some(r.total_latency_cycles())
         );
+    }
+
+    #[test]
+    fn mappings_round_trip_through_the_document() {
+        let session = Session::new();
+        let r = session
+            .compile(&CompileRequest::new().network("alexnet").threads(1))
+            .unwrap();
+        let v = parse(&compile_report(&r)).unwrap();
+        let layers = v.get("networks").unwrap().as_arr().unwrap()[0]
+            .get("layers")
+            .unwrap()
+            .as_arr()
+            .unwrap();
+        for (l, typed) in layers.iter().zip(&r.networks[0].layers) {
+            let m = parse_mapping(l.get("mapping").unwrap()).expect("mapping parses");
+            assert_eq!(m, typed.outcome.mapping);
+        }
+        // Structural junk degrades to None, never a panic.
+        for bad in [
+            r#"{"temporal": [], "permutation": [], "spatial_x": [1,1,1,1,1,1,1], "spatial_y": [1,1,1,1,1,1,1]}"#,
+            r#"{"temporal": [[1,1,1,1,1,1,1]], "permutation": ["NMCRSPQX"], "spatial_x": [1,1,1,1,1,1,1], "spatial_y": [1,1,1,1,1,1,1]}"#,
+            r#"{"temporal": [[1,1,1]], "permutation": ["NMCRSPQ"], "spatial_x": [1,1,1,1,1,1,1], "spatial_y": [1,1,1,1,1,1,1]}"#,
+        ] {
+            assert_eq!(parse_mapping(&parse(bad).unwrap()), None, "{bad}");
+        }
     }
 
     #[test]

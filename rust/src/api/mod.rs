@@ -44,6 +44,7 @@ pub mod json;
 pub mod request;
 pub mod session;
 
+pub use crate::coordinator::SeedPolicy;
 pub use request::{ArchSpec, CompileRequest, WorkloadSpec};
 pub use session::{
     CompileReport, ExploreReport, LayerReport, LayerStream, NetworkReport, Session,
@@ -110,6 +111,9 @@ pub enum Error {
     Map(MapError),
     /// PJRT runtime failure ([`crate::runtime::RuntimeError`]).
     Runtime(RuntimeError),
+    /// A JSON document named by the request failed to parse (e.g. the
+    /// donor report for `--recompile-from`).
+    Json(json::JsonError),
     /// Filesystem I/O failure on a path named by the request.
     Io {
         /// The path being read or written.
@@ -143,6 +147,7 @@ impl Error {
             Error::Map(MapError::Panicked(_)) => "E_PANIC",
             Error::Map(_) => "E_SEARCH",
             Error::Runtime(_) => "E_RUNTIME",
+            Error::Json(_) => "E_JSON",
             Error::Io { .. } => "E_IO",
         }
     }
@@ -151,9 +156,11 @@ impl Error {
     pub fn class(&self) -> ErrorClass {
         match self {
             Error::Request(_) => ErrorClass::Usage,
-            Error::Workload(_) | Error::Config(_) | Error::Yaml(_) | Error::Io { .. } => {
-                ErrorClass::InvalidInput
-            }
+            Error::Workload(_)
+            | Error::Config(_)
+            | Error::Yaml(_)
+            | Error::Json(_)
+            | Error::Io { .. } => ErrorClass::InvalidInput,
             Error::Mapping(_) | Error::Map(_) | Error::Runtime(_) => ErrorClass::Failure,
         }
     }
@@ -169,6 +176,7 @@ impl fmt::Display for Error {
             Error::Mapping(e) => fmt::Display::fmt(e, f),
             Error::Map(e) => fmt::Display::fmt(e, f),
             Error::Runtime(e) => fmt::Display::fmt(e, f),
+            Error::Json(e) => fmt::Display::fmt(e, f),
             Error::Io { path, source } => write!(f, "io: {path}: {source}"),
         }
     }
@@ -184,6 +192,7 @@ impl std::error::Error for Error {
             Error::Mapping(e) => Some(e),
             Error::Map(e) => Some(e),
             Error::Runtime(e) => Some(e),
+            Error::Json(e) => Some(e),
             Error::Io { source, .. } => Some(source),
         }
     }
@@ -225,6 +234,12 @@ impl From<RuntimeError> for Error {
     }
 }
 
+impl From<json::JsonError> for Error {
+    fn from(e: json::JsonError) -> Self {
+        Error::Json(e)
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -261,6 +276,11 @@ mod tests {
                 4,
             ),
             (Error::from(RuntimeError::msg("x")), "E_RUNTIME", 4),
+            (
+                Error::from(json::JsonError { pos: 0, msg: "x".into() }),
+                "E_JSON",
+                3,
+            ),
             (
                 Error::io("/p", std::io::Error::new(std::io::ErrorKind::NotFound, "x")),
                 "E_IO",

@@ -10,6 +10,7 @@
 
 use super::Error;
 use crate::arch::{config, presets, Accelerator};
+use crate::coordinator::SeedPolicy;
 use crate::mappers::{AnyMapper, Objective, SearchParams};
 use crate::workload::{config as wconfig, zoo, Layer};
 
@@ -68,6 +69,10 @@ pub struct CompileRequest {
     /// collecting it into [`crate::api::CompileReport::failures`] and
     /// compiling the rest (off by default — per-layer isolation).
     pub fail_fast: bool,
+    /// Cross-layer warm-start policy for the mapping service (DESIGN.md
+    /// §15). Defaults to [`SeedPolicy::Adapt`]; `Off` restores the
+    /// bit-for-bit unseeded service behaviour.
+    pub seed_policy: SeedPolicy,
 }
 
 impl Default for CompileRequest {
@@ -79,6 +84,7 @@ impl Default for CompileRequest {
             search: SearchParams::default(),
             threads: 4,
             fail_fast: false,
+            seed_policy: SeedPolicy::default(),
         }
     }
 }
@@ -207,6 +213,13 @@ impl CompileRequest {
     /// the report's `failures` list.
     pub fn fail_fast(mut self, fail_fast: bool) -> Self {
         self.fail_fast = fail_fast;
+        self
+    }
+
+    /// Set the cross-layer warm-start policy ([`SeedPolicy::Off`] restores
+    /// the bit-for-bit unseeded service behaviour).
+    pub fn seed_policy(mut self, policy: SeedPolicy) -> Self {
+        self.seed_policy = policy;
         self
     }
 

@@ -15,16 +15,20 @@
 //! tile-pipeline simulator and the co-design sweep behind the same
 //! request/report surface.
 
+use super::json::{self, Json};
 use super::request::{CompileRequest, ResolvedRequest};
 use super::Error;
 use crate::arch::Accelerator;
-use crate::coordinator::{JobHandle, MappingService, ServiceMetrics};
+use crate::coordinator::{JobHandle, MappingService, SeedPolicy, ServiceMetrics};
 use crate::explore::{self, DesignResult, SweepGrid};
-use crate::mappers::{MapError, MapOutcome, Mapper, Objective};
+use crate::mapping::Mapping;
+use crate::mappers::{MapError, MapOutcome, MapStatus, Mapper, Objective};
+use crate::model::EvalContext;
 use crate::noc::{self, MeshTraffic};
 use crate::sim::{self, SimOptions, SimResult};
 use crate::workload::Layer;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
@@ -48,6 +52,7 @@ struct ServiceKey {
     certify: bool,
     deadline_ms: Option<u64>,
     workers: usize,
+    seed_policy: SeedPolicy,
 }
 
 /// FNV-1a over a byte string (stable fingerprint for [`ServiceKey`]).
@@ -74,6 +79,7 @@ impl ServiceKey {
             certify: req.search.certify,
             deadline_ms: req.search.deadline_ms,
             workers: resolved.threads,
+            seed_policy: req.seed_policy,
         }
     }
 }
@@ -213,6 +219,17 @@ pub struct CompileReport {
     pub p50_service: Duration,
     /// 99th-percentile service time over the same window.
     pub p99_service: Duration,
+    /// The cross-layer warm-start policy the request ran under.
+    pub seed_policy: SeedPolicy,
+    /// Cache misses in this request whose mapper run was warm-seeded from
+    /// a similar shape's adapted mapping (DESIGN.md §15).
+    pub warm_seeded: u64,
+    /// Mean seed-hit quality over this request's warm-seeded layers (final
+    /// score as a fraction of the seed's; 0 when nothing was seeded).
+    pub seed_quality: f64,
+    /// Layers reused verbatim from a previous report by
+    /// [`Session::recompile`] (always 0 on ordinary compiles).
+    pub incremental_reused: u64,
 }
 
 impl CompileReport {
@@ -323,6 +340,11 @@ pub struct SessionMetrics {
     pub fallbacks: u64,
     /// Dead worker threads respawned by the service supervisors.
     pub respawns: u64,
+    /// Cache misses whose mapper run was warm-seeded from a similar
+    /// shape's adapted mapping (DESIGN.md §15).
+    pub warm_seeded: u64,
+    /// Layers reused verbatim across [`Session::recompile`] calls.
+    pub incremental_reused: u64,
 }
 
 impl SessionMetrics {
@@ -377,6 +399,19 @@ impl std::fmt::Debug for LayerStream<'_> {
 /// Handles for one submitted network: `(layer, reply handle)` per layer.
 type NetworkHandles = Vec<(Layer, JobHandle)>;
 
+/// Warm-start counters attributable to one request: the delta between the
+/// service's live counters (final once every submitted reply has been
+/// collected) and the pre-submission snapshot.
+fn warm_delta(metrics: &ServiceMetrics, warm0: (u64, u64)) -> (u64, f64) {
+    let seeded = metrics.warm_seeded.load(Ordering::Relaxed).saturating_sub(warm0.0);
+    if seeded == 0 {
+        return (0, 0.0);
+    }
+    let quality_milli =
+        metrics.seed_quality_milli.load(Ordering::Relaxed).saturating_sub(warm0.1);
+    (seeded, quality_milli as f64 / (seeded as f64 * 1000.0))
+}
+
 /// Attach network/layer context to a service-side mapping failure.
 fn layer_error(network: &str, layer: &str, e: MapError) -> Error {
     Error::Map(match e {
@@ -393,6 +428,9 @@ fn layer_error(network: &str, layer: &str, e: MapError) -> Error {
 /// reports. See the [module docs](self) for the lifecycle.
 pub struct Session {
     services: Mutex<HashMap<ServiceKey, Arc<MappingService>>>,
+    /// Layers reused verbatim by [`Session::recompile`] over the session's
+    /// lifetime (aggregated into [`SessionMetrics`]).
+    incremental_reused: AtomicU64,
 }
 
 impl Default for Session {
@@ -412,34 +450,44 @@ impl Session {
     /// An empty session; services start lazily on the first request that
     /// needs them.
     pub fn new() -> Self {
-        Self { services: Mutex::new(HashMap::new()) }
+        Self { services: Mutex::new(HashMap::new()), incremental_reused: AtomicU64::new(0) }
+    }
+
+    /// The service behind a request's [`ServiceKey`], started on first
+    /// use. The session lock is held only for the map lookup/insert.
+    fn service_for(&self, req: &CompileRequest, resolved: &ResolvedRequest) -> Arc<MappingService> {
+        let key = ServiceKey::of(req, resolved);
+        // Poison-tolerant like the cache shards: a caller thread that
+        // panicked between entry and insert leaves the map consistent
+        // (entry/insert never partially apply), so keep serving.
+        let mut guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
+        Arc::clone(guard.entry(key).or_insert_with(|| {
+            Arc::new(MappingService::start_with_policy(
+                resolved.acc.clone(),
+                resolved.mapper.clone(),
+                resolved.threads,
+                req.seed_policy,
+            ))
+        }))
     }
 
     /// Submit every layer of the resolved request to its service, starting
     /// the service if this is the first request under its key. Returns the
-    /// per-network handles plus the service's live metrics. The session
-    /// lock is held only for the map lookup/insert — submission happens on
-    /// a cloned `Arc`, so concurrent compiles against *different* services
-    /// never serialize on each other.
+    /// per-network handles, the service's live metrics, and a pre-submission
+    /// snapshot of the warm-start counters (so the report can attribute
+    /// warm-seeded misses to *this* request on a session-lived service).
+    /// Submission happens on a cloned `Arc`, so concurrent compiles against
+    /// *different* services never serialize on each other.
     fn submit_all(
         &self,
         req: &CompileRequest,
         resolved: &ResolvedRequest,
-    ) -> (Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>) {
-        let key = ServiceKey::of(req, resolved);
-        let svc = {
-            // Poison-tolerant like the cache shards: a caller thread that
-            // panicked between entry and insert leaves the map consistent
-            // (entry/insert never partially apply), so keep serving.
-            let mut guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
-            Arc::clone(guard.entry(key).or_insert_with(|| {
-                Arc::new(MappingService::start(
-                    resolved.acc.clone(),
-                    resolved.mapper.clone(),
-                    resolved.threads,
-                ))
-            }))
-        };
+    ) -> (Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>, (u64, u64)) {
+        let svc = self.service_for(req, resolved);
+        let warm0 = (
+            svc.metrics.warm_seeded.load(Ordering::Relaxed),
+            svc.metrics.seed_quality_milli.load(Ordering::Relaxed),
+        );
         let submitted = resolved
             .networks
             .iter()
@@ -449,7 +497,7 @@ impl Session {
                 (name.clone(), handles)
             })
             .collect();
-        (submitted, Arc::clone(&svc.metrics))
+        (submitted, Arc::clone(&svc.metrics), warm0)
     }
 
     /// Compile a request to a typed [`CompileReport`]. All layers of all
@@ -477,7 +525,7 @@ impl Session {
         let mapper = resolved.mapper.name();
         let objective = resolved.mapper.objective();
         let t0 = Instant::now();
-        let (submitted, metrics) = self.submit_all(req, &resolved);
+        let (submitted, metrics, warm0) = self.submit_all(req, &resolved);
 
         let mut networks = Vec::with_capacity(submitted.len());
         let mut failures: Vec<LayerFailure> = Vec::new();
@@ -526,6 +574,7 @@ impl Session {
         }
 
         let percentiles = metrics.service_time_percentiles(&[0.50, 0.99]);
+        let (warm_seeded, seed_quality) = warm_delta(&metrics, warm0);
         Ok(CompileReport {
             workload,
             acc: resolved.acc,
@@ -538,6 +587,10 @@ impl Session {
             cache_hits,
             p50_service: percentiles[0],
             p99_service: percentiles[1],
+            seed_policy: req.seed_policy,
+            warm_seeded,
+            seed_quality,
+            incremental_reused: 0,
         })
     }
 
@@ -548,7 +601,7 @@ impl Session {
     /// network.
     pub fn compile_iter(&self, req: &CompileRequest) -> Result<LayerStream<'_>, Error> {
         let resolved = req.resolve()?;
-        let (submitted, _) = self.submit_all(req, &resolved);
+        let (submitted, _, _) = self.submit_all(req, &resolved);
         let items: Vec<(String, Layer, JobHandle)> = submitted
             .into_iter()
             .flat_map(|(name, handles)| {
@@ -556,6 +609,176 @@ impl Session {
             })
             .collect();
         Ok(LayerStream { items: items.into_iter(), _session: std::marker::PhantomData })
+    }
+
+    /// Incrementally recompile against a previous compile document
+    /// (parsed api_v1 JSON, e.g. from [`super::json::parse`]): layers whose
+    /// `(network, layer, op)` appear in `prev` with a mapping that still
+    /// validates on the request's accelerator are **reused verbatim** —
+    /// re-evaluated through the analytical model (one evaluation, status
+    /// `ok`, `cached = true`) without ever touching the search — and only
+    /// the changed layers go through the mapping service. The donor
+    /// document must match the request's schema, kind, arch and objective;
+    /// otherwise everything remaps and the call degrades to an ordinary
+    /// compile. [`CompileReport::incremental_reused`] counts the reused
+    /// layers (DESIGN.md §15).
+    pub fn recompile(
+        &self,
+        prev: &Json,
+        req: &CompileRequest,
+    ) -> Result<CompileReport, Error> {
+        let resolved = req.resolve()?;
+        let workload = resolved.workload_label();
+        let mapper_name = resolved.mapper.name();
+        let objective = resolved.mapper.objective();
+        let t0 = Instant::now();
+
+        // Harvest donor mappings. A donor is only trustworthy for the same
+        // arch and objective (a delay-optimal mapping must never be reused
+        // for an energy request); each candidate is re-validated against
+        // the *new* layer below, so a renamed-but-reshaped layer remaps.
+        let donor_ok = prev.get("schema").and_then(Json::as_str) == Some(json::SCHEMA)
+            && prev.get("kind").and_then(Json::as_str) == Some("compile")
+            && prev.get("arch").and_then(Json::as_str) == Some(resolved.acc.name.as_str())
+            && prev.get("objective").and_then(Json::as_str) == Some(objective.name());
+        let mut donors: HashMap<(String, String, String), Mapping> = HashMap::new();
+        if donor_ok {
+            for net in prev.get("networks").and_then(Json::as_arr).unwrap_or(&[]) {
+                let Some(net_name) = net.get("name").and_then(Json::as_str) else { continue };
+                for l in net.get("layers").and_then(Json::as_arr).unwrap_or(&[]) {
+                    if let (Some(name), Some(op), Some(m)) = (
+                        l.get("name").and_then(Json::as_str),
+                        l.get("op").and_then(Json::as_str),
+                        l.get("mapping").and_then(json::parse_mapping),
+                    ) {
+                        donors.insert(
+                            (net_name.to_string(), name.to_string(), op.to_string()),
+                            m,
+                        );
+                    }
+                }
+            }
+        }
+
+        enum Slot {
+            Reused(Box<LayerReport>),
+            Pending(Layer, JobHandle),
+        }
+
+        let svc = self.service_for(req, &resolved);
+        let warm0 = (
+            svc.metrics.warm_seeded.load(Ordering::Relaxed),
+            svc.metrics.seed_quality_milli.load(Ordering::Relaxed),
+        );
+        // First pass: reuse or submit, submitting every changed layer up
+        // front so the pool shards them.
+        let mut reused = 0u64;
+        let mut all: Vec<(String, Vec<Slot>)> = Vec::with_capacity(resolved.networks.len());
+        for (name, layers) in &resolved.networks {
+            let mut slots = Vec::with_capacity(layers.len());
+            for layer in layers {
+                let donor = donors
+                    .get(&(name.clone(), layer.name.clone(), layer.op.name().to_string()))
+                    .filter(|m| m.validate(layer, &resolved.acc).is_ok());
+                match donor {
+                    Some(m) => {
+                        let e0 = Instant::now();
+                        let mut ctx = EvalContext::new(layer, &resolved.acc);
+                        let evaluation = ctx.evaluate_into(m).clone();
+                        let score = objective.score(&evaluation);
+                        reused += 1;
+                        slots.push(Slot::Reused(Box::new(LayerReport {
+                            network: name.clone(),
+                            layer: layer.clone(),
+                            outcome: MapOutcome {
+                                mapping: m.clone(),
+                                evaluation,
+                                evaluations: 1,
+                                elapsed: e0.elapsed(),
+                                objective,
+                                score,
+                                certified: false,
+                                status: MapStatus::Ok,
+                            },
+                            cached: true,
+                        })));
+                    }
+                    None => slots.push(Slot::Pending(layer.clone(), svc.submit(layer.clone()))),
+                }
+            }
+            all.push((name.clone(), slots));
+        }
+
+        // Second pass: collect in order, exactly like an ordinary compile.
+        let mut networks = Vec::with_capacity(all.len());
+        let mut failures: Vec<LayerFailure> = Vec::new();
+        let mut first_error: Option<Error> = None;
+        let mut requests = 0u64;
+        let mut cache_hits = 0u64;
+        for (name, slots) in all {
+            let n0 = Instant::now();
+            let mut layers = Vec::with_capacity(slots.len());
+            for slot in slots {
+                match slot {
+                    Slot::Reused(report) => layers.push(*report),
+                    Slot::Pending(layer, handle) => {
+                        requests += 1;
+                        match handle.wait() {
+                            Ok(reply) => {
+                                if reply.cached {
+                                    cache_hits += 1;
+                                }
+                                layers.push(LayerReport {
+                                    network: name.clone(),
+                                    layer,
+                                    outcome: reply.outcome,
+                                    cached: reply.cached,
+                                });
+                            }
+                            Err(e) => {
+                                let err = layer_error(&name, &layer.name, e);
+                                failures.push(LayerFailure {
+                                    network: name.clone(),
+                                    layer: layer.name.clone(),
+                                    error: err.to_string(),
+                                    code: err.code(),
+                                });
+                                if first_error.is_none() {
+                                    first_error = Some(err);
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            networks.push(NetworkReport { name, layers, compile_time: n0.elapsed() });
+        }
+        if req.fail_fast {
+            if let Some(e) = first_error {
+                return Err(e);
+            }
+        }
+
+        self.incremental_reused.fetch_add(reused, Ordering::Relaxed);
+        let percentiles = svc.metrics.service_time_percentiles(&[0.50, 0.99]);
+        let (warm_seeded, seed_quality) = warm_delta(&svc.metrics, warm0);
+        Ok(CompileReport {
+            workload,
+            acc: resolved.acc,
+            mapper: mapper_name,
+            objective,
+            networks,
+            failures,
+            compile_time: t0.elapsed(),
+            requests,
+            cache_hits,
+            p50_service: percentiles[0],
+            p99_service: percentiles[1],
+            seed_policy: req.seed_policy,
+            warm_seeded,
+            seed_quality,
+            incremental_reused: reused,
+        })
     }
 
     /// Map a single-layer request through the session (warm-cache
@@ -623,7 +846,6 @@ impl Session {
 
     /// Aggregate counters over every service this session has started.
     pub fn metrics(&self) -> SessionMetrics {
-        use std::sync::atomic::Ordering;
         // Metrics are read-only over atomics; a poisoned map is still safe
         // to aggregate from.
         let guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
@@ -635,6 +857,8 @@ impl Session {
             panics: 0,
             fallbacks: 0,
             respawns: 0,
+            warm_seeded: 0,
+            incremental_reused: self.incremental_reused.load(Ordering::Relaxed),
         };
         for svc in guard.values() {
             m.requests += svc.metrics.requests.load(Ordering::Relaxed);
@@ -643,6 +867,7 @@ impl Session {
             m.panics += svc.metrics.panics.load(Ordering::Relaxed);
             m.fallbacks += svc.metrics.fallbacks.load(Ordering::Relaxed);
             m.respawns += svc.metrics.respawns.load(Ordering::Relaxed);
+            m.warm_seeded += svc.metrics.warm_seeded.load(Ordering::Relaxed);
         }
         m
     }
@@ -772,6 +997,47 @@ mod tests {
         assert_eq!(r.results.len(), 2);
         assert!(!r.front.is_empty());
         assert_eq!(r.network, "alexnet");
+    }
+
+    #[test]
+    fn recompile_reuses_every_unchanged_layer() {
+        // bert through one session: the second pass arrives as a previous
+        // api_v1 document and every one of the 96 layers is reused without
+        // touching the service queue.
+        let session = Session::new();
+        let req = quick("bert").threads(1);
+        let first = session.compile(&req).unwrap();
+        assert_eq!(first.total_layers(), 96);
+        assert_eq!(first.incremental_reused, 0);
+        let doc = crate::api::json::parse(&crate::api::json::compile_report(&first)).unwrap();
+        let second = session.recompile(&doc, &req).unwrap();
+        assert_eq!(second.incremental_reused, 96);
+        assert_eq!(second.requests, 0, "reused layers must not hit the service");
+        assert_eq!(second.total_layers(), 96);
+        for (a, b) in first.networks[0].layers.iter().zip(&second.networks[0].layers) {
+            assert_eq!(a.outcome.mapping, b.outcome.mapping);
+            assert_eq!(a.outcome.score, b.outcome.score);
+            assert!(b.cached);
+        }
+        assert_eq!(session.metrics().incremental_reused, 96);
+    }
+
+    #[test]
+    fn recompile_remaps_changed_layers_only() {
+        // Donate alexnet's document to a vgg02 request: nothing matches,
+        // so everything remaps (a degraded-to-full compile, not an error).
+        let session = Session::new();
+        let donor = session.compile(&quick("alexnet").threads(1)).unwrap();
+        let doc = crate::api::json::parse(&crate::api::json::compile_report(&donor)).unwrap();
+        let r = session.recompile(&doc, &quick("vgg02").threads(1)).unwrap();
+        assert_eq!(r.incremental_reused, 0);
+        assert_eq!(r.total_layers(), 8);
+        assert_eq!(r.requests, 8);
+        // A mismatched objective also disqualifies the donor wholesale.
+        let delay = quick("alexnet").threads(1).objective(Objective::Delay);
+        let r = session.recompile(&doc, &delay).unwrap();
+        assert_eq!(r.incremental_reused, 0);
+        assert_eq!(r.total_layers(), 5);
     }
 
     #[test]

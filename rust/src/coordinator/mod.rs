@@ -15,8 +15,10 @@
 //! the `compile-all` CLI subcommand in production form.
 
 pub mod service;
+pub mod similarity;
 
 pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
+pub use similarity::{adapt_mapping, SeedPolicy, SimilarityIndex, SEED_DISTANCE_MAX};
 
 use crate::arch::Accelerator;
 use crate::mappers::{MapError, MapOutcome, Mapper, Objective};
@@ -271,8 +273,11 @@ where
         }
     }
 
-    // Parallel map over unique shapes.
-    let results: Mutex<HashMap<LayerKey, Result<MapOutcome, String>>> = Mutex::new(HashMap::new());
+    // Parallel map over unique shapes. Errors stay typed end to end
+    // ([`MapError`], not rendered strings); they are given layer context
+    // at the assembly boundary below.
+    let results: Mutex<HashMap<LayerKey, Result<MapOutcome, MapError>>> =
+        Mutex::new(HashMap::new());
     let next: std::sync::atomic::AtomicUsize = std::sync::atomic::AtomicUsize::new(0);
     std::thread::scope(|scope| {
         for _ in 0..threads.min(unique.len().max(1)) {
@@ -286,7 +291,7 @@ where
                     break;
                 }
                 let (key, layer) = &unique[i];
-                let out = mapper.run(layer, acc).map_err(|e| e.to_string());
+                let out = mapper.run(layer, acc);
                 results.lock().unwrap().insert(key.clone(), out);
             });
         }
@@ -356,6 +361,12 @@ pub struct BatchPlan {
     pub p50_service: Duration,
     /// 99th-percentile in-service time per request.
     pub p99_service: Duration,
+    /// Cache misses that ran warm-seeded from a similar shape's adapted
+    /// mapping (DESIGN.md §15).
+    pub warm_seeded: u64,
+    /// Mean seed-hit quality over warm-seeded requests (final score as a
+    /// fraction of the seed's; 0 when nothing was seeded).
+    pub seed_quality: f64,
 }
 
 impl BatchPlan {
@@ -404,8 +415,24 @@ pub fn compile_batch<M>(
 where
     M: Mapper + Clone + Send + 'static,
 {
+    compile_batch_with_policy(networks, acc, mapper, threads, SeedPolicy::default())
+}
+
+/// [`compile_batch`] with an explicit cross-layer warm-start policy
+/// (DESIGN.md §15) threaded into the underlying service.
+pub fn compile_batch_with_policy<M>(
+    networks: &[(String, Vec<Layer>)],
+    acc: &Accelerator,
+    mapper: &M,
+    threads: usize,
+    policy: SeedPolicy,
+) -> Result<BatchPlan, MapError>
+where
+    M: Mapper + Clone + Send + 'static,
+{
     let t0 = std::time::Instant::now();
-    let svc = MappingService::start(acc.clone(), mapper.clone(), threads.max(1));
+    let svc =
+        MappingService::start_with_policy(acc.clone(), mapper.clone(), threads.max(1), policy);
 
     // Shard: all layers of all networks enter the queue immediately.
     let submitted: Vec<(String, Vec<(Layer, JobHandle)>)> = networks
@@ -466,6 +493,8 @@ where
         cache_hits: metrics.cache_hits.load(ordering),
         p50_service: percentiles[0],
         p99_service: percentiles[1],
+        warm_seeded: metrics.warm_seeded.load(ordering),
+        seed_quality: metrics.seed_quality(),
     })
 }
 

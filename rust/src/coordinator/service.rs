@@ -16,6 +16,15 @@
 //! request is atomic counter bumps plus one relaxed slot store, so metrics
 //! never block the request path.
 //!
+//! On a cache miss the service can additionally **warm-start** the mapper
+//! from the nearest already-mapped shape (DESIGN.md §15): a
+//! [`SimilarityIndex`] over the cached keys finds a same-op neighbour,
+//! [`adapt_mapping`] re-clamps its tiling onto the new bounds, and the
+//! mapper receives the result as a seed whose contract is result-only /
+//! bound-only — seeding can cut evaluations but never change or worsen
+//! the selected mapping. Gated by [`SeedPolicy`] and by
+//! [`Mapper::accepts_seeds`], so LOCAL services pay nothing.
+//!
 //! # Fault isolation (DESIGN.md §14)
 //!
 //! Each request body runs inside a `catch_unwind` boundary: a panicking
@@ -27,9 +36,11 @@
 //! supervises the pool and respawns it. Panics, fallbacks and respawns
 //! are all counted in [`ServiceMetrics`].
 
+use super::similarity::{adapt_mapping, SeedPolicy, SimilarityIndex};
 use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
 use crate::mappers::{LocalMapper, MapError, MapOutcome, MapStatus, Mapper};
+use crate::model::EvalContext;
 use crate::workload::Layer;
 use std::collections::HashMap;
 use std::panic::{catch_unwind, AssertUnwindSafe};
@@ -191,6 +202,13 @@ pub struct ServiceMetrics {
     /// Worker threads respawned by the supervisor after dying to a panic
     /// outside the containment region.
     pub respawns: AtomicU64,
+    /// Cache misses answered by a mapper run that was warm-seeded with a
+    /// mapping adapted from the nearest already-mapped neighbour
+    /// (DESIGN.md §15).
+    pub warm_seeded: AtomicU64,
+    /// Sum over warm-seeded requests of `final_score / seed_score × 1000`
+    /// (milli-units; see [`ServiceMetrics::seed_quality`] for the mean).
+    pub seed_quality_milli: AtomicU64,
     /// Sum of service times, ns (divide by requests for the mean).
     pub service_ns: AtomicU64,
     /// Most recent service times, ns (percentile source; bounded,
@@ -255,6 +273,18 @@ impl ServiceMetrics {
         self.percentile_service_time(0.99)
     }
 
+    /// Mean warm-seed quality: the final score as a fraction of the
+    /// adapted seed's score, averaged over warm-seeded requests. Values
+    /// ≤ 1.0 mean the search ended at or below its seed; 0 before any
+    /// seeded request completes.
+    pub fn seed_quality(&self) -> f64 {
+        let n = self.warm_seeded.load(Ordering::Relaxed);
+        if n == 0 {
+            return 0.0;
+        }
+        self.seed_quality_milli.load(Ordering::Relaxed) as f64 / (n as f64 * 1000.0)
+    }
+
     /// Cache hit rate in `[0, 1]` (0 before any request completes).
     pub fn hit_rate(&self) -> f64 {
         let requests = self.requests.load(Ordering::Relaxed);
@@ -286,6 +316,8 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 fn worker_loop<M: Mapper>(
     rx: Arc<Mutex<mpsc::Receiver<MapRequest>>>,
     cache: Arc<ShardedCache>,
+    index: Arc<Mutex<SimilarityIndex>>,
+    policy: SeedPolicy,
     metrics: Arc<ServiceMetrics>,
     acc: Accelerator,
     mapper: M,
@@ -294,6 +326,10 @@ fn worker_loop<M: Mapper>(
     // (hypothetical) cache shared across services can never serve a
     // delay-optimal mapping to an energy request.
     let objective = mapper.objective();
+    // Warm starts are gated on the policy AND the mapper opting in, so a
+    // LOCAL service (one evaluation per miss — nothing to warm up) pays
+    // neither the index maintenance nor the lookups.
+    let seeding = policy.enabled() && mapper.accepts_seeds();
     loop {
         // Holding the lock only for recv keeps workers independent. A
         // predecessor that died while holding it poisons the mutex; the
@@ -319,9 +355,41 @@ fn worker_loop<M: Mapper>(
         let attempt = catch_unwind(AssertUnwindSafe(|| {
             crate::fault::inject(req.ordinal)?;
             if let Some(outcome) = cache.get(&key) {
-                return Ok((outcome, true));
+                return Ok((outcome, true, None));
             }
-            mapper.run(&req.layer, &acc).map(|outcome| (outcome, false))
+            // Warm start (DESIGN.md §15): adapt the nearest already-mapped
+            // neighbour's mapping into a seed for this miss. The adapted
+            // seed only ever tightens the search (every mapper's seeding
+            // contract is result-only / bound-only), so correctness never
+            // depends on the neighbour actually being similar.
+            let seed = if seeding {
+                let neighbor = {
+                    let idx = index.lock().unwrap_or_else(|p| p.into_inner());
+                    idx.nearest(&key, policy.max_distance()).map(|(k, _)| k.clone())
+                };
+                neighbor
+                    .and_then(|nk| cache.get(&nk))
+                    .and_then(|n| adapt_mapping(&n.mapping, &req.layer, &acc))
+            } else {
+                None
+            };
+            match seed {
+                Some(seed) => {
+                    let mut ctx = EvalContext::new(&req.layer, &acc);
+                    let seed_score = objective.score(ctx.evaluate_into(&seed));
+                    let out =
+                        mapper.run_seeded(&req.layer, &acc, std::slice::from_ref(&seed))?;
+                    // Seed-hit quality: how close the seed already was to
+                    // where the search ended (1000 = the seed itself won).
+                    let ratio_milli = if seed_score > 0.0 {
+                        (objective.score(&out.evaluation) / seed_score * 1000.0) as u64
+                    } else {
+                        1000
+                    };
+                    Ok((out, false, Some(ratio_milli)))
+                }
+                None => mapper.run(&req.layer, &acc).map(|outcome| (outcome, false, None)),
+            }
         }));
         let primary = match attempt {
             Ok(r) => r,
@@ -331,9 +399,16 @@ fn worker_loop<M: Mapper>(
             }
         };
         let (result, cached) = match primary {
-            Ok((outcome, true)) => (Ok(outcome), true),
-            Ok((outcome, false)) => {
-                cache.insert(key, outcome.clone());
+            Ok((outcome, true, _)) => (Ok(outcome), true),
+            Ok((outcome, false, warm)) => {
+                cache.insert(key.clone(), outcome.clone());
+                if seeding {
+                    index.lock().unwrap_or_else(|p| p.into_inner()).insert(key);
+                }
+                if let Some(ratio_milli) = warm {
+                    metrics.warm_seeded.fetch_add(1, Ordering::Relaxed);
+                    metrics.seed_quality_milli.fetch_add(ratio_milli, Ordering::Relaxed);
+                }
                 (Ok(outcome), false)
             }
             // Degradation ladder (DESIGN.md §14): any failure — panic or
@@ -375,14 +450,31 @@ pub struct MappingService {
 }
 
 impl MappingService {
-    /// Spawn the service with `threads` workers.
+    /// Spawn the service with `threads` workers and the default seed
+    /// policy ([`SeedPolicy::Adapt`] — a no-op for mappers that don't
+    /// accept seeds, LOCAL included).
     pub fn start<M>(acc: Accelerator, mapper: M, threads: usize) -> Self
+    where
+        M: Mapper + Clone + Send + 'static,
+    {
+        Self::start_with_policy(acc, mapper, threads, SeedPolicy::default())
+    }
+
+    /// Spawn the service with `threads` workers and an explicit
+    /// cross-layer warm-start policy (DESIGN.md §15).
+    pub fn start_with_policy<M>(
+        acc: Accelerator,
+        mapper: M,
+        threads: usize,
+        policy: SeedPolicy,
+    ) -> Self
     where
         M: Mapper + Clone + Send + 'static,
     {
         let (tx, rx) = mpsc::channel::<MapRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let cache: Arc<ShardedCache> = Arc::new(ShardedCache::new());
+        let index: Arc<Mutex<SimilarityIndex>> = Arc::new(Mutex::new(SimilarityIndex::new()));
         let metrics = Arc::new(ServiceMetrics::default());
         // The prototype mapper sits behind a mutex so the respawner stays
         // `Sync` even for mappers with interior (`Cell`) state.
@@ -392,10 +484,13 @@ impl MappingService {
             Box::new(move || {
                 let rx = Arc::clone(&rx);
                 let cache = Arc::clone(&cache);
+                let index = Arc::clone(&index);
                 let metrics = Arc::clone(&metrics);
                 let acc = acc.clone();
                 let mapper = mapper.lock().unwrap_or_else(|p| p.into_inner()).clone();
-                std::thread::spawn(move || worker_loop(rx, cache, metrics, acc, mapper))
+                std::thread::spawn(move || {
+                    worker_loop(rx, cache, index, policy, metrics, acc, mapper)
+                })
             })
         };
         let workers = (0..threads.max(1)).map(|_| spawn_worker()).collect();
@@ -601,6 +696,72 @@ mod tests {
         assert_eq!(ring.len(), MAX_SAMPLES);
         // The overflow entries overwrote the oldest slots.
         assert!(ring.snapshot().contains(&(MAX_SAMPLES as u64 + 5)));
+    }
+
+    #[test]
+    fn warm_starts_seed_cache_misses_from_neighbours() {
+        use crate::coordinator::SeedPolicy;
+        use crate::mappers::RandomMapper;
+        // One worker makes the miss order deterministic: bert_base has 4
+        // unique shapes — 3 matmuls and 1 elementwise. The first matmul
+        // miss has no neighbour, the other two adapt it (distance ≤ 8);
+        // the elementwise add has no same-op neighbour.
+        let svc = MappingService::start_with_policy(
+            presets::eyeriss(),
+            RandomMapper::new(64, 42),
+            1,
+            SeedPolicy::Adapt,
+        );
+        let replies = svc.map_all(&zoo::bert_base());
+        assert!(replies.iter().all(|r| r.is_ok()));
+        assert_eq!(svc.metrics.warm_seeded.load(Ordering::Relaxed), 2);
+        let q = svc.metrics.seed_quality();
+        assert!(q > 0.0 && q <= 1.0 + 1e-9, "seed quality out of range: {q}");
+        svc.shutdown();
+    }
+
+    #[test]
+    fn seed_policy_off_disables_warm_starts_and_never_changes_results() {
+        use crate::coordinator::SeedPolicy;
+        use crate::mappers::RandomMapper;
+        let seeded = MappingService::start_with_policy(
+            presets::eyeriss(),
+            RandomMapper::new(64, 42),
+            1,
+            SeedPolicy::Adapt,
+        );
+        let cold = MappingService::start_with_policy(
+            presets::eyeriss(),
+            RandomMapper::new(64, 42),
+            1,
+            SeedPolicy::Off,
+        );
+        let warm_replies = seeded.map_all(&zoo::bert_base());
+        let cold_replies = cold.map_all(&zoo::bert_base());
+        assert_eq!(cold.metrics.warm_seeded.load(Ordering::Relaxed), 0);
+        assert_eq!(cold.metrics.seed_quality(), 0.0);
+        // Seeding is result-only: every layer ends at an equal-or-better
+        // objective score than the unseeded service.
+        for (w, c) in warm_replies.iter().zip(&cold_replies) {
+            let (w, c) = (w.as_ref().unwrap(), c.as_ref().unwrap());
+            assert!(
+                w.outcome.evaluation.energy.total_pj()
+                    <= c.outcome.evaluation.energy.total_pj() + 1e-9
+            );
+        }
+        seeded.shutdown();
+        cold.shutdown();
+    }
+
+    #[test]
+    fn local_services_never_pay_for_seeding() {
+        // LOCAL doesn't opt into seeds, so even an Adapt-policy service
+        // keeps warm_seeded at zero (the gate is mapper-side).
+        let svc = MappingService::start(presets::eyeriss(), LocalMapper::new(), 2);
+        let replies = svc.map_all(&zoo::bert_base());
+        assert!(replies.iter().all(|r| r.is_ok()));
+        assert_eq!(svc.metrics.warm_seeded.load(Ordering::Relaxed), 0);
+        svc.shutdown();
     }
 
     #[test]

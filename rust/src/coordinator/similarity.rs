@@ -1,0 +1,390 @@
+//! Cross-layer similarity: the warm-start half of ROADMAP open item 5
+//! (DESIGN.md §15).
+//!
+//! The service cache only hits on *exact* [`LayerKey`] matches, yet real
+//! networks are full of near-clones — BERT's FFN matmuls differ from its
+//! attention matmuls in one dimension, ResNet stages differ in a stride.
+//! This module gives [`super::service::MappingService`] a cheap structural
+//! index over every key it has already mapped:
+//!
+//! * [`features`] — a per-key feature vector: operator kind (categorical,
+//!   exact match required), the seven dimension bounds on a log2 scale,
+//!   and stride/dilation with a heavier weight (a stride change reshapes
+//!   the halo far more than a doubled channel count).
+//! * [`SimilarityIndex`] — linear nearest-neighbor lookup over the mapped
+//!   keys under the weighted-L1 [`distance`]. The zoo tops out at a few
+//!   hundred unique keys per service, so a scan beats any tree here.
+//! * [`adapt_mapping`] — re-clamp a neighbor's tiling factors to the new
+//!   layer's bounds (largest divisor not exceeding the neighbor's factor,
+//!   slot by slot, remainder to DRAM), keeping its permutations and
+//!   spatial policy. Adapting a mapping onto its own layer reproduces it
+//!   exactly; adapting onto a different layer always yields a *valid*
+//!   mapping or `None` (pinned by `prop_adapted_seeds_are_always_valid`).
+//!
+//! The adapted mapping is only ever an engine *seed*: exhaustive/B&B take
+//! it as an external incumbent bound (bit-identical final mapping,
+//! [`crate::mappers::engine::SearchDriver::search_with_bound`]) and
+//! heuristic mappers merge it into their result (never worse than
+//! unseeded), so the warm-start path can change compile cost but never
+//! mapping quality for the worse.
+
+use super::LayerKey;
+use crate::arch::Accelerator;
+use crate::mapping::Mapping;
+use crate::workload::{Layer, OpKind};
+
+/// When the service's warm-start path may seed engine mappers from
+/// similar, already-mapped layers (the `--seed-policy` CLI flag).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum SeedPolicy {
+    /// Never seed and never maintain the index — bit-for-bit the
+    /// pre-warm-start service behavior.
+    Off,
+    /// Seed from the nearest neighbor within [`SEED_DISTANCE_MAX`],
+    /// adapting its mapping to the new layer's bounds (the default).
+    #[default]
+    Adapt,
+    /// Seed only from a zero-distance neighbor. Since the feature vector
+    /// is derived from exactly the fields of [`LayerKey`], a cache *miss*
+    /// can never have a zero-distance neighbor on the same service — this
+    /// policy exists as the debugging floor that exercises the index
+    /// without ever adapting a mapping.
+    Exact,
+}
+
+impl SeedPolicy {
+    /// CLI value set for `--seed-policy`.
+    pub const SPEC: &'static str = "off|adapt|exact";
+
+    /// Parse a CLI value.
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(SeedPolicy::Off),
+            "adapt" => Some(SeedPolicy::Adapt),
+            "exact" => Some(SeedPolicy::Exact),
+            _ => None,
+        }
+    }
+
+    /// Canonical name (stable: feeds the api_v1 `"warm"` block).
+    pub fn name(self) -> &'static str {
+        match self {
+            SeedPolicy::Off => "off",
+            SeedPolicy::Adapt => "adapt",
+            SeedPolicy::Exact => "exact",
+        }
+    }
+
+    /// Whether the service should maintain the index and query it at all.
+    pub fn enabled(self) -> bool {
+        !matches!(self, SeedPolicy::Off)
+    }
+
+    /// The neighbor-distance ceiling this policy accepts.
+    pub fn max_distance(self) -> f64 {
+        match self {
+            SeedPolicy::Off => f64::NEG_INFINITY,
+            SeedPolicy::Adapt => SEED_DISTANCE_MAX,
+            SeedPolicy::Exact => 0.0,
+        }
+    }
+}
+
+impl std::fmt::Display for SeedPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Neighbor-distance ceiling for [`SeedPolicy::Adapt`]: roughly "same
+/// operator, dims within a combined factor of 2⁸ on the log-L1 scale, same
+/// stride and dilation unless very little else differs".
+pub const SEED_DISTANCE_MAX: f64 = 8.0;
+
+/// Weight of the stride and dilation coordinates relative to one log2 dim
+/// step (a stride change reshapes the input halo and every footprint).
+const STRIDE_WEIGHT: f64 = 4.0;
+
+/// Structural feature vector of one [`LayerKey`] (arch and objective are
+/// constant within one service's index, so they carry no coordinates).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FeatureVec {
+    /// Operator kind — categorical: any mismatch makes the distance
+    /// infinite (a pooling window must never seed a conv).
+    pub op: OpKind,
+    /// log2 of the seven dimension bounds, [`crate::workload::Dim`] order.
+    pub dims: [f64; 7],
+    /// Stride, linear (strides are tiny integers; the gap 1→2 matters).
+    pub stride: f64,
+    /// Dilation, linear.
+    pub dilation: f64,
+}
+
+/// Feature vector of a key (every coordinate is derived from key fields,
+/// so equal keys always have distance zero and — the [`SeedPolicy::Exact`]
+/// caveat — distinct keys on one service never do).
+pub fn features(key: &LayerKey) -> FeatureVec {
+    let mut dims = [0.0f64; 7];
+    for (i, &v) in key.dims.iter().enumerate() {
+        dims[i] = (v.max(1) as f64).log2();
+    }
+    FeatureVec {
+        op: key.op,
+        dims,
+        stride: key.stride as f64,
+        dilation: key.dilation as f64,
+    }
+}
+
+/// Weighted L1 distance between two feature vectors; infinite across
+/// operator kinds.
+pub fn distance(a: &FeatureVec, b: &FeatureVec) -> f64 {
+    if a.op != b.op {
+        return f64::INFINITY;
+    }
+    let mut d = 0.0;
+    for i in 0..7 {
+        d += (a.dims[i] - b.dims[i]).abs();
+    }
+    d += STRIDE_WEIGHT * (a.stride - b.stride).abs();
+    d += STRIDE_WEIGHT * (a.dilation - b.dilation).abs();
+    d
+}
+
+/// Nearest-neighbor index over previously-mapped keys, maintained by the
+/// service next to its shard cache. Insertion order is the tie-break, so
+/// lookups are deterministic for a fixed insertion history.
+#[derive(Debug, Default)]
+pub struct SimilarityIndex {
+    entries: Vec<(LayerKey, FeatureVec)>,
+}
+
+impl SimilarityIndex {
+    /// Empty index.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Number of indexed keys.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Whether the index holds no keys.
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Index a freshly-mapped key (duplicates are dropped, matching the
+    /// cache's insert-once discipline).
+    pub fn insert(&mut self, key: LayerKey) {
+        if self.entries.iter().any(|(k, _)| *k == key) {
+            return;
+        }
+        let f = features(&key);
+        self.entries.push((key, f));
+    }
+
+    /// Nearest indexed neighbor of `key` within `max_dist` (inclusive),
+    /// excluding `key` itself. Exact score ties resolve to the earliest
+    /// inserted entry.
+    pub fn nearest(&self, key: &LayerKey, max_dist: f64) -> Option<(&LayerKey, f64)> {
+        let f = features(key);
+        let mut best: Option<(&LayerKey, f64)> = None;
+        for (k, kf) in &self.entries {
+            if k == key {
+                continue;
+            }
+            let d = distance(&f, kf);
+            if d <= max_dist && best.map_or(true, |(_, bd)| d < bd) {
+                best = Some((k, d));
+            }
+        }
+        best
+    }
+}
+
+/// Largest divisor of `n` not exceeding `cap` (both ≥ 1; 1 always
+/// qualifies). Dim bounds are at most a few thousand, so the descending
+/// scan is cheap and runs once per adapted seed, not per candidate.
+fn largest_divisor_at_most(n: u64, cap: u64) -> u64 {
+    let mut k = cap.min(n).max(1);
+    while n % k != 0 {
+        k -= 1;
+    }
+    k
+}
+
+/// Adapt a neighbor's mapping to a new layer: per dim, re-clamp the
+/// factor of each slot (spatial X, spatial Y, then every temporal level
+/// below DRAM, in that order) to the largest divisor of the remaining
+/// bound not exceeding the neighbor's factor, and send the remainder to
+/// the top (DRAM) temporal level; permutations carry over unchanged.
+///
+/// Coverage holds by construction and the spatial products can only
+/// shrink, so the usual failure mode is a buffer-capacity (`Bounding`)
+/// violation on layers with fatter tensors than the neighbor's. Those
+/// degrade progressively — hoist each temporal level's tile to DRAM, then
+/// drop the spatial unrolling — and if nothing on the ladder validates
+/// the adaptation returns `None` and the caller simply searches unseeded.
+pub fn adapt_mapping(neighbor: &Mapping, layer: &Layer, acc: &Accelerator) -> Option<Mapping> {
+    let n_levels = acc.n_levels();
+    if neighbor.n_levels() != n_levels || n_levels == 0 {
+        return None;
+    }
+    let top = n_levels - 1;
+    let bounds = layer.bounds();
+    let mut m = Mapping {
+        temporal: vec![[1u64; 7]; n_levels],
+        permutation: neighbor.permutation.clone(),
+        spatial_x: [1; 7],
+        spatial_y: [1; 7],
+    };
+    for d in 0..7 {
+        let mut rem = bounds[d].max(1);
+        let fx = largest_divisor_at_most(rem, neighbor.spatial_x[d]);
+        m.spatial_x[d] = fx;
+        rem /= fx;
+        let fy = largest_divisor_at_most(rem, neighbor.spatial_y[d]);
+        m.spatial_y[d] = fy;
+        rem /= fy;
+        for l in 0..top {
+            let ft = largest_divisor_at_most(rem, neighbor.temporal[l][d]);
+            m.temporal[l][d] = ft;
+            rem /= ft;
+        }
+        m.temporal[top][d] = rem;
+    }
+    if m.validate(layer, acc).is_ok() {
+        return Some(m);
+    }
+    // Degradation ladder: hoist one temporal level's tiles to DRAM at a
+    // time (shrinking every footprint below it), re-validating each rung.
+    for l in 0..top {
+        for d in 0..7 {
+            m.temporal[top][d] = m.temporal[top][d].saturating_mul(m.temporal[l][d]);
+            m.temporal[l][d] = 1;
+        }
+        if m.validate(layer, acc).is_ok() {
+            return Some(m);
+        }
+    }
+    // Last rung: give up the spatial unrolling too.
+    for d in 0..7 {
+        let s = m.spatial_x[d].saturating_mul(m.spatial_y[d]);
+        m.temporal[top][d] = m.temporal[top][d].saturating_mul(s);
+        m.spatial_x[d] = 1;
+        m.spatial_y[d] = 1;
+    }
+    if m.validate(layer, acc).is_ok() {
+        return Some(m);
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::layer_key;
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::{LocalMapper, Mapper};
+    use crate::workload::zoo;
+
+    #[test]
+    fn policy_parse_and_name_round_trip() {
+        for p in [SeedPolicy::Off, SeedPolicy::Adapt, SeedPolicy::Exact] {
+            assert_eq!(SeedPolicy::parse(p.name()), Some(p));
+            assert_eq!(p.to_string(), p.name());
+        }
+        assert_eq!(SeedPolicy::parse("warm"), None);
+        assert_eq!(SeedPolicy::default(), SeedPolicy::Adapt);
+        assert!(!SeedPolicy::Off.enabled());
+        assert!(SeedPolicy::Adapt.enabled());
+        assert!(SeedPolicy::Exact.enabled());
+        assert_eq!(SeedPolicy::Adapt.max_distance(), SEED_DISTANCE_MAX);
+        assert_eq!(SeedPolicy::Exact.max_distance(), 0.0);
+    }
+
+    #[test]
+    fn distance_is_a_weighted_l1_on_log_dims() {
+        let acc = presets::eyeriss();
+        let a = layer_key(&Layer::matmul("a", 768, 768, 128), &acc);
+        let b = layer_key(&Layer::matmul("b", 3072, 768, 128), &acc);
+        let fa = features(&a);
+        let fb = features(&b);
+        assert_eq!(distance(&fa, &fa), 0.0);
+        // One dim quadrupled: |log2 3072 - log2 768| = 2 exactly.
+        assert!((distance(&fa, &fb) - 2.0).abs() < 1e-12);
+        assert_eq!(distance(&fa, &fb).to_bits(), distance(&fb, &fa).to_bits());
+        // Operator kinds never mix.
+        let pool = layer_key(&Layer::pooling("p", 64, 2, 112, 112), &acc);
+        assert!(distance(&fa, &features(&pool)).is_infinite());
+        // Stride weighs heavier than a doubled dim.
+        let conv = zoo::vgg16()[0].clone();
+        let mut strided = conv.clone();
+        strided.stride = 2;
+        let d = distance(&features(&layer_key(&conv, &acc)), &features(&layer_key(&strided, &acc)));
+        assert!((d - 4.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn index_finds_the_nearest_same_op_neighbor() {
+        let acc = presets::eyeriss();
+        let qkv = layer_key(&Layer::matmul("qkv", 768, 768, 128), &acc);
+        let ffn1 = layer_key(&Layer::matmul("ffn1", 3072, 768, 128), &acc);
+        let add = layer_key(&Layer::elementwise("add", 768, 128, 1), &acc);
+        let mut idx = SimilarityIndex::new();
+        assert!(idx.is_empty());
+        idx.insert(qkv.clone());
+        idx.insert(add.clone());
+        idx.insert(qkv.clone()); // duplicate dropped
+        assert_eq!(idx.len(), 2);
+        // The FFN matmul's nearest neighbor is the attention matmul, never
+        // the elementwise add, and never itself once indexed.
+        let (k, d) = idx.nearest(&ffn1, SEED_DISTANCE_MAX).unwrap();
+        assert_eq!(*k, qkv);
+        assert!((d - 2.0).abs() < 1e-12);
+        assert!(idx.nearest(&qkv, SEED_DISTANCE_MAX).is_none(), "only itself and another op");
+        // A zero ceiling (the `exact` policy) rejects the distance-2 hit.
+        assert!(idx.nearest(&ffn1, 0.0).is_none());
+        // Threshold is inclusive at the boundary.
+        idx.insert(ffn1.clone());
+        assert!(idx.nearest(&ffn1, 0.0).is_none(), "self is excluded");
+    }
+
+    #[test]
+    fn largest_divisor_respects_cap_and_divides() {
+        for (n, cap, want) in
+            [(12u64, 5u64, 4u64), (12, 12, 12), (12, 1, 1), (7, 6, 1), (3072, 768, 768), (1, 9, 1)]
+        {
+            assert_eq!(largest_divisor_at_most(n, cap), want, "n={n} cap={cap}");
+        }
+    }
+
+    #[test]
+    fn adapting_onto_the_same_layer_reproduces_the_mapping() {
+        let acc = presets::eyeriss();
+        for layer in zoo::bert_base().iter().take(6) {
+            let out = LocalMapper::new().run(layer, &acc).unwrap();
+            let adapted = adapt_mapping(&out.mapping, layer, &acc).unwrap();
+            assert_eq!(adapted, out.mapping, "{}", layer.name);
+        }
+    }
+
+    #[test]
+    fn adapted_mappings_validate_on_the_target_layer() {
+        let acc = presets::eyeriss();
+        let src = Layer::matmul("qkv", 768, 768, 128);
+        let out = LocalMapper::new().run(&src, &acc).unwrap();
+        for target in [
+            Layer::matmul("ffn1", 3072, 768, 128),
+            Layer::matmul("ffn2", 768, 3072, 128),
+            Layer::matmul("tiny", 48, 48, 16),
+            Layer::matmul("odd", 751, 53, 17), // prime-ish bounds: clamps collapse to 1s
+        ] {
+            let adapted = adapt_mapping(&out.mapping, &target, &acc)
+                .unwrap_or_else(|| panic!("{} must adapt", target.name));
+            adapted.validate(&target, &acc).unwrap();
+        }
+    }
+}

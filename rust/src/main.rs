@@ -21,7 +21,7 @@
 //!   run       execute an AOT conv artifact via PJRT and verify numerics
 //!   perf      run the performance harness and write BENCH_eval.json
 
-use local_mapper::api::{self, CompileRequest, Error, Session};
+use local_mapper::api::{self, CompileRequest, Error, SeedPolicy, Session};
 use local_mapper::arch::{config, presets, Accelerator};
 use local_mapper::fault;
 use local_mapper::mappers::{MapError, Objective, SearchParams};
@@ -120,7 +120,7 @@ USAGE: local-mapper <subcommand> [options]
   compile  --network <vgg16|vgg02|resnet50|resnet18|googlenet|squeezenet
            |mobilenetv2|alexnet|bert|vgg16pool|mobilenetv2res>
            | --network-file <layers.yaml>   [--arch eyeriss] [--threads 4]
-           [--mapper ...]
+           [--mapper ...] [--recompile-from <report.json>]
   compile-all  [--arch eyeriss] [--threads 4] [--mapper ...]
            (batch-compiles the operator-diverse zoo — the five paper
             networks plus bert/vgg16pool/mobilenetv2res — through the
@@ -164,6 +164,19 @@ Search-engine flags (wherever --mapper is accepted):
                                  is true when the budget provably covered
                                  the whole candidate space, so the result
                                  is the certified optimum
+  --seed-policy off|adapt|exact  similarity-driven warm starts for search
+                                 mappers: on a cache miss the service seeds
+                                 the search from the nearest already-mapped
+                                 layer's mapping (adapt re-clamps tiling to
+                                 the new bounds; exact requires identical
+                                 shapes; off reproduces unseeded runs
+                                 bit-for-bit). Seeding never changes the
+                                 mapping exhaustive/B&B select and never
+                                 worsens a heuristic mapper's score
+  --recompile-from <report.json> (compile only) incremental recompilation:
+                                 reuse every still-valid mapping from a
+                                 previous api_v1 compile document and remap
+                                 only the layers that changed
   --deadline-ms N                per-layer wall-clock deadline for search
                                  mappers: expiry mid-search keeps the
                                  best-so-far mapping (status \"degraded\");
@@ -244,10 +257,15 @@ fn base_request(args: &Args, default_budget: u64) -> Result<CompileRequest, Erro
     // caller picked a mapper explicitly (other mappers simply report
     // `certified: false`).
     let default_mapper = if args.flag("certify") { "exhaustive" } else { "local" };
+    let policy_spec = args.get_or("seed-policy", "adapt");
+    let seed_policy = SeedPolicy::parse(policy_spec).ok_or_else(|| {
+        Error::request(format!("unknown seed policy '{policy_spec}' ({})", SeedPolicy::SPEC))
+    })?;
     let mut req = CompileRequest::new()
         .mapper(args.get_or("mapper", default_mapper))
         .search(search_params(args, default_budget)?)
         .threads(args.get_num::<usize>("threads", 4))
+        .seed_policy(seed_policy)
         .fail_fast(args.flag("fail-fast"));
     req = if let Some(path) = args.get("arch-file") {
         req.arch_file(path)
@@ -312,7 +330,15 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
     } else {
         req.network(args.get_or("network", "vgg16"))
     };
-    let r = session.compile(&req)?;
+    let r = if let Some(path) = args.get("recompile-from") {
+        // Incremental recompilation: reuse still-valid mappings from a
+        // previous api_v1 compile document; only changed layers remap.
+        let src = std::fs::read_to_string(path).map_err(|e| Error::io(path, e))?;
+        let prev = api::json::parse(&src)?;
+        session.recompile(&prev, &req)?
+    } else {
+        session.compile(&req)?
+    };
     match format {
         Format::Json => print!("{}", api::json::compile_report(&r)),
         Format::Table => {
@@ -326,6 +352,15 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
                 r.cache_hits,
                 fmt_duration(r.compile_time)
             );
+            if r.warm_seeded > 0 || r.incremental_reused > 0 {
+                println!(
+                    "warm: policy={} seeded={} seed_quality={:.3} incremental_reused={}",
+                    r.seed_policy,
+                    r.warm_seeded,
+                    r.seed_quality,
+                    r.incremental_reused
+                );
+            }
             println!(
                 "total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
                 r.total_macs(),
@@ -368,6 +403,12 @@ fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
                 fmt_duration(r.p99_service),
                 fmt_duration(r.compile_time)
             );
+            if r.warm_seeded > 0 {
+                println!(
+                    "warm: policy={} seeded={} seed_quality={:.3}",
+                    r.seed_policy, r.warm_seeded, r.seed_quality
+                );
+            }
             println!(
                 "total: {} MACs, {} µJ across the batch",
                 r.total_macs(),

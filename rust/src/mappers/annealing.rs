@@ -215,6 +215,23 @@ impl Mapper for AnnealingMapper {
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.map_seeded(layer, acc, &[])
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds are merged into the *result only* — the chain
+    /// itself anneals exactly as unseeded (seeds never become the current
+    /// state), so the returned mapping is `min(chain best, seeds)` and
+    /// never worse than the unseeded run (DESIGN.md §15).
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
         self.degraded.set(false);
         let mut chain = SaChain {
             layer,
@@ -235,7 +252,7 @@ impl Mapper for AnnealingMapper {
             prune: false,
             deadline: deadline_instant(self.deadline_ms),
         };
-        match driver.search_batched(layer, acc, &mut chain) {
+        match driver.search_batched_seeded(layer, acc, &mut chain, seeds) {
             Some(b) => {
                 self.evaluated.set(b.scored);
                 self.degraded.set(b.degraded);

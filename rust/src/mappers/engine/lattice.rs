@@ -34,7 +34,7 @@
 //! every count and the argmin are bit-identical at every thread count
 //! (pinned by `prop_branch_and_bound_matches_unpruned_exhaustive`).
 
-use super::{merge_best, shard_start, CandidateSource, SearchBest, SearchDriver, ShardResult};
+use super::{merge_best, min_opt, shard_start, CandidateSource, SearchBest, SearchDriver, ShardResult};
 use super::{Objective, MIN_ROUND_BLOCKS, PRUNE_ROUNDS};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
@@ -291,6 +291,26 @@ impl SearchDriver {
         source: &BoundedLattice,
         seeds: &[Mapping],
     ) -> (Option<SearchBest>, bool) {
+        self.branch_and_bound_with_bound(layer, acc, source, seeds, None)
+    }
+
+    /// [`SearchDriver::branch_and_bound`] with an extra *external*
+    /// incumbent bound, mirroring [`SearchDriver::search_with_bound`]: the
+    /// bound tightens every round's frozen incumbent without ever entering
+    /// the candidate stream. Whenever the unbounded argmin scores
+    /// `<= bound` the result — including the coverage certificate — is
+    /// bit-identical to the unbounded run at no more examined candidates;
+    /// when it scores `> bound` the walk may bound it out, so callers must
+    /// treat `best.score > bound` (or `None`) as "rerun unbounded"
+    /// (DESIGN.md §15).
+    pub fn branch_and_bound_with_bound(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &BoundedLattice,
+        seeds: &[Mapping],
+        bound: Option<f64>,
+    ) -> (Option<SearchBest>, bool) {
         // An already-expired deadline covers nothing: no result, and
         // certainly no certificate.
         if self.expired() {
@@ -343,7 +363,7 @@ impl SearchDriver {
             let r1 = (r0 + round_blocks).min(visit_blocks);
             let round_n = r1 - r0;
             let w_n = n_workers.min(round_n);
-            let incumbent = best.as_ref().map(|(s, _, _)| *s);
+            let incumbent = min_opt(best.as_ref().map(|(s, _, _)| *s), bound);
             let objective = self.objective;
             let prune = self.prune;
             let results: Vec<ShardResult> = std::thread::scope(|scope| {

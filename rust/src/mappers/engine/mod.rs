@@ -207,6 +207,16 @@ fn merge_best(best: &mut Option<(f64, u64, Mapping)>, score: f64, index: u64, m:
     }
 }
 
+/// Minimum of two optional scores (`None` = unbounded): the round
+/// incumbent under an external warm-start bound.
+fn min_opt(a: Option<f64>, b: Option<f64>) -> Option<f64> {
+    match (a, b) {
+        (Some(x), Some(y)) => Some(x.min(y)),
+        (Some(x), None) => Some(x),
+        (None, y) => y,
+    }
+}
+
 /// Allocation-reusing mapping copy (`Vec::clone_from` keeps the level
 /// vectors' buffers), for the batch-evaluation member staging buffers.
 fn copy_mapping_into(dst: &mut Mapping, src: &Mapping) {
@@ -263,6 +273,30 @@ impl SearchDriver {
         source: &S,
         seeds: &[Mapping],
     ) -> Option<SearchBest> {
+        self.search_with_bound(layer, acc, source, seeds, None)
+    }
+
+    /// [`SearchDriver::search`] with an extra *external* incumbent bound.
+    ///
+    /// The bound tightens every round's frozen incumbent
+    /// (`min(best-so-far, bound)`) without entering the candidate stream:
+    /// it is never examined, scored or merged, so it can only *remove*
+    /// work, never add a candidate. A block is pruned only when its lower
+    /// bound strictly exceeds the incumbent, so whenever the unbounded
+    /// argmin scores `<= bound` it is never pruned and the bounded run
+    /// returns the bit-identical `(mapping, score, index)` with
+    /// `examined <= ` the unbounded run's — the cross-layer warm-start
+    /// contract (DESIGN.md §15). When the argmin scores `> bound` the
+    /// bounded run may return a worse candidate or `None`; callers detect
+    /// that (`best.score > bound`) and rerun unbounded.
+    pub fn search_with_bound<S: CandidateSource>(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &S,
+        seeds: &[Mapping],
+        bound: Option<f64>,
+    ) -> Option<SearchBest> {
         // An already-expired deadline admits no search at all: return
         // `None` (not a zero-candidate incumbent) so the service worker
         // drops to the LOCAL fallback rung of the degradation ladder.
@@ -313,8 +347,9 @@ impl SearchDriver {
             let round_n = r1 - r0;
             let w_n = n_workers.min(round_n);
             // Frozen at the round boundary: every worker prunes against the
-            // same incumbent whatever the thread count.
-            let incumbent = best.as_ref().map(|(s, _, _)| *s);
+            // same incumbent whatever the thread count. An external bound
+            // only tightens it (see `search_with_bound`).
+            let incumbent = min_opt(best.as_ref().map(|(s, _, _)| *s), bound);
             let results: Vec<ShardResult> = std::thread::scope(|scope| {
                 let mut handles = Vec::with_capacity(w_n as usize);
                 for (w, slot) in workers.iter_mut().take(w_n as usize).enumerate() {
@@ -465,6 +500,58 @@ impl SearchDriver {
                 }
                 index += 1;
             }
+        }
+        best.map(|(score, index, mapping)| SearchBest {
+            mapping,
+            score,
+            index,
+            examined,
+            scored,
+            pruned: 0,
+            degraded,
+        })
+    }
+
+    /// [`SearchDriver::search_batched`] plus cross-layer warm-start seeds
+    /// merged into the *result only*. The adaptive run proceeds exactly as
+    /// unseeded — seeds are never fed into the proposal chain or
+    /// population, so the proposal stream stays deterministic — and each
+    /// valid seed is then scored (one examined/scored tick apiece) at a
+    /// post-stream index, so the returned best is `min(unseeded best,
+    /// seeds)` with exact ties resolved to the proposal stream. The final
+    /// score is therefore never worse than the unseeded run's.
+    pub fn search_batched_seeded<S: BatchSource>(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        source: &mut S,
+        seeds: &[Mapping],
+    ) -> Option<SearchBest> {
+        if self.expired() {
+            return None;
+        }
+        let base = self.search_batched(layer, acc, source);
+        if seeds.is_empty() {
+            return base;
+        }
+        let budget = self.budget.max(1);
+        let mut best: Option<(f64, u64, Mapping)> = None;
+        let (mut examined, mut scored, mut degraded) = (0u64, 0u64, false);
+        if let Some(b) = base {
+            examined = b.examined;
+            scored = b.scored;
+            degraded = b.degraded;
+            best = Some((b.score, b.index, b.mapping));
+        }
+        let mut ctx = EvalContext::new(layer, acc);
+        for (i, s) in seeds.iter().enumerate() {
+            if s.validate(layer, acc).is_err() {
+                continue;
+            }
+            examined += 1;
+            scored += 1;
+            let score = self.objective.score(ctx.evaluate_into(s));
+            merge_best(&mut best, score, budget.saturating_add(i as u64), s);
         }
         best.map(|(score, index, mapping)| SearchBest {
             mapping,
@@ -654,6 +741,43 @@ mod tests {
     }
 
     #[test]
+    fn external_bounds_never_change_an_in_bound_argmin() {
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 11, 400);
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: 400,
+            threads: 1,
+            prune: true,
+            deadline: None,
+        };
+        let base = driver.search(&layer, &acc, &src, &[]).unwrap();
+        // Any bound at or above the argmin: bit-identical result, and the
+        // tightened incumbent can only remove work.
+        for slack in [1.0, 1.25, 100.0] {
+            let b = driver
+                .search_with_bound(&layer, &acc, &src, &[], Some(base.score * slack))
+                .unwrap();
+            assert_eq!(b.mapping, base.mapping, "slack {slack}");
+            assert_eq!(b.score.to_bits(), base.score.to_bits());
+            assert_eq!(b.index, base.index);
+            assert!(b.examined <= base.examined);
+            assert!(b.pruned >= base.pruned);
+        }
+        // A bound below the argmin may lose it — callers detect the
+        // `score > bound` (or `None`) outcome and rerun unbounded.
+        let tight = driver.search_with_bound(&layer, &acc, &src, &[], Some(base.score * 0.5));
+        if let Some(t) = tight {
+            assert!(t.score >= base.score);
+        }
+        // `None` delegates to the plain search.
+        let none = driver.search_with_bound(&layer, &acc, &src, &[], None).unwrap();
+        assert_eq!(none.examined, base.examined);
+        assert_eq!(none.mapping, base.mapping);
+    }
+
+    #[test]
     fn batched_search_tracks_best_and_budget() {
         struct Fixed(Vec<Mapping>, usize);
         impl BatchSource for Fixed {
@@ -702,5 +826,63 @@ mod tests {
         let pout = par.search_batched(&layer, &acc, &mut Fixed(big, 0)).unwrap();
         assert_eq!(pout.mapping, out.mapping);
         assert_eq!(pout.score.to_bits(), out.score.to_bits());
+    }
+
+    #[test]
+    fn batched_seeds_merge_into_the_result_only() {
+        struct Fixed(Vec<Mapping>, usize);
+        impl BatchSource for Fixed {
+            fn next_batch(&mut self, _f: &[Option<f64>], out: &mut Vec<Mapping>) {
+                if self.1 == 0 {
+                    out.extend(self.0.iter().cloned());
+                    self.1 = 1;
+                }
+            }
+        }
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg02()[4].clone();
+        let src = RandomStream::new(&layer, &acc, 3, 12);
+        let mut pool = Vec::new();
+        for b in 0..12 {
+            let mut m = Mapping::trivial(&layer, acc.n_levels());
+            src.emit_block(b, &mut m);
+            pool.push(m);
+        }
+        let driver = SearchDriver {
+            objective: Objective::Energy,
+            budget: 3000,
+            threads: 1,
+            prune: false,
+            deadline: None,
+        };
+        let plain = driver.search_batched(&layer, &acc, &mut Fixed(pool.clone(), 0)).unwrap();
+        // Seeding with the stream's own winner: the exact tie resolves to
+        // the proposal-stream copy, at one extra examined candidate.
+        let seeded = driver
+            .search_batched_seeded(
+                &layer,
+                &acc,
+                &mut Fixed(pool.clone(), 0),
+                &[plain.mapping.clone()],
+            )
+            .unwrap();
+        assert_eq!(seeded.mapping, plain.mapping);
+        assert_eq!(seeded.index, plain.index);
+        assert_eq!(seeded.examined, plain.examined + 1);
+        // A seed from a much larger search never worsens the result.
+        let wide = driver
+            .search(&layer, &acc, &RandomStream::new(&layer, &acc, 11, 400), &[])
+            .unwrap();
+        let boosted = driver
+            .search_batched_seeded(&layer, &acc, &mut Fixed(pool.clone(), 0), &[wide.mapping])
+            .unwrap();
+        assert!(boosted.score <= plain.score);
+        // An invalid seed is ignored entirely.
+        let mut broken = plain.mapping.clone();
+        broken.temporal[0][0] *= 7;
+        let s2 =
+            driver.search_batched_seeded(&layer, &acc, &mut Fixed(pool, 0), &[broken]).unwrap();
+        assert_eq!(s2.examined, plain.examined);
+        assert_eq!(s2.mapping, plain.mapping);
     }
 }

@@ -25,10 +25,13 @@
 //! [`ExhaustiveMapper::without_warm_start`] restore the raw enumeration
 //! (the perf harness uses it to measure fixed-work thread scaling).
 
-use super::engine::{deadline_instant, BoundedLattice, Objective, OdometerSource, SearchDriver};
+use super::engine::{
+    deadline_instant, BoundedLattice, Objective, OdometerSource, SearchBest, SearchDriver,
+};
 use super::{LocalMapper, MapError, MapStatus, Mapper};
 use crate::arch::Accelerator;
 use crate::mapping::Mapping;
+use crate::model::EvalContext;
 use crate::util::factor::count_factorizations;
 use crate::workload::{Dim, Layer};
 use std::cell::Cell;
@@ -141,6 +144,54 @@ impl ExhaustiveMapper {
         self.pruned.get()
     }
 
+    /// Run the configured search (flat odometer or branch-and-bound) with
+    /// an optional external incumbent bound (DESIGN.md §15).
+    fn run_search(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        bound: Option<f64>,
+    ) -> (Option<SearchBest>, bool) {
+        let driver = SearchDriver {
+            objective: self.objective,
+            budget: self.max_candidates,
+            threads: self.threads,
+            prune: self.prune,
+            deadline: deadline_instant(self.deadline_ms),
+        };
+        let seeds: Vec<Mapping> = if self.warm_start {
+            LocalMapper::new().map(layer, acc).into_iter().collect()
+        } else {
+            Vec::new()
+        };
+        if self.certify {
+            let source = BoundedLattice::new(layer, acc, self.permute);
+            driver.branch_and_bound_with_bound(layer, acc, &source, &seeds, bound)
+        } else {
+            let source = OdometerSource::new(layer, acc, self.permute);
+            (driver.search_with_bound(layer, acc, &source, &seeds, bound), false)
+        }
+    }
+
+    /// Record a finished search in the interior counters and unwrap it.
+    fn finish(&self, best: Option<SearchBest>, certified: bool) -> Result<Mapping, MapError> {
+        match best {
+            Some(b) => {
+                self.evaluated.set(b.examined);
+                self.pruned.set(b.pruned);
+                self.certified.set(certified);
+                self.degraded.set(b.degraded);
+                Ok(b.mapping)
+            }
+            None => {
+                self.evaluated.set(0);
+                self.pruned.set(0);
+                self.certified.set(false);
+                Err(MapError::NoValidMapping("exhaustive found no valid mapping".into()))
+            }
+        }
+    }
+
     /// Size of the factorization space this would enumerate.
     pub fn space_size(layer: &Layer, acc: &Accelerator) -> u64 {
         Dim::ALL
@@ -177,39 +228,58 @@ impl Mapper for ExhaustiveMapper {
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
         self.degraded.set(false);
-        let driver = SearchDriver {
-            objective: self.objective,
-            budget: self.max_candidates,
-            threads: self.threads,
-            prune: self.prune,
-            deadline: deadline_instant(self.deadline_ms),
-        };
-        let seeds: Vec<Mapping> = if self.warm_start {
-            LocalMapper::new().map(layer, acc).into_iter().collect()
-        } else {
-            Vec::new()
-        };
-        let (best, certified) = if self.certify {
-            let source = BoundedLattice::new(layer, acc, self.permute);
-            driver.branch_and_bound(layer, acc, &source, &seeds)
-        } else {
-            let source = OdometerSource::new(layer, acc, self.permute);
-            (driver.search(layer, acc, &source, &seeds), false)
-        };
-        match best {
-            Some(b) => {
-                self.evaluated.set(b.examined);
-                self.pruned.set(b.pruned);
-                self.certified.set(certified);
-                self.degraded.set(b.degraded);
-                Ok(b.mapping)
+        let (best, certified) = self.run_search(layer, acc, None);
+        self.finish(best, certified)
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds tighten the incumbent as external *bounds only*
+    /// — they never enter the candidate stream, so an accepted result is
+    /// bit-identical to the unseeded run's argmin (DESIGN.md §15). When
+    /// the bounded run's best scores above the bound (the adapted seed
+    /// was better than anything in budget — the bound may have masked the
+    /// true argmin), the search reruns unbounded and both runs' examined
+    /// counts are summed for honest accounting.
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
+        self.degraded.set(false);
+        let mut ctx = EvalContext::new(layer, acc);
+        let mut bound: Option<f64> = None;
+        for s in seeds {
+            if s.validate(layer, acc).is_ok() {
+                let score = self.objective.score(ctx.evaluate_into(s));
+                bound = Some(bound.map_or(score, |b: f64| b.min(score)));
             }
-            None => {
-                self.evaluated.set(0);
-                self.pruned.set(0);
-                self.certified.set(false);
-                Err(MapError::NoValidMapping("exhaustive found no valid mapping".into()))
+        }
+        let Some(bd) = bound else {
+            // No valid seed: identical to the unseeded path.
+            let (best, certified) = self.run_search(layer, acc, None);
+            return self.finish(best, certified);
+        };
+        let (best, certified) = self.run_search(layer, acc, bound);
+        if best.as_ref().is_some_and(|b| b.score <= bd) {
+            return self.finish(best, certified);
+        }
+        let (spent, spent_pruned) =
+            best.as_ref().map_or((0, 0), |b| (b.examined, b.pruned));
+        let (rerun, certified2) = self.run_search(layer, acc, None);
+        match rerun {
+            Some(mut b) => {
+                b.examined += spent;
+                b.pruned += spent_pruned;
+                self.finish(Some(b), certified2)
             }
+            // The unbounded rerun found nothing (e.g. a deadline expired
+            // between the runs): keep the bounded incumbent rather than
+            // discarding a valid mapping.
+            None => self.finish(best, false),
         }
     }
 }
@@ -348,6 +418,62 @@ mod tests {
         // the LOCAL warm-start seed is in both runs' examined counts).
         assert_eq!(out.evaluations + bnb.pruned(), base.evaluations);
         assert!(bnb.pruned() > 0, "warm-started branch-and-bound must prune");
+    }
+
+    #[test]
+    fn cross_layer_bound_seeds_keep_the_argmin_bit_identical() {
+        let acc = small_acc();
+        let layer = small_layer();
+        for certify in [false, true] {
+            let mk = || {
+                let m = ExhaustiveMapper::new(5_000).with_permutations();
+                if certify {
+                    m.with_certification()
+                } else {
+                    m
+                }
+            };
+            let base = mk().run(&layer, &acc).unwrap();
+            // An oracle seed (the argmin itself) acts as a pure bound:
+            // bit-identical result at no more evaluations.
+            let fast = mk();
+            let out = fast.run_seeded(&layer, &acc, &[base.mapping.clone()]).unwrap();
+            assert_eq!(out.mapping, base.mapping, "certify={certify}");
+            assert_eq!(out.score.to_bits(), base.score.to_bits());
+            assert_eq!(out.certified, base.certified);
+            assert!(out.evaluations <= base.evaluations, "certify={certify}");
+            // A weak (but valid) seed bounds nothing out: same argmin.
+            let trivial = Mapping::trivial(&layer, acc.n_levels());
+            let out2 = mk().run_seeded(&layer, &acc, &[trivial]).unwrap();
+            assert_eq!(out2.mapping, base.mapping, "certify={certify}");
+            assert_eq!(out2.score.to_bits(), base.score.to_bits());
+            // An invalid seed is ignored: exact unseeded behavior.
+            let mut broken = base.mapping.clone();
+            broken.temporal[0][0] *= 7;
+            let out3 = mk().run_seeded(&layer, &acc, &[broken]).unwrap();
+            assert_eq!(out3.mapping, base.mapping, "certify={certify}");
+            assert_eq!(out3.evaluations, base.evaluations);
+        }
+    }
+
+    #[test]
+    fn a_seed_below_the_truncated_argmin_forces_the_honest_rerun() {
+        // Budget 1 without warm-start examines only odometer candidate 0;
+        // seeding with a wide search's argmin puts the bound below it, so
+        // the bounded run cannot accept and the mapper reruns unbounded —
+        // the final mapping still equals the unseeded budget-1 result.
+        let acc = small_acc();
+        let layer = small_layer();
+        let mk = || ExhaustiveMapper::new(1).without_warm_start();
+        let base = mk().run(&layer, &acc).unwrap();
+        let wide = ExhaustiveMapper::new(50_000).with_permutations().run(&layer, &acc).unwrap();
+        let out = mk().run_seeded(&layer, &acc, &[wide.mapping.clone()]).unwrap();
+        assert_eq!(out.mapping, base.mapping);
+        assert_eq!(out.score.to_bits(), base.score.to_bits());
+        if wide.score < base.score {
+            // Case b: both runs' examined counts are summed.
+            assert!(out.evaluations >= base.evaluations);
+        }
     }
 
     #[test]

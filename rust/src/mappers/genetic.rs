@@ -271,6 +271,23 @@ impl Mapper for GeneticMapper {
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.map_seeded(layer, acc, &[])
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds are merged into the *result only* — the
+    /// population breeds exactly as unseeded (seeds never join the gene
+    /// pool), so the returned mapping is `min(GA best, seeds)` and never
+    /// worse than the unseeded run (DESIGN.md §15).
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
         self.degraded.set(false);
         let mut source = GaPopulation {
             layer,
@@ -294,7 +311,7 @@ impl Mapper for GeneticMapper {
             prune: false,
             deadline: deadline_instant(self.deadline_ms),
         };
-        match driver.search_batched(layer, acc, &mut source) {
+        match driver.search_batched_seeded(layer, acc, &mut source, seeds) {
             Some(b) => {
                 self.evaluated.set(b.scored);
                 self.degraded.set(b.degraded);

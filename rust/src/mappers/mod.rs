@@ -181,6 +181,30 @@ pub trait Mapper {
     /// Construct the mapping only (no timing bookkeeping).
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError>;
 
+    /// Whether this mapper makes use of cross-layer warm-start seeds in
+    /// [`Mapper::map_seeded`]. The service gates all similarity-index
+    /// work on this, so mappers that ignore seeds — LOCAL above all, whose
+    /// one-pass construction is already O(1) — pay nothing for the
+    /// warm-start machinery (DESIGN.md §15).
+    fn accepts_seeds(&self) -> bool {
+        false
+    }
+
+    /// Construct the mapping with cross-layer warm-start seeds (valid
+    /// mappings adapted from similar, already-mapped layers). The default
+    /// ignores the seeds. Implementations must keep the warm-start
+    /// contract: exhaustive/B&B searches use seeds as external incumbent
+    /// bounds only (bit-identical final mapping), heuristic searches merge
+    /// them into the result only (final score never worse than unseeded).
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        _seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
+        self.map(layer, acc)
+    }
+
     /// Number of candidate evaluations `map` performs (reported in
     /// Table 3 next to wall-clock).
     fn evaluations(&self) -> u64 {
@@ -214,8 +238,20 @@ pub trait Mapper {
     /// search it follows); the zero-allocation payoff is inside the
     /// engine's candidate loops.
     fn run(&self, layer: &Layer, acc: &Accelerator) -> Result<MapOutcome, MapError> {
+        self.run_seeded(layer, acc, &[])
+    }
+
+    /// [`Mapper::run`] with cross-layer warm-start seeds threaded through
+    /// to [`Mapper::map_seeded`] — the entry point the service worker uses
+    /// when the similarity index supplies a neighbor's adapted mapping.
+    fn run_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<MapOutcome, MapError> {
         let t0 = Instant::now();
-        let mapping = self.map(layer, acc)?;
+        let mapping = self.map_seeded(layer, acc, seeds)?;
         let elapsed = t0.elapsed();
         mapping.validate(layer, acc)?;
         let mut ctx = EvalContext::new(layer, acc);
@@ -328,6 +364,19 @@ impl Mapper for AnyMapper {
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
         self.inner().map(layer, acc)
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        self.inner().accepts_seeds()
+    }
+
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
+        self.inner().map_seeded(layer, acc, seeds)
     }
 }
 

@@ -112,6 +112,23 @@ impl Mapper for RandomMapper {
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.map_seeded(layer, acc, &[])
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds ride the engine's existing warm-start slot: they
+    /// are scored at post-stream indices (one examined tick apiece, exact
+    /// ties to the stream), so the result is `min(unseeded best, seeds)` —
+    /// never worse than unseeded (DESIGN.md §15).
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
         self.degraded.set(false);
         let source = RandomStream::new(layer, acc, self.seed, self.samples);
         let driver = SearchDriver {
@@ -121,7 +138,7 @@ impl Mapper for RandomMapper {
             prune: self.prune,
             deadline: deadline_instant(self.deadline_ms),
         };
-        match driver.search(layer, acc, &source, &[]) {
+        match driver.search(layer, acc, &source, seeds) {
             Some(b) => {
                 self.evaluated.set(b.examined);
                 self.degraded.set(b.degraded);

@@ -202,6 +202,23 @@ impl Mapper for LocalRefined {
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.map_seeded(layer, acc, &[])
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds are merged into the *result only* — the climb
+    /// still starts from LOCAL's mapping and walks exactly as unseeded, so
+    /// the returned mapping is `min(climb best, seeds)` and never worse
+    /// than the unseeded run (DESIGN.md §15).
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
         self.degraded.set(false);
         let seed_mapping =
             LocalMapper::new().with_objective(self.objective).map(layer, acc)?;
@@ -227,7 +244,7 @@ impl Mapper for LocalRefined {
             prune: false,
             deadline: deadline_instant(self.deadline_ms),
         };
-        match driver.search_batched(layer, acc, &mut climb) {
+        match driver.search_batched_seeded(layer, acc, &mut climb, seeds) {
             Some(b) => {
                 // + LOCAL's own two-candidate schedule comparison.
                 self.evaluated.set(b.scored + 2);

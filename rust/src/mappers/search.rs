@@ -127,7 +127,31 @@ impl Mapper for ConstrainedSearch {
     }
 
     fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+        self.map_seeded(layer, acc, &[])
+    }
+
+    fn accepts_seeds(&self) -> bool {
+        true
+    }
+
+    /// Cross-layer seeds ride the engine's warm-start slot, but only the
+    /// ones the dataflow's constraints admit — the candidate set (and any
+    /// returned mapping) must stay inside the constrained subspace. An
+    /// admitted seed is scored at a post-stream index (exact ties to the
+    /// stream), so the result is never worse than unseeded.
+    fn map_seeded(
+        &self,
+        layer: &Layer,
+        acc: &Accelerator,
+        seeds: &[Mapping],
+    ) -> Result<Mapping, MapError> {
         self.degraded.set(false);
+        let constraints = self.dataflow.constraints();
+        let admitted: Vec<Mapping> = seeds
+            .iter()
+            .filter(|s| constraints.admit(layer, acc, s))
+            .cloned()
+            .collect();
         let source = RandomStream::new(layer, acc, self.seed, self.budget)
             .constrained(self.dataflow.constraints());
         let driver = SearchDriver {
@@ -137,10 +161,9 @@ impl Mapper for ConstrainedSearch {
             prune: self.prune,
             deadline: deadline_instant(self.deadline_ms),
         };
-        // No warm-start seed here: the candidate set must stay inside the
-        // dataflow's subspace (an imprinted draw can still fail validation;
-        // the driver counts it like Timeloop counts invalids).
-        match driver.search(layer, acc, &source, &[]) {
+        // The imprinted draws can still fail validation; the driver counts
+        // them like Timeloop counts invalids.
+        match driver.search(layer, acc, &source, &admitted) {
             Some(b) => {
                 self.evaluated.set(b.examined);
                 self.pruned.set(b.pruned);

@@ -26,7 +26,13 @@
 //!    oracle-incumbent protocol (the baseline's argmin seeds the B&B, so
 //!    the numbers isolate the pruning power of the partial bound), plus
 //!    one small space the budget fully covers (`certified: true`).
-//! 6. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
+//! 6. **Warm starts** (schema 5) — the same corpus compiled through a
+//!    single-worker shared-cache service with seeding off, then with the
+//!    similarity-driven adapt policy (DESIGN.md §15). The exhaustive arm
+//!    pins the bit-identity contract (the seed is bound-only, so the
+//!    argmin cannot move) while cutting evaluations; the random arm shows
+//!    the heuristic side (final score never worse than unseeded).
+//! 7. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
 //!    the operator-diverse zoo through the shared-cache service.
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
@@ -36,7 +42,7 @@
 //! iteration counts for CI.
 
 use crate::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
-use crate::coordinator::compile_batch;
+use crate::coordinator::{compile_batch, compile_batch_with_policy, BatchPlan, SeedPolicy};
 use crate::mappers::engine::{BoundedLattice, OdometerSource, SearchDriver};
 use crate::mappers::{
     ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, Objective, RandomMapper,
@@ -184,6 +190,46 @@ pub struct SearchSection {
     pub scaling: Vec<ScalePoint>,
 }
 
+/// One seeded-vs-unseeded case of the schema-5 `warm_start` section: the
+/// same network compiled through a single-worker shared-cache service with
+/// [`SeedPolicy::Off`], then [`SeedPolicy::Adapt`].
+#[derive(Debug, Clone)]
+pub struct WarmCase {
+    /// Mapper name (`exhaustive` / `random`).
+    pub mapper: &'static str,
+    /// Corpus network.
+    pub network: &'static str,
+    /// Layers in the corpus.
+    pub layers: usize,
+    /// Cache misses the adapt run seeded from a similar shape.
+    pub warm_seeded: u64,
+    /// Mean seed-hit quality of the adapt run (final score / seed score).
+    pub seed_quality: f64,
+    /// Candidate evaluations over all cache misses, seeding off.
+    pub evals_unseeded: u64,
+    /// Candidate evaluations over all cache misses, adapt seeding on.
+    pub evals_seeded: u64,
+    /// Wall-clock of the unseeded batch, ms.
+    pub wall_ms_unseeded: f64,
+    /// Wall-clock of the seeded batch, ms.
+    pub wall_ms_seeded: f64,
+    /// Corpus energy with seeding off, µJ.
+    pub energy_unseeded_uj: f64,
+    /// Corpus energy with adapt seeding on, µJ (never worse than
+    /// unseeded — seeds only tighten bounds or join the result merge).
+    pub energy_seeded_uj: f64,
+    /// Whether every final mapping is bit-identical seeded vs unseeded
+    /// (the exhaustive contract; heuristics may legitimately improve).
+    pub identical: bool,
+}
+
+impl WarmCase {
+    /// Evaluation-count cut factor (unseeded / seeded).
+    pub fn cut(&self) -> f64 {
+        self.evals_unseeded as f64 / self.evals_seeded.max(1) as f64
+    }
+}
+
 /// Batch-pipeline measurement over the five-network zoo.
 #[derive(Debug, Clone)]
 pub struct ZooBatch {
@@ -214,6 +260,8 @@ pub struct PerfReport {
     pub search: SearchSection,
     /// Certified branch-and-bound vs unpruned exhaustive (schema 4).
     pub bound_search: Vec<BoundCase>,
+    /// Similarity-driven warm starts, seeded vs unseeded (schema 5).
+    pub warm_start: Vec<WarmCase>,
     /// Zoo batch-pipeline wall time.
     pub zoo_batch: ZooBatch,
 }
@@ -308,6 +356,27 @@ impl PerfReport {
             ));
         }
         s.push_str("  ],\n");
+        s.push_str("  \"warm_start\": [\n");
+        for (i, w) in self.warm_start.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"mapper\": \"{}\", \"network\": \"{}\", \"layers\": {}, \"warm_seeded\": {}, \"seed_quality\": {}, \"evals_unseeded\": {}, \"evals_seeded\": {}, \"cut\": {}, \"wall_ms_unseeded\": {}, \"wall_ms_seeded\": {}, \"energy_unseeded_uj\": {}, \"energy_seeded_uj\": {}, \"identical\": {}}}{}\n",
+                w.mapper,
+                w.network,
+                w.layers,
+                w.warm_seeded,
+                jnum(w.seed_quality),
+                w.evals_unseeded,
+                w.evals_seeded,
+                jnum(w.cut()),
+                jnum(w.wall_ms_unseeded),
+                jnum(w.wall_ms_seeded),
+                jnum(w.energy_unseeded_uj),
+                jnum(w.energy_seeded_uj),
+                w.identical,
+                if i + 1 < self.warm_start.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ],\n");
         s.push_str(&format!(
             "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}}\n",
             self.zoo_batch.networks,
@@ -365,6 +434,19 @@ impl PerfReport {
                 if c.certified { ", certified" } else { "" },
                 c.wall_ms_unpruned,
                 c.wall_ms_bnb
+            ));
+        }
+        for w in &self.warm_start {
+            s.push_str(&format!(
+                "warm {}@{}: seeded {} misses (quality {:.3}), {} → {} evals ({:.2}x cut{})\n",
+                w.mapper,
+                w.network,
+                w.warm_seeded,
+                w.seed_quality,
+                w.evals_unseeded,
+                w.evals_seeded,
+                w.cut(),
+                if w.identical { ", identical" } else { "" }
             ));
         }
         s.push_str(&format!(
@@ -441,6 +523,61 @@ fn bound_case(
         certified,
         wall_ms_unpruned,
         wall_ms_bnb,
+    }
+}
+
+/// Measure one `warm_start` case: the same corpus compiled twice through a
+/// single-worker shared-cache service — seeding off, then the adapt
+/// policy. One worker keeps the miss order deterministic, so both runs map
+/// the identical miss set and the comparison isolates seeding.
+fn warm_case<M>(
+    name: &'static str,
+    network: &'static str,
+    layers: &[Layer],
+    acc: &Accelerator,
+    mapper: &M,
+) -> WarmCase
+where
+    M: Mapper + Clone + Send + 'static,
+{
+    let corpus = vec![(network.to_string(), layers.to_vec())];
+    let t0 = Instant::now();
+    let off = compile_batch_with_policy(&corpus, acc, mapper, 1, SeedPolicy::Off)
+        .expect("unseeded warm-start corpus compiles");
+    let wall_ms_unseeded = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let adapt = compile_batch_with_policy(&corpus, acc, mapper, 1, SeedPolicy::Adapt)
+        .expect("seeded warm-start corpus compiles");
+    let wall_ms_seeded = t0.elapsed().as_secs_f64() * 1e3;
+    // Only cache misses pay search cost; hits replay the cached outcome.
+    let evals = |b: &BatchPlan| -> u64 {
+        b.networks
+            .iter()
+            .flat_map(|(_, p)| &p.layers)
+            .filter(|l| !l.cached)
+            .map(|l| l.outcome.evaluations)
+            .sum()
+    };
+    let identical = off.networks.iter().zip(&adapt.networks).all(|((_, a), (_, b))| {
+        a.layers.len() == b.layers.len()
+            && a.layers
+                .iter()
+                .zip(&b.layers)
+                .all(|(x, y)| x.outcome.mapping == y.outcome.mapping)
+    });
+    WarmCase {
+        mapper: name,
+        network,
+        layers: layers.len(),
+        warm_seeded: adapt.warm_seeded,
+        seed_quality: adapt.seed_quality,
+        evals_unseeded: evals(&off),
+        evals_seeded: evals(&adapt),
+        wall_ms_unseeded,
+        wall_ms_seeded,
+        energy_unseeded_uj: off.total_energy_uj(),
+        energy_seeded_uj: adapt.total_energy_uj(),
+        identical,
     }
 }
 
@@ -582,6 +719,22 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         crate::mapspace::lattice_subtree_blocks(&tiny, &ex_acc, 0).saturating_mul(7);
     bound_search.push(bound_case("perf-small", &tiny, &ex_acc, tiny_space, false));
 
+    // Warm-start section (schema 5): bert's 4 unique shapes give two
+    // seedable matmul misses. Exhaustive pins the bit-identity contract
+    // with an evaluation cut; random shows the never-worse-score side.
+    let warm_budget: u64 = if cfg.smoke { 1_500 } else { 6_000 };
+    let bert = zoo::network("bert").expect("bert is in the zoo");
+    let warm_start = vec![
+        warm_case(
+            "exhaustive",
+            "bert",
+            &bert,
+            &acc,
+            &ExhaustiveMapper::new(warm_budget).with_permutations(),
+        ),
+        warm_case("random", "bert", &bert, &acc, &RandomMapper::new(warm_budget, 42)),
+    ];
+
     // Zoo batch pipeline (LOCAL is µs/layer, so this is cheap even full).
     let networks = zoo::batch_zoo();
     let t0 = Instant::now();
@@ -596,13 +749,14 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
     };
 
     PerfReport {
-        schema: 4,
+        schema: 5,
         smoke: cfg.smoke,
         evaluator,
         per_op,
         exhaustive,
         search,
         bound_search,
+        warm_start,
         zoo_batch,
     }
 }
@@ -615,7 +769,7 @@ mod tests {
     fn smoke_run_produces_sane_report() {
         let r = run(&PerfConfig::smoke());
         assert!(r.smoke);
-        assert_eq!(r.schema, 4);
+        assert_eq!(r.schema, 5);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
         assert_eq!(
@@ -655,6 +809,29 @@ mod tests {
         let tiny = &r.bound_search[3];
         assert!(tiny.certified, "budget == space must certify");
         assert_eq!(tiny.evals_bnb + tiny.pruned, tiny.evals_unpruned);
+        // Schema-5 warm_start: both arms seed bert's two seedable matmul
+        // misses. The exhaustive arm's seed is bound-only, so the final
+        // mappings are bit-identical and the seeded run never examines
+        // more; the random arm merely never ends worse than unseeded.
+        assert_eq!(
+            r.warm_start.iter().map(|w| w.mapper).collect::<Vec<_>>(),
+            vec!["exhaustive", "random"]
+        );
+        for w in &r.warm_start {
+            assert_eq!(w.network, "bert");
+            assert_eq!(w.layers, 96);
+            assert_eq!(w.warm_seeded, 2, "{}", w.mapper);
+            assert!(w.seed_quality > 0.0 && w.seed_quality <= 1.0 + 1e-9, "{}", w.mapper);
+            assert!(w.evals_unseeded > 0 && w.evals_seeded > 0, "{}", w.mapper);
+            assert!(
+                w.energy_seeded_uj <= w.energy_unseeded_uj * (1.0 + 1e-12),
+                "{}: seeding worsened the corpus energy",
+                w.mapper
+            );
+        }
+        let ex = &r.warm_start[0];
+        assert!(ex.identical, "exhaustive seeding moved the argmin");
+        assert!(ex.evals_seeded <= ex.evals_unseeded, "seeding examined more");
         assert_eq!(r.zoo_batch.networks, 8);
         assert!(r.zoo_batch.layers > 300);
         assert!(r.zoo_batch.wall_ms > 0.0);
@@ -663,7 +840,7 @@ mod tests {
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 4,
+            schema: 5,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
@@ -695,11 +872,25 @@ mod tests {
                 wall_ms_unpruned: 40.0,
                 wall_ms_bnb: 3.0,
             }],
+            warm_start: vec![WarmCase {
+                mapper: "exhaustive",
+                network: "bert",
+                layers: 96,
+                warm_seeded: 2,
+                seed_quality: 0.95,
+                evals_unseeded: 6000,
+                evals_seeded: 3000,
+                wall_ms_unseeded: 12.0,
+                wall_ms_seeded: 6.0,
+                energy_unseeded_uj: 100.0,
+                energy_seeded_uj: 100.0,
+                identical: true,
+            }],
             zoo_batch: ZooBatch { networks: 8, layers: 325, wall_ms: 10.0, cache_hit_rate: 0.4 },
         };
         let json = r.to_json();
         for key in [
-            "\"schema\": 4",
+            "\"schema\": 5",
             "\"smoke\"",
             "\"evaluator\"",
             "\"legacy_evals_per_sec\"",
@@ -723,6 +914,13 @@ mod tests {
             "\"evals_bnb\": 1000",
             "\"cut\": 20.000",
             "\"certified\": false",
+            "\"warm_start\"",
+            "\"warm_seeded\": 2",
+            "\"seed_quality\": 0.950",
+            "\"evals_unseeded\": 6000",
+            "\"evals_seeded\": 3000",
+            "\"cut\": 2.000",
+            "\"identical\": true",
             "\"zoo_batch\"",
             "\"cache_hit_rate\"",
         ] {
@@ -734,6 +932,7 @@ mod tests {
         assert!(r.summary().contains("prune exhaustive"));
         assert!(r.summary().contains("scale random 2T"));
         assert!(r.summary().contains("bound VGG16_conv9@eyeriss"));
+        assert!(r.summary().contains("warm exhaustive@bert"));
     }
 
     #[test]

@@ -42,6 +42,8 @@ fn help_lists_subcommands() {
         "--deadline-ms",
         "--fail-fast",
         "--inject-fault",
+        "--seed-policy",
+        "--recompile-from",
     ] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
@@ -302,7 +304,7 @@ fn explore_prints_pareto() {
 /// The exact top-level key order of an `"api_v1"` compile document. Key
 /// order is part of the output contract (byte-stable across runs); any
 /// reordering is a schema change and must bump the tag.
-const COMPILE_KEYS: [&str; 11] = [
+const COMPILE_KEYS: [&str; 12] = [
     "schema",
     "kind",
     "workload",
@@ -312,6 +314,7 @@ const COMPILE_KEYS: [&str; 11] = [
     "networks",
     "totals",
     "cache",
+    "warm",
     "failures",
     "compile_time_ms",
 ];
@@ -337,6 +340,10 @@ fn assert_compile_skeleton(doc: &Json) {
     assert_eq!(doc.get("schema").unwrap().as_str(), Some("api_v1"));
     assert_eq!(doc.get("kind").unwrap().as_str(), Some("compile"));
     assert_eq!(doc.keys(), COMPILE_KEYS.to_vec());
+    assert_eq!(
+        doc.get("warm").unwrap().keys(),
+        vec!["policy", "seeded", "seed_quality", "incremental_reused"]
+    );
     for net in doc.get("networks").unwrap().as_arr().unwrap() {
         assert_eq!(net.keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
         for layer in net.get("layers").unwrap().as_arr().unwrap() {
@@ -524,7 +531,7 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
     for key in [
-        "\"schema\": 4",
+        "\"schema\": 5",
         "\"evaluator\"",
         "\"per_op\"",
         "\"exhaustive\"",
@@ -534,6 +541,8 @@ fn perf_smoke_writes_valid_bench_json() {
         "\"bound_search\"",
         "\"evals_bnb\"",
         "\"certified\": true",
+        "\"warm_start\"",
+        "\"warm_seeded\"",
         "\"zoo_batch\"",
         "\"smoke\": true",
     ] {
@@ -653,6 +662,65 @@ fn deadline_zero_falls_back_to_local_on_every_layer() {
     let (_, stderr, code) = run(&["map", "--deadline-ms", "soon"]);
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("deadline-ms"), "{stderr}");
+}
+
+#[test]
+fn seed_policy_flag_parses_and_rejects_junk() {
+    // Every policy name is accepted end to end; with the O(1) LOCAL
+    // mapper no seeding happens, so all three produce valid reports.
+    for policy in ["off", "adapt", "exact"] {
+        let (stdout, stderr, code) =
+            run(&["compile", "--network", "alexnet", "--seed-policy", policy]);
+        assert_eq!(code, 0, "{policy}: {stderr}");
+        assert!(stdout.contains("total:"), "{policy}: {stdout}");
+    }
+    let (_, stderr, code) = run(&["compile", "--seed-policy", "frob"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
+    assert!(stderr.contains("off|adapt|exact"), "{stderr}");
+}
+
+#[test]
+fn recompile_from_reuses_a_prior_report() {
+    // Write a donor report, then recompile the same request against it:
+    // every layer must be reused verbatim without hitting the service.
+    let path = std::env::temp_dir().join("lm_cli_recompile_donor.json");
+    let base = ["compile", "--network", "alexnet", "--format", "json"];
+    let (donor, stderr, code) = run(&base);
+    assert_eq!(code, 0, "{stderr}");
+    std::fs::write(&path, &donor).unwrap();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--recompile-from", path.to_str().unwrap()]);
+    let (out, stderr, code) = run(&args);
+    assert_eq!(code, 0, "{stderr}");
+    let doc = parse(&out).expect("recompile JSON parses");
+    assert_compile_skeleton(&doc);
+    let warm = doc.get("warm").unwrap();
+    assert_eq!(warm.get("incremental_reused").unwrap().as_u64(), Some(5), "{out}");
+    assert_eq!(
+        doc.get("cache").unwrap().get("requests").unwrap().as_u64(),
+        Some(0),
+        "reused layers must not hit the service: {out}"
+    );
+    // Reused layers carry the donor's mappings bit for bit.
+    let donor_layers = first_network_layers(&parse(&donor).unwrap());
+    for (got, want) in first_network_layers(&doc).iter().zip(&donor_layers) {
+        assert_eq!(got.get("mapping"), want.get("mapping"));
+        assert_eq!(got.get("score"), want.get("score"));
+        assert_eq!(got.get("cached").unwrap().as_bool(), Some(true));
+    }
+
+    // A missing donor is an I/O error; a malformed one a JSON error.
+    let (_, stderr, code) =
+        run(&["compile", "--network", "alexnet", "--recompile-from", "/nonexistent.json"]);
+    assert_eq!(code, 3, "{stderr}");
+    assert!(stderr.contains("error[E_IO]"), "{stderr}");
+    std::fs::write(&path, "{not json").unwrap();
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--recompile-from", path.to_str().unwrap()]);
+    let (_, stderr, code) = run(&args);
+    assert_eq!(code, 3, "{stderr}");
+    assert!(stderr.contains("error[E_JSON]"), "{stderr}");
 }
 
 #[test]

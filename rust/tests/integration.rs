@@ -135,6 +135,44 @@ fn depthwise_network_end_to_end() {
 }
 
 #[test]
+fn warm_starts_seed_bert_and_never_worsen_scores() {
+    use local_mapper::coordinator::{compile_batch_with_policy, SeedPolicy};
+    // BERT's matmul family (q/k/v/attn_out, ffn1, ffn2) gives the
+    // similarity index same-op neighbors: with one worker the two later
+    // matmul shapes are cache misses with a seedable neighbor, so the
+    // adapt policy must seed exactly those two. Seeding merges into the
+    // search result, so every per-layer score is equal or better than the
+    // unseeded run of the identical mapper.
+    let acc = presets::eyeriss();
+    let networks = vec![("bert".to_string(), zoo::bert_base())];
+    let mapper = RandomMapper::new(400, 9);
+    let cold =
+        compile_batch_with_policy(&networks, &acc, &mapper, 1, SeedPolicy::Off).unwrap();
+    let warm =
+        compile_batch_with_policy(&networks, &acc, &mapper, 1, SeedPolicy::Adapt).unwrap();
+    assert_eq!(cold.warm_seeded, 0, "policy off must never seed");
+    assert_eq!(warm.warm_seeded, 2, "both later matmul misses seed from the first");
+    assert!(
+        warm.seed_quality > 0.0 && warm.seed_quality <= 1.0 + 1e-9,
+        "seed quality is a final/seed score ratio: {}",
+        warm.seed_quality
+    );
+    for ((_, cp), (_, wp)) in cold.networks.iter().zip(&warm.networks) {
+        assert_eq!(cp.layers.len(), wp.layers.len());
+        for (c, w) in cp.layers.iter().zip(&wp.layers) {
+            assert_eq!(c.layer, w.layer, "layer order diverged");
+            assert!(
+                w.outcome.score <= c.outcome.score,
+                "{}: seeded {} > unseeded {}",
+                w.layer.name,
+                w.outcome.score,
+                c.outcome.score
+            );
+        }
+    }
+}
+
+#[test]
 fn operator_diverse_networks_end_to_end() {
     use local_mapper::model::TensorIdx;
     use local_mapper::workload::{OpKind, Tensor};

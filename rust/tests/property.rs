@@ -805,6 +805,107 @@ fn prop_certified_bnb_is_provably_optimal_on_a_covered_space() {
 }
 
 #[test]
+fn prop_adapted_seeds_are_always_valid() {
+    // The warm-start adapter's contract (DESIGN.md §15): adapting a valid
+    // neighbor mapping onto any same-op layer yields a mapping that
+    // validates on the target, or None — never an invalid seed. Swept
+    // across every operator kind, random same-op (source, target) pairs,
+    // and both LOCAL and random source mappings.
+    use local_mapper::coordinator::adapt_mapping;
+    use local_mapper::mapspace::sample_random as sample;
+    let mut rng = SplitMix64::new(0x5EED5);
+    let acc = presets::eyeriss();
+    for op in OpKind::ALL {
+        let mut adapted_some = 0;
+        for trial in 0..25 {
+            let src = random_op_layer(op, &mut rng);
+            let dst = random_op_layer(op, &mut rng);
+            let neighbor = if trial % 2 == 0 {
+                LocalMapper::new().map(&src, &acc).unwrap()
+            } else {
+                sample(&src, &acc, &mut rng)
+            };
+            if let Some(seed) = adapt_mapping(&neighbor, &dst, &acc) {
+                adapted_some += 1;
+                seed.validate(&dst, &acc).unwrap_or_else(|e| {
+                    panic!("invalid adapted seed on {op}: {src} -> {dst}: {e}")
+                });
+            }
+        }
+        assert!(adapted_some > 0, "{op}: adaptation never succeeded — the sweep is vacuous");
+    }
+}
+
+#[test]
+fn prop_exhaustive_seeding_never_changes_the_mapping() {
+    // Seeds are bound-only for exhaustive search: for any valid seed — the
+    // eventual argmin, a LOCAL mapping, or a random one — the seeded run
+    // returns the bit-identical (mapping, score) as unseeded and never
+    // examines more candidates.
+    let mut rng = SplitMix64::new(0x1DE17);
+    let acc = presets::eyeriss();
+    for layer in [zoo::vgg02()[4].clone(), zoo::bert_base()[0].clone()] {
+        let ex = ExhaustiveMapper::new(3_000).with_permutations();
+        let base = ex.run(&layer, &acc).unwrap();
+        let seeds = [
+            base.mapping.clone(),
+            LocalMapper::new().map(&layer, &acc).unwrap(),
+            sample_random(&layer, &acc, &mut rng),
+        ];
+        for (i, seed) in seeds.iter().enumerate() {
+            let out = ex.run_seeded(&layer, &acc, std::slice::from_ref(seed)).unwrap();
+            assert_eq!(out.mapping, base.mapping, "{} seed {i}", layer.name);
+            assert_eq!(out.score.to_bits(), base.score.to_bits(), "{} seed {i}", layer.name);
+            assert!(
+                out.evaluations <= base.evaluations,
+                "{} seed {i}: seeded examined {} > unseeded {}",
+                layer.name,
+                out.evaluations,
+                base.evaluations
+            );
+        }
+        // All three seeds at once behave the same as the tightest alone.
+        let out = ex.run_seeded(&layer, &acc, &seeds).unwrap();
+        assert_eq!(out.mapping, base.mapping, "{} all seeds", layer.name);
+        assert_eq!(out.score.to_bits(), base.score.to_bits(), "{} all seeds", layer.name);
+    }
+}
+
+#[test]
+fn prop_heuristic_seeding_never_worsens_the_score() {
+    // Heuristic mappers merge seeds into the *result only*: for every
+    // seeding-capable stochastic mapper, the seeded score is never worse
+    // than the unseeded score on the same (layer, budget, rng seed) — and
+    // when the seed itself beats the search, the seed wins outright.
+    use local_mapper::mappers::{AnnealingMapper, GeneticMapper, LocalRefined};
+    let mut rng = SplitMix64::new(0xC0DE5);
+    let acc = presets::eyeriss();
+    for layer in [zoo::vgg02()[4].clone(), zoo::vgg16()[8].clone()] {
+        let seeds =
+            [LocalMapper::new().map(&layer, &acc).unwrap(), sample_random(&layer, &acc, &mut rng)];
+        let mappers: Vec<(&str, Box<dyn Mapper>)> = vec![
+            ("random", Box::new(RandomMapper::new(200, 7))),
+            ("rs-search", Box::new(ConstrainedSearch::new(Dataflow::RowStationary, 200, 7))),
+            ("annealing", Box::new(AnnealingMapper::new(200, 7))),
+            ("ga", Box::new(GeneticMapper::new(16, 5, 7))),
+            ("refine", Box::new(LocalRefined::new(200, 7))),
+        ];
+        for (name, mapper) in &mappers {
+            assert!(mapper.accepts_seeds(), "{name} should accept seeds");
+            let base = mapper.run(&layer, &acc).unwrap();
+            let out = mapper.run_seeded(&layer, &acc, &seeds).unwrap();
+            assert!(
+                out.score <= base.score,
+                "{name} on {}: seeded {} > unseeded {}",
+                layer.name,
+                out.score,
+                base.score
+            );
+        }
+    }
+}
+
+#[test]
 fn prop_dim_coverage_under_mutation_stress() {
     // Hammer the mapping with random factor migrations + repairs; coverage
     // (Π factors == bound) must never break.
