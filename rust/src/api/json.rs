@@ -44,8 +44,9 @@ fn jms(d: std::time::Duration) -> String {
 }
 
 /// JSON string escaping (quotes, backslashes, control characters; UTF-8
-/// passes through).
-fn esc(s: &str) -> String {
+/// passes through). Crate-visible so the persistent-cache record encoder
+/// and the serve daemon's error frames escape identically.
+pub(crate) fn esc(s: &str) -> String {
     let mut out = String::with_capacity(s.len() + 2);
     for c in s.chars() {
         match c {
@@ -69,8 +70,10 @@ fn factors(f: &[u64; 7]) -> String {
 
 /// A mapping as structured JSON: per-level temporal factors
 /// ([`crate::workload::Dim`] order N,M,C,R,S,P,Q), per-level permutation
-/// strings (innermost dim first), spatial X/Y factors.
-fn mapping(m: &Mapping) -> String {
+/// strings (innermost dim first), spatial X/Y factors. Crate-visible:
+/// the persistent mapping cache embeds exactly this encoding in its log
+/// records (one encoder, one decoder — [`parse_mapping`]).
+pub(crate) fn mapping(m: &Mapping) -> String {
     let temporal: Vec<String> = m.temporal.iter().map(factors).collect();
     let permutation: Vec<String> = m
         .permutation

@@ -42,10 +42,12 @@
 
 pub mod json;
 pub mod request;
+pub mod serve;
 pub mod session;
 
 pub use crate::coordinator::SeedPolicy;
 pub use request::{ArchSpec, CompileRequest, WorkloadSpec};
+pub use serve::{ServeConfig, ServeHandle};
 pub use session::{
     CompileReport, ExploreReport, LayerReport, LayerStream, NetworkReport, Session,
     SessionMetrics, SimulateReport,
@@ -121,6 +123,10 @@ pub enum Error {
         /// The underlying I/O error.
         source: std::io::Error,
     },
+    /// The serve daemon's admission queue is past its high-water mark;
+    /// the request was rejected without being enqueued (backpressure —
+    /// DESIGN.md §16). Retry after draining.
+    Busy(String),
 }
 
 impl Error {
@@ -149,6 +155,7 @@ impl Error {
             Error::Runtime(_) => "E_RUNTIME",
             Error::Json(_) => "E_JSON",
             Error::Io { .. } => "E_IO",
+            Error::Busy(_) => "E_BUSY",
         }
     }
 
@@ -161,7 +168,9 @@ impl Error {
             | Error::Yaml(_)
             | Error::Json(_)
             | Error::Io { .. } => ErrorClass::InvalidInput,
-            Error::Mapping(_) | Error::Map(_) | Error::Runtime(_) => ErrorClass::Failure,
+            Error::Mapping(_) | Error::Map(_) | Error::Runtime(_) | Error::Busy(_) => {
+                ErrorClass::Failure
+            }
         }
     }
 }
@@ -178,6 +187,7 @@ impl fmt::Display for Error {
             Error::Runtime(e) => fmt::Display::fmt(e, f),
             Error::Json(e) => fmt::Display::fmt(e, f),
             Error::Io { path, source } => write!(f, "io: {path}: {source}"),
+            Error::Busy(msg) => f.write_str(msg),
         }
     }
 }
@@ -194,6 +204,7 @@ impl std::error::Error for Error {
             Error::Runtime(e) => Some(e),
             Error::Json(e) => Some(e),
             Error::Io { source, .. } => Some(source),
+            Error::Busy(_) => None,
         }
     }
 }
@@ -286,6 +297,7 @@ mod tests {
                 "E_IO",
                 3,
             ),
+            (Error::Busy("queue full".into()), "E_BUSY", 4),
         ];
         for (e, code, exit) in cases {
             assert_eq!(e.code(), code);

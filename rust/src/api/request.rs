@@ -73,6 +73,12 @@ pub struct CompileRequest {
     /// §15). Defaults to [`SeedPolicy::Adapt`]; `Off` restores the
     /// bit-for-bit unseeded service behaviour.
     pub seed_policy: SeedPolicy,
+    /// Directory for the disk-backed persistent mapping cache (DESIGN.md
+    /// §16): solved mappings are appended to an on-disk log and replayed
+    /// on the next request with the same directory, so repeat compiles —
+    /// even across processes — cost zero mapper evaluations. `None`
+    /// (default) keeps the service memory-only.
+    pub cache_dir: Option<String>,
 }
 
 impl Default for CompileRequest {
@@ -85,6 +91,7 @@ impl Default for CompileRequest {
             threads: 4,
             fail_fast: false,
             seed_policy: SeedPolicy::default(),
+            cache_dir: None,
         }
     }
 }
@@ -220,6 +227,13 @@ impl CompileRequest {
     /// the bit-for-bit unseeded service behaviour).
     pub fn seed_policy(mut self, policy: SeedPolicy) -> Self {
         self.seed_policy = policy;
+        self
+    }
+
+    /// Attach a disk-backed persistent mapping cache directory (DESIGN.md
+    /// §16; CLI `--cache-dir`, env `LOCAL_MAPPER_CACHE_DIR`).
+    pub fn cache_dir(mut self, dir: impl Into<String>) -> Self {
+        self.cache_dir = Some(dir.into());
         self
     }
 

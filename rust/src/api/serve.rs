@@ -1,0 +1,558 @@
+//! The compile daemon: [`CompileRequest`]s over a Unix socket.
+//!
+//! `local-mapper serve` turns one long-lived [`Session`] into a service:
+//! clients connect to a Unix domain socket, send length-prefixed JSON
+//! request frames, and get back the exact `api_v1` documents the CLI
+//! would print. Because every connection shares the one session, the
+//! mapping caches, coalescing tables and (with `--cache-dir`) the
+//! persistent disk cache are shared across *clients* — the second caller
+//! to compile a network pays nothing, even if it is a different process
+//! hours later (DESIGN.md §16).
+//!
+//! # Wire protocol
+//!
+//! Frames in both directions are a 4-byte big-endian length followed by
+//! that many payload bytes. Request payloads are single JSON objects and
+//! are capped at [`MAX_FRAME`] bytes; a connection may send any number of
+//! frames sequentially. Two verbs:
+//!
+//! * `{"verb": "compile", ...}` — the remaining keys mirror the CLI
+//!   flags: `network`/`layer`/`zoo`, `arch`, `mapper`, `objective`,
+//!   `budget`, `seed`, `threads`, `seed_policy`. The reply is the
+//!   `api_v1` compile document, or an error document
+//!   `{"schema":"api_v1","kind":"error","code":...,"message":...}` with
+//!   the same stable codes as CLI stderr.
+//! * `{"verb": "metrics"}` — a plain-text, line-oriented scrape of the
+//!   session counters (`local_mapper_*` lines): requests, hit rate,
+//!   disk hits, coalesced searches, p50/p99 service time, queue depth,
+//!   and — when a cache dir is configured — the lifetime totals from the
+//!   persistent sidecar.
+//!
+//! # Backpressure
+//!
+//! Admission is bounded: at most [`ServeConfig::queue_limit`] compile
+//! requests may be in flight at once. Past the high-water mark a request
+//! is rejected *before* it touches the session with a typed `E_BUSY`
+//! error document carrying the current `queue_depth`, so well-behaved
+//! clients can back off instead of piling onto a saturated daemon.
+//!
+//! # Lifecycle
+//!
+//! [`run`] is the CLI entry point: it installs `SIGINT`/`SIGTERM`
+//! handlers that flip one atomic, serves until a signal arrives, then
+//! joins the connection threads and removes the socket file. [`spawn`]
+//! is the embeddable/test entry point: same daemon, stopped by dropping
+//! (or explicitly stopping) the returned [`ServeHandle`].
+
+use super::json::{self, Json};
+use super::request::CompileRequest;
+use super::session::Session;
+use super::Error;
+use crate::coordinator::{PersistentCache, SeedPolicy};
+use crate::fault;
+use crate::mappers::Objective;
+use std::io::{Read, Write};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Hard cap on a request frame's payload size (1 MiB). Requests are small
+/// JSON objects; anything larger is a protocol error and the connection
+/// is dropped rather than buffered.
+pub const MAX_FRAME: usize = 1 << 20;
+
+/// How the daemon listens and admits work.
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    /// Unix-socket path to bind. A stale file from a dead daemon is
+    /// removed before binding.
+    pub socket: String,
+    /// High-water mark for in-flight compile requests; request N+1 is
+    /// rejected with `E_BUSY`. `0` rejects everything (useful to test
+    /// client backoff).
+    pub queue_limit: usize,
+    /// Directory for the persistent mapping cache, applied to every
+    /// compile served (client requests cannot override it — the daemon
+    /// owns its disk state).
+    pub cache_dir: Option<String>,
+    /// Default worker threads per compile when the client does not send
+    /// `threads`.
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            socket: "/tmp/local-mapper.sock".into(),
+            queue_limit: 64,
+            cache_dir: None,
+            threads: 4,
+        }
+    }
+}
+
+/// Signal-to-shutdown latch: `SIGINT`/`SIGTERM` handlers may only flip
+/// this atomic (nothing else is async-signal-safe); the accept loop polls
+/// it.
+static SHUTDOWN: AtomicBool = AtomicBool::new(false);
+
+const SIGINT: i32 = 2;
+const SIGTERM: i32 = 15;
+
+extern "C" {
+    /// libc `signal(2)` — the only libc call in the crate, used instead
+    /// of a signal-handling dependency (the build is offline by design).
+    fn signal(signum: i32, handler: usize) -> usize;
+}
+
+/// The installed handler: one atomic store and nothing else.
+extern "C" fn flag_shutdown(_signum: i32) {
+    SHUTDOWN.store(true, Ordering::SeqCst);
+}
+
+fn install_signal_handlers() {
+    // SAFETY: `flag_shutdown` is async-signal-safe (a single atomic
+    // store) and stays valid for the process lifetime.
+    unsafe {
+        signal(SIGINT, flag_shutdown as usize);
+        signal(SIGTERM, flag_shutdown as usize);
+    }
+}
+
+/// Everything the connection threads share.
+struct ServeState {
+    cfg: ServeConfig,
+    session: Session,
+    /// In-flight admitted compiles (the admission queue depth).
+    depth: AtomicU64,
+}
+
+/// RAII admission slot: holds one unit of [`ServeState::depth`] from
+/// admission until the reply is built, on every exit path.
+struct AdmissionSlot<'a> {
+    depth: &'a AtomicU64,
+}
+
+impl<'a> AdmissionSlot<'a> {
+    /// Claim a slot, or `None` past the high-water mark (the failed claim
+    /// leaves the depth unchanged).
+    fn acquire(depth: &'a AtomicU64, limit: usize) -> Option<Self> {
+        let prev = depth.fetch_add(1, Ordering::SeqCst);
+        if prev as usize >= limit {
+            depth.fetch_sub(1, Ordering::SeqCst);
+            return None;
+        }
+        Some(Self { depth })
+    }
+}
+
+impl Drop for AdmissionSlot<'_> {
+    fn drop(&mut self) {
+        self.depth.fetch_sub(1, Ordering::SeqCst);
+    }
+}
+
+/// A running daemon started by [`spawn`]: stop it explicitly or by
+/// dropping the handle (both join the accept loop and every connection
+/// thread, then remove the socket file).
+pub struct ServeHandle {
+    stop: Arc<AtomicBool>,
+    thread: Option<std::thread::JoinHandle<()>>,
+    socket: String,
+}
+
+impl ServeHandle {
+    /// The socket path the daemon is listening on.
+    pub fn socket(&self) -> &str {
+        &self.socket
+    }
+
+    /// Stop the daemon and wait for it to finish in-flight work.
+    pub fn stop(mut self) {
+        self.shutdown();
+    }
+
+    fn shutdown(&mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl Drop for ServeHandle {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+impl std::fmt::Debug for ServeHandle {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServeHandle").field("socket", &self.socket).finish()
+    }
+}
+
+/// Start the daemon on a background thread and return a handle to it.
+/// This is the embeddable (and testable) form of [`run`]; it installs no
+/// signal handlers.
+pub fn spawn(cfg: ServeConfig) -> Result<ServeHandle, Error> {
+    // A stale socket file from a crashed daemon would make bind fail with
+    // AddrInUse even though nobody is listening.
+    let _ = std::fs::remove_file(&cfg.socket);
+    let listener =
+        UnixListener::bind(&cfg.socket).map_err(|e| Error::io(cfg.socket.clone(), e))?;
+    listener
+        .set_nonblocking(true)
+        .map_err(|e| Error::io(cfg.socket.clone(), e))?;
+    let stop = Arc::new(AtomicBool::new(false));
+    let socket = cfg.socket.clone();
+    let state =
+        Arc::new(ServeState { cfg, session: Session::new(), depth: AtomicU64::new(0) });
+    let loop_stop = Arc::clone(&stop);
+    let thread = std::thread::spawn(move || accept_loop(listener, state, loop_stop));
+    Ok(ServeHandle { stop, thread: Some(thread), socket })
+}
+
+/// The CLI entry point: serve in the foreground until `SIGINT`/`SIGTERM`,
+/// then shut down cleanly (join connections, remove the socket file).
+pub fn run(cfg: ServeConfig) -> Result<(), Error> {
+    SHUTDOWN.store(false, Ordering::SeqCst);
+    install_signal_handlers();
+    let handle = spawn(cfg)?;
+    while !SHUTDOWN.load(Ordering::SeqCst) {
+        std::thread::sleep(Duration::from_millis(50));
+    }
+    handle.stop();
+    Ok(())
+}
+
+/// Accept connections until stopped; each connection gets its own thread
+/// (compiles shard internally, so connection threads spend their time
+/// blocked on the session, not computing).
+fn accept_loop(listener: UnixListener, state: Arc<ServeState>, stop: Arc<AtomicBool>) {
+    let mut conns: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    while !stop.load(Ordering::SeqCst) && !SHUTDOWN.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _addr)) => {
+                conns.retain(|h| !h.is_finished());
+                let state = Arc::clone(&state);
+                let stop = Arc::clone(&stop);
+                conns.push(std::thread::spawn(move || serve_conn(stream, state, stop)));
+            }
+            // Nonblocking listener: WouldBlock is the idle case; any other
+            // accept error is transient (EMFILE, ECONNABORTED) — back off
+            // and keep serving either way.
+            Err(_) => std::thread::sleep(Duration::from_millis(5)),
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+    let _ = std::fs::remove_file(&state.cfg.socket);
+}
+
+/// One connection: frames in, frames out, until EOF, a protocol error, or
+/// shutdown.
+fn serve_conn(mut stream: UnixStream, state: Arc<ServeState>, stop: Arc<AtomicBool>) {
+    // Short read timeout so a mid-frame read wakes up to observe the stop
+    // flag instead of pinning the thread on a silent client.
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(200)));
+    loop {
+        let payload = match read_frame(&mut stream, &stop) {
+            Ok(Some(p)) => p,
+            // Clean EOF, shutdown, or a protocol violation: drop the
+            // connection either way (errors are per-frame only when the
+            // frame itself arrived intact).
+            Ok(None) | Err(_) => return,
+        };
+        let reply = dispatch(&state, &payload);
+        if write_frame(&mut stream, reply.as_bytes()).is_err() {
+            return;
+        }
+    }
+}
+
+/// Read one length-prefixed frame. `Ok(None)` means clean EOF at a frame
+/// boundary or shutdown; torn frames and oversized lengths are errors.
+fn read_frame(stream: &mut UnixStream, stop: &AtomicBool) -> std::io::Result<Option<Vec<u8>>> {
+    let mut header = [0u8; 4];
+    if read_full(stream, &mut header, stop, true)?.is_none() {
+        return Ok(None);
+    }
+    let len = u32::from_be_bytes(header) as usize;
+    if len > MAX_FRAME {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidData,
+            format!("frame of {len} bytes exceeds the {MAX_FRAME}-byte cap"),
+        ));
+    }
+    let mut payload = vec![0u8; len];
+    if read_full(stream, &mut payload, stop, false)?.is_none() {
+        return Ok(None);
+    }
+    Ok(Some(payload))
+}
+
+/// Fill `buf` from the stream, riding out read timeouts (they exist only
+/// so the stop flag is observed). `Ok(None)` on shutdown, or on EOF when
+/// `eof_ok` and no byte has arrived yet (a client hanging up between
+/// frames); EOF mid-buffer is a torn frame and errors.
+fn read_full(
+    stream: &mut UnixStream,
+    buf: &mut [u8],
+    stop: &AtomicBool,
+    eof_ok: bool,
+) -> std::io::Result<Option<()>> {
+    let mut filled = 0;
+    while filled < buf.len() {
+        if stop.load(Ordering::SeqCst) || SHUTDOWN.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut buf[filled..]) {
+            Ok(0) => {
+                if filled == 0 && eof_ok {
+                    return Ok(None);
+                }
+                return Err(std::io::Error::new(
+                    std::io::ErrorKind::UnexpectedEof,
+                    "connection closed mid-frame",
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(()))
+}
+
+/// Write one length-prefixed frame.
+fn write_frame(stream: &mut UnixStream, payload: &[u8]) -> std::io::Result<()> {
+    stream.write_all(&(payload.len() as u32).to_be_bytes())?;
+    stream.write_all(payload)?;
+    stream.flush()
+}
+
+/// Turn one request payload into one reply payload. Every failure becomes
+/// an error document — the connection only dies on framing violations.
+fn dispatch(state: &ServeState, payload: &[u8]) -> String {
+    let Ok(text) = std::str::from_utf8(payload) else {
+        return error_doc("E_REQUEST", "request frame is not UTF-8", None);
+    };
+    let doc = match json::parse(text) {
+        Ok(doc) => doc,
+        Err(e) => return error_doc("E_JSON", &e.to_string(), None),
+    };
+    match doc.get("verb").and_then(Json::as_str).unwrap_or("compile") {
+        "metrics" => metrics_text(state),
+        "compile" => {
+            let Some(slot) = AdmissionSlot::acquire(&state.depth, state.cfg.queue_limit)
+            else {
+                return error_doc(
+                    "E_BUSY",
+                    &format!(
+                        "admission queue full ({} in flight, limit {})",
+                        state.depth.load(Ordering::SeqCst),
+                        state.cfg.queue_limit
+                    ),
+                    Some(state.depth.load(Ordering::SeqCst)),
+                );
+            };
+            // Injection point for the robustness tests: `stall:<ms>`
+            // holds the admission slot so the queue fills behind it.
+            fault::stall_daemon();
+            let reply = match request_from(&doc, &state.cfg) {
+                Ok(req) => match state.session.compile(&req) {
+                    Ok(report) => json::compile_report(&report),
+                    Err(e) => error_doc(e.code(), &e.to_string(), None),
+                },
+                Err(e) => error_doc(e.code(), &e.to_string(), None),
+            };
+            drop(slot);
+            reply
+        }
+        other => error_doc(
+            "E_REQUEST",
+            &format!("unknown verb {other:?} (expected compile or metrics)"),
+            None,
+        ),
+    }
+}
+
+/// Build a [`CompileRequest`] from a compile verb's JSON fields. The
+/// daemon's own cache dir and default thread count apply unless the
+/// client overrides threads (it can never override the cache dir).
+fn request_from(doc: &Json, cfg: &ServeConfig) -> Result<CompileRequest, Error> {
+    let mut req = CompileRequest::new().threads(cfg.threads);
+    if doc.get("zoo").and_then(Json::as_bool) == Some(true) {
+        req = req.zoo();
+    }
+    if let Some(n) = doc.get("network").and_then(Json::as_str) {
+        req = req.network(n);
+    }
+    if let Some(s) = doc.get("layer").and_then(Json::as_str) {
+        req = req.layer_spec(s);
+    }
+    if let Some(a) = doc.get("arch").and_then(Json::as_str) {
+        req = req.arch_preset(a);
+    }
+    if let Some(m) = doc.get("mapper").and_then(Json::as_str) {
+        req = req.mapper(m);
+    }
+    if let Some(o) = doc.get("objective").and_then(Json::as_str) {
+        let objective = Objective::parse(o).ok_or_else(|| {
+            Error::request(format!("unknown objective {o:?} (expected {})", Objective::SPEC))
+        })?;
+        req = req.objective(objective);
+    }
+    if let Some(b) = doc.get("budget").and_then(Json::as_u64) {
+        req = req.budget(b);
+    }
+    if let Some(s) = doc.get("seed").and_then(Json::as_u64) {
+        req = req.seed(s);
+    }
+    if let Some(t) = doc.get("threads").and_then(Json::as_u64) {
+        req = req.threads(t.max(1) as usize);
+    }
+    if let Some(p) = doc.get("seed_policy").and_then(Json::as_str) {
+        let policy = SeedPolicy::parse(p).ok_or_else(|| {
+            Error::request(format!(
+                "unknown seed policy {p:?} (expected {})",
+                SeedPolicy::SPEC
+            ))
+        })?;
+        req = req.seed_policy(policy);
+    }
+    if let Some(dir) = &cfg.cache_dir {
+        req = req.cache_dir(dir.clone());
+    }
+    Ok(req)
+}
+
+/// A single-line `api_v1` error document, shape-compatible with the CLI's
+/// stderr documents; `queue_depth` rides along on `E_BUSY` only.
+fn error_doc(code: &str, message: &str, queue_depth: Option<u64>) -> String {
+    let mut doc = format!(
+        "{{\"schema\": \"{}\", \"kind\": \"error\", \"code\": \"{}\", \"message\": \"{}\"",
+        json::SCHEMA,
+        code,
+        json::esc(message)
+    );
+    if let Some(depth) = queue_depth {
+        doc.push_str(&format!(", \"queue_depth\": {depth}"));
+    }
+    doc.push('}');
+    doc
+}
+
+/// The `metrics` verb's plain-text scrape: one `local_mapper_<counter>
+/// <value>` line per counter, session-lifetime live values first, then —
+/// when a cache dir is configured — the process-spanning lifetime totals
+/// from the persistent sidecar (which include the current session's
+/// still-running services only after they flush on drop, so the two
+/// sections are reported separately rather than summed).
+fn metrics_text(state: &ServeState) -> String {
+    use std::fmt::Write as _;
+    let m = state.session.metrics();
+    let ps = state.session.service_percentiles(&[0.50, 0.99]);
+    let mut out = String::new();
+    let _ = writeln!(out, "local_mapper_requests_total {}", m.requests);
+    let _ = writeln!(out, "local_mapper_cache_hits_total {}", m.cache_hits);
+    let _ = writeln!(out, "local_mapper_disk_hits_total {}", m.disk_hits);
+    let _ = writeln!(out, "local_mapper_coalesced_total {}", m.coalesced);
+    let _ = writeln!(out, "local_mapper_errors_total {}", m.errors);
+    let _ = writeln!(out, "local_mapper_fallbacks_total {}", m.fallbacks);
+    let _ = writeln!(out, "local_mapper_hit_rate {:.6}", m.hit_rate());
+    let _ = writeln!(out, "local_mapper_p50_service_seconds {:.6}", ps[0].as_secs_f64());
+    let _ = writeln!(out, "local_mapper_p99_service_seconds {:.6}", ps[1].as_secs_f64());
+    let _ = writeln!(
+        out,
+        "local_mapper_queue_depth {}",
+        state.depth.load(Ordering::SeqCst)
+    );
+    let _ = writeln!(out, "local_mapper_services {}", m.services);
+    if let Some(dir) = &state.cfg.cache_dir {
+        if let Ok(log) = PersistentCache::open(dir) {
+            let t = log.read_totals();
+            let _ = writeln!(out, "local_mapper_lifetime_requests_total {}", t.requests);
+            let _ = writeln!(
+                out,
+                "local_mapper_lifetime_cache_hits_total {}",
+                t.cache_hits
+            );
+            let _ = writeln!(out, "local_mapper_lifetime_fallbacks_total {}", t.fallbacks);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn error_docs_are_valid_json_with_escaped_messages() {
+        let doc = error_doc("E_BUSY", "queue \"full\"\n", Some(3));
+        let parsed = json::parse(&doc).unwrap();
+        assert_eq!(parsed.get("schema").and_then(Json::as_str), Some(json::SCHEMA));
+        assert_eq!(parsed.get("kind").and_then(Json::as_str), Some("error"));
+        assert_eq!(parsed.get("code").and_then(Json::as_str), Some("E_BUSY"));
+        assert_eq!(parsed.get("message").and_then(Json::as_str), Some("queue \"full\"\n"));
+        assert_eq!(parsed.get("queue_depth").and_then(Json::as_u64), Some(3));
+        let plain = error_doc("E_REQUEST", "nope", None);
+        assert!(json::parse(&plain).unwrap().get("queue_depth").is_none());
+    }
+
+    #[test]
+    fn requests_parse_from_wire_fields() {
+        let doc = json::parse(
+            "{\"verb\": \"compile\", \"network\": \"alexnet\", \"arch\": \"eyeriss\", \
+             \"objective\": \"edp\", \"threads\": 2, \"seed_policy\": \"off\"}",
+        )
+        .unwrap();
+        let cfg = ServeConfig {
+            cache_dir: Some("/tmp/never-opened".into()),
+            ..ServeConfig::default()
+        };
+        let req = request_from(&doc, &cfg).unwrap();
+        assert_eq!(req.cache_dir.as_deref(), Some("/tmp/never-opened"));
+        // The request resolves without touching the cache dir (that only
+        // happens at service start).
+        let resolved = req.resolve().unwrap();
+        assert_eq!(resolved.networks.len(), 1);
+        assert_eq!(resolved.threads, 2);
+    }
+
+    #[test]
+    fn bad_objective_and_policy_are_typed_request_errors() {
+        let cfg = ServeConfig::default();
+        let bad_obj = json::parse("{\"objective\": \"speed\"}").unwrap();
+        let e = request_from(&bad_obj, &cfg).unwrap_err();
+        assert_eq!(e.code(), "E_REQUEST");
+        let bad_pol = json::parse("{\"seed_policy\": \"always\"}").unwrap();
+        let e = request_from(&bad_pol, &cfg).unwrap_err();
+        assert_eq!(e.code(), "E_REQUEST");
+    }
+
+    #[test]
+    fn admission_slots_enforce_the_high_water_mark() {
+        let depth = AtomicU64::new(0);
+        let a = AdmissionSlot::acquire(&depth, 2).unwrap();
+        let b = AdmissionSlot::acquire(&depth, 2).unwrap();
+        assert!(AdmissionSlot::acquire(&depth, 2).is_none(), "past high-water mark");
+        assert_eq!(depth.load(Ordering::SeqCst), 2, "failed claim must not leak depth");
+        drop(a);
+        let c = AdmissionSlot::acquire(&depth, 2).unwrap();
+        drop(b);
+        drop(c);
+        assert_eq!(depth.load(Ordering::SeqCst), 0);
+        assert!(AdmissionSlot::acquire(&depth, 0).is_none(), "zero limit rejects all");
+    }
+}

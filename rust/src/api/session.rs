@@ -19,7 +19,7 @@ use super::json::{self, Json};
 use super::request::{CompileRequest, ResolvedRequest};
 use super::Error;
 use crate::arch::Accelerator;
-use crate::coordinator::{JobHandle, MappingService, SeedPolicy, ServiceMetrics};
+use crate::coordinator::{JobHandle, MappingService, PersistentCache, SeedPolicy, ServiceMetrics};
 use crate::explore::{self, DesignResult, SweepGrid};
 use crate::mapping::Mapping;
 use crate::mappers::{MapError, MapOutcome, MapStatus, Mapper, Objective};
@@ -53,6 +53,7 @@ struct ServiceKey {
     deadline_ms: Option<u64>,
     workers: usize,
     seed_policy: SeedPolicy,
+    cache_dir: Option<String>,
 }
 
 /// FNV-1a over a byte string (stable fingerprint for [`ServiceKey`]).
@@ -80,6 +81,7 @@ impl ServiceKey {
             deadline_ms: req.search.deadline_ms,
             workers: resolved.threads,
             seed_policy: req.seed_policy,
+            cache_dir: req.cache_dir.clone(),
         }
     }
 }
@@ -330,6 +332,12 @@ pub struct SessionMetrics {
     pub requests: u64,
     /// Requests served from a mapping cache.
     pub cache_hits: u64,
+    /// Cache hits whose entry was preloaded from a persistent on-disk
+    /// cache rather than computed this process lifetime (DESIGN.md §16).
+    pub disk_hits: u64,
+    /// Requests that piggybacked on an identical in-flight search instead
+    /// of starting their own (DESIGN.md §16).
+    pub coalesced: u64,
     /// Requests answered with a mapper error (fallback included — these
     /// layers produced no mapping at all).
     pub errors: u64,
@@ -454,21 +462,54 @@ impl Session {
     }
 
     /// The service behind a request's [`ServiceKey`], started on first
-    /// use. The session lock is held only for the map lookup/insert.
-    fn service_for(&self, req: &CompileRequest, resolved: &ResolvedRequest) -> Arc<MappingService> {
+    /// use. The session lock is held only for the map lookup/insert (plus,
+    /// on a cold key with a cache dir, the disk-cache open — a one-time
+    /// cost per key that keeps concurrent first requests from racing two
+    /// services onto one log file).
+    ///
+    /// When the request carries a [`CompileRequest::cache_dir`], the
+    /// service is backed by a [`PersistentCache`] namespaced to the
+    /// producer identity (mapper name, search seed, seed policy), so a
+    /// random-mapper log can never warm an exhaustive service and
+    /// different seeds never cross-contaminate (DESIGN.md §16). Opening
+    /// the directory can fail; that surfaces as a typed [`Error::Io`].
+    fn service_for(
+        &self,
+        req: &CompileRequest,
+        resolved: &ResolvedRequest,
+    ) -> Result<Arc<MappingService>, Error> {
         let key = ServiceKey::of(req, resolved);
         // Poison-tolerant like the cache shards: a caller thread that
-        // panicked between entry and insert leaves the map consistent
-        // (entry/insert never partially apply), so keep serving.
+        // panicked between lookup and insert leaves the map consistent
+        // (get/insert never partially apply), so keep serving.
         let mut guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
-        Arc::clone(guard.entry(key).or_insert_with(|| {
-            Arc::new(MappingService::start_with_policy(
-                resolved.acc.clone(),
-                resolved.mapper.clone(),
-                resolved.threads,
-                req.seed_policy,
-            ))
-        }))
+        if let Some(svc) = guard.get(&key) {
+            return Ok(Arc::clone(svc));
+        }
+        let persist = match &req.cache_dir {
+            Some(dir) => {
+                let ns = format!(
+                    "{}|seed{}|{}",
+                    resolved.mapper.name(),
+                    req.search.seed,
+                    req.seed_policy.name()
+                );
+                let log = PersistentCache::open(dir)
+                    .map_err(|e| Error::io(dir.clone(), e))?
+                    .with_namespace(ns);
+                Some(Arc::new(log))
+            }
+            None => None,
+        };
+        let svc = Arc::new(MappingService::start_with_persist(
+            resolved.acc.clone(),
+            resolved.mapper.clone(),
+            resolved.threads,
+            req.seed_policy,
+            persist,
+        ));
+        guard.insert(key, Arc::clone(&svc));
+        Ok(svc)
     }
 
     /// Submit every layer of the resolved request to its service, starting
@@ -482,8 +523,8 @@ impl Session {
         &self,
         req: &CompileRequest,
         resolved: &ResolvedRequest,
-    ) -> (Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>, (u64, u64)) {
-        let svc = self.service_for(req, resolved);
+    ) -> Result<(Vec<(String, NetworkHandles)>, Arc<ServiceMetrics>, (u64, u64)), Error> {
+        let svc = self.service_for(req, resolved)?;
         let warm0 = (
             svc.metrics.warm_seeded.load(Ordering::Relaxed),
             svc.metrics.seed_quality_milli.load(Ordering::Relaxed),
@@ -497,7 +538,7 @@ impl Session {
                 (name.clone(), handles)
             })
             .collect();
-        (submitted, Arc::clone(&svc.metrics), warm0)
+        Ok((submitted, Arc::clone(&svc.metrics), warm0))
     }
 
     /// Compile a request to a typed [`CompileReport`]. All layers of all
@@ -525,7 +566,7 @@ impl Session {
         let mapper = resolved.mapper.name();
         let objective = resolved.mapper.objective();
         let t0 = Instant::now();
-        let (submitted, metrics, warm0) = self.submit_all(req, &resolved);
+        let (submitted, metrics, warm0) = self.submit_all(req, &resolved)?;
 
         let mut networks = Vec::with_capacity(submitted.len());
         let mut failures: Vec<LayerFailure> = Vec::new();
@@ -601,7 +642,7 @@ impl Session {
     /// network.
     pub fn compile_iter(&self, req: &CompileRequest) -> Result<LayerStream<'_>, Error> {
         let resolved = req.resolve()?;
-        let (submitted, _, _) = self.submit_all(req, &resolved);
+        let (submitted, _, _) = self.submit_all(req, &resolved)?;
         let items: Vec<(String, Layer, JobHandle)> = submitted
             .into_iter()
             .flat_map(|(name, handles)| {
@@ -665,7 +706,7 @@ impl Session {
             Pending(Layer, JobHandle),
         }
 
-        let svc = self.service_for(req, &resolved);
+        let svc = self.service_for(req, &resolved)?;
         let warm0 = (
             svc.metrics.warm_seeded.load(Ordering::Relaxed),
             svc.metrics.seed_quality_milli.load(Ordering::Relaxed),
@@ -853,6 +894,8 @@ impl Session {
             services: guard.len(),
             requests: 0,
             cache_hits: 0,
+            disk_hits: 0,
+            coalesced: 0,
             errors: 0,
             panics: 0,
             fallbacks: 0,
@@ -863,6 +906,8 @@ impl Session {
         for svc in guard.values() {
             m.requests += svc.metrics.requests.load(Ordering::Relaxed);
             m.cache_hits += svc.metrics.cache_hits.load(Ordering::Relaxed);
+            m.disk_hits += svc.metrics.disk_hits.load(Ordering::Relaxed);
+            m.coalesced += svc.metrics.coalesced.load(Ordering::Relaxed);
             m.errors += svc.metrics.errors.load(Ordering::Relaxed);
             m.panics += svc.metrics.panics.load(Ordering::Relaxed);
             m.fallbacks += svc.metrics.fallbacks.load(Ordering::Relaxed);
@@ -870,6 +915,24 @@ impl Session {
             m.warm_seeded += svc.metrics.warm_seeded.load(Ordering::Relaxed);
         }
         m
+    }
+
+    /// Service-time quantiles aggregated across every service this session
+    /// has started: the element-wise **maximum** of each service's own
+    /// percentiles (a conservative tail bound — the true pooled quantile
+    /// can never exceed the worst per-service one for the p99-style upper
+    /// quantiles the daemon exports). Empty sessions report zeros.
+    pub fn service_percentiles(&self, qs: &[f64]) -> Vec<Duration> {
+        let guard = self.services.lock().unwrap_or_else(|p| p.into_inner());
+        let mut out = vec![Duration::ZERO; qs.len()];
+        for svc in guard.values() {
+            for (slot, d) in out.iter_mut().zip(svc.metrics.service_time_percentiles(qs)) {
+                if d > *slot {
+                    *slot = d;
+                }
+            }
+        }
+        out
     }
 }
 

@@ -14,9 +14,11 @@
 //! reports aggregate [`ServiceMetrics`] (hit rate, p50/p99 service time) —
 //! the `compile-all` CLI subcommand in production form.
 
+pub mod persist;
 pub mod service;
 pub mod similarity;
 
+pub use persist::{CacheStats, LifetimeTotals, LoadReport, PersistentCache};
 pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
 pub use similarity::{adapt_mapping, SeedPolicy, SimilarityIndex, SEED_DISTANCE_MAX};
 
@@ -357,6 +359,12 @@ pub struct BatchPlan {
     pub requests: u64,
     /// Requests served from the cross-network mapping cache.
     pub cache_hits: u64,
+    /// Cache hits served from entries replayed off the persistent disk
+    /// log (subset of `cache_hits`; 0 without a cache dir).
+    pub disk_hits: u64,
+    /// Requests that shared another request's in-flight search for the
+    /// same key (cross-request coalescing, DESIGN.md §16).
+    pub coalesced: u64,
     /// Median in-service time per request (queue + map).
     pub p50_service: Duration,
     /// 99th-percentile in-service time per request.
@@ -430,9 +438,32 @@ pub fn compile_batch_with_policy<M>(
 where
     M: Mapper + Clone + Send + 'static,
 {
+    compile_batch_persistent(networks, acc, mapper, threads, policy, None)
+}
+
+/// [`compile_batch_with_policy`] with an optional disk-backed persistent
+/// cache (DESIGN.md §16): the service replays the log before taking
+/// requests and appends every fresh result, so a second batch over the
+/// same directory performs zero mapper evaluations.
+pub fn compile_batch_persistent<M>(
+    networks: &[(String, Vec<Layer>)],
+    acc: &Accelerator,
+    mapper: &M,
+    threads: usize,
+    policy: SeedPolicy,
+    persist: Option<std::sync::Arc<PersistentCache>>,
+) -> Result<BatchPlan, MapError>
+where
+    M: Mapper + Clone + Send + 'static,
+{
     let t0 = std::time::Instant::now();
-    let svc =
-        MappingService::start_with_policy(acc.clone(), mapper.clone(), threads.max(1), policy);
+    let svc = MappingService::start_with_persist(
+        acc.clone(),
+        mapper.clone(),
+        threads.max(1),
+        policy,
+        persist,
+    );
 
     // Shard: all layers of all networks enter the queue immediately.
     let submitted: Vec<(String, Vec<(Layer, JobHandle)>)> = networks
@@ -491,6 +522,8 @@ where
         batch_time: t0.elapsed(),
         requests: metrics.requests.load(ordering),
         cache_hits: metrics.cache_hits.load(ordering),
+        disk_hits: metrics.disk_hits.load(ordering),
+        coalesced: metrics.coalesced.load(ordering),
         p50_service: percentiles[0],
         p99_service: percentiles[1],
         warm_seeded: metrics.warm_seeded.load(ordering),

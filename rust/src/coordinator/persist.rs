@@ -1,0 +1,683 @@
+//! Disk-backed persistent mapping cache — the restart-survival layer of
+//! the compilation service (DESIGN.md §16).
+//!
+//! [`PersistentCache`] keeps an append-only, checksummed log of solved
+//! mapping records under a cache directory (`--cache-dir`). Each record
+//! is a single line:
+//!
+//! ```text
+//! LMC1 <fnv1a(payload), 16 hex digits> <single-line JSON payload>
+//! ```
+//!
+//! The payload reuses the `api_v1` mapping encoder for the mapping body
+//! and carries enough context to *re-derive* everything else on load:
+//! the layer's dimensions, the objective, the accelerator fingerprint,
+//! the producing service's namespace, and the recorded score bits.
+//! [`PersistentCache::load`] replays every record through
+//! [`Mapping::validate`] and the analytical model; a record whose
+//! recomputed score no longer matches its recorded bits (cost-model
+//! drift since the record was written) is skipped rather than trusted,
+//! so the cache can never serve a stale score. Torn or corrupt tails are
+//! handled like a write-ahead log: the file is truncated at the first
+//! unreadable line and everything before it survives. Well-formed
+//! records that merely don't apply — another accelerator, another
+//! service namespace, an unknown record version — are skipped without
+//! truncation, so one log can serve many configurations.
+//!
+//! Version evolution rule: the `LMC1` tag is bumped when the payload
+//! layout changes. Loaders skip checksummed lines whose tag digit they
+//! do not recognize, so old servers ignore new records and new servers
+//! ignore obsolete ones — no migration step, the cache just re-warms.
+//!
+//! A small sidecar (`totals.v1`) accumulates lifetime service totals
+//! (requests, cache hits, fallbacks) across every process that used the
+//! directory; `cache-stats` and the serve `metrics` verb report these
+//! alongside the current process's live counters.
+
+use super::{layer_key, LayerKey};
+use crate::api::json::{self, Json};
+use crate::arch::{config, Accelerator};
+use crate::mappers::{MapOutcome, MapStatus, Objective};
+use crate::model::EvalContext;
+use crate::workload::{Layer, OpKind};
+use std::collections::HashSet;
+use std::fs::{self, File, OpenOptions};
+use std::io::{self, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+/// Tag opening every mapping record line (see the module docs for the
+/// version-evolution rule).
+const RECORD_TAG: &str = "LMC1";
+/// Tag opening the lifetime-totals sidecar line.
+const TOTALS_TAG: &str = "LMT1";
+/// Mapping log file name inside the cache directory.
+const LOG_FILE: &str = "mappings.log";
+/// Lifetime-totals sidecar file name inside the cache directory.
+const TOTALS_FILE: &str = "totals.v1";
+
+/// FNV-1a over a byte string — the same dependency-free hash the
+/// coordinator uses for [`LayerKey`] fingerprints.
+fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Structural fingerprint of an accelerator: FNV-1a over its canonical
+/// YAML serialization, so records are only replayed onto the exact
+/// hardware they were computed for.
+pub fn arch_fingerprint(acc: &Accelerator) -> u64 {
+    fnv1a(config::accelerator_to_yaml(acc).as_bytes())
+}
+
+/// Cumulative service totals across every process that has used a cache
+/// directory, persisted in the `totals.v1` sidecar.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct LifetimeTotals {
+    /// Mapping requests served.
+    pub requests: u64,
+    /// Requests answered from the in-memory cache.
+    pub cache_hits: u64,
+    /// Requests that degraded to the LOCAL fallback.
+    pub fallbacks: u64,
+}
+
+/// What [`PersistentCache::load`] reconstructed from the log.
+#[derive(Debug, Default)]
+pub struct LoadReport {
+    /// Unique `(key, outcome)` pairs ready for the in-memory cache
+    /// (first record wins on duplicate keys).
+    pub entries: Vec<(LayerKey, MapOutcome)>,
+    /// Well-formed records replayed, duplicates included.
+    pub records: usize,
+    /// Well-formed records that did not apply (other accelerator, other
+    /// namespace, unknown version, or stale score bits).
+    pub skipped: usize,
+    /// Bytes truncated off the tail after a torn or corrupt record.
+    pub truncated_bytes: u64,
+}
+
+/// Summary of the on-disk log for the `cache-stats` subcommand.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct CacheStats {
+    /// Checksummed, well-formed records in the log (all namespaces).
+    pub records: usize,
+    /// Log file size in bytes.
+    pub log_bytes: u64,
+    /// Lifetime totals from the sidecar.
+    pub totals: LifetimeTotals,
+}
+
+/// An append-only, checksummed mapping log under a cache directory. One
+/// instance per [`MappingService`](super::MappingService); several
+/// instances (even across processes) may share a directory — appends go
+/// through `O_APPEND` whole-line writes and loads filter by namespace
+/// and accelerator fingerprint.
+#[derive(Debug)]
+pub struct PersistentCache {
+    dir: PathBuf,
+    log: PathBuf,
+    /// Record-producer identity (mapper name, search seed, seed policy).
+    /// Records only replay into a service with the same namespace, so a
+    /// `random×300` search result can never warm an `exhaustive` service.
+    namespace: String,
+    /// Append handle behind a lock so concurrent workers emit whole
+    /// records (one `write_all` per line under the lock).
+    file: Mutex<File>,
+}
+
+impl PersistentCache {
+    /// Open (creating if needed) the cache directory and its log with an
+    /// empty namespace. Callers that mix mappers in one directory should
+    /// chain [`Self::with_namespace`].
+    pub fn open(dir: impl AsRef<Path>) -> io::Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        fs::create_dir_all(&dir)?;
+        let log = dir.join(LOG_FILE);
+        let file = OpenOptions::new().create(true).append(true).open(&log)?;
+        Ok(Self { dir, log, namespace: String::new(), file: Mutex::new(file) })
+    }
+
+    /// Set the record-producer namespace (see the `namespace` field).
+    pub fn with_namespace(mut self, ns: impl Into<String>) -> Self {
+        self.namespace = ns.into();
+        self
+    }
+
+    /// The cache directory this instance writes under.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Append one solved mapping. Only clean (`MapStatus::Ok`) outcomes
+    /// are persisted: degraded and fell-back mappings are circumstantial
+    /// (a deadline fired, a fault was injected) and must not pin a worse
+    /// mapping across restarts. The line is flushed before returning.
+    pub fn append(&self, layer: &Layer, outcome: &MapOutcome, acc: &Accelerator) -> io::Result<()> {
+        if !matches!(outcome.status, MapStatus::Ok) {
+            return Ok(());
+        }
+        let key = layer_key(layer, acc).for_objective(outcome.objective);
+        let payload = encode_payload(arch_fingerprint(acc), &self.namespace, &key, layer, outcome);
+        let line = format!("{RECORD_TAG} {:016x} {payload}\n", fnv1a(payload.as_bytes()));
+        let mut file = self.file.lock().unwrap_or_else(|p| p.into_inner());
+        file.write_all(line.as_bytes())?;
+        file.flush()
+    }
+
+    /// Replay the log into cache entries for `acc` and this namespace.
+    /// Corruption truncates (see the module docs); inapplicable records
+    /// are skipped and counted.
+    pub fn load(&self, acc: &Accelerator) -> LoadReport {
+        let bytes = match fs::read(&self.log) {
+            Ok(b) => b,
+            Err(_) => return LoadReport::default(),
+        };
+        let arch_fp = arch_fingerprint(acc);
+        let mut report = LoadReport::default();
+        let mut seen: HashSet<LayerKey> = HashSet::new();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            // A line without a terminating newline is a torn tail.
+            let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+                break;
+            };
+            let line = &bytes[pos..pos + nl];
+            match decode_line(line) {
+                Decoded::Corrupt => break,
+                Decoded::Skip => report.skipped += 1,
+                Decoded::Payload(doc) => {
+                    match decode_payload(&doc, acc, arch_fp, &self.namespace) {
+                        None => report.skipped += 1,
+                        Some((key, outcome)) => {
+                            report.records += 1;
+                            if seen.insert(key.clone()) {
+                                report.entries.push((key, outcome));
+                            }
+                        }
+                    }
+                }
+            }
+            pos += nl + 1;
+        }
+        if pos < bytes.len() {
+            // WAL recovery: drop the unreadable tail so the next append
+            // starts from a clean record boundary.
+            report.truncated_bytes = (bytes.len() - pos) as u64;
+            let _ = OpenOptions::new()
+                .write(true)
+                .open(&self.log)
+                .and_then(|f| f.set_len(pos as u64));
+        }
+        report
+    }
+
+    /// Log summary for `cache-stats`: checksum-validates every line but
+    /// does not replay mappings (and never truncates).
+    pub fn stats(&self) -> CacheStats {
+        let log_bytes = fs::metadata(&self.log).map(|m| m.len()).unwrap_or(0);
+        let mut records = 0usize;
+        for line in self.well_formed_payloads() {
+            let _ = line;
+            records += 1;
+        }
+        CacheStats { records, log_bytes, totals: self.read_totals() }
+    }
+
+    /// The set of [`LayerKey`] fingerprints recorded for `arch_fp`, in
+    /// any namespace — `cache-stats` intersects this with a network's
+    /// key fingerprints to report per-network coverage.
+    pub fn key_fingerprints(&self, arch_fp: u64) -> HashSet<u64> {
+        let mut keys = HashSet::new();
+        for doc in self.well_formed_payloads() {
+            let rec_arch = doc.get("arch_fp").and_then(Json::as_str).and_then(hex64);
+            if rec_arch != Some(arch_fp) {
+                continue;
+            }
+            if let Some(fp) = doc.get("key_fp").and_then(Json::as_str).and_then(hex64) {
+                keys.insert(fp);
+            }
+        }
+        keys
+    }
+
+    /// Checksummed current-version payloads, stopping at the first
+    /// corrupt line (read-only scan).
+    fn well_formed_payloads(&self) -> Vec<Json> {
+        let bytes = fs::read(&self.log).unwrap_or_default();
+        let mut docs = Vec::new();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+                break;
+            };
+            match decode_line(&bytes[pos..pos + nl]) {
+                Decoded::Corrupt => break,
+                Decoded::Skip => {}
+                Decoded::Payload(doc) => docs.push(doc),
+            }
+            pos += nl + 1;
+        }
+        docs
+    }
+
+    /// Read the lifetime-totals sidecar; zeros when missing or corrupt
+    /// (totals are best-effort operational data, never load-bearing).
+    pub fn read_totals(&self) -> LifetimeTotals {
+        let Ok(text) = fs::read_to_string(self.dir.join(TOTALS_FILE)) else {
+            return LifetimeTotals::default();
+        };
+        let Some(rest) = text.trim_end().strip_prefix(TOTALS_TAG) else {
+            return LifetimeTotals::default();
+        };
+        let Some((sum, payload)) = rest.trim_start().split_once(' ') else {
+            return LifetimeTotals::default();
+        };
+        if hex64(sum) != Some(fnv1a(payload.as_bytes())) {
+            return LifetimeTotals::default();
+        }
+        let Ok(doc) = json::parse(payload) else {
+            return LifetimeTotals::default();
+        };
+        let field = |k: &str| doc.get(k).and_then(Json::as_u64).unwrap_or(0);
+        LifetimeTotals {
+            requests: field("requests"),
+            cache_hits: field("cache_hits"),
+            fallbacks: field("fallbacks"),
+        }
+    }
+
+    /// Fold a finished service's totals into the sidecar. The write is
+    /// atomic (temp file + rename) so a crash mid-update leaves the old
+    /// totals intact rather than a torn line.
+    pub fn accumulate_totals(&self, delta: LifetimeTotals) -> io::Result<()> {
+        let cur = self.read_totals();
+        let payload = format!(
+            "{{\"requests\": {}, \"cache_hits\": {}, \"fallbacks\": {}}}",
+            cur.requests.saturating_add(delta.requests),
+            cur.cache_hits.saturating_add(delta.cache_hits),
+            cur.fallbacks.saturating_add(delta.fallbacks),
+        );
+        let line = format!("{TOTALS_TAG} {:016x} {payload}\n", fnv1a(payload.as_bytes()));
+        let tmp = self.dir.join(format!("{TOTALS_FILE}.tmp.{}", std::process::id()));
+        fs::write(&tmp, line)?;
+        fs::rename(&tmp, self.dir.join(TOTALS_FILE))
+    }
+}
+
+/// One line of the log, classified.
+enum Decoded {
+    /// Checksummed payload under the current record tag.
+    Payload(Json),
+    /// Checksummed line under a different record version — not ours.
+    Skip,
+    /// Unreadable: bad tag shape, bad checksum, or bad JSON.
+    Corrupt,
+}
+
+/// Split and checksum-verify one log line.
+fn decode_line(line: &[u8]) -> Decoded {
+    let Ok(text) = std::str::from_utf8(line) else {
+        return Decoded::Corrupt;
+    };
+    let mut parts = text.splitn(3, ' ');
+    let (Some(tag), Some(sum), Some(payload)) = (parts.next(), parts.next(), parts.next()) else {
+        return Decoded::Corrupt;
+    };
+    if hex64(sum) != Some(fnv1a(payload.as_bytes())) {
+        return Decoded::Corrupt;
+    }
+    if tag != RECORD_TAG {
+        // A checksummed line from another record version: skip, per the
+        // evolution rule. Anything else is corruption.
+        return if tag.len() == RECORD_TAG.len() && tag.starts_with("LMC") {
+            Decoded::Skip
+        } else {
+            Decoded::Corrupt
+        };
+    }
+    match json::parse(payload) {
+        Ok(doc) => Decoded::Payload(doc),
+        Err(_) => Decoded::Corrupt,
+    }
+}
+
+/// Serialize one record payload (single line, stable key order).
+fn encode_payload(
+    arch_fp: u64,
+    ns: &str,
+    key: &LayerKey,
+    layer: &Layer,
+    outcome: &MapOutcome,
+) -> String {
+    // u64 fingerprints and f64 score bits travel as hex strings: the
+    // hand-rolled JSON number is an f64 and would round them past 2^53.
+    format!(
+        "{{\"v\": 1, \"arch_fp\": \"{arch_fp:016x}\", \"ns\": \"{}\", \"key_fp\": \"{:016x}\", \
+         \"name\": \"{}\", \"op\": \"{}\", \"dims\": [{}, {}, {}, {}, {}, {}, {}], \
+         \"stride\": {}, \"dilation\": {}, \"objective\": \"{}\", \"score_bits\": \"{:016x}\", \
+         \"evaluations\": {}, \"elapsed_us\": {}, \"certified\": {}, \"mapping\": {}}}",
+        json::esc(ns),
+        key.fnv1a(),
+        json::esc(&layer.name),
+        layer.op.name(),
+        layer.n,
+        layer.m,
+        layer.c,
+        layer.r,
+        layer.s,
+        layer.p,
+        layer.q,
+        layer.stride,
+        layer.dilation,
+        outcome.objective.name(),
+        outcome.score.to_bits(),
+        outcome.evaluations,
+        outcome.elapsed.as_micros().min(u128::from(u64::MAX)) as u64,
+        outcome.certified,
+        json::mapping(&outcome.mapping),
+    )
+}
+
+/// Parse a 16-digit hex fingerprint.
+fn hex64(s: &str) -> Option<u64> {
+    u64::from_str_radix(s, 16).ok()
+}
+
+/// Rebuild `(key, outcome)` from a well-formed payload, or `None` when
+/// the record does not apply here (see [`LoadReport::skipped`]).
+fn decode_payload(
+    doc: &Json,
+    acc: &Accelerator,
+    arch_fp: u64,
+    ns: &str,
+) -> Option<(LayerKey, MapOutcome)> {
+    if doc.get("v")?.as_u64()? != 1 {
+        return None;
+    }
+    if doc.get("arch_fp").and_then(Json::as_str).and_then(hex64)? != arch_fp {
+        return None;
+    }
+    if doc.get("ns")?.as_str()? != ns {
+        return None;
+    }
+    let dims = doc.get("dims")?.as_arr()?;
+    if dims.len() != 7 {
+        return None;
+    }
+    let d: Vec<u64> = dims.iter().map(Json::as_u64).collect::<Option<_>>()?;
+    let layer = Layer {
+        name: doc.get("name")?.as_str()?.to_string(),
+        op: OpKind::parse(doc.get("op")?.as_str()?)?,
+        n: d[0],
+        m: d[1],
+        c: d[2],
+        r: d[3],
+        s: d[4],
+        p: d[5],
+        q: d[6],
+        stride: doc.get("stride")?.as_u64()?,
+        dilation: doc.get("dilation")?.as_u64()?,
+    };
+    let objective = Objective::parse(doc.get("objective")?.as_str()?)?;
+    let score_bits = doc.get("score_bits").and_then(Json::as_str).and_then(hex64)?;
+    let mapping = json::parse_mapping(doc.get("mapping")?)?;
+    mapping.validate(&layer, acc).ok()?;
+    // Replay through the live model: the recorded score must reproduce
+    // bit for bit, otherwise the cost model has moved since the record
+    // was written and a fresh search is the only honest answer.
+    let mut ctx = EvalContext::new(&layer, acc);
+    let evaluation = ctx.evaluate_into(&mapping).clone();
+    let score = objective.score(&evaluation);
+    if score.to_bits() != score_bits {
+        return None;
+    }
+    let key = layer_key(&layer, acc).for_objective(objective);
+    if key.fnv1a() != doc.get("key_fp").and_then(Json::as_str).and_then(hex64)? {
+        return None;
+    }
+    let outcome = MapOutcome {
+        mapping,
+        evaluation,
+        evaluations: doc.get("evaluations")?.as_u64()?,
+        elapsed: Duration::from_micros(doc.get("elapsed_us")?.as_u64()?),
+        objective,
+        score,
+        certified: doc.get("certified")?.as_bool()?,
+        status: MapStatus::Ok,
+    };
+    Some((key, outcome))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::{LocalMapper, Mapper};
+    use crate::workload::zoo;
+
+    fn temp_dir(tag: &str) -> PathBuf {
+        let d = std::env::temp_dir()
+            .join(format!("local-mapper-persist-{tag}-{}", std::process::id()));
+        let _ = fs::remove_dir_all(&d);
+        d
+    }
+
+    fn solved(layers: &[Layer], acc: &Accelerator) -> Vec<(Layer, MapOutcome)> {
+        layers
+            .iter()
+            .map(|l| (l.clone(), LocalMapper::new().run(l, acc).unwrap()))
+            .collect()
+    }
+
+    #[test]
+    fn round_trip_replays_alexnet_bit_identically() {
+        let dir = temp_dir("roundtrip");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let outcomes = solved(&zoo::alexnet(), &acc);
+        for (layer, outcome) in &outcomes {
+            cache.append(layer, outcome, &acc).unwrap();
+        }
+        let report = cache.load(&acc);
+        assert_eq!(report.records, outcomes.len());
+        assert_eq!(report.entries.len(), outcomes.len());
+        assert_eq!(report.skipped, 0);
+        assert_eq!(report.truncated_bytes, 0);
+        for ((layer, outcome), (key, loaded)) in outcomes.iter().zip(&report.entries) {
+            assert_eq!(*key, layer_key(layer, &acc).for_objective(outcome.objective));
+            assert_eq!(loaded.mapping, outcome.mapping, "{}: mapping drifted", layer.name);
+            assert_eq!(
+                loaded.score.to_bits(),
+                outcome.score.to_bits(),
+                "{}: score bits drifted",
+                layer.name
+            );
+            assert_eq!(loaded.evaluations, outcome.evaluations);
+            assert_eq!(loaded.certified, outcome.certified);
+        }
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn duplicate_appends_dedupe_first_wins_on_load() {
+        let dir = temp_dir("dedupe");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let (layer, outcome) = solved(&zoo::alexnet()[..1], &acc).remove(0);
+        cache.append(&layer, &outcome, &acc).unwrap();
+        cache.append(&layer, &outcome, &acc).unwrap();
+        let report = cache.load(&acc);
+        assert_eq!(report.records, 2);
+        assert_eq!(report.entries.len(), 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_and_the_prefix_survives() {
+        let dir = temp_dir("torn");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let outcomes = solved(&zoo::alexnet()[..3], &acc);
+        for (layer, outcome) in &outcomes {
+            cache.append(layer, outcome, &acc).unwrap();
+        }
+        let log = dir.join(LOG_FILE);
+        let clean_len = fs::metadata(&log).unwrap().len();
+        // Simulate a crash mid-append: a record prefix with no newline.
+        let mut f = OpenOptions::new().append(true).open(&log).unwrap();
+        f.write_all(b"LMC1 00ffee11 {\"v\": 1, \"arch").unwrap();
+        drop(f);
+        let report = cache.load(&acc);
+        assert_eq!(report.entries.len(), 3, "prefix records must survive");
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(fs::metadata(&log).unwrap().len(), clean_len, "tail not truncated");
+        // The log is clean again: appends and reloads keep working.
+        let (layer, outcome) = solved(&zoo::alexnet()[3..4], &acc).remove(0);
+        cache.append(&layer, &outcome, &acc).unwrap();
+        assert_eq!(cache.load(&acc).entries.len(), 4);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupted_checksum_truncates_from_the_bad_record() {
+        let dir = temp_dir("checksum");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let outcomes = solved(&zoo::alexnet()[..3], &acc);
+        for (layer, outcome) in &outcomes {
+            cache.append(layer, outcome, &acc).unwrap();
+        }
+        let log = dir.join(LOG_FILE);
+        let mut bytes = fs::read(&log).unwrap();
+        // Flip one payload byte of the second record: its checksum no
+        // longer matches, so recovery truncates there (WAL semantics).
+        let first_nl = bytes.iter().position(|&b| b == b'\n').unwrap();
+        bytes[first_nl + 30] ^= 0x01;
+        fs::write(&log, &bytes).unwrap();
+        let report = cache.load(&acc);
+        assert_eq!(report.entries.len(), 1, "records before the corruption survive");
+        assert!(report.truncated_bytes > 0);
+        assert_eq!(fs::metadata(&log).unwrap().len() as usize, first_nl + 1);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn foreign_arch_records_are_skipped_without_truncation() {
+        let dir = temp_dir("arch");
+        let eyeriss = presets::eyeriss();
+        let nvdla = presets::by_name("nvdla").unwrap();
+        let cache = PersistentCache::open(&dir).unwrap();
+        for (layer, outcome) in solved(&zoo::alexnet(), &eyeriss) {
+            cache.append(&layer, &outcome, &eyeriss).unwrap();
+        }
+        let report = cache.load(&nvdla);
+        assert_eq!(report.entries.len(), 0);
+        assert_eq!(report.skipped, 5);
+        assert_eq!(report.truncated_bytes, 0, "foreign records must not be destroyed");
+        assert_eq!(cache.load(&eyeriss).entries.len(), 5, "still replay on their own arch");
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn namespaces_partition_the_log() {
+        let dir = temp_dir("ns");
+        let acc = presets::eyeriss();
+        let writer = PersistentCache::open(&dir).unwrap().with_namespace("LOCAL|s42");
+        for (layer, outcome) in solved(&zoo::alexnet()[..2], &acc) {
+            writer.append(&layer, &outcome, &acc).unwrap();
+        }
+        let other = PersistentCache::open(&dir).unwrap().with_namespace("random×300|s7");
+        assert_eq!(other.load(&acc).entries.len(), 0);
+        assert_eq!(writer.load(&acc).entries.len(), 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn unknown_record_versions_are_skipped_not_truncated() {
+        let dir = temp_dir("version");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let payload = "{\"v\": 9}";
+        let line = format!("LMC9 {:016x} {payload}\n", fnv1a(payload.as_bytes()));
+        fs::write(dir.join(LOG_FILE), line).unwrap();
+        let (layer, outcome) = solved(&zoo::alexnet()[..1], &acc).remove(0);
+        cache.append(&layer, &outcome, &acc).unwrap();
+        let report = cache.load(&acc);
+        assert_eq!(report.entries.len(), 1, "records after the foreign version still load");
+        assert_eq!(report.skipped, 1);
+        assert_eq!(report.truncated_bytes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stale_score_bits_are_skipped() {
+        let dir = temp_dir("drift");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let (layer, outcome) = solved(&zoo::alexnet()[..1], &acc).remove(0);
+        cache.append(&layer, &outcome, &acc).unwrap();
+        // Simulate cost-model drift: rewrite the record with different
+        // score bits and a *valid* checksum.
+        let log = dir.join(LOG_FILE);
+        let text = fs::read_to_string(&log).unwrap();
+        let old = format!("\"score_bits\": \"{:016x}\"", outcome.score.to_bits());
+        let new = format!("\"score_bits\": \"{:016x}\"", outcome.score.to_bits() ^ 1);
+        let payload = text.trim_end().splitn(3, ' ').nth(2).unwrap().replace(&old, &new);
+        fs::write(&log, format!("{RECORD_TAG} {:016x} {payload}\n", fnv1a(payload.as_bytes())))
+            .unwrap();
+        let report = cache.load(&acc);
+        assert_eq!(report.entries.len(), 0, "a drifted score must not be trusted");
+        assert_eq!(report.skipped, 1);
+        assert_eq!(report.truncated_bytes, 0);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lifetime_totals_accumulate_across_openings() {
+        let dir = temp_dir("totals");
+        let delta = LifetimeTotals { requests: 325, cache_hits: 133, fallbacks: 1 };
+        {
+            let cache = PersistentCache::open(&dir).unwrap();
+            assert_eq!(cache.read_totals(), LifetimeTotals::default());
+            cache.accumulate_totals(delta).unwrap();
+        }
+        {
+            // A "restarted" process folds its own totals on top.
+            let cache = PersistentCache::open(&dir).unwrap();
+            assert_eq!(cache.read_totals(), delta);
+            cache.accumulate_totals(delta).unwrap();
+            assert_eq!(
+                cache.read_totals(),
+                LifetimeTotals { requests: 650, cache_hits: 266, fallbacks: 2 }
+            );
+        }
+        // Corrupt sidecars read as zeros, never as garbage.
+        fs::write(dir.join(TOTALS_FILE), "LMT1 0000000000000000 {}\n").unwrap();
+        let cache = PersistentCache::open(&dir).unwrap();
+        assert_eq!(cache.read_totals(), LifetimeTotals::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stats_summarize_without_replaying() {
+        let dir = temp_dir("stats");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        for (layer, outcome) in solved(&zoo::alexnet()[..2], &acc) {
+            cache.append(&layer, &outcome, &acc).unwrap();
+        }
+        let stats = cache.stats();
+        assert_eq!(stats.records, 2);
+        assert!(stats.log_bytes > 0);
+        let fps = cache.key_fingerprints(arch_fingerprint(&acc));
+        assert_eq!(fps.len(), 2);
+        assert!(cache.key_fingerprints(0xdead_beef).is_empty());
+        let _ = fs::remove_dir_all(&dir);
+    }
+}

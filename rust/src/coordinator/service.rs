@@ -25,6 +25,21 @@
 //! the selected mapping. Gated by [`SeedPolicy`] and by
 //! [`Mapper::accepts_seeds`], so LOCAL services pay nothing.
 //!
+//! # Service layer (DESIGN.md §16)
+//!
+//! Two request-path features turn the in-process pool into a durable
+//! compilation service. **Cross-request coalescing**: identical in-flight
+//! requests (same cache key — layer, arch, objective) share one search
+//! via a pending-request table; the first miss claims the search, later
+//! twins park their reply sender on it and are answered from the
+//! winner's result, so N concurrent identical submissions cost one
+//! evaluation budget. **Persistence**: with a
+//! [`PersistentCache`](super::persist::PersistentCache) attached
+//! ([`MappingService::start_with_persist`]), the disk log is replayed
+//! into the sharded cache at startup and every fresh result is appended
+//! and flushed — a restarted service never re-maps a layer it has seen
+//! (0 mapper evaluations on a warm restart).
+//!
 //! # Fault isolation (DESIGN.md §14)
 //!
 //! Each request body runs inside a `catch_unwind` boundary: a panicking
@@ -34,15 +49,18 @@
 //! (flagged [`MapStatus::FellBack`], never cached). Should a worker thread
 //! die anyway (a panic outside the boundary), [`MappingService::submit`]
 //! supervises the pool and respawns it. Panics, fallbacks and respawns
-//! are all counted in [`ServiceMetrics`].
+//! are all counted in [`ServiceMetrics`]. A claimed coalescing entry is
+//! resolved on *every* exit path of its search — success, typed error,
+//! contained panic → fallback — so parked waiters can never be orphaned.
 
+use super::persist::{LifetimeTotals, PersistentCache};
 use super::similarity::{adapt_mapping, SeedPolicy, SimilarityIndex};
 use super::{layer_key, LayerKey};
 use crate::arch::Accelerator;
 use crate::mappers::{LocalMapper, MapError, MapOutcome, MapStatus, Mapper};
 use crate::model::EvalContext;
 use crate::workload::Layer;
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
@@ -202,6 +220,14 @@ pub struct ServiceMetrics {
     /// Worker threads respawned by the supervisor after dying to a panic
     /// outside the containment region.
     pub respawns: AtomicU64,
+    /// Cache hits served from entries preloaded off the persistent disk
+    /// log (a subset of `cache_hits`; 0 for memory-only services).
+    pub disk_hits: AtomicU64,
+    /// Requests that parked on another request's in-flight search for
+    /// the same key instead of starting their own (DESIGN.md §16).
+    /// Counted at registration time, so tests can await coalescing
+    /// deterministically before releasing the owning search.
+    pub coalesced: AtomicU64,
     /// Cache misses answered by a mapper run that was warm-seeded with a
     /// mapping adapted from the nearest already-mapped neighbour
     /// (DESIGN.md §15).
@@ -311,17 +337,48 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
     }
 }
 
-/// The per-worker request loop. A free function (not a closure in `start`)
-/// so the respawner can spawn byte-identical replacements.
-fn worker_loop<M: Mapper>(
+/// Reply senders parked on an in-flight search, keyed by the cache key.
+/// The first miss on a key claims the search by inserting an empty
+/// entry; identical requests arriving before it completes push their
+/// reply sender (plus submission stamp, for honest service times) and
+/// are answered from the winner's result.
+type PendingTable =
+    Mutex<HashMap<LayerKey, Vec<(mpsc::Sender<Result<MapReply, MapError>>, Instant)>>>;
+
+/// The shared state one worker runs against, bundled so the respawner
+/// clones a single struct and the loop signature stays readable.
+#[derive(Clone)]
+struct WorkerContext {
     rx: Arc<Mutex<mpsc::Receiver<MapRequest>>>,
     cache: Arc<ShardedCache>,
     index: Arc<Mutex<SimilarityIndex>>,
     policy: SeedPolicy,
     metrics: Arc<ServiceMetrics>,
     acc: Accelerator,
-    mapper: M,
-) {
+    /// In-flight search registry for cross-request coalescing.
+    pending: Arc<PendingTable>,
+    /// Disk log fresh results are appended to (`None` → memory-only).
+    persist: Option<Arc<PersistentCache>>,
+    /// Keys preloaded from the disk log, for `disk_hits` attribution.
+    disk_keys: Arc<HashSet<LayerKey>>,
+}
+
+/// What one request resolved to inside the containment region.
+enum Served {
+    /// Answered from the in-memory cache.
+    Hit(MapOutcome),
+    /// Parked on another request's in-flight search for the same key;
+    /// the owning request answers it on completion.
+    Coalesced,
+    /// Fresh mapper run (outcome, warm-seed quality in milli-units).
+    Fresh(MapOutcome, Option<u64>),
+}
+
+/// The per-worker request loop. A free function (not a closure in `start`)
+/// so the respawner can spawn byte-identical replacements.
+fn worker_loop<M: Mapper>(ctx: WorkerContext, mapper: M) {
+    let WorkerContext { rx, cache, index, policy, metrics, acc, pending, persist, disk_keys } =
+        ctx;
     // Cache entries are keyed by the mapper's objective, so a
     // (hypothetical) cache shared across services can never serve a
     // delay-optimal mapping to an energy request.
@@ -352,10 +409,31 @@ fn worker_loop<M: Mapper>(
         // panic degrades this request instead of killing the worker. The
         // mapper resets its interior state on entry, so observing it after
         // an unwind is safe (hence `AssertUnwindSafe`).
+        // Set inside the containment closure when this request claims the
+        // in-flight search for `key`; read afterwards on every exit path
+        // (panic included) to resolve the pending entry.
+        let claimed = std::cell::Cell::new(false);
         let attempt = catch_unwind(AssertUnwindSafe(|| {
             crate::fault::inject(req.ordinal)?;
             if let Some(outcome) = cache.get(&key) {
-                return Ok((outcome, true, None));
+                return Ok(Served::Hit(outcome));
+            }
+            // Cross-request coalescing (DESIGN.md §16): under the pending
+            // lock, re-probe the cache (the owner may have finished
+            // between the two probes), then either park this request on
+            // an in-flight search for the same key or claim the search.
+            {
+                let mut table = pending.lock().unwrap_or_else(|p| p.into_inner());
+                if let Some(outcome) = cache.get(&key) {
+                    return Ok(Served::Hit(outcome));
+                }
+                if let Some(waiters) = table.get_mut(&key) {
+                    waiters.push((req.reply.clone(), req.submitted));
+                    metrics.coalesced.fetch_add(1, Ordering::Relaxed);
+                    return Ok(Served::Coalesced);
+                }
+                table.insert(key.clone(), Vec::new());
+                claimed.set(true);
             }
             // Warm start (DESIGN.md §15): adapt the nearest already-mapped
             // neighbour's mapping into a seed for this miss. The adapted
@@ -386,9 +464,9 @@ fn worker_loop<M: Mapper>(
                     } else {
                         1000
                     };
-                    Ok((out, false, Some(ratio_milli)))
+                    Ok(Served::Fresh(out, Some(ratio_milli)))
                 }
-                None => mapper.run(&req.layer, &acc).map(|outcome| (outcome, false, None)),
+                None => mapper.run(&req.layer, &acc).map(|outcome| Served::Fresh(outcome, None)),
             }
         }));
         let primary = match attempt {
@@ -399,11 +477,23 @@ fn worker_loop<M: Mapper>(
             }
         };
         let (result, cached) = match primary {
-            Ok((outcome, true, _)) => (Ok(outcome), true),
-            Ok((outcome, false, warm)) => {
+            // Parked: the owning request answers it, metrics included.
+            Ok(Served::Coalesced) => continue,
+            Ok(Served::Hit(outcome)) => {
+                if disk_keys.contains(&key) {
+                    metrics.disk_hits.fetch_add(1, Ordering::Relaxed);
+                }
+                (Ok(outcome), true)
+            }
+            Ok(Served::Fresh(outcome, warm)) => {
                 cache.insert(key.clone(), outcome.clone());
+                if let Some(log) = &persist {
+                    // Best-effort: an unwritable cache dir degrades
+                    // persistence, never the reply.
+                    let _ = log.append(&req.layer, &outcome, &acc);
+                }
                 if seeding {
-                    index.lock().unwrap_or_else(|p| p.into_inner()).insert(key);
+                    index.lock().unwrap_or_else(|p| p.into_inner()).insert(key.clone());
                 }
                 if let Some(ratio_milli) = warm {
                     metrics.warm_seeded.fetch_add(1, Ordering::Relaxed);
@@ -430,6 +520,26 @@ fn worker_loop<M: Mapper>(
         };
         let service_time = req.submitted.elapsed();
         metrics.record(service_time, cached, result.is_err());
+        // Resolve the coalescing entry: answer every parked waiter with
+        // this result before answering our own caller. This runs on every
+        // exit path of a claimed search — success, typed error, contained
+        // panic → fallback — so waiters can never be orphaned.
+        if claimed.get() {
+            let waiters = pending
+                .lock()
+                .unwrap_or_else(|p| p.into_inner())
+                .remove(&key)
+                .unwrap_or_default();
+            for (reply, submitted) in waiters {
+                let waited = submitted.elapsed();
+                metrics.record(waited, false, result.is_err());
+                let _ = reply.send(
+                    result
+                        .clone()
+                        .map(|outcome| MapReply { outcome, cached: false, service_time: waited }),
+                );
+            }
+        }
         // Receiver may have given up; ignore send failures.
         let _ = req.reply.send(result.map(|outcome| MapReply { outcome, cached, service_time }));
     }
@@ -447,6 +557,9 @@ pub struct MappingService {
     spawn_worker: Box<dyn Fn() -> JoinHandle<()> + Send + Sync>,
     /// Live service counters; clone the `Arc` to keep them past shutdown.
     pub metrics: Arc<ServiceMetrics>,
+    /// Attached disk cache; `Drop` folds this service's totals into its
+    /// lifetime sidecar after the workers have quiesced.
+    persist: Option<Arc<PersistentCache>>,
 }
 
 impl MappingService {
@@ -471,30 +584,67 @@ impl MappingService {
     where
         M: Mapper + Clone + Send + 'static,
     {
+        Self::start_with_persist(acc, mapper, threads, policy, None)
+    }
+
+    /// Spawn the service with an attached disk-backed persistent cache
+    /// (DESIGN.md §16): the log is replayed into the in-memory cache up
+    /// front — so a warm restart costs zero mapper evaluations — and
+    /// every fresh clean result is appended and flushed. `None` behaves
+    /// exactly like [`MappingService::start_with_policy`].
+    pub fn start_with_persist<M>(
+        acc: Accelerator,
+        mapper: M,
+        threads: usize,
+        policy: SeedPolicy,
+        persist: Option<Arc<PersistentCache>>,
+    ) -> Self
+    where
+        M: Mapper + Clone + Send + 'static,
+    {
         let (tx, rx) = mpsc::channel::<MapRequest>();
         let rx = Arc::new(Mutex::new(rx));
         let cache: Arc<ShardedCache> = Arc::new(ShardedCache::new());
         let index: Arc<Mutex<SimilarityIndex>> = Arc::new(Mutex::new(SimilarityIndex::new()));
         let metrics = Arc::new(ServiceMetrics::default());
+        // Warm restart: replay the disk log into the sharded cache (and,
+        // for seed-accepting mappers, the similarity index — yesterday's
+        // mappings warm-start today's new shapes too). Keys replayed
+        // from disk feed `disk_hits` attribution.
+        let mut disk_keys = HashSet::new();
+        if let Some(log) = &persist {
+            let seeding = policy.enabled() && mapper.accepts_seeds();
+            let loaded = log.load(&acc);
+            let mut idx = index.lock().unwrap_or_else(|p| p.into_inner());
+            for (key, outcome) in loaded.entries {
+                if seeding {
+                    idx.insert(key.clone());
+                }
+                cache.insert(key.clone(), outcome);
+                disk_keys.insert(key);
+            }
+        }
+        let ctx = WorkerContext {
+            rx,
+            cache,
+            index,
+            policy,
+            metrics: Arc::clone(&metrics),
+            acc,
+            pending: Arc::new(PendingTable::default()),
+            persist: persist.clone(),
+            disk_keys: Arc::new(disk_keys),
+        };
         // The prototype mapper sits behind a mutex so the respawner stays
         // `Sync` even for mappers with interior (`Cell`) state.
         let mapper = Mutex::new(mapper);
-        let spawn_worker: Box<dyn Fn() -> JoinHandle<()> + Send + Sync> = {
-            let metrics = Arc::clone(&metrics);
-            Box::new(move || {
-                let rx = Arc::clone(&rx);
-                let cache = Arc::clone(&cache);
-                let index = Arc::clone(&index);
-                let metrics = Arc::clone(&metrics);
-                let acc = acc.clone();
-                let mapper = mapper.lock().unwrap_or_else(|p| p.into_inner()).clone();
-                std::thread::spawn(move || {
-                    worker_loop(rx, cache, index, policy, metrics, acc, mapper)
-                })
-            })
-        };
+        let spawn_worker: Box<dyn Fn() -> JoinHandle<()> + Send + Sync> = Box::new(move || {
+            let ctx = ctx.clone();
+            let mapper = mapper.lock().unwrap_or_else(|p| p.into_inner()).clone();
+            std::thread::spawn(move || worker_loop(ctx, mapper))
+        });
         let workers = (0..threads.max(1)).map(|_| spawn_worker()).collect();
-        Self { tx: Some(tx), workers: Mutex::new(workers), spawn_worker, metrics }
+        Self { tx: Some(tx), workers: Mutex::new(workers), spawn_worker, metrics, persist }
     }
 
     /// Join workers that died to a panic outside the containment region
@@ -568,6 +718,17 @@ impl Drop for MappingService {
         for w in workers.drain(..) {
             let _ = w.join();
         }
+        // Workers have quiesced, so the counters are final: fold this
+        // service's lifetime into the cache-dir sidecar exactly once
+        // (`shutdown()` also lands here). Best-effort, like appends.
+        if let Some(log) = &self.persist {
+            let o = Ordering::Relaxed;
+            let _ = log.accumulate_totals(LifetimeTotals {
+                requests: self.metrics.requests.load(o),
+                cache_hits: self.metrics.cache_hits.load(o),
+                fallbacks: self.metrics.fallbacks.load(o),
+            });
+        }
     }
 }
 
@@ -611,10 +772,12 @@ mod tests {
             assert!(r.outcome.evaluation.energy.total_pj() > 0.0);
         }
         assert_eq!(svc.metrics.requests.load(Ordering::Relaxed), 13);
-        // Repeated VGG shapes must hit the cache (exact count depends on
-        // request interleaving across workers; at least the later
-        // duplicates hit).
-        assert!(svc.metrics.cache_hits.load(Ordering::Relaxed) >= 1);
+        // Repeated VGG shapes must be deduplicated — as a cache hit when
+        // the twin already finished, or coalesced onto it when it is
+        // still in flight (the split depends on worker interleaving).
+        let deduped = svc.metrics.cache_hits.load(Ordering::Relaxed)
+            + svc.metrics.coalesced.load(Ordering::Relaxed);
+        assert!(deduped >= 1);
         assert_eq!(svc.metrics.errors.load(Ordering::Relaxed), 0);
         assert!(svc.metrics.mean_service_time() > Duration::ZERO);
         svc.shutdown();
@@ -762,6 +925,110 @@ mod tests {
         assert!(replies.iter().all(|r| r.is_ok()));
         assert_eq!(svc.metrics.warm_seeded.load(Ordering::Relaxed), 0);
         svc.shutdown();
+    }
+
+    #[test]
+    fn concurrent_identical_requests_coalesce_into_one_search() {
+        use crate::mapping::Mapping;
+        use std::sync::atomic::AtomicBool;
+        // A mapper whose search blocks until the test opens the gate, so
+        // "identical requests while a search is in flight" is a scripted
+        // state, not a race we hope to win.
+        #[derive(Clone)]
+        struct GatedMapper {
+            gate: Arc<AtomicBool>,
+            runs: Arc<AtomicU64>,
+        }
+        impl Mapper for GatedMapper {
+            fn name(&self) -> String {
+                "gated".to_string()
+            }
+            fn map(&self, layer: &Layer, acc: &Accelerator) -> Result<Mapping, MapError> {
+                self.runs.fetch_add(1, Ordering::SeqCst);
+                while !self.gate.load(Ordering::SeqCst) {
+                    std::thread::sleep(Duration::from_millis(1));
+                }
+                LocalMapper::new().map(layer, acc)
+            }
+        }
+        let gate = Arc::new(AtomicBool::new(false));
+        let runs = Arc::new(AtomicU64::new(0));
+        let svc = MappingService::start(
+            presets::eyeriss(),
+            GatedMapper { gate: Arc::clone(&gate), runs: Arc::clone(&runs) },
+            4,
+        );
+        let layer = zoo::alexnet()[0].clone();
+        let handles: Vec<JobHandle> = (0..4).map(|_| svc.submit(layer.clone())).collect();
+        // One submission claims the (gated) search; with four workers the
+        // other three must park on it. `coalesced` is bumped at
+        // registration, so this wait is deterministic.
+        let t0 = Instant::now();
+        while svc.metrics.coalesced.load(Ordering::SeqCst) < 3 {
+            assert!(t0.elapsed() < Duration::from_secs(30), "requests never coalesced");
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        gate.store(true, Ordering::SeqCst);
+        let replies: Vec<MapReply> =
+            handles.into_iter().map(|h| h.wait().unwrap()).collect();
+        // N identical concurrent submissions → exactly one search, N
+        // identical typed replies.
+        assert_eq!(runs.load(Ordering::SeqCst), 1, "coalesced twins must share one search");
+        assert_eq!(svc.metrics.requests.load(Ordering::SeqCst), 4);
+        assert_eq!(svc.metrics.coalesced.load(Ordering::SeqCst), 3);
+        for r in &replies {
+            assert_eq!(r.outcome.mapping, replies[0].outcome.mapping);
+            assert_eq!(r.outcome.score.to_bits(), replies[0].outcome.score.to_bits());
+        }
+        svc.shutdown();
+    }
+
+    #[test]
+    fn warm_restart_serves_every_layer_from_the_persistent_cache() {
+        let dir = std::env::temp_dir()
+            .join(format!("local-mapper-svc-restart-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let layers = zoo::alexnet();
+        let open = || Arc::new(PersistentCache::open(&dir).unwrap().with_namespace("LOCAL"));
+        let cold_replies = {
+            let svc = MappingService::start_with_persist(
+                presets::eyeriss(),
+                LocalMapper::new(),
+                2,
+                SeedPolicy::default(),
+                Some(open()),
+            );
+            let replies: Vec<MapReply> =
+                svc.map_all(&layers).into_iter().map(|r| r.unwrap()).collect();
+            assert_eq!(svc.metrics.disk_hits.load(Ordering::Relaxed), 0);
+            svc.shutdown();
+            replies
+        };
+        // "Restart": a fresh service over the same directory must answer
+        // every layer from the replayed log — bit-identically, with zero
+        // mapper evaluations.
+        let svc = MappingService::start_with_persist(
+            presets::eyeriss(),
+            LocalMapper::new(),
+            2,
+            SeedPolicy::default(),
+            Some(open()),
+        );
+        let warm_replies: Vec<MapReply> =
+            svc.map_all(&layers).into_iter().map(|r| r.unwrap()).collect();
+        for (w, c) in warm_replies.iter().zip(&cold_replies) {
+            assert!(w.cached, "warm restart must serve from the disk cache");
+            assert_eq!(w.outcome.mapping, c.outcome.mapping);
+            assert_eq!(w.outcome.score.to_bits(), c.outcome.score.to_bits());
+        }
+        assert_eq!(svc.metrics.cache_hits.load(Ordering::Relaxed), 5);
+        assert_eq!(svc.metrics.disk_hits.load(Ordering::Relaxed), 5);
+        svc.shutdown();
+        // Both services folded their totals into the lifetime sidecar.
+        let totals = open().read_totals();
+        assert_eq!(totals.requests, 10);
+        assert_eq!(totals.cache_hits, 5);
+        let _ = std::fs::remove_dir_all(&dir);
     }
 
     #[test]

@@ -183,6 +183,18 @@ pub fn inject(ordinal: u64) -> Result<(), MapError> {
     }
 }
 
+/// The daemon admission hook: called by the serve loop while a request
+/// holds its admission slot, *before* the compile starts. Sleeps only
+/// when a `stall:<ms>` plan is armed — that holds the slot long enough
+/// for the backpressure tests to fill the queue deterministically — and
+/// is a single relaxed load otherwise. Other fault kinds are ignored
+/// here; they belong to the mapping-service hooks above.
+pub fn stall_daemon() {
+    if let Some(FaultKind::Stall { ms }) = plan() {
+        std::thread::sleep(Duration::from_millis(ms));
+    }
+}
+
 /// The out-of-containment hook: `true` exactly once for the
 /// `worker-death:<idx>` request, telling the worker to panic *outside* its
 /// unwind boundary so the thread dies and the supervisor must respawn it.

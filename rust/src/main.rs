@@ -23,6 +23,7 @@
 
 use local_mapper::api::{self, CompileRequest, Error, SeedPolicy, Session};
 use local_mapper::arch::{config, presets, Accelerator};
+use local_mapper::coordinator::{self, PersistentCache};
 use local_mapper::fault;
 use local_mapper::mappers::{MapError, Objective, SearchParams};
 use local_mapper::mapspace;
@@ -53,6 +54,8 @@ fn main() {
         Some("run") => finish(cmd_run(&args)),
         Some("simulate") => finish(cmd_simulate(&args, &session)),
         Some("explore") => finish(cmd_explore(&args, &session)),
+        Some("serve") => finish(cmd_serve(&args)),
+        Some("cache-stats") => finish(cmd_cache_stats(&args)),
         Some("perf") => finish(cmd_perf(&args)),
         Some("help") | None => {
             print_help();
@@ -64,7 +67,24 @@ fn main() {
             2
         }
     };
+    // `process::exit` skips Drop, but the session's services flush their
+    // lifetime totals to the persistent cache sidecar on drop — so drop
+    // explicitly (joins the worker pools) before taking the exit code.
+    drop(session);
     std::process::exit(code);
+}
+
+/// Environment fallback for `--cache-dir` (the flag wins).
+const CACHE_DIR_ENV: &str = "LOCAL_MAPPER_CACHE_DIR";
+
+/// Resolve the persistent-cache directory for the subcommands that honor
+/// it (compile, compile-all, serve, cache-stats): `--cache-dir` wins over
+/// [`CACHE_DIR_ENV`]; `None` disables persistence entirely.
+fn cache_dir(args: &Args) -> Option<String> {
+    if let Some(dir) = args.get("cache-dir") {
+        return Some(dir.to_string());
+    }
+    std::env::var(CACHE_DIR_ENV).ok().filter(|v| !v.is_empty())
 }
 
 /// Arm the deterministic fault injector before dispatch: an explicit
@@ -135,10 +155,21 @@ USAGE: local-mapper <subcommand> [options]
   simulate --layer <spec> [--arch eyeriss] [--single-buffer] [--mapper ...]
   explore  --network <name> [--arch eyeriss] [--mapper ...]
            (PE × buffer sweep, Pareto front)
+  serve    [--socket /tmp/local-mapper.sock] [--queue-limit 64]
+           [--cache-dir <dir>] [--threads 4]
+           (compile daemon: length-prefixed api_v1 JSON frames over a
+            Unix socket, verbs compile|metrics; one shared session, so
+            caches — and the disk cache — are warm across clients;
+            requests past the admission high-water mark get E_BUSY;
+            SIGINT/SIGTERM shut down cleanly)
+  cache-stats  --cache-dir <dir> [--arch eyeriss] [--objective energy]
+           (persistent-cache summary: records, bytes, lifetime totals,
+            per-network zoo coverage on the selected arch/objective)
   perf     [--smoke] [--out BENCH_eval.json]
            (evals/sec old vs context path, per-operator-kind throughput,
             exhaustive 1/2/4/8-thread scaling, engine pruned-vs-unpruned
-            and search-thread scaling, zoo batch wall time
+            and search-thread scaling, zoo batch wall time, cold vs
+            warm-restart service timings
             → machine-readable JSON)
 
 All --mapper flags accept: local|rs|ws|os|random|ga|annealing|refine|exhaustive
@@ -185,6 +216,19 @@ Search-engine flags (wherever --mapper is accepted):
                                  LOCAL itself ignores the deadline — it is
                                  the bottom rung of the degradation ladder
 
+Persistent mapping cache (compile, compile-all, serve):
+  --cache-dir <dir>              append every fresh mapping to
+                                 <dir>/mappings.log and preload the log at
+                                 service start, so a restarted process
+                                 re-serves every previously mapped layer
+                                 with zero search evaluations. Records are
+                                 keyed by layer shape, arch, objective and
+                                 producer (mapper|seed|seed-policy), and
+                                 corrupt tails are truncated on load. Also
+                                 set via LOCAL_MAPPER_CACHE_DIR (the flag
+                                 wins); omit both to reproduce the pure
+                                 in-memory pipeline bit for bit
+
 Failure isolation (map, compile, compile-all):
   --fail-fast                    abort a batch compile on the first hard
                                  layer failure (default: record it in the
@@ -204,7 +248,8 @@ Output and errors:
   exit codes                     0 ok · 2 usage (E_REQUEST) · 3 invalid
                                  input (E_WORKLOAD/E_CONFIG/E_YAML/E_IO) ·
                                  4 mapping/execution failure
-                                 (E_SEARCH/E_MAPPING/E_RUNTIME/E_PANIC);
+                                 (E_SEARCH/E_MAPPING/E_RUNTIME/E_PANIC/
+                                 E_BUSY);
                                  degraded or fell-back layers carry a
                                  valid mapping and still exit 0"
     );
@@ -325,6 +370,9 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
     // Per-shape budget default 300, like compile-all (whole-network
     // batches pay the budget once per unique layer shape).
     let mut req = base_request(args, 300)?;
+    if let Some(dir) = cache_dir(args) {
+        req = req.cache_dir(dir);
+    }
     req = if let Some(path) = args.get("network-file") {
         req.workload_file(path)
     } else {
@@ -380,7 +428,10 @@ fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
     // Batch compiles keep the historical per-shape budget default of 300
     // (325 layers × a 3000-candidate search would be a 10x wall-time
     // surprise for search mappers).
-    let req = base_request(args, 300)?.zoo();
+    let mut req = base_request(args, 300)?.zoo();
+    if let Some(dir) = cache_dir(args) {
+        req = req.cache_dir(dir);
+    }
     let r = session.compile(&req)?;
     match format {
         Format::Json => print!("{}", api::json::compile_report(&r)),
@@ -660,6 +711,61 @@ fn cmd_explore(args: &Args, session: &Session) -> Result<(), Error> {
                 );
             }
         }
+    }
+    Ok(())
+}
+
+/// Serve compiles over a Unix socket until SIGINT/SIGTERM (DESIGN.md §16).
+fn cmd_serve(args: &Args) -> Result<(), Error> {
+    let cfg = api::ServeConfig {
+        socket: args.get_or("socket", "/tmp/local-mapper.sock").to_string(),
+        queue_limit: args.get_num::<usize>("queue-limit", 64),
+        cache_dir: cache_dir(args),
+        threads: args.get_num::<usize>("threads", 4),
+    };
+    println!(
+        "serving on {} (queue limit {}, cache dir {})",
+        cfg.socket,
+        cfg.queue_limit,
+        cfg.cache_dir.as_deref().unwrap_or("none")
+    );
+    api::serve::run(cfg)
+}
+
+/// Summarize a persistent cache directory: record count, log size,
+/// lifetime totals, and per-network zoo coverage for the selected arch
+/// and objective.
+fn cmd_cache_stats(args: &Args) -> Result<(), Error> {
+    let Some(dir) = cache_dir(args) else {
+        return Err(Error::request(
+            "cache-stats needs --cache-dir <path> (or LOCAL_MAPPER_CACHE_DIR)",
+        ));
+    };
+    let log = PersistentCache::open(&dir).map_err(|e| Error::io(dir.clone(), e))?;
+    let stats = log.stats();
+    println!("cache dir: {dir}");
+    println!("records: {} ({} bytes on disk)", stats.records, stats.log_bytes);
+    println!(
+        "lifetime: {} requests, {} cache hits, {} fallbacks",
+        stats.totals.requests, stats.totals.cache_hits, stats.totals.fallbacks
+    );
+    let acc = resolve_arch(args)?;
+    let objective_spec = args.get_or("objective", "energy");
+    let objective = Objective::parse(objective_spec).ok_or_else(|| {
+        Error::request(format!("unknown objective '{objective_spec}' ({})", Objective::SPEC))
+    })?;
+    let have = log.key_fingerprints(coordinator::persist::arch_fingerprint(&acc));
+    println!("zoo coverage ({} / {}):", acc.name, objective.name());
+    for (name, layers) in local_mapper::workload::zoo::batch_zoo() {
+        let covered = layers
+            .iter()
+            .filter(|l| {
+                have.contains(
+                    &coordinator::layer_key(l, &acc).for_objective(objective).fnv1a(),
+                )
+            })
+            .count();
+        println!("  {name:>14}: {covered}/{} layers", layers.len());
     }
     Ok(())
 }

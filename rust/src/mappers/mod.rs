@@ -36,8 +36,9 @@ use crate::workload::Layer;
 use std::fmt;
 use std::time::{Duration, Instant};
 
-/// Mapper failure.
-#[derive(Debug)]
+/// Mapper failure. `Clone` so the mapping service can broadcast one
+/// search's failure to every request coalesced onto it.
+#[derive(Debug, Clone)]
 pub enum MapError {
     /// The mapper exhausted its budget/space without a valid mapping.
     NoValidMapping(String),

@@ -34,6 +34,11 @@
 //!    the heuristic side (final score never worse than unseeded).
 //! 7. **Zoo batch wall time** — [`crate::coordinator::compile_batch`] over
 //!    the operator-diverse zoo through the shared-cache service.
+//! 8. **Service restart** (schema 6) — the zoo compiled cold into an empty
+//!    persistent cache directory, then again through a *fresh* service
+//!    over the same directory (a simulated process restart,
+//!    DESIGN.md §16): the warm run must spend zero mapper evaluations,
+//!    serving every layer from the preloaded disk log.
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
 //! schema (see the README "Performance" section); the `perf` CLI
@@ -42,7 +47,10 @@
 //! iteration counts for CI.
 
 use crate::arch::{presets, Accelerator, Noc, PeArray, StorageLevel, Style};
-use crate::coordinator::{compile_batch, compile_batch_with_policy, BatchPlan, SeedPolicy};
+use crate::coordinator::{
+    compile_batch, compile_batch_persistent, compile_batch_with_policy, BatchPlan,
+    PersistentCache, SeedPolicy,
+};
 use crate::mappers::engine::{BoundedLattice, OdometerSource, SearchDriver};
 use crate::mappers::{
     ConstrainedSearch, ExhaustiveMapper, LocalMapper, Mapper, Objective, RandomMapper,
@@ -243,6 +251,29 @@ pub struct ZooBatch {
     pub cache_hit_rate: f64,
 }
 
+/// The schema-6 `service` section: the zoo through the persistent disk
+/// cache, cold (empty directory) vs warm restart (fresh service, same
+/// directory) — the amortized-cold-start numbers (DESIGN.md §16).
+#[derive(Debug, Clone)]
+pub struct ServiceSection {
+    /// Layers compiled in each run (the full zoo).
+    pub layers: usize,
+    /// Wall-clock of the cold run into the empty cache dir, ms.
+    pub cold_wall_ms: f64,
+    /// Wall-clock of the warm-restart run (fresh service, same dir), ms.
+    pub warm_wall_ms: f64,
+    /// Mapper evaluations spent on cache misses in the cold run.
+    pub cold_evaluations: u64,
+    /// Mapper evaluations spent on cache misses in the warm run — the
+    /// warm-restart contract pins this to 0.
+    pub warm_evaluations: u64,
+    /// Warm-run cache hits served from entries preloaded off disk.
+    pub disk_hits: u64,
+    /// Requests that coalesced onto an identical in-flight search, summed
+    /// over both runs.
+    pub coalesced: u64,
+}
+
 /// Everything `BENCH_eval.json` carries.
 #[derive(Debug, Clone)]
 pub struct PerfReport {
@@ -264,6 +295,8 @@ pub struct PerfReport {
     pub warm_start: Vec<WarmCase>,
     /// Zoo batch-pipeline wall time.
     pub zoo_batch: ZooBatch,
+    /// Persistent-cache cold vs warm-restart timings (schema 6).
+    pub service: ServiceSection,
 }
 
 /// Render a finite float for JSON (JSON has no NaN/Inf; rates here are
@@ -378,11 +411,21 @@ impl PerfReport {
         }
         s.push_str("  ],\n");
         s.push_str(&format!(
-            "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}}\n",
+            "  \"zoo_batch\": {{\"networks\": {}, \"layers\": {}, \"wall_ms\": {}, \"cache_hit_rate\": {}}},\n",
             self.zoo_batch.networks,
             self.zoo_batch.layers,
             jnum(self.zoo_batch.wall_ms),
             jnum(self.zoo_batch.cache_hit_rate)
+        ));
+        s.push_str(&format!(
+            "  \"service\": {{\"layers\": {}, \"cold_wall_ms\": {}, \"warm_wall_ms\": {}, \"cold_evaluations\": {}, \"warm_evaluations\": {}, \"disk_hits\": {}, \"coalesced\": {}}}\n",
+            self.service.layers,
+            jnum(self.service.cold_wall_ms),
+            jnum(self.service.warm_wall_ms),
+            self.service.cold_evaluations,
+            self.service.warm_evaluations,
+            self.service.disk_hits,
+            self.service.coalesced
         ));
         s.push_str("}\n");
         s
@@ -450,11 +493,19 @@ impl PerfReport {
             ));
         }
         s.push_str(&format!(
-            "zoo batch: {} networks, {} layers, {:.1} ms wall, {:.0}% cache hits",
+            "zoo batch: {} networks, {} layers, {:.1} ms wall, {:.0}% cache hits\n",
             self.zoo_batch.networks,
             self.zoo_batch.layers,
             self.zoo_batch.wall_ms,
             self.zoo_batch.cache_hit_rate * 100.0
+        ));
+        s.push_str(&format!(
+            "service restart: cold {:.1} ms ({} evals) → warm {:.1} ms ({} evals, {} disk hits)",
+            self.service.cold_wall_ms,
+            self.service.cold_evaluations,
+            self.service.warm_wall_ms,
+            self.service.warm_evaluations,
+            self.service.disk_hits
         ));
         s
     }
@@ -748,8 +799,63 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         cache_hit_rate: batch.hit_rate(),
     };
 
+    // Service section (schema 6): the zoo compiled cold into an empty
+    // cache directory, then through a *fresh* service over the same
+    // directory — a simulated process restart. The warm run's mapper
+    // evaluations are pinned to zero by `smoke_run_produces_sane_report`.
+    let service_dir =
+        std::env::temp_dir().join(format!("local-mapper-perf-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&service_dir);
+    let open_log = || {
+        std::sync::Arc::new(
+            PersistentCache::open(&service_dir)
+                .expect("perf cache dir opens")
+                .with_namespace("perf|LOCAL"),
+        )
+    };
+    let miss_evals = |b: &BatchPlan| -> u64 {
+        b.networks
+            .iter()
+            .flat_map(|(_, p)| &p.layers)
+            .filter(|l| !l.cached)
+            .map(|l| l.outcome.evaluations)
+            .sum()
+    };
+    let t0 = Instant::now();
+    let cold = compile_batch_persistent(
+        &networks,
+        &acc,
+        &LocalMapper::new(),
+        4,
+        SeedPolicy::Off,
+        Some(open_log()),
+    )
+    .expect("cold service zoo compiles");
+    let cold_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let t0 = Instant::now();
+    let warm = compile_batch_persistent(
+        &networks,
+        &acc,
+        &LocalMapper::new(),
+        4,
+        SeedPolicy::Off,
+        Some(open_log()),
+    )
+    .expect("warm-restart service zoo compiles");
+    let warm_wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let _ = std::fs::remove_dir_all(&service_dir);
+    let service = ServiceSection {
+        layers: cold.total_layers(),
+        cold_wall_ms,
+        warm_wall_ms,
+        cold_evaluations: miss_evals(&cold),
+        warm_evaluations: miss_evals(&warm),
+        disk_hits: warm.disk_hits,
+        coalesced: cold.coalesced + warm.coalesced,
+    };
+
     PerfReport {
-        schema: 5,
+        schema: 6,
         smoke: cfg.smoke,
         evaluator,
         per_op,
@@ -758,6 +864,7 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         bound_search,
         warm_start,
         zoo_batch,
+        service,
     }
 }
 
@@ -769,7 +876,7 @@ mod tests {
     fn smoke_run_produces_sane_report() {
         let r = run(&PerfConfig::smoke());
         assert!(r.smoke);
-        assert_eq!(r.schema, 5);
+        assert_eq!(r.schema, 6);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
         assert_eq!(
@@ -835,12 +942,23 @@ mod tests {
         assert_eq!(r.zoo_batch.networks, 8);
         assert!(r.zoo_batch.layers > 300);
         assert!(r.zoo_batch.wall_ms > 0.0);
+        // Schema-6 service section: the warm-restart contract — a fresh
+        // service over the same cache dir spends zero mapper evaluations
+        // and serves every layer from the preloaded disk log.
+        assert_eq!(r.service.layers, r.zoo_batch.layers);
+        assert!(r.service.cold_evaluations > 0, "cold run must search");
+        assert_eq!(r.service.warm_evaluations, 0, "warm restart re-searched");
+        assert_eq!(
+            r.service.disk_hits, r.service.layers as u64,
+            "every warm-run layer must be a disk hit"
+        );
+        assert!(r.service.cold_wall_ms > 0.0 && r.service.warm_wall_ms > 0.0);
     }
 
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 5,
+            schema: 6,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
@@ -887,10 +1005,19 @@ mod tests {
                 identical: true,
             }],
             zoo_batch: ZooBatch { networks: 8, layers: 325, wall_ms: 10.0, cache_hit_rate: 0.4 },
+            service: ServiceSection {
+                layers: 325,
+                cold_wall_ms: 50.0,
+                warm_wall_ms: 5.0,
+                cold_evaluations: 325,
+                warm_evaluations: 0,
+                disk_hits: 325,
+                coalesced: 3,
+            },
         };
         let json = r.to_json();
         for key in [
-            "\"schema\": 5",
+            "\"schema\": 6",
             "\"smoke\"",
             "\"evaluator\"",
             "\"legacy_evals_per_sec\"",
@@ -923,6 +1050,13 @@ mod tests {
             "\"identical\": true",
             "\"zoo_batch\"",
             "\"cache_hit_rate\"",
+            "\"service\"",
+            "\"cold_wall_ms\": 50.000",
+            "\"warm_wall_ms\": 5.000",
+            "\"cold_evaluations\": 325",
+            "\"warm_evaluations\": 0",
+            "\"disk_hits\": 325",
+            "\"coalesced\": 3",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -933,6 +1067,7 @@ mod tests {
         assert!(r.summary().contains("scale random 2T"));
         assert!(r.summary().contains("bound VGG16_conv9@eyeriss"));
         assert!(r.summary().contains("warm exhaustive@bert"));
+        assert!(r.summary().contains("service restart"));
     }
 
     #[test]

@@ -28,7 +28,7 @@ fn help_lists_subcommands() {
     assert_eq!(code, 0);
     for sub in [
         "map", "compile", "compile-all", "table3", "fig3", "fig7", "mapspace", "arch", "run",
-        "simulate", "explore", "perf",
+        "simulate", "explore", "serve", "cache-stats", "perf",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
@@ -44,6 +44,8 @@ fn help_lists_subcommands() {
         "--inject-fault",
         "--seed-policy",
         "--recompile-from",
+        "--cache-dir",
+        "--queue-limit",
     ] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
@@ -531,7 +533,7 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
     for key in [
-        "\"schema\": 5",
+        "\"schema\": 6",
         "\"evaluator\"",
         "\"per_op\"",
         "\"exhaustive\"",
@@ -544,6 +546,8 @@ fn perf_smoke_writes_valid_bench_json() {
         "\"warm_start\"",
         "\"warm_seeded\"",
         "\"zoo_batch\"",
+        "\"service\"",
+        "\"warm_evaluations\": 0",
         "\"smoke\": true",
     ] {
         assert!(json.contains(key), "missing {key} in {json}");
@@ -552,6 +556,51 @@ fn perf_smoke_writes_valid_bench_json() {
     // condition the CI validation step rejects.
     assert!(!json.contains("\"legacy_evals_per_sec\": 0.000"), "{json}");
     assert!(!json.contains("\"context_evals_per_sec\": 0.000"), "{json}");
+}
+
+#[test]
+fn cache_dir_warm_restart_is_fully_cached_and_bit_identical() {
+    // The tentpole contract end to end: two *separate processes* compile
+    // the same network with the same --cache-dir; the second must serve
+    // every layer from the disk log ("cached": true across the board)
+    // with bit-identical mappings and scores.
+    let dir = std::env::temp_dir().join(format!("lm_cli_cache_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = dir.to_str().unwrap();
+    let args = [
+        "compile", "--network", "alexnet", "--threads", "1", "--format", "json",
+        "--cache-dir", d,
+    ];
+    let (cold, stderr, code) = run(&args);
+    assert_eq!(code, 0, "{stderr}");
+    let (warm, stderr, code) = run(&args);
+    assert_eq!(code, 0, "{stderr}");
+    let cold_layers = first_network_layers(&parse(&cold).expect("cold JSON parses"));
+    let warm_layers = first_network_layers(&parse(&warm).expect("warm JSON parses"));
+    assert_eq!(warm_layers.len(), 5);
+    for l in &warm_layers {
+        assert_eq!(l.get("cached").and_then(Json::as_bool), Some(true), "{warm}");
+    }
+    for (a, b) in cold_layers.iter().zip(&warm_layers) {
+        assert_eq!(layer_identity(a), layer_identity(b), "restart perturbed a layer");
+    }
+
+    // cache-stats over the same directory: one record per unique layer,
+    // lifetime totals spanning both processes, full alexnet coverage.
+    let (stats, stderr, code) = run(&["cache-stats", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stats.contains("records: 5"), "{stats}");
+    assert!(stats.contains("lifetime: 10 requests, 5 cache hits"), "{stats}");
+    assert!(stats.contains("alexnet"), "{stats}");
+    assert!(stats.contains("5/5"), "{stats}");
+
+    // Without a directory, cache-stats is a usage error pointing at the
+    // flag and the environment variable.
+    let (_, stderr, code) = run(&["cache-stats"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--cache-dir"), "{stderr}");
+    assert!(stderr.contains("LOCAL_MAPPER_CACHE_DIR"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
 }
 
 #[test]

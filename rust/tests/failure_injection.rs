@@ -249,6 +249,61 @@ fn dead_worker_is_respawned_on_the_next_submission() {
     svc.shutdown();
 }
 
+/// One framed request/reply round trip against a serve-daemon socket.
+fn daemon_request(socket: &str, payload: &str) -> String {
+    use std::io::{Read, Write};
+    let mut s = std::os::unix::net::UnixStream::connect(socket).expect("daemon socket accepts");
+    s.write_all(&(payload.len() as u32).to_be_bytes()).unwrap();
+    s.write_all(payload.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut header = [0u8; 4];
+    s.read_exact(&mut header).unwrap();
+    let mut buf = vec![0u8; u32::from_be_bytes(header) as usize];
+    s.read_exact(&mut buf).unwrap();
+    String::from_utf8(buf).unwrap()
+}
+
+#[test]
+fn stalled_daemon_sheds_load_with_busy_then_recovers() {
+    // Arm `stall:400` and hold the daemon's single admission slot with a
+    // slow request: a concurrent request must be shed with a typed E_BUSY
+    // document (not queued, not dropped), the stalled request itself must
+    // still complete, and after disarming the daemon serves normally.
+    use local_mapper::api::json::{parse, Json};
+    use local_mapper::api::serve::{spawn, ServeConfig};
+    let _guard = FAULT_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+    let dir = std::env::temp_dir().join(format!("lm_fail_stall_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    let socket = dir.join("daemon.sock").to_str().unwrap().to_string();
+    let handle =
+        spawn(ServeConfig { socket: socket.clone(), queue_limit: 1, ..ServeConfig::default() })
+            .expect("daemon binds");
+    let fault = fault::arm_guard(FaultKind::Stall { ms: 400 });
+    let compile = "{\"verb\": \"compile\", \"layer\": \"alexnet:1\", \"threads\": 1}";
+    let slow = {
+        let socket = socket.clone();
+        std::thread::spawn(move || daemon_request(&socket, compile))
+    };
+    // Let the slow request claim the slot; the daemon stalls well past
+    // this window, so the shed below cannot race the slot release.
+    std::thread::sleep(Duration::from_millis(100));
+    let shed = parse(&daemon_request(&socket, compile)).expect("busy doc parses");
+    assert_eq!(shed.get("kind").and_then(Json::as_str), Some("error"));
+    assert_eq!(shed.get("code").and_then(Json::as_str), Some("E_BUSY"));
+    let doc = parse(&slow.join().expect("stalled request thread")).unwrap();
+    assert_eq!(
+        doc.get("kind").and_then(Json::as_str),
+        Some("compile"),
+        "a stall delays, it must not fail the admitted request"
+    );
+    drop(fault);
+    let doc = parse(&daemon_request(&socket, compile)).unwrap();
+    assert_eq!(doc.get("kind").and_then(Json::as_str), Some("compile"), "post-stall recovery");
+    handle.stop();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 #[test]
 fn constrained_search_reports_exhaustion() {
     // With budget 1 on a heavily constrained space the search may fail to

@@ -906,6 +906,68 @@ fn prop_heuristic_seeding_never_worsens_the_score() {
 }
 
 #[test]
+fn prop_persist_roundtrip_is_bit_identical_over_the_zoo() {
+    // The disk log's contract (DESIGN.md §16): every clean outcome
+    // appended for the full zoo × all three presets survives a reopen
+    // bit-identically — same mapping, same score bits, same evaluation
+    // count — and a load replays only records of its own accelerator
+    // fingerprint and namespace.
+    use local_mapper::coordinator::PersistentCache;
+    use local_mapper::mappers::MapOutcome;
+    use std::collections::HashMap;
+    let dir = std::env::temp_dir().join(format!("lm_prop_persist_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let log = PersistentCache::open(&dir).unwrap().with_namespace("prop|LOCAL");
+    let mut expected: HashMap<String, HashMap<_, MapOutcome>> = HashMap::new();
+    let mut n_layers = 0usize;
+    for acc in presets::all() {
+        n_layers = 0;
+        let per_acc = expected.entry(acc.name.clone()).or_default();
+        for (_, layers) in zoo::batch_zoo() {
+            for layer in &layers {
+                n_layers += 1;
+                let out = LocalMapper::new().run(layer, &acc).unwrap();
+                log.append(layer, &out, &acc).unwrap();
+                let key = layer_key(layer, &acc).for_objective(out.objective);
+                // First record wins on reload; LOCAL is deterministic so
+                // duplicates carry the same mapping anyway.
+                per_acc.entry(key).or_insert(out);
+            }
+        }
+    }
+    for acc in presets::all() {
+        // A fresh handle — a process restart — replays exactly the
+        // per-accelerator subset, bit for bit.
+        let reopened = PersistentCache::open(&dir).unwrap().with_namespace("prop|LOCAL");
+        let report = reopened.load(&acc);
+        let per_acc = &expected[&acc.name];
+        assert_eq!(report.truncated_bytes, 0, "{}: clean log must not truncate", acc.name);
+        assert_eq!(report.records, n_layers, "{}: every record must replay", acc.name);
+        assert_eq!(report.skipped, 2 * n_layers, "{}: other presets' records skip", acc.name);
+        assert_eq!(report.entries.len(), per_acc.len(), "{}: unique keys", acc.name);
+        for (key, out) in &report.entries {
+            let want = per_acc.get(key).unwrap_or_else(|| panic!("{}: alien key", acc.name));
+            assert_eq!(out.mapping, want.mapping, "{}: mapping drifted", acc.name);
+            assert_eq!(out.score.to_bits(), want.score.to_bits(), "{}: score bits", acc.name);
+            assert_eq!(out.evaluations, want.evaluations, "{}: evaluation count", acc.name);
+            assert_eq!(out.certified, want.certified, "{}: certified flag", acc.name);
+            assert_eq!(
+                out.evaluation.energy.total_pj().to_bits(),
+                want.evaluation.energy.total_pj().to_bits(),
+                "{}: energy bits",
+                acc.name
+            );
+        }
+    }
+    // A different producer namespace sees none of it.
+    let stranger = PersistentCache::open(&dir).unwrap().with_namespace("prop|other");
+    let report = stranger.load(&presets::eyeriss());
+    assert_eq!(report.entries.len(), 0, "namespaces must not bleed");
+    assert_eq!(report.records, 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn prop_dim_coverage_under_mutation_stress() {
     // Hammer the mapping with random factor migrations + repairs; coverage
     // (Π factors == bound) must never break.

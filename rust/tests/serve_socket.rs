@@ -1,0 +1,136 @@
+//! End-to-end tests for the `serve` daemon: a real Unix socket, real
+//! length-prefixed frames, real client connections (DESIGN.md §16).
+//!
+//! The tests cover the three service-layer contracts:
+//! * one shared session across connections — the second compile of a
+//!   network is 100% cached no matter which connection sends it;
+//! * warm restart — a *new* daemon over the same `--cache-dir` serves
+//!   every layer from the disk log (`disk_hits` == layers);
+//! * backpressure — past the admission high-water mark a request gets a
+//!   typed `E_BUSY` error document instead of queueing.
+
+use local_mapper::api::json::{parse, Json};
+use local_mapper::api::serve::{spawn, ServeConfig};
+use std::io::{Read, Write};
+use std::os::unix::net::UnixStream;
+
+/// Unique per-test scratch paths (the tests run concurrently in one
+/// process, so the socket and cache dir carry the test tag and the pid).
+fn scratch(tag: &str) -> (String, String) {
+    let base = std::env::temp_dir().join(format!("lm_serve_{}_{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    (
+        base.join("daemon.sock").to_str().unwrap().to_string(),
+        base.join("cache").to_str().unwrap().to_string(),
+    )
+}
+
+/// One request/reply round trip on a fresh connection.
+fn request(socket: &str, payload: &str) -> String {
+    let mut s = UnixStream::connect(socket).expect("daemon socket accepts");
+    s.write_all(&(payload.len() as u32).to_be_bytes()).unwrap();
+    s.write_all(payload.as_bytes()).unwrap();
+    s.flush().unwrap();
+    let mut header = [0u8; 4];
+    s.read_exact(&mut header).unwrap();
+    let mut buf = vec![0u8; u32::from_be_bytes(header) as usize];
+    s.read_exact(&mut buf).unwrap();
+    String::from_utf8(buf).unwrap()
+}
+
+/// The `cached` flags of a compile document's first network.
+fn cached_flags(doc: &Json) -> Vec<bool> {
+    doc.get("networks").unwrap().as_arr().unwrap()[0]
+        .get("layers")
+        .unwrap()
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|l| l.get("cached").unwrap().as_bool().unwrap())
+        .collect()
+}
+
+/// The value of one `local_mapper_<name> <value>` metrics line.
+fn metric(text: &str, name: &str) -> f64 {
+    let prefix = format!("local_mapper_{name} ");
+    text.lines()
+        .find_map(|l| l.strip_prefix(&prefix))
+        .unwrap_or_else(|| panic!("metrics missing {name}:\n{text}"))
+        .trim()
+        .parse()
+        .unwrap()
+}
+
+const COMPILE: &str = "{\"verb\": \"compile\", \"network\": \"alexnet\", \"threads\": 1}";
+
+#[test]
+fn daemon_shares_one_cache_across_connections_and_restarts_warm() {
+    let (socket, cache) = scratch("warm");
+
+    // Daemon A, cold: the first compile searches, the second — on a brand
+    // new connection — is 100% cached from the shared session.
+    let a = spawn(ServeConfig {
+        socket: socket.clone(),
+        cache_dir: Some(cache.clone()),
+        ..ServeConfig::default()
+    })
+    .expect("daemon A binds");
+    let cold = parse(&request(&socket, COMPILE)).expect("cold compile doc parses");
+    assert_eq!(cold.get("kind").and_then(Json::as_str), Some("compile"));
+    assert!(cached_flags(&cold).iter().all(|&c| !c), "cold run must search");
+    let second = parse(&request(&socket, COMPILE)).expect("second compile doc parses");
+    assert!(cached_flags(&second).iter().all(|&c| c), "cross-connection cache miss");
+    let m = request(&socket, "{\"verb\": \"metrics\"}");
+    assert_eq!(metric(&m, "requests_total"), 10.0, "{m}");
+    assert_eq!(metric(&m, "cache_hits_total"), 5.0, "{m}");
+    assert_eq!(metric(&m, "disk_hits_total"), 0.0, "nothing was on disk yet: {m}");
+    assert_eq!(metric(&m, "queue_depth"), 0.0, "{m}");
+    a.stop();
+
+    // Daemon B over the same cache dir: a *process restart*. Every layer
+    // is served from the preloaded disk log — zero evaluations re-spent —
+    // and the lifetime totals span both daemons.
+    let b = spawn(ServeConfig {
+        socket: socket.clone(),
+        cache_dir: Some(cache),
+        ..ServeConfig::default()
+    })
+    .expect("daemon B binds");
+    let warm = parse(&request(&socket, COMPILE)).expect("warm compile doc parses");
+    assert!(cached_flags(&warm).iter().all(|&c| c), "warm restart re-searched");
+    let m = request(&socket, "{\"verb\": \"metrics\"}");
+    assert_eq!(metric(&m, "disk_hits_total"), 5.0, "{m}");
+    assert_eq!(metric(&m, "lifetime_requests_total"), 10.0, "daemon A's totals: {m}");
+    b.stop();
+}
+
+#[test]
+fn zero_queue_limit_rejects_with_typed_busy() {
+    let (socket, _) = scratch("busy");
+    let h = spawn(ServeConfig { socket: socket.clone(), queue_limit: 0, ..ServeConfig::default() })
+        .expect("daemon binds");
+    let doc = parse(&request(&socket, COMPILE)).expect("busy doc parses");
+    assert_eq!(doc.get("kind").and_then(Json::as_str), Some("error"));
+    assert_eq!(doc.get("code").and_then(Json::as_str), Some("E_BUSY"));
+    assert!(doc.get("queue_depth").and_then(Json::as_u64).is_some());
+    // Metrics still answer — backpressure applies to compiles only.
+    let m = request(&socket, "{\"verb\": \"metrics\"}");
+    assert_eq!(metric(&m, "requests_total"), 0.0, "{m}");
+    h.stop();
+}
+
+#[test]
+fn malformed_frames_get_typed_error_documents() {
+    let (socket, _) = scratch("err");
+    let h = spawn(ServeConfig { socket: socket.clone(), ..ServeConfig::default() })
+        .expect("daemon binds");
+    let doc = parse(&request(&socket, "{\"verb\": \"frobnicate\"}")).unwrap();
+    assert_eq!(doc.get("code").and_then(Json::as_str), Some("E_REQUEST"));
+    let doc = parse(&request(&socket, "not json")).unwrap();
+    assert_eq!(doc.get("code").and_then(Json::as_str), Some("E_JSON"));
+    let doc = parse(&request(&socket, "{\"network\": \"hal9000\"}")).unwrap();
+    assert_eq!(doc.get("kind").and_then(Json::as_str), Some("error"));
+    assert_eq!(doc.get("code").and_then(Json::as_str), Some("E_REQUEST"));
+    h.stop();
+}
