@@ -177,6 +177,14 @@ pub fn compile_report(r: &CompileReport) -> String {
         jf(r.seed_quality),
         r.incremental_reused
     ));
+    s.push_str(&format!(
+        "  \"graph\": {{\"mode\": \"{}\", \"groups\": {}, \"fused_layers\": {}, \"cross_layer_dram_bytes\": {}, \"dram_bytes_saved\": {}}},\n",
+        r.graph.mode.name(),
+        r.graph.groups,
+        r.graph.fused_layers,
+        r.graph.cross_layer_dram_bytes,
+        r.graph.dram_bytes_saved
+    ));
     if r.failures.is_empty() {
         s.push_str("  \"failures\": [],\n");
     } else {
@@ -713,6 +721,7 @@ mod tests {
                 "totals",
                 "cache",
                 "warm",
+                "graph",
                 "failures",
                 "compile_time_ms"
             ]
@@ -721,6 +730,16 @@ mod tests {
         assert_eq!(warm.keys(), vec!["policy", "seeded", "seed_quality", "incremental_reused"]);
         assert_eq!(warm.get("policy").unwrap().as_str(), Some("adapt"));
         assert_eq!(warm.get("incremental_reused").unwrap().as_u64(), Some(0));
+        let graph = v.get("graph").unwrap();
+        assert_eq!(
+            graph.keys(),
+            vec!["mode", "groups", "fused_layers", "cross_layer_dram_bytes", "dram_bytes_saved"]
+        );
+        // Default requests run with graph mode off: zero groups, but the
+        // baseline cross-layer traffic estimate is still reported.
+        assert_eq!(graph.get("mode").unwrap().as_str(), Some("off"));
+        assert_eq!(graph.get("groups").unwrap().as_u64(), Some(0));
+        assert!(graph.get("cross_layer_dram_bytes").unwrap().as_u64().unwrap() > 0);
         assert!(v.get("failures").unwrap().as_arr().unwrap().is_empty());
         let nets = v.get("networks").unwrap().as_arr().unwrap();
         assert_eq!(nets.len(), 1);

@@ -46,6 +46,7 @@ pub mod serve;
 pub mod session;
 
 pub use crate::coordinator::SeedPolicy;
+pub use crate::graph::{GraphMode, GraphReport};
 pub use request::{ArchSpec, CompileRequest, WorkloadSpec};
 pub use serve::{ServeConfig, ServeHandle};
 pub use session::{

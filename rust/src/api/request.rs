@@ -11,6 +11,7 @@
 use super::Error;
 use crate::arch::{config, presets, Accelerator};
 use crate::coordinator::SeedPolicy;
+use crate::graph::GraphMode;
 use crate::mappers::{AnyMapper, Objective, SearchParams};
 use crate::workload::{config as wconfig, zoo, Layer};
 
@@ -79,6 +80,12 @@ pub struct CompileRequest {
     /// even across processes — cost zero mapper evaluations. `None`
     /// (default) keeps the service memory-only.
     pub cache_dir: Option<String>,
+    /// Graph-level compilation mode (DESIGN.md §17; CLI `--graph-mode`):
+    /// `Off` (default) keeps the flat per-layer pipeline bit for bit,
+    /// `Fuse` runs the DAG fusion pass, `CoSelect` additionally scores
+    /// fused groups with the chosen mappings' DRAM traffic. Analysis-only
+    /// in every mode — per-layer mappings never change.
+    pub graph_mode: GraphMode,
 }
 
 impl Default for CompileRequest {
@@ -92,6 +99,7 @@ impl Default for CompileRequest {
             fail_fast: false,
             seed_policy: SeedPolicy::default(),
             cache_dir: None,
+            graph_mode: GraphMode::default(),
         }
     }
 }
@@ -240,6 +248,13 @@ impl CompileRequest {
     /// Set the mapping-service worker-thread count.
     pub fn threads(mut self, threads: usize) -> Self {
         self.threads = threads.max(1);
+        self
+    }
+
+    /// Set the graph-level compilation mode ([`GraphMode::Off`] keeps the
+    /// flat per-layer pipeline bit for bit).
+    pub fn graph_mode(mut self, mode: GraphMode) -> Self {
+        self.graph_mode = mode;
         self
     }
 

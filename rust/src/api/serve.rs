@@ -430,6 +430,15 @@ fn request_from(doc: &Json, cfg: &ServeConfig) -> Result<CompileRequest, Error> 
         })?;
         req = req.seed_policy(policy);
     }
+    if let Some(g) = doc.get("graph_mode").and_then(Json::as_str) {
+        let mode = crate::graph::GraphMode::parse(g).ok_or_else(|| {
+            Error::request(format!(
+                "unknown graph mode {g:?} (expected {})",
+                crate::graph::GraphMode::SPEC
+            ))
+        })?;
+        req = req.graph_mode(mode);
+    }
     if let Some(dir) = &cfg.cache_dir {
         req = req.cache_dir(dir.clone());
     }

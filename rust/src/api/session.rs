@@ -232,6 +232,11 @@ pub struct CompileReport {
     /// Layers reused verbatim from a previous report by
     /// [`Session::recompile`] (always 0 on ordinary compiles).
     pub incremental_reused: u64,
+    /// Graph-level compilation summary (DESIGN.md §17): fused groups,
+    /// fused layer count and estimated cross-layer DRAM traffic. Present
+    /// in every mode — under `off` it carries the unfused baseline with
+    /// zero groups, so `fuse`/`co_select` runs are directly comparable.
+    pub graph: crate::graph::GraphReport,
 }
 
 impl CompileReport {
@@ -418,6 +423,30 @@ fn warm_delta(metrics: &ServiceMetrics, warm0: (u64, u64)) -> (u64, f64) {
     let quality_milli =
         metrics.seed_quality_milli.load(Ordering::Relaxed).saturating_sub(warm0.1);
     (seeded, quality_milli as f64 / (seeded as f64 * 1000.0))
+}
+
+/// Run the graph-level analysis for one finished compile (DESIGN.md §17).
+/// Strictly additive reporting: the per-layer mapping work above is
+/// identical in every [`crate::graph::GraphMode`], so `off` stays bit-identical to the
+/// flat pipeline. Under `CoSelect` the finished layers' mappings feed the
+/// cross-layer DRAM scoring; under `off`/`fuse` the index stays empty
+/// (static volume accounting).
+fn graph_report(
+    mode: crate::graph::GraphMode,
+    resolved: &ResolvedRequest,
+    objective: Objective,
+    networks: &[NetworkReport],
+) -> crate::graph::GraphReport {
+    let mut mappings = crate::graph::MappingIndex::new();
+    if mode == crate::graph::GraphMode::CoSelect {
+        for nr in networks {
+            for lr in &nr.layers {
+                mappings
+                    .insert((nr.name.clone(), lr.layer.name.clone()), lr.outcome.mapping.clone());
+            }
+        }
+    }
+    crate::graph::analyze(&resolved.networks, &resolved.acc, mode, objective, &mappings)
 }
 
 /// Attach network/layer context to a service-side mapping failure.
@@ -616,6 +645,7 @@ impl Session {
 
         let percentiles = metrics.service_time_percentiles(&[0.50, 0.99]);
         let (warm_seeded, seed_quality) = warm_delta(&metrics, warm0);
+        let graph = graph_report(req.graph_mode, &resolved, objective, &networks);
         Ok(CompileReport {
             workload,
             acc: resolved.acc,
@@ -632,6 +662,7 @@ impl Session {
             warm_seeded,
             seed_quality,
             incremental_reused: 0,
+            graph,
         })
     }
 
@@ -803,6 +834,7 @@ impl Session {
         self.incremental_reused.fetch_add(reused, Ordering::Relaxed);
         let percentiles = svc.metrics.service_time_percentiles(&[0.50, 0.99]);
         let (warm_seeded, seed_quality) = warm_delta(&svc.metrics, warm0);
+        let graph = graph_report(req.graph_mode, &resolved, objective, &networks);
         Ok(CompileReport {
             workload,
             acc: resolved.acc,
@@ -819,6 +851,7 @@ impl Session {
             warm_seeded,
             seed_quality,
             incremental_reused: reused,
+            graph,
         })
     }
 
@@ -979,6 +1012,35 @@ mod tests {
         // Identical outcomes from cache.
         for (a, b) in cold.networks[0].layers.iter().zip(&warm.networks[0].layers) {
             assert_eq!(a.outcome.mapping, b.outcome.mapping);
+        }
+    }
+
+    #[test]
+    fn graph_modes_report_savings_without_touching_mappings() {
+        use crate::graph::GraphMode;
+        let session = Session::new();
+        let off = session.compile(&quick("mobilenetv2res")).unwrap();
+        let fuse =
+            session.compile(&quick("mobilenetv2res").graph_mode(GraphMode::Fuse)).unwrap();
+        let co =
+            session.compile(&quick("mobilenetv2res").graph_mode(GraphMode::CoSelect)).unwrap();
+        // Off carries the baseline with zero groups.
+        assert_eq!(off.graph.mode, GraphMode::Off);
+        assert_eq!(off.graph.groups, 0);
+        assert!(off.graph.cross_layer_dram_bytes > 0);
+        // The acceptance criterion: fuse forms multi-node groups and
+        // reports strictly lower cross-layer DRAM bytes than off.
+        assert!(fuse.graph.groups >= 1);
+        assert!(fuse.graph.fused_layers >= 2 * fuse.graph.groups);
+        assert!(fuse.graph.cross_layer_dram_bytes < off.graph.cross_layer_dram_bytes);
+        assert!(co.graph.groups >= 1);
+        assert!(co.graph.cross_layer_dram_bytes < off.graph.cross_layer_dram_bytes);
+        // Analysis-only: per-layer mappings and scores are identical in
+        // every mode, and all three requests share one service/cache.
+        assert_eq!(session.metrics().services, 1);
+        for (a, b) in off.networks[0].layers.iter().zip(&fuse.networks[0].layers) {
+            assert_eq!(a.outcome.mapping, b.outcome.mapping);
+            assert_eq!(a.outcome.score, b.outcome.score);
         }
     }
 

@@ -18,7 +18,7 @@ pub mod persist;
 pub mod service;
 pub mod similarity;
 
-pub use persist::{CacheStats, LifetimeTotals, LoadReport, PersistentCache};
+pub use persist::{CacheStats, CompactReport, LifetimeTotals, LoadReport, PersistentCache};
 pub use service::{JobHandle, MapReply, MappingService, ServiceMetrics};
 pub use similarity::{adapt_mapping, SeedPolicy, SimilarityIndex, SEED_DISTANCE_MAX};
 
@@ -67,6 +67,12 @@ pub struct LayerKey {
     /// The objective the mapper optimized (distinct objectives must never
     /// share a cache entry).
     pub objective: Objective,
+    /// Fused-group fingerprint when this entry belongs to a graph-level
+    /// fused group ([`crate::graph::fuse::FusedGroup::member_keys`]);
+    /// `None` for plain per-layer entries. Group-scoped entries live in
+    /// the same caches without ever colliding with the plain key for the
+    /// same shape.
+    pub group: Option<u64>,
 }
 
 impl LayerKey {
@@ -80,6 +86,7 @@ impl LayerKey {
             stride: layer.stride,
             dilation: layer.dilation,
             objective: Objective::Energy,
+            group: None,
         }
     }
 
@@ -87,6 +94,15 @@ impl LayerKey {
     /// service always key by `mapper.objective()`).
     pub fn for_objective(mut self, objective: Objective) -> Self {
         self.objective = objective;
+        self
+    }
+
+    /// Builder: scope the key to a fused group by its fingerprint
+    /// ([`crate::graph::fuse::FusedGroup::fingerprint`]). Group-scoped
+    /// keys render, hash and fingerprint differently from the plain key,
+    /// so the two kinds of entry never alias in any cache.
+    pub fn with_group(mut self, fingerprint: u64) -> Self {
+        self.group = Some(fingerprint);
         self
     }
 
@@ -103,7 +119,13 @@ impl LayerKey {
         }
         h = fnv_bytes(h, &self.stride.to_le_bytes());
         h = fnv_bytes(h, &self.dilation.to_le_bytes());
-        fnv_bytes(h, self.objective.name().as_bytes())
+        h = fnv_bytes(h, self.objective.name().as_bytes());
+        // Only group-scoped keys hash the fingerprint: plain keys keep the
+        // exact pre-graph byte stream, so persisted cache logs stay valid.
+        if let Some(g) = self.group {
+            h = fnv_bytes(h, &g.to_le_bytes());
+        }
+        h
     }
 
     /// Shard index for an `n`-shard cache.
@@ -138,7 +160,13 @@ impl std::fmt::Display for LayerKey {
             self.stride,
             self.dilation,
             self.objective
-        )
+        )?;
+        // Group-scoped keys carry a suffix; plain keys render exactly the
+        // pre-graph canonical form (pinned by `layer_key_display_is_canonical`).
+        if let Some(g) = self.group {
+            write!(f, "|g{g:016x}")?;
+        }
+        Ok(())
     }
 }
 
@@ -604,6 +632,23 @@ mod tests {
             layer_key(&mm, &acc).for_objective(Objective::Edp).to_string(),
             format!("{}|matmul|n1m768c768r1s1p128q1st1di1|edp", acc.name)
         );
+    }
+
+    #[test]
+    fn group_scoped_layer_keys_never_alias_plain_keys() {
+        // Graph-level fused groups scope their members' cache entries with
+        // the group fingerprint; the plain key's rendering, equality and
+        // fnv1a stream must stay byte-identical to the pre-graph form.
+        let acc = presets::eyeriss();
+        let l = zoo::vgg16()[0].clone();
+        let plain = layer_key(&l, &acc);
+        let grouped = layer_key(&l, &acc).with_group(0xdead_beef);
+        assert_ne!(plain, grouped);
+        assert_ne!(plain.fnv1a(), grouped.fnv1a());
+        assert_eq!(grouped.to_string(), format!("{plain}|g00000000deadbeef"));
+        assert_eq!(plain.group, None);
+        // Distinct groups, distinct keys.
+        assert_ne!(grouped.fnv1a(), layer_key(&l, &acc).with_group(1).fnv1a());
     }
 
     #[test]

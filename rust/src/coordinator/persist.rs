@@ -113,6 +113,24 @@ pub struct CacheStats {
     pub totals: LifetimeTotals,
 }
 
+/// What [`PersistentCache::compact`] did to the log, for the
+/// `cache-compact` subcommand's before/after report.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CompactReport {
+    /// Well-formed records in the log before compaction (all versions
+    /// and namespaces, duplicates included).
+    pub before: usize,
+    /// Records surviving compaction.
+    pub after: usize,
+    /// Later duplicates of an already-kept `(namespace, arch, key)`
+    /// triple — the same records `load` would have ignored under its
+    /// first-record-wins rule.
+    pub dropped_duplicates: usize,
+    /// Checksummed records under superseded record versions, which no
+    /// current loader will ever replay.
+    pub dropped_stale: usize,
+}
+
 /// An append-only, checksummed mapping log under a cache directory. One
 /// instance per [`MappingService`](super::MappingService); several
 /// instances (even across processes) may share a directory — appends go
@@ -290,6 +308,59 @@ impl PersistentCache {
             cache_hits: field("cache_hits"),
             fallbacks: field("fallbacks"),
         }
+    }
+
+    /// Rewrite the log in place, keeping only the first well-formed
+    /// record per `(namespace, arch, key)` triple — exactly the records
+    /// [`Self::load`] would replay under its first-record-wins rule —
+    /// and dropping duplicates, superseded record versions, and any
+    /// corrupt tail. The rewrite is atomic (temp file + rename), and the
+    /// append handle is reopened afterwards so later appends from this
+    /// instance land in the compacted log rather than the old inode.
+    pub fn compact(&self) -> io::Result<CompactReport> {
+        let mut file = self.file.lock().unwrap_or_else(|p| p.into_inner());
+        let bytes = fs::read(&self.log)?;
+        let mut report = CompactReport::default();
+        let mut kept: Vec<&[u8]> = Vec::new();
+        let mut seen: HashSet<(String, String, String)> = HashSet::new();
+        let mut pos = 0usize;
+        while pos < bytes.len() {
+            // A line without a newline is a torn tail: dropped, like the
+            // WAL truncation in `load`.
+            let Some(nl) = bytes[pos..].iter().position(|&b| b == b'\n') else {
+                break;
+            };
+            match decode_line(&bytes[pos..pos + nl]) {
+                Decoded::Corrupt => break,
+                Decoded::Skip => {
+                    report.before += 1;
+                    report.dropped_stale += 1;
+                }
+                Decoded::Payload(doc) => {
+                    report.before += 1;
+                    let field =
+                        |k: &str| doc.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+                    if seen.insert((field("ns"), field("arch_fp"), field("key_fp"))) {
+                        kept.push(&bytes[pos..pos + nl + 1]);
+                    } else {
+                        report.dropped_duplicates += 1;
+                    }
+                }
+            }
+            pos += nl + 1;
+        }
+        report.after = kept.len();
+        let tmp = self.dir.join(format!("{LOG_FILE}.tmp.{}", std::process::id()));
+        {
+            let mut out = File::create(&tmp)?;
+            for line in &kept {
+                out.write_all(line)?;
+            }
+            out.flush()?;
+        }
+        fs::rename(&tmp, &self.log)?;
+        *file = OpenOptions::new().create(true).append(true).open(&self.log)?;
+        Ok(report)
     }
 
     /// Fold a finished service's totals into the sidecar. The write is
@@ -661,6 +732,63 @@ mod tests {
         fs::write(dir.join(TOTALS_FILE), "LMT1 0000000000000000 {}\n").unwrap();
         let cache = PersistentCache::open(&dir).unwrap();
         assert_eq!(cache.read_totals(), LifetimeTotals::default());
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn compact_drops_duplicates_and_stale_versions() {
+        let dir = temp_dir("compact");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let outcomes = solved(&zoo::alexnet()[..2], &acc);
+        for (layer, outcome) in &outcomes {
+            cache.append(layer, outcome, &acc).unwrap();
+        }
+        // A duplicate of the first record and a checksummed line under a
+        // superseded record version, both of which load() would ignore.
+        let (layer, outcome) = outcomes[0].clone();
+        cache.append(&layer, &outcome, &acc).unwrap();
+        let stale = "{\"v\": 9}";
+        let line = format!("LMC9 {:016x} {stale}\n", fnv1a(stale.as_bytes()));
+        let mut f = OpenOptions::new().append(true).open(dir.join(LOG_FILE)).unwrap();
+        f.write_all(line.as_bytes()).unwrap();
+        // And a torn tail, which compaction drops like WAL recovery.
+        f.write_all(b"LMC1 00ffee11 {\"v\": 1, \"arch").unwrap();
+        drop(f);
+        let report = cache.compact().unwrap();
+        assert_eq!(report.before, 4);
+        assert_eq!(report.after, 2);
+        assert_eq!(report.dropped_duplicates, 1);
+        assert_eq!(report.dropped_stale, 1);
+        let loaded = cache.load(&acc);
+        assert_eq!(loaded.entries.len(), 2, "survivors still replay");
+        assert_eq!(loaded.skipped, 0);
+        assert_eq!(loaded.truncated_bytes, 0, "compaction already cleaned the tail");
+        assert_eq!(cache.stats().records, 2);
+        let _ = fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn appends_after_compact_land_in_the_compacted_log() {
+        let dir = temp_dir("compact-append");
+        let acc = presets::eyeriss();
+        let cache = PersistentCache::open(&dir).unwrap();
+        let outcomes = solved(&zoo::alexnet()[..2], &acc);
+        for (layer, outcome) in &outcomes {
+            cache.append(layer, outcome, &acc).unwrap();
+        }
+        let (layer, outcome) = outcomes[0].clone();
+        cache.append(&layer, &outcome, &acc).unwrap();
+        assert_eq!(cache.compact().unwrap().after, 2);
+        // The append handle was reopened on the new inode: this record
+        // must be visible through the compacted log, not a ghost file.
+        let (layer, outcome) = solved(&zoo::alexnet()[2..3], &acc).remove(0);
+        cache.append(&layer, &outcome, &acc).unwrap();
+        assert_eq!(cache.stats().records, 3);
+        assert_eq!(cache.load(&acc).entries.len(), 3);
+        // Idempotent: nothing left to drop.
+        let again = cache.compact().unwrap();
+        assert_eq!(again, CompactReport { before: 3, after: 3, ..CompactReport::default() });
         let _ = fs::remove_dir_all(&dir);
     }
 

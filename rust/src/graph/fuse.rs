@@ -1,0 +1,263 @@
+//! Pattern-based operator fusion over the workload DAG.
+//!
+//! Fusion merges a producer and its sole consumer into one
+//! [`FusedGroup`] so the inter-layer tensor is produced and drained
+//! **on chip** instead of round-tripping through DRAM. The pass is
+//! deliberately conservative — a group forms only when every legality
+//! test passes (DESIGN.md §17):
+//!
+//! 1. **Pattern**: the pair is one of `conv→add`, `conv→pool`,
+//!    `matmul→add`, extended to `conv→add→pool` when a pooling layer
+//!    drains the add. Producers are the weight-carrying ops (conv,
+//!    depthwise conv, matmul); consumers are the weight-less ops whose
+//!    input is exactly the producer's output.
+//! 2. **Sole consumer**: the producer's output may have no other reader
+//!    in the graph — fusing would otherwise still force the DRAM write
+//!    for the second consumer, saving nothing.
+//! 3. **Shape**: the edge passes [`super::ir::compatible`] (also enforced
+//!    at graph construction).
+//! 4. **Relevance**: the per-op relevance tables
+//!    ([`crate::workload::OpKind::relevant_dims`], PR 3) must carry the
+//!    fused intermediate — the producer's `Output` must be indexed by
+//!    `M` and `P` and the consumer's `Input` by its channel dimension and
+//!    `P`, so a tile of the intermediate means the same coordinates on
+//!    both sides.
+//! 5. **Capacity**: one output row tile of the producer
+//!    (`n × m × q` elements — the line-buffer granularity at which a
+//!    `P`-ordered producer hands tiles to its consumer) must fit the
+//!    shared on-chip level (the outermost bounded level, directly below
+//!    DRAM).
+//!
+//! Fusion never changes any per-layer mapping: groups are a schedule
+//! annotation consumed by [`super::schedule`], and `--graph-mode off`
+//! (or `--no-fuse`) reproduces the flat pipeline bit for bit.
+
+use super::ir::{compatible, WorkloadGraph};
+use crate::arch::Accelerator;
+use crate::coordinator::LayerKey;
+use crate::mappers::Objective;
+use crate::workload::{Dim, Layer, OpKind, Tensor};
+
+/// A maximal fused chain of node indices (topological order) with the
+/// pattern that formed it. Members are consecutive producer→consumer
+/// pairs; every inner edge's tensor stays on chip.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FusedGroup {
+    /// Member node indices into the graph, producers first.
+    pub members: Vec<usize>,
+    /// Human-readable pattern: `conv+add`, `conv+pool`, `matmul+add` or
+    /// `conv+add+pool`.
+    pub pattern: &'static str,
+}
+
+impl FusedGroup {
+    /// The member layers, producers first.
+    pub fn layers<'a>(&self, g: &'a WorkloadGraph) -> impl Iterator<Item = &'a Layer> + '_ {
+        self.members.iter().map(move |&i| &g.nodes[i])
+    }
+
+    /// Stable group fingerprint: FNV-1a fold of the members'
+    /// [`LayerKey::fnv1a`] fingerprints under `objective`. Identical
+    /// shape chains (bert's twelve encoder blocks) share a fingerprint,
+    /// so group-level work (co-selection scoring, group-scoped cache
+    /// entries) deduplicates across repeats.
+    pub fn fingerprint(&self, g: &WorkloadGraph, acc: &Accelerator, objective: Objective) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        for layer in self.layers(g) {
+            let fp = LayerKey::new(layer, acc).for_objective(objective).fnv1a();
+            for b in fp.to_le_bytes() {
+                h ^= b as u64;
+                h = h.wrapping_mul(0x0000_0100_0000_01b3);
+            }
+        }
+        h
+    }
+
+    /// Group-scoped cache keys for every member: the member's ordinary
+    /// [`LayerKey`] extended with this group's fingerprint
+    /// ([`LayerKey::with_group`]), so a mapping chosen *for the group
+    /// context* can live in the same caches as the plain per-layer entry
+    /// without ever colliding with it.
+    pub fn member_keys(
+        &self,
+        g: &WorkloadGraph,
+        acc: &Accelerator,
+        objective: Objective,
+    ) -> Vec<LayerKey> {
+        let fp = self.fingerprint(g, acc, objective);
+        self.layers(g)
+            .map(|l| LayerKey::new(l, acc).for_objective(objective).with_group(fp))
+            .collect()
+    }
+}
+
+/// Index of the shared on-chip level: the outermost **bounded** level,
+/// directly below DRAM (the accelerator validator guarantees exactly the
+/// last level is unbounded). This is where a fused intermediate lives.
+pub fn shared_level(acc: &Accelerator) -> usize {
+    acc.n_levels() - 2
+}
+
+/// Relevance-table legality (rule 4 of the [module docs](self)): the
+/// fused intermediate must be addressable by the same `(channel, P)`
+/// coordinates on both sides of the edge.
+fn relevance_legal(producer: &Layer, consumer: &Layer) -> bool {
+    let chan = if consumer.op.channels_on_m() { Dim::M } else { Dim::C };
+    producer.op.relevant(Tensor::Output, Dim::M)
+        && producer.op.relevant(Tensor::Output, Dim::P)
+        && consumer.op.relevant(Tensor::Input, chan)
+        && consumer.op.relevant(Tensor::Input, Dim::P)
+}
+
+/// Capacity legality (rule 5): one output row tile of the producer —
+/// `n × m × q` elements, the line-buffer granularity of a `P`-ordered
+/// producer — must fit the shared on-chip level.
+fn tile_fits(producer: &Layer, acc: &Accelerator) -> bool {
+    producer
+        .n
+        .saturating_mul(producer.m)
+        .saturating_mul(producer.q)
+        <= acc.level_capacity(shared_level(acc))
+}
+
+/// All legality rules for fusing one producer→consumer edge (shape,
+/// relevance tables, on-chip capacity). Public so the property tests can
+/// assert every formed group satisfies it edge by edge.
+pub fn fusable(producer: &Layer, consumer: &Layer, acc: &Accelerator) -> bool {
+    compatible(producer, consumer)
+        && relevance_legal(producer, consumer)
+        && tile_fits(producer, acc)
+}
+
+/// Run the fusion pass over one graph: walk the nodes in topological
+/// order and greedily form the longest legal group starting at each
+/// unclaimed weight-carrying producer. Every returned group has ≥ 2
+/// members; unfused nodes simply keep their flat-pipeline schedule.
+pub fn fuse_network(g: &WorkloadGraph, acc: &Accelerator) -> Vec<FusedGroup> {
+    let mut in_group = vec![false; g.n_nodes()];
+    let mut groups = Vec::new();
+    for i in g.topo_order() {
+        if in_group[i] {
+            continue;
+        }
+        let producer = &g.nodes[i];
+        if !matches!(producer.op, OpKind::Conv | OpKind::DepthwiseConv | OpKind::MatMul) {
+            continue;
+        }
+        let succs: Vec<usize> = g.successors(i).collect();
+        let &[j] = &succs[..] else { continue }; // sole-consumer rule
+        if in_group[j] {
+            continue;
+        }
+        let mid = &g.nodes[j];
+        if !matches!(mid.op, OpKind::Elementwise | OpKind::Pooling)
+            || !fusable(producer, mid, acc)
+        {
+            continue;
+        }
+        let mut members = vec![i, j];
+        let mut pattern = match (producer.op, mid.op) {
+            (OpKind::MatMul, OpKind::Elementwise) => "matmul+add",
+            (_, OpKind::Elementwise) => "conv+add",
+            _ => "conv+pool",
+        };
+        // conv→add extends to conv→add→pool when a pooling layer is the
+        // add's sole consumer and the add→pool edge is itself fusable.
+        if mid.op == OpKind::Elementwise && producer.op != OpKind::MatMul {
+            let tails: Vec<usize> = g.successors(j).collect();
+            if let &[k] = &tails[..] {
+                if !in_group[k]
+                    && g.nodes[k].op == OpKind::Pooling
+                    && fusable(mid, &g.nodes[k], acc)
+                {
+                    members.push(k);
+                    pattern = "conv+add+pool";
+                }
+            }
+        }
+        for &m in &members {
+            in_group[m] = true;
+        }
+        groups.push(FusedGroup { members, pattern });
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+
+    #[test]
+    fn mobilenetv2res_fuses_project_conv_into_each_residual_add() {
+        let g = WorkloadGraph::zoo("mobilenetv2res").unwrap();
+        let acc = presets::eyeriss();
+        let groups = fuse_network(&g, &acc);
+        assert!(!groups.is_empty(), "mobilenetv2res must form fused groups");
+        for grp in &groups {
+            assert_eq!(grp.pattern, "conv+add");
+            assert_eq!(grp.members.len(), 2);
+            assert_eq!(g.nodes[grp.members[0]].op, OpKind::Conv);
+            assert_eq!(g.nodes[grp.members[1]].op, OpKind::Elementwise);
+            for pair in grp.members.windows(2) {
+                assert!(fusable(&g.nodes[pair[0]], &g.nodes[pair[1]], &acc));
+            }
+        }
+    }
+
+    #[test]
+    fn bert_fuses_matmul_into_residual_adds() {
+        let g = WorkloadGraph::zoo("bert").unwrap();
+        let acc = presets::eyeriss();
+        let groups = fuse_network(&g, &acc);
+        assert_eq!(groups.len(), 24, "one matmul+add per residual add");
+        assert!(groups.iter().all(|grp| grp.pattern == "matmul+add"));
+    }
+
+    #[test]
+    fn vgg16pool_fuses_conv_into_pool() {
+        let g = WorkloadGraph::zoo("vgg16pool").unwrap();
+        let acc = presets::eyeriss();
+        let groups = fuse_network(&g, &acc);
+        assert_eq!(groups.len(), 5, "one conv+pool per pooling layer");
+        assert!(groups.iter().all(|grp| grp.pattern == "conv+pool"));
+    }
+
+    #[test]
+    fn plain_chains_form_no_groups() {
+        let acc = presets::eyeriss();
+        for name in ["alexnet", "vgg16"] {
+            let g = WorkloadGraph::zoo(name).unwrap();
+            assert!(fuse_network(&g, &acc).is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn capacity_rule_blocks_fusion_on_a_starved_accelerator() {
+        let mut acc = presets::eyeriss();
+        // Shrink the GLB below one output row tile of any producer.
+        acc.levels[1].depth = 4;
+        let g = WorkloadGraph::zoo("mobilenetv2res").unwrap();
+        assert!(fuse_network(&g, &acc).is_empty());
+    }
+
+    #[test]
+    fn group_fingerprints_dedupe_identical_chains() {
+        let g = WorkloadGraph::zoo("bert").unwrap();
+        let acc = presets::eyeriss();
+        let groups = fuse_network(&g, &acc);
+        let fps: std::collections::HashSet<u64> =
+            groups.iter().map(|grp| grp.fingerprint(&g, &acc, Objective::Energy)).collect();
+        // bert's encoder blocks repeat two shapes of residual-add chain
+        // (attention 768×768 and FFN 3072→768), so 24 groups collapse to 2
+        // distinct fingerprints.
+        assert_eq!(fps.len(), 2);
+        // Group-scoped member keys never collide with the plain keys.
+        let keys = groups[0].member_keys(&g, &acc, Objective::Energy);
+        for (k, layer) in keys.iter().zip(groups[0].layers(&g)) {
+            let plain = LayerKey::new(layer, &acc);
+            assert_ne!(k, &plain);
+            assert_ne!(k.fnv1a(), plain.fnv1a());
+        }
+    }
+}

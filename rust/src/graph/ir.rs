@@ -1,0 +1,300 @@
+//! The workload DAG: producer/consumer structure over the operator IR.
+//!
+//! The rest of the pipeline consumes workloads as a flat `Vec<Layer>` in
+//! execution order. That order is a valid topological sort of the real
+//! dataflow graph, but it erases *which* earlier layer each layer actually
+//! reads — and graph-level optimization (fusion, inter-layer co-selection,
+//! DESIGN.md §17) needs exactly that structure. [`WorkloadGraph`] recovers
+//! it: every node is a [`Layer`], every [`Edge`] is a tensor-shape-checked
+//! producer→consumer relation, and construction from a layer list infers
+//! the edges from the shapes alone:
+//!
+//! * each consumer is wired to its **nearest** shape-compatible producers,
+//!   one per input operand ([`crate::workload::OpKind::input_operands`]) —
+//!   so a plain chain (alexnet, vgg16) degrades to exactly the linear
+//!   order the pipeline already uses, while a residual add
+//!   (mobilenetv2res) or an attention/FFN block add (bert) picks up its
+//!   second, skip-level predecessor;
+//! * an edge exists only when the producer's output tensor can actually
+//!   feed the consumer's input ([`compatible`]): batch and channel counts
+//!   agree and the producer's output spatial extent lies between the
+//!   consumer's strictly-needed core and its padded halo extent.
+//!
+//! Edges always point forward (`from < to`), so the node order itself is a
+//! topological order; [`WorkloadGraph::topo_order`] recomputes one from
+//! the edges (Kahn's algorithm) and is pinned equal to `0..n` in tests.
+
+use crate::workload::Layer;
+
+/// One producer→consumer edge: node `from`'s output tensor is (one of)
+/// node `to`'s input operand(s). Always forward: `from < to`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Edge {
+    /// Producer node index into [`WorkloadGraph::nodes`].
+    pub from: usize,
+    /// Consumer node index into [`WorkloadGraph::nodes`].
+    pub to: usize,
+}
+
+/// A workload as a DAG of layers with shape-checked producer/consumer
+/// edges. Built from a flat layer list by [`WorkloadGraph::from_layers`]
+/// (or [`WorkloadGraph::zoo`] for a zoo network by name).
+#[derive(Debug, Clone)]
+pub struct WorkloadGraph {
+    /// Workload name (network name for zoo graphs).
+    pub name: String,
+    /// The layers, in execution order (a topological order of `edges`).
+    pub nodes: Vec<Layer>,
+    /// Shape-checked producer→consumer edges, sorted by `(from, to)`.
+    pub edges: Vec<Edge>,
+}
+
+/// True when `producer`'s output tensor can feed one of `consumer`'s
+/// input operands: batches agree, the producer's output channels (always
+/// on `M`) match the consumer's input channel count, and on each spatial
+/// axis the producer's output extent covers at least the consumer's
+/// strictly-needed core (`(p-1)·stride + 1` rows) without exceeding its
+/// padded halo extent ([`Layer::h`]/[`Layer::w`]) — i.e. the two tensors
+/// differ by at most the convolution padding.
+pub fn compatible(producer: &Layer, consumer: &Layer) -> bool {
+    if producer.n != consumer.n || producer.m != consumer.input_channels() {
+        return false;
+    }
+    let rows_core = (consumer.p - 1) * consumer.stride + 1;
+    let cols_core = (consumer.q - 1) * consumer.stride + 1;
+    rows_core <= producer.p
+        && producer.p <= consumer.h()
+        && cols_core <= producer.q
+        && producer.q <= consumer.w()
+}
+
+impl WorkloadGraph {
+    /// Build the DAG for a flat layer list by shape inference: each
+    /// consumer is wired to its nearest compatible producers, one per
+    /// input operand (see the [module docs](self) for the rules). Chains
+    /// degrade to the linear order; residual adds get two predecessors.
+    pub fn from_layers(name: &str, layers: &[Layer]) -> Self {
+        let nodes: Vec<Layer> = layers.to_vec();
+        let mut edges = Vec::new();
+        for (i, consumer) in nodes.iter().enumerate().skip(1) {
+            let wanted = consumer.op.input_operands() as usize;
+            let mut found = 0usize;
+            for j in (0..i).rev() {
+                if compatible(&nodes[j], consumer) {
+                    edges.push(Edge { from: j, to: i });
+                    found += 1;
+                    if found == wanted {
+                        break;
+                    }
+                }
+            }
+        }
+        edges.sort_by_key(|e| (e.from, e.to));
+        Self { name: name.to_string(), nodes, edges }
+    }
+
+    /// The DAG of a zoo network by name ([`crate::workload::zoo::network`]
+    /// spellings). `None` for unknown names.
+    pub fn zoo(name: &str) -> Option<Self> {
+        crate::workload::zoo::network(name).map(|layers| Self::from_layers(name, &layers))
+    }
+
+    /// Node count.
+    pub fn n_nodes(&self) -> usize {
+        self.nodes.len()
+    }
+
+    /// Indices of the nodes whose output node `i` consumes.
+    pub fn predecessors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.edges.iter().filter(move |e| e.to == i).map(|e| e.from)
+    }
+
+    /// Indices of the nodes that consume node `i`'s output.
+    pub fn successors(&self, i: usize) -> impl Iterator<Item = usize> + '_ {
+        self.edges.iter().filter(move |e| e.from == i).map(|e| e.to)
+    }
+
+    /// Number of consumers of node `i`'s output.
+    pub fn out_degree(&self, i: usize) -> usize {
+        self.successors(i).count()
+    }
+
+    /// A topological order of the nodes (Kahn's algorithm, smallest ready
+    /// index first, so the result is deterministic). Because construction
+    /// only creates forward edges, this is always exactly `0..n` — the
+    /// execution order the flat pipeline already uses — but it is computed
+    /// from the edges, so a hand-built graph with reordered nodes still
+    /// iterates producers-first.
+    pub fn topo_order(&self) -> Vec<usize> {
+        let n = self.nodes.len();
+        let mut indegree = vec![0usize; n];
+        for e in &self.edges {
+            indegree[e.to] += 1;
+        }
+        let mut order = Vec::with_capacity(n);
+        let mut done = vec![false; n];
+        while order.len() < n {
+            // Smallest unprocessed node with no unprocessed predecessor.
+            let Some(i) = (0..n).find(|&i| !done[i] && indegree[i] == 0) else {
+                break; // cycle: unreachable for shape-inferred graphs
+            };
+            done[i] = true;
+            order.push(i);
+            for j in self.successors(i).collect::<Vec<_>>() {
+                indegree[j] -= 1;
+            }
+        }
+        order
+    }
+
+    /// True when the graph is a plain chain: edges are exactly
+    /// `{i → i+1}` for every consecutive pair — the shape a linear network
+    /// (alexnet, vgg16) must degrade to.
+    pub fn is_linear_chain(&self) -> bool {
+        self.edges.len() + 1 == self.nodes.len().max(1)
+            && self.edges.iter().enumerate().all(|(i, e)| e.from == i && e.to == i + 1)
+    }
+
+    /// Check every structural invariant: edge indices in range, edges
+    /// strictly forward (`from < to`, hence acyclic), no duplicate edges,
+    /// every edge shape-[`compatible`], and no consumer wired to more
+    /// predecessors than its operand count.
+    pub fn check(&self) -> Result<(), String> {
+        let n = self.nodes.len();
+        for (k, e) in self.edges.iter().enumerate() {
+            if e.from >= n || e.to >= n {
+                return Err(format!("edge {}→{} out of range (n={n})", e.from, e.to));
+            }
+            if e.from >= e.to {
+                return Err(format!("edge {}→{} is not forward", e.from, e.to));
+            }
+            if self.edges[..k].contains(e) {
+                return Err(format!("duplicate edge {}→{}", e.from, e.to));
+            }
+            if !compatible(&self.nodes[e.from], &self.nodes[e.to]) {
+                return Err(format!(
+                    "edge {}→{} fails the shape check ({} → {})",
+                    e.from, e.to, self.nodes[e.from].name, self.nodes[e.to].name
+                ));
+            }
+        }
+        for (i, node) in self.nodes.iter().enumerate() {
+            let preds = self.predecessors(i).count() as u64;
+            if preds > node.op.input_operands() {
+                return Err(format!(
+                    "node {i} ({}) has {preds} predecessors but {} input operand(s)",
+                    node.name,
+                    node.op.input_operands()
+                ));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workload::zoo;
+    use crate::workload::OpKind;
+
+    #[test]
+    fn plain_chains_degrade_to_the_linear_order() {
+        for name in ["alexnet", "vgg16", "vgg02"] {
+            let g = WorkloadGraph::zoo(name).unwrap();
+            g.check().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert!(g.is_linear_chain(), "{name} must be a linear chain");
+            assert_eq!(g.topo_order(), (0..g.n_nodes()).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn mobilenetv2res_adds_have_residual_predecessors() {
+        let g = WorkloadGraph::zoo("mobilenetv2res").unwrap();
+        g.check().unwrap();
+        assert!(!g.is_linear_chain());
+        let adds: Vec<usize> = (0..g.n_nodes())
+            .filter(|&i| g.nodes[i].op == OpKind::Elementwise)
+            .collect();
+        assert_eq!(adds.len(), 10, "mobilenetv2res carries 10 residual adds");
+        for &i in &adds {
+            let preds: Vec<usize> = g.predecessors(i).collect();
+            assert_eq!(preds.len(), 2, "{} needs a skip edge", g.nodes[i].name);
+            // The nearest predecessor is the project conv directly before
+            // the add; the other is an earlier, skip-level producer.
+            assert!(preds.contains(&(i - 1)));
+            assert!(preds.iter().any(|&p| p < i - 1));
+        }
+    }
+
+    #[test]
+    fn bert_adds_have_two_predecessors() {
+        let g = WorkloadGraph::zoo("bert").unwrap();
+        g.check().unwrap();
+        assert!(!g.is_linear_chain());
+        let adds: Vec<usize> = (0..g.n_nodes())
+            .filter(|&i| g.nodes[i].op == OpKind::Elementwise)
+            .collect();
+        assert_eq!(adds.len(), 24, "12 blocks × 2 residual adds");
+        for &i in &adds {
+            assert_eq!(g.predecessors(i).count(), 2, "{}", g.nodes[i].name);
+        }
+    }
+
+    #[test]
+    fn vgg16pooled_pools_follow_their_convs() {
+        let g = WorkloadGraph::zoo("vgg16pool").unwrap();
+        g.check().unwrap();
+        for i in 0..g.n_nodes() {
+            if g.nodes[i].op == OpKind::Pooling {
+                assert_eq!(g.predecessors(i).collect::<Vec<_>>(), vec![i - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn every_zoo_network_builds_a_valid_graph() {
+        for (name, layers) in zoo::batch_zoo() {
+            let g = WorkloadGraph::from_layers(&name, &layers);
+            g.check().unwrap_or_else(|e| panic!("{name}: {e}"));
+            assert_eq!(g.n_nodes(), layers.len());
+            assert_eq!(g.topo_order(), (0..layers.len()).collect::<Vec<_>>(), "{name}");
+        }
+    }
+
+    #[test]
+    fn compatibility_checks_channels_and_spatial_extent() {
+        let a = Layer::new("a", 64, 3, 3, 3, 224, 224);
+        let b = Layer::new("b", 64, 64, 3, 3, 224, 224);
+        assert!(compatible(&a, &b), "64-channel output feeds 64-channel input");
+        let wrong_c = Layer::new("c", 64, 32, 3, 3, 224, 224);
+        assert!(!compatible(&a, &wrong_c), "channel mismatch");
+        let wrong_p = Layer::new("d", 64, 64, 3, 3, 32, 32);
+        assert!(!compatible(&a, &wrong_p), "spatial mismatch");
+        // Stride-2 downsampling consumes the full extent: still an edge.
+        let down = Layer::new("e", 128, 64, 3, 3, 112, 112).with_stride(2);
+        assert!(compatible(&a, &down));
+        // Pooling: input channels ride on M.
+        let pool = Layer::pooling("p", 64, 2, 112, 112).with_stride(2);
+        assert!(compatible(&a, &pool));
+        // Elementwise add: exact spatial match required (no halo).
+        let add = Layer::elementwise("add", 64, 224, 224);
+        assert!(compatible(&a, &add));
+        let add_off = Layer::elementwise("add2", 64, 112, 112);
+        assert!(!compatible(&a, &add_off));
+    }
+
+    #[test]
+    fn check_rejects_malformed_graphs() {
+        let layers = zoo::alexnet();
+        let mut g = WorkloadGraph::from_layers("alexnet", &layers);
+        g.edges.push(Edge { from: 3, to: 1 });
+        assert!(g.check().unwrap_err().contains("not forward"));
+        let mut g = WorkloadGraph::from_layers("alexnet", &layers);
+        g.edges.push(Edge { from: 0, to: 99 });
+        assert!(g.check().unwrap_err().contains("out of range"));
+        let mut g = WorkloadGraph::from_layers("alexnet", &layers);
+        g.edges.push(Edge { from: 0, to: 3 });
+        assert!(g.check().is_err(), "incompatible or over-subscribed edge must fail");
+    }
+}

@@ -1,0 +1,89 @@
+//! Graph-level compilation: workload DAG, operator fusion and
+//! inter-layer mapping co-selection (DESIGN.md §17).
+//!
+//! The per-layer pipeline maps every layer of a network independently
+//! from a flat `Vec<Layer>`; real compilers for spatial accelerators map
+//! the *graph*, because inter-layer DRAM traffic — writing each layer's
+//! output only for the next layer to read it straight back — dominates
+//! total off-chip movement. This subsystem recovers that structure:
+//!
+//! * [`ir`] — [`WorkloadGraph`]: the flat layer list promoted to a DAG
+//!   with shape-checked producer/consumer [`Edge`]s. Residual networks
+//!   (mobilenetv2res, bert) get real multi-predecessor structure; plain
+//!   chains (alexnet, vgg16) degrade to the existing linear order.
+//! * [`fuse`] — the pattern-based fusion pass (`conv→add`, `conv→pool`,
+//!   `matmul→add`, `conv→add→pool`) forming [`FusedGroup`]s whose
+//!   intermediate tensors stay on chip, gated by the per-op relevance
+//!   tables and the shared level's capacity.
+//! * [`schedule`] — inter-layer co-selection: scoring fused groups by the
+//!   DRAM traffic they actually remove under the chosen mappings, rolled
+//!   up into the [`GraphReport`] carried by every
+//!   [`crate::api::CompileReport`].
+//!
+//! The whole subsystem is **analysis-only**: per-layer mapping work is
+//! identical in every mode, so `--graph-mode off` (the default) is
+//! bit-identical to the flat pipeline by construction, and the property
+//! suite pins it.
+
+pub mod fuse;
+pub mod ir;
+pub mod schedule;
+
+pub use fuse::{fusable, fuse_network, FusedGroup};
+pub use ir::{Edge, WorkloadGraph};
+pub use schedule::{analyze, GraphReport, MappingIndex};
+
+/// How much graph structure a compile request exploits
+/// (`--graph-mode`, [`crate::api::CompileRequest::graph_mode`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum GraphMode {
+    /// No graph analysis beyond the baseline traffic estimate; the flat
+    /// per-layer pipeline, bit for bit. The default.
+    #[default]
+    Off,
+    /// Run the fusion pass and report fused groups with static
+    /// (tensor-volume) DRAM savings.
+    Fuse,
+    /// Fusion plus mapping-aware co-selection: groups are scored with the
+    /// member layers' actual DRAM traffic and kept only when fusing wins.
+    CoSelect,
+}
+
+impl GraphMode {
+    /// Accepted `--graph-mode` values, for usage messages.
+    pub const SPEC: &'static str = "off|fuse|co_select";
+
+    /// Parse a CLI/serve value (`off`, `fuse`, `co_select`/`co-select`).
+    pub fn parse(s: &str) -> Option<Self> {
+        match s {
+            "off" => Some(GraphMode::Off),
+            "fuse" => Some(GraphMode::Fuse),
+            "co_select" | "co-select" => Some(GraphMode::CoSelect),
+            _ => None,
+        }
+    }
+
+    /// Canonical name, as printed in reports and api_v1 documents.
+    pub fn name(self) -> &'static str {
+        match self {
+            GraphMode::Off => "off",
+            GraphMode::Fuse => "fuse",
+            GraphMode::CoSelect => "co_select",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn graph_mode_parses_its_own_names() {
+        for mode in [GraphMode::Off, GraphMode::Fuse, GraphMode::CoSelect] {
+            assert_eq!(GraphMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(GraphMode::parse("co-select"), Some(GraphMode::CoSelect));
+        assert_eq!(GraphMode::parse("on"), None);
+        assert_eq!(GraphMode::default(), GraphMode::Off);
+    }
+}

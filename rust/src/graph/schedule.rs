@@ -1,0 +1,273 @@
+//! Inter-layer co-selection and the graph report.
+//!
+//! [`analyze`] is the graph-compilation entry point the [`crate::api`]
+//! session calls once per compile: it builds the [`super::ir::WorkloadGraph`]
+//! for every network in the request, runs the [`super::fuse`] pass when the
+//! mode asks for it, and rolls the result up into one [`GraphReport`] —
+//! groups formed, fused layer count, and the estimated cross-layer DRAM
+//! traffic with and without fusion.
+//!
+//! Three accounting levels, one per [`super::GraphMode`]:
+//!
+//! * **off** — every producer/consumer edge crosses DRAM: the producer
+//!   writes its output once, each consumer reads it once. The report
+//!   carries that baseline and zero groups; per-layer mapping is
+//!   untouched (bit-identity is property-pinned).
+//! * **fuse** — pattern-fused edges keep the intermediate on chip; the
+//!   saving per fused edge is the static tensor volume, once for the
+//!   avoided DRAM write and once for the avoided read.
+//! * **co_select** — the fused pairs are *scored* with the mapped
+//!   layers' actual DRAM traffic: the producer's `Output` DRAM words plus
+//!   the consumer's per-operand `Input` DRAM words under their chosen
+//!   mappings ([`EvalContext::dram_tensor_words`] — the cross-layer
+//!   DRAM-traffic term). A group is kept only when its score is a real
+//!   saving, and identical shape chains share one scoring pass via
+//!   [`super::fuse::FusedGroup::fingerprint`] (bert's 24 residual groups
+//!   collapse to 2 evaluations).
+//!
+//! Co-selection never mutates mappings either: layers are still mapped
+//! one at a time through the [`crate::coordinator::MappingService`]
+//! (coalescing, persistent cache, warm seeds and fault fallback all keep
+//! working); the graph pass decides which inter-layer tensors *stay on
+//! chip* given those mappings.
+
+use super::fuse::fuse_network;
+use super::ir::WorkloadGraph;
+use super::GraphMode;
+use crate::arch::Accelerator;
+use crate::mappers::Objective;
+use crate::mapping::Mapping;
+use crate::model::EvalContext;
+use crate::workload::{Layer, Tensor};
+use std::collections::HashMap;
+
+/// Per-layer mappings for co-selection scoring, keyed by
+/// `(network name, layer name)`. Pass an empty map for `off`/`fuse` (or
+/// when mappings are unavailable — scoring then falls back to static
+/// volumes).
+pub type MappingIndex = HashMap<(String, String), Mapping>;
+
+/// The graph-compilation summary of one compile request, reported in the
+/// `graph` block of the api_v1 document and the table output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GraphReport {
+    /// The mode the request ran under.
+    pub mode: GraphMode,
+    /// Fused groups formed (0 under `off`).
+    pub groups: usize,
+    /// Layers that are members of a fused group.
+    pub fused_layers: usize,
+    /// Estimated cross-layer DRAM bytes under this mode: the off-mode
+    /// baseline minus [`GraphReport::dram_bytes_saved`].
+    pub cross_layer_dram_bytes: u64,
+    /// Estimated DRAM bytes the fused schedule keeps on chip.
+    pub dram_bytes_saved: u64,
+}
+
+impl GraphReport {
+    /// The zero report (no graph structure analyzed yet).
+    pub fn empty(mode: GraphMode) -> Self {
+        Self {
+            mode,
+            groups: 0,
+            fused_layers: 0,
+            cross_layer_dram_bytes: 0,
+            dram_bytes_saved: 0,
+        }
+    }
+}
+
+/// Bytes of one `elems`-element tensor at the accelerator's datawidth.
+fn tensor_bytes(elems: u64, acc: &Accelerator) -> u64 {
+    elems.saturating_mul((acc.datawidth_bits + 7) / 8)
+}
+
+/// Off-mode baseline: every edge's tensor crosses DRAM — one write per
+/// producer with at least one consumer, one read per consumer.
+fn baseline_bytes(g: &WorkloadGraph, acc: &Accelerator) -> u64 {
+    let mut total = 0u64;
+    for (i, node) in g.nodes.iter().enumerate() {
+        if g.out_degree(i) > 0 {
+            total = total.saturating_add(tensor_bytes(node.tensor_volume(Tensor::Output), acc));
+        }
+    }
+    for e in &g.edges {
+        total = total
+            .saturating_add(tensor_bytes(g.nodes[e.from].tensor_volume(Tensor::Output), acc));
+    }
+    total
+}
+
+/// Static (fuse-mode) saving of one fused producer→consumer edge: the
+/// intermediate's volume, once for the avoided DRAM write and once for
+/// the avoided read.
+fn static_edge_saving(producer: &Layer, acc: &Accelerator) -> u64 {
+    tensor_bytes(producer.tensor_volume(Tensor::Output), acc).saturating_mul(2)
+}
+
+/// Co-selection score of one fused edge: the DRAM traffic the fusion
+/// actually removes under the chosen mappings — the producer's `Output`
+/// DRAM words plus the consumer's `Input` DRAM words divided by its
+/// operand count (the access table does not split operands; a residual
+/// add reads two inputs of equal volume, of which fusion keeps one on
+/// chip). Falls back to the static volume estimate when either mapping
+/// is missing (e.g. the layer failed to map).
+fn co_edge_saving(
+    network: &str,
+    producer: &Layer,
+    consumer: &Layer,
+    acc: &Accelerator,
+    mappings: &MappingIndex,
+) -> u64 {
+    let mp = mappings.get(&(network.to_string(), producer.name.clone()));
+    let mc = mappings.get(&(network.to_string(), consumer.name.clone()));
+    let (Some(mp), Some(mc)) = (mp, mc) else {
+        return static_edge_saving(producer, acc);
+    };
+    let out_words = EvalContext::new(producer, acc).dram_tensor_words(mp, Tensor::Output);
+    let in_words = EvalContext::new(consumer, acc).dram_tensor_words(mc, Tensor::Input)
+        / consumer.op.input_operands().max(1);
+    tensor_bytes(out_words.saturating_add(in_words), acc)
+}
+
+/// Analyze the graph structure of every network in a compile request and
+/// report the fused groups and estimated cross-layer DRAM traffic for
+/// `mode`. `objective` keys the group fingerprints (and must match the
+/// mapper's objective); `mappings` feeds co-selection scoring and may be
+/// empty otherwise. Pure analysis: never changes what gets mapped.
+pub fn analyze(
+    networks: &[(String, Vec<Layer>)],
+    acc: &Accelerator,
+    mode: GraphMode,
+    objective: Objective,
+    mappings: &MappingIndex,
+) -> GraphReport {
+    let mut report = GraphReport::empty(mode);
+    let mut baseline = 0u64;
+    // Shape-keyed score cache: identical groups (same member LayerKeys)
+    // save the same traffic, so bert's repeated blocks score once.
+    let mut scores: HashMap<u64, u64> = HashMap::new();
+    for (name, layers) in networks {
+        let g = WorkloadGraph::from_layers(name, layers);
+        baseline = baseline.saturating_add(baseline_bytes(&g, acc));
+        if mode == GraphMode::Off {
+            continue;
+        }
+        for grp in fuse_network(&g, acc) {
+            let saved: u64 = match mode {
+                GraphMode::Fuse => grp
+                    .members
+                    .windows(2)
+                    .map(|pair| static_edge_saving(&g.nodes[pair[0]], acc))
+                    .sum(),
+                GraphMode::CoSelect => {
+                    let fp = grp.fingerprint(&g, acc, objective);
+                    *scores.entry(fp).or_insert_with(|| {
+                        grp.members
+                            .windows(2)
+                            .map(|pair| {
+                                co_edge_saving(
+                                    name,
+                                    &g.nodes[pair[0]],
+                                    &g.nodes[pair[1]],
+                                    acc,
+                                    mappings,
+                                )
+                            })
+                            .sum()
+                    })
+                }
+                GraphMode::Off => unreachable!("handled above"),
+            };
+            if saved == 0 {
+                continue; // co-selection: fusing must actually win
+            }
+            report.groups += 1;
+            report.fused_layers += grp.members.len();
+            report.dram_bytes_saved = report.dram_bytes_saved.saturating_add(saved);
+        }
+    }
+    report.cross_layer_dram_bytes = baseline.saturating_sub(report.dram_bytes_saved);
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::arch::presets;
+    use crate::mappers::{LocalMapper, Mapper};
+    use crate::workload::zoo;
+
+    fn net(name: &str) -> Vec<(String, Vec<Layer>)> {
+        vec![(name.to_string(), zoo::network(name).unwrap())]
+    }
+
+    #[test]
+    fn off_mode_reports_the_baseline_and_no_groups() {
+        let acc = presets::eyeriss();
+        let r = analyze(
+            &net("mobilenetv2res"),
+            &acc,
+            GraphMode::Off,
+            Objective::Energy,
+            &MappingIndex::new(),
+        );
+        assert_eq!(r.mode, GraphMode::Off);
+        assert_eq!(r.groups, 0);
+        assert_eq!(r.fused_layers, 0);
+        assert_eq!(r.dram_bytes_saved, 0);
+        assert!(r.cross_layer_dram_bytes > 0, "residual net has inter-layer traffic");
+    }
+
+    #[test]
+    fn fuse_mode_saves_strictly_against_off() {
+        let acc = presets::eyeriss();
+        let networks = net("mobilenetv2res");
+        let off =
+            analyze(&networks, &acc, GraphMode::Off, Objective::Energy, &MappingIndex::new());
+        let fuse =
+            analyze(&networks, &acc, GraphMode::Fuse, Objective::Energy, &MappingIndex::new());
+        assert!(fuse.groups >= 1, "mobilenetv2res must form fused groups");
+        assert_eq!(fuse.fused_layers, 2 * fuse.groups, "conv+add pairs");
+        assert!(fuse.dram_bytes_saved > 0);
+        assert!(
+            fuse.cross_layer_dram_bytes < off.cross_layer_dram_bytes,
+            "fusion must report strictly lower cross-layer DRAM bytes"
+        );
+        assert_eq!(
+            fuse.cross_layer_dram_bytes + fuse.dram_bytes_saved,
+            off.cross_layer_dram_bytes
+        );
+    }
+
+    #[test]
+    fn co_select_scores_with_real_mappings() {
+        let acc = presets::eyeriss();
+        let networks = net("bert");
+        let mapper = LocalMapper::new();
+        let mut mappings = MappingIndex::new();
+        for (name, layers) in &networks {
+            for l in layers {
+                let out = mapper.run(l, &acc).unwrap();
+                mappings.insert((name.clone(), l.name.clone()), out.mapping);
+            }
+        }
+        let fuse = analyze(&networks, &acc, GraphMode::Fuse, Objective::Energy, &mappings);
+        let co = analyze(&networks, &acc, GraphMode::CoSelect, Objective::Energy, &mappings);
+        assert_eq!(co.groups, fuse.groups, "every bert group is a real win");
+        // Mapped DRAM traffic is at least the compulsory tensor volume, so
+        // the mapping-aware score can only grow past the static estimate.
+        assert!(co.dram_bytes_saved >= fuse.dram_bytes_saved);
+        assert!(co.cross_layer_dram_bytes <= fuse.cross_layer_dram_bytes);
+    }
+
+    #[test]
+    fn plain_chains_fuse_to_nothing() {
+        let acc = presets::eyeriss();
+        let off = analyze(&net("vgg16"), &acc, GraphMode::Off, Objective::Energy, &MappingIndex::new());
+        let fuse =
+            analyze(&net("vgg16"), &acc, GraphMode::Fuse, Objective::Energy, &MappingIndex::new());
+        assert_eq!(fuse.groups, 0);
+        assert_eq!(fuse.cross_layer_dram_bytes, off.cross_layer_dram_bytes);
+    }
+}

@@ -50,6 +50,11 @@
 //! * [`fault`] — deterministic fault injection (`--inject-fault`) driving
 //!   the robustness tests and the CI smoke step through the service's
 //!   panic-containment, fallback and respawn paths.
+//! * [`graph`] — graph-level compilation: the workload DAG
+//!   ([`graph::WorkloadGraph`]) recovered from the zoo's layer lists,
+//!   pattern-based operator fusion ([`graph::fuse`]) and inter-layer
+//!   mapping co-selection ([`graph::schedule`]) behind `--graph-mode`
+//!   (`off` keeps the flat pipeline bit for bit).
 //! * [`runtime`] — PJRT execution of AOT-compiled JAX/Pallas conv kernels
 //!   (behind the `pjrt` feature; a stub otherwise).
 //! * [`report`] — emitters for the paper's tables and figures plus the
@@ -101,6 +106,7 @@ pub mod coordinator;
 pub mod energy;
 pub mod explore;
 pub mod fault;
+pub mod graph;
 pub mod mappers;
 pub mod mapping;
 pub mod mapspace;

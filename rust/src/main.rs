@@ -25,6 +25,7 @@ use local_mapper::api::{self, CompileRequest, Error, SeedPolicy, Session};
 use local_mapper::arch::{config, presets, Accelerator};
 use local_mapper::coordinator::{self, PersistentCache};
 use local_mapper::fault;
+use local_mapper::graph::GraphMode;
 use local_mapper::mappers::{MapError, Objective, SearchParams};
 use local_mapper::mapspace;
 use local_mapper::report;
@@ -56,6 +57,7 @@ fn main() {
         Some("explore") => finish(cmd_explore(&args, &session)),
         Some("serve") => finish(cmd_serve(&args)),
         Some("cache-stats") => finish(cmd_cache_stats(&args)),
+        Some("cache-compact") => finish(cmd_cache_compact(&args)),
         Some("perf") => finish(cmd_perf(&args)),
         Some("help") | None => {
             print_help();
@@ -70,6 +72,12 @@ fn main() {
     // `process::exit` skips Drop, but the session's services flush their
     // lifetime totals to the persistent cache sidecar on drop — so drop
     // explicitly (joins the worker pools) before taking the exit code.
+    // Every exit class flows through here: the subcommand handlers return
+    // codes instead of exiting (`finish` maps error classes to 2/3/4), so
+    // this is the binary's only `process::exit` after the session exists;
+    // the one earlier exit (fault-injector usage error) precedes session
+    // creation and has nothing to flush. Pinned by
+    // `lifetime_totals_survive_an_error_exit` in `rust/tests/cli.rs`.
     drop(session);
     std::process::exit(code);
 }
@@ -85,6 +93,19 @@ fn cache_dir(args: &Args) -> Option<String> {
         return Some(dir.to_string());
     }
     std::env::var(CACHE_DIR_ENV).ok().filter(|v| !v.is_empty())
+}
+
+/// Resolve the graph-compilation mode for compile/compile-all:
+/// `--no-fuse` is the escape hatch and always wins (bit-for-bit flat
+/// pipeline); otherwise `--graph-mode off|fuse|co_select` (default off).
+fn graph_mode(args: &Args) -> Result<GraphMode, Error> {
+    if args.flag("no-fuse") {
+        return Ok(GraphMode::Off);
+    }
+    let spec = args.get_or("graph-mode", "off");
+    GraphMode::parse(spec).ok_or_else(|| {
+        Error::request(format!("unknown graph mode '{spec}' ({})", GraphMode::SPEC))
+    })
 }
 
 /// Arm the deterministic fault injector before dispatch: an explicit
@@ -165,6 +186,9 @@ USAGE: local-mapper <subcommand> [options]
   cache-stats  --cache-dir <dir> [--arch eyeriss] [--objective energy]
            (persistent-cache summary: records, bytes, lifetime totals,
             per-network zoo coverage on the selected arch/objective)
+  cache-compact  --cache-dir <dir>
+           (rewrite the mapping log in place, dropping duplicate-key and
+            stale-namespace records; prints before/after record counts)
   perf     [--smoke] [--out BENCH_eval.json]
            (evals/sec old vs context path, per-operator-kind throughput,
             exhaustive 1/2/4/8-thread scaling, engine pruned-vs-unpruned
@@ -228,6 +252,20 @@ Persistent mapping cache (compile, compile-all, serve):
                                  set via LOCAL_MAPPER_CACHE_DIR (the flag
                                  wins); omit both to reproduce the pure
                                  in-memory pipeline bit for bit
+
+Graph-level compilation (compile, compile-all — DESIGN.md §17):
+  --graph-mode off|fuse|co_select promote the layer list to a workload DAG
+                                 and fuse producer/consumer chains
+                                 (conv→add, conv→pool, matmul→add,
+                                 conv→add→pool) whose intermediates fit the
+                                 shared on-chip level. fuse reports static
+                                 DRAM savings; co_select scores groups with
+                                 the chosen mappings' actual DRAM traffic
+                                 and keeps only real wins. Analysis-only:
+                                 per-layer mappings are identical in every
+                                 mode (default off)
+  --no-fuse                      escape hatch: force graph mode off,
+                                 reproducing the flat pipeline bit for bit
 
 Failure isolation (map, compile, compile-all):
   --fail-fast                    abort a batch compile on the first hard
@@ -369,7 +407,7 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
     let format = output_format(args)?;
     // Per-shape budget default 300, like compile-all (whole-network
     // batches pay the budget once per unique layer shape).
-    let mut req = base_request(args, 300)?;
+    let mut req = base_request(args, 300)?.graph_mode(graph_mode(args)?);
     if let Some(dir) = cache_dir(args) {
         req = req.cache_dir(dir);
     }
@@ -409,6 +447,9 @@ fn cmd_compile(args: &Args, session: &Session) -> Result<(), Error> {
                     r.incremental_reused
                 );
             }
+            if r.graph.mode != GraphMode::Off {
+                println!("{}", report::render_graph_summary(&r.graph));
+            }
             println!(
                 "total: {} MACs, {} µJ, {} cycles, mean utilization {:.1}%",
                 r.total_macs(),
@@ -428,7 +469,7 @@ fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
     // Batch compiles keep the historical per-shape budget default of 300
     // (325 layers × a 3000-candidate search would be a 10x wall-time
     // surprise for search mappers).
-    let mut req = base_request(args, 300)?.zoo();
+    let mut req = base_request(args, 300)?.zoo().graph_mode(graph_mode(args)?);
     if let Some(dir) = cache_dir(args) {
         req = req.cache_dir(dir);
     }
@@ -459,6 +500,9 @@ fn cmd_compile_all(args: &Args, session: &Session) -> Result<(), Error> {
                     "warm: policy={} seeded={} seed_quality={:.3}",
                     r.seed_policy, r.warm_seeded, r.seed_quality
                 );
+            }
+            if r.graph.mode != GraphMode::Off {
+                println!("{}", report::render_graph_summary(&r.graph));
             }
             println!(
                 "total: {} MACs, {} µJ across the batch",
@@ -767,6 +811,25 @@ fn cmd_cache_stats(args: &Args) -> Result<(), Error> {
             .count();
         println!("  {name:>14}: {covered}/{} layers", layers.len());
     }
+    Ok(())
+}
+
+/// Rewrite a persistent-cache log in place, dropping duplicate-key and
+/// stale-namespace records (the load path already ignores them; compaction
+/// reclaims the disk and the replay time they cost).
+fn cmd_cache_compact(args: &Args) -> Result<(), Error> {
+    let Some(dir) = cache_dir(args) else {
+        return Err(Error::request(
+            "cache-compact needs --cache-dir <path> (or LOCAL_MAPPER_CACHE_DIR)",
+        ));
+    };
+    let log = PersistentCache::open(&dir).map_err(|e| Error::io(dir.clone(), e))?;
+    let r = log.compact().map_err(|e| Error::io(dir.clone(), e))?;
+    println!("cache dir: {dir}");
+    println!(
+        "records: {} -> {} ({} duplicate, {} stale dropped)",
+        r.before, r.after, r.dropped_duplicates, r.dropped_stale
+    );
     Ok(())
 }
 

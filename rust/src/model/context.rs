@@ -99,6 +99,20 @@ impl EvalContext {
         self.evaluate_into(mapping).energy.total_pj()
     }
 
+    /// DRAM traffic (reads + writes, in words) of one tensor under a
+    /// mapping — the cross-layer DRAM-traffic term graph-level
+    /// co-selection scores fused groups with
+    /// ([`crate::graph::schedule`]): a fused producer→consumer edge
+    /// removes the producer's `Output` DRAM words and the consumer's
+    /// share of `Input` DRAM words. Plain accessor over
+    /// [`EvalContext::evaluate_into`]'s access table; arithmetic
+    /// untouched.
+    pub fn dram_tensor_words(&mut self, mapping: &Mapping, t: Tensor) -> u64 {
+        let dram = self.acc.n_levels() - 1;
+        let a = &self.evaluate_into(mapping).access[dram][t.t_idx()];
+        a.reads + a.writes
+    }
+
     /// Evaluate one candidate into the scratch buffers and return a borrow.
     /// Performs **no heap allocation**: the access table, bandwidth vector
     /// and energy breakdown are overwritten in place, the loop list above
@@ -867,6 +881,24 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn dram_tensor_words_reads_the_last_level_row() {
+        // The accessor is pure bookkeeping over the existing access table:
+        // it must equal the DRAM row of a full evaluation, and every
+        // tensor's DRAM traffic is at least its compulsory volume.
+        let acc = presets::eyeriss();
+        let layer = zoo::vgg16()[8].clone();
+        let mut ctx = EvalContext::new(&layer, &acc);
+        let mut rng = SplitMix64::new(23);
+        let m = sample_random(&layer, &acc, &mut rng);
+        let dram = acc.n_levels() - 1;
+        for t in Tensor::ALL {
+            let a = ctx.evaluate_into(&m).access[dram][t.t_idx()];
+            assert_eq!(ctx.dram_tensor_words(&m, t), a.reads + a.writes);
+        }
+        assert!(ctx.dram_tensor_words(&m, Tensor::Output) >= layer.tensor_volume(Tensor::Output));
     }
 
     #[test]

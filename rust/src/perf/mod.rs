@@ -39,6 +39,10 @@
 //!    over the same directory (a simulated process restart,
 //!    DESIGN.md §16): the warm run must spend zero mapper evaluations,
 //!    serving every layer from the preloaded disk log.
+//! 9. **Graph fusion** (schema 7) — [`crate::graph::analyze`] in off vs
+//!    fuse mode on the two multi-predecessor zoo networks
+//!    (mobilenetv2res, bert): fused cross-layer DRAM bytes must come in
+//!    strictly below unfused (DESIGN.md §17).
 //!
 //! [`PerfReport::to_json`] renders the result as the `BENCH_eval.json`
 //! schema (see the README "Performance" section); the `perf` CLI
@@ -274,6 +278,28 @@ pub struct ServiceSection {
     pub coalesced: u64,
 }
 
+/// One network's fused-vs-unfused cross-layer DRAM numbers: the schema-7
+/// `graph` section (DESIGN.md §17), measured by running the graph
+/// analysis in `off` and `fuse` modes over the same zoo network.
+#[derive(Debug, Clone)]
+pub struct GraphPerf {
+    /// Network name (`mobilenetv2res` / `bert`).
+    pub network: &'static str,
+    /// Fused groups the pass formed.
+    pub groups: usize,
+    /// Layers captured in a fused group.
+    pub fused_layers: usize,
+    /// Cross-layer DRAM bytes with graph compilation off (the unfused
+    /// baseline: every inter-layer tensor round-trips through DRAM).
+    pub unfused_dram_bytes: u64,
+    /// Cross-layer DRAM bytes under fusion (strictly lower whenever a
+    /// group forms — CI validates this on `mobilenetv2res`).
+    pub fused_dram_bytes: u64,
+    /// Wall-clock of both analyses (graph build + fusion + accounting,
+    /// twice), ms.
+    pub wall_ms: f64,
+}
+
 /// Everything `BENCH_eval.json` carries.
 #[derive(Debug, Clone)]
 pub struct PerfReport {
@@ -297,6 +323,9 @@ pub struct PerfReport {
     pub zoo_batch: ZooBatch,
     /// Persistent-cache cold vs warm-restart timings (schema 6).
     pub service: ServiceSection,
+    /// Fused vs unfused cross-layer DRAM traffic per graph-capable zoo
+    /// network (schema 7).
+    pub graph: Vec<GraphPerf>,
 }
 
 /// Render a finite float for JSON (JSON has no NaN/Inf; rates here are
@@ -418,7 +447,7 @@ impl PerfReport {
             jnum(self.zoo_batch.cache_hit_rate)
         ));
         s.push_str(&format!(
-            "  \"service\": {{\"layers\": {}, \"cold_wall_ms\": {}, \"warm_wall_ms\": {}, \"cold_evaluations\": {}, \"warm_evaluations\": {}, \"disk_hits\": {}, \"coalesced\": {}}}\n",
+            "  \"service\": {{\"layers\": {}, \"cold_wall_ms\": {}, \"warm_wall_ms\": {}, \"cold_evaluations\": {}, \"warm_evaluations\": {}, \"disk_hits\": {}, \"coalesced\": {}}},\n",
             self.service.layers,
             jnum(self.service.cold_wall_ms),
             jnum(self.service.warm_wall_ms),
@@ -427,6 +456,20 @@ impl PerfReport {
             self.service.disk_hits,
             self.service.coalesced
         ));
+        s.push_str("  \"graph\": [\n");
+        for (i, g) in self.graph.iter().enumerate() {
+            s.push_str(&format!(
+                "    {{\"network\": \"{}\", \"groups\": {}, \"fused_layers\": {}, \"unfused_dram_bytes\": {}, \"fused_dram_bytes\": {}, \"wall_ms\": {}}}{}\n",
+                g.network,
+                g.groups,
+                g.fused_layers,
+                g.unfused_dram_bytes,
+                g.fused_dram_bytes,
+                jnum(g.wall_ms),
+                if i + 1 < self.graph.len() { "," } else { "" }
+            ));
+        }
+        s.push_str("  ]\n");
         s.push_str("}\n");
         s
     }
@@ -507,6 +550,12 @@ impl PerfReport {
             self.service.warm_evaluations,
             self.service.disk_hits
         ));
+        for g in &self.graph {
+            s.push_str(&format!(
+                "\ngraph {}: {} groups ({} layers), {} → {} cross-layer DRAM bytes",
+                g.network, g.groups, g.fused_layers, g.unfused_dram_bytes, g.fused_dram_bytes
+            ));
+        }
         s
     }
 }
@@ -854,8 +903,36 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         coalesced: cold.coalesced + warm.coalesced,
     };
 
+    // Graph section (schema 7): fused vs unfused cross-layer DRAM traffic
+    // on the two zoo networks with real multi-predecessor structure
+    // (DESIGN.md §17). The analysis is pure accounting — cheap enough to
+    // run at full fidelity even in smoke mode.
+    let mut graph = Vec::new();
+    for network in ["mobilenetv2res", "bert"] {
+        let nets = vec![(network.to_string(), zoo::network(network).expect("zoo network"))];
+        let empty = crate::graph::MappingIndex::new();
+        let t0 = Instant::now();
+        let off =
+            crate::graph::analyze(&nets, &acc, crate::graph::GraphMode::Off, Objective::Energy, &empty);
+        let fuse = crate::graph::analyze(
+            &nets,
+            &acc,
+            crate::graph::GraphMode::Fuse,
+            Objective::Energy,
+            &empty,
+        );
+        graph.push(GraphPerf {
+            network,
+            groups: fuse.groups,
+            fused_layers: fuse.fused_layers,
+            unfused_dram_bytes: off.cross_layer_dram_bytes,
+            fused_dram_bytes: fuse.cross_layer_dram_bytes,
+            wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        });
+    }
+
     PerfReport {
-        schema: 6,
+        schema: 7,
         smoke: cfg.smoke,
         evaluator,
         per_op,
@@ -865,6 +942,7 @@ pub fn run(cfg: &PerfConfig) -> PerfReport {
         warm_start,
         zoo_batch,
         service,
+        graph,
     }
 }
 
@@ -876,7 +954,7 @@ mod tests {
     fn smoke_run_produces_sane_report() {
         let r = run(&PerfConfig::smoke());
         assert!(r.smoke);
-        assert_eq!(r.schema, 6);
+        assert_eq!(r.schema, 7);
         assert!(r.evaluator.legacy_evals_per_sec > 0.0);
         assert!(r.evaluator.context_evals_per_sec > 0.0);
         assert_eq!(
@@ -953,12 +1031,27 @@ mod tests {
             "every warm-run layer must be a disk hit"
         );
         assert!(r.service.cold_wall_ms > 0.0 && r.service.warm_wall_ms > 0.0);
+        // Schema-7 graph section: both multi-predecessor networks fuse,
+        // and fusion strictly reduces cross-layer DRAM traffic.
+        assert_eq!(
+            r.graph.iter().map(|g| g.network).collect::<Vec<_>>(),
+            vec!["mobilenetv2res", "bert"]
+        );
+        for g in &r.graph {
+            assert!(g.groups > 0, "{}: no fused groups", g.network);
+            assert!(g.fused_layers >= 2 * g.groups, "{}", g.network);
+            assert!(
+                g.fused_dram_bytes < g.unfused_dram_bytes,
+                "{}: fusion must strictly reduce cross-layer DRAM",
+                g.network
+            );
+        }
     }
 
     #[test]
     fn json_has_the_stable_key_set() {
         let r = PerfReport {
-            schema: 6,
+            schema: 7,
             smoke: true,
             evaluator: EvalThroughput {
                 legacy_evals_per_sec: 100.0,
@@ -1014,10 +1107,18 @@ mod tests {
                 disk_hits: 325,
                 coalesced: 3,
             },
+            graph: vec![GraphPerf {
+                network: "mobilenetv2res",
+                groups: 10,
+                fused_layers: 20,
+                unfused_dram_bytes: 1_000_000,
+                fused_dram_bytes: 800_000,
+                wall_ms: 1.5,
+            }],
         };
         let json = r.to_json();
         for key in [
-            "\"schema\": 6",
+            "\"schema\": 7",
             "\"smoke\"",
             "\"evaluator\"",
             "\"legacy_evals_per_sec\"",
@@ -1057,6 +1158,12 @@ mod tests {
             "\"warm_evaluations\": 0",
             "\"disk_hits\": 325",
             "\"coalesced\": 3",
+            "\"graph\"",
+            "\"network\": \"mobilenetv2res\"",
+            "\"groups\": 10",
+            "\"fused_layers\": 20",
+            "\"unfused_dram_bytes\": 1000000",
+            "\"fused_dram_bytes\": 800000",
         ] {
             assert!(json.contains(key), "missing {key} in {json}");
         }
@@ -1068,6 +1175,7 @@ mod tests {
         assert!(r.summary().contains("bound VGG16_conv9@eyeriss"));
         assert!(r.summary().contains("warm exhaustive@bert"));
         assert!(r.summary().contains("service restart"));
+        assert!(r.summary().contains("graph mobilenetv2res: 10 groups"));
     }
 
     #[test]

@@ -253,6 +253,27 @@ pub fn render_network_summaries(r: &crate::api::CompileReport) -> Table {
     t
 }
 
+/// One-line fusion summary of a compile's graph-level analysis (printed
+/// by compile/compile-all in table mode whenever `--graph-mode` is not
+/// `off`).
+pub fn render_graph_summary(g: &crate::graph::GraphReport) -> String {
+    let baseline = g.cross_layer_dram_bytes.saturating_add(g.dram_bytes_saved);
+    let pct = if baseline > 0 {
+        g.dram_bytes_saved as f64 * 100.0 / baseline as f64
+    } else {
+        0.0
+    };
+    format!(
+        "graph: mode={} groups={} fused_layers={} cross_layer_dram={} B (saved {} B, {:.1}%)",
+        g.mode.name(),
+        g.groups,
+        g.fused_layers,
+        g.cross_layer_dram_bytes,
+        g.dram_bytes_saved,
+        pct
+    )
+}
+
 /// ------------------------------------------------------------ Batch compile
 
 /// Render the `compile-all` batch summary: one row per network with

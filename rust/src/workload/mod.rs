@@ -392,6 +392,19 @@ impl Layer {
         self.op == OpKind::DepthwiseConv
     }
 
+    /// Number of input channels this layer consumes, under the op's axis
+    /// convention: per-channel ops (depthwise, pooling, elementwise) carry
+    /// their channel count on `M` with `C` pinned to 1, everything else
+    /// reads `C` channels. This is the count a producer's `M` must match
+    /// for a producer→consumer graph edge ([`crate::graph::ir::compatible`]).
+    pub fn input_channels(&self) -> u64 {
+        if self.op.channels_on_m() {
+            self.m
+        } else {
+            self.c
+        }
+    }
+
     /// Bound (extent) of a problem dimension.
     pub fn bound(&self, d: Dim) -> u64 {
         match d {

@@ -28,7 +28,7 @@ fn help_lists_subcommands() {
     assert_eq!(code, 0);
     for sub in [
         "map", "compile", "compile-all", "table3", "fig3", "fig7", "mapspace", "arch", "run",
-        "simulate", "explore", "serve", "cache-stats", "perf",
+        "simulate", "explore", "serve", "cache-stats", "cache-compact", "perf",
     ] {
         assert!(stdout.contains(sub), "help missing {sub}");
     }
@@ -46,6 +46,8 @@ fn help_lists_subcommands() {
         "--recompile-from",
         "--cache-dir",
         "--queue-limit",
+        "--graph-mode",
+        "--no-fuse",
     ] {
         assert!(stdout.contains(flag), "help missing {flag}");
     }
@@ -306,7 +308,7 @@ fn explore_prints_pareto() {
 /// The exact top-level key order of an `"api_v1"` compile document. Key
 /// order is part of the output contract (byte-stable across runs); any
 /// reordering is a schema change and must bump the tag.
-const COMPILE_KEYS: [&str; 12] = [
+const COMPILE_KEYS: [&str; 13] = [
     "schema",
     "kind",
     "workload",
@@ -317,6 +319,7 @@ const COMPILE_KEYS: [&str; 12] = [
     "totals",
     "cache",
     "warm",
+    "graph",
     "failures",
     "compile_time_ms",
 ];
@@ -345,6 +348,10 @@ fn assert_compile_skeleton(doc: &Json) {
     assert_eq!(
         doc.get("warm").unwrap().keys(),
         vec!["policy", "seeded", "seed_quality", "incremental_reused"]
+    );
+    assert_eq!(
+        doc.get("graph").unwrap().keys(),
+        vec!["mode", "groups", "fused_layers", "cross_layer_dram_bytes", "dram_bytes_saved"]
     );
     for net in doc.get("networks").unwrap().as_arr().unwrap() {
         assert_eq!(net.keys(), vec!["name", "layers", "totals", "compile_time_ms"]);
@@ -533,7 +540,9 @@ fn perf_smoke_writes_valid_bench_json() {
     assert!(stdout.contains("exhaustive"), "{stdout}");
     let json = std::fs::read_to_string(&path).unwrap();
     for key in [
-        "\"schema\": 6",
+        "\"schema\": 7",
+        "\"graph\"",
+        "\"fused_dram_bytes\"",
         "\"evaluator\"",
         "\"per_op\"",
         "\"exhaustive\"",
@@ -779,4 +788,118 @@ fn bad_inject_fault_spec_is_a_usage_error() {
     assert_eq!(code, 2, "{stderr}");
     assert!(stderr.contains("error[E_REQUEST]"), "{stderr}");
     assert!(stderr.contains("melt"), "{stderr}");
+}
+
+#[test]
+fn graph_mode_fuse_saves_dram_and_leaves_mappings_bit_identical() {
+    // The PR's acceptance criterion end to end: on mobilenetv2res,
+    // --graph-mode fuse must form at least one multi-node fused group and
+    // report strictly lower estimated cross-layer DRAM traffic than off,
+    // while every per-layer mapping stays bit-identical (the analysis
+    // never touches the mapping pipeline).
+    let base = ["compile", "--network", "mobilenetv2res", "--format", "json"];
+    let (off, stderr, code) = run(&base);
+    assert_eq!(code, 0, "{stderr}");
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--graph-mode", "fuse"]);
+    let (fuse, stderr, code) = run(&args);
+    assert_eq!(code, 0, "{stderr}");
+    let off_doc = parse(&off).expect("off JSON parses");
+    let fuse_doc = parse(&fuse).expect("fuse JSON parses");
+    assert_compile_skeleton(&off_doc);
+    assert_compile_skeleton(&fuse_doc);
+
+    let off_graph = off_doc.get("graph").unwrap();
+    assert_eq!(off_graph.get("mode").unwrap().as_str(), Some("off"));
+    assert_eq!(off_graph.get("groups").unwrap().as_u64(), Some(0));
+    assert_eq!(off_graph.get("dram_bytes_saved").unwrap().as_u64(), Some(0));
+    let off_cross = off_graph.get("cross_layer_dram_bytes").unwrap().as_u64().unwrap();
+    assert!(off_cross > 0);
+
+    let fuse_graph = fuse_doc.get("graph").unwrap();
+    assert_eq!(fuse_graph.get("mode").unwrap().as_str(), Some("fuse"));
+    assert!(fuse_graph.get("groups").unwrap().as_u64().unwrap() >= 1, "{fuse}");
+    assert!(fuse_graph.get("fused_layers").unwrap().as_u64().unwrap() >= 2);
+    let fuse_cross = fuse_graph.get("cross_layer_dram_bytes").unwrap().as_u64().unwrap();
+    let saved = fuse_graph.get("dram_bytes_saved").unwrap().as_u64().unwrap();
+    assert!(fuse_cross < off_cross, "fusion must strictly reduce cross-layer DRAM");
+    assert_eq!(fuse_cross + saved, off_cross, "savings must account against the off baseline");
+
+    // Same layers, same mappings, same scores — graph analysis is a
+    // reporting layer, not a different compiler.
+    let off_layers = first_network_layers(&off_doc);
+    let fuse_layers = first_network_layers(&fuse_doc);
+    assert_eq!(off_layers.len(), 62);
+    for (a, b) in off_layers.iter().zip(&fuse_layers) {
+        assert_eq!(layer_identity(a), layer_identity(b), "graph mode perturbed a layer");
+    }
+
+    // --no-fuse forces off even when --graph-mode asks for fusion.
+    let mut args: Vec<&str> = base.to_vec();
+    args.extend(["--graph-mode", "fuse", "--no-fuse"]);
+    let (forced, stderr, code) = run(&args);
+    assert_eq!(code, 0, "{stderr}");
+    let forced_doc = parse(&forced).expect("no-fuse JSON parses");
+    assert_eq!(forced_doc.get("graph").unwrap().get("mode").unwrap().as_str(), Some("off"));
+
+    // Junk modes are usage errors that list the accepted spellings.
+    let (_, stderr, code) = run(&["compile", "--graph-mode", "frob"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("off|fuse|co_select"), "{stderr}");
+}
+
+#[test]
+fn cache_compact_rewrites_the_log_and_reports_counts() {
+    let dir = std::env::temp_dir().join(format!("lm_cli_compact_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = dir.to_str().unwrap();
+    let (_, stderr, code) =
+        run(&["compile", "--network", "alexnet", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    // Duplicate the first record by hand: the log is append-only, so a
+    // re-solved layer would land exactly like this.
+    let log = dir.join("mappings.log");
+    let text = std::fs::read_to_string(&log).unwrap();
+    let first = text.lines().next().unwrap().to_string();
+    std::fs::write(&log, format!("{text}{first}\n")).unwrap();
+    let (out, stderr, code) = run(&["cache-compact", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(out.contains("records: 6 -> 5"), "{out}");
+    assert!(out.contains("1 duplicate"), "{out}");
+    // The compacted log still serves a fully-warm restart.
+    let (stats, stderr, code) = run(&["cache-stats", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stats.contains("records: 5"), "{stats}");
+    // Without a directory, same usage error surface as cache-stats.
+    let (_, stderr, code) = run(&["cache-compact"]);
+    assert_eq!(code, 2, "{stderr}");
+    assert!(stderr.contains("--cache-dir"), "{stderr}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lifetime_totals_survive_an_error_exit() {
+    // The exit-path audit's pinned property: `main` drops the Session
+    // before `process::exit` on *every* exit class, so the lifetime
+    // totals flushed by `MappingService::Drop` are never lost or torn —
+    // even when a later run with the same --cache-dir exits 3.
+    let dir = std::env::temp_dir().join(format!("lm_cli_exit3_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let d = dir.to_str().unwrap();
+    let (_, stderr, code) = run(&["compile", "--network", "alexnet", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    // A malformed network file: invalid input, exit 3, after the session
+    // (and its cache wiring) already exists.
+    let bad = dir.join("bad_net.yaml");
+    std::fs::write(&bad, "layers:\n  - m: 16\n").unwrap();
+    let (_, stderr, code) = run(&[
+        "compile", "--network-file", bad.to_str().unwrap(), "--cache-dir", d,
+    ]);
+    assert_eq!(code, 3, "{stderr}");
+    // The totals from the successful run are intact and readable.
+    let (stats, stderr, code) = run(&["cache-stats", "--cache-dir", d]);
+    assert_eq!(code, 0, "{stderr}");
+    assert!(stats.contains("records: 5"), "{stats}");
+    assert!(stats.contains("5 requests"), "{stats}");
+    let _ = std::fs::remove_dir_all(&dir);
 }

@@ -968,6 +968,86 @@ fn prop_persist_roundtrip_is_bit_identical_over_the_zoo() {
 }
 
 #[test]
+fn prop_graph_modes_never_perturb_the_compiled_zoo() {
+    // Graph analysis is a reporting layer (DESIGN.md §17): for every zoo
+    // network, `--graph-mode off|fuse|co_select` must produce identical
+    // per-layer mappings and score bits — `off` IS the flat pipeline and
+    // the other modes only annotate it. Savings, when any, must account
+    // exactly against the off baseline.
+    use local_mapper::api::{CompileRequest, GraphMode, Session};
+    let session = Session::new();
+    for (net, _) in zoo::batch_zoo() {
+        let base = session
+            .compile(&CompileRequest::new().network(&net).graph_mode(GraphMode::Off))
+            .unwrap();
+        assert_eq!(base.graph.groups, 0, "{net}: off must not form groups");
+        assert_eq!(base.graph.dram_bytes_saved, 0, "{net}: off must not claim savings");
+        for mode in [GraphMode::Fuse, GraphMode::CoSelect] {
+            let out = session
+                .compile(&CompileRequest::new().network(&net).graph_mode(mode))
+                .unwrap();
+            let a = &base.networks[0].layers;
+            let b = &out.networks[0].layers;
+            assert_eq!(a.len(), b.len(), "{net} {mode:?}");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!(
+                    x.outcome.mapping, y.outcome.mapping,
+                    "{net}/{} perturbed under {mode:?}",
+                    x.layer.name
+                );
+                assert_eq!(
+                    x.outcome.score.to_bits(),
+                    y.outcome.score.to_bits(),
+                    "{net}/{} score bits drifted under {mode:?}",
+                    x.layer.name
+                );
+            }
+            assert_eq!(
+                out.graph.cross_layer_dram_bytes + out.graph.dram_bytes_saved,
+                base.graph.cross_layer_dram_bytes,
+                "{net} {mode:?}: savings must account against the off baseline"
+            );
+        }
+    }
+}
+
+#[test]
+fn prop_fused_group_mappings_validate_on_every_member() {
+    // Fusion correctness: every group the pass forms over the zoo keeps
+    // per-member mappings that still validate against the member layers
+    // (coverage, capacity and the per-op relevance projections of PR 3),
+    // and every consecutive producer→consumer pair independently passes
+    // the full `fusable` legality check.
+    use local_mapper::graph::{fusable, fuse_network, WorkloadGraph};
+    let mut formed = 0usize;
+    for acc in presets::all() {
+        for (net, _) in zoo::batch_zoo() {
+            let g = WorkloadGraph::zoo(&net).unwrap();
+            for grp in fuse_network(&g, &acc) {
+                formed += 1;
+                assert!(grp.members.len() >= 2, "{net} on {}: degenerate group", acc.name);
+                for pair in grp.members.windows(2) {
+                    assert!(
+                        fusable(&g.nodes[pair[0]], &g.nodes[pair[1]], &acc),
+                        "{net} on {}: illegal edge inside a formed group",
+                        acc.name
+                    );
+                }
+                for layer in grp.layers(&g) {
+                    let out = LocalMapper::new().run(layer, &acc).unwrap_or_else(|e| {
+                        panic!("{net}/{} on {}: member unmappable: {e}", layer.name, acc.name)
+                    });
+                    out.mapping.validate(layer, &acc).unwrap_or_else(|e| {
+                        panic!("{net}/{} on {}: member mapping invalid: {e}", layer.name, acc.name)
+                    });
+                }
+            }
+        }
+    }
+    assert!(formed > 0, "the sweep never formed a group — fusion is vacuous");
+}
+
+#[test]
 fn prop_dim_coverage_under_mutation_stress() {
     // Hammer the mapping with random factor migrations + repairs; coverage
     // (Π factors == bound) must never break.
